@@ -1,0 +1,93 @@
+//! Broadcast tuning walkthrough: compare all ten Table-1 strategies,
+//! measured against predicted, and show where the crossovers fall — the
+//! paper's §4.1 study.
+//!
+//! ```bash
+//! cargo run --release --example broadcast_tuning
+//! ```
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::harness::experiments::{measure_net, measure_strategy};
+use collective_tuner::models;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::tuner::grids;
+use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let net = measure_net(&cfg);
+    println!("network: {}\n", net.summary());
+    let s_grid = grids::default_s_grid();
+
+    // Full strategy matrix at P = 24 over four message sizes.
+    let p = 24usize;
+    let m_list = [1024u64, 16 * 1024, 128 * 1024, 1024 * 1024];
+    let mut table = Table::new(vec![
+        "strategy", "m", "segment", "predicted", "measured", "rel err",
+    ]);
+    for &m in &m_list {
+        let mut rows: Vec<(Strategy, f64, f64, Option<u64>)> = Vec::new();
+        for strat in Strategy::BCAST {
+            let (t_pred, seg) = if strat.is_segmented() {
+                let (t, s) = models::best_segment(strat, &net, p, m, &s_grid);
+                (t, Some(s))
+            } else {
+                (models::predict(strat, &net, p, m, None), None)
+            };
+            let t_meas = measure_strategy(&cfg, strat, p, m, seg);
+            rows.push((strat, t_pred, t_meas, seg));
+        }
+        rows.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        for (strat, t_pred, t_meas, seg) in rows {
+            table.row(vec![
+                strat.name().to_string(),
+                fmt_bytes(m as f64),
+                seg.map(|s| fmt_bytes(s as f64)).unwrap_or_else(|| "-".into()),
+                fmt_time(t_pred),
+                fmt_time(t_meas),
+                format!("{:.1}%", (t_pred - t_meas).abs() / t_meas * 100.0),
+            ]);
+        }
+    }
+    println!("{}", table.to_ascii());
+
+    // Where does the winner change? Sweep m at fixed P.
+    println!("winner by message size at P={p} (model-tuned):");
+    let mut last: Option<Strategy> = None;
+    for &m in grids::default_m_grid().iter() {
+        let ranked = models::rank_strategies(&Strategy::BCAST, &net, p, m, &s_grid);
+        let win = ranked[0].0;
+        if last != Some(win) {
+            println!("  from m = {:>9}: {}", fmt_bytes(m as f64), win.name());
+            last = Some(win);
+        }
+    }
+
+    // Does the model pick the measured winner at the probe points?
+    let mut agree = 0;
+    for &m in &m_list {
+        let model_win = models::rank_strategies(&Strategy::BCAST, &net, p, m, &s_grid)[0].0;
+        let measured_win = Strategy::BCAST
+            .iter()
+            .map(|&s| {
+                let seg = s
+                    .is_segmented()
+                    .then(|| models::best_segment(s, &net, p, m, &s_grid).1);
+                (s, measure_strategy(&cfg, s, p, m, seg))
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        if model_win == measured_win {
+            agree += 1;
+        }
+        println!(
+            "  m={:>9}: model picks {:<20} measured best {:<20} {}",
+            fmt_bytes(m as f64),
+            model_win.name(),
+            measured_win.name(),
+            if model_win == measured_win { "AGREE" } else { "differ" }
+        );
+    }
+    println!("\nselection agreement: {agree}/{} probe points", m_list.len());
+}

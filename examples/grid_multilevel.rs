@@ -1,0 +1,107 @@
+//! Multi-level collectives over islands of clusters — the system the
+//! paper's intra-cluster tuning plugs into (§1, §5). Two Fast-Ethernet
+//! clusters joined by a WAN: tune each cluster separately, compose a
+//! MagPIe-style two-level broadcast, and compare with naive single-level
+//! strategies that ignore the topology.
+//!
+//! ```bash
+//! cargo run --release --example grid_multilevel
+//! ```
+
+use collective_tuner::collectives::{multilevel, Strategy};
+use collective_tuner::harness::experiments::measure_net;
+use collective_tuner::models;
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::topology::{ClusterSpec, GridSpec};
+use collective_tuner::tuner::grids;
+use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
+
+fn main() {
+    // A small grid: 12 + 8 nodes, 100 Mb/s inside clusters, a 4 MB/s /
+    // 5 ms WAN between them.
+    let grid = GridSpec::new(
+        vec![
+            ClusterSpec::new("alpha", 12, NetConfig::fast_ethernet_icluster1()),
+            ClusterSpec::new("beta", 8, NetConfig::fast_ethernet_icluster1()),
+        ],
+        NetConfig::wan_link(),
+    );
+    println!(
+        "grid: {} nodes in {} clusters, WAN {} MB/s / {:.1} ms\n",
+        grid.total_nodes(),
+        grid.clusters.len(),
+        grid.wan.bandwidth_bps / 1e6,
+        grid.wan.prop_delay * 1e3
+    );
+
+    // Tune each cluster's broadcast strategy from its own pLogP
+    // parameters (intra-cluster tuning is exactly the paper's point).
+    let net = measure_net(&grid.clusters[0].net);
+    let s_grid = grids::default_s_grid();
+    let m = 256 * 1024u64;
+    let intra: Vec<(Strategy, Option<u64>)> = grid
+        .clusters
+        .iter()
+        .map(|c| {
+            let ranked =
+                models::rank_strategies(&Strategy::BCAST, &net, c.nodes, m, &s_grid);
+            let (s, _, seg) = ranked[0];
+            println!(
+                "cluster {:<6} (P={:>2}): tuned intra strategy {} (segment {:?})",
+                c.name, c.nodes, s.name(), seg
+            );
+            (s, seg)
+        })
+        .collect();
+
+    // Compose and run the two-level broadcast.
+    let mut table = Table::new(vec!["broadcast", "completion", "WAN crossings"]);
+    let ml = multilevel::bcast(&grid, m, &intra);
+    let mut world = World::new(grid.build_sim());
+    let rep = world.run(&ml);
+    assert!(rep.verify(&ml).is_empty());
+    let wan_crossings = ml
+        .ranks
+        .iter()
+        .enumerate()
+        .flat_map(|(r, rs)| rs.sends.iter().map(move |s| (r, s.to)))
+        .filter(|&(a, b)| grid.cluster_of(a as u32) != grid.cluster_of(b))
+        .count();
+    table.row(vec![
+        "two-level (tuned intra + binomial inter)".to_string(),
+        fmt_time(rep.completion.as_secs()),
+        wan_crossings.to_string(),
+    ]);
+
+    // Naive single-level alternatives that ignore the topology.
+    for strat in [Strategy::BcastFlat, Strategy::BcastBinomial, Strategy::BcastSegChain] {
+        let seg = strat
+            .is_segmented()
+            .then(|| models::best_segment(strat, &net, grid.total_nodes(), m, &s_grid).1);
+        let sched = strat.build(grid.total_nodes(), 0, m, seg);
+        let mut w = World::new(grid.build_sim());
+        let r = w.run(&sched);
+        let crossings = sched
+            .ranks
+            .iter()
+            .enumerate()
+            .flat_map(|(rk, rs)| rs.sends.iter().map(move |s| (rk, s.to)))
+            .filter(|&(a, b)| grid.cluster_of(a as u32) != grid.cluster_of(b))
+            .count();
+        table.row(vec![
+            format!("single-level {}", strat.name()),
+            fmt_time(r.completion.as_secs()),
+            crossings.to_string(),
+        ]);
+    }
+    println!("\nbroadcast of {} to all {} nodes:", fmt_bytes(m as f64), grid.total_nodes());
+    println!("{}", table.to_ascii());
+
+    // Multi-level barrier for good measure.
+    let bar = multilevel::barrier(&grid);
+    let mut w = World::new(grid.build_sim());
+    let r = w.run(&bar);
+    assert!(r.verify(&bar).is_empty());
+    println!("two-level barrier: {}", fmt_time(r.completion.as_secs()));
+}

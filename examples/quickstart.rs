@@ -1,0 +1,57 @@
+//! Quickstart: measure the network, tune, and run a broadcast with the
+//! selected strategy — the whole paper in thirty lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp;
+use collective_tuner::runtime::TunerArtifact;
+use collective_tuner::tuner::{grids, Tuner};
+use collective_tuner::util::table::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The cluster: the paper's testbed — 24 ranks of a 50-node
+    //    switched Fast Ethernet cluster running Linux-2.2-era TCP.
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let (p, m) = (24usize, 256 * 1024u64);
+
+    // 2. Measure pLogP parameters once (the LogP benchmark procedure).
+    let mut probe = Netsim::new(2, cfg.clone());
+    let net = plogp::bench::measure(&mut probe);
+    println!("measured  : {}", net.summary());
+
+    // 3. Tune: evaluate all Table-1/Table-2 models; prefer the
+    //    AOT-compiled XLA artifact, falling back to the native models.
+    let tuner = Tuner::auto(&TunerArtifact::default_dir());
+    let (bcast_table, _scatter_table) =
+        tuner.tune(&net, &grids::default_p_grid(), &grids::default_m_grid())?;
+    let choice = bcast_table.lookup(p, m);
+    println!(
+        "tuned     : {} (segment {:?}) predicted {}",
+        choice.strategy.name(),
+        choice.segment,
+        fmt_time(choice.predicted)
+    );
+
+    // 4. Run the chosen strategy on the simulated cluster and verify.
+    let sched = choice.strategy.build(p, 0, m, choice.segment);
+    let mut world = World::new(Netsim::new(p, cfg));
+    let report = world.run(&sched);
+    assert!(report.verify(&sched).is_empty(), "payload verification failed");
+    println!(
+        "measured  : {} ({} messages, {} ack stalls)",
+        fmt_time(report.completion.as_secs()),
+        report.messages,
+        report.ack_stalls
+    );
+    println!(
+        "model err : {:.1}%",
+        (choice.predicted - report.completion.as_secs()).abs()
+            / report.completion.as_secs()
+            * 100.0
+    );
+    Ok(())
+}

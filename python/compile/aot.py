@@ -1,0 +1,114 @@
+"""AOT-lower the L2 tuner graph to HLO text for the Rust coordinator.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts/tuner.hlo.txt
+
+Writes the HLO text plus a JSON metadata sidecar (``tuner.meta.json``)
+recording the baked tensor shapes and the strategy index layout, which the
+Rust side reads to pad its inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(t: int, q: int, m: int, s: int) -> str:
+    lowered = jax.jit(model.tune).lower(*model.example_args(t, q, m, s))
+    return to_hlo_text(lowered)
+
+
+def build_ext(t: int, q: int, m: int) -> str:
+    lowered = jax.jit(model.tune_ext).lower(*model.example_args_ext(t, q, m))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/tuner.hlo.txt")
+    ap.add_argument("--table", type=int, default=32,
+                    help="gap-table entries (T)")
+    ap.add_argument("--pgrid", type=int, default=16,
+                    help="process-count grid points (Q)")
+    ap.add_argument("--mgrid", type=int, default=48,
+                    help="message-size grid points (M)")
+    ap.add_argument("--sgrid", type=int, default=32,
+                    help="segment-size grid points (S)")
+    args = ap.parse_args()
+
+    text = build(args.table, args.pgrid, args.mgrid, args.sgrid)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+
+    meta = {
+        "table_len": args.table,
+        "p_grid_len": args.pgrid,
+        "m_grid_len": args.mgrid,
+        "s_grid_len": args.sgrid,
+        "num_strategies": ref.NUM_STRATEGIES,
+        "num_bcast": model.NUM_BCAST,
+        "num_scatter": model.NUM_SCATTER,
+        "jmax": ref.JMAX,
+        "binomial_terms": ref.BINOMIAL_TERMS,
+        "strategy_names": ref.STRATEGY_NAMES,
+        "outputs": ["times[13,Q,M]", "segs[13,Q,M]",
+                    "bcast_winner[Q,M]", "scatter_winner[Q,M]"],
+    }
+    meta_path = os.path.splitext(args.out)[0]
+    meta_path = meta_path[:-len(".hlo")] if meta_path.endswith(".hlo") else meta_path
+    meta_path += ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(text)} chars to {args.out} (+ {meta_path})")
+
+    # Second artifact: the extended-collectives tuner (gather / barrier /
+    # allgather / allreduce), same gap table and grids, no segment axis.
+    from .kernels import ext_models
+
+    ext_out = os.path.join(os.path.dirname(os.path.abspath(args.out)),
+                           "tuner_ext.hlo.txt")
+    ext_text = build_ext(args.table, args.pgrid, args.mgrid)
+    with open(ext_out, "w") as f:
+        f.write(ext_text)
+    ext_meta = {
+        "table_len": args.table,
+        "p_grid_len": args.pgrid,
+        "m_grid_len": args.mgrid,
+        "num_strategies": ext_models.NUM_EXT,
+        "strategy_names": ext_models.EXT_NAMES,
+        "families": {k: list(v) for k, v in ext_models.FAMILIES.items()},
+        "outputs": ["times[10,Q,M]", "winners[4,Q,M]"],
+    }
+    with open(os.path.join(os.path.dirname(ext_out), "tuner_ext.meta.json"),
+              "w") as f:
+        json.dump(ext_meta, f, indent=2)
+    print(f"wrote {len(ext_text)} chars to {ext_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""L1 Pallas kernel: pLogP cost-surface evaluation for all 13 strategies.
+
+The paper's "fast tuning" contribution is replacing empirical benchmark
+sweeps with closed-form pLogP model evaluation. This kernel is that hot
+spot: one fused pass evaluates every strategy of Tables 1 and 2 on the
+whole (P-grid x m-grid) plane, folding the segment-size search (min over
+the s-grid) into the kernel so only small decision tensors leave the
+device.
+
+Layout / tiling
+---------------
+The launch grid is one program per P value (the Q axis): each program
+holds the full gap table (tiny: <= 64 entries), the full m-grid row and
+the full s-grid in VMEM and computes a [13, 1, M] tile of the output.
+The (M, S) plane is the vector workload; the s-axis reduction (min /
+argmin for segmented strategies) happens in-register before writeback.
+On a real TPU the same BlockSpec tiles the (M, S) plane onto (8, 128)
+VMEM lanes; the kernel is VPU-bound (no MXU), so the roofline is VMEM
+bandwidth — see DESIGN.md section "Hardware-Adaptation".
+
+interpret=True is mandatory here: the artifact must run on the CPU PJRT
+client inside the Rust coordinator, and Mosaic custom-calls do not.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NUM_STRATEGIES = ref.NUM_STRATEGIES
+JMAX = ref.JMAX
+BINOMIAL_TERMS = ref.BINOMIAL_TERMS
+
+
+def _gap_interp(m, sizes, gaps):
+    """In-kernel piecewise-linear g(m); mirrors ref.gap_interp exactly."""
+    idx = jnp.sum(m[..., None] >= sizes, axis=-1) - 1
+    idx = jnp.clip(idx, 0, sizes.shape[0] - 2)
+    lo_s = jnp.take(sizes, idx)
+    hi_s = jnp.take(sizes, idx + 1)
+    lo_g = jnp.take(gaps, idx)
+    hi_g = jnp.take(gaps, idx + 1)
+    t = jnp.maximum((m - lo_s) / (hi_s - lo_s), 0.0)
+    g = lo_g + t * (hi_g - lo_g)
+    # above-table extrapolation never goes below the last sample
+    return jnp.where(t > 1.0, jnp.maximum(g, hi_g), g)
+
+
+def _tune_kernel(sizes_ref, gaps_ref, lat_ref, p_ref, m_ref, s_ref,
+                 times_ref, segs_ref):
+    """One program = one P value; computes a [13, 1, M] output tile."""
+    sizes = sizes_ref[...]
+    gaps = gaps_ref[...]
+    lat = lat_ref[0]
+    p = p_ref[0]
+    m = m_ref[...]  # [M]
+    s = s_ref[...]  # [S]
+
+    g_m = _gap_interp(m, sizes, gaps)  # [M]
+    g_1 = _gap_interp(jnp.float32(1.0), sizes, gaps)
+    lg = jnp.log2(p)
+    fl = jnp.floor(lg + 1e-6)
+    ce = jnp.ceil(lg - 1e-6)
+    pm1 = p - 1.0
+    rdv = 2.0 * g_1 + 3.0 * lat
+
+    # segmented plane: [M, S]
+    s_eff = jnp.minimum(s[None, :], m[:, None])
+    k = jnp.ceil(m[:, None] / s_eff)
+    g_s = _gap_interp(s_eff, sizes, gaps)
+
+    def min_over_s(t2):
+        """[M, S] -> (best [M], chosen segment size [M])."""
+        best = jnp.min(t2, axis=-1)
+        arg = jnp.argmin(t2, axis=-1)
+        chosen = jnp.minimum(jnp.take(s, arg), m)
+        return best, chosen
+
+    zero = jnp.zeros_like(m)
+
+    # Broadcast, Table 1.
+    t_flat = pm1 * g_m + lat
+    t_flat_rdv = pm1 * g_m + rdv
+    t_segflat, s_segflat = min_over_s(pm1 * (g_s * k) + lat)
+    t_chain = pm1 * (g_m + lat)
+    t_chain_rdv = pm1 * (g_m + rdv)
+    t_segchain, s_segchain = min_over_s(pm1 * (g_s + lat) + g_s * (k - 1.0))
+    t_binary = ce * (2.0 * g_m + lat)
+    t_binom = fl * g_m + ce * lat
+    t_binom_rdv = fl * g_m + ce * rdv
+    t_segbinom, s_segbinom = min_over_s(fl * g_s * k + ce * lat)
+
+    # Scatter, Table 2.
+    t_sc_flat = pm1 * g_m + lat
+    j = jnp.arange(1, JMAX, dtype=jnp.float32)  # [J]
+    g_jm = _gap_interp(j[:, None] * m[None, :], sizes, gaps)  # [J, M]
+    mask = (j <= pm1).astype(jnp.float32)  # [J]
+    t_sc_chain = jnp.sum(mask[:, None] * g_jm, axis=0) + pm1 * lat
+    jj = jnp.arange(0, BINOMIAL_TERMS, dtype=jnp.float32)
+    g_2jm = _gap_interp((2.0 ** jj)[:, None] * m[None, :], sizes, gaps)
+    maskb = (jj <= ce - 1.0).astype(jnp.float32)
+    t_sc_binom = jnp.sum(maskb[:, None] * g_2jm, axis=0) + ce * lat
+
+    times = jnp.stack([
+        t_flat, t_flat_rdv, t_segflat, t_chain, t_chain_rdv, t_segchain,
+        t_binary, t_binom, t_binom_rdv, t_segbinom,
+        t_sc_flat, t_sc_chain, t_sc_binom,
+    ])  # [13, M]
+    segs = jnp.stack([
+        zero, zero, s_segflat, zero, zero, s_segchain,
+        zero, zero, zero, s_segbinom,
+        zero, zero, zero,
+    ])
+    times_ref[...] = times[:, None, :]
+    segs_ref[...] = segs[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tune_pallas(sizes, gaps, lat, p_grid, m_grid, s_grid):
+    """Evaluate all strategy models; see ref.predict_all for semantics.
+
+    Args:
+      sizes, gaps: float32[T] measured gap table (sizes strictly increasing).
+      lat: float32[1] pLogP latency L.
+      p_grid: float32[Q] process counts to tune for.
+      m_grid: float32[M] message sizes (bytes).
+      s_grid: float32[S] candidate segment sizes (bytes).
+
+    Returns:
+      (times, segs): float32[13, Q, M] each.
+    """
+    q = p_grid.shape[0]
+    mm = m_grid.shape[0]
+    t = sizes.shape[0]
+    s = s_grid.shape[0]
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    out_shape = (
+        jax.ShapeDtypeStruct((NUM_STRATEGIES, q, mm), jnp.float32),
+        jax.ShapeDtypeStruct((NUM_STRATEGIES, q, mm), jnp.float32),
+    )
+    return pl.pallas_call(
+        _tune_kernel,
+        grid=(q,),
+        in_specs=[
+            full((t,)),
+            full((t,)),
+            full((1,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            full((mm,)),
+            full((s,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((NUM_STRATEGIES, 1, mm), lambda i: (0, i, 0)),
+            pl.BlockSpec((NUM_STRATEGIES, 1, mm), lambda i: (0, i, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(sizes, gaps, lat, p_grid, m_grid, s_grid)

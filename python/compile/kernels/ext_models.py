@@ -1,0 +1,159 @@
+"""L1 Pallas kernel #2: pLogP cost models for the extended collectives.
+
+The paper's §3 notes that practical MPI implementations construct
+Barrier, Reduce and Gather "in a very similar way" to Broadcast/Scatter;
+this kernel extends the tuner to those operations (plus AllGather and
+AllReduce with the classic ring / recursive-doubling alternatives of
+Thakur & Gropp, the paper's ref [12]).
+
+Strategy index layout (shared with ``rust/src/models/ext.rs``):
+
+==  =======================  ==========================================
+id  name                     model (pLogP)
+==  =======================  ==========================================
+0   gather/flat              (P-1) g(m) + L
+1   gather/binomial          sum_j g(2^j m) + ceil(log2 P) L
+2   reduce/binomial          floor(log2 P) g(m) + ceil(log2 P) L
+3   barrier/tree             2 (floor(log2 P) g(1) + ceil(log2 P) L)
+4   barrier/dissemination    ceil(log2 P) (g(1) + L)
+5   allgather/gather+bcast   [1] + floor(log2 P) g(P m) + ceil(log2 P) L
+6   allgather/ring           (P-1) (g(m) + L)
+7   allgather/rec_doubling   sum_j (g(2^j m) + L)
+8   allreduce/reduce+bcast   2 (floor(log2 P) g(m) + ceil(log2 P) L)
+9   allreduce/rec_doubling   ceil(log2 P) (g(m) + L)
+==  =======================  ==========================================
+
+Families (for the winner argmins): gather = {0,1}, barrier = {3,4},
+allgather = {5,6,7}, allreduce = {8,9}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NUM_EXT = 10
+BINOMIAL_TERMS = ref.BINOMIAL_TERMS
+
+EXT_NAMES = [
+    "gather/flat",
+    "gather/binomial",
+    "reduce/binomial",
+    "barrier/tree",
+    "barrier/dissemination",
+    "allgather/gather+bcast",
+    "allgather/ring",
+    "allgather/rec_doubling",
+    "allreduce/reduce+bcast",
+    "allreduce/rec_doubling",
+]
+
+# family slices for the winner argmins
+FAMILIES = {
+    "gather": (0, 2),
+    "barrier": (3, 5),
+    "allgather": (5, 8),
+    "allreduce": (8, 10),
+}
+
+
+def _ext_kernel(sizes_ref, gaps_ref, lat_ref, p_ref, m_ref, times_ref):
+    from .cost_models import _gap_interp
+
+    sizes = sizes_ref[...]
+    gaps = gaps_ref[...]
+    lat = lat_ref[0]
+    p = p_ref[0]
+    m = m_ref[...]  # [M]
+
+    g_m = _gap_interp(m, sizes, gaps)
+    g_1 = _gap_interp(jnp.float32(1.0), sizes, gaps)
+    lg = jnp.log2(p)
+    fl = jnp.floor(lg + 1e-6)
+    ce = jnp.ceil(lg - 1e-6)
+    pm1 = p - 1.0
+
+    # doubling sum: sum_{j=0}^{ce-1} g(2^j m)
+    jj = jnp.arange(0, BINOMIAL_TERMS, dtype=jnp.float32)
+    g_2jm = _gap_interp((2.0 ** jj)[:, None] * m[None, :], sizes, gaps)
+    mask = (jj <= ce - 1.0).astype(jnp.float32)
+    dsum = jnp.sum(mask[:, None] * g_2jm, axis=0)  # [M]
+
+    g_pm = _gap_interp(p * m, sizes, gaps)
+
+    ones = jnp.ones_like(m)
+    times = jnp.stack([
+        pm1 * g_m + lat,                                  # 0 gather flat
+        dsum + ce * lat,                                  # 1 gather binomial
+        fl * g_m + ce * lat,                              # 2 reduce binomial
+        2.0 * (fl * g_1 + ce * lat) * ones,               # 3 barrier tree
+        ce * (g_1 + lat) * ones,                          # 4 barrier diss
+        dsum + ce * lat + fl * g_pm + ce * lat,           # 5 ag gather+bcast
+        pm1 * (g_m + lat),                                # 6 ag ring
+        dsum + ce * lat,                                  # 7 ag rec doubling
+        2.0 * (fl * g_m + ce * lat),                      # 8 ar reduce+bcast
+        ce * (g_m + lat),                                 # 9 ar rec doubling
+    ])  # [10, M]
+    times_ref[...] = times[:, None, :]
+
+
+@jax.jit
+def ext_pallas(sizes, gaps, lat, p_grid, m_grid):
+    """Evaluate the 10 extended models on the (P, m) grid.
+
+    Returns float32[NUM_EXT, Q, M].
+    """
+    q = p_grid.shape[0]
+    mm = m_grid.shape[0]
+    t = sizes.shape[0]
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _ext_kernel,
+        grid=(q,),
+        in_specs=[
+            full((t,)),
+            full((t,)),
+            full((1,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            full((mm,)),
+        ],
+        out_specs=pl.BlockSpec((NUM_EXT, 1, mm), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((NUM_EXT, q, mm), jnp.float32),
+        interpret=True,
+    )(sizes, gaps, lat, p_grid, m_grid)
+
+
+def ext_reference(sizes, gaps, lat, p_grid, m_grid):
+    """Pure-jnp oracle for :func:`ext_pallas`."""
+    lat = jnp.float32(lat)
+    p = jnp.asarray(p_grid, jnp.float32)[:, None]  # [Q,1]
+    m = jnp.asarray(m_grid, jnp.float32)[None, :]  # [1,M]
+    q, mm = p.shape[0], m.shape[1]
+    g_m = ref.gap_interp(m, sizes, gaps)
+    g_1 = ref.gap_interp(jnp.float32(1.0), sizes, gaps)
+    fl, ce = ref.log2_floor_ceil(p)
+    pm1 = p - 1.0
+
+    jj = jnp.arange(0, BINOMIAL_TERMS, dtype=jnp.float32)
+    g_2jm = ref.gap_interp((2.0 ** jj)[:, None] * m[0][None, :], sizes, gaps)
+    maskq = (jj[None, :] <= ce - 1.0).astype(jnp.float32)  # [Q,B]
+    dsum = jnp.einsum("qj,jm->qm", maskq, g_2jm)  # [Q,M]
+
+    g_pm = ref.gap_interp(p * m, sizes, gaps)  # [Q,M]
+    bc = lambda x: jnp.broadcast_to(x, (q, mm))
+
+    return jnp.stack([
+        bc(pm1 * g_m + lat),
+        dsum + ce * lat,
+        bc(fl * g_m + ce * lat),
+        bc(2.0 * (fl * g_1 + ce * lat)),
+        bc(ce * (g_1 + lat)),
+        dsum + ce * lat + fl * g_pm + ce * lat,
+        bc(pm1 * (g_m + lat)),
+        dsum + ce * lat,
+        bc(2.0 * (fl * g_m + ce * lat)),
+        bc(ce * (g_m + lat)),
+    ])

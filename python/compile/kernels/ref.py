@@ -1,0 +1,191 @@
+"""Pure-jnp oracle for the pLogP cost-model tuner kernel.
+
+This module is the correctness reference for the Pallas kernel in
+``cost_models.py``: it implements Tables 1 and 2 of Barchet-Estefanel &
+Mounie (2004) directly, with no Pallas, no tiling, and no cleverness.
+pytest asserts the kernel matches this module to float32 tolerance.
+
+Strategy index layout (shared with the Rust side, see
+``rust/src/tuner/layout.rs``):
+
+==  =====================  =========================================
+id  name                   model (pLogP)
+==  =====================  =========================================
+0   bcast/flat             (P-1) g(m) + L
+1   bcast/flat_rdv         (P-1) g(m) + 2 g(1) + 3 L
+2   bcast/seg_flat         (P-1) (g(s) k) + L
+3   bcast/chain            (P-1) (g(m) + L)
+4   bcast/chain_rdv        (P-1) (g(m) + 2 g(1) + 3 L)
+5   bcast/seg_chain        (P-1) (g(s) + L) + g(s) (k-1)
+6   bcast/binary           ceil(log2 P) (2 g(m) + L)
+7   bcast/binomial         floor(log2 P) g(m) + ceil(log2 P) L
+8   bcast/binomial_rdv     floor(log2 P) g(m) + ceil(log2 P)(2 g(1) + 3 L)
+9   bcast/seg_binomial     floor(log2 P) g(s) k + ceil(log2 P) L
+10  scatter/flat           (P-1) g(m) + L
+11  scatter/chain          sum_{j=1}^{P-1} g(j m) + (P-1) L
+12  scatter/binomial       sum_{j=0}^{ceil(log2 P)-1} g(2^j m) + ceil(log2 P) L
+==  =====================  =========================================
+
+Segmented strategies (2, 5, 9) are minimised over the segment-size grid;
+a candidate segment ``s`` is clamped to ``min(s, m)`` so that ``s >= m``
+degenerates exactly to the unsegmented model (k = 1, g(s) = g(m)).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NUM_STRATEGIES = 13
+BCAST_STRATEGIES = list(range(10))
+SCATTER_STRATEGIES = [10, 11, 12]
+SEGMENTED = (2, 5, 9)
+# scatter/chain partial sums are evaluated up to this many ranks; matches
+# the JMAX constant baked into the kernel and the AOT artifact metadata.
+JMAX = 64
+# scatter/binomial needs ceil(log2 P) terms; 10 covers P <= 1024.
+BINOMIAL_TERMS = 10
+
+STRATEGY_NAMES = [
+    "bcast/flat",
+    "bcast/flat_rdv",
+    "bcast/seg_flat",
+    "bcast/chain",
+    "bcast/chain_rdv",
+    "bcast/seg_chain",
+    "bcast/binary",
+    "bcast/binomial",
+    "bcast/binomial_rdv",
+    "bcast/seg_binomial",
+    "scatter/flat",
+    "scatter/chain",
+    "scatter/binomial",
+]
+
+
+def gap_interp(m, sizes, gaps):
+    """Piecewise-linear g(m) over the measured gap table.
+
+    ``sizes`` must be strictly increasing. Below ``sizes[0]`` the value is
+    clamped to ``gaps[0]``; above ``sizes[-1]`` the last segment's slope is
+    extrapolated (the pLogP gap is asymptotically linear in m — the
+    per-byte cost of a saturated link), but never below the last sample
+    (a noisy table must not extrapolate the gap negative).
+    """
+    m = jnp.asarray(m, jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    gaps = jnp.asarray(gaps, jnp.float32)
+    # index of the table segment containing m: sum of (m >= sizes) - 1
+    idx = jnp.sum(m[..., None] >= sizes, axis=-1) - 1
+    idx = jnp.clip(idx, 0, sizes.shape[0] - 2)
+    lo_s = sizes[idx]
+    hi_s = sizes[idx + 1]
+    lo_g = gaps[idx]
+    hi_g = gaps[idx + 1]
+    t = (m - lo_s) / (hi_s - lo_s)
+    # clamp below the table, extrapolate above it
+    t = jnp.maximum(t, 0.0)
+    g = lo_g + t * (hi_g - lo_g)
+    return jnp.where(t > 1.0, jnp.maximum(g, hi_g), g)
+
+
+def log2_floor_ceil(p):
+    """(floor(log2 P), ceil(log2 P)) as float32, exact for P in [1, 2^20]."""
+    p = jnp.asarray(p, jnp.float32)
+    # float log2 of an exact-integer float is bit-exact at powers of two,
+    # but guard against 1-ulp noise either side before floor/ceil.
+    lg = jnp.log2(p)
+    fl = jnp.floor(lg + 1e-6)
+    ce = jnp.ceil(lg - 1e-6)
+    return fl, ce
+
+
+def predict_all(sizes, gaps, lat, p_grid, m_grid, s_grid):
+    """Evaluate all 13 strategy models on the (P, m) grid.
+
+    Returns ``(times, segs)``, both float32 of shape
+    ``[NUM_STRATEGIES, Q, M]``. ``segs[i]`` is the segment size chosen for
+    segmented strategies (0 where the strategy does not segment).
+    """
+    lat = jnp.float32(lat)
+    p = jnp.asarray(p_grid, jnp.float32)[:, None]  # [Q,1]
+    m = jnp.asarray(m_grid, jnp.float32)[None, :]  # [1,M]
+    q, mm = p.shape[0], m.shape[1]
+
+    g_m = gap_interp(m, sizes, gaps)  # [1,M]
+    g_1 = gap_interp(jnp.float32(1.0), sizes, gaps)  # scalar
+    fl, ce = log2_floor_ceil(p)  # [Q,1]
+    pm1 = p - 1.0
+    rdv = 2.0 * g_1 + 3.0 * lat
+
+    # --- segmented candidates: clamp s to m, k = ceil(m/s) ---------------
+    s = jnp.asarray(s_grid, jnp.float32)[None, None, :]  # [1,1,S]
+    m3 = m[..., None]  # [1,M,1]
+    s_eff = jnp.minimum(s, m3)  # [1,M,S]
+    k = jnp.ceil(m3 / s_eff)  # [1,M,S]
+    g_s = gap_interp(s_eff, sizes, gaps)  # [1,M,S]
+
+    def min_over_s(t3):
+        """t3: [Q,M,S] -> (best time [Q,M], chosen seg size [Q,M])."""
+        best = jnp.min(t3, axis=-1)
+        arg = jnp.argmin(t3, axis=-1)
+        s_flat = jnp.asarray(s_grid, jnp.float32)
+        chosen = jnp.minimum(s_flat[arg], jnp.broadcast_to(m, (q, mm)))
+        return best, chosen
+
+    zeros = jnp.zeros((q, mm), jnp.float32)
+    times = []
+    segs = []
+
+    # 0 flat
+    times.append(jnp.broadcast_to(pm1 * g_m + lat, (q, mm)))
+    segs.append(zeros)
+    # 1 flat rendezvous
+    times.append(jnp.broadcast_to(pm1 * g_m + rdv, (q, mm)))
+    segs.append(zeros)
+    # 2 segmented flat
+    t, sv = min_over_s(pm1[:, :, None] * (g_s * k) + lat)
+    times.append(t)
+    segs.append(sv)
+    # 3 chain
+    times.append(jnp.broadcast_to(pm1 * (g_m + lat), (q, mm)))
+    segs.append(zeros)
+    # 4 chain rendezvous
+    times.append(jnp.broadcast_to(pm1 * (g_m + rdv), (q, mm)))
+    segs.append(zeros)
+    # 5 segmented chain (pipeline)
+    t, sv = min_over_s(pm1[:, :, None] * (g_s + lat) + g_s * (k - 1.0))
+    times.append(t)
+    segs.append(sv)
+    # 6 binary tree (upper bound)
+    times.append(jnp.broadcast_to(ce * (2.0 * g_m + lat), (q, mm)))
+    segs.append(zeros)
+    # 7 binomial tree
+    times.append(jnp.broadcast_to(fl * g_m + ce * lat, (q, mm)))
+    segs.append(zeros)
+    # 8 binomial rendezvous
+    times.append(jnp.broadcast_to(fl * g_m + ce * rdv, (q, mm)))
+    segs.append(zeros)
+    # 9 segmented binomial
+    t, sv = min_over_s(fl[:, :, None] * g_s * k + ce[:, :, None] * lat)
+    times.append(t)
+    segs.append(sv)
+
+    # 10 scatter flat
+    times.append(jnp.broadcast_to(pm1 * g_m + lat, (q, mm)))
+    segs.append(zeros)
+    # 11 scatter chain: sum_{j=1}^{P-1} g(j m) + (P-1) L
+    j = jnp.arange(1, JMAX, dtype=jnp.float32)  # [J]
+    g_jm = gap_interp(j[:, None] * m[0][None, :], sizes, gaps)  # [J,M]
+    maskqj = (j[None, :] <= pm1).astype(jnp.float32)  # [Q,J]
+    chain_sum = jnp.einsum("qj,jm->qm", maskqj, g_jm)
+    times.append(chain_sum + pm1 * lat)
+    segs.append(zeros)
+    # 12 scatter binomial: sum_{j=0}^{ceil(log2 P)-1} g(2^j m) + ceil log2 P L
+    jj = jnp.arange(0, BINOMIAL_TERMS, dtype=jnp.float32)
+    g_2jm = gap_interp((2.0**jj)[:, None] * m[0][None, :], sizes, gaps)  # [B,M]
+    maskq = (jj[None, :] <= ce - 1.0).astype(jnp.float32)  # [Q,B]
+    bin_sum = jnp.einsum("qj,jm->qm", maskq, g_2jm)
+    times.append(bin_sum + ce * lat)
+    segs.append(zeros)
+
+    return jnp.stack(times), jnp.stack(segs)

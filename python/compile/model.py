@@ -1,0 +1,89 @@
+"""L2: the full tuner compute graph, AOT-lowered to the Rust coordinator.
+
+The paper tunes a collective operation by evaluating every candidate
+implementation's pLogP model and picking the argmin. This module wraps the
+L1 Pallas kernel (``kernels.cost_models``) with the decision layer:
+
+  inputs : gap table (sizes, gaps), latency L, P-grid, m-grid, s-grid
+  outputs: times[13, Q, M]      per-strategy best predicted completion time
+           segs[13, Q, M]       chosen segment size (0 for unsegmented)
+           bcast_winner[Q, M]   argmin strategy over the 10 broadcast rows
+           scatter_winner[Q, M] argmin strategy (10..12) over scatter rows
+
+Everything is float32; winners are returned as float32 indices because the
+whole artifact crosses the PJRT boundary as a flat tuple of f32 buffers.
+
+This file never runs at request time: ``aot.py`` lowers ``tune`` once to
+``artifacts/tuner.hlo.txt`` and the Rust coordinator executes it via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cost_models, ref
+
+NUM_BCAST = 10
+NUM_SCATTER = 3
+
+
+def tune(sizes, gaps, lat, p_grid, m_grid, s_grid):
+    """Full tuning pass: strategy surfaces + winner decision tensors."""
+    times, segs = cost_models.tune_pallas(sizes, gaps, lat, p_grid, m_grid,
+                                          s_grid)
+    bcast_winner = jnp.argmin(times[:NUM_BCAST], axis=0).astype(jnp.float32)
+    scatter_winner = (jnp.argmin(times[NUM_BCAST:], axis=0)
+                      + NUM_BCAST).astype(jnp.float32)
+    return times, segs, bcast_winner, scatter_winner
+
+
+def tune_reference(sizes, gaps, lat, p_grid, m_grid, s_grid):
+    """Same decision layer over the pure-jnp oracle (for tests)."""
+    times, segs = ref.predict_all(sizes, gaps, lat, p_grid, m_grid, s_grid)
+    bcast_winner = jnp.argmin(times[:NUM_BCAST], axis=0).astype(jnp.float32)
+    scatter_winner = (jnp.argmin(times[NUM_BCAST:], axis=0)
+                      + NUM_BCAST).astype(jnp.float32)
+    return times, segs, bcast_winner, scatter_winner
+
+
+def tune_ext(sizes, gaps, lat, p_grid, m_grid):
+    """Extended-ops tuning pass: strategy times + per-family winners.
+
+    Returns ``(times[10, Q, M], winners[4, Q, M])`` where winners rows
+    are the argmin strategy index for gather, barrier, allgather and
+    allreduce respectively (absolute indices into the 10-row layout).
+    """
+    from .kernels import ext_models
+
+    times = ext_models.ext_pallas(sizes, gaps, lat, p_grid, m_grid)
+    winners = []
+    for fam in ("gather", "barrier", "allgather", "allreduce"):
+        lo, hi = ext_models.FAMILIES[fam]
+        winners.append(
+            (jnp.argmin(times[lo:hi], axis=0) + lo).astype(jnp.float32))
+    return times, jnp.stack(winners)
+
+
+def example_args_ext(t=32, q=16, m=48):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((t,), f32),   # sizes
+        jax.ShapeDtypeStruct((t,), f32),   # gaps
+        jax.ShapeDtypeStruct((1,), f32),   # L
+        jax.ShapeDtypeStruct((q,), f32),   # p_grid
+        jax.ShapeDtypeStruct((m,), f32),   # m_grid
+    )
+
+
+def example_args(t=32, q=16, m=48, s=32):
+    """ShapeDtypeStructs used by aot.py to lower the artifact."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((t,), f32),   # sizes
+        jax.ShapeDtypeStruct((t,), f32),   # gaps
+        jax.ShapeDtypeStruct((1,), f32),   # L
+        jax.ShapeDtypeStruct((q,), f32),   # p_grid
+        jax.ShapeDtypeStruct((m,), f32),   # m_grid
+        jax.ShapeDtypeStruct((s,), f32),   # s_grid
+    )

@@ -1,0 +1,102 @@
+"""Extended-collectives kernel: Pallas vs oracle vs hand values."""
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ext_models
+
+
+def toy_table():
+    """g(m) = 1 + m on power-of-two samples, L = 10 — hand-checkable."""
+    sizes = np.array([1, 2, 4, 8, 16, 32, 64, 128, 256], np.float32)
+    gaps = (1.0 + sizes).astype(np.float32)
+    return sizes, gaps
+
+
+def fast_ethernet_table(t=32):
+    sizes = np.geomspace(1, 4 << 20, t).astype(np.float32)
+    gaps = (55e-6 + 0.085e-6 * sizes).astype(np.float32)
+    return sizes, gaps
+
+
+class TestKernelVsOracle:
+    def test_matches_reference(self):
+        sizes, gaps = fast_ethernet_table()
+        lat = np.array([55e-6], np.float32)
+        p_grid = np.arange(2, 18, dtype=np.float32)
+        m_grid = np.geomspace(1, 1 << 20, 24).astype(np.float32)
+        kt = np.asarray(ext_models.ext_pallas(sizes, gaps, lat, p_grid, m_grid))
+        rt = np.asarray(ext_models.ext_reference(sizes, gaps, lat[0], p_grid, m_grid))
+        np.testing.assert_allclose(kt, rt, rtol=1e-4, atol=1e-9)
+
+    def test_shapes_and_positivity(self):
+        sizes, gaps = fast_ethernet_table(8)
+        lat = np.array([1e-4], np.float32)
+        p_grid = np.array([2.0, 7.0, 32.0], np.float32)
+        m_grid = np.array([1.0, 1024.0], np.float32)
+        kt = np.asarray(ext_models.ext_pallas(sizes, gaps, lat, p_grid, m_grid))
+        assert kt.shape == (10, 3, 2)
+        assert np.all(np.isfinite(kt)) and np.all(kt > 0)
+
+
+class TestHandValues:
+    """Mirrors rust models::ext hand_values exactly (P=5, m=8)."""
+
+    def predict(self):
+        sizes, gaps = toy_table()
+        t = ext_models.ext_pallas(
+            sizes, gaps, np.array([10.0], np.float32),
+            np.array([5.0], np.float32), np.array([8.0], np.float32))
+        return np.asarray(t)[:, 0, 0]
+
+    def test_all_rows(self):
+        t = self.predict()
+        want = [
+            4 * 9 + 10,              # gather flat
+            89,                      # gather binomial
+            2 * 9 + 30,              # reduce binomial
+            2 * (2 * 2 + 30),        # barrier tree
+            3 * 12,                  # barrier dissemination
+            89 + 2 * 41 + 30,        # allgather gather+bcast
+            4 * 19,                  # allgather ring
+            89,                      # allgather rec doubling
+            2 * (2 * 9 + 30),        # allreduce reduce+bcast
+            3 * 19,                  # allreduce rec doubling
+        ]
+        np.testing.assert_allclose(t, np.array(want, np.float32), rtol=1e-6)
+
+
+class TestWinners:
+    def test_tune_ext_winner_ranges(self):
+        sizes, gaps = fast_ethernet_table()
+        lat = np.array([55e-6], np.float32)
+        p_grid = np.arange(2, 34, 2, dtype=np.float32)
+        m_grid = np.geomspace(1, 1 << 20, 16).astype(np.float32)
+        times, winners = model.tune_ext(sizes, gaps, lat, p_grid, m_grid)
+        winners = np.asarray(winners).astype(int)
+        for row, (lo, hi) in enumerate(
+            [(0, 2), (3, 5), (5, 8), (8, 10)]
+        ):
+            assert winners[row].min() >= lo and winners[row].max() < hi
+
+    def test_dissemination_wins_barrier(self):
+        sizes, gaps = fast_ethernet_table()
+        lat = np.array([55e-6], np.float32)
+        p_grid = np.array([16.0, 32.0], np.float32)
+        m_grid = np.array([1.0], np.float32)
+        _, winners = model.tune_ext(sizes, gaps, lat, p_grid, m_grid)
+        assert np.all(np.asarray(winners)[1] == 4)  # barrier/dissemination
+
+
+class TestExtAot:
+    def test_lowering(self):
+        text = aot.build_ext(8, 2, 6)
+        assert "HloModule" in text
+        assert "f32[10,2,6]" in text.replace(" ", "")
+
+    def test_layout_constants(self):
+        assert ext_models.NUM_EXT == 10
+        assert len(ext_models.EXT_NAMES) == 10
+        spans = sorted(v for v in ext_models.FAMILIES.values())
+        assert spans == [(0, 2), (3, 5), (5, 8), (8, 10)]

@@ -1,0 +1,146 @@
+"""L2 tuner-graph tests: decision semantics and physically-sane winners."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def fast_ethernet_table(t=32):
+    """Gap table shaped like the paper's testbed (switched 100 Mb/s)."""
+    sizes = np.geomspace(1, 4 << 20, t).astype(np.float32)
+    # ~12.5 MB/s wire rate -> 0.08 us/byte, plus per-message overhead.
+    gaps = (55e-6 + 0.085e-6 * sizes).astype(np.float32)
+    return sizes, gaps
+
+
+GRID = dict(
+    lat=np.array([55e-6], np.float32),
+    p_grid=np.arange(2, 50, 3, dtype=np.float32),
+    m_grid=np.geomspace(1, 1 << 20, 48).astype(np.float32),
+    s_grid=np.geomspace(64, 128 << 10, 32).astype(np.float32),
+)
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    sizes, gaps = fast_ethernet_table()
+    return [np.asarray(x) for x in model.tune(sizes, gaps, **GRID)]
+
+
+class TestDecisionLayer:
+    def test_winner_ranges(self, tuned):
+        _, _, bw, sw = tuned
+        assert bw.min() >= 0 and bw.max() <= 9
+        assert sw.min() >= 10 and sw.max() <= 12
+
+    def test_winner_is_argmin(self, tuned):
+        times, _, bw, sw = tuned
+        np.testing.assert_array_equal(bw, np.argmin(times[:10], 0))
+        np.testing.assert_array_equal(sw, np.argmin(times[10:], 0) + 10)
+
+    def test_matches_reference_graph(self):
+        sizes, gaps = fast_ethernet_table()
+        got = model.tune(sizes, gaps, **GRID)
+        want = model.tune_reference(sizes, gaps, GRID["lat"][0],
+                                    GRID["p_grid"], GRID["m_grid"],
+                                    GRID["s_grid"])
+        # times and segments agree numerically
+        for g, w in zip(got[:2], want[:2]):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-9)
+        # winners may differ only at exact ties (1-ulp argmin flips between
+        # the kernel's and the oracle's differently-fused arithmetic):
+        # where they disagree, the two chosen strategies' times must match.
+        times = np.asarray(want[0])
+        q_ix, m_ix = np.indices(times.shape[1:])
+        for gw, ww in ((got[2], want[2]), (got[3], want[3])):
+            gw, ww = np.asarray(gw).astype(int), np.asarray(ww).astype(int)
+            dis = gw != ww
+            if dis.any():
+                tg = times[gw[dis], q_ix[dis], m_ix[dis]]
+                tw = times[ww[dis], q_ix[dis], m_ix[dis]]
+                np.testing.assert_allclose(tg, tw, rtol=1e-4)
+
+
+class TestPaperShapedConclusions:
+    """The qualitative results of section 4 must fall out of the models."""
+
+    def test_seg_chain_wins_bcast_large_messages(self, tuned):
+        """Fig 1/2: Segmented Chain broadcast wins for large m, many P."""
+        times, _, bw, _ = tuned
+        q = GRID["p_grid"].shape[0] - 1   # P = 47
+        m = GRID["m_grid"].shape[0] - 1   # m = 1 MB
+        assert bw[q, m] == 5  # bcast/seg_chain
+
+    def test_latency_bound_small_messages_prefer_binomial_family(self, tuned):
+        """Small m: log-depth trees beat (P-1)-depth chains."""
+        times, _, _, _ = tuned
+        q = GRID["p_grid"].shape[0] - 1
+        assert times[7, q, 0] < times[3, q, 0]  # binomial < chain at m=1B
+
+    def test_binomial_scatter_beats_flat_at_scale(self, tuned):
+        """Fig 3/4: Binomial Scatter overtakes Flat for this network.
+
+        The binomial model moves sum_{j} 2^j = 2^ceil(log2 P) - 1 message
+        units versus flat's P-1, so the comparison is cleanest at a power
+        of two (P=32: same wire bytes, 5 overhead terms vs 31). The paper's
+        testbed sweeps hit the same effect (their Fig 3).
+        """
+        times, _, _, _ = tuned
+        q = int(np.where(GRID["p_grid"] == 32.0)[0][0])
+        m = GRID["m_grid"].shape[0] - 1
+        assert times[12, q, m] < times[10, q, m]
+        # and the win grows with P at fixed m among powers of two reachable
+        # in the grid: check P=8 wins less than P=32 wins (relative).
+        q8 = int(np.where(GRID["p_grid"] == 8.0)[0][0])
+        rel32 = times[10, q, m] / times[12, q, m]
+        rel8 = times[10, q8, m] / times[12, q8, m]
+        assert rel32 > rel8
+
+    def test_scatter_flat_wins_tiny_clusters(self, tuned):
+        """P=2: flat scatter is a single send; binomial equals it."""
+        times, _, _, _ = tuned
+        np.testing.assert_allclose(times[10, 0, :], times[12, 0, :],
+                                   rtol=1e-5)
+
+    def test_rendezvous_never_beats_eager_same_tree(self, tuned):
+        """Rendezvous adds 2 g(1) + 3L-L of pure overhead in the model."""
+        times, _, _, _ = tuned
+        assert np.all(times[1] >= times[0] - 1e-9)
+        assert np.all(times[4] >= times[3] - 1e-9)
+        assert np.all(times[8] >= times[7] - 1e-9)
+
+    def test_segmentation_never_hurts_when_grid_covers_m(self, tuned):
+        """For m <= max(s_grid) the candidate s >= m degenerates to the
+        unsegmented model, so the segmented rows are pointwise <= their
+        unsegmented siblings there. (Beyond the grid the tuner is *forced*
+        to segment, which can lose — that is a property of the search
+        space, not a bug; the Rust tuner extends the s-grid with m itself.)
+        """
+        times, _, _, _ = tuned
+        cover = GRID["m_grid"] <= GRID["s_grid"].max()
+        assert np.all(times[2][:, cover] <= times[0][:, cover] + 1e-9)
+        assert np.all(times[5][:, cover] <= times[3][:, cover] + 1e-9)
+        assert np.all(times[9][:, cover] <= times[7][:, cover] + 1e-9)
+
+    def test_crossover_exists_for_bcast(self, tuned):
+        """The paper's whole point: no single strategy wins everywhere."""
+        _, _, bw, _ = tuned
+        assert len(np.unique(bw)) >= 2
+
+    def test_chosen_segments_reasonable(self, tuned):
+        _, segs, _, _ = tuned
+        m = GRID["m_grid"][None, None, :]
+        assert np.all(segs <= m + 1e-6)
+        assert np.all(segs >= 0)
+
+
+class TestExampleArgs:
+    def test_shapes(self):
+        args = model.example_args(8, 4, 6, 5)
+        assert [a.shape for a in args] == [(8,), (8,), (1,), (4,), (6,), (5,)]
+
+    def test_strategy_name_count(self):
+        assert len(ref.STRATEGY_NAMES) == ref.NUM_STRATEGIES == 13

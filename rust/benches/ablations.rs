@@ -1,0 +1,114 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Segment-grid resolution** — how many candidate segment sizes does
+//!    the tuner need? (tuning cost vs decision quality)
+//! 2. **Gap-table resolution** — how many g(m) samples does the
+//!    measurement need? (measurement cost vs model accuracy)
+//! 3. **Extended-op selection** — tree vs dissemination barrier, ring vs
+//!    recursive-doubling allgather across message sizes.
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::models::{self, ext::ExtStrategy};
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp::{self, bench::BenchOptions, default_size_grid};
+use collective_tuner::tuner::grids;
+use collective_tuner::util::benchkit::{bench, section};
+use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let mut sim = Netsim::new(2, cfg.clone());
+    let reference = plogp::bench::measure(&mut sim);
+
+    // ---- 1. segment-grid resolution -----------------------------------
+    section("ablation 1: segment-grid resolution (P=24, m=1MB, seg chain)");
+    let full_grid = grids::log_grid(64, 4 << 20, 256);
+    let (t_star, _) =
+        models::best_segment(Strategy::BcastSegChain, &reference, 24, 1 << 20, &full_grid);
+    let mut tab = Table::new(vec!["candidates", "best time", "loss vs 256-pt", "tune cost"]);
+    for n in [4usize, 8, 16, 32, 64, 128] {
+        let grid = grids::log_grid(64, 4 << 20, n);
+        let (t, _) =
+            models::best_segment(Strategy::BcastSegChain, &reference, 24, 1 << 20, &grid);
+        let r = bench(&format!("seg search, {n} candidates"), || {
+            std::hint::black_box(models::best_segment(
+                Strategy::BcastSegChain,
+                &reference,
+                24,
+                1 << 20,
+                &grid,
+            ));
+        });
+        tab.row(vec![
+            n.to_string(),
+            fmt_time(t),
+            format!("{:+.2}%", (t / t_star - 1.0) * 100.0),
+            fmt_time(r.summary.p50),
+        ]);
+    }
+    println!("{}", tab.to_ascii());
+    println!("-> 32 candidates are within a fraction of a percent of 256; the default is justified\n");
+
+    // ---- 2. gap-table resolution ---------------------------------------
+    section("ablation 2: gap-table resolution (model accuracy vs samples)");
+    let mut tab = Table::new(vec![
+        "samples", "g(100kB) err", "seg-chain pred err (P=24, m=1MB)",
+    ]);
+    let dense = {
+        let mut s = Netsim::new(2, cfg.clone());
+        plogp::bench::measure_with(&mut s, &BenchOptions { reps: 7, size_grid: default_size_grid(128) })
+    };
+    let truth_g = dense.gap(100_000.0);
+    let truth_t =
+        models::best_segment(Strategy::BcastSegChain, &dense, 24, 1 << 20, &grids::default_s_grid()).0;
+    for n in [4usize, 8, 16, 32, 64] {
+        let mut s = Netsim::new(2, cfg.clone());
+        let net = plogp::bench::measure_with(
+            &mut s,
+            &BenchOptions { reps: 7, size_grid: default_size_grid(n) },
+        );
+        let g_err = (net.gap(100_000.0) - truth_g).abs() / truth_g;
+        let t = models::best_segment(
+            Strategy::BcastSegChain,
+            &net,
+            24,
+            1 << 20,
+            &grids::default_s_grid(),
+        )
+        .0;
+        let t_err = (t - truth_t).abs() / truth_t;
+        tab.row(vec![
+            n.to_string(),
+            format!("{:.2}%", g_err * 100.0),
+            format!("{:.2}%", t_err * 100.0),
+        ]);
+    }
+    println!("{}", tab.to_ascii());
+
+    // ---- 3. extended-op crossovers -------------------------------------
+    section("ablation 3: extended-op strategy crossovers (P=32)");
+    let mut tab = Table::new(vec![
+        "m", "barrier tree", "barrier diss", "ag ring", "ag rec-dbl",
+    ]);
+    for &m in &[1u64, 1024, 65536, 1 << 20] {
+        tab.row(vec![
+            fmt_bytes(m as f64),
+            fmt_time(models::ext::predict_ext(ExtStrategy::BarrierTree, &reference, 32, 1)),
+            fmt_time(models::ext::predict_ext(
+                ExtStrategy::BarrierDissemination,
+                &reference,
+                32,
+                1,
+            )),
+            fmt_time(models::ext::predict_ext(ExtStrategy::AllGatherRing, &reference, 32, m)),
+            fmt_time(models::ext::predict_ext(
+                ExtStrategy::AllGatherRecDoubling,
+                &reference,
+                32,
+                m,
+            )),
+        ]);
+    }
+    println!("{}", tab.to_ascii());
+    println!("-> dissemination barrier always wins; allgather crossover appears with m");
+}

@@ -1,0 +1,26 @@
+//! Bench: Figures 1(a) and 1(b) — Binomial and Segmented Chain Broadcast,
+//! measured vs predicted. Regenerates the paper series and times the
+//! end-to-end sweeps.
+
+use collective_tuner::harness::experiments;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::util::benchkit::{bench_with, section, BenchOpts};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let opts = BenchOpts { warmup_iters: 1, min_iters: 3, max_iters: 10, min_seconds: 1.0 };
+
+    section("Fig 1(a): Binomial Broadcast, model vs measurement");
+    let r = experiments::fig1a(&cfg);
+    println!("{}", r.render());
+    bench_with("fig1a sweep (2 cluster sizes x 11 sizes)", &opts, || {
+        std::hint::black_box(experiments::fig1a(&cfg));
+    });
+
+    section("Fig 1(b): Segmented Chain Broadcast, model vs measurement");
+    let r = experiments::fig1b(&cfg);
+    println!("{}", r.render());
+    bench_with("fig1b sweep", &opts, || {
+        std::hint::black_box(experiments::fig1b(&cfg));
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench: Figure 2 — Chain vs Binomial Broadcast at fixed P, with the
+//! small-message TCP anomaly visible. Asserts the crossover shape the
+//! paper reports (binomial wins small m, segmented chain wins large m).
+
+use collective_tuner::harness::experiments;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::util::benchkit::{bench_with, section, BenchOpts};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+
+    section("Fig 2: Chain vs Binomial Broadcast, P=24");
+    let r = experiments::fig2(&cfg);
+    println!("{}", r.render());
+    assert!(
+        r.notes[0].contains("crossover"),
+        "expected the paper's crossover: {}",
+        r.notes[0]
+    );
+
+    // the same comparison without TCP anomalies: models get sharper
+    section("same sweep on the ideal network (anomalies off)");
+    let ideal = NetConfig::fast_ethernet_ideal();
+    let ri = experiments::fig2(&ideal);
+    for n in &ri.notes {
+        println!("  {n}");
+    }
+
+    let opts = BenchOpts { warmup_iters: 1, min_iters: 3, max_iters: 10, min_seconds: 1.0 };
+    bench_with("fig2 sweep (2 strategies x 13 sizes)", &opts, || {
+        std::hint::black_box(experiments::fig2(&cfg));
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench: Figures 3(a) and 3(b) — Flat vs Binomial Scatter, measured vs
+//! predicted, across message sizes and cluster sizes.
+
+use collective_tuner::harness::experiments;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::util::benchkit::{bench_with, section, BenchOpts};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let opts = BenchOpts { warmup_iters: 1, min_iters: 3, max_iters: 10, min_seconds: 1.0 };
+
+    section("Fig 3(a): Flat vs Binomial Scatter across m, P=32");
+    let r = experiments::fig3a(&cfg);
+    println!("{}", r.render());
+
+    section("Fig 3(b): Flat vs Binomial Scatter across P");
+    let r = experiments::fig3b(&cfg);
+    println!("{}", r.render());
+    assert!(
+        r.notes[0].contains("overtakes"),
+        "expected the paper's binomial-overtakes-flat shape: {}",
+        r.notes[0]
+    );
+
+    bench_with("fig3a sweep", &opts, || {
+        std::hint::black_box(experiments::fig3a(&cfg));
+    });
+    bench_with("fig3b sweep", &opts, || {
+        std::hint::black_box(experiments::fig3b(&cfg));
+    });
+}

@@ -1,0 +1,35 @@
+//! Bench: Figure 4 — the §4.2 anomaly: Flat Scatter's bulk transmission
+//! outruns its own pLogP model while Binomial Scatter follows its model.
+
+use collective_tuner::harness::experiments;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::util::benchkit::{bench_with, section, BenchOpts};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+
+    section("Fig 4: Flat vs Binomial Scatter with TCP bulk effect, P=24");
+    let r = experiments::fig4(&cfg);
+    println!("{}", r.render());
+
+    // the anomaly must be visible: flat beats its model, binomial doesn't
+    let ratio = |i: usize| -> f64 {
+        r.notes[i]
+            .split('=')
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    let (rf, rb) = (ratio(0), ratio(1));
+    assert!(rf < rb && rf < 1.0, "bulk effect missing: flat {rf}, binomial {rb}");
+    println!("bulk effect confirmed: flat {rf:.3} < binomial {rb:.3}");
+
+    let opts = BenchOpts { warmup_iters: 1, min_iters: 3, max_iters: 10, min_seconds: 1.0 };
+    bench_with("fig4 sweep", &opts, || {
+        std::hint::black_box(experiments::fig4(&cfg));
+    });
+}

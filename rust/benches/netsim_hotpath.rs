@@ -1,0 +1,76 @@
+//! Bench: the simulator + executor hot path. The experiment sweeps run
+//! thousands of collectives; the L3 target is >= 1M simulated
+//! message-events per second so a full figure regenerates in seconds.
+
+use collective_tuner::collectives::{composed, Strategy};
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::{NetConfig, Netsim, SimTime};
+use collective_tuner::util::benchkit::{bench, section};
+
+fn main() {
+    section("raw netsim send throughput");
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    {
+        let mut sim = Netsim::new(50, cfg.clone());
+        let mut i = 0u32;
+        let r = bench("netsim.send x 10_000 (round-robin 50 nodes)", || {
+            for _ in 0..10_000 {
+                let src = i % 50;
+                let dst = (i + 1) % 50;
+                sim.send(SimTime::ZERO, src, dst, 1024);
+                i += 1;
+            }
+            if sim.stats().messages > 5_000_000 {
+                sim.reset();
+            }
+        });
+        let per_msg = r.summary.p50 / 10_000.0;
+        println!("   -> {:.2} M msgs/s", 1.0 / per_msg / 1e6);
+    }
+
+    section("schedule build + execute (end-to-end collective)");
+    for (label, p, m, seg) in [
+        ("binomial bcast P=50 m=64k", 50usize, 64 * 1024u64, None),
+        ("seg chain bcast P=50 m=1M s=8k", 50, 1 << 20, Some(8 * 1024u64)),
+        ("flat scatter P=50 m=64k", 50, 64 * 1024, None),
+    ] {
+        let strategy = if label.contains("scatter") {
+            Strategy::ScatterFlat
+        } else if label.contains("seg chain") {
+            Strategy::BcastSegChain
+        } else {
+            Strategy::BcastBinomial
+        };
+        let mut world = World::new(Netsim::new(p, cfg.clone()));
+        let sched = strategy.build(p, 0, m, seg);
+        let msgs = sched.total_sends() as f64;
+        let r = bench(label, || {
+            std::hint::black_box(world.run(&sched));
+        });
+        println!(
+            "   -> {:.2} M executor-messages/s ({} msgs/run)",
+            msgs / r.summary.p50 / 1e6,
+            msgs
+        );
+    }
+
+    section("composed operations");
+    for (label, sched) in [
+        ("barrier P=50", composed::barrier_binomial(50)),
+        ("allgather P=50 m=4k", composed::allgather(50, 0, 4096)),
+        ("allreduce P=50 m=64k", composed::allreduce(50, 0, 64 * 1024)),
+    ] {
+        let mut world = World::new(Netsim::new(50, cfg.clone()));
+        bench(label, || {
+            std::hint::black_box(world.run(&sched));
+        });
+    }
+
+    section("schedule construction only");
+    bench("build seg chain P=50 m=1M s=2k (512 segs)", || {
+        std::hint::black_box(Strategy::BcastSegChain.build(50, 0, 1 << 20, Some(2048)));
+    });
+    bench("build binomial bcast P=50", || {
+        std::hint::black_box(Strategy::BcastBinomial.build(50, 0, 1 << 20, None));
+    });
+}

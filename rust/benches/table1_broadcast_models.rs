@@ -1,0 +1,80 @@
+//! Bench: Table 1 (broadcast cost models) — regenerates the table's
+//! content on the measured network and times model evaluation throughput
+//! for both backends (native Rust and the AOT XLA artifact).
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::models;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp;
+use collective_tuner::runtime::TunerArtifact;
+use collective_tuner::tuner::{grids, Tuner};
+use collective_tuner::util::benchkit::{bench, section};
+use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let mut sim = Netsim::new(2, cfg);
+    let net = plogp::bench::measure(&mut sim);
+
+    section("Table 1 content: broadcast models on the measured network");
+    let s_grid = grids::default_s_grid();
+    let mut t = Table::new(vec!["strategy", "P=8,m=64k", "P=24,m=64k", "P=48,m=1M"]);
+    for strat in Strategy::BCAST {
+        let cell = |p: usize, m: u64| {
+            let v = if strat.is_segmented() {
+                models::best_segment(strat, &net, p, m, &s_grid).0
+            } else {
+                models::predict(strat, &net, p, m, None)
+            };
+            fmt_time(v)
+        };
+        t.row(vec![
+            strat.name().to_string(),
+            cell(8, 64 * 1024),
+            cell(24, 64 * 1024),
+            cell(48, 1 << 20),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    section("model-evaluation throughput (native)");
+    let m_grid = grids::default_m_grid();
+    let p_grid = grids::default_p_grid();
+    bench("native: 10 bcast models x 16P x 48m (+seg search)", || {
+        let mut acc = 0.0f64;
+        for &p in &p_grid {
+            for &m in &m_grid {
+                for strat in Strategy::BCAST {
+                    acc += if strat.is_segmented() {
+                        models::best_segment(strat, &net, p, m, &s_grid).0
+                    } else {
+                        models::predict(strat, &net, p, m, None)
+                    };
+                }
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    section("model-evaluation throughput (XLA artifact, all 13 strategies)");
+    match Tuner::with_artifact(&TunerArtifact::default_dir()) {
+        Ok(tuner) => {
+            bench("artifact: full tune() incl. winner argmin", || {
+                let out = tuner.tune(&net, &p_grid, &m_grid).unwrap();
+                std::hint::black_box(out);
+            });
+        }
+        Err(e) => println!("artifact unavailable ({e:#}) — run `make artifacts`"),
+    }
+
+    println!("\nshape check: segmented chain must win large-m broadcast; binomial small-m");
+    let big = models::rank_strategies(&Strategy::BCAST, &net, 48, 1 << 20, &s_grid);
+    let small = models::rank_strategies(&Strategy::BCAST, &net, 48, 256, &s_grid);
+    println!(
+        "  P=48 m=1MB  -> {} ({})",
+        big[0].0.name(),
+        fmt_bytes(big[0].2.unwrap_or(0) as f64)
+    );
+    println!("  P=48 m=256B -> {}", small[0].0.name());
+    assert_eq!(big[0].0, Strategy::BcastSegChain);
+}

@@ -1,0 +1,55 @@
+//! Bench: Table 2 (scatter cost models) — regenerates the table's content
+//! and times the scatter-model evaluation (the chain model's triangular
+//! gap sum is the expensive row).
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::models;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp;
+use collective_tuner::tuner::grids;
+use collective_tuner::util::benchkit::{bench, section};
+use collective_tuner::util::table::{fmt_time, Table};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let mut sim = Netsim::new(2, cfg);
+    let net = plogp::bench::measure(&mut sim);
+
+    section("Table 2 content: scatter models on the measured network");
+    let mut t = Table::new(vec!["strategy", "P=8,m=16k", "P=24,m=16k", "P=48,m=128k"]);
+    for strat in Strategy::SCATTER {
+        let cell = |p: usize, m: u64| fmt_time(models::predict(strat, &net, p, m, None));
+        t.row(vec![
+            strat.name().to_string(),
+            cell(8, 16 * 1024),
+            cell(24, 16 * 1024),
+            cell(48, 128 * 1024),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    section("scatter-model evaluation throughput");
+    let m_grid = grids::default_m_grid();
+    let p_grid = grids::default_p_grid();
+    for strat in Strategy::SCATTER {
+        bench(&format!("{} x 16P x 48m", strat.name()), || {
+            let mut acc = 0.0;
+            for &p in &p_grid {
+                for &m in &m_grid {
+                    acc += models::predict(strat, &net, p, m, None);
+                }
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    println!("\nshape check: binomial beats flat at P=32 (power of two), flat wins P=3");
+    let t32 = models::predict(Strategy::ScatterBinomial, &net, 32, 1 << 20, None);
+    let f32_ = models::predict(Strategy::ScatterFlat, &net, 32, 1 << 20, None);
+    let t3 = models::predict(Strategy::ScatterBinomial, &net, 3, 1 << 20, None);
+    let f3 = models::predict(Strategy::ScatterFlat, &net, 3, 1 << 20, None);
+    println!("  P=32: binomial {} vs flat {}", fmt_time(t32), fmt_time(f32_));
+    println!("  P=3 : binomial {} vs flat {}", fmt_time(t3), fmt_time(f3));
+    assert!(t32 < f32_);
+    assert!(f3 <= t3);
+}

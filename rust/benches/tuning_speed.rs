@@ -1,0 +1,95 @@
+//! Bench: the headline claim — *fast* tuning. Compares the cost of
+//! model-based tuning (XLA artifact and native) against exhaustive
+//! empirical benchmarking (what Vadhiyar et al.'s Automatically Tuned
+//! Collective Communications does), which the paper's approach replaces.
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::models;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp;
+use collective_tuner::runtime::TunerArtifact;
+use collective_tuner::tuner::validate::empirical_ranking;
+use collective_tuner::tuner::{grids, Tuner};
+use collective_tuner::util::benchkit::{bench, bench_with, section, BenchOpts};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let mut sim = Netsim::new(2, cfg.clone());
+    let net = plogp::bench::measure(&mut sim);
+    let p_grid = grids::default_p_grid();
+    let m_grid = grids::default_m_grid();
+    let s_grid = grids::default_s_grid();
+    let points = p_grid.len() * m_grid.len();
+
+    section(format!("model-based tuning of {points} (P, m) points").as_str());
+    let native = Tuner::native();
+    let r_native = bench("native models: full bcast+scatter tune", || {
+        std::hint::black_box(native.tune(&net, &p_grid, &m_grid).unwrap());
+    });
+
+    let r_artifact = match Tuner::with_artifact(&TunerArtifact::default_dir()) {
+        Ok(tuner) => Some(bench("XLA artifact: full bcast+scatter tune", || {
+            std::hint::black_box(tuner.tune(&net, &p_grid, &m_grid).unwrap());
+        })),
+        Err(e) => {
+            println!("artifact unavailable ({e:#})");
+            None
+        }
+    };
+
+    section("exhaustive empirical benchmarking (the alternative)");
+    // One (P, m) point: run all 13 strategies on the simulated cluster.
+    let opts = BenchOpts { warmup_iters: 1, min_iters: 3, max_iters: 20, min_seconds: 1.0 };
+    let r_emp = bench_with("empirical: ONE (P=24, m=64k) point, 13 strategies", &opts, || {
+        std::hint::black_box(empirical_ranking(
+            &cfg,
+            &net,
+            &Strategy::ALL,
+            24,
+            64 * 1024,
+            &s_grid,
+        ));
+    });
+
+    // On real hardware each strategy×point needs many repetitions of real
+    // wall-clock collectives; in our simulator a run costs simulated
+    // microseconds but the *real* cluster would pay `completion` time per
+    // repetition. Estimate the real-testbed cost of the full grid:
+    let mut real_seconds = 0.0;
+    for &p in &p_grid {
+        for &m in &m_grid {
+            for strat in Strategy::ALL {
+                let seg = strat
+                    .is_segmented()
+                    .then(|| models::best_segment(strat, &net, p, m, &s_grid).1);
+                // 10 repetitions per measurement, the usual minimum
+                real_seconds += 10.0 * models::predict(strat, &net, p, m, seg);
+            }
+        }
+    }
+
+    section("summary");
+    println!(
+        "model-based tuning (native)  : {:>12.3} ms for {points} points",
+        r_native.summary.p50 * 1e3
+    );
+    if let Some(r) = &r_artifact {
+        println!(
+            "model-based tuning (artifact): {:>12.3} ms for {points} points",
+            r.summary.p50 * 1e3
+        );
+    }
+    println!(
+        "empirical search (simulated) : {:>12.3} ms for ONE point",
+        r_emp.summary.p50 * 1e3
+    );
+    println!(
+        "empirical search on the real testbed, full grid (estimated): {:.1} minutes",
+        real_seconds / 60.0
+    );
+    let speedup = real_seconds / r_native.summary.p50;
+    println!(
+        "=> model-based tuning is ~{speedup:.0}x faster than exhaustive \
+         benchmarking of the same grid on the paper's cluster"
+    );
+}

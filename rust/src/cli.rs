@@ -1,0 +1,208 @@
+//! Hand-rolled CLI argument handling (clap is unavailable offline).
+//!
+//! Grammar: `collective-tuner <command> [--key value | --flag]...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::netsim::NetConfig;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}' (options are --key value)");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    opts.insert(key.to_string(), it.next().unwrap());
+                }
+                _ => flags.push(key.to_string()),
+            }
+        }
+        Ok(Args { command, opts, flags })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_size(v),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad entry '{t}'"))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    /// Network preset by name.
+    pub fn net_config(&self) -> Result<NetConfig> {
+        let preset = self.get_or("preset", "icluster1");
+        let mut cfg = match preset.as_str() {
+            "icluster1" | "fast-ethernet" => NetConfig::fast_ethernet_icluster1(),
+            "ideal" => NetConfig::fast_ethernet_ideal(),
+            "gigabit" | "gige" => NetConfig::gigabit_ethernet(),
+            "myrinet" => NetConfig::myrinet_like(),
+            other => bail!(
+                "unknown --preset '{other}' (icluster1, ideal, gigabit, myrinet)"
+            ),
+        };
+        match self.get_or("tcp", "default").as_str() {
+            "default" => {}
+            "ideal" => cfg.tcp = crate::netsim::TcpConfig::ideal(),
+            "linux22" => cfg.tcp = crate::netsim::TcpConfig::linux22(),
+            other => bail!("unknown --tcp '{other}' (default, ideal, linux22)"),
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse a byte size with optional k/M suffix ("64k", "1M", "512").
+pub fn parse_size(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1024u64),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    let v: f64 = num
+        .parse()
+        .map_err(|_| anyhow::anyhow!("'{s}' is not a size (try 512, 64k, 1M)"))?;
+    Ok((v * mult as f64).round() as u64)
+}
+
+pub const USAGE: &str = "\
+collective-tuner — fast tuning of intra-cluster collective communications
+(reproduction of Barchet-Estefanel & Mounié, 2004)
+
+USAGE:
+  collective-tuner <command> [options]
+
+COMMANDS:
+  bench-plogp   measure pLogP parameters (L and the g(m) table)
+                  --preset icluster1|ideal|gigabit|myrinet  --tcp default|ideal|linux22
+  tune          build broadcast + scatter decision tables
+                  --procs 2,8,24,48   --backend auto|native|artifact
+                  --save results/     (persist tables as TSV)
+  run           execute one collective on the simulated cluster
+                  --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
+                  --strategy <name|auto>  --procs 24  --bytes 64k  --segment 8k
+  experiment    regenerate a paper figure/table
+                  --id tables|fig1a|fig1b|fig2|fig3a|fig3b|fig4|validate|all
+                  --out results/
+  discover      recover islands-of-clusters from latency probes
+                  --nodes 12  --clusters 2
+  info          show artifact metadata and presets
+  help          this text
+
+EXAMPLES:
+  collective-tuner bench-plogp --preset icluster1
+  collective-tuner tune --procs 8,24,48 --backend auto
+  collective-tuner run --op bcast --strategy auto --procs 24 --bytes 256k
+  collective-tuner experiment --id fig2 --out results/
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_opts_flags() {
+        let a = parse(&["tune", "--procs", "2,8", "--verbose"]);
+        assert_eq!(a.command, "tune");
+        assert_eq!(a.get("procs"), Some("2,8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn empty_means_help() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["run".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("512").unwrap(), 512);
+        assert_eq!(parse_size("64k").unwrap(), 64 * 1024);
+        assert_eq!(parse_size("1M").unwrap(), 1024 * 1024);
+        assert_eq!(parse_size("1.5k").unwrap(), 1536);
+        assert!(parse_size("abc").is_err());
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = parse(&["tune", "--procs", "2, 8,24"]);
+        assert_eq!(a.usize_list("procs").unwrap(), Some(vec![2, 8, 24]));
+        assert_eq!(a.usize_list("other").unwrap(), None);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        let a = parse(&["x", "--preset", "gigabit"]);
+        assert!(a.net_config().unwrap().bandwidth_bps > 100e6);
+        let b = parse(&["x", "--preset", "nope"]);
+        assert!(b.net_config().is_err());
+    }
+
+    #[test]
+    fn tcp_override() {
+        let a = parse(&["x", "--preset", "icluster1", "--tcp", "ideal"]);
+        assert_eq!(a.net_config().unwrap().tcp.delayed_ack_penalty, 0.0);
+    }
+}

@@ -1,0 +1,390 @@
+//! Broadcast schedule builders — the ten strategies of the paper's
+//! Table 1.
+//!
+//! Segmented variants split the message `m` into `k = ceil(m/s)` segments
+//! tagged by segment index; each rank's expected payload set is then the
+//! exact segment decomposition of `[0, m)`, so the executor verifies
+//! lossless reassembly.
+
+use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
+
+use super::tree;
+
+/// Segment decomposition of `[0, bytes)` into `ceil(bytes/seg)` pieces.
+/// The last piece may be short. `seg >= bytes` yields one piece.
+pub fn segments(bytes: u64, seg: u64) -> Vec<(u64, u64)> {
+    assert!(bytes >= 1 && seg >= 1);
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < bytes {
+        let len = seg.min(bytes - off);
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+fn proto(rdv: bool) -> Protocol {
+    if rdv {
+        Protocol::Rendezvous
+    } else {
+        Protocol::Eager
+    }
+}
+
+/// Flat tree: the root sends `m` to every other rank directly.
+/// Model: `(P-1) g(m) + L` (rendezvous: `(P-1) g(m) + 2 g(1) + 3L`).
+pub fn flat(p: usize, root: Rank, bytes: u64, rdv: bool) -> CommSchedule {
+    let name = if rdv { "bcast/flat_rdv" } else { "bcast/flat" };
+    let mut s = CommSchedule::new(p, name);
+    for vr in 1..p as Rank {
+        let dst = tree::to_real(vr, root, p);
+        s.ranks[root as usize].sends.push(SendSpec {
+            to: dst,
+            tag: Tag(0),
+            bytes,
+            payload: Payload::range(0, bytes),
+            trigger: Trigger::AtStart,
+            protocol: proto(rdv),
+        });
+        s.ranks[dst as usize].expected.push(Payload::range(0, bytes));
+    }
+    s
+}
+
+/// Segmented flat tree: `(P-1)(g(s) k) + L`. Segment-major send order so
+/// every destination's reassembly progresses in step.
+pub fn seg_flat(p: usize, root: Rank, bytes: u64, seg: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "bcast/seg_flat");
+    let segs = segments(bytes, seg);
+    for (j, &(off, len)) in segs.iter().enumerate() {
+        for vr in 1..p as Rank {
+            let dst = tree::to_real(vr, root, p);
+            s.ranks[root as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(j as u64),
+                bytes: len,
+                payload: Payload::range(off, len),
+                trigger: Trigger::AtStart,
+                protocol: Protocol::Eager,
+            });
+        }
+    }
+    for vr in 1..p as Rank {
+        let dst = tree::to_real(vr, root, p) as usize;
+        for &(off, len) in &segs {
+            s.ranks[dst].expected.push(Payload::range(off, len));
+        }
+    }
+    s
+}
+
+/// Chain (pipeline of whole messages): rank vr forwards to vr+1 upon
+/// receipt. Model: `(P-1)(g(m) + L)`.
+pub fn chain(p: usize, root: Rank, bytes: u64, rdv: bool) -> CommSchedule {
+    let name = if rdv { "bcast/chain_rdv" } else { "bcast/chain" };
+    let mut s = CommSchedule::new(p, name);
+    for vr in 0..(p - 1) as Rank {
+        let src = tree::to_real(vr, root, p);
+        let dst = tree::to_real(vr + 1, root, p);
+        let trigger = if vr == 0 {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecv(Tag(0))
+        };
+        s.ranks[src as usize].sends.push(SendSpec {
+            to: dst,
+            tag: Tag(0),
+            bytes,
+            payload: Payload::range(0, bytes),
+            trigger,
+            protocol: proto(rdv),
+        });
+        s.ranks[dst as usize].expected.push(Payload::range(0, bytes));
+    }
+    s
+}
+
+/// Segmented chain (the paper's pipeline): segment `j` is forwarded as
+/// soon as it arrives. Model: `(P-1)(g(s) + L) + g(s)(k-1)`.
+pub fn seg_chain(p: usize, root: Rank, bytes: u64, seg: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "bcast/seg_chain");
+    let segs = segments(bytes, seg);
+    for vr in 0..(p - 1) as Rank {
+        let src = tree::to_real(vr, root, p);
+        let dst = tree::to_real(vr + 1, root, p);
+        for (j, &(off, len)) in segs.iter().enumerate() {
+            let trigger = if vr == 0 {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecv(Tag(j as u64))
+            };
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(j as u64),
+                bytes: len,
+                payload: Payload::range(off, len),
+                trigger,
+                protocol: Protocol::Eager,
+            });
+        }
+        for &(off, len) in &segs {
+            s.ranks[dst as usize].expected.push(Payload::range(off, len));
+        }
+    }
+    s
+}
+
+/// Complete binary tree: each internal node forwards to its two children.
+/// Model (upper bound): `ceil(log2 P) (2 g(m) + L)`.
+pub fn binary(p: usize, root: Rank, bytes: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "bcast/binary");
+    for vr in 0..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let trigger = if vr == 0 {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecv(Tag(0))
+        };
+        for c in tree::binary_children(vr, p) {
+            let dst = tree::to_real(c, root, p);
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(0),
+                bytes,
+                payload: Payload::range(0, bytes),
+                trigger: trigger.clone(),
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::range(0, bytes));
+        }
+    }
+    s
+}
+
+/// Binomial tree. Model: `floor(log2 P) g(m) + ceil(log2 P) L`.
+pub fn binomial(p: usize, root: Rank, bytes: u64, rdv: bool) -> CommSchedule {
+    let name = if rdv { "bcast/binomial_rdv" } else { "bcast/binomial" };
+    let mut s = CommSchedule::new(p, name);
+    for vr in 0..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let trigger = if vr == 0 {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecv(Tag(0))
+        };
+        for c in tree::binomial_children(vr, p) {
+            let dst = tree::to_real(c, root, p);
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(0),
+                bytes,
+                payload: Payload::range(0, bytes),
+                trigger: trigger.clone(),
+                protocol: proto(rdv),
+            });
+            s.ranks[dst as usize].expected.push(Payload::range(0, bytes));
+        }
+    }
+    s
+}
+
+/// Segmented binomial tree: every segment flows down the same binomial
+/// tree, forwarded on arrival. Model:
+/// `floor(log2 P) g(s) k + ceil(log2 P) L`.
+pub fn seg_binomial(p: usize, root: Rank, bytes: u64, seg: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "bcast/seg_binomial");
+    let segs = segments(bytes, seg);
+    for vr in 0..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let children = tree::binomial_children(vr, p);
+        if children.is_empty() && vr == 0 {
+            continue;
+        }
+        // segment-major, child-minor: segment j reaches every child
+        // before segment j+1 is forwarded, keeping subtrees in step.
+        for (j, &(off, len)) in segs.iter().enumerate() {
+            let trigger = if vr == 0 {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecv(Tag(j as u64))
+            };
+            for &c in &children {
+                let dst = tree::to_real(c, root, p);
+                s.ranks[src as usize].sends.push(SendSpec {
+                    to: dst,
+                    tag: Tag(j as u64),
+                    bytes: len,
+                    payload: Payload::range(off, len),
+                    trigger: trigger.clone(),
+                    protocol: Protocol::Eager,
+                });
+            }
+        }
+        if vr != 0 {
+            for &(off, len) in &segs {
+                s.ranks[src as usize].expected.push(Payload::range(off, len));
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::netsim::{NetConfig, Netsim};
+
+    fn run(sched: &CommSchedule, p: usize) -> crate::mpi::RunReport {
+        let mut w = World::new(Netsim::new(p, NetConfig::fast_ethernet_ideal()));
+        let rep = w.run(sched);
+        assert!(rep.verify(sched).is_empty(), "{}: {:?}", sched.name, rep.verify(sched));
+        rep
+    }
+
+    #[test]
+    fn segments_cover_message_exactly() {
+        let segs = segments(10_000, 4096);
+        assert_eq!(segs, vec![(0, 4096), (4096, 4096), (8192, 1808)]);
+        assert_eq!(segments(100, 200), vec![(0, 100)]);
+        assert_eq!(segments(100, 100), vec![(0, 100)]);
+    }
+
+    #[test]
+    fn all_bcasts_deliver_everywhere() {
+        for p in [2usize, 3, 5, 8, 13] {
+            for (name, sched) in [
+                ("flat", flat(p, 0, 8192, false)),
+                ("flat_rdv", flat(p, 0, 8192, true)),
+                ("seg_flat", seg_flat(p, 0, 8192, 1024)),
+                ("chain", chain(p, 0, 8192, false)),
+                ("chain_rdv", chain(p, 0, 8192, true)),
+                ("seg_chain", seg_chain(p, 0, 8192, 1024)),
+                ("binary", binary(p, 0, 8192)),
+                ("binomial", binomial(p, 0, 8192, false)),
+                ("binomial_rdv", binomial(p, 0, 8192, true)),
+                ("seg_binomial", seg_binomial(p, 0, 8192, 1024)),
+            ] {
+                let rep = run(&sched, p);
+                assert!(rep.completion.as_secs() > 0.0, "{name} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_with_nonzero_root_delivers() {
+        for root in 0..5 {
+            let sched = binomial(5, root, 4096, false);
+            run(&sched, 5);
+        }
+    }
+
+    #[test]
+    fn flat_send_count() {
+        let s = flat(10, 0, 100, false);
+        assert_eq!(s.total_sends(), 9);
+        assert_eq!(s.total_send_bytes(), 900);
+    }
+
+    #[test]
+    fn seg_flat_send_count() {
+        // 10 ranks, 8 segments -> 9 * 8 sends
+        let s = seg_flat(10, 0, 8192, 1024);
+        assert_eq!(s.total_sends(), 72);
+        assert_eq!(s.total_send_bytes(), 8192 * 9);
+    }
+
+    #[test]
+    fn chain_hops_equal_p_minus_1() {
+        let s = chain(6, 0, 100, false);
+        assert_eq!(s.total_sends(), 5);
+    }
+
+    #[test]
+    fn binomial_total_sends_p_minus_1() {
+        for p in [2usize, 3, 5, 8, 13, 16] {
+            assert_eq!(binomial(p, 0, 10, false).total_sends(), p - 1);
+        }
+    }
+
+    #[test]
+    fn binomial_faster_than_chain_for_small_messages() {
+        let p = 16;
+        let rb = run(&binomial(p, 0, 64, false), p);
+        let rc = run(&chain(p, 0, 64, false), p);
+        assert!(rb.completion < rc.completion);
+    }
+
+    #[test]
+    fn seg_chain_faster_than_chain_for_large_messages() {
+        let p = 12;
+        let m = 1 << 20;
+        let rs = run(&seg_chain(p, 0, m, 16 * 1024), p);
+        let rc = run(&chain(p, 0, m, false), p);
+        assert!(
+            rs.completion < rc.completion,
+            "seg {} vs chain {}",
+            rs.completion,
+            rc.completion
+        );
+    }
+
+    #[test]
+    fn seg_chain_pipeline_beats_binomial_large_messages() {
+        // The paper's headline broadcast result on Fast Ethernet.
+        let p = 24;
+        let m = 1 << 20;
+        let rs = run(&seg_chain(p, 0, m, 8 * 1024), p);
+        let rb = run(&binomial(p, 0, m, false), p);
+        assert!(
+            rs.completion < rb.completion,
+            "seg_chain {} vs binomial {}",
+            rs.completion,
+            rb.completion
+        );
+    }
+
+    #[test]
+    fn binomial_beats_seg_chain_small_messages() {
+        let p = 24;
+        let m = 256;
+        let rs = run(&seg_chain(p, 0, m, 8 * 1024), p);
+        let rb = run(&binomial(p, 0, m, false), p);
+        assert!(rb.completion < rs.completion);
+    }
+
+    #[test]
+    fn rendezvous_costs_more_than_eager() {
+        let p = 8;
+        for (e, r) in [
+            (flat(p, 0, 4096, false), flat(p, 0, 4096, true)),
+            (chain(p, 0, 4096, false), chain(p, 0, 4096, true)),
+            (binomial(p, 0, 4096, false), binomial(p, 0, 4096, true)),
+        ] {
+            let re = run(&e, p);
+            let rr = run(&r, p);
+            assert!(rr.completion > re.completion, "{} vs {}", r.name, e.name);
+        }
+    }
+
+    #[test]
+    fn p2_all_tree_shapes_equal() {
+        // With two ranks every tree is a single send.
+        let m = 4096;
+        let rf = run(&flat(2, 0, m, false), 2);
+        let rc = run(&chain(2, 0, m, false), 2);
+        let rb = run(&binomial(2, 0, m, false), 2);
+        assert_eq!(rf.completion, rc.completion);
+        assert_eq!(rf.completion, rb.completion);
+    }
+
+    #[test]
+    fn segmented_degenerates_to_unsegmented_when_seg_ge_m() {
+        let p = 6;
+        let m = 4096;
+        let a = run(&seg_chain(p, 0, m, m), p);
+        let b = run(&chain(p, 0, m, false), p);
+        assert_eq!(a.completion, b.completion);
+    }
+}

@@ -1,0 +1,380 @@
+//! Collectives constructed from the same building blocks — the paper's
+//! §3 observation: "practical implementations of MPI usually construct
+//! other collective operations (Barrier, Reduce, Gather) in a very
+//! similar way", and its AllGather example (§3: MagPIe's Gather +
+//! AllGatherv + Broadcast decomposition).
+//!
+//! * [`gather_flat`] / [`gather_binomial`] — reversed scatter trees.
+//! * [`reduce_binomial`] — binomial fan-in combining contributor masks.
+//! * [`barrier_binomial`] — fan-in + fan-out of control tokens.
+//! * [`allgather`] — Gather to root + Broadcast of the full buffer.
+//! * [`allreduce`] — Reduce to root + Broadcast of the result.
+
+use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
+
+use super::tree;
+
+/// Tag-space bases so composed phases never collide on a receiver.
+const GATHER_BASE: u64 = 1 << 32;
+const BCAST_BASE: u64 = 2 << 32;
+
+/// Flat gather: every rank sends its `bytes`-sized contribution straight
+/// to the root. (Reverse of flat scatter; cost symmetric under pLogP.)
+pub fn gather_flat(p: usize, root: Rank, bytes: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "gather/flat");
+    for vr in 1..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        s.ranks[src as usize].sends.push(SendSpec {
+            to: root,
+            tag: Tag(GATHER_BASE + vr as u64),
+            bytes,
+            payload: Payload::range(vr as u64 * bytes, bytes),
+            trigger: Trigger::AtStart,
+            protocol: Protocol::Eager,
+        });
+        s.ranks[root as usize]
+            .expected
+            .push(Payload::range(vr as u64 * bytes, bytes));
+    }
+    s
+}
+
+/// Binomial gather: leaves send up; each internal node forwards its
+/// combined subtree block once all children have arrived.
+pub fn gather_binomial(p: usize, root: Rank, bytes: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "gather/binomial");
+    for vr in 1..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let parent = tree::binomial_parent(vr);
+        let dst = tree::to_real(parent, root, p);
+        let sub = tree::binomial_subtree_size(vr, p) as u64;
+        let children = tree::binomial_children(vr, p);
+        let trigger = if children.is_empty() {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecvAll(
+                children.iter().map(|c| Tag(GATHER_BASE + *c as u64)).collect(),
+            )
+        };
+        let payload = Payload::range(vr as u64 * bytes, sub * bytes);
+        s.ranks[src as usize].sends.push(SendSpec {
+            to: dst,
+            tag: Tag(GATHER_BASE + vr as u64),
+            bytes: sub * bytes,
+            payload,
+            trigger,
+            protocol: Protocol::Eager,
+        });
+        s.ranks[dst as usize].expected.push(payload);
+    }
+    s
+}
+
+/// Binomial reduce: same fan-in tree as [`gather_binomial`], but the
+/// combined traffic stays `bytes` long (element-wise reduction) and the
+/// payloads are contributor bitmasks. Supports P <= 64.
+pub fn reduce_binomial(p: usize, root: Rank, bytes: u64) -> CommSchedule {
+    assert!(p <= 64, "contributor masks support at most 64 ranks");
+    let mut s = CommSchedule::new(p, "reduce/binomial");
+    // mask of all virtual ranks in vr's subtree
+    fn subtree_mask(vr: Rank, p: usize) -> u64 {
+        let mut m = 1u64 << vr;
+        for c in tree::binomial_children(vr, p) {
+            m |= subtree_mask(c, p);
+        }
+        m
+    }
+    for vr in 1..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let parent = tree::binomial_parent(vr);
+        let dst = tree::to_real(parent, root, p);
+        let children = tree::binomial_children(vr, p);
+        let trigger = if children.is_empty() {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecvAll(
+                children.iter().map(|c| Tag(GATHER_BASE + *c as u64)).collect(),
+            )
+        };
+        let payload = Payload::Ranks(subtree_mask(vr, p));
+        s.ranks[src as usize].sends.push(SendSpec {
+            to: dst,
+            tag: Tag(GATHER_BASE + vr as u64),
+            bytes,
+            payload,
+            trigger,
+            protocol: Protocol::Eager,
+        });
+        s.ranks[dst as usize].expected.push(payload);
+    }
+    s
+}
+
+/// Binomial barrier: control-token fan-in to the root, then fan-out.
+/// (The classic dissemination barrier is lower-latency; this is the
+/// LAM-style tree barrier the paper's §3 refers to.)
+pub fn barrier_binomial(p: usize) -> CommSchedule {
+    let root: Rank = 0;
+    let mut s = CommSchedule::new(p, "barrier/binomial");
+    // fan-in
+    for vr in 1..p as Rank {
+        let children = tree::binomial_children(vr, p);
+        let trigger = if children.is_empty() {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecvAll(
+                children.iter().map(|c| Tag(GATHER_BASE + *c as u64)).collect(),
+            )
+        };
+        s.ranks[vr as usize].sends.push(SendSpec {
+            to: tree::binomial_parent(vr),
+            tag: Tag(GATHER_BASE + vr as u64),
+            bytes: 1,
+            payload: Payload::Control,
+            trigger,
+            protocol: Protocol::Eager,
+        });
+        s.ranks[tree::binomial_parent(vr) as usize]
+            .expected
+            .push(Payload::Control);
+    }
+    // fan-out
+    for vr in 0..p as Rank {
+        let children = tree::binomial_children(vr, p);
+        let trigger = if vr == root {
+            // root releases once every direct child token arrived
+            let direct: Vec<Tag> = children
+                .iter()
+                .map(|c| Tag(GATHER_BASE + *c as u64))
+                .collect();
+            if direct.is_empty() {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecvAll(direct)
+            }
+        } else {
+            Trigger::OnRecv(Tag(BCAST_BASE + vr as u64))
+        };
+        for c in children {
+            s.ranks[vr as usize].sends.push(SendSpec {
+                to: c,
+                tag: Tag(BCAST_BASE + c as u64),
+                bytes: 1,
+                payload: Payload::Control,
+                trigger: trigger.clone(),
+                protocol: Protocol::Eager,
+            });
+            s.ranks[c as usize].expected.push(Payload::Control);
+        }
+    }
+    s
+}
+
+/// AllGather as Gather-to-root + Broadcast-of-everything — exactly the
+/// intra-cluster phases MagPIe composes (§3). The broadcast payload is
+/// the concatenated `P·bytes` buffer.
+pub fn allgather(p: usize, root: Rank, bytes: u64) -> CommSchedule {
+    let mut s = gather_binomial(p, root, bytes);
+    s.name = "allgather/gather+bcast".into();
+    let total = p as u64 * bytes;
+    // Broadcast phase down the binomial tree, root gated on the gather.
+    let root_children: Vec<Tag> = tree::binomial_children(0, p)
+        .iter()
+        .map(|c| Tag(GATHER_BASE + *c as u64))
+        .collect();
+    for vr in 0..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let trigger = if vr == 0 {
+            if root_children.is_empty() {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecvAll(root_children.clone())
+            }
+        } else {
+            Trigger::OnRecv(Tag(BCAST_BASE))
+        };
+        for c in tree::binomial_children(vr, p) {
+            let dst = tree::to_real(c, root, p);
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(BCAST_BASE),
+                bytes: total,
+                payload: Payload::range(0, total),
+                trigger: trigger.clone(),
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::range(0, total));
+        }
+    }
+    s
+}
+
+/// AllReduce as Reduce-to-root + Broadcast-of-result.
+pub fn allreduce(p: usize, root: Rank, bytes: u64) -> CommSchedule {
+    let mut s = reduce_binomial(p, root, bytes);
+    s.name = "allreduce/reduce+bcast".into();
+    let full: u64 = if p == 64 { u64::MAX } else { (1u64 << p) - 1 };
+    let root_children: Vec<Tag> = tree::binomial_children(0, p)
+        .iter()
+        .map(|c| Tag(GATHER_BASE + *c as u64))
+        .collect();
+    for vr in 0..p as Rank {
+        let src = tree::to_real(vr, root, p);
+        let trigger = if vr == 0 {
+            if root_children.is_empty() {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecvAll(root_children.clone())
+            }
+        } else {
+            Trigger::OnRecv(Tag(BCAST_BASE))
+        };
+        for c in tree::binomial_children(vr, p) {
+            let dst = tree::to_real(c, root, p);
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(BCAST_BASE),
+                bytes,
+                payload: Payload::Ranks(full),
+                trigger: trigger.clone(),
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::Ranks(full));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{RunReport, World};
+    use crate::netsim::{NetConfig, Netsim};
+
+    fn run(sched: &CommSchedule, p: usize) -> RunReport {
+        let mut w = World::new(Netsim::new(p, NetConfig::fast_ethernet_ideal()));
+        let rep = w.run(sched);
+        assert!(rep.verify(sched).is_empty(), "{}: {:?}", sched.name, rep.verify(sched));
+        rep
+    }
+
+    #[test]
+    fn gathers_collect_every_contribution() {
+        for p in [2usize, 3, 5, 8, 13] {
+            for sched in [gather_flat(p, 0, 512), gather_binomial(p, 0, 512)] {
+                let rep = run(&sched, p);
+                assert!(rep.completion.as_secs() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_binomial_root_receives_direct_children_blocks() {
+        let p = 8;
+        let rep = run(&gather_binomial(p, 0, 100), p);
+        // root's received payloads = blocks of its direct children 1,2,4
+        let mut lens: Vec<u64> = rep.received[0]
+            .iter()
+            .map(|pl| match pl {
+                Payload::Range { len, .. } => *len,
+                _ => 0,
+            })
+            .collect();
+        lens.sort();
+        assert_eq!(lens, vec![100, 200, 400]);
+    }
+
+    #[test]
+    fn gather_nonzero_root() {
+        for root in 0..5 {
+            run(&gather_flat(5, root, 64), 5);
+            run(&gather_binomial(5, root, 64), 5);
+        }
+    }
+
+    #[test]
+    fn reduce_combines_all_ranks() {
+        for p in [2usize, 5, 8, 16] {
+            let rep = run(&reduce_binomial(p, 0, 1024), p);
+            // union of masks delivered to root + root's own = all ranks
+            let mut mask = 1u64; // root vr 0
+            for pl in &rep.received[0] {
+                if let Payload::Ranks(m) = pl {
+                    mask |= m;
+                }
+            }
+            assert_eq!(mask, (1u64 << p) - 1, "p={p}");
+        }
+    }
+
+    #[test]
+    fn reduce_traffic_is_message_sized() {
+        let p = 8;
+        let s = reduce_binomial(p, 0, 4096);
+        for spec in s.ranks.iter().flat_map(|r| &r.sends) {
+            assert_eq!(spec.bytes, 4096);
+        }
+        assert_eq!(s.total_sends(), p - 1);
+    }
+
+    #[test]
+    fn barrier_completes_and_reaches_everyone() {
+        for p in [2usize, 3, 5, 8, 13, 16] {
+            let rep = run(&barrier_binomial(p), p);
+            assert!(rep.completion.as_secs() > 0.0, "p={p}");
+            // every non-root rank got a release token
+            for r in 1..p {
+                assert!(
+                    rep.received[r].contains(&Payload::Control),
+                    "rank {r} never released"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_latency_scales_logarithmically() {
+        let t4 = run(&barrier_binomial(4), 4).completion.as_secs();
+        let t16 = run(&barrier_binomial(16), 16).completion.as_secs();
+        let t32 = run(&barrier_binomial(32), 32).completion.as_secs();
+        // 4 -> 16 doubles the rounds (2->4+); 16->32 adds ~1 round
+        assert!(t16 > t4);
+        assert!(t32 > t16);
+        assert!((t32 - t16) < (t16 - t4) * 2.0);
+    }
+
+    #[test]
+    fn allgather_delivers_full_buffer_everywhere() {
+        let p = 8;
+        let bytes = 256;
+        let rep = run(&allgather(p, 0, bytes), p);
+        let total = p as u64 * bytes;
+        for r in 1..p {
+            assert!(
+                rep.received[r].contains(&Payload::range(0, total)),
+                "rank {r} missing full buffer"
+            );
+        }
+    }
+
+    #[test]
+    fn allreduce_delivers_full_reduction_everywhere() {
+        let p = 8;
+        let rep = run(&allreduce(p, 0, 1024), p);
+        let full = (1u64 << p) - 1;
+        for r in 1..p {
+            assert!(
+                rep.received[r].contains(&Payload::Ranks(full)),
+                "rank {r} missing reduced value"
+            );
+        }
+    }
+
+    #[test]
+    fn allgather_costs_more_than_gather() {
+        let p = 8;
+        let g = run(&gather_binomial(p, 0, 1024), p);
+        let ag = run(&allgather(p, 0, 1024), p);
+        assert!(ag.completion > g.completion);
+    }
+}

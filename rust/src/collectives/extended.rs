@@ -1,0 +1,309 @@
+//! Extended collective algorithms beyond the paper's two case studies —
+//! the algorithm menagerie a production MPI collective layer ships
+//! (Thakur & Gropp, the paper's ref [12]): ring and recursive-doubling
+//! AllGather, recursive-doubling AllReduce, and the dissemination
+//! Barrier. Each comes with a pLogP model in [`crate::models::ext`] so
+//! the tuner can choose between them like it does for Broadcast/Scatter.
+
+use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
+
+use super::tree;
+
+/// Tag bases (distinct from composed.rs's).
+const RING_BASE: u64 = 3 << 32;
+const RD_BASE: u64 = 4 << 32;
+const DISS_BASE: u64 = 5 << 32;
+
+/// Ring AllGather: P-1 rounds; in round r, rank i sends the block it
+/// received in round r-1 (initially its own) to rank i+1. Every rank
+/// ends with all P blocks. Model: `(P-1)(g(m) + L)` — bandwidth-optimal
+/// for large m.
+pub fn allgather_ring(p: usize, bytes: u64) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "allgather/ring");
+    if p == 1 {
+        return s;
+    }
+    for round in 0..(p - 1) as u64 {
+        for i in 0..p as Rank {
+            let dst = (i + 1) % p as Rank;
+            // block originated by rank (i - round) mod p
+            let origin = ((i as u64 + p as u64 - round) % p as u64) as Rank;
+            let trigger = if round == 0 {
+                Trigger::AtStart
+            } else {
+                // we received this block last round with its origin tag
+                Trigger::OnRecv(Tag(RING_BASE + origin as u64))
+            };
+            s.ranks[i as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(RING_BASE + origin as u64),
+                bytes,
+                payload: Payload::range(origin as u64 * bytes, bytes),
+                trigger,
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize]
+                .expected
+                .push(Payload::range(origin as u64 * bytes, bytes));
+        }
+    }
+    s
+}
+
+/// Recursive-doubling AllGather: ceil(log2 P) rounds; in round r ranks
+/// exchange their accumulated 2^r blocks with the partner at distance
+/// 2^r. Exact for power-of-two P; non-powers fall back to the ring.
+/// Model: `sum_{j=0}^{log2 P - 1} (g(2^j m) + L)` — latency-optimal.
+pub fn allgather_recursive_doubling(p: usize, bytes: u64) -> CommSchedule {
+    if !p.is_power_of_two() {
+        let mut s = allgather_ring(p, bytes);
+        s.name = "allgather/recursive_doubling(ring-fallback)".into();
+        return s;
+    }
+    let mut s = CommSchedule::new(p, "allgather/recursive_doubling");
+    let rounds = tree::ceil_log2(p);
+    for r in 0..rounds {
+        let dist = 1u32 << r;
+        let blk = (1u64 << r) * bytes;
+        for i in 0..p as Rank {
+            let partner = i ^ dist;
+            // the 2^r-block this rank owns entering round r starts at
+            // (i with low r bits cleared) * bytes
+            let base = (i & !(dist - 1)) as u64 * bytes;
+            let trigger = if r == 0 {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecv(Tag(RD_BASE + (r as u64 - 1) << 8 | i as u64))
+            };
+            s.ranks[i as usize].sends.push(SendSpec {
+                to: partner,
+                tag: Tag(RD_BASE + (r as u64) << 8 | partner as u64),
+                bytes: blk,
+                payload: Payload::range(base, blk),
+                trigger,
+                protocol: Protocol::Eager,
+            });
+            s.ranks[partner as usize].expected.push(Payload::range(base, blk));
+        }
+    }
+    s
+}
+
+/// Recursive-doubling AllReduce: ceil(log2 P) exchange rounds of the full
+/// m-byte vector; after round r every rank holds the combination of its
+/// 2^(r+1)-group. Power-of-two exact; non-powers fall back to
+/// reduce+broadcast. Model: `log2 P (g(m) + L)`.
+pub fn allreduce_recursive_doubling(p: usize, bytes: u64) -> CommSchedule {
+    if !p.is_power_of_two() {
+        let mut s = super::composed::allreduce(p, 0, bytes);
+        s.name = "allreduce/recursive_doubling(tree-fallback)".into();
+        return s;
+    }
+    assert!(p <= 64, "contributor masks support at most 64 ranks");
+    let mut s = CommSchedule::new(p, "allreduce/recursive_doubling");
+    let rounds = tree::ceil_log2(p);
+    for r in 0..rounds {
+        let dist = 1u32 << r;
+        for i in 0..p as Rank {
+            let partner = i ^ dist;
+            // mask this rank holds entering round r: its 2^r-group
+            let group = (i & !(dist - 1)) as u64;
+            let mut mask = 0u64;
+            for k in 0..dist as u64 {
+                mask |= 1 << (group + k);
+            }
+            let trigger = if r == 0 {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecv(Tag(RD_BASE + (r as u64 - 1) << 8 | i as u64))
+            };
+            s.ranks[i as usize].sends.push(SendSpec {
+                to: partner,
+                tag: Tag(RD_BASE + (r as u64) << 8 | partner as u64),
+                bytes,
+                payload: Payload::Ranks(mask),
+                trigger,
+                protocol: Protocol::Eager,
+            });
+            s.ranks[partner as usize].expected.push(Payload::Ranks(mask));
+        }
+    }
+    s
+}
+
+/// Dissemination barrier (Hensgen/Finkel/Manber): ceil(log2 P) rounds; in
+/// round r every rank signals the rank `2^r` ahead (mod P). No root, no
+/// fan-in tree. Model: `ceil(log2 P)(g(1) + L)`.
+pub fn barrier_dissemination(p: usize) -> CommSchedule {
+    let mut s = CommSchedule::new(p, "barrier/dissemination");
+    let rounds = tree::ceil_log2(p);
+    for r in 0..rounds {
+        let dist = (1usize << r) % p.max(1);
+        for i in 0..p as Rank {
+            let dst = ((i as usize + dist) % p) as Rank;
+            if dst == i {
+                continue;
+            }
+            let trigger = if r == 0 {
+                Trigger::AtStart
+            } else {
+                // wait for the previous round's token to arrive
+                Trigger::OnRecv(Tag(DISS_BASE + (r as u64 - 1) << 8 | i as u64))
+            };
+            s.ranks[i as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(DISS_BASE + (r as u64) << 8 | dst as u64),
+                bytes: 1,
+                payload: Payload::Control,
+                trigger,
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::Control);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::composed;
+    use crate::mpi::{RunReport, World};
+    use crate::netsim::{NetConfig, Netsim};
+
+    fn run(sched: &CommSchedule, p: usize) -> RunReport {
+        assert!(sched.validate().is_empty(), "{}: {:?}", sched.name, sched.validate());
+        let mut w = World::new(Netsim::new(p, NetConfig::fast_ethernet_ideal()));
+        let rep = w.run(sched);
+        assert!(rep.verify(sched).is_empty(), "{}: {:?}", sched.name, rep.verify(sched));
+        rep
+    }
+
+    fn has_all_blocks(rep: &RunReport, p: usize, m: u64) {
+        for (r, payloads) in rep.received.iter().enumerate() {
+            for origin in 0..p as u64 {
+                let want = Payload::range(origin * m, m);
+                let covered = payloads.iter().any(|pl| match pl {
+                    Payload::Range { offset, len } => {
+                        *offset <= origin * m && offset + len >= (origin + 1) * m
+                    }
+                    _ => false,
+                });
+                assert!(
+                    covered || origin == r as u64,
+                    "rank {r} missing block {origin} ({want:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allgather_delivers_all_blocks() {
+        for p in [2usize, 3, 5, 8, 12] {
+            let m = 1024;
+            let rep = run(&allgather_ring(p, m), p);
+            has_all_blocks(&rep, p, m);
+            // P(P-1) messages on the wire
+            assert_eq!(rep.messages as usize, p * (p - 1));
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_allgather_power_of_two() {
+        for p in [2usize, 4, 8, 16] {
+            let m = 512;
+            let rep = run(&allgather_recursive_doubling(p, m), p);
+            has_all_blocks(&rep, p, m);
+            // P log2 P messages
+            assert_eq!(rep.messages as usize, p * p.trailing_zeros() as usize);
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_falls_back_on_non_power_of_two() {
+        let s = allgather_recursive_doubling(6, 100);
+        assert!(s.name.contains("fallback"));
+        run(&s, 6);
+    }
+
+    #[test]
+    fn rd_allgather_beats_ring_for_small_messages() {
+        let p = 16;
+        let m = 64;
+        let ring = run(&allgather_ring(p, m), p);
+        let rd = run(&allgather_recursive_doubling(p, m), p);
+        // log2(16)=4 rounds vs 15 rounds of latency
+        assert!(rd.completion < ring.completion);
+    }
+
+    #[test]
+    fn ring_competitive_for_large_messages() {
+        let p = 16;
+        let m = 1 << 18;
+        let ring = run(&allgather_ring(p, m), p);
+        let rd = run(&allgather_recursive_doubling(p, m), p);
+        // both move ~P*m bytes; ring must be within 2x (it pipelines)
+        assert!(ring.completion.as_secs() < 2.0 * rd.completion.as_secs());
+    }
+
+    #[test]
+    fn rd_allreduce_combines_everything() {
+        for p in [2usize, 4, 8, 16, 32] {
+            let rep = run(&allreduce_recursive_doubling(p, 4096), p);
+            let full_prev = (1u64 << (p / 2)) - 1; // half-group mask exists
+            let _ = full_prev;
+            // final round delivered each rank a half-cluster mask; union
+            // of all received masks + own bit = full set
+            for (r, payloads) in rep.received.iter().enumerate() {
+                let mut mask = 1u64 << r;
+                for pl in payloads {
+                    if let Payload::Ranks(m) = pl {
+                        mask |= m;
+                    }
+                }
+                assert_eq!(mask, (1u64 << p) - 1, "rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rd_allreduce_fallback_non_power_of_two() {
+        let s = allreduce_recursive_doubling(6, 1024);
+        assert!(s.name.contains("fallback"));
+        run(&s, 6);
+    }
+
+    #[test]
+    fn dissemination_barrier_completes() {
+        for p in [2usize, 3, 5, 8, 13, 32] {
+            let rep = run(&barrier_dissemination(p), p);
+            assert!(rep.completion.as_secs() > 0.0);
+        }
+    }
+
+    #[test]
+    fn dissemination_beats_tree_barrier() {
+        // log2 P rounds one-way vs fan-in + fan-out of the tree barrier
+        let p = 32;
+        let diss = run(&barrier_dissemination(p), p);
+        let tree = run(&composed::barrier_binomial(p), p);
+        assert!(
+            diss.completion < tree.completion,
+            "dissemination {} vs tree {}",
+            diss.completion,
+            tree.completion
+        );
+    }
+
+    #[test]
+    fn allgather_strategies_move_same_payload() {
+        let p = 8;
+        let m = 2048;
+        let ring = run(&allgather_ring(p, m), p);
+        let rd = run(&allgather_recursive_doubling(p, m), p);
+        // ring moves P(P-1) m; recursive doubling moves P log2(P) blocks
+        // of doubling size = same total bytes
+        assert_eq!(ring.data_bytes, (p * (p - 1)) as u64 * m);
+        assert_eq!(rd.data_bytes, ring.data_bytes);
+    }
+}

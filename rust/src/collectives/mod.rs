@@ -1,0 +1,235 @@
+//! Collective-communication algorithms.
+//!
+//! Every implementation strategy of the paper's Tables 1 and 2 is a
+//! *schedule builder*: a pure function from `(P, root, message size,
+//! segment size)` to a [`CommSchedule`] that the [`crate::mpi::World`]
+//! executor runs on the simulated cluster. The strategy index layout is
+//! shared with the Python kernel (`python/compile/kernels/ref.py`) and
+//! the analytic models ([`crate::models`]).
+//!
+//! Beyond the paper's two operations, [`composed`] builds the collectives
+//! the paper's §3 notes are constructed the same way (Gather, Reduce,
+//! Barrier, AllGather, AllReduce), and [`multilevel`] composes them
+//! across islands-of-clusters the way MagPIe does (§1/§5).
+
+pub mod bcast;
+pub mod extended;
+pub mod composed;
+pub mod multilevel;
+pub mod scatter;
+pub mod tree;
+
+use crate::mpi::CommSchedule;
+
+/// An implementation strategy, numbered identically to the Python kernel
+/// and the AOT artifact (see `ref.STRATEGY_NAMES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Strategy {
+    BcastFlat = 0,
+    BcastFlatRdv = 1,
+    BcastSegFlat = 2,
+    BcastChain = 3,
+    BcastChainRdv = 4,
+    BcastSegChain = 5,
+    BcastBinary = 6,
+    BcastBinomial = 7,
+    BcastBinomialRdv = 8,
+    BcastSegBinomial = 9,
+    ScatterFlat = 10,
+    ScatterChain = 11,
+    ScatterBinomial = 12,
+}
+
+impl Strategy {
+    pub const COUNT: usize = 13;
+
+    pub const ALL: [Strategy; 13] = [
+        Strategy::BcastFlat,
+        Strategy::BcastFlatRdv,
+        Strategy::BcastSegFlat,
+        Strategy::BcastChain,
+        Strategy::BcastChainRdv,
+        Strategy::BcastSegChain,
+        Strategy::BcastBinary,
+        Strategy::BcastBinomial,
+        Strategy::BcastBinomialRdv,
+        Strategy::BcastSegBinomial,
+        Strategy::ScatterFlat,
+        Strategy::ScatterChain,
+        Strategy::ScatterBinomial,
+    ];
+
+    pub const BCAST: [Strategy; 10] = [
+        Strategy::BcastFlat,
+        Strategy::BcastFlatRdv,
+        Strategy::BcastSegFlat,
+        Strategy::BcastChain,
+        Strategy::BcastChainRdv,
+        Strategy::BcastSegChain,
+        Strategy::BcastBinary,
+        Strategy::BcastBinomial,
+        Strategy::BcastBinomialRdv,
+        Strategy::BcastSegBinomial,
+    ];
+
+    pub const SCATTER: [Strategy; 3] = [
+        Strategy::ScatterFlat,
+        Strategy::ScatterChain,
+        Strategy::ScatterBinomial,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<Strategy> {
+        Strategy::ALL.get(i).copied()
+    }
+
+    /// Name matching `ref.STRATEGY_NAMES` on the Python side.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::BcastFlat => "bcast/flat",
+            Strategy::BcastFlatRdv => "bcast/flat_rdv",
+            Strategy::BcastSegFlat => "bcast/seg_flat",
+            Strategy::BcastChain => "bcast/chain",
+            Strategy::BcastChainRdv => "bcast/chain_rdv",
+            Strategy::BcastSegChain => "bcast/seg_chain",
+            Strategy::BcastBinary => "bcast/binary",
+            Strategy::BcastBinomial => "bcast/binomial",
+            Strategy::BcastBinomialRdv => "bcast/binomial_rdv",
+            Strategy::BcastSegBinomial => "bcast/seg_binomial",
+            Strategy::ScatterFlat => "scatter/flat",
+            Strategy::ScatterChain => "scatter/chain",
+            Strategy::ScatterBinomial => "scatter/binomial",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        Strategy::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    pub fn is_bcast(self) -> bool {
+        (self as usize) < 10
+    }
+
+    pub fn is_scatter(self) -> bool {
+        (self as usize) >= 10
+    }
+
+    /// Does this strategy segment the message (and thus need a segment
+    /// size)?
+    pub fn is_segmented(self) -> bool {
+        matches!(
+            self,
+            Strategy::BcastSegFlat | Strategy::BcastSegChain | Strategy::BcastSegBinomial
+        )
+    }
+
+    /// Does this strategy use the rendezvous protocol for data?
+    pub fn is_rendezvous(self) -> bool {
+        matches!(
+            self,
+            Strategy::BcastFlatRdv | Strategy::BcastChainRdv | Strategy::BcastBinomialRdv
+        )
+    }
+
+    /// Build the schedule for this strategy.
+    ///
+    /// * `p` — number of ranks; `root` — root rank; `bytes` — the
+    ///   per-destination message size `m` (for scatter, each rank's chunk).
+    /// * `segment` — segment size for segmented strategies (clamped to
+    ///   `bytes`; `None` means "do not segment", i.e. one segment).
+    pub fn build(self, p: usize, root: u32, bytes: u64, segment: Option<u64>) -> CommSchedule {
+        assert!(p >= 1 && (root as usize) < p, "root {root} out of range for p={p}");
+        assert!(bytes >= 1, "zero-byte collectives are no-ops");
+        let seg = segment.map(|s| s.clamp(1, bytes));
+        match self {
+            Strategy::BcastFlat => bcast::flat(p, root, bytes, false),
+            Strategy::BcastFlatRdv => bcast::flat(p, root, bytes, true),
+            Strategy::BcastSegFlat => bcast::seg_flat(p, root, bytes, seg.unwrap_or(bytes)),
+            Strategy::BcastChain => bcast::chain(p, root, bytes, false),
+            Strategy::BcastChainRdv => bcast::chain(p, root, bytes, true),
+            Strategy::BcastSegChain => bcast::seg_chain(p, root, bytes, seg.unwrap_or(bytes)),
+            Strategy::BcastBinary => bcast::binary(p, root, bytes),
+            Strategy::BcastBinomial => bcast::binomial(p, root, bytes, false),
+            Strategy::BcastBinomialRdv => bcast::binomial(p, root, bytes, true),
+            Strategy::BcastSegBinomial => {
+                bcast::seg_binomial(p, root, bytes, seg.unwrap_or(bytes))
+            }
+            Strategy::ScatterFlat => scatter::flat(p, root, bytes),
+            Strategy::ScatterChain => scatter::chain(p, root, bytes),
+            Strategy::ScatterBinomial => scatter::binomial(p, root, bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_roundtrip() {
+        for (i, s) in Strategy::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Strategy::from_index(i), Some(*s));
+        }
+        assert_eq!(Strategy::from_index(13), None);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn families_partition() {
+        for s in Strategy::ALL {
+            assert!(s.is_bcast() ^ s.is_scatter());
+        }
+        assert_eq!(Strategy::BCAST.len() + Strategy::SCATTER.len(), 13);
+    }
+
+    #[test]
+    fn segmented_set_matches_python_layout() {
+        let seg: Vec<usize> = Strategy::ALL
+            .iter()
+            .filter(|s| s.is_segmented())
+            .map(|s| s.index())
+            .collect();
+        assert_eq!(seg, vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn every_strategy_builds_and_validates() {
+        for s in Strategy::ALL {
+            for p in [2usize, 3, 5, 8, 16] {
+                let sched = s.build(p, 0, 64 * 1024, Some(8 * 1024));
+                assert!(
+                    sched.validate().is_empty(),
+                    "{} p={p}: {:?}",
+                    s.name(),
+                    sched.validate()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_root_builds_and_validates() {
+        for s in Strategy::ALL {
+            let sched = s.build(7, 3, 4096, Some(1024));
+            assert!(sched.validate().is_empty(), "{}: {:?}", s.name(), sched.validate());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_root_panics() {
+        Strategy::BcastFlat.build(4, 9, 100, None);
+    }
+}

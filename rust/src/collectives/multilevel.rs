@@ -1,0 +1,344 @@
+//! Multi-level (grid-aware) collectives over islands of clusters —
+//! the composition the paper is building towards (§1: "the construction
+//! of multi-level collective operations"; §5 future work).
+//!
+//! A multi-level broadcast runs an inter-cluster phase among the cluster
+//! roots (over the WAN) and then, inside each cluster, whichever tuned
+//! intra-cluster strategy the tuner selected for that cluster's pLogP
+//! parameters. The whole thing is still one [`CommSchedule`] executed by
+//! the same deterministic executor.
+
+use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
+use crate::topology::GridSpec;
+
+use super::{tree, Strategy};
+
+/// Tag base for the inter-cluster phase (must not collide with the
+/// intra-cluster strategies' segment tags, which start at 0).
+const WAN_BASE: u64 = 7 << 40;
+
+/// Multi-level broadcast:
+///   phase 1 — binomial broadcast of `bytes` among cluster roots
+///             (WAN links);
+///   phase 2 — per-cluster intra broadcast with the given strategy,
+///             gated on the cluster root's phase-1 receive.
+///
+/// `intra` gives the strategy (and segment size) per cluster, as chosen
+/// by the tuner for each cluster's own network parameters.
+pub fn bcast(
+    grid: &GridSpec,
+    bytes: u64,
+    intra: &[(Strategy, Option<u64>)],
+) -> CommSchedule {
+    let nc = grid.clusters.len();
+    assert_eq!(intra.len(), nc, "one intra strategy per cluster");
+    let total = grid.total_nodes();
+    let mut s = CommSchedule::new(total, "multilevel/bcast");
+
+    // --- phase 1: binomial over cluster roots --------------------------
+    for vc in 0..nc as Rank {
+        let src = grid.cluster_root(vc as usize);
+        let trigger = if vc == 0 {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecv(Tag(WAN_BASE))
+        };
+        for c in tree::binomial_children(vc, nc) {
+            let dst = grid.cluster_root(c as usize);
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(WAN_BASE),
+                bytes,
+                payload: Payload::range(0, bytes),
+                trigger: trigger.clone(),
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::range(0, bytes));
+        }
+    }
+
+    // --- phase 2: tuned intra-cluster broadcasts ------------------------
+    for (ci, &(strategy, seg)) in intra.iter().enumerate() {
+        assert!(strategy.is_bcast(), "cluster {ci}: {strategy:?} is not a broadcast");
+        let (lo, hi) = grid.cluster_range(ci);
+        let p = (hi - lo) as usize;
+        if p == 1 {
+            continue;
+        }
+        let sub = strategy.build(p, 0, bytes, seg);
+        // splice, relocating ranks by +lo and gating the cluster root
+        for (local, rs) in sub.ranks.iter().enumerate() {
+            let global = lo as usize + local;
+            for spec in &rs.sends {
+                let mut spec = spec.clone();
+                spec.to += lo;
+                // cluster 0's root already has the data at start; other
+                // cluster roots wait for the WAN delivery.
+                if ci != 0 && local == 0 && spec.trigger == Trigger::AtStart {
+                    spec.trigger = Trigger::OnRecv(Tag(WAN_BASE));
+                }
+                s.ranks[global].sends.push(spec);
+            }
+            s.ranks[global].expected.extend(rs.expected.iter().copied());
+        }
+    }
+    s
+}
+
+/// Multi-level barrier: intra-cluster fan-in to each cluster root,
+/// binomial barrier among roots, intra-cluster fan-out. Built from the
+/// same primitives; exercised by the grid examples.
+pub fn barrier(grid: &GridSpec) -> CommSchedule {
+    let nc = grid.clusters.len();
+    let total = grid.total_nodes();
+    let mut s = CommSchedule::new(total, "multilevel/barrier");
+    const IN_BASE: u64 = 8 << 40;
+    const ROOTS_BASE: u64 = 9 << 40;
+    const OUT_BASE: u64 = 10 << 40;
+
+    // intra fan-in
+    for ci in 0..nc {
+        let (lo, hi) = grid.cluster_range(ci);
+        let p = (hi - lo) as usize;
+        for vr in 1..p as Rank {
+            let src = lo + vr;
+            let dst = lo + tree::binomial_parent(vr);
+            let children = tree::binomial_children(vr, p);
+            let trigger = if children.is_empty() {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecvAll(
+                    children.iter().map(|c| Tag(IN_BASE + (lo + *c) as u64)).collect(),
+                )
+            };
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(IN_BASE + src as u64),
+                bytes: 1,
+                payload: Payload::Control,
+                trigger,
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::Control);
+        }
+    }
+
+    // binomial barrier among roots (fan-in then fan-out over WAN)
+    for vc in 1..nc as Rank {
+        let src = grid.cluster_root(vc as usize);
+        let dst = grid.cluster_root(tree::binomial_parent(vc) as usize);
+        let mut waits: Vec<Tag> = {
+            let (lo, hi) = grid.cluster_range(vc as usize);
+            let p = (hi - lo) as usize;
+            tree::binomial_children(0, p)
+                .iter()
+                .map(|c| Tag(IN_BASE + (lo + *c) as u64))
+                .collect()
+        };
+        waits.extend(
+            tree::binomial_children(vc, nc)
+                .iter()
+                .map(|c| Tag(ROOTS_BASE + *c as u64)),
+        );
+        let trigger = if waits.is_empty() {
+            Trigger::AtStart
+        } else {
+            Trigger::OnRecvAll(waits)
+        };
+        s.ranks[src as usize].sends.push(SendSpec {
+            to: dst,
+            tag: Tag(ROOTS_BASE + vc as u64),
+            bytes: 1,
+            payload: Payload::Control,
+            trigger,
+            protocol: Protocol::Eager,
+        });
+        s.ranks[dst as usize].expected.push(Payload::Control);
+    }
+
+    // release: binomial fan-out over roots, then intra fan-out
+    for vc in 0..nc as Rank {
+        let src = grid.cluster_root(vc as usize);
+        let root_release_trigger = if vc == 0 {
+            // global root releases once its cluster fan-in + root fan-in done
+            let (lo, hi) = grid.cluster_range(0);
+            let p = (hi - lo) as usize;
+            let mut waits: Vec<Tag> = tree::binomial_children(0, p)
+                .iter()
+                .map(|c| Tag(IN_BASE + (lo + *c) as u64))
+                .collect();
+            waits.extend(
+                tree::binomial_children(0, nc)
+                    .iter()
+                    .map(|c| Tag(ROOTS_BASE + *c as u64)),
+            );
+            if waits.is_empty() {
+                Trigger::AtStart
+            } else {
+                Trigger::OnRecvAll(waits)
+            }
+        } else {
+            Trigger::OnRecv(Tag(OUT_BASE + src as u64))
+        };
+        // WAN release to child roots
+        for c in tree::binomial_children(vc, nc) {
+            let dst = grid.cluster_root(c as usize);
+            s.ranks[src as usize].sends.push(SendSpec {
+                to: dst,
+                tag: Tag(OUT_BASE + dst as u64),
+                bytes: 1,
+                payload: Payload::Control,
+                trigger: root_release_trigger.clone(),
+                protocol: Protocol::Eager,
+            });
+            s.ranks[dst as usize].expected.push(Payload::Control);
+        }
+        // intra release down the local binomial tree
+        let (lo, hi) = grid.cluster_range(vc as usize);
+        let p = (hi - lo) as usize;
+        for vr in 0..p as Rank {
+            let gsrc = lo + vr;
+            let trig = if vr == 0 {
+                root_release_trigger.clone()
+            } else {
+                Trigger::OnRecv(Tag(OUT_BASE + gsrc as u64))
+            };
+            for c in tree::binomial_children(vr, p) {
+                let gdst = lo + c;
+                s.ranks[gsrc as usize].sends.push(SendSpec {
+                    to: gdst,
+                    tag: Tag(OUT_BASE + gdst as u64),
+                    bytes: 1,
+                    payload: Payload::Control,
+                    trigger: trig.clone(),
+                    protocol: Protocol::Eager,
+                });
+                s.ranks[gdst as usize].expected.push(Payload::Control);
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::netsim::NetConfig;
+    use crate::topology::ClusterSpec;
+
+    fn grid(na: usize, nb: usize) -> GridSpec {
+        GridSpec::new(
+            vec![
+                ClusterSpec::new("a", na, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("b", nb, NetConfig::fast_ethernet_ideal()),
+            ],
+            NetConfig::wan_link(),
+        )
+    }
+
+    #[test]
+    fn multilevel_bcast_reaches_every_node() {
+        let g = grid(5, 4);
+        let sched = bcast(
+            &g,
+            8192,
+            &[
+                (Strategy::BcastBinomial, None),
+                (Strategy::BcastSegChain, Some(1024)),
+            ],
+        );
+        assert!(sched.validate().is_empty(), "{:?}", sched.validate());
+        let mut w = World::new(g.build_sim());
+        let rep = w.run(&sched);
+        assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        // every non-global-root rank received the payload at least once
+        for r in 1..g.total_nodes() {
+            assert!(
+                !rep.received[r].is_empty(),
+                "rank {r} received nothing"
+            );
+        }
+    }
+
+    #[test]
+    fn multilevel_bcast_crosses_wan_once_per_cluster() {
+        let g = grid(4, 4);
+        let sched = bcast(
+            &g,
+            1 << 16,
+            &[(Strategy::BcastBinomial, None), (Strategy::BcastBinomial, None)],
+        );
+        // exactly one WAN data transfer (root 0 -> root 4)
+        let wan_sends: Vec<_> = sched
+            .ranks
+            .iter()
+            .enumerate()
+            .flat_map(|(r, rs)| rs.sends.iter().map(move |s| (r, s)))
+            .filter(|(r, s)| g.cluster_of(*r as u32) != g.cluster_of(s.to))
+            .collect();
+        assert_eq!(wan_sends.len(), 1);
+        assert_eq!(wan_sends[0].0, 0);
+        assert_eq!(wan_sends[0].1.to, 4);
+    }
+
+    #[test]
+    fn multilevel_beats_naive_flat_over_wan() {
+        // A flat broadcast from node 0 pays the WAN once *per remote
+        // node*; the multi-level broadcast pays it once per cluster.
+        let g = grid(6, 6);
+        let m = 1 << 18;
+        let ml = bcast(
+            &g,
+            m,
+            &[(Strategy::BcastBinomial, None), (Strategy::BcastBinomial, None)],
+        );
+        let naive = Strategy::BcastFlat.build(g.total_nodes(), 0, m, None);
+        let mut w1 = World::new(g.build_sim());
+        let mut w2 = World::new(g.build_sim());
+        let t_ml = w1.run(&ml).completion;
+        let t_naive = w2.run(&naive).completion;
+        assert!(
+            t_ml < t_naive,
+            "multilevel {} vs naive flat {}",
+            t_ml,
+            t_naive
+        );
+    }
+
+    #[test]
+    fn multilevel_barrier_completes() {
+        for (na, nb) in [(2usize, 2usize), (5, 3), (8, 8)] {
+            let g = grid(na, nb);
+            let sched = barrier(&g);
+            assert!(sched.validate().is_empty(), "{:?}", sched.validate());
+            let mut w = World::new(g.build_sim());
+            let rep = w.run(&sched);
+            assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        }
+    }
+
+    #[test]
+    fn three_cluster_bcast() {
+        let g = GridSpec::new(
+            vec![
+                ClusterSpec::new("a", 3, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("b", 4, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("c", 2, NetConfig::fast_ethernet_ideal()),
+            ],
+            NetConfig::wan_link(),
+        );
+        let sched = bcast(
+            &g,
+            4096,
+            &[
+                (Strategy::BcastBinomial, None),
+                (Strategy::BcastChain, None),
+                (Strategy::BcastFlat, None),
+            ],
+        );
+        let mut w = World::new(g.build_sim());
+        let rep = w.run(&sched);
+        assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+    }
+}

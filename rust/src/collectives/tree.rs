@@ -1,0 +1,217 @@
+//! Tree topology helpers shared by the collective algorithms.
+//!
+//! All trees are expressed over *virtual ranks*: `vr = (r - root) mod P`,
+//! so the root is always virtual rank 0. [`to_real`] maps back.
+
+use crate::mpi::Rank;
+
+/// Virtual rank of `r` for the given root.
+pub fn to_virtual(r: Rank, root: Rank, p: usize) -> Rank {
+    (r + p as Rank - root) % p as Rank
+}
+
+/// Real rank of virtual rank `vr` for the given root.
+pub fn to_real(vr: Rank, root: Rank, p: usize) -> Rank {
+    (vr + root) % p as Rank
+}
+
+/// ceil(log2 p) (0 for p == 1).
+pub fn ceil_log2(p: usize) -> u32 {
+    assert!(p >= 1);
+    usize::BITS - (p - 1).leading_zeros()
+}
+
+/// floor(log2 p).
+pub fn floor_log2(p: usize) -> u32 {
+    assert!(p >= 1);
+    usize::BITS - 1 - p.leading_zeros()
+}
+
+/// Binomial-tree parent of virtual rank `vr` (> 0): clear the highest set
+/// bit. The root has no parent.
+pub fn binomial_parent(vr: Rank) -> Rank {
+    assert!(vr > 0, "root has no parent");
+    vr & !(1 << (31 - vr.leading_zeros()))
+}
+
+/// Binomial-tree children of virtual rank `vr` in send order (round
+/// order). The root (vr=0) sends to 1, 2, 4, ... ; rank vr sends to
+/// vr + 2^t for t > position of vr's highest set bit, while < p.
+pub fn binomial_children(vr: Rank, p: usize) -> Vec<Rank> {
+    let first_round = if vr == 0 { 0 } else { 32 - vr.leading_zeros() };
+    let mut out = Vec::new();
+    for t in first_round..ceil_log2(p) {
+        let c = vr + (1 << t);
+        if (c as usize) < p {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Size of the binomial subtree rooted at `vr` (including `vr`).
+pub fn binomial_subtree_size(vr: Rank, p: usize) -> usize {
+    1 + binomial_children(vr, p)
+        .into_iter()
+        .map(|c| binomial_subtree_size(c, p))
+        .sum::<usize>()
+}
+
+/// Complete-binary-tree children of virtual rank `vr`: 2vr+1, 2vr+2.
+pub fn binary_children(vr: Rank, p: usize) -> Vec<Rank> {
+    [2 * vr + 1, 2 * vr + 2]
+        .into_iter()
+        .filter(|&c| (c as usize) < p)
+        .collect()
+}
+
+/// Complete-binary-tree parent.
+pub fn binary_parent(vr: Rank) -> Rank {
+    assert!(vr > 0, "root has no parent");
+    (vr - 1) / 2
+}
+
+/// Split `[lo, hi)` for binomial scatter: the owner keeps `[lo, mid)` and
+/// ships `[mid, hi)` to virtual rank `mid`, with
+/// `mid = hi - 2^(ceil_log2(span)-1)` — so with P a power of two the
+/// transfer sizes are exactly `2^j · m`, matching the paper's Table 2
+/// model for Binomial Scatter.
+pub fn scatter_mid(lo: Rank, hi: Rank) -> Rank {
+    let span = (hi - lo) as usize;
+    assert!(span >= 2);
+    let half = 1usize << (ceil_log2(span) - 1);
+    hi - half as Rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_real_roundtrip() {
+        for p in [2usize, 3, 7, 16] {
+            for root in 0..p as Rank {
+                for r in 0..p as Rank {
+                    let vr = to_virtual(r, root, p);
+                    assert_eq!(to_real(vr, root, p), r);
+                }
+                assert_eq!(to_virtual(root, root, p), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn log2_helpers() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(floor_log2(1), 0);
+        assert_eq!(floor_log2(5), 2);
+        assert_eq!(floor_log2(8), 3);
+    }
+
+    #[test]
+    fn binomial_children_of_root_are_powers_of_two() {
+        assert_eq!(binomial_children(0, 16), vec![1, 2, 4, 8]);
+        assert_eq!(binomial_children(0, 5), vec![1, 2, 4]);
+        assert_eq!(binomial_children(0, 2), vec![1]);
+        assert_eq!(binomial_children(0, 1), Vec::<Rank>::new());
+    }
+
+    #[test]
+    fn binomial_parent_clears_high_bit() {
+        assert_eq!(binomial_parent(1), 0);
+        assert_eq!(binomial_parent(5), 1);
+        assert_eq!(binomial_parent(6), 2);
+        assert_eq!(binomial_parent(12), 4);
+    }
+
+    #[test]
+    fn binomial_tree_is_consistent() {
+        // every child's parent is the node that listed it
+        for p in [2usize, 3, 5, 8, 13, 16, 31] {
+            for vr in 0..p as Rank {
+                for c in binomial_children(vr, p) {
+                    assert_eq!(binomial_parent(c), vr, "p={p} vr={vr} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_tree_spans_all_ranks() {
+        for p in [1usize, 2, 3, 5, 8, 13, 16, 31, 50] {
+            let mut reached = vec![false; p];
+            let mut stack = vec![0 as Rank];
+            while let Some(v) = stack.pop() {
+                assert!(!reached[v as usize], "duplicate visit p={p} vr={v}");
+                reached[v as usize] = true;
+                stack.extend(binomial_children(v, p));
+            }
+            assert!(reached.iter().all(|&b| b), "p={p} unreached ranks");
+        }
+    }
+
+    #[test]
+    fn binomial_subtree_sizes_sum() {
+        for p in [2usize, 5, 8, 13] {
+            assert_eq!(binomial_subtree_size(0, p), p);
+        }
+        // subtree of vr=1 in p=8: {1, 3, 5, 7}
+        assert_eq!(binomial_subtree_size(1, 8), 4);
+        assert_eq!(binomial_subtree_size(2, 8), 2);
+        assert_eq!(binomial_subtree_size(4, 8), 1);
+    }
+
+    #[test]
+    fn binary_tree_spans_all_ranks() {
+        for p in [1usize, 2, 3, 6, 15, 50] {
+            let mut reached = vec![false; p];
+            let mut stack = vec![0 as Rank];
+            while let Some(v) = stack.pop() {
+                reached[v as usize] = true;
+                stack.extend(binary_children(v, p));
+            }
+            assert!(reached.iter().all(|&b| b), "p={p}");
+        }
+    }
+
+    #[test]
+    fn binary_parent_inverts_children() {
+        for p in [5usize, 16] {
+            for vr in 0..p as Rank {
+                for c in binary_children(vr, p) {
+                    assert_eq!(binary_parent(c), vr);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_mid_power_of_two_halves() {
+        assert_eq!(scatter_mid(0, 8), 4);
+        assert_eq!(scatter_mid(4, 8), 6);
+        assert_eq!(scatter_mid(6, 8), 7);
+    }
+
+    #[test]
+    fn scatter_mid_non_power_of_two() {
+        // span 5 -> half = 4 -> mid = hi - 4
+        assert_eq!(scatter_mid(0, 5), 1);
+        // span 3 -> half = 2 -> mid = hi - 2
+        assert_eq!(scatter_mid(0, 3), 1);
+        assert_eq!(scatter_mid(0, 2), 1);
+    }
+
+    #[test]
+    fn scatter_mid_always_interior() {
+        for lo in 0u32..20 {
+            for hi in lo + 2..lo + 20 {
+                let mid = scatter_mid(lo, hi);
+                assert!(mid > lo && mid < hi, "lo={lo} hi={hi} mid={mid}");
+            }
+        }
+    }
+}

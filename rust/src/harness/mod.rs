@@ -1,0 +1,131 @@
+//! Experiment harness: regenerates every figure of the paper's §4.
+//!
+//! Each experiment returns an [`ExperimentResult`] containing the same
+//! series the paper plots (measured vs model-predicted completion times),
+//! as a CSV-able table plus ASCII plots for the terminal. The experiment
+//! ids match DESIGN.md's per-experiment index.
+
+pub mod experiments;
+
+use crate::util::table::Table;
+
+/// One plotted series (a line in a paper figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Series {
+        Series { label: label.into(), xs: Vec::new(), ys: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+}
+
+/// The output of one experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    /// Paper-anchored id ("fig1a", "fig2", "validate", ...).
+    pub id: String,
+    pub title: String,
+    /// The data in tabular form (one row per grid point).
+    pub table: Table,
+    /// The paper-figure series.
+    pub series: Vec<Series>,
+    /// Free-form findings (who wins, crossovers, anomalies).
+    pub notes: Vec<String>,
+}
+
+impl ExperimentResult {
+    /// Render the full terminal report.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n\n", self.id, self.title);
+        out.push_str(&self.table.to_ascii());
+        if !self.series.is_empty() {
+            let xs = &self.series[0].xs;
+            let plot_series: Vec<(&str, Vec<f64>)> = self
+                .series
+                .iter()
+                .map(|s| (s.label.as_str(), s.ys.clone()))
+                .collect();
+            out.push('\n');
+            out.push_str(&crate::util::table::ascii_plot(
+                &self.title,
+                xs,
+                &plot_series,
+                16,
+            ));
+        }
+        if !self.notes.is_empty() {
+            out.push_str("\nFindings:\n");
+            for n in &self.notes {
+                out.push_str(&format!("  * {n}\n"));
+            }
+        }
+        out
+    }
+
+    /// Write the CSV next to a given directory, named `<id>.csv`.
+    pub fn write_csv(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.table.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_accumulates() {
+        let mut s = Series::new("x");
+        s.push(1.0, 2.0);
+        s.push(2.0, 3.0);
+        assert_eq!(s.xs, vec![1.0, 2.0]);
+        assert_eq!(s.ys, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let mut t = Table::new(vec!["m", "t"]);
+        t.row(vec!["1", "2"]);
+        let mut s = Series::new("measured");
+        s.push(1.0, 2.0);
+        let r = ExperimentResult {
+            id: "figX".into(),
+            title: "demo".into(),
+            table: t,
+            series: vec![s],
+            notes: vec!["note one".into()],
+        };
+        let txt = r.render();
+        assert!(txt.contains("figX"));
+        assert!(txt.contains("note one"));
+        assert!(txt.contains("measured"));
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1"]);
+        let r = ExperimentResult {
+            id: "t".into(),
+            title: "t".into(),
+            table: t,
+            series: vec![],
+            notes: vec![],
+        };
+        let dir = std::env::temp_dir().join("ct-harness-test");
+        let p = r.write_csv(&dir).unwrap();
+        assert!(p.exists());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,47 @@
+//! # collective-tuner
+//!
+//! A full reproduction of *Fast Tuning of Intra-Cluster Collective
+//! Communications* (Barchet-Estefanel & Mounié, 2004).
+//!
+//! The paper replaces empirical benchmark sweeps with closed-form pLogP
+//! cost models: measure the network's pLogP parameters once, evaluate an
+//! analytic model for every candidate implementation of a collective
+//! operation, and run the argmin. This crate builds the complete system
+//! that idea needs:
+//!
+//! * [`netsim`] — a discrete-event simulator of a switched-Ethernet
+//!   cluster (the stand-in for the paper's 50-node icluster-1 testbed),
+//!   including the Linux TCP delayed-ACK and buffer-coalescing behaviours
+//!   the paper's §4 anomalies trace back to.
+//! * [`mpi`] — an MPI-like point-to-point runtime (eager + rendezvous
+//!   protocols) over the simulator, executing declarative communication
+//!   schedules.
+//! * [`collectives`] — every implementation strategy of the paper's
+//!   Tables 1 and 2 (ten Broadcasts, three Scatters) plus the composed
+//!   operations (Gather, Reduce, Barrier, AllGather, AllReduce) and
+//!   MagPIe-style multi-level variants.
+//! * [`plogp`] — the pLogP parameter model and the measurement procedure
+//!   of Kielmann et al.'s LogP benchmark, run against the simulator.
+//! * [`models`] — the analytic cost models of Tables 1 and 2 in Rust.
+//! * [`tuner`] — the paper's contribution: strategy selection and
+//!   segment-size search, with a *fast path* that executes the whole
+//!   decision tensor as one AOT-compiled XLA computation (see
+//!   `python/compile/`) through [`runtime`].
+//! * [`harness`] — experiment drivers that regenerate every figure of
+//!   the paper's evaluation (measured vs predicted).
+//!
+//! The Python under `python/` is build-time only: it authors and lowers
+//! the tuner kernel to `artifacts/tuner.hlo.txt`; the binary is
+//! self-contained afterwards.
+
+pub mod collectives;
+pub mod harness;
+pub mod models;
+pub mod mpi;
+pub mod netsim;
+pub mod plogp;
+pub mod runtime;
+pub mod topology;
+pub mod tuner;
+pub mod util;
+pub mod cli;

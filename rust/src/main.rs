@@ -1,0 +1,339 @@
+//! `collective-tuner` — the L3 coordinator binary.
+//!
+//! Subcommands: `bench-plogp`, `tune`, `run`, `experiment`, `info`.
+//! See `cli::USAGE` or run with `help`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use collective_tuner::collectives::{composed, Strategy};
+use collective_tuner::harness::experiments;
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::Netsim;
+use collective_tuner::plogp;
+use collective_tuner::runtime::TunerArtifact;
+use collective_tuner::topology::discover;
+use collective_tuner::tuner::ext::{build_ext_schedule, ExtOp, ExtTuner};
+use collective_tuner::tuner::{grids, persist, Tuner};
+use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
+
+use collective_tuner::cli::{self, Args};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&parsed) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "bench-plogp" => cmd_bench_plogp(args),
+        "tune" => cmd_tune(args),
+        "run" => cmd_run(args),
+        "experiment" => cmd_experiment(args),
+        "discover" => cmd_discover(args),
+        "info" => cmd_info(args),
+        "help" | "--help" | "-h" => {
+            println!("{}", cli::USAGE);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{}", cli::USAGE),
+    }
+}
+
+fn cmd_bench_plogp(args: &Args) -> Result<()> {
+    let cfg = args.net_config()?;
+    let mut sim = Netsim::new(2, cfg);
+    let net = plogp::bench::measure(&mut sim);
+    println!("{}", net.summary());
+    let mut t = Table::new(vec!["size", "g(m)"]);
+    for (s, g) in net.table.sizes().iter().zip(net.table.gaps()) {
+        t.row(vec![fmt_bytes(*s), fmt_time(*g)]);
+    }
+    println!("{}", t.to_ascii());
+    println!("L = {}", fmt_time(net.l));
+    Ok(())
+}
+
+fn backend_tuner(args: &Args) -> Result<Tuner> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(TunerArtifact::default_dir);
+    Ok(match args.get_or("backend", "auto").as_str() {
+        "auto" => Tuner::auto(&dir),
+        "native" => Tuner::native(),
+        "artifact" => Tuner::with_artifact(&dir)?,
+        other => bail!("unknown --backend '{other}' (auto, native, artifact)"),
+    })
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cfg = args.net_config()?;
+    let mut sim = Netsim::new(2, cfg);
+    let net = plogp::bench::measure(&mut sim);
+    println!("measured {}", net.summary());
+
+    let tuner = backend_tuner(args)?;
+    println!("backend: {}", tuner.backend.name());
+    let p_grid = args
+        .usize_list("procs")?
+        .unwrap_or_else(grids::default_p_grid);
+    let m_grid = grids::default_m_grid();
+    let t0 = std::time::Instant::now();
+    let (b, s) = tuner.tune(&net, &p_grid, &m_grid)?;
+    let dt = t0.elapsed();
+    if let Some(dir) = args.get("save") {
+        let dir = PathBuf::from(dir);
+        persist::save(&b, &dir.join("bcast.table.tsv"))?;
+        persist::save(&s, &dir.join("scatter.table.tsv"))?;
+        println!("saved decision tables to {}", dir.display());
+    }
+    println!(
+        "tuned {} grid points in {:.2} ms\n",
+        2 * p_grid.len() * m_grid.len(),
+        dt.as_secs_f64() * 1e3
+    );
+
+    for table in [&b, &s] {
+        println!("== {} decision table ==", table.op.name());
+        let mut t = Table::new(vec!["P", "m", "strategy", "segment", "predicted"]);
+        for (qi, &p) in table.p_grid.iter().enumerate() {
+            for (mi, &m) in table.m_grid.iter().enumerate() {
+                // compact: only print every 4th m column
+                if mi % 4 != 0 {
+                    continue;
+                }
+                let d = table.at(qi, mi);
+                t.row(vec![
+                    p.to_string(),
+                    fmt_bytes(m as f64),
+                    d.strategy.name().to_string(),
+                    d.segment.map(|x| fmt_bytes(x as f64)).unwrap_or_else(|| "-".into()),
+                    fmt_time(d.predicted),
+                ]);
+            }
+        }
+        println!("{}", t.to_ascii());
+        let mut share = Table::new(vec!["strategy", "share"]);
+        for (st, frac) in table.share() {
+            share.row(vec![st.name().to_string(), format!("{:.0}%", frac * 100.0)]);
+        }
+        println!("{}", share.to_ascii());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = args.net_config()?;
+    let p = args.usize_or("procs", 24)?;
+    let m = args.u64_or("bytes", 64 * 1024)?;
+    let op = args.get_or("op", "bcast");
+    let seg = args.get("segment").map(cli::parse_size).transpose()?;
+
+    let sched = match op.as_str() {
+        "bcast" | "scatter" => {
+            let strategy_name = args.get_or("strategy", "auto");
+            if strategy_name == "auto" {
+                // measure + tune + look up
+                let mut sim = Netsim::new(2, cfg.clone());
+                let net = plogp::bench::measure(&mut sim);
+                let tuner = backend_tuner(args)?;
+                let (b, s) =
+                    tuner.tune(&net, &grids::default_p_grid(), &grids::default_m_grid())?;
+                let table = if op == "bcast" { b } else { s };
+                let d = *table.lookup(p, m);
+                println!(
+                    "tuned choice: {} (segment {:?}, predicted {})",
+                    d.strategy.name(),
+                    d.segment,
+                    fmt_time(d.predicted)
+                );
+                return run_strategy(&cfg, d.strategy, p, m, d.segment);
+            }
+            let full = if strategy_name.contains('/') {
+                strategy_name.clone()
+            } else {
+                format!("{op}/{strategy_name}")
+            };
+            let strategy = Strategy::from_name(&full)
+                .ok_or_else(|| anyhow::anyhow!("unknown strategy '{full}'"))?;
+            return run_strategy(&cfg, strategy, p, m, seg);
+        }
+        "reduce" => composed::reduce_binomial(p, 0, m),
+        "gather" | "barrier" | "allgather" | "allreduce" => {
+            let family = match op.as_str() {
+                "gather" => ExtOp::Gather,
+                "barrier" => ExtOp::Barrier,
+                "allgather" => ExtOp::AllGather,
+                _ => ExtOp::AllReduce,
+            };
+            if args.get_or("strategy", "auto") == "auto" {
+                let mut sim = Netsim::new(2, cfg.clone());
+                let net = plogp::bench::measure(&mut sim);
+                let dir = args
+                    .get("artifacts")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(TunerArtifact::default_dir);
+                let tuner = ExtTuner::auto(&dir);
+                let tables =
+                    tuner.tune(&net, &grids::default_p_grid(), &grids::default_m_grid())?;
+                let d = *tables[family as usize].lookup(p, m);
+                println!(
+                    "tuned choice: {} (predicted {})",
+                    d.strategy.name(),
+                    fmt_time(d.predicted)
+                );
+                build_ext_schedule(family, d.strategy, p, m)
+            } else {
+                match args.get_or("strategy", "auto").as_str() {
+                    "flat" => composed::gather_flat(p, 0, m),
+                    "binomial" if op == "gather" => composed::gather_binomial(p, 0, m),
+                    "tree" => composed::barrier_binomial(p),
+                    "dissemination" => {
+                        collective_tuner::collectives::extended::barrier_dissemination(p)
+                    }
+                    "ring" => collective_tuner::collectives::extended::allgather_ring(p, m),
+                    "rec_doubling" if op == "allgather" => {
+                        collective_tuner::collectives::extended::allgather_recursive_doubling(
+                            p, m,
+                        )
+                    }
+                    "rec_doubling" => {
+                        collective_tuner::collectives::extended::allreduce_recursive_doubling(
+                            p, m,
+                        )
+                    }
+                    "gather+bcast" => composed::allgather(p, 0, m),
+                    "reduce+bcast" => composed::allreduce(p, 0, m),
+                    other => bail!("unknown {op} strategy '{other}'"),
+                }
+            }
+        }
+        other => bail!("unknown --op '{other}'"),
+    };
+    run_schedule(&cfg, &sched, p)
+}
+
+fn run_strategy(
+    cfg: &collective_tuner::netsim::NetConfig,
+    strategy: Strategy,
+    p: usize,
+    m: u64,
+    seg: Option<u64>,
+) -> Result<()> {
+    let sched = strategy.build(p, 0, m, seg);
+    run_schedule(cfg, &sched, p)
+}
+
+fn run_schedule(
+    cfg: &collective_tuner::netsim::NetConfig,
+    sched: &collective_tuner::mpi::CommSchedule,
+    p: usize,
+) -> Result<()> {
+    let mut world = World::new(Netsim::new(p, cfg.clone()));
+    let rep = world.run(sched);
+    let problems = rep.verify(sched);
+    println!("operation : {}", sched.name);
+    println!("ranks     : {p}");
+    println!("messages  : {} ({} data bytes)", rep.messages, rep.data_bytes);
+    println!("ack stalls: {}", rep.ack_stalls);
+    println!("completion: {}", fmt_time(rep.completion.as_secs()));
+    println!("verified  : {}", if problems.is_empty() { "ok" } else { "FAILED" });
+    for pr in &problems {
+        println!("  ! {pr}");
+    }
+    if !problems.is_empty() {
+        bail!("payload verification failed");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let cfg = args.net_config()?;
+    let id = args.get_or("id", "all");
+    let out_dir = args.get("out").map(PathBuf::from);
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let result = experiments::run(id, &cfg)
+            .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}'"))?;
+        println!("{}", result.render());
+        if let Some(dir) = &out_dir {
+            let path = result.write_csv(dir)?;
+            println!("wrote {}\n", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_discover(args: &Args) -> Result<()> {
+    use collective_tuner::topology::{ClusterSpec, GridSpec};
+    // Demo topology: N nodes split across --clusters islands over a WAN;
+    // the discovery procedure must recover the layout blind.
+    let total = args.usize_or("nodes", 12)?;
+    let k = args.usize_or("clusters", 2)?.max(1).min(total);
+    let base = total / k;
+    let mut sizes = vec![base; k];
+    sizes[0] += total - base * k;
+    let grid = GridSpec::new(
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| ClusterSpec::new(format!("c{i}"), n, args.net_config().unwrap()))
+            .collect(),
+        collective_tuner::netsim::NetConfig::wan_link(),
+    );
+    let mut sim = grid.build_sim();
+    let d = discover::discover(&mut sim, 3.0);
+    println!("probed {total} nodes: found {} islands", d.num_clusters);
+    for c in 0..d.num_clusters {
+        println!("  island {c}: nodes {:?} (root {})", d.members(c), d.roots()[c]);
+    }
+    let ok = d.num_clusters == k;
+    println!("planted layout {:?} -> {}", sizes, if ok { "RECOVERED" } else { "MISSED" });
+    if !ok {
+        bail!("discovery failed");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(TunerArtifact::default_dir);
+    println!("artifact dir: {}", dir.display());
+    match TunerArtifact::load(&dir) {
+        Ok(a) => {
+            println!(
+                "tuner artifact: {} strategies, table {}, P-grid {}, m-grid {}, s-grid {}",
+                a.meta.num_strategies,
+                a.meta.table_len,
+                a.meta.p_grid_len,
+                a.meta.m_grid_len,
+                a.meta.s_grid_len
+            );
+            for (i, n) in a.meta.strategy_names.iter().enumerate() {
+                println!("  [{i:2}] {n}");
+            }
+        }
+        Err(e) => println!("tuner artifact: unavailable ({e:#})"),
+    }
+    println!("\npresets: icluster1 (paper testbed), ideal, gigabit, myrinet");
+    println!("ops: bcast scatter gather reduce barrier allgather allreduce");
+    Ok(())
+}

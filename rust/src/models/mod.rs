@@ -1,0 +1,240 @@
+//! Analytic pLogP cost models — Tables 1 and 2 of the paper, in Rust.
+//!
+//! These are the same formulas the AOT-compiled XLA artifact evaluates
+//! (`python/compile/kernels/cost_models.py`); the Rust mirror exists for
+//! unit tests, one-off queries, and as the tuner's fallback when no
+//! artifact is available. Cross-agreement between the two is asserted by
+//! `rust/tests/artifact_roundtrip.rs`.
+//!
+//! Segment-size semantics match the kernel: a candidate segment `s` is
+//! clamped to `min(s, m)` and `k = ceil(m/s)`, so `s >= m` degenerates to
+//! the unsegmented model exactly.
+
+pub mod ext;
+
+use crate::collectives::Strategy;
+use crate::plogp::PLogP;
+
+/// ceil(log2 p) as f64 (0 for p = 1).
+fn ceil_log2(p: usize) -> f64 {
+    crate::collectives::tree::ceil_log2(p) as f64
+}
+
+/// floor(log2 p) as f64.
+fn floor_log2(p: usize) -> f64 {
+    crate::collectives::tree::floor_log2(p) as f64
+}
+
+/// Predicted completion time of `strategy` on a `procs`-rank cluster for
+/// message size `m`, with optional segment size (segmented strategies
+/// only; `None` means one segment).
+///
+/// For scatter strategies `m` is the per-rank chunk size.
+pub fn predict(strategy: Strategy, net: &PLogP, procs: usize, m: u64, seg: Option<u64>) -> f64 {
+    assert!(procs >= 1);
+    assert!(m >= 1);
+    let l = net.l;
+    let p = procs as f64;
+    let mf = m as f64;
+    let g_m = net.gap(mf);
+    let g_1 = net.gap(1.0);
+    let fl = floor_log2(procs);
+    let ce = ceil_log2(procs);
+    let rdv = 2.0 * g_1 + 3.0 * l;
+
+    // segmented quantities
+    let s_eff = seg.unwrap_or(m).clamp(1, m) as f64;
+    let k = (mf / s_eff).ceil();
+    let g_s = net.gap(s_eff);
+
+    match strategy {
+        Strategy::BcastFlat => (p - 1.0) * g_m + l,
+        Strategy::BcastFlatRdv => (p - 1.0) * g_m + rdv,
+        Strategy::BcastSegFlat => (p - 1.0) * (g_s * k) + l,
+        Strategy::BcastChain => (p - 1.0) * (g_m + l),
+        Strategy::BcastChainRdv => (p - 1.0) * (g_m + rdv),
+        Strategy::BcastSegChain => (p - 1.0) * (g_s + l) + g_s * (k - 1.0),
+        Strategy::BcastBinary => ce * (2.0 * g_m + l),
+        Strategy::BcastBinomial => fl * g_m + ce * l,
+        Strategy::BcastBinomialRdv => fl * g_m + ce * rdv,
+        Strategy::BcastSegBinomial => fl * g_s * k + ce * l,
+        Strategy::ScatterFlat => (p - 1.0) * g_m + l,
+        Strategy::ScatterChain => {
+            let sum: f64 = (1..procs).map(|j| net.gap(j as f64 * mf)).sum();
+            sum + (p - 1.0) * l
+        }
+        Strategy::ScatterBinomial => {
+            let sum: f64 = (0..ceil_log2(procs) as u32)
+                .map(|j| net.gap((1u64 << j) as f64 * mf))
+                .sum();
+            sum + ce * l
+        }
+    }
+}
+
+/// Search the segment-size grid for the best segment of a segmented
+/// strategy at `(procs, m)`. Returns `(best_time, best_segment)`. The
+/// message size itself is always included as a candidate (so the
+/// unsegmented case is in the search space — see DESIGN.md).
+pub fn best_segment(
+    strategy: Strategy,
+    net: &PLogP,
+    procs: usize,
+    m: u64,
+    s_grid: &[u64],
+) -> (f64, u64) {
+    assert!(strategy.is_segmented());
+    let mut best = (predict(strategy, net, procs, m, Some(m)), m);
+    for &s in s_grid {
+        let s = s.clamp(1, m);
+        let t = predict(strategy, net, procs, m, Some(s));
+        if t < best.0 {
+            best = (t, s);
+        }
+    }
+    best
+}
+
+/// Evaluate every strategy of one operation family and return
+/// `(strategy, time, segment)` sorted ascending by time. Segmented
+/// entries report their tuned segment.
+pub fn rank_strategies(
+    family: &[Strategy],
+    net: &PLogP,
+    procs: usize,
+    m: u64,
+    s_grid: &[u64],
+) -> Vec<(Strategy, f64, Option<u64>)> {
+    let mut out: Vec<(Strategy, f64, Option<u64>)> = family
+        .iter()
+        .map(|&s| {
+            if s.is_segmented() {
+                let (t, seg) = best_segment(s, net, procs, m, s_grid);
+                (s, t, Some(seg))
+            } else {
+                (s, predict(s, net, procs, m, None), None)
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plogp::GapTable;
+
+    /// The hand-checkable network from the Python tests:
+    /// g(m) = 1 + m, L = 10 (fictional seconds).
+    fn toy() -> PLogP {
+        let sizes: Vec<f64> = vec![1., 2., 4., 8., 16., 32., 64., 128.];
+        let gaps: Vec<f64> = sizes.iter().map(|s| 1.0 + s).collect();
+        PLogP::new(10.0, GapTable::new(sizes, gaps))
+    }
+
+    #[test]
+    fn matches_python_hand_values() {
+        // identical cases to python/tests/test_kernel.py TestModelSemantics
+        let n = toy();
+        let cases: Vec<(Strategy, f64)> = vec![
+            (Strategy::BcastFlat, 46.0),
+            (Strategy::BcastFlatRdv, 70.0),
+            (Strategy::BcastChain, 76.0),
+            (Strategy::BcastChainRdv, 172.0),
+            (Strategy::BcastBinary, 84.0),
+            (Strategy::BcastBinomial, 48.0),
+            (Strategy::BcastBinomialRdv, 120.0),
+            (Strategy::ScatterFlat, 46.0),
+            (Strategy::ScatterChain, 124.0),
+            (Strategy::ScatterBinomial, 89.0),
+        ];
+        for (s, want) in cases {
+            let got = predict(s, &n, 5, 8, None);
+            assert!((got - want).abs() < 1e-9, "{}: got {got} want {want}", s.name());
+        }
+    }
+
+    #[test]
+    fn segmented_hand_values() {
+        let n = toy();
+        assert!((predict(Strategy::BcastSegChain, &n, 5, 8, Some(2)) - 61.0).abs() < 1e-9);
+        assert!((predict(Strategy::BcastSegFlat, &n, 5, 8, Some(2)) - 58.0).abs() < 1e-9);
+        assert!((predict(Strategy::BcastSegBinomial, &n, 5, 8, Some(2)) - 54.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn segment_clamps_to_message() {
+        let n = toy();
+        let unseg = predict(Strategy::BcastFlat, &n, 5, 8, None);
+        let clamped = predict(Strategy::BcastSegFlat, &n, 5, 8, Some(64));
+        assert!((unseg - clamped).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binomial_power_of_two() {
+        let n = toy();
+        // floor = ceil = 3 at P=8: 3*9 + 3*10 = 57
+        assert!((predict(Strategy::BcastBinomial, &n, 8, 8, None) - 57.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scatter_binomial_p2() {
+        let n = toy();
+        assert!((predict(Strategy::ScatterBinomial, &n, 2, 8, None) - 19.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_segment_includes_m_itself() {
+        let n = toy();
+        // with a steep per-message cost, segmentation hurts; the search
+        // must fall back to s = m (unsegmented)
+        let sizes = vec![1.0, 1024.0];
+        let gaps = vec![100.0, 101.0]; // all overhead, no bandwidth term
+        let nn = PLogP::new(1.0, GapTable::new(sizes, gaps));
+        let (t, s) = best_segment(Strategy::BcastSegChain, &nn, 4, 1024, &[16, 64, 256]);
+        assert_eq!(s, 1024);
+        assert!((t - predict(Strategy::BcastSegChain, &nn, 4, 1024, Some(1024))).abs() < 1e-12);
+        let _ = n;
+    }
+
+    #[test]
+    fn best_segment_picks_minimum() {
+        let n = toy();
+        let grid = [1u64, 2, 4, 8];
+        let (t, s) = best_segment(Strategy::BcastSegBinomial, &n, 5, 8, &grid);
+        for &cand in &grid {
+            assert!(t <= predict(Strategy::BcastSegBinomial, &n, 5, 8, Some(cand)) + 1e-12);
+        }
+        assert!(grid.contains(&s) || s == 8);
+    }
+
+    #[test]
+    fn rank_strategies_sorted_and_complete() {
+        let n = toy();
+        let ranked = rank_strategies(&Strategy::BCAST, &n, 5, 8, &[2, 4]);
+        assert_eq!(ranked.len(), 10);
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        // segmented entries carry a segment
+        for (s, _, seg) in &ranked {
+            assert_eq!(seg.is_some(), s.is_segmented());
+        }
+    }
+
+    #[test]
+    fn p1_collectives_cost_only_latency_terms() {
+        let n = toy();
+        // P=1: no sends; flat model (P-1)g+L degenerates to L
+        assert!((predict(Strategy::BcastFlat, &n, 1, 8, None) - 10.0).abs() < 1e-9);
+        assert_eq!(predict(Strategy::BcastBinomial, &n, 1, 8, None), 0.0);
+    }
+
+    #[test]
+    fn scatter_chain_sums_triangular_gaps() {
+        let n = toy();
+        // P=3, m=4: g(4)+g(8) + 2L = 5 + 9 + 20 = 34
+        assert!((predict(Strategy::ScatterChain, &n, 3, 4, None) - 34.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! An MPI-like message-passing runtime over [`crate::netsim`].
+//!
+//! Collective algorithms are expressed as declarative *communication
+//! schedules* ([`schedule::CommSchedule`]): per-rank ordered send lists
+//! with receive-triggered dependencies, mirroring how LAM-MPI's collective
+//! layer drives its point-to-point layer. The executor ([`world::World`])
+//! runs a schedule on the simulated cluster with either the **eager** or
+//! the **rendezvous** point-to-point protocol per message — the protocol
+//! split is exactly what distinguishes the paper's "flavour" models
+//! (`Flat` vs `Flat Rendezvous`, etc.).
+
+pub mod schedule;
+pub mod world;
+
+pub use schedule::{
+    CommSchedule, Payload, Protocol, RankSchedule, SendSpec, Tag, Trigger,
+};
+pub use world::{RunReport, World};
+
+/// Rank index within a communicator (same as a netsim NodeId here).
+pub type Rank = u32;

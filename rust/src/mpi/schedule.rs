@@ -1,0 +1,234 @@
+//! Declarative communication schedules.
+//!
+//! A schedule is the static expansion of one collective operation: for
+//! every rank, an ordered list of sends, each fired by a trigger (at
+//! start, or on receipt of a tagged message), plus the set of payloads
+//! the rank must have received for the operation to count as complete.
+//!
+//! Payloads are *descriptors*, not bytes: a broadcast moves
+//! `Range{offset: 0, len: m}`, a scatter moves per-rank ranges of the
+//! root buffer, a reduction moves contributor bitmasks. This keeps the
+//! simulator allocation-free while letting tests verify that every rank
+//! ends up with exactly the right data.
+
+use super::Rank;
+
+/// Message tag. The low 32 bits identify the logical transfer (e.g. the
+/// segment index); collectives are free to use any scheme as long as tags
+/// are unique per (receiver, transfer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tag(pub u64);
+
+/// Point-to-point protocol for a data send.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Protocol {
+    /// Send immediately; the receiver is assumed ready (pre-posted).
+    #[default]
+    Eager,
+    /// RTS → CTS → DATA handshake. The handshake is non-blocking on the
+    /// sender (other sends may proceed while waiting for the CTS), which
+    /// is what makes `Flat Tree Rendezvous` cost
+    /// `(P-1) g(m) + 2 g(1) + 3L` rather than `(P-1)(g(m)+2g(1)+3L)`.
+    Rendezvous,
+}
+
+/// What a message carries (descriptor, not bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Payload {
+    /// A contiguous range of the operation's root buffer.
+    Range { offset: u64, len: u64 },
+    /// A set of ranks whose contributions have been combined (reduction
+    /// traffic), as a bitmask. Supports P <= 64.
+    Ranks(u64),
+    /// Pure control (barrier tokens).
+    Control,
+}
+
+impl Payload {
+    pub fn range(offset: u64, len: u64) -> Payload {
+        Payload::Range { offset, len }
+    }
+}
+
+/// When a send becomes eligible for injection.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Trigger {
+    /// Eligible at operation start (root sends).
+    AtStart,
+    /// Eligible when a data message with this tag has been received by
+    /// this rank.
+    OnRecv(Tag),
+    /// Eligible when *all* these tags have been received (fan-in nodes of
+    /// gather/reduce trees).
+    OnRecvAll(Vec<Tag>),
+}
+
+/// One send in a rank's program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SendSpec {
+    pub to: Rank,
+    pub tag: Tag,
+    pub bytes: u64,
+    pub payload: Payload,
+    pub trigger: Trigger,
+    pub protocol: Protocol,
+}
+
+/// A rank's part of the schedule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RankSchedule {
+    /// Sends, in program order. Sends whose triggers fire earlier may be
+    /// injected earlier (non-blocking semantics); the NIC serializes.
+    pub sends: Vec<SendSpec>,
+    /// Payloads this rank must receive for the operation to complete.
+    pub expected: Vec<Payload>,
+}
+
+/// A complete static schedule for one collective operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommSchedule {
+    /// Number of participating ranks.
+    pub p: usize,
+    /// Human-readable operation name (e.g. "bcast/binomial").
+    pub name: String,
+    pub ranks: Vec<RankSchedule>,
+}
+
+impl CommSchedule {
+    pub fn new(p: usize, name: impl Into<String>) -> CommSchedule {
+        CommSchedule { p, name: name.into(), ranks: vec![RankSchedule::default(); p] }
+    }
+
+    /// Total bytes injected into the network by all data sends.
+    pub fn total_send_bytes(&self) -> u64 {
+        self.ranks.iter().flat_map(|r| &r.sends).map(|s| s.bytes).sum()
+    }
+
+    /// Total number of data sends.
+    pub fn total_sends(&self) -> usize {
+        self.ranks.iter().map(|r| r.sends.len()).sum()
+    }
+
+    /// Structural sanity: destinations in range, no send to self, every
+    /// OnRecv trigger refers to a tag some other rank actually sends to
+    /// this rank, and expected payloads are covered by incoming sends.
+    /// Returns a list of problems (empty = well-formed).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.ranks.len() != self.p {
+            problems.push(format!(
+                "schedule has {} rank entries for p={}",
+                self.ranks.len(),
+                self.p
+            ));
+            return problems;
+        }
+        // tags incoming to each rank
+        let mut incoming: Vec<Vec<Tag>> = vec![Vec::new(); self.p];
+        for (r, rs) in self.ranks.iter().enumerate() {
+            for s in &rs.sends {
+                if (s.to as usize) >= self.p {
+                    problems.push(format!("rank {r} sends to out-of-range {}", s.to));
+                    continue;
+                }
+                if s.to as usize == r {
+                    problems.push(format!("rank {r} sends to itself (tag {:?})", s.tag));
+                }
+                incoming[s.to as usize].push(s.tag);
+            }
+        }
+        for (r, rs) in self.ranks.iter().enumerate() {
+            for s in &rs.sends {
+                let need: Vec<&Tag> = match &s.trigger {
+                    Trigger::AtStart => vec![],
+                    Trigger::OnRecv(t) => vec![t],
+                    Trigger::OnRecvAll(ts) => ts.iter().collect(),
+                };
+                for t in need {
+                    if !incoming[r].contains(t) {
+                        problems.push(format!(
+                            "rank {r} waits on tag {t:?} that nobody sends it"
+                        ));
+                    }
+                }
+            }
+        }
+        problems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn send(to: Rank, tag: u64, trigger: Trigger) -> SendSpec {
+        SendSpec {
+            to,
+            tag: Tag(tag),
+            bytes: 100,
+            payload: Payload::range(0, 100),
+            trigger,
+            protocol: Protocol::Eager,
+        }
+    }
+
+    #[test]
+    fn valid_chain_schedule_passes() {
+        let mut s = CommSchedule::new(3, "test/chain");
+        s.ranks[0].sends.push(send(1, 0, Trigger::AtStart));
+        s.ranks[1].sends.push(send(2, 0, Trigger::OnRecv(Tag(0))));
+        s.ranks[1].expected.push(Payload::range(0, 100));
+        s.ranks[2].expected.push(Payload::range(0, 100));
+        assert!(s.validate().is_empty(), "{:?}", s.validate());
+    }
+
+    #[test]
+    fn self_send_flagged() {
+        let mut s = CommSchedule::new(2, "bad");
+        s.ranks[0].sends.push(send(0, 0, Trigger::AtStart));
+        assert!(!s.validate().is_empty());
+    }
+
+    #[test]
+    fn out_of_range_dst_flagged() {
+        let mut s = CommSchedule::new(2, "bad");
+        s.ranks[0].sends.push(send(5, 0, Trigger::AtStart));
+        assert!(!s.validate().is_empty());
+    }
+
+    #[test]
+    fn dangling_trigger_flagged() {
+        let mut s = CommSchedule::new(2, "bad");
+        s.ranks[0].sends.push(send(1, 0, Trigger::OnRecv(Tag(42))));
+        let probs = s.validate();
+        assert!(probs.iter().any(|p| p.contains("waits on tag")), "{probs:?}");
+    }
+
+    #[test]
+    fn totals() {
+        let mut s = CommSchedule::new(3, "t");
+        s.ranks[0].sends.push(send(1, 0, Trigger::AtStart));
+        s.ranks[0].sends.push(send(2, 1, Trigger::AtStart));
+        assert_eq!(s.total_sends(), 2);
+        assert_eq!(s.total_send_bytes(), 200);
+    }
+
+    #[test]
+    fn onrecvall_validates_each_tag() {
+        let mut s = CommSchedule::new(3, "fanin");
+        s.ranks[1].sends.push(send(0, 1, Trigger::AtStart));
+        s.ranks[2].sends.push(send(0, 2, Trigger::AtStart));
+        s.ranks[0].sends.push(SendSpec {
+            to: 1,
+            tag: Tag(9),
+            bytes: 1,
+            payload: Payload::Control,
+            trigger: Trigger::OnRecvAll(vec![Tag(1), Tag(2)]),
+            protocol: Protocol::Eager,
+        });
+        assert!(s.validate().is_empty());
+        // now reference a missing tag
+        s.ranks[0].sends[0].trigger = Trigger::OnRecvAll(vec![Tag(1), Tag(3)]);
+        assert!(!s.validate().is_empty());
+    }
+}

@@ -1,0 +1,511 @@
+//! The schedule executor: runs a [`CommSchedule`] on a [`Netsim`].
+//!
+//! Deterministic event loop. Data sends use either the eager protocol
+//! (one message) or the rendezvous protocol (RTS → CTS → DATA, with the
+//! handshake non-blocking at the sender). Completion of a rank is when
+//! it has received every expected payload *and* injected its last send;
+//! completion of the operation is the max over ranks — which is what the
+//! paper's experiments time.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::netsim::{EventQueue, Netsim, SimTime};
+
+use super::schedule::{CommSchedule, Payload, Protocol, SendSpec, Tag, Trigger};
+use super::Rank;
+
+/// Control-message size for RTS/CTS (bytes). The models charge these at
+/// `g(1)`; one byte keeps measurement and model aligned.
+const CTRL_BYTES: u64 = 1;
+
+/// What kind of message an executor event is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Kind {
+    Data,
+    Rts,
+    Cts,
+}
+
+/// An executor event: a message delivery.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Deliver {
+    kind: Kind,
+    src: Rank,
+    dst: Rank,
+    tag: Tag,
+    payload: Payload,
+    bytes: u64,
+}
+
+/// Per-send bookkeeping state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SendState {
+    /// Waiting for its trigger.
+    Waiting,
+    /// Rendezvous: RTS sent, waiting for CTS.
+    AwaitingCts,
+    /// Injected (eager data sent, or rendezvous data sent).
+    Done,
+}
+
+/// Outcome of one schedule execution.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Operation completion time (max over ranks).
+    pub completion: SimTime,
+    /// Per-rank completion times.
+    pub per_rank: Vec<SimTime>,
+    /// Payloads received per rank (for verification).
+    pub received: Vec<Vec<Payload>>,
+    /// Messages injected into the network (incl. control traffic).
+    pub messages: u64,
+    /// Payload bytes moved (excl. control traffic).
+    pub data_bytes: u64,
+    /// Delayed-ACK stalls suffered.
+    pub ack_stalls: u64,
+    /// Name of the executed operation.
+    pub name: String,
+}
+
+impl RunReport {
+    /// Check that every rank received exactly its expected payload
+    /// multiset (order-insensitive). Returns problems; empty = verified.
+    pub fn verify(&self, schedule: &CommSchedule) -> Vec<String> {
+        let mut problems = Vec::new();
+        for (r, rs) in schedule.ranks.iter().enumerate() {
+            let mut got = self.received[r].clone();
+            let mut want = rs.expected.clone();
+            got.sort();
+            want.sort();
+            if got != want {
+                problems.push(format!(
+                    "rank {r}: received {got:?}, expected {want:?}"
+                ));
+            }
+        }
+        problems
+    }
+}
+
+/// A P-rank world bound to a network simulator.
+pub struct World {
+    sim: Netsim,
+}
+
+impl World {
+    pub fn new(sim: Netsim) -> World {
+        World { sim }
+    }
+
+    pub fn sim(&self) -> &Netsim {
+        &self.sim
+    }
+
+    pub fn sim_mut(&mut self) -> &mut Netsim {
+        &mut self.sim
+    }
+
+    /// Execute one schedule from a clean-clock state.
+    pub fn run(&mut self, schedule: &CommSchedule) -> RunReport {
+        self.sim.reset();
+        self.run_no_reset(schedule)
+    }
+
+    /// Execute without resetting clocks (for back-to-back operations,
+    /// e.g. the pLogP benchmark's message trains or composed collectives).
+    pub fn run_no_reset(&mut self, schedule: &CommSchedule) -> RunReport {
+        let p = schedule.p;
+        assert_eq!(
+            p,
+            self.sim.num_nodes(),
+            "schedule is for {p} ranks but the cluster has {}",
+            self.sim.num_nodes()
+        );
+        debug_assert!(
+            schedule.validate().is_empty(),
+            "invalid schedule: {:?}",
+            schedule.validate()
+        );
+
+        let mut queue: EventQueue<Deliver> = EventQueue::new();
+        let mut send_state: Vec<Vec<SendState>> = schedule
+            .ranks
+            .iter()
+            .map(|r| vec![SendState::Waiting; r.sends.len()])
+            .collect();
+        // tags received so far, per rank (set: O(1) membership — the
+        // per-delivery trigger checks are the executor's hot path).
+        // Only ranks with fan-in (OnRecvAll) triggers need the set at
+        // all: an OnRecv(tag) candidate reached via the trigger index is
+        // ready by construction (its tag just arrived).
+        let needs_tagset: Vec<bool> = schedule
+            .ranks
+            .iter()
+            .map(|rs| {
+                rs.sends.iter().any(|s| matches!(s.trigger, Trigger::OnRecvAll(_)))
+            })
+            .collect();
+        let mut got_tags: Vec<HashSet<Tag>> = vec![HashSet::new(); p];
+        let mut received: Vec<Vec<Payload>> = vec![Vec::new(); p];
+        // trigger index: per rank, (tag, send idx) sorted by tag, so a
+        // delivery binary-searches its own candidates instead of
+        // re-scanning the whole send list (quadratic for k-segment
+        // chains before this index existed — see EXPERIMENTS.md §Perf).
+        // A sorted Vec beats a HashMap here: one allocation per rank and
+        // no hashing on the hot path.
+        let waiting_on: Vec<Vec<(Tag, usize)>> = schedule
+            .ranks
+            .iter()
+            .map(|rs| {
+                let mut idx: Vec<(Tag, usize)> = Vec::new();
+                for (i, spec) in rs.sends.iter().enumerate() {
+                    match &spec.trigger {
+                        Trigger::AtStart => {}
+                        Trigger::OnRecv(tag) => idx.push((*tag, i)),
+                        Trigger::OnRecvAll(tags) => {
+                            idx.extend(tags.iter().map(|t| (*t, i)))
+                        }
+                    }
+                }
+                idx.sort_unstable();
+                idx
+            })
+            .collect();
+        // rendezvous bookkeeping: send idx by (sender, receiver, tag) —
+        // one sender may have several outstanding RTSs with the same tag
+        // (flat rendezvous trees), so the receiver disambiguates.
+        let mut awaiting_cts: HashMap<(Rank, Rank, Tag), usize> = HashMap::new();
+        let mut last_send_done: Vec<SimTime> = vec![SimTime::ZERO; p];
+        let mut last_recv: Vec<SimTime> = vec![SimTime::ZERO; p];
+        let mut data_bytes = 0u64;
+        let mut messages = 0u64;
+
+        let base_stalls = self.sim.stats().ack_stalls;
+
+        // Inject a data send (eager) or its RTS (rendezvous).
+        #[allow(clippy::too_many_arguments)]
+        fn inject(
+            sim: &mut Netsim,
+            queue: &mut EventQueue<Deliver>,
+            awaiting_cts: &mut HashMap<(Rank, Rank, Tag), usize>,
+            state: &mut SendState,
+            idx: usize,
+            rank: Rank,
+            spec: &SendSpec,
+            at: SimTime,
+            last_send_done: &mut [SimTime],
+            messages: &mut u64,
+            data_bytes: &mut u64,
+        ) {
+            match spec.protocol {
+                Protocol::Eager => {
+                    let out = sim.send(at, rank, spec.to, spec.bytes);
+                    *messages += 1;
+                    *data_bytes += spec.bytes;
+                    last_send_done[rank as usize] =
+                        last_send_done[rank as usize].max(out.tx_done);
+                    queue.push(
+                        out.delivered,
+                        Deliver {
+                            kind: Kind::Data,
+                            src: rank,
+                            dst: spec.to,
+                            tag: spec.tag,
+                            payload: spec.payload,
+                            bytes: spec.bytes,
+                        },
+                    );
+                    *state = SendState::Done;
+                }
+                Protocol::Rendezvous => {
+                    let out = sim.send(at, rank, spec.to, CTRL_BYTES);
+                    *messages += 1;
+                    queue.push(
+                        out.delivered,
+                        Deliver {
+                            kind: Kind::Rts,
+                            src: rank,
+                            dst: spec.to,
+                            tag: spec.tag,
+                            payload: Payload::Control,
+                            bytes: CTRL_BYTES,
+                        },
+                    );
+                    awaiting_cts.insert((rank, spec.to, spec.tag), idx);
+                    *state = SendState::AwaitingCts;
+                }
+            }
+        }
+
+        // Fire AtStart sends.
+        for (r, rs) in schedule.ranks.iter().enumerate() {
+            for (i, spec) in rs.sends.iter().enumerate() {
+                if spec.trigger == Trigger::AtStart {
+                    inject(
+                        &mut self.sim,
+                        &mut queue,
+                        &mut awaiting_cts,
+                        &mut send_state[r][i],
+                        i,
+                        r as Rank,
+                        spec,
+                        SimTime::ZERO,
+                        &mut last_send_done,
+                        &mut messages,
+                        &mut data_bytes,
+                    );
+                }
+            }
+        }
+
+        // Event loop.
+        while let Some((t, ev)) = queue.pop() {
+            match ev.kind {
+                Kind::Data => {
+                    let d = ev.dst as usize;
+                    if needs_tagset[d] {
+                        got_tags[d].insert(ev.tag);
+                    }
+                    received[d].push(ev.payload);
+                    last_recv[d] = last_recv[d].max(t);
+                    // fire only the sends indexed under this tag
+                    let idx = &waiting_on[d];
+                    let lo = idx.partition_point(|(tag, _)| *tag < ev.tag);
+                    let hi = idx.partition_point(|(tag, _)| *tag <= ev.tag);
+                    for &(_, i) in &idx[lo..hi] {
+                        if send_state[d][i] != SendState::Waiting {
+                            continue;
+                        }
+                        let spec = &schedule.ranks[d].sends[i];
+                        let ready = match &spec.trigger {
+                            Trigger::AtStart => false, // already fired
+                            // found via the index for ev.tag => satisfied
+                            Trigger::OnRecv(_) => true,
+                            Trigger::OnRecvAll(tags) => {
+                                tags.iter().all(|tg| got_tags[d].contains(tg))
+                            }
+                        };
+                        if ready {
+                            inject(
+                                &mut self.sim,
+                                &mut queue,
+                                &mut awaiting_cts,
+                                &mut send_state[d][i],
+                                i,
+                                ev.dst,
+                                spec,
+                                t,
+                                &mut last_send_done,
+                                &mut messages,
+                                &mut data_bytes,
+                            );
+                        }
+                    }
+                }
+                Kind::Rts => {
+                    // Receiver is pre-posted: reply CTS immediately.
+                    let out = self.sim.send(t, ev.dst, ev.src, CTRL_BYTES);
+                    messages += 1;
+                    queue.push(
+                        out.delivered,
+                        Deliver {
+                            kind: Kind::Cts,
+                            src: ev.dst,
+                            dst: ev.src,
+                            tag: ev.tag,
+                            payload: Payload::Control,
+                            bytes: CTRL_BYTES,
+                        },
+                    );
+                }
+                Kind::Cts => {
+                    // Sender may now push the data.
+                    // CTS travels receiver->sender: ev.dst is the
+                    // original data sender, ev.src the data receiver.
+                    let key = (ev.dst, ev.src, ev.tag);
+                    let idx = awaiting_cts
+                        .remove(&key)
+                        .expect("CTS for unknown rendezvous");
+                    let spec = &schedule.ranks[ev.dst as usize].sends[idx];
+                    let out = self.sim.send(t, ev.dst, spec.to, spec.bytes);
+                    messages += 1;
+                    data_bytes += spec.bytes;
+                    last_send_done[ev.dst as usize] =
+                        last_send_done[ev.dst as usize].max(out.tx_done);
+                    send_state[ev.dst as usize][idx] = SendState::Done;
+                    queue.push(
+                        out.delivered,
+                        Deliver {
+                            kind: Kind::Data,
+                            src: ev.dst,
+                            dst: spec.to,
+                            tag: spec.tag,
+                            payload: spec.payload,
+                            bytes: spec.bytes,
+                        },
+                    );
+                }
+            }
+        }
+
+        // Deadlock / starvation check: every send must have fired.
+        for (r, states) in send_state.iter().enumerate() {
+            for (i, st) in states.iter().enumerate() {
+                assert!(
+                    *st == SendState::Done,
+                    "schedule '{}': rank {r} send {i} never fired ({st:?}) — \
+                     deadlocked or mis-triggered",
+                    schedule.name
+                );
+            }
+        }
+
+        let per_rank: Vec<SimTime> = (0..p)
+            .map(|r| last_recv[r].max(last_send_done[r]))
+            .collect();
+        let completion = per_rank.iter().copied().max().unwrap_or(SimTime::ZERO);
+
+        RunReport {
+            completion,
+            per_rank,
+            received,
+            messages,
+            data_bytes,
+            ack_stalls: self.sim.stats().ack_stalls - base_stalls,
+            name: schedule.name.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NetConfig;
+
+    fn world(p: usize) -> World {
+        World::new(Netsim::new(p, NetConfig::fast_ethernet_ideal()))
+    }
+
+    fn eager(to: Rank, tag: u64, bytes: u64, trigger: Trigger) -> SendSpec {
+        SendSpec {
+            to,
+            tag: Tag(tag),
+            bytes,
+            payload: Payload::range(0, bytes),
+            trigger,
+            protocol: Protocol::Eager,
+        }
+    }
+
+    #[test]
+    fn single_send_completes_at_isolated_latency() {
+        let mut w = world(2);
+        let mut s = CommSchedule::new(2, "p2p");
+        s.ranks[0].sends.push(eager(1, 0, 1024, Trigger::AtStart));
+        s.ranks[1].expected.push(Payload::range(0, 1024));
+        let rep = w.run(&s);
+        let want = w.sim().isolated_latency(1024);
+        assert!((rep.completion.as_secs() - want).abs() < 1e-9);
+        assert!(rep.verify(&s).is_empty());
+    }
+
+    #[test]
+    fn chained_sends_respect_dependency() {
+        let mut w = world(3);
+        let mut s = CommSchedule::new(3, "chain");
+        s.ranks[0].sends.push(eager(1, 0, 1024, Trigger::AtStart));
+        s.ranks[1].sends.push(eager(2, 1, 1024, Trigger::OnRecv(Tag(0))));
+        s.ranks[1].expected.push(Payload::range(0, 1024));
+        s.ranks[2].expected.push(Payload::range(0, 1024));
+        let rep = w.run(&s);
+        // two hops, each the isolated latency
+        let want = 2.0 * w.sim().isolated_latency(1024);
+        assert!((rep.completion.as_secs() - want).abs() < 1e-9,
+            "got {} want {want}", rep.completion.as_secs());
+    }
+
+    #[test]
+    fn rendezvous_adds_handshake_cost() {
+        let mut we = world(2);
+        let mut wr = world(2);
+        let mut se = CommSchedule::new(2, "eager");
+        se.ranks[0].sends.push(eager(1, 0, 1 << 16, Trigger::AtStart));
+        se.ranks[1].expected.push(Payload::range(0, 1 << 16));
+        let mut sr = se.clone();
+        sr.name = "rdv".into();
+        sr.ranks[0].sends[0].protocol = Protocol::Rendezvous;
+        let re = we.run(&se);
+        let rr = wr.run(&sr);
+        // rendezvous pays roughly 2 control messages + an extra round trip
+        assert!(rr.completion > re.completion);
+        let extra = rr.completion.as_secs() - re.completion.as_secs();
+        let rt = 2.0 * we.sim().isolated_latency(1);
+        assert!((extra - rt).abs() < 30e-6, "extra={extra} rt~{rt}");
+    }
+
+    #[test]
+    fn fan_in_waits_for_all() {
+        let mut w = world(3);
+        let mut s = CommSchedule::new(3, "fanin");
+        s.ranks[1].sends.push(eager(0, 1, 512, Trigger::AtStart));
+        s.ranks[2].sends.push(eager(0, 2, 512, Trigger::AtStart));
+        s.ranks[0].sends.push(SendSpec {
+            to: 1,
+            tag: Tag(9),
+            bytes: 1,
+            payload: Payload::Control,
+            trigger: Trigger::OnRecvAll(vec![Tag(1), Tag(2)]),
+            protocol: Protocol::Eager,
+        });
+        s.ranks[0].expected.push(Payload::range(0, 512));
+        s.ranks[0].expected.push(Payload::range(0, 512));
+        s.ranks[1].expected.push(Payload::Control);
+        let rep = w.run(&s);
+        assert!(rep.verify(&s).is_empty(), "{:?}", rep.verify(&s));
+        // token leaves rank 0 only after both arrivals
+        assert!(rep.per_rank[1] > rep.per_rank[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never fired")]
+    fn deadlocked_schedule_panics() {
+        let mut w = world(2);
+        let mut s = CommSchedule::new(2, "deadlock");
+        // rank 0 waits for a tag that only it could send — never fires.
+        // (validate() would flag this; bypass debug_assert via release
+        // semantics by constructing the panic directly in the executor.)
+        s.ranks[0].sends.push(eager(1, 0, 10, Trigger::OnRecv(Tag(7))));
+        s.ranks[1].sends.push(eager(0, 7, 10, Trigger::OnRecv(Tag(0))));
+        let _ = w.run(&s);
+    }
+
+    #[test]
+    fn report_counts_control_traffic_separately() {
+        let mut w = world(2);
+        let mut s = CommSchedule::new(2, "rdv-count");
+        s.ranks[0].sends.push(SendSpec {
+            to: 1,
+            tag: Tag(0),
+            bytes: 1 << 20,
+            payload: Payload::range(0, 1 << 20),
+            trigger: Trigger::AtStart,
+            protocol: Protocol::Rendezvous,
+        });
+        s.ranks[1].expected.push(Payload::range(0, 1 << 20));
+        let rep = w.run(&s);
+        assert_eq!(rep.messages, 3); // RTS + CTS + DATA
+        assert_eq!(rep.data_bytes, 1 << 20);
+        assert!(rep.verify(&s).is_empty());
+    }
+
+    #[test]
+    fn run_resets_between_operations() {
+        let mut w = world(2);
+        let mut s = CommSchedule::new(2, "p2p");
+        s.ranks[0].sends.push(eager(1, 0, 1024, Trigger::AtStart));
+        s.ranks[1].expected.push(Payload::range(0, 1024));
+        let a = w.run(&s);
+        let b = w.run(&s);
+        assert_eq!(a.completion, b.completion);
+    }
+}

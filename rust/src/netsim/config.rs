@@ -1,0 +1,229 @@
+//! Network configuration and presets.
+
+/// TCP behaviour knobs (Linux 2.2-era semantics, per the paper's refs
+/// [9] "Performance Issues with LAM/MPI on Linux 2.2.x" and [10]
+/// Loncaric's TCP acknowledgement-policy patches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TcpConfig {
+    /// Messages at or below this size are subject to the delayed-ACK
+    /// stall (bytes). 0 disables the anomaly entirely.
+    pub small_msg_threshold: u64,
+    /// One in every `delayed_ack_every_n` small messages on a flow is
+    /// stalled. The paper: "only one every n messages is delayed, with n
+    /// varying from kernel to kernel implementation".
+    pub delayed_ack_every_n: u64,
+    /// The stall duration (seconds). Linux delayed-ACK timers were in the
+    /// tens-of-milliseconds range on 2.2 kernels.
+    pub delayed_ack_penalty: f64,
+    /// After this many back-to-back (queued) sends, the socket buffer is
+    /// streaming: per-message sender overhead is multiplied by
+    /// `coalesce_factor` (the "bulk transmission" effect of §4.2). Also,
+    /// a streaming flow stops suffering delayed-ACK stalls — the paper's
+    /// observation that segment trains only pay the stall once.
+    pub coalesce_after: u64,
+    /// Multiplier (< 1.0) on sender overhead while streaming.
+    pub coalesce_factor: f64,
+    /// A send is only at risk of a delayed-ACK stall if its flow has been
+    /// idle for longer than this window (seconds): back-to-back segment
+    /// trains force the ACKs out, so only the *first* messages of a train
+    /// can stall — the paper's §4.1 observation that the Segmented Chain
+    /// delay "does not increase proportionally... but remains constant".
+    pub ack_window: f64,
+}
+
+impl TcpConfig {
+    /// The anomalies switched off: an ideal transport.
+    pub fn ideal() -> TcpConfig {
+        TcpConfig {
+            small_msg_threshold: 0,
+            delayed_ack_every_n: u64::MAX,
+            delayed_ack_penalty: 0.0,
+            coalesce_after: u64::MAX,
+            coalesce_factor: 1.0,
+            ack_window: 0.0,
+        }
+    }
+
+    /// Linux 2.2-flavoured defaults used for the paper reproductions.
+    ///
+    /// Calibrated so the §4 anomalies are *visible but small*, like the
+    /// paper's: "small variations in the predicted data for small
+    /// messages, [which] were unable to compromise the final decision".
+    pub fn linux22() -> TcpConfig {
+        TcpConfig {
+            small_msg_threshold: 64 * 1024,
+            delayed_ack_every_n: 24,
+            delayed_ack_penalty: 0.6e-3,
+            coalesce_after: 6,
+            coalesce_factor: 0.55,
+            ack_window: 400e-6,
+        }
+    }
+}
+
+/// Physical/network parameters of a homogeneous switched cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Link bandwidth in bytes/second (full duplex, per direction).
+    pub bandwidth_bps: f64,
+    /// One-way propagation + switch transit delay (seconds).
+    pub prop_delay: f64,
+    /// Per-message sender-side overhead (syscall, MPI stack, NIC setup).
+    pub send_overhead: f64,
+    /// Per-message receiver-side overhead.
+    pub recv_overhead: f64,
+    /// Wire framing overhead per MSS-sized chunk (Ethernet + IP + TCP
+    /// headers), bytes.
+    pub header_bytes: u64,
+    /// Maximum segment size for framing-overhead accounting (bytes).
+    pub mss: u64,
+    /// TCP behaviour model.
+    pub tcp: TcpConfig,
+}
+
+impl NetConfig {
+    /// The paper's testbed: switched Fast Ethernet (100 Mb/s), Pentium
+    /// III 850 MHz nodes, LAM-MPI 6.5.9 on Linux 2.2/2.4.
+    ///
+    /// 100 Mb/s = 12.5 MB/s on the wire; per-message software overhead
+    /// of ~25 us per side and ~55 us one-way latency are in the range the
+    /// MagPIe/pLogP papers report for this class of hardware.
+    pub fn fast_ethernet_icluster1() -> NetConfig {
+        NetConfig {
+            bandwidth_bps: 12.5e6,
+            prop_delay: 30e-6,
+            send_overhead: 25e-6,
+            recv_overhead: 25e-6,
+            header_bytes: 58,
+            mss: 1460,
+            tcp: TcpConfig::linux22(),
+        }
+    }
+
+    /// Same cluster with the TCP anomalies disabled (model-faithful
+    /// network, used to validate the models in isolation).
+    pub fn fast_ethernet_ideal() -> NetConfig {
+        NetConfig { tcp: TcpConfig::ideal(), ..Self::fast_ethernet_icluster1() }
+    }
+
+    /// Gigabit Ethernet variant (the paper's §5 future work mentions
+    /// evaluating Ethernet 1Gb).
+    pub fn gigabit_ethernet() -> NetConfig {
+        NetConfig {
+            bandwidth_bps: 125e6,
+            prop_delay: 12e-6,
+            send_overhead: 8e-6,
+            recv_overhead: 8e-6,
+            header_bytes: 58,
+            mss: 1460,
+            tcp: TcpConfig {
+                small_msg_threshold: 16 * 1024,
+                delayed_ack_every_n: 32,
+                delayed_ack_penalty: 0.3e-3,
+                coalesce_after: 4,
+                coalesce_factor: 0.5,
+                ack_window: 200e-6,
+            },
+        }
+    }
+
+    /// Myrinet-like low-latency interconnect (§5 future work): OS-bypass,
+    /// no TCP anomalies, very low per-message overhead.
+    pub fn myrinet_like() -> NetConfig {
+        NetConfig {
+            bandwidth_bps: 230e6,
+            prop_delay: 7e-6,
+            send_overhead: 2e-6,
+            recv_overhead: 2e-6,
+            header_bytes: 8,
+            mss: 4096,
+            tcp: TcpConfig::ideal(),
+        }
+    }
+
+    /// Wide-area link used as the inter-cluster network in multi-level
+    /// experiments (MagPIe-style grids).
+    pub fn wan_link() -> NetConfig {
+        NetConfig {
+            bandwidth_bps: 4e6,
+            prop_delay: 5e-3,
+            send_overhead: 40e-6,
+            recv_overhead: 40e-6,
+            header_bytes: 58,
+            mss: 1460,
+            tcp: TcpConfig::ideal(),
+        }
+    }
+
+    /// Wire serialization time for `m` payload bytes, including framing.
+    pub fn wire_time(&self, m: u64) -> f64 {
+        self.wire_time_at(m, self.bandwidth_bps)
+    }
+
+    /// Wire time at an explicit bandwidth (per-link overrides in multi-
+    /// cluster topologies).
+    pub fn wire_time_at(&self, m: u64, bandwidth_bps: f64) -> f64 {
+        let chunks = m.div_ceil(self.mss).max(1);
+        (m + chunks * self.header_bytes) as f64 / bandwidth_bps
+    }
+
+    /// The simulator's ground-truth sender gap for one message: overhead
+    /// plus serialization. (The pLogP benchmark *measures* an estimate of
+    /// this; models consume the measurement, not this function.)
+    pub fn gap(&self, m: u64) -> f64 {
+        self.send_overhead + self.wire_time(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_scales_with_size() {
+        let c = NetConfig::fast_ethernet_ideal();
+        assert!(c.wire_time(1 << 20) > c.wire_time(1 << 10));
+        // 1 MB at 12.5 MB/s is ~84 ms plus framing
+        let t = c.wire_time(1 << 20);
+        assert!(t > 0.083 && t < 0.090, "t={t}");
+    }
+
+    #[test]
+    fn wire_time_includes_headers_per_mss() {
+        let c = NetConfig::fast_ethernet_ideal();
+        // 2 MSS-sized chunks pay 2 headers
+        let one = c.wire_time(1460);
+        let two = c.wire_time(2920);
+        assert!((two - 2.0 * one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_message_pays_one_header() {
+        let c = NetConfig::fast_ethernet_ideal();
+        let t = c.wire_time(1);
+        assert!((t - 59.0 / 12.5e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gap_includes_overhead() {
+        let c = NetConfig::fast_ethernet_ideal();
+        assert!((c.gap(0) - c.send_overhead - c.wire_time(0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn presets_are_distinct() {
+        assert!(NetConfig::gigabit_ethernet().bandwidth_bps
+            > NetConfig::fast_ethernet_icluster1().bandwidth_bps);
+        assert!(NetConfig::myrinet_like().prop_delay
+            < NetConfig::fast_ethernet_icluster1().prop_delay);
+        assert!(NetConfig::wan_link().prop_delay > 1e-3);
+    }
+
+    #[test]
+    fn ideal_tcp_has_no_anomalies() {
+        let t = TcpConfig::ideal();
+        assert_eq!(t.small_msg_threshold, 0);
+        assert_eq!(t.delayed_ack_penalty, 0.0);
+        assert_eq!(t.coalesce_factor, 1.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Virtual time and the deterministic event queue.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual time in integer nanoseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// Construct from seconds (rounds to nearest nanosecond).
+    pub fn from_secs(s: f64) -> SimTime {
+        assert!(s >= 0.0 && s.is_finite(), "bad time {s}");
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
+
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.6} ms", self.0 as f64 / 1e6)
+    }
+}
+
+/// A deterministic time-ordered queue. Ties are broken by insertion
+/// sequence number so identical timestamps pop in push order.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<(SimTime, u64, T)>>,
+    seq: u64,
+}
+
+impl<T: Ord> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Ord> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: SimTime, ev: T) {
+        self.heap.push(Reverse((at, self.seq, ev)));
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(SimTime, T)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e))
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_roundtrip() {
+        let t = SimTime::from_secs(1.5e-3);
+        assert_eq!(t.0, 1_500_000);
+        assert!((t.as_secs() - 1.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_add() {
+        assert_eq!(SimTime(5) + SimTime(7), SimTime(12));
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_time_rejected() {
+        SimTime::from_secs(-1.0);
+    }
+
+    #[test]
+    fn queue_orders_by_time() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(30), "c");
+        q.push(SimTime(10), "a");
+        q.push(SimTime(20), "b");
+        assert_eq!(q.pop(), Some((SimTime(10), "a")));
+        assert_eq!(q.pop(), Some((SimTime(20), "b")));
+        assert_eq!(q.pop(), Some((SimTime(30), "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(5), "first");
+        q.push(SimTime(5), "second");
+        q.push(SimTime(5), "third");
+        assert_eq!(q.pop().unwrap().1, "first");
+        assert_eq!(q.pop().unwrap().1, "second");
+        assert_eq!(q.pop().unwrap().1, "third");
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(9), 1u32);
+        q.push(SimTime(3), 2u32);
+        assert_eq!(q.peek_time(), Some(SimTime(3)));
+        assert_eq!(q.pop().unwrap().0, SimTime(3));
+    }
+}

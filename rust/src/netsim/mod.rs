@@ -1,0 +1,32 @@
+//! Discrete-event simulator of a switched full-duplex Ethernet cluster.
+//!
+//! This is the substitute for the paper's testbed (ID/HP icluster-1:
+//! 50 Pentium III nodes on switched 100 Mb/s Ethernet, LAM-MPI 6.5.9 /
+//! Linux 2.2). It models exactly the first-order effects the paper's
+//! evaluation depends on:
+//!
+//! * **sender gap** — per-message overhead plus wire serialization, so a
+//!   node injecting back-to-back messages is spaced by `g(m)`;
+//! * **one-way latency** — propagation plus switch transit plus receiver
+//!   overhead, the pLogP `L`;
+//! * **switch output-port contention** — concurrent senders to one
+//!   destination serialize at wire speed (full-duplex, so A→B and B→A do
+//!   not contend);
+//! * **Linux TCP delayed-ACK stalls** — every n-th small message on a
+//!   flow is delayed (the paper's §4 small-message anomaly, refs [9,10]);
+//! * **send-buffer coalescing** — back-to-back bulk sends amortize their
+//!   per-message overhead (the paper's §4.2 "bulk transmission" effect
+//!   that lets Flat Scatter beat its own model).
+//!
+//! Virtual time is integer nanoseconds ([`SimTime`]); runs are exactly
+//! deterministic and reproducible.
+
+pub mod config;
+pub mod event;
+pub mod sim;
+pub mod trace;
+
+pub use config::{NetConfig, TcpConfig};
+pub use event::{EventQueue, SimTime};
+pub use sim::{MsgId, Netsim, NodeId, SendOutcome};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,476 @@
+//! The simulator core: resource-availability timing model.
+//!
+//! Every message's trajectory is computed at send time from three
+//! monotone per-node resources — sender NIC (`tx_free`), switch output
+//! port (`port_free`) and receiver CPU (`rx_free`) — which is exact for
+//! this network class and keeps the hot path allocation-free.
+
+use std::collections::HashMap;
+
+use super::config::NetConfig;
+use super::event::SimTime;
+use super::trace::{Trace, TraceEvent};
+
+/// Node index within the cluster.
+pub type NodeId = u32;
+
+/// Monotone per-simulation message id.
+pub type MsgId = u64;
+
+/// Everything the caller learns about one message transmission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SendOutcome {
+    pub msg: MsgId,
+    /// When the sender's NIC actually started on this message (after
+    /// queueing behind earlier sends and any TCP stall).
+    pub tx_start: SimTime,
+    /// When the sender is free to inject the next message (pLogP gap).
+    pub tx_done: SimTime,
+    /// When the receiver has the full message (after `recv_overhead`).
+    pub delivered: SimTime,
+    /// Whether this message suffered a delayed-ACK stall.
+    pub ack_stalled: bool,
+    /// Whether this message rode a coalesced (streaming) buffer.
+    pub coalesced: bool,
+}
+
+/// Aggregate counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub local_copies: u64,
+    pub ack_stalls: u64,
+    pub coalesced_sends: u64,
+    pub last_delivery: SimTime,
+}
+
+/// The cluster simulator. See module docs for the timing model.
+#[derive(Debug)]
+pub struct Netsim {
+    cfg: NetConfig,
+    n: usize,
+    tx_free: Vec<SimTime>,
+    rx_free: Vec<SimTime>,
+    port_free: Vec<SimTime>,
+    /// Consecutive queued (back-to-back) sends per sender; drives the
+    /// buffer-coalescing model.
+    stream_run: Vec<u64>,
+    /// Per-flow state: (idle-start small-message count, last tx_done);
+    /// drives the delayed-ACK model.
+    flow_small: HashMap<(NodeId, NodeId), (u64, SimTime)>,
+    /// Failure injection: extra one-way delay per (src, dst) link.
+    extra_link_delay: HashMap<(NodeId, NodeId), f64>,
+    /// Per-link bandwidth overrides (bytes/s) — used for inter-cluster
+    /// (WAN) links in multi-level topologies.
+    link_bandwidth: HashMap<(NodeId, NodeId), f64>,
+    /// Failure injection: multiplier on a node's send/recv overheads.
+    node_slowdown: Vec<f64>,
+    stats: SimStats,
+    trace: Option<Trace>,
+    next_msg: MsgId,
+}
+
+impl Netsim {
+    pub fn new(n: usize, cfg: NetConfig) -> Netsim {
+        assert!(n >= 1, "need at least one node");
+        Netsim {
+            cfg,
+            n,
+            tx_free: vec![SimTime::ZERO; n],
+            rx_free: vec![SimTime::ZERO; n],
+            port_free: vec![SimTime::ZERO; n],
+            stream_run: vec![0; n],
+            flow_small: HashMap::new(),
+            extra_link_delay: HashMap::new(),
+            link_bandwidth: HashMap::new(),
+            node_slowdown: vec![1.0; n],
+            stats: SimStats::default(),
+            trace: None,
+            next_msg: 0,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    /// Enable event tracing with the given capacity (ring buffer).
+    pub fn enable_trace(&mut self, capacity: usize) {
+        self.trace = Some(Trace::new(capacity));
+    }
+
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_ref()
+    }
+
+    /// Failure injection: add `extra` seconds of one-way delay on the
+    /// src→dst link.
+    pub fn inject_link_delay(&mut self, src: NodeId, dst: NodeId, extra: f64) {
+        assert!(extra >= 0.0);
+        self.extra_link_delay.insert((src, dst), extra);
+    }
+
+    /// Failure injection: multiply a node's per-message overheads by
+    /// `factor` (>1 = slower node, e.g. a straggler).
+    pub fn inject_node_slowdown(&mut self, node: NodeId, factor: f64) {
+        assert!(factor > 0.0);
+        self.node_slowdown[node as usize] = factor;
+    }
+
+    /// Override the bandwidth (bytes/s) of the src→dst link — slower
+    /// inter-cluster (WAN) links in multi-level topologies.
+    pub fn set_link_bandwidth(&mut self, src: NodeId, dst: NodeId, bps: f64) {
+        assert!(bps > 0.0);
+        self.link_bandwidth.insert((src, dst), bps);
+    }
+
+    /// Reset all clocks and flow state, keeping configuration and
+    /// injected failures. Use between repetitions.
+    pub fn reset(&mut self) {
+        self.tx_free.fill(SimTime::ZERO);
+        self.rx_free.fill(SimTime::ZERO);
+        self.port_free.fill(SimTime::ZERO);
+        self.stream_run.fill(0);
+        self.flow_small.clear();
+        self.stats = SimStats::default();
+        self.next_msg = 0;
+        if let Some(t) = &mut self.trace {
+            t.clear();
+        }
+    }
+
+    /// Transmit `bytes` from `src` to `dst`, with the sender becoming
+    /// ready at `at` (i.e. the protocol layer decided to send at `at`;
+    /// the NIC may start later). Returns the full timing outcome.
+    ///
+    /// `src == dst` is a local copy: free and instantaneous (the root of
+    /// a scatter keeps its own chunk without touching the network).
+    pub fn send(&mut self, at: SimTime, src: NodeId, dst: NodeId, bytes: u64) -> SendOutcome {
+        assert!((src as usize) < self.n, "src {src} out of range");
+        assert!((dst as usize) < self.n, "dst {dst} out of range");
+        let msg = self.next_msg;
+        self.next_msg += 1;
+
+        if src == dst {
+            self.stats.local_copies += 1;
+            self.stats.last_delivery = self.stats.last_delivery.max(at);
+            return SendOutcome {
+                msg,
+                tx_start: at,
+                tx_done: at,
+                delivered: at,
+                ack_stalled: false,
+                coalesced: false,
+            };
+        }
+
+        let si = src as usize;
+        let di = dst as usize;
+        let slow_s = self.node_slowdown[si];
+        let slow_r = self.node_slowdown[di];
+        let tcp = &self.cfg.tcp;
+
+        // --- sender NIC ---------------------------------------------------
+        let queued = at < self.tx_free[si];
+        if queued {
+            self.stream_run[si] += 1;
+        } else {
+            self.stream_run[si] = 0;
+        }
+        let streaming = self.stream_run[si] >= tcp.coalesce_after;
+        let mut tx_start = self.tx_free[si].max(at);
+
+        // Delayed-ACK stall: one in every n small messages on a flow, but
+        // only for *flow-idle* sends — a back-to-back segment train keeps
+        // the ACK clock running and cannot stall past its first messages
+        // (the paper's §4.1: the chain's extra delay "remains constant"
+        // regardless of the number of segments). Streaming sockets are
+        // likewise immune.
+        let small = tcp.small_msg_threshold > 0 && bytes <= tcp.small_msg_threshold;
+        let mut ack_stalled = false;
+        if small && !streaming && tcp.delayed_ack_every_n != u64::MAX {
+            let entry = self.flow_small.entry((src, dst)).or_insert((0, SimTime::ZERO));
+            let idle = entry.1 == SimTime::ZERO
+                || tx_start.saturating_sub(entry.1).as_secs() > tcp.ack_window;
+            if idle {
+                entry.0 += 1;
+                if entry.0 % tcp.delayed_ack_every_n == 0 {
+                    tx_start = tx_start + SimTime::from_secs(tcp.delayed_ack_penalty);
+                    ack_stalled = true;
+                    self.stats.ack_stalls += 1;
+                }
+            }
+        }
+
+        let overhead_factor = if streaming { tcp.coalesce_factor } else { 1.0 };
+        if streaming {
+            self.stats.coalesced_sends += 1;
+        }
+        let o_s = self.cfg.send_overhead * slow_s * overhead_factor;
+        let wire = match self.link_bandwidth.get(&(src, dst)) {
+            Some(&bps) => self.cfg.wire_time_at(bytes, bps),
+            None => self.cfg.wire_time(bytes),
+        };
+        let tx_done = tx_start + SimTime::from_secs(o_s + wire);
+        self.tx_free[si] = tx_done;
+        // any traffic (small or large) keeps the flow's ACK clock warm
+        self.flow_small.entry((src, dst)).or_insert((0, SimTime::ZERO)).1 = tx_done;
+
+        // --- switch transit + output-port contention ----------------------
+        let extra = self.extra_link_delay.get(&(src, dst)).copied().unwrap_or(0.0);
+        let half_prop = SimTime::from_secs(self.cfg.prop_delay / 2.0 + extra);
+        let arrival = tx_done + half_prop;
+        // The port is a capacity constraint: uncontended traffic passes
+        // through at `arrival`; contended messages space at wire speed.
+        let port_done = arrival.max(self.port_free[di] + SimTime::from_secs(wire));
+        self.port_free[di] = port_done;
+
+        // --- receiver ------------------------------------------------------
+        let o_r = SimTime::from_secs(self.cfg.recv_overhead * slow_r);
+        let rx_start = (port_done + SimTime::from_secs(self.cfg.prop_delay / 2.0))
+            .max(self.rx_free[di]);
+        let delivered = rx_start + o_r;
+        self.rx_free[di] = delivered;
+
+        self.stats.messages += 1;
+        self.stats.bytes += bytes;
+        self.stats.last_delivery = self.stats.last_delivery.max(delivered);
+
+        if let Some(t) = &mut self.trace {
+            t.record(TraceEvent {
+                msg,
+                src,
+                dst,
+                bytes,
+                tx_start,
+                delivered,
+                ack_stalled,
+                coalesced: streaming,
+            });
+        }
+
+        SendOutcome { msg, tx_start, tx_done, delivered, ack_stalled, coalesced: streaming }
+    }
+
+    /// One-way latency of an isolated `bytes`-sized message on an idle
+    /// network (does not mutate state). Useful as ground truth in tests.
+    pub fn isolated_latency(&self, bytes: u64) -> f64 {
+        self.cfg.send_overhead + self.cfg.wire_time(bytes) + self.cfg.prop_delay
+            + self.cfg.recv_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::config::TcpConfig;
+
+    fn ideal() -> Netsim {
+        Netsim::new(8, NetConfig::fast_ethernet_ideal())
+    }
+
+    #[test]
+    fn single_message_latency_decomposes() {
+        let mut s = ideal();
+        let out = s.send(SimTime::ZERO, 0, 1, 1024);
+        let want = s.isolated_latency(1024);
+        assert!((out.delivered.as_secs() - want).abs() < 1e-9,
+            "got {} want {want}", out.delivered.as_secs());
+    }
+
+    #[test]
+    fn back_to_back_sends_space_by_gap() {
+        let mut s = ideal();
+        let a = s.send(SimTime::ZERO, 0, 1, 4096);
+        let b = s.send(SimTime::ZERO, 0, 2, 4096);
+        let gap = s.config().gap(4096);
+        assert_eq!(a.tx_done, b.tx_start);
+        assert!((b.tx_done.as_secs() - a.tx_done.as_secs() - gap).abs() < 1e-9);
+    }
+
+    #[test]
+    fn receiver_port_serializes_concurrent_senders() {
+        let mut s = ideal();
+        // 0→2 and 1→2 simultaneously: second delivery spaced by wire time.
+        let a = s.send(SimTime::ZERO, 0, 2, 1 << 16);
+        let b = s.send(SimTime::ZERO, 1, 2, 1 << 16);
+        let wire = s.config().wire_time(1 << 16);
+        let dt = b.delivered.as_secs() - a.delivered.as_secs();
+        assert!(dt >= wire - 1e-9, "dt={dt} wire={wire}");
+    }
+
+    #[test]
+    fn opposite_directions_do_not_contend() {
+        let mut s = ideal();
+        let a = s.send(SimTime::ZERO, 0, 1, 1 << 16);
+        let b = s.send(SimTime::ZERO, 1, 0, 1 << 16);
+        // full duplex: both complete in isolated time
+        let want = s.isolated_latency(1 << 16);
+        assert!((a.delivered.as_secs() - want).abs() < 1e-9);
+        assert!((b.delivered.as_secs() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn self_send_is_free() {
+        let mut s = ideal();
+        let out = s.send(SimTime::from_secs(1.0), 3, 3, 1 << 20);
+        assert_eq!(out.delivered, SimTime::from_secs(1.0));
+        assert_eq!(s.stats().messages, 0);
+        assert_eq!(s.stats().local_copies, 1);
+    }
+
+    #[test]
+    fn delayed_ack_stalls_every_nth_small_message() {
+        let mut cfg = NetConfig::fast_ethernet_ideal();
+        cfg.tcp = TcpConfig {
+            small_msg_threshold: 1024,
+            delayed_ack_every_n: 3,
+            delayed_ack_penalty: 5e-3,
+            coalesce_after: u64::MAX,
+            coalesce_factor: 1.0,
+            ack_window: 0.0,
+        };
+        let mut s = Netsim::new(4, cfg);
+        let mut stalls = 0;
+        for i in 0..9 {
+            // idle gaps between sends so no queueing
+            let at = SimTime::from_secs(i as f64);
+            if s.send(at, 0, 1, 100).ack_stalled {
+                stalls += 1;
+            }
+        }
+        assert_eq!(stalls, 3);
+        assert_eq!(s.stats().ack_stalls, 3);
+    }
+
+    #[test]
+    fn large_messages_never_ack_stall() {
+        let mut cfg = NetConfig::fast_ethernet_ideal();
+        cfg.tcp = TcpConfig {
+            small_msg_threshold: 1024,
+            delayed_ack_every_n: 1,
+            delayed_ack_penalty: 5e-3,
+            coalesce_after: u64::MAX,
+            coalesce_factor: 1.0,
+            ack_window: 0.0,
+        };
+        let mut s = Netsim::new(4, cfg);
+        for i in 0..5 {
+            assert!(!s.send(SimTime::from_secs(i as f64), 0, 1, 4096).ack_stalled);
+        }
+    }
+
+    #[test]
+    fn streaming_coalesces_overhead() {
+        let mut cfg = NetConfig::fast_ethernet_ideal();
+        cfg.tcp = TcpConfig {
+            small_msg_threshold: 0,
+            delayed_ack_every_n: u64::MAX,
+            delayed_ack_penalty: 0.0,
+            coalesce_after: 2,
+            coalesce_factor: 0.5,
+            ack_window: 0.0,
+        };
+        let mut s = Netsim::new(4, cfg.clone());
+        // queue 6 back-to-back sends; from the 2nd queued one on, coalesced
+        let outs: Vec<_> = (0..6).map(|_| s.send(SimTime::ZERO, 0, 1, 1 << 14)).collect();
+        assert!(!outs[0].coalesced);
+        assert!(outs[5].coalesced);
+        // coalesced spacing is smaller than non-coalesced spacing
+        let d01 = outs[1].tx_done.saturating_sub(outs[0].tx_done);
+        let d45 = outs[5].tx_done.saturating_sub(outs[4].tx_done);
+        assert!(d45 < d01, "d01={d01:?} d45={d45:?}");
+        assert!(s.stats().coalesced_sends > 0);
+    }
+
+    #[test]
+    fn streaming_suppresses_ack_stalls() {
+        let mut cfg = NetConfig::fast_ethernet_ideal();
+        cfg.tcp = TcpConfig {
+            small_msg_threshold: 1 << 20,
+            delayed_ack_every_n: 2,
+            delayed_ack_penalty: 5e-3,
+            coalesce_after: 3,
+            coalesce_factor: 1.0,
+            ack_window: 0.0,
+        };
+        let mut s = Netsim::new(4, cfg);
+        // A long back-to-back train: stalls can only hit the first few
+        // messages, before streaming kicks in.
+        let outs: Vec<_> = (0..20).map(|_| s.send(SimTime::ZERO, 0, 1, 512)).collect();
+        let late_stalls = outs[5..].iter().filter(|o| o.ack_stalled).count();
+        assert_eq!(late_stalls, 0);
+    }
+
+    #[test]
+    fn link_delay_injection_slows_one_link_only() {
+        let mut s = ideal();
+        s.inject_link_delay(0, 1, 10e-3);
+        let slow = s.send(SimTime::ZERO, 0, 1, 1024);
+        let fast = s.send(SimTime::ZERO, 2, 3, 1024);
+        assert!(slow.delivered.as_secs() > fast.delivered.as_secs() + 9e-3);
+    }
+
+    #[test]
+    fn node_slowdown_scales_overheads() {
+        let mut a = ideal();
+        let mut b = ideal();
+        b.inject_node_slowdown(0, 4.0);
+        let fa = a.send(SimTime::ZERO, 0, 1, 1024);
+        let fb = b.send(SimTime::ZERO, 0, 1, 1024);
+        let extra = 3.0 * a.config().send_overhead;
+        assert!(
+            (fb.delivered.as_secs() - fa.delivered.as_secs() - extra).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn reset_clears_clocks_but_keeps_injections() {
+        let mut s = ideal();
+        s.inject_link_delay(0, 1, 5e-3);
+        s.send(SimTime::ZERO, 0, 1, 1024);
+        assert!(s.stats().messages > 0);
+        s.reset();
+        assert_eq!(s.stats().messages, 0);
+        let out = s.send(SimTime::ZERO, 0, 1, 1024);
+        assert!(out.delivered.as_secs() > 5e-3); // injection survived
+    }
+
+    #[test]
+    fn stats_count_messages_and_bytes() {
+        let mut s = ideal();
+        s.send(SimTime::ZERO, 0, 1, 100);
+        s.send(SimTime::ZERO, 1, 2, 200);
+        assert_eq!(s.stats().messages, 2);
+        assert_eq!(s.stats().bytes, 300);
+        assert!(s.stats().last_delivery > SimTime::ZERO);
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let mut s = ideal();
+        s.enable_trace(16);
+        s.send(SimTime::ZERO, 0, 1, 100);
+        s.send(SimTime::ZERO, 1, 2, 200);
+        let t = s.trace().unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.events()[0].src, 0);
+        assert_eq!(t.events()[1].bytes, 200);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_node_panics() {
+        let mut s = ideal();
+        s.send(SimTime::ZERO, 0, 99, 10);
+    }
+}

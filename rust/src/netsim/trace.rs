@@ -1,0 +1,147 @@
+//! Per-message trace recording (bounded ring buffer).
+
+use super::event::SimTime;
+use super::sim::{MsgId, NodeId};
+
+/// One recorded message transmission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub msg: MsgId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+    pub tx_start: SimTime,
+    pub delivered: SimTime,
+    pub ack_stalled: bool,
+    pub coalesced: bool,
+}
+
+/// Bounded ring buffer of trace events. When full, the oldest events are
+/// overwritten; `dropped()` reports how many were lost.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    buf: Vec<TraceEvent>,
+    capacity: usize,
+    start: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn new(capacity: usize) -> Trace {
+        assert!(capacity > 0);
+        Trace { buf: Vec::with_capacity(capacity), capacity, start: 0, dropped: 0 }
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.start] = ev;
+            self.start = (self.start + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in chronological (recording) order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.start..]);
+        out.extend_from_slice(&self.buf[..self.start]);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+        self.dropped = 0;
+    }
+
+    /// Render as a tab-separated log for offline inspection.
+    pub fn to_tsv(&self) -> String {
+        let mut s = String::from("msg\tsrc\tdst\tbytes\ttx_start_ns\tdelivered_ns\tack\tcoal\n");
+        for e in self.events() {
+            s.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                e.msg, e.src, e.dst, e.bytes, e.tx_start.0, e.delivered.0,
+                e.ack_stalled as u8, e.coalesced as u8
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(msg: MsgId) -> TraceEvent {
+        TraceEvent {
+            msg,
+            src: 0,
+            dst: 1,
+            bytes: 10,
+            tx_start: SimTime(msg * 100),
+            delivered: SimTime(msg * 100 + 50),
+            ack_stalled: false,
+            coalesced: false,
+        }
+    }
+
+    #[test]
+    fn records_in_order() {
+        let mut t = Trace::new(4);
+        for i in 0..3 {
+            t.record(ev(i));
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].msg, 0);
+        assert_eq!(evs[2].msg, 2);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut t = Trace::new(3);
+        for i in 0..5 {
+            t.record(ev(i));
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].msg, 2);
+        assert_eq!(evs[2].msg, 4);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = Trace::new(2);
+        t.record(ev(0));
+        t.record(ev(1));
+        t.record(ev(2));
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn tsv_has_header_and_rows() {
+        let mut t = Trace::new(4);
+        t.record(ev(7));
+        let tsv = t.to_tsv();
+        assert!(tsv.starts_with("msg\t"));
+        assert!(tsv.contains("\n7\t0\t1\t10\t"));
+    }
+}

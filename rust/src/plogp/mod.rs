@@ -1,0 +1,231 @@
+//! The parameterised LogP (pLogP) network model and its measurement.
+//!
+//! pLogP (Kielmann et al. [5,6]) describes a network by:
+//! * `L` — end-to-end latency of a message,
+//! * `g(m)` — the *gap* of an `m`-byte message: the minimum interval
+//!   between consecutive message injections at a node (the reciprocal of
+//!   achievable message rate), captured as a table of samples,
+//! * `P` — the number of processes.
+//!
+//! [`GapTable`] holds the sampled gap function with piecewise-linear
+//! interpolation (clamped below the table, linearly extrapolated above
+//! it — identical semantics to `ref.gap_interp` on the Python side).
+//! [`bench`] measures `L` and `g(m)` against the simulated cluster with
+//! the same procedure the MPI LogP Benchmark uses on real hardware.
+
+pub mod bench;
+
+/// Sampled gap function `g(m)` with piecewise-linear interpolation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GapTable {
+    sizes: Vec<f64>,
+    gaps: Vec<f64>,
+}
+
+impl GapTable {
+    /// Build from (size, gap) samples. Sizes must be strictly increasing
+    /// and there must be at least two samples.
+    pub fn new(sizes: Vec<f64>, gaps: Vec<f64>) -> GapTable {
+        assert_eq!(sizes.len(), gaps.len());
+        assert!(sizes.len() >= 2, "need at least two gap samples");
+        assert!(
+            sizes.windows(2).all(|w| w[0] < w[1]),
+            "gap-table sizes must be strictly increasing"
+        );
+        assert!(gaps.iter().all(|g| g.is_finite() && *g > 0.0));
+        GapTable { sizes, gaps }
+    }
+
+    /// The synthetic table implied by a [`crate::netsim::NetConfig`]'s
+    /// ground truth (for tests: what a perfect benchmark would measure).
+    pub fn from_config(cfg: &crate::netsim::NetConfig, points: &[u64]) -> GapTable {
+        let sizes: Vec<f64> = points.iter().map(|&m| m as f64).collect();
+        let gaps: Vec<f64> = points.iter().map(|&m| cfg.gap(m)).collect();
+        GapTable::new(sizes, gaps)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // constructor guarantees >= 2 samples
+    }
+
+    pub fn sizes(&self) -> &[f64] {
+        &self.sizes
+    }
+
+    pub fn gaps(&self) -> &[f64] {
+        &self.gaps
+    }
+
+    /// g(m): piecewise-linear; clamped below the first sample,
+    /// extrapolated beyond the last with the final segment's slope —
+    /// but never below the last sample (a noisy table must not
+    /// extrapolate the gap negative). Identical semantics to
+    /// `ref.gap_interp` / the Pallas kernel on the Python side.
+    pub fn gap(&self, m: f64) -> f64 {
+        let n = self.sizes.len();
+        // segment index: count of sizes <= m, minus one, clamped
+        let mut idx = match self
+            .sizes
+            .binary_search_by(|s| s.partial_cmp(&m).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        idx = idx.min(n - 2);
+        let (s0, s1) = (self.sizes[idx], self.sizes[idx + 1]);
+        let (g0, g1) = (self.gaps[idx], self.gaps[idx + 1]);
+        let t = ((m - s0) / (s1 - s0)).max(0.0);
+        let g = g0 + t * (g1 - g0);
+        if t > 1.0 {
+            g.max(g1)
+        } else {
+            g
+        }
+    }
+
+    /// g(1): the small-message gap used by the rendezvous models.
+    pub fn gap1(&self) -> f64 {
+        self.gap(1.0)
+    }
+}
+
+/// A full pLogP parameter set for one network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PLogP {
+    /// One-way latency `L` (seconds).
+    pub l: f64,
+    /// The gap function.
+    pub table: GapTable,
+}
+
+impl PLogP {
+    pub fn new(l: f64, table: GapTable) -> PLogP {
+        assert!(l > 0.0 && l.is_finite());
+        PLogP { l, table }
+    }
+
+    pub fn gap(&self, m: f64) -> f64 {
+        self.table.gap(m)
+    }
+
+    /// Render as a short report.
+    pub fn summary(&self) -> String {
+        format!(
+            "pLogP: L = {:.1} us, g(1) = {:.1} us, g(64k) = {:.1} us, {} samples",
+            self.l * 1e6,
+            self.table.gap1() * 1e6,
+            self.table.gap(65536.0) * 1e6,
+            self.table.len()
+        )
+    }
+}
+
+/// The default measurement grid: log-spaced from 1 byte to 4 MB,
+/// padded/truncated to exactly `n` points (the AOT artifact has a fixed
+/// table length).
+pub fn default_size_grid(n: usize) -> Vec<u64> {
+    assert!(n >= 2);
+    let lo = 1f64;
+    let hi = (4u64 << 20) as f64;
+    let mut out: Vec<u64> = (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            (lo * (hi / lo).powf(t)).round() as u64
+        })
+        .collect();
+    out.dedup();
+    // de-duplication at the small end can shrink the list; re-spread the
+    // tail to keep exactly n strictly-increasing entries
+    let mut next = out.last().copied().unwrap_or(1) + 1;
+    while out.len() < n {
+        out.push(next);
+        next += 1;
+    }
+    out.sort_unstable();
+    out.dedup();
+    while out.len() < n {
+        let last = *out.last().unwrap();
+        out.push(last * 2);
+    }
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NetConfig;
+
+    #[test]
+    fn interp_exact_at_samples() {
+        let t = GapTable::new(vec![1.0, 10.0, 100.0], vec![5e-6, 6e-6, 9e-6]);
+        assert!((t.gap(1.0) - 5e-6).abs() < 1e-18);
+        assert!((t.gap(10.0) - 6e-6).abs() < 1e-18);
+        assert!((t.gap(100.0) - 9e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn interp_midpoint() {
+        let t = GapTable::new(vec![0.0, 10.0], vec![1.0, 2.0]);
+        assert!((t.gap(5.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp_below_extrapolate_above() {
+        let t = GapTable::new(vec![10.0, 20.0], vec![7.0, 9.0]);
+        assert_eq!(t.gap(1.0), 7.0);
+        assert!((t.gap(30.0) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_python_ref_semantics() {
+        // identical cases to python/tests TestGapInterp
+        let t = GapTable::new(vec![1.0, 10.0, 100.0, 1000.0], vec![5.0, 6.0, 9.0, 20.0]);
+        for (m, want) in [(1.0, 5.0), (10.0, 6.0), (100.0, 9.0), (1000.0, 20.0)] {
+            assert!((t.gap(m) - want).abs() < 1e-9, "g({m})");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_monotone_sizes_rejected() {
+        GapTable::new(vec![10.0, 5.0], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn single_sample_rejected() {
+        GapTable::new(vec![10.0], vec![1.0]);
+    }
+
+    #[test]
+    fn from_config_matches_ground_truth() {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let t = GapTable::from_config(&cfg, &[1, 1024, 65536]);
+        assert!((t.gap(1024.0) - cfg.gap(1024)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_grid_properties() {
+        for n in [8usize, 16, 32, 48] {
+            let g = default_size_grid(n);
+            assert_eq!(g.len(), n);
+            assert!(g.windows(2).all(|w| w[0] < w[1]), "{g:?}");
+            assert_eq!(g[0], 1);
+            assert!(*g.last().unwrap() >= 4 << 20);
+        }
+    }
+
+    #[test]
+    fn plogp_summary_mentions_l() {
+        let p = PLogP::new(
+            60e-6,
+            GapTable::new(vec![1.0, 100.0], vec![5e-5, 6e-5]),
+        );
+        assert!(p.summary().contains("L = 60.0 us"));
+    }
+}

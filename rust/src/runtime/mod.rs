@@ -1,0 +1,397 @@
+//! PJRT runtime: load and execute the AOT-compiled tuner artifact.
+//!
+//! `python/compile/aot.py` lowers the L2 tuner graph once to HLO *text*
+//! (`artifacts/tuner.hlo.txt`) plus a JSON metadata sidecar with the
+//! baked tensor shapes. This module loads the text through
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client
+//! (once), and exposes a typed `execute` for the L3 tuner. Python never
+//! runs here — the binary is self-contained after `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+/// Shapes and layout of the compiled artifact (from `tuner.meta.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub table_len: usize,
+    pub p_grid_len: usize,
+    pub m_grid_len: usize,
+    pub s_grid_len: usize,
+    pub num_strategies: usize,
+    pub num_bcast: usize,
+    pub strategy_names: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let v = json::parse(text).context("parsing tuner.meta.json")?;
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("meta field {k}"))
+        };
+        let names = v
+            .get("strategy_names")
+            .and_then(|x| x.as_arr())
+            .context("meta field strategy_names")?
+            .iter()
+            .map(|x| x.as_str().unwrap_or("?").to_string())
+            .collect();
+        Ok(ArtifactMeta {
+            table_len: field("table_len")?,
+            p_grid_len: field("p_grid_len")?,
+            m_grid_len: field("m_grid_len")?,
+            s_grid_len: field("s_grid_len")?,
+            num_strategies: field("num_strategies")?,
+            num_bcast: field("num_bcast")?,
+            strategy_names: names,
+        })
+    }
+}
+
+/// Output tensors of one tuner execution (row-major).
+#[derive(Debug, Clone)]
+pub struct TunerOutput {
+    /// `[num_strategies, Q, M]` predicted times (seconds).
+    pub times: Vec<f32>,
+    /// `[num_strategies, Q, M]` chosen segment sizes (0 = unsegmented).
+    pub segs: Vec<f32>,
+    /// `[Q, M]` best broadcast strategy index.
+    pub bcast_winner: Vec<f32>,
+    /// `[Q, M]` best scatter strategy index (10..12).
+    pub scatter_winner: Vec<f32>,
+    pub num_strategies: usize,
+    pub q: usize,
+    pub m: usize,
+}
+
+impl TunerOutput {
+    pub fn time(&self, strategy: usize, qi: usize, mi: usize) -> f32 {
+        self.times[(strategy * self.q + qi) * self.m + mi]
+    }
+
+    pub fn seg(&self, strategy: usize, qi: usize, mi: usize) -> f32 {
+        self.segs[(strategy * self.q + qi) * self.m + mi]
+    }
+
+    pub fn bcast_win(&self, qi: usize, mi: usize) -> usize {
+        self.bcast_winner[qi * self.m + mi] as usize
+    }
+
+    pub fn scatter_win(&self, qi: usize, mi: usize) -> usize {
+        self.scatter_winner[qi * self.m + mi] as usize
+    }
+}
+
+/// The loaded, compiled tuner executable.
+pub struct TunerArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl TunerArtifact {
+    /// Default artifact directory (`artifacts/` next to the manifest, or
+    /// `$ARTIFACTS_DIR`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    /// Load `tuner.hlo.txt` + `tuner.meta.json` from a directory and
+    /// compile on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<TunerArtifact> {
+        let hlo = dir.join("tuner.hlo.txt");
+        let meta_path = dir.join("tuner.meta.json");
+        if !hlo.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                hlo.display()
+            );
+        }
+        let meta = ArtifactMeta::parse(
+            &std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {}", meta_path.display()))?,
+        )?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .with_context(|| format!("parsing HLO text {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling tuner HLO")?;
+        Ok(TunerArtifact { exe, meta })
+    }
+
+    /// Execute the tuner. Inputs must match the artifact's baked shapes
+    /// exactly (pad with [`pad_f32`] if needed).
+    pub fn execute(
+        &self,
+        sizes: &[f32],
+        gaps: &[f32],
+        l: f32,
+        p_grid: &[f32],
+        m_grid: &[f32],
+        s_grid: &[f32],
+    ) -> Result<TunerOutput> {
+        let m = &self.meta;
+        let check = |name: &str, got: usize, want: usize| -> Result<()> {
+            if got != want {
+                bail!("{name}: length {got} != artifact shape {want}");
+            }
+            Ok(())
+        };
+        check("sizes", sizes.len(), m.table_len)?;
+        check("gaps", gaps.len(), m.table_len)?;
+        check("p_grid", p_grid.len(), m.p_grid_len)?;
+        check("m_grid", m_grid.len(), m.m_grid_len)?;
+        check("s_grid", s_grid.len(), m.s_grid_len)?;
+
+        let lit = |v: &[f32]| xla::Literal::vec1(v);
+        let args = [
+            lit(sizes),
+            lit(gaps),
+            lit(&[l]),
+            lit(p_grid),
+            lit(m_grid),
+            lit(s_grid),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        // lowered with return_tuple=True: a 4-tuple of f32 arrays
+        let parts = result.to_tuple()?;
+        if parts.len() != 4 {
+            bail!("artifact returned {} outputs, expected 4", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let times = it.next().unwrap().to_vec::<f32>()?;
+        let segs = it.next().unwrap().to_vec::<f32>()?;
+        let bcast_winner = it.next().unwrap().to_vec::<f32>()?;
+        let scatter_winner = it.next().unwrap().to_vec::<f32>()?;
+        let want = m.num_strategies * m.p_grid_len * m.m_grid_len;
+        if times.len() != want {
+            bail!("times tensor has {} elements, expected {want}", times.len());
+        }
+        Ok(TunerOutput {
+            times,
+            segs,
+            bcast_winner,
+            scatter_winner,
+            num_strategies: m.num_strategies,
+            q: m.p_grid_len,
+            m: m.m_grid_len,
+        })
+    }
+}
+
+/// Metadata of the extended-collectives artifact (`tuner_ext.meta.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExtMeta {
+    pub table_len: usize,
+    pub p_grid_len: usize,
+    pub m_grid_len: usize,
+    pub num_strategies: usize,
+    pub strategy_names: Vec<String>,
+}
+
+/// Output of the extended tuner: times `[10, Q, M]` + per-family winner
+/// rows `[4, Q, M]` (gather, barrier, allgather, allreduce).
+#[derive(Debug, Clone)]
+pub struct ExtOutput {
+    pub times: Vec<f32>,
+    pub winners: Vec<f32>,
+    pub num_strategies: usize,
+    pub q: usize,
+    pub m: usize,
+}
+
+impl ExtOutput {
+    pub fn time(&self, strategy: usize, qi: usize, mi: usize) -> f32 {
+        self.times[(strategy * self.q + qi) * self.m + mi]
+    }
+
+    /// family: 0 gather, 1 barrier, 2 allgather, 3 allreduce.
+    pub fn winner(&self, family: usize, qi: usize, mi: usize) -> usize {
+        self.winners[(family * self.q + qi) * self.m + mi] as usize
+    }
+}
+
+/// The loaded, compiled extended-collectives tuner.
+pub struct ExtArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ExtMeta,
+}
+
+impl ExtArtifact {
+    /// Load `tuner_ext.hlo.txt` + `tuner_ext.meta.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<ExtArtifact> {
+        let hlo = dir.join("tuner_ext.hlo.txt");
+        if !hlo.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                hlo.display()
+            );
+        }
+        let meta_text = std::fs::read_to_string(dir.join("tuner_ext.meta.json"))?;
+        let v = json::parse(&meta_text).context("parsing tuner_ext.meta.json")?;
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("ext meta field {k}"))
+        };
+        let meta = ExtMeta {
+            table_len: field("table_len")?,
+            p_grid_len: field("p_grid_len")?,
+            m_grid_len: field("m_grid_len")?,
+            num_strategies: field("num_strategies")?,
+            strategy_names: v
+                .get("strategy_names")
+                .and_then(|x| x.as_arr())
+                .context("ext strategy_names")?
+                .iter()
+                .map(|x| x.as_str().unwrap_or("?").to_string())
+                .collect(),
+        };
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling ext tuner HLO")?;
+        Ok(ExtArtifact { exe, meta })
+    }
+
+    /// Execute; inputs must match the artifact's baked shapes.
+    pub fn execute(
+        &self,
+        sizes: &[f32],
+        gaps: &[f32],
+        l: f32,
+        p_grid: &[f32],
+        m_grid: &[f32],
+    ) -> Result<ExtOutput> {
+        let m = &self.meta;
+        if sizes.len() != m.table_len
+            || gaps.len() != m.table_len
+            || p_grid.len() != m.p_grid_len
+            || m_grid.len() != m.m_grid_len
+        {
+            bail!("ext artifact input shapes mismatch");
+        }
+        let lit = |v: &[f32]| xla::Literal::vec1(v);
+        let args = [lit(sizes), lit(gaps), lit(&[l]), lit(p_grid), lit(m_grid)];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (times_l, winners_l) = result.to_tuple2()?;
+        let times = times_l.to_vec::<f32>()?;
+        let winners = winners_l.to_vec::<f32>()?;
+        if times.len() != m.num_strategies * m.p_grid_len * m.m_grid_len {
+            bail!("ext times tensor has wrong size {}", times.len());
+        }
+        Ok(ExtOutput {
+            times,
+            winners,
+            num_strategies: m.num_strategies,
+            q: m.p_grid_len,
+            m: m.m_grid_len,
+        })
+    }
+}
+
+/// Pad or truncate a vector to exactly `n` entries, repeating the last
+/// value (monotone tails keep interpolation harmless).
+pub fn pad_f32(mut v: Vec<f32>, n: usize) -> Vec<f32> {
+    assert!(!v.is_empty());
+    while v.len() < n {
+        v.push(*v.last().unwrap());
+    }
+    v.truncate(n);
+    v
+}
+
+/// Pad a strictly-increasing grid to exactly `n` entries by continuing
+/// the last step, preserving strict monotonicity.
+pub fn pad_grid_f32(mut v: Vec<f32>, n: usize) -> Vec<f32> {
+    assert!(v.len() >= 2 || n <= v.len());
+    while v.len() < n {
+        let last = v[v.len() - 1];
+        let step = (last - v[v.len() - 2]).max(1.0);
+        v.push(last + step);
+    }
+    v.truncate(n);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+        "table_len": 32, "p_grid_len": 16, "m_grid_len": 48,
+        "s_grid_len": 32, "num_strategies": 13, "num_bcast": 10,
+        "num_scatter": 3, "jmax": 64, "binomial_terms": 10,
+        "strategy_names": ["bcast/flat","bcast/flat_rdv","bcast/seg_flat",
+            "bcast/chain","bcast/chain_rdv","bcast/seg_chain","bcast/binary",
+            "bcast/binomial","bcast/binomial_rdv","bcast/seg_binomial",
+            "scatter/flat","scatter/chain","scatter/binomial"],
+        "outputs": ["times[13,Q,M]"]
+    }"#;
+
+    #[test]
+    fn meta_parses() {
+        let m = ArtifactMeta::parse(META).unwrap();
+        assert_eq!(m.table_len, 32);
+        assert_eq!(m.num_strategies, 13);
+        assert_eq!(m.strategy_names.len(), 13);
+        assert_eq!(m.strategy_names[5], "bcast/seg_chain");
+    }
+
+    #[test]
+    fn meta_rejects_missing_fields() {
+        assert!(ArtifactMeta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn output_indexing() {
+        let q = 2;
+        let m = 3;
+        let ns = 13;
+        let mut times = vec![0f32; ns * q * m];
+        times[(5 * q + 1) * m + 2] = 42.0;
+        let out = TunerOutput {
+            times,
+            segs: vec![0.0; ns * q * m],
+            bcast_winner: vec![7.0; q * m],
+            scatter_winner: vec![12.0; q * m],
+            num_strategies: ns,
+            q,
+            m,
+        };
+        assert_eq!(out.time(5, 1, 2), 42.0);
+        assert_eq!(out.bcast_win(0, 0), 7);
+        assert_eq!(out.scatter_win(1, 2), 12);
+    }
+
+    #[test]
+    fn pad_repeats_last() {
+        assert_eq!(pad_f32(vec![1.0, 2.0], 4), vec![1.0, 2.0, 2.0, 2.0]);
+        assert_eq!(pad_f32(vec![1.0, 2.0, 3.0], 2), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn pad_grid_stays_strictly_increasing() {
+        let v = pad_grid_f32(vec![1.0, 3.0], 5);
+        assert_eq!(v.len(), 5);
+        assert!(v.windows(2).all(|w| w[0] < w[1]), "{v:?}");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let err = match TunerArtifact::load(Path::new("/nonexistent")) {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing artifact succeeded"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

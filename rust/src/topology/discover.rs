@@ -1,0 +1,207 @@
+//! Automatic topology discovery — the paper's §5 future work: "our
+//! research will also include the automatic discovery of the network
+//! topology".
+//!
+//! Procedure (the standard latency-clustering approach, cf. Lowekamp's
+//! thesis, the paper's ref [11]): probe pairwise one-way latencies with
+//! 1-byte messages, then group nodes whose mutual latency is within a
+//! multiplicative factor of the global minimum — intra-cluster links on
+//! a LAN are an order of magnitude faster than WAN links, so a single
+//! threshold separates the islands.
+
+use crate::netsim::{Netsim, NodeId, SimTime};
+
+/// A discovered partition of the nodes into islands of fast mutual
+/// connectivity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Discovery {
+    /// `cluster[i]` = island index of node `i`.
+    pub cluster: Vec<usize>,
+    /// Number of islands found.
+    pub num_clusters: usize,
+}
+
+impl Discovery {
+    /// Node ids of island `c`.
+    pub fn members(&self, c: usize) -> Vec<NodeId> {
+        self.cluster
+            .iter()
+            .enumerate()
+            .filter(|(_, &ci)| ci == c)
+            .map(|(i, _)| i as NodeId)
+            .collect()
+    }
+
+    /// The first node of each island (the natural coordinator choice).
+    pub fn roots(&self) -> Vec<NodeId> {
+        (0..self.num_clusters)
+            .map(|c| self.members(c)[0])
+            .collect()
+    }
+}
+
+/// Probe the full pairwise latency matrix (seconds) with 1-byte messages
+/// on an otherwise idle network.
+pub fn probe_latency_matrix(sim: &mut Netsim) -> Vec<Vec<f64>> {
+    let n = sim.num_nodes();
+    let mut matrix = vec![vec![0.0; n]; n];
+    let mut t = 0.0f64;
+    for a in 0..n as NodeId {
+        for b in 0..n as NodeId {
+            if a == b {
+                continue;
+            }
+            // space probes out so they never queue behind each other
+            t += 1.0;
+            let out = sim.send(SimTime::from_secs(t), a, b, 1);
+            matrix[a as usize][b as usize] =
+                out.delivered.saturating_sub(out.tx_start).as_secs();
+        }
+    }
+    sim.reset();
+    matrix
+}
+
+/// Cluster nodes by latency: links faster than `threshold_factor` × the
+/// global minimum latency are "intra-cluster"; islands are the connected
+/// components of the fast-link graph.
+pub fn discover(sim: &mut Netsim, threshold_factor: f64) -> Discovery {
+    assert!(threshold_factor >= 1.0);
+    let matrix = probe_latency_matrix(sim);
+    let n = matrix.len();
+    if n == 1 {
+        return Discovery { cluster: vec![0], num_clusters: 1 };
+    }
+    let min = matrix
+        .iter()
+        .flat_map(|row| row.iter().copied())
+        .filter(|&x| x > 0.0)
+        .fold(f64::MAX, f64::min);
+    let threshold = min * threshold_factor;
+
+    // union-find over fast links
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+        if parent[x] != x {
+            let root = find(parent, parent[x]);
+            parent[x] = root;
+        }
+        parent[x]
+    }
+    for a in 0..n {
+        for b in (a + 1)..n {
+            if matrix[a][b] <= threshold && matrix[b][a] <= threshold {
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra != rb {
+                    parent[ra.max(rb)] = ra.min(rb);
+                }
+            }
+        }
+    }
+    // compact island labels in first-seen order
+    let mut label = std::collections::BTreeMap::new();
+    let mut cluster = vec![0usize; n];
+    for i in 0..n {
+        let root = find(&mut parent, i);
+        let next = label.len();
+        let c = *label.entry(root).or_insert(next);
+        cluster[i] = c;
+    }
+    Discovery { num_clusters: label.len(), cluster }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NetConfig;
+    use crate::topology::{ClusterSpec, GridSpec};
+
+    fn grid(sizes: &[usize]) -> GridSpec {
+        GridSpec::new(
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    ClusterSpec::new(format!("c{i}"), n, NetConfig::fast_ethernet_ideal())
+                })
+                .collect(),
+            NetConfig::wan_link(),
+        )
+    }
+
+    #[test]
+    fn single_cluster_is_one_island() {
+        let mut sim = Netsim::new(8, NetConfig::fast_ethernet_ideal());
+        let d = discover(&mut sim, 3.0);
+        assert_eq!(d.num_clusters, 1);
+        assert!(d.cluster.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn two_planted_clusters_recovered() {
+        let g = grid(&[5, 4]);
+        let mut sim = g.build_sim();
+        let d = discover(&mut sim, 3.0);
+        assert_eq!(d.num_clusters, 2);
+        for node in 0..9u32 {
+            assert_eq!(
+                d.cluster[node as usize],
+                g.cluster_of(node),
+                "node {node}"
+            );
+        }
+        assert_eq!(d.roots(), vec![0, 5]);
+    }
+
+    #[test]
+    fn three_planted_clusters_recovered() {
+        let g = grid(&[3, 4, 2]);
+        let mut sim = g.build_sim();
+        let d = discover(&mut sim, 3.0);
+        assert_eq!(d.num_clusters, 3);
+        assert_eq!(d.members(0).len(), 3);
+        assert_eq!(d.members(1).len(), 4);
+        assert_eq!(d.members(2).len(), 2);
+    }
+
+    #[test]
+    fn latency_matrix_is_symmetric_on_homogeneous_grid() {
+        let g = grid(&[3, 3]);
+        let mut sim = g.build_sim();
+        let m = probe_latency_matrix(&mut sim);
+        for a in 0..6 {
+            for b in 0..6 {
+                if a != b {
+                    assert!((m[a][b] - m[b][a]).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn discovery_then_multilevel_bcast_composes() {
+        use crate::collectives::{multilevel, Strategy};
+        use crate::mpi::World;
+        // discover the islands, rebuild a GridSpec-shaped plan, run a
+        // two-level broadcast with per-island binomial
+        let g = grid(&[4, 4]);
+        let mut sim = g.build_sim();
+        let d = discover(&mut sim, 3.0);
+        assert_eq!(d.num_clusters, 2);
+        let sched = multilevel::bcast(
+            &g,
+            8192,
+            &vec![(Strategy::BcastBinomial, None); d.num_clusters],
+        );
+        let mut world = World::new(g.build_sim());
+        let rep = world.run(&sched);
+        assert!(rep.verify(&sched).is_empty());
+    }
+
+    #[test]
+    fn single_node_world() {
+        let mut sim = Netsim::new(1, NetConfig::fast_ethernet_ideal());
+        let d = discover(&mut sim, 2.0);
+        assert_eq!(d.num_clusters, 1);
+    }
+}

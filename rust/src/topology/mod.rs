@@ -1,0 +1,173 @@
+//! Cluster and grid topology descriptions.
+//!
+//! The paper's motivation (§1) is the "islands of homogeneous clusters"
+//! view of a grid: optimise inter-cluster communication with topology-
+//! aware trees, and *intra*-cluster communication with the tuned static
+//! strategies this crate implements. [`GridSpec`] describes such a grid;
+//! [`GridSpec::build_sim`] realizes it as one flat [`Netsim`] with WAN
+//! bandwidth/latency overrides on every cross-cluster link.
+//! [`discover`] recovers the islands automatically from latency probes
+//! (the paper's §5 future work).
+
+pub mod discover;
+
+use crate::netsim::{NetConfig, Netsim, NodeId};
+
+/// One homogeneous cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Number of nodes.
+    pub nodes: usize,
+    /// Intra-cluster network parameters.
+    pub net: NetConfig,
+    /// Human-readable name for reports.
+    pub name: String,
+}
+
+impl ClusterSpec {
+    pub fn new(name: impl Into<String>, nodes: usize, net: NetConfig) -> ClusterSpec {
+        assert!(nodes >= 1);
+        ClusterSpec { nodes, net, name: name.into() }
+    }
+
+    /// The paper's testbed: 50 nodes of switched Fast Ethernet.
+    pub fn icluster1() -> ClusterSpec {
+        ClusterSpec::new("icluster-1", 50, NetConfig::fast_ethernet_icluster1())
+    }
+
+    pub fn build_sim(&self) -> Netsim {
+        Netsim::new(self.nodes, self.net.clone())
+    }
+}
+
+/// A grid of clusters joined by a WAN.
+///
+/// The flat-simulator realization uses the *first* cluster's `NetConfig`
+/// as the base (all clusters in the paper's scenarios share a technology
+/// class) and overrides every cross-cluster link with the WAN bandwidth
+/// and latency. Node ids are assigned cluster-by-cluster, in order.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub clusters: Vec<ClusterSpec>,
+    /// WAN parameters between clusters (bandwidth bytes/s + one-way
+    /// latency seconds are taken from this config).
+    pub wan: NetConfig,
+}
+
+impl GridSpec {
+    pub fn new(clusters: Vec<ClusterSpec>, wan: NetConfig) -> GridSpec {
+        assert!(!clusters.is_empty());
+        GridSpec { clusters, wan }
+    }
+
+    /// Total node count.
+    pub fn total_nodes(&self) -> usize {
+        self.clusters.iter().map(|c| c.nodes).sum()
+    }
+
+    /// Global node-id range `[lo, hi)` of cluster `i`.
+    pub fn cluster_range(&self, i: usize) -> (NodeId, NodeId) {
+        let lo: usize = self.clusters[..i].iter().map(|c| c.nodes).sum();
+        (lo as NodeId, (lo + self.clusters[i].nodes) as NodeId)
+    }
+
+    /// Which cluster a global node id belongs to.
+    pub fn cluster_of(&self, node: NodeId) -> usize {
+        let mut acc = 0usize;
+        for (i, c) in self.clusters.iter().enumerate() {
+            acc += c.nodes;
+            if (node as usize) < acc {
+                return i;
+            }
+        }
+        panic!("node {node} out of range");
+    }
+
+    /// The designated coordinator (root) node of cluster `i`: its first
+    /// node.
+    pub fn cluster_root(&self, i: usize) -> NodeId {
+        self.cluster_range(i).0
+    }
+
+    /// Realize the grid as one flat simulator with WAN overrides on
+    /// cross-cluster links.
+    pub fn build_sim(&self) -> Netsim {
+        let n = self.total_nodes();
+        let mut sim = Netsim::new(n, self.clusters[0].net.clone());
+        let extra_delay =
+            (self.wan.prop_delay - self.clusters[0].net.prop_delay).max(0.0);
+        for a in 0..n as NodeId {
+            for b in 0..n as NodeId {
+                if a != b && self.cluster_of(a) != self.cluster_of(b) {
+                    sim.set_link_bandwidth(a, b, self.wan.bandwidth_bps);
+                    sim.inject_link_delay(a, b, extra_delay);
+                }
+            }
+        }
+        sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::SimTime;
+
+    fn two_cluster_grid() -> GridSpec {
+        GridSpec::new(
+            vec![
+                ClusterSpec::new("a", 4, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("b", 3, NetConfig::fast_ethernet_ideal()),
+            ],
+            NetConfig::wan_link(),
+        )
+    }
+
+    #[test]
+    fn ranges_partition_nodes() {
+        let g = two_cluster_grid();
+        assert_eq!(g.total_nodes(), 7);
+        assert_eq!(g.cluster_range(0), (0, 4));
+        assert_eq!(g.cluster_range(1), (4, 7));
+        for n in 0..4 {
+            assert_eq!(g.cluster_of(n), 0);
+        }
+        for n in 4..7 {
+            assert_eq!(g.cluster_of(n), 1);
+        }
+    }
+
+    #[test]
+    fn cluster_roots_are_first_nodes() {
+        let g = two_cluster_grid();
+        assert_eq!(g.cluster_root(0), 0);
+        assert_eq!(g.cluster_root(1), 4);
+    }
+
+    #[test]
+    fn wan_links_are_slower() {
+        let g = two_cluster_grid();
+        let mut sim = g.build_sim();
+        let intra = sim.send(SimTime::ZERO, 0, 1, 1 << 16).delivered;
+        let inter = sim.send(SimTime::ZERO, 1, 4, 1 << 16).delivered;
+        assert!(
+            inter.as_secs() > 2.0 * intra.as_secs(),
+            "inter={} intra={}",
+            inter.as_secs(),
+            intra.as_secs()
+        );
+    }
+
+    #[test]
+    fn icluster1_preset_is_paper_sized() {
+        let c = ClusterSpec::icluster1();
+        assert_eq!(c.nodes, 50);
+        assert_eq!(c.build_sim().num_nodes(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cluster_of_out_of_range_panics() {
+        two_cluster_grid().cluster_of(99);
+    }
+}

@@ -1,0 +1,160 @@
+//! Decision tables: the tuner's product.
+//!
+//! A [`DecisionTable`] maps grid points `(P, m)` to the winning strategy,
+//! its tuned segment size, and the predicted completion time. Lookups off
+//! the grid snap to the nearest grid point (log-distance for `m`), which
+//! is how the collective runtime consults the table at call time without
+//! re-tuning.
+
+use crate::collectives::Strategy;
+
+/// Which operation family a table covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Bcast,
+    Scatter,
+}
+
+impl Op {
+    pub fn family(self) -> &'static [Strategy] {
+        match self {
+            Op::Bcast => &Strategy::BCAST,
+            Op::Scatter => &Strategy::SCATTER,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Bcast => "bcast",
+            Op::Scatter => "scatter",
+        }
+    }
+}
+
+/// One tuned choice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub strategy: Strategy,
+    /// Tuned segment size (None for unsegmented strategies).
+    pub segment: Option<u64>,
+    /// Model-predicted completion time (seconds).
+    pub predicted: f64,
+}
+
+/// The tuner's output for one operation family on one network.
+#[derive(Debug, Clone)]
+pub struct DecisionTable {
+    pub op: Op,
+    pub p_grid: Vec<usize>,
+    pub m_grid: Vec<u64>,
+    /// Row-major `[p_grid.len() × m_grid.len()]`.
+    pub entries: Vec<Decision>,
+}
+
+impl DecisionTable {
+    pub fn new(op: Op, p_grid: Vec<usize>, m_grid: Vec<u64>, entries: Vec<Decision>) -> Self {
+        assert_eq!(entries.len(), p_grid.len() * m_grid.len());
+        assert!(p_grid.windows(2).all(|w| w[0] < w[1]));
+        assert!(m_grid.windows(2).all(|w| w[0] < w[1]));
+        DecisionTable { op, p_grid, m_grid, entries }
+    }
+
+    pub fn at(&self, qi: usize, mi: usize) -> &Decision {
+        &self.entries[qi * self.m_grid.len() + mi]
+    }
+
+    fn nearest_p(&self, p: usize) -> usize {
+        self.p_grid
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &g)| g.abs_diff(p))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    fn nearest_m(&self, m: u64) -> usize {
+        // nearest in log space: minimize |ln(m) - ln(grid)|
+        let lm = (m.max(1)) as f64;
+        self.m_grid
+            .iter()
+            .enumerate()
+            .min_by(|(_, &a), (_, &b)| {
+                let da = ((a as f64) / lm).ln().abs();
+                let db = ((b as f64) / lm).ln().abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Snap-to-nearest lookup.
+    pub fn lookup(&self, p: usize, m: u64) -> &Decision {
+        self.at(self.nearest_p(p), self.nearest_m(m))
+    }
+
+    /// Fraction of grid points won by each strategy (diagnostics).
+    pub fn share(&self) -> Vec<(Strategy, f64)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for d in &self.entries {
+            *counts.entry(d.strategy).or_insert(0usize) += 1;
+        }
+        let n = self.entries.len() as f64;
+        counts.into_iter().map(|(s, c)| (s, c as f64 / n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> DecisionTable {
+        let p_grid = vec![2usize, 8, 32];
+        let m_grid = vec![1u64, 1024, 1 << 20];
+        let mut entries = Vec::new();
+        for (qi, _) in p_grid.iter().enumerate() {
+            for (mi, _) in m_grid.iter().enumerate() {
+                let strategy = if mi == 2 {
+                    Strategy::BcastSegChain
+                } else {
+                    Strategy::BcastBinomial
+                };
+                entries.push(Decision {
+                    strategy,
+                    segment: if mi == 2 { Some(8192) } else { None },
+                    predicted: (qi * 3 + mi) as f64,
+                });
+            }
+        }
+        DecisionTable::new(Op::Bcast, p_grid, m_grid, entries)
+    }
+
+    #[test]
+    fn exact_lookup() {
+        let t = table();
+        assert_eq!(t.lookup(8, 1024).strategy, Strategy::BcastBinomial);
+        assert_eq!(t.lookup(8, 1 << 20).strategy, Strategy::BcastSegChain);
+        assert_eq!(t.lookup(8, 1 << 20).segment, Some(8192));
+    }
+
+    #[test]
+    fn nearest_lookup_snaps() {
+        let t = table();
+        // p=9 -> 8; m=2000 is nearer 1024 than 1M in log space
+        assert_eq!(t.lookup(9, 2000).strategy, Strategy::BcastBinomial);
+        // m = 600k -> 1M
+        assert_eq!(t.lookup(30, 600_000).strategy, Strategy::BcastSegChain);
+    }
+
+    #[test]
+    fn share_sums_to_one() {
+        let t = table();
+        let total: f64 = t.share().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_entry_count_panics() {
+        DecisionTable::new(Op::Bcast, vec![2], vec![1, 2], vec![]);
+    }
+}

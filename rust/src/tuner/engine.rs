@@ -1,0 +1,248 @@
+//! The tuning engine: evaluate all models over the grid, take the argmin.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::collectives::Strategy;
+use crate::models;
+use crate::plogp::PLogP;
+use crate::runtime::{pad_grid_f32, TunerArtifact};
+
+use super::decision::{Decision, DecisionTable, Op};
+use super::grids;
+
+/// Which evaluator produces the decision tensor.
+pub enum Backend {
+    /// One PJRT execution of the AOT-compiled kernel — the fast path.
+    Artifact(Box<TunerArtifact>),
+    /// The Rust model mirror — fallback and cross-check.
+    Native,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Artifact(_) => "artifact",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// The tuner: a backend plus a segment-size search grid.
+pub struct Tuner {
+    pub backend: Backend,
+    pub s_grid: Vec<u64>,
+}
+
+impl Tuner {
+    /// Native (pure Rust) tuner.
+    pub fn native() -> Tuner {
+        Tuner { backend: Backend::Native, s_grid: grids::default_s_grid() }
+    }
+
+    /// Load the AOT artifact from `dir`.
+    pub fn with_artifact(dir: &Path) -> Result<Tuner> {
+        let art = TunerArtifact::load(dir)?;
+        Ok(Tuner { backend: Backend::Artifact(Box::new(art)), s_grid: grids::default_s_grid() })
+    }
+
+    /// Prefer the artifact; fall back to native (logging the reason).
+    pub fn auto(dir: &Path) -> Tuner {
+        match Self::with_artifact(dir) {
+            Ok(t) => t,
+            Err(e) => {
+                log::warn!("tuner artifact unavailable ({e:#}); using native models");
+                Tuner::native()
+            }
+        }
+    }
+
+    /// Tune both operations over the given grids. Returns the broadcast
+    /// and scatter decision tables.
+    pub fn tune(
+        &self,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<(DecisionTable, DecisionTable)> {
+        match &self.backend {
+            Backend::Native => Ok(self.tune_native(net, p_grid, m_grid)),
+            Backend::Artifact(art) => self.tune_artifact(art, net, p_grid, m_grid),
+        }
+    }
+
+    fn decide(
+        &self,
+        op: Op,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+        pick: impl Fn(usize, u64) -> Decision,
+    ) -> DecisionTable {
+        let _ = net;
+        let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
+        for &p in p_grid {
+            for &m in m_grid {
+                entries.push(pick(p, m));
+            }
+        }
+        DecisionTable::new(op, p_grid.to_vec(), m_grid.to_vec(), entries)
+    }
+
+    fn tune_native(&self, net: &PLogP, p_grid: &[usize], m_grid: &[u64]) -> (DecisionTable, DecisionTable) {
+        let pick = |family: &'static [Strategy]| {
+            move |net: &PLogP, s_grid: &[u64], p: usize, m: u64| -> Decision {
+                let ranked = models::rank_strategies(family, net, p, m, s_grid);
+                let (strategy, predicted, segment) = ranked[0];
+                Decision { strategy, segment, predicted }
+            }
+        };
+        let pick_b = pick(&Strategy::BCAST);
+        let pick_s = pick(&Strategy::SCATTER);
+        let b = self.decide(Op::Bcast, net, p_grid, m_grid, |p, m| {
+            pick_b(net, &self.s_grid, p, m)
+        });
+        let s = self.decide(Op::Scatter, net, p_grid, m_grid, |p, m| {
+            pick_s(net, &self.s_grid, p, m)
+        });
+        (b, s)
+    }
+
+    fn tune_artifact(
+        &self,
+        art: &TunerArtifact,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<(DecisionTable, DecisionTable)> {
+        let meta = &art.meta;
+        assert!(
+            p_grid.len() <= meta.p_grid_len && m_grid.len() <= meta.m_grid_len,
+            "grid larger than artifact shape ({} x {} vs {} x {})",
+            p_grid.len(),
+            m_grid.len(),
+            meta.p_grid_len,
+            meta.m_grid_len
+        );
+        // pad every input to the artifact's baked shapes
+        let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
+        let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
+        assert_eq!(
+            sizes.len(),
+            meta.table_len,
+            "gap table has {} samples but the artifact expects {} — \
+             measure with plogp::default_size_grid({})",
+            sizes.len(),
+            meta.table_len,
+            meta.table_len
+        );
+        let pf = pad_grid_f32(p_grid.iter().map(|&p| p as f32).collect(), meta.p_grid_len);
+        let mf = pad_grid_f32(m_grid.iter().map(|&m| m as f32).collect(), meta.m_grid_len);
+        let sf = pad_grid_f32(
+            self.s_grid.iter().map(|&s| s as f32).collect(),
+            meta.s_grid_len,
+        );
+        let out = art.execute(&sizes, &gaps, net.l as f32, &pf, &mf, &sf)?;
+
+        let build = |op: Op| -> DecisionTable {
+            let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
+            for qi in 0..p_grid.len() {
+                for mi in 0..m_grid.len() {
+                    let widx = match op {
+                        Op::Bcast => out.bcast_win(qi, mi),
+                        Op::Scatter => out.scatter_win(qi, mi),
+                    };
+                    let strategy = Strategy::from_index(widx).expect("winner index");
+                    let seg = out.seg(widx, qi, mi);
+                    let segment = if strategy.is_segmented() && seg > 0.0 {
+                        Some(seg as u64)
+                    } else {
+                        None
+                    };
+                    entries.push(Decision {
+                        strategy,
+                        segment,
+                        predicted: out.time(widx, qi, mi) as f64,
+                    });
+                }
+            }
+            DecisionTable::new(op, p_grid.to_vec(), m_grid.to_vec(), entries)
+        };
+        Ok((build(Op::Bcast), build(Op::Scatter)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, Netsim};
+    use crate::plogp;
+
+    fn measured() -> PLogP {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        plogp::bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn native_tuner_produces_full_tables() {
+        let net = measured();
+        let t = Tuner::native();
+        let p_grid = vec![2usize, 8, 24, 48];
+        let m_grid = grids::log_grid(1, 1 << 20, 12);
+        let (b, s) = t.tune(&net, &p_grid, &m_grid).unwrap();
+        assert_eq!(b.entries.len(), 48);
+        assert_eq!(s.entries.len(), 48);
+        for d in b.entries.iter().chain(&s.entries) {
+            assert!(d.predicted > 0.0 && d.predicted.is_finite());
+        }
+    }
+
+    #[test]
+    fn native_tuner_bcast_decisions_are_paper_shaped() {
+        let net = measured();
+        let t = Tuner::native();
+        let (b, _) = t
+            .tune(&net, &[24], &grids::log_grid(1, 1 << 20, 16))
+            .unwrap();
+        // large messages: segmented chain; the winner set contains it
+        let last = b.at(0, 15);
+        assert_eq!(last.strategy, Strategy::BcastSegChain, "{last:?}");
+        assert!(last.segment.is_some());
+        // small messages: a log-depth eager tree, never a rendezvous one
+        let first = b.at(0, 0);
+        assert!(
+            matches!(first.strategy, Strategy::BcastBinomial | Strategy::BcastBinary
+                | Strategy::BcastSegBinomial | Strategy::BcastSegFlat | Strategy::BcastFlat),
+            "{first:?}"
+        );
+    }
+
+    #[test]
+    fn scatter_decisions_flat_or_binomial_never_chain() {
+        let net = measured();
+        let t = Tuner::native();
+        let (_, s) = t
+            .tune(&net, &[4, 16, 48], &grids::log_grid(64, 1 << 20, 10))
+            .unwrap();
+        for d in &s.entries {
+            assert_ne!(d.strategy, Strategy::ScatterChain, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn decisions_match_exhaustive_native_argmin() {
+        let net = measured();
+        let t = Tuner::native();
+        let p_grid = [8usize, 32];
+        let m_grid = [1024u64, 1 << 18];
+        let (b, _) = t.tune(&net, &p_grid, &m_grid).unwrap();
+        for (qi, &p) in p_grid.iter().enumerate() {
+            for (mi, &m) in m_grid.iter().enumerate() {
+                let want =
+                    models::rank_strategies(&Strategy::BCAST, &net, p, m, &t.s_grid)[0].0;
+                assert_eq!(b.at(qi, mi).strategy, want);
+            }
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Tuning for the extended collectives (gather / barrier / allgather /
+//! allreduce) — same argmin machinery as the Broadcast/Scatter tuner,
+//! over the [`crate::models::ext`] model set, with the second AOT
+//! artifact (`tuner_ext.hlo.txt`) as fast path.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::models::ext::{predict_ext, rank_ext, ExtStrategy};
+use crate::plogp::PLogP;
+use crate::runtime::{pad_grid_f32, ExtArtifact};
+
+/// Extended-op families, in the artifact's winner-row order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtOp {
+    Gather = 0,
+    Barrier = 1,
+    AllGather = 2,
+    AllReduce = 3,
+}
+
+impl ExtOp {
+    pub const ALL: [ExtOp; 4] =
+        [ExtOp::Gather, ExtOp::Barrier, ExtOp::AllGather, ExtOp::AllReduce];
+
+    pub fn family(self) -> &'static [ExtStrategy] {
+        match self {
+            ExtOp::Gather => &ExtStrategy::GATHER,
+            ExtOp::Barrier => &ExtStrategy::BARRIER,
+            ExtOp::AllGather => &ExtStrategy::ALLGATHER,
+            ExtOp::AllReduce => &ExtStrategy::ALLREDUCE,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExtOp::Gather => "gather",
+            ExtOp::Barrier => "barrier",
+            ExtOp::AllGather => "allgather",
+            ExtOp::AllReduce => "allreduce",
+        }
+    }
+}
+
+/// One tuned extended decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExtDecision {
+    pub strategy: ExtStrategy,
+    pub predicted: f64,
+}
+
+/// Decision table for one extended op.
+#[derive(Debug, Clone)]
+pub struct ExtDecisionTable {
+    pub op: ExtOp,
+    pub p_grid: Vec<usize>,
+    pub m_grid: Vec<u64>,
+    pub entries: Vec<ExtDecision>,
+}
+
+impl ExtDecisionTable {
+    pub fn at(&self, qi: usize, mi: usize) -> &ExtDecision {
+        &self.entries[qi * self.m_grid.len() + mi]
+    }
+
+    /// Snap-to-nearest lookup (same semantics as the core tables).
+    pub fn lookup(&self, p: usize, m: u64) -> &ExtDecision {
+        let qi = self
+            .p_grid
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &g)| g.abs_diff(p))
+            .map(|(i, _)| i)
+            .unwrap();
+        let lm = m.max(1) as f64;
+        let mi = self
+            .m_grid
+            .iter()
+            .enumerate()
+            .min_by(|(_, &a), (_, &b)| {
+                let da = ((a as f64) / lm).ln().abs();
+                let db = ((b as f64) / lm).ln().abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        self.at(qi, mi)
+    }
+}
+
+/// The extended tuner.
+pub struct ExtTuner {
+    artifact: Option<ExtArtifact>,
+}
+
+impl ExtTuner {
+    pub fn native() -> ExtTuner {
+        ExtTuner { artifact: None }
+    }
+
+    pub fn with_artifact(dir: &Path) -> Result<ExtTuner> {
+        Ok(ExtTuner { artifact: Some(ExtArtifact::load(dir)?) })
+    }
+
+    /// Prefer the artifact; fall back to native.
+    pub fn auto(dir: &Path) -> ExtTuner {
+        match Self::with_artifact(dir) {
+            Ok(t) => t,
+            Err(e) => {
+                log::warn!("ext artifact unavailable ({e:#}); using native models");
+                ExtTuner::native()
+            }
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        if self.artifact.is_some() {
+            "artifact"
+        } else {
+            "native"
+        }
+    }
+
+    /// Tune all four extended ops over the grid.
+    pub fn tune(
+        &self,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<Vec<ExtDecisionTable>> {
+        match &self.artifact {
+            None => Ok(self.tune_native(net, p_grid, m_grid)),
+            Some(art) => self.tune_artifact(art, net, p_grid, m_grid),
+        }
+    }
+
+    fn tune_native(
+        &self,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Vec<ExtDecisionTable> {
+        ExtOp::ALL
+            .iter()
+            .map(|&op| {
+                let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
+                for &p in p_grid {
+                    for &m in m_grid {
+                        let (strategy, predicted) = rank_ext(op.family(), net, p, m)[0];
+                        entries.push(ExtDecision { strategy, predicted });
+                    }
+                }
+                ExtDecisionTable {
+                    op,
+                    p_grid: p_grid.to_vec(),
+                    m_grid: m_grid.to_vec(),
+                    entries,
+                }
+            })
+            .collect()
+    }
+
+    fn tune_artifact(
+        &self,
+        art: &ExtArtifact,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<Vec<ExtDecisionTable>> {
+        let meta = &art.meta;
+        assert!(p_grid.len() <= meta.p_grid_len && m_grid.len() <= meta.m_grid_len);
+        let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
+        let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
+        assert_eq!(sizes.len(), meta.table_len, "gap table length mismatch");
+        let pf = pad_grid_f32(p_grid.iter().map(|&p| p as f32).collect(), meta.p_grid_len);
+        let mf = pad_grid_f32(m_grid.iter().map(|&m| m as f32).collect(), meta.m_grid_len);
+        let out = art.execute(&sizes, &gaps, net.l as f32, &pf, &mf)?;
+        Ok(ExtOp::ALL
+            .iter()
+            .map(|&op| {
+                let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
+                for qi in 0..p_grid.len() {
+                    for mi in 0..m_grid.len() {
+                        let widx = out.winner(op as usize, qi, mi);
+                        let strategy = ExtStrategy::from_index(widx).expect("winner");
+                        entries.push(ExtDecision {
+                            strategy,
+                            predicted: out.time(widx, qi, mi) as f64,
+                        });
+                    }
+                }
+                ExtDecisionTable {
+                    op,
+                    p_grid: p_grid.to_vec(),
+                    m_grid: m_grid.to_vec(),
+                    entries,
+                }
+            })
+            .collect())
+    }
+}
+
+/// Build the schedule for an extended decision.
+pub fn build_ext_schedule(
+    _op: ExtOp,
+    strategy: ExtStrategy,
+    p: usize,
+    m: u64,
+) -> crate::mpi::CommSchedule {
+    use crate::collectives::{composed, extended};
+    match strategy {
+        ExtStrategy::GatherFlat => composed::gather_flat(p, 0, m),
+        ExtStrategy::GatherBinomial => composed::gather_binomial(p, 0, m),
+        ExtStrategy::ReduceBinomial => composed::reduce_binomial(p, 0, m),
+        ExtStrategy::BarrierTree => composed::barrier_binomial(p),
+        ExtStrategy::BarrierDissemination => extended::barrier_dissemination(p),
+        ExtStrategy::AllGatherGatherBcast => composed::allgather(p, 0, m),
+        ExtStrategy::AllGatherRing => extended::allgather_ring(p, m),
+        ExtStrategy::AllGatherRecDoubling => extended::allgather_recursive_doubling(p, m),
+        ExtStrategy::AllReduceReduceBcast => composed::allreduce(p, 0, m),
+        ExtStrategy::AllReduceRecDoubling => {
+            extended::allreduce_recursive_doubling(p, m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::netsim::{NetConfig, Netsim};
+    use crate::plogp;
+    use crate::tuner::grids;
+
+    fn measured() -> PLogP {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        plogp::bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn native_ext_tuner_produces_tables_for_all_ops() {
+        let net = measured();
+        let t = ExtTuner::native();
+        let tables = t.tune(&net, &[4, 16, 32], &grids::log_grid(1, 1 << 18, 8)).unwrap();
+        assert_eq!(tables.len(), 4);
+        for table in &tables {
+            assert_eq!(table.entries.len(), 24);
+            for d in &table.entries {
+                assert!(d.predicted > 0.0);
+                assert!(table.op.family().contains(&d.strategy), "{:?}", d);
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_tuner_picks_dissemination() {
+        let net = measured();
+        let t = ExtTuner::native();
+        let tables = t.tune(&net, &[16, 32], &[1]).unwrap();
+        let barrier = &tables[ExtOp::Barrier as usize];
+        for d in &barrier.entries {
+            assert_eq!(d.strategy, ExtStrategy::BarrierDissemination);
+        }
+    }
+
+    #[test]
+    fn allgather_tuner_crosses_from_rec_doubling_to_ring_family() {
+        // latency-bound: rec doubling; bandwidth-bound: ring catches up.
+        let net = measured();
+        let t = ExtTuner::native();
+        let tables = t.tune(&net, &[32], &[1, 1 << 20]).unwrap();
+        let ag = &tables[ExtOp::AllGather as usize];
+        assert_eq!(ag.at(0, 0).strategy, ExtStrategy::AllGatherRecDoubling);
+    }
+
+    #[test]
+    fn ext_decisions_run_and_verify() {
+        let net = measured();
+        let t = ExtTuner::native();
+        let tables = t.tune(&net, &[8], &[4096]).unwrap();
+        for table in &tables {
+            let d = table.at(0, 0);
+            let sched = build_ext_schedule(table.op, d.strategy, 8, 4096);
+            let mut world =
+                World::new(Netsim::new(8, NetConfig::fast_ethernet_ideal()));
+            let rep = world.run(&sched);
+            assert!(rep.verify(&sched).is_empty(), "{}: {:?}", sched.name, rep.verify(&sched));
+        }
+    }
+
+    #[test]
+    fn ext_model_accuracy_against_sim() {
+        // predicted vs measured for each family's winner within 30 %
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let net = measured();
+        let t = ExtTuner::native();
+        let p = 16;
+        let m = 32 * 1024;
+        let tables = t.tune(&net, &[p], &[m]).unwrap();
+        for table in &tables {
+            let d = table.at(0, 0);
+            let sched = build_ext_schedule(table.op, d.strategy, p, m);
+            let mut world = World::new(Netsim::new(p, cfg.clone()));
+            let meas = world.run(&sched).completion.as_secs();
+            let rel = (d.predicted - meas).abs() / meas;
+            assert!(
+                rel < 0.30,
+                "{} {}: predicted {} vs measured {meas} (rel {rel})",
+                table.op.name(),
+                d.strategy.name(),
+                d.predicted
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_snaps() {
+        let net = measured();
+        let t = ExtTuner::native();
+        let tables = t.tune(&net, &[4, 32], &[1024, 1 << 20]).unwrap();
+        let g = &tables[0];
+        let d = g.lookup(30, 900_000);
+        assert!(g.op.family().contains(&d.strategy));
+    }
+}

@@ -1,0 +1,80 @@
+//! Default tuning grids, matched to the AOT artifact's baked shapes.
+
+/// Log-spaced u64 grid from `lo` to `hi` inclusive with exactly `n`
+/// strictly increasing entries.
+pub fn log_grid(lo: u64, hi: u64, n: usize) -> Vec<u64> {
+    assert!(lo >= 1 && hi > lo && n >= 2);
+    let mut out: Vec<u64> = (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            ((lo as f64) * ((hi as f64) / (lo as f64)).powf(t)).round() as u64
+        })
+        .collect();
+    // enforce strict monotonicity after rounding
+    for i in 1..out.len() {
+        if out[i] <= out[i - 1] {
+            out[i] = out[i - 1] + 1;
+        }
+    }
+    out
+}
+
+/// Default message-size grid: 48 points, 1 B .. 1 MB (the paper's
+/// experimental range).
+pub fn default_m_grid() -> Vec<u64> {
+    log_grid(1, 1 << 20, 48)
+}
+
+/// Default segment-size grid: 32 points, 64 B .. 4 MB. The top end
+/// exceeds the m-grid so the unsegmented case (s >= m) is always in the
+/// search space.
+pub fn default_s_grid() -> Vec<u64> {
+    log_grid(64, 4 << 20, 32)
+}
+
+/// Default process-count grid: 2..=50 in 16 roughly-even steps (the
+/// paper's cluster has 50 nodes).
+pub fn default_p_grid() -> Vec<usize> {
+    let mut v: Vec<usize> = (0..16).map(|i| 2 + (i * 48) / 15).collect();
+    v.dedup();
+    while v.len() < 16 {
+        let last = *v.last().unwrap();
+        v.push(last + 1);
+    }
+    v.truncate(16);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_grid_endpoints_and_monotonicity() {
+        let g = log_grid(1, 1 << 20, 48);
+        assert_eq!(g.len(), 48);
+        assert_eq!(g[0], 1);
+        assert_eq!(*g.last().unwrap(), 1 << 20);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn default_grids_match_artifact_shapes() {
+        assert_eq!(default_m_grid().len(), 48);
+        assert_eq!(default_s_grid().len(), 32);
+        assert_eq!(default_p_grid().len(), 16);
+    }
+
+    #[test]
+    fn default_p_grid_spans_cluster() {
+        let p = default_p_grid();
+        assert_eq!(p[0], 2);
+        assert_eq!(*p.last().unwrap(), 50);
+        assert!(p.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn s_grid_covers_m_grid() {
+        assert!(default_s_grid().last().unwrap() >= default_m_grid().last().unwrap());
+    }
+}

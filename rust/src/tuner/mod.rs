@@ -1,0 +1,25 @@
+//! The paper's contribution: fast, model-driven strategy selection.
+//!
+//! Given measured pLogP parameters, the tuner evaluates the cost model of
+//! every candidate implementation over a `(P, m)` grid — including the
+//! segment-size search for segmented strategies — and materializes
+//! [`decision::DecisionTable`]s that the collective runtime consults at
+//! call time. Two backends:
+//!
+//! * **Artifact** ([`engine::Backend::Artifact`]) — one AOT-compiled XLA
+//!   execution evaluates the entire decision tensor (all 13 strategies ×
+//!   P-grid × m-grid × segment grid) in a single call; this is the "fast"
+//!   in *Fast Tuning*.
+//! * **Native** ([`engine::Backend::Native`]) — the Rust mirror of the
+//!   models; used when no artifact is present and for cross-validation
+//!   (the two must agree, see `rust/tests/artifact_roundtrip.rs`).
+
+pub mod decision;
+pub mod ext;
+pub mod engine;
+pub mod grids;
+pub mod persist;
+pub mod validate;
+
+pub use decision::{Decision, DecisionTable, Op};
+pub use engine::{Backend, Tuner};

@@ -1,0 +1,220 @@
+//! Decision-table persistence: a deployed runtime tunes once per
+//! network, saves the tables, and loads them at startup — the paper's
+//! "static techniques" operating mode (§5: "because the intra-cluster
+//! communication is based on static techniques, the complexity ... is
+//! restricted only to the inter-cluster communication").
+//!
+//! Format: a simple self-describing TSV (serde is unavailable offline):
+//!
+//! ```text
+//! # collective-tuner decision table v1
+//! op	bcast
+//! p_grid	2,8,24
+//! m_grid	1,1024,1048576
+//! entry	<qi>	<mi>	<strategy-name>	<segment|-- >	<predicted>
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::collectives::Strategy;
+
+use super::decision::{Decision, DecisionTable, Op};
+
+const HEADER: &str = "# collective-tuner decision table v1";
+
+/// Serialize a decision table.
+pub fn to_string(table: &DecisionTable) -> String {
+    let mut out = String::new();
+    out.push_str(HEADER);
+    out.push('\n');
+    out.push_str(&format!("op\t{}\n", table.op.name()));
+    out.push_str(&format!(
+        "p_grid\t{}\n",
+        table.p_grid.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(",")
+    ));
+    out.push_str(&format!(
+        "m_grid\t{}\n",
+        table.m_grid.iter().map(|m| m.to_string()).collect::<Vec<_>>().join(",")
+    ));
+    for (qi, _) in table.p_grid.iter().enumerate() {
+        for (mi, _) in table.m_grid.iter().enumerate() {
+            let d = table.at(qi, mi);
+            out.push_str(&format!(
+                "entry\t{qi}\t{mi}\t{}\t{}\t{:.9e}\n",
+                d.strategy.name(),
+                d.segment.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                d.predicted
+            ));
+        }
+    }
+    out
+}
+
+/// Parse a decision table.
+pub fn from_str(text: &str) -> Result<DecisionTable> {
+    let mut lines = text.lines();
+    if lines.next() != Some(HEADER) {
+        bail!("not a decision-table file (missing header)");
+    }
+    let mut op = None;
+    let mut p_grid: Vec<usize> = Vec::new();
+    let mut m_grid: Vec<u64> = Vec::new();
+    let mut raw_entries: Vec<(usize, usize, Decision)> = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        let mut f = line.split('\t');
+        match f.next() {
+            Some("op") => {
+                op = Some(match f.next() {
+                    Some("bcast") => Op::Bcast,
+                    Some("scatter") => Op::Scatter,
+                    other => bail!("line {}: bad op {other:?}", ln + 2),
+                })
+            }
+            Some("p_grid") => {
+                p_grid = f
+                    .next()
+                    .context("p_grid values")?
+                    .split(',')
+                    .map(|t| t.parse().context("p_grid entry"))
+                    .collect::<Result<_>>()?;
+            }
+            Some("m_grid") => {
+                m_grid = f
+                    .next()
+                    .context("m_grid values")?
+                    .split(',')
+                    .map(|t| t.parse().context("m_grid entry"))
+                    .collect::<Result<_>>()?;
+            }
+            Some("entry") => {
+                let qi: usize = f.next().context("qi")?.parse()?;
+                let mi: usize = f.next().context("mi")?.parse()?;
+                let name = f.next().context("strategy")?;
+                let strategy = Strategy::from_name(name)
+                    .with_context(|| format!("unknown strategy '{name}'"))?;
+                let seg_tok = f.next().context("segment")?;
+                let segment = if seg_tok == "-" {
+                    None
+                } else {
+                    Some(seg_tok.parse::<u64>()?)
+                };
+                let predicted: f64 = f.next().context("predicted")?.parse()?;
+                raw_entries.push((qi, mi, Decision { strategy, segment, predicted }));
+            }
+            Some("") | None => {}
+            Some(other) => bail!("line {}: unknown record '{other}'", ln + 2),
+        }
+    }
+    let op = op.context("missing op record")?;
+    if p_grid.is_empty() || m_grid.is_empty() {
+        bail!("missing grids");
+    }
+    let mut entries = vec![
+        Decision {
+            strategy: Strategy::BcastFlat,
+            segment: None,
+            predicted: -1.0
+        };
+        p_grid.len() * m_grid.len()
+    ];
+    for (qi, mi, d) in raw_entries {
+        if qi >= p_grid.len() || mi >= m_grid.len() {
+            bail!("entry ({qi},{mi}) out of grid bounds");
+        }
+        entries[qi * m_grid.len() + mi] = d;
+    }
+    if entries.iter().any(|d| d.predicted < 0.0) {
+        bail!("decision table is missing entries");
+    }
+    Ok(DecisionTable::new(op, p_grid, m_grid, entries))
+}
+
+/// Save to a file.
+pub fn save(table: &DecisionTable, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_string(table))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<DecisionTable> {
+    from_str(
+        &std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, Netsim};
+    use crate::plogp;
+    use crate::tuner::{grids, Tuner};
+
+    fn sample_table() -> DecisionTable {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+        let net = plogp::bench::measure(&mut sim);
+        let t = Tuner::native();
+        let (b, _) = t
+            .tune(&net, &[2, 8, 24], &grids::log_grid(1, 1 << 20, 8))
+            .unwrap();
+        b
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let table = sample_table();
+        let text = to_string(&table);
+        let back = from_str(&text).unwrap();
+        assert_eq!(back.op, table.op);
+        assert_eq!(back.p_grid, table.p_grid);
+        assert_eq!(back.m_grid, table.m_grid);
+        for (a, b) in table.entries.iter().zip(&back.entries) {
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.segment, b.segment);
+            // 9 significant decimal digits survive the text round trip
+            assert!((a.predicted - b.predicted).abs() <= 1e-8 * a.predicted.abs());
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let table = sample_table();
+        let path = std::env::temp_dir().join("ct-persist-test/bcast.tsv");
+        save(&table, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.p_grid, table.p_grid);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lookup_identical_after_roundtrip() {
+        let table = sample_table();
+        let back = from_str(&to_string(&table)).unwrap();
+        for (p, m) in [(3usize, 500u64), (20, 1 << 19), (48, 77)] {
+            assert_eq!(table.lookup(p, m).strategy, back.lookup(p, m).strategy);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_str("hello").is_err());
+        assert!(from_str(HEADER).is_err()); // no grids
+        let table = sample_table();
+        let text = to_string(&table);
+        // drop one entry line -> incomplete
+        let truncated: Vec<&str> = text.lines().filter(|l| !l.contains("entry\t0\t0")).collect();
+        assert!(from_str(&truncated.join("\n")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_strategy() {
+        let table = sample_table();
+        let text = to_string(&table).replace("bcast/seg_chain", "bcast/warp_drive");
+        assert!(from_str(&text).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! Selection-quality validation: does the model-predicted winner match
+//! the empirically best strategy on the simulated cluster?
+//!
+//! This is the paper's §4 headline claim, quantified: "the selection of
+//! the best communication implementation can be made with the help of
+//! the communication models", even where the models' absolute numbers
+//! drift (small-message TCP anomalies).
+
+use crate::collectives::Strategy;
+use crate::models;
+use crate::mpi::World;
+use crate::netsim::{NetConfig, Netsim};
+use crate::plogp::PLogP;
+
+/// Result of validating one operation family over a grid.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    /// Grid points evaluated.
+    pub points: usize,
+    /// Points where predicted winner == empirical winner.
+    pub correct: usize,
+    /// Points where the top two empirical strategies differ by more than
+    /// `meaningful_margin` (ties are noise, not decisions).
+    pub meaningful: usize,
+    /// Correct among the meaningful points.
+    pub correct_meaningful: usize,
+    /// Mean relative error |predicted - measured| / measured of the
+    /// *chosen* strategy's time.
+    pub mean_rel_err: f64,
+    /// Worst regret: measured(chosen) / measured(best) - 1, maximized
+    /// over grid points.
+    pub max_regret: f64,
+}
+
+impl ValidationReport {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.points.max(1) as f64
+    }
+
+    pub fn meaningful_accuracy(&self) -> f64 {
+        if self.meaningful == 0 {
+            return 1.0;
+        }
+        self.correct_meaningful as f64 / self.meaningful as f64
+    }
+}
+
+/// Options for validation sweeps.
+#[derive(Debug, Clone)]
+pub struct ValidateOptions {
+    /// Margin below which the top-two empirical times count as a tie.
+    pub meaningful_margin: f64,
+    /// Segment-size search grid.
+    pub s_grid: Vec<u64>,
+}
+
+impl Default for ValidateOptions {
+    fn default() -> Self {
+        ValidateOptions {
+            meaningful_margin: 0.10,
+            s_grid: super::grids::default_s_grid(),
+        }
+    }
+}
+
+/// Run every strategy of `family` empirically at `(p, m)` and return
+/// `(strategy, measured seconds, segment)` sorted by time. The segment
+/// used for segmented strategies is the model-tuned one (that is what a
+/// deployed runtime would execute).
+pub fn empirical_ranking(
+    cfg: &NetConfig,
+    net: &PLogP,
+    family: &[Strategy],
+    p: usize,
+    m: u64,
+    s_grid: &[u64],
+) -> Vec<(Strategy, f64, Option<u64>)> {
+    let mut out = Vec::with_capacity(family.len());
+    for &s in family {
+        let seg = if s.is_segmented() {
+            Some(models::best_segment(s, net, p, m, s_grid).1)
+        } else {
+            None
+        };
+        let sched = s.build(p, 0, m, seg);
+        let mut world = World::new(Netsim::new(p, cfg.clone()));
+        let rep = world.run(&sched);
+        debug_assert!(rep.verify(&sched).is_empty());
+        out.push((s, rep.completion.as_secs(), seg));
+    }
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+/// Validate model-driven selection for one family over a (P, m) grid.
+pub fn validate_selection(
+    cfg: &NetConfig,
+    net: &PLogP,
+    family: &[Strategy],
+    p_list: &[usize],
+    m_list: &[u64],
+    opts: &ValidateOptions,
+) -> ValidationReport {
+    let mut rep = ValidationReport {
+        points: 0,
+        correct: 0,
+        meaningful: 0,
+        correct_meaningful: 0,
+        mean_rel_err: 0.0,
+        max_regret: 0.0,
+    };
+    let mut err_sum = 0.0;
+    for &p in p_list {
+        for &m in m_list {
+            let predicted = models::rank_strategies(family, net, p, m, &opts.s_grid);
+            let measured = empirical_ranking(cfg, net, family, p, m, &opts.s_grid);
+            let chosen = predicted[0].0;
+            let best = measured[0].0;
+            let chosen_measured = measured
+                .iter()
+                .find(|(s, _, _)| *s == chosen)
+                .map(|(_, t, _)| *t)
+                .unwrap();
+            let best_measured = measured[0].1;
+            let is_meaningful = measured.len() >= 2
+                && (measured[1].1 - measured[0].1) / measured[0].1
+                    > opts.meaningful_margin;
+
+            rep.points += 1;
+            if chosen == best {
+                rep.correct += 1;
+            }
+            if is_meaningful {
+                rep.meaningful += 1;
+                if chosen == best {
+                    rep.correct_meaningful += 1;
+                }
+            }
+            err_sum += (predicted[0].1 - chosen_measured).abs() / chosen_measured;
+            rep.max_regret =
+                rep.max_regret.max(chosen_measured / best_measured - 1.0);
+        }
+    }
+    rep.mean_rel_err = err_sum / rep.points.max(1) as f64;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plogp;
+
+    fn setup() -> (NetConfig, PLogP) {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let mut sim = Netsim::new(2, cfg.clone());
+        let net = plogp::bench::measure(&mut sim);
+        (cfg, net)
+    }
+
+    #[test]
+    fn empirical_ranking_is_sorted_and_complete() {
+        let (cfg, net) = setup();
+        let r = empirical_ranking(&cfg, &net, &Strategy::BCAST, 8, 65536, &[4096, 16384]);
+        assert_eq!(r.len(), 10);
+        for w in r.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn selection_is_accurate_on_ideal_network() {
+        let (cfg, net) = setup();
+        let opts = ValidateOptions::default();
+        let rep = validate_selection(
+            &cfg,
+            &net,
+            &Strategy::BCAST,
+            &[4, 16],
+            &[256, 65536, 1 << 20],
+            &opts,
+        );
+        assert_eq!(rep.points, 6);
+        // where the margin is meaningful the model must always pick right
+        assert_eq!(
+            rep.correct_meaningful, rep.meaningful,
+            "meaningful accuracy {} ({rep:?})",
+            rep.meaningful_accuracy()
+        );
+        // and regret stays small everywhere
+        assert!(rep.max_regret < 0.35, "{rep:?}");
+    }
+
+    #[test]
+    fn scatter_selection_validates_too() {
+        let (cfg, net) = setup();
+        let opts = ValidateOptions::default();
+        let rep = validate_selection(
+            &cfg,
+            &net,
+            &Strategy::SCATTER,
+            &[8, 32],
+            &[1024, 65536],
+            &opts,
+        );
+        assert!(rep.meaningful_accuracy() >= 0.99, "{rep:?}");
+    }
+}

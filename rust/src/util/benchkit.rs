@@ -1,0 +1,116 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable in
+//! this offline build). Used by the `rust/benches/*` targets
+//! (`harness = false`).
+//!
+//! Protocol: warm up, then run timed iterations until both a minimum
+//! iteration count and a minimum wall-time are reached; report mean,
+//! median, p95 and throughput.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary (seconds).
+    pub summary: Summary,
+    /// Iterations executed.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>12}/iter  (median {:>12}, p95 {:>12}, n={})",
+            self.name,
+            super::table::fmt_time(s.mean),
+            super::table::fmt_time(s.p50),
+            super::table::fmt_time(s.p95),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 3, min_iters: 10, max_iters: 10_000, min_seconds: 0.5 }
+    }
+}
+
+/// Time `f` under the default protocol and print the report line.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_with(name, &BenchOpts::default(), f)
+}
+
+/// Time `f` with explicit options and print the report line.
+pub fn bench_with<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < opts.min_iters
+        || (start.elapsed().as_secs_f64() < opts.min_seconds
+            && samples.len() < opts.max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        iters: samples.len(),
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Print a section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let mut count = 0usize;
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            min_seconds: 0.0,
+        };
+        let r = bench_with("t", &opts, || count += 1);
+        assert_eq!(r.iters, 5);
+        assert_eq!(count, 6); // 1 warmup + 5 timed
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            min_seconds: 0.0,
+        };
+        let r = bench_with("my-bench", &opts, || {});
+        assert!(r.report().contains("my-bench"));
+    }
+}

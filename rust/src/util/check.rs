@@ -1,0 +1,91 @@
+//! A miniature property-based testing harness (proptest is unavailable
+//! offline). Properties are closures over a [`Prng`]; on failure the
+//! harness reports the failing case number and the seed that reproduces it.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't get the xla rpath link flag)
+//! use collective_tuner::util::check::property;
+//! property("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.range(0, 1000) as i64, rng.range(0, 1000) as i64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Base seed; override with `CHECK_SEED=<u64>` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00_DEAD_0001)
+}
+
+/// Run `cases` random cases of `prop`. Each case gets an independent PRNG
+/// derived from the base seed; panics are caught, annotated with the
+/// reproduction seed, and re-raised.
+pub fn property<F: Fn(&mut Prng) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Prng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with CHECK_SEED={base} or seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::sync::atomic::AtomicU64::new(0);
+        property("count", 17, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(*count.get_mut(), 17);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            property("always-fails", 5, |_| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("CHECK_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_see_different_randomness() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        property("collect", 8, |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+        });
+        let v = seen.into_inner().unwrap();
+        let mut uniq = v.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), v.len());
+    }
+}

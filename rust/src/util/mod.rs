@@ -1,0 +1,9 @@
+//! Small self-contained utilities standing in for crates that are not
+//! available in this offline build (rand, serde_json, proptest, prettytable).
+
+pub mod benchkit;
+pub mod check;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;

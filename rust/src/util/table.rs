@@ -1,0 +1,208 @@
+//! ASCII tables and CSV emission for experiment reports.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned ASCII table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_ascii(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for wi in &w {
+                let _ = write!(out, "+{}", "-".repeat(wi + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        for (i, h) in self.header.iter().enumerate() {
+            let _ = write!(out, "| {:<width$} ", h, width = w[i]);
+        }
+        out.push_str("|\n");
+        sep(&mut out);
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                let _ = write!(out, "| {:<width$} ", c, width = w[i]);
+            }
+            out.push_str("|\n");
+        }
+        sep(&mut out);
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} us", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Format a byte count (B/kB/MB).
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes < 1024.0 {
+        format!("{bytes:.0} B")
+    } else if bytes < 1024.0 * 1024.0 {
+        format!("{:.1} kB", bytes / 1024.0)
+    } else {
+        format!("{:.2} MB", bytes / (1024.0 * 1024.0))
+    }
+}
+
+/// A crude ASCII line plot: one char column per x sample, `series` of
+/// (label, ys). Used to render the figures in terminal reports.
+pub fn ascii_plot(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)], height: usize) -> String {
+    assert!(!xs.is_empty() && !series.is_empty());
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MIN, f64::max);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MAX, f64::min);
+    let span = (ymax - ymin).max(1e-30);
+    let mut grid = vec![vec![' '; xs.len()]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &y) in ys.iter().enumerate() {
+            let row = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][xi] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}\n");
+    let _ = writeln!(out, "  y: [{:.3e} .. {:.3e}]", ymin, ymax);
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    let _ = writeln!(out, "  +{}", "-".repeat(xs.len()));
+    let _ = writeln!(out, "  x: [{:.3e} .. {:.3e}]", xs[0], xs[xs.len() - 1]);
+    for (si, (label, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} = {}", marks[si % marks.len()], label);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(vec!["a", "long-header"]);
+        t.row(vec!["x", "1"]);
+        t.row(vec!["yyyy", "2"]);
+        let s = t.to_ascii();
+        assert!(s.contains("| a    "));
+        assert!(s.contains("| long-header |"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        Table::new(vec!["a"]).row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["x,y", "q\"z"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn time_formats() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert!(fmt_time(0.0025).contains("ms"));
+        assert!(fmt_time(2.5e-6).contains("us"));
+        assert!(fmt_time(2.5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn byte_formats() {
+        assert_eq!(fmt_bytes(100.0), "100 B");
+        assert!(fmt_bytes(2048.0).contains("kB"));
+        assert!(fmt_bytes(3.0 * 1024.0 * 1024.0).contains("MB"));
+    }
+
+    #[test]
+    fn plot_renders_all_series() {
+        let xs = [1.0, 2.0, 3.0];
+        let s = ascii_plot(
+            "t",
+            &xs,
+            &[("up", vec![1.0, 2.0, 3.0]), ("down", vec![3.0, 2.0, 1.0])],
+            5,
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("up"));
+    }
+}

@@ -1,0 +1,223 @@
+//! Integration: the AOT-compiled XLA tuner artifact must load through
+//! PJRT and agree with the native Rust models — the cross-language,
+//! cross-layer correctness contract of the whole stack.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::models;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp::{self, bench::BenchOptions};
+use collective_tuner::runtime::TunerArtifact;
+use collective_tuner::tuner::{grids, Backend, Op, Tuner};
+
+fn artifact_tuner() -> Option<Tuner> {
+    match Tuner::with_artifact(&TunerArtifact::default_dir()) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            eprintln!("SKIPPING artifact tests — run `make artifacts` ({e:#})");
+            None
+        }
+    }
+}
+
+fn measured_net() -> plogp::PLogP {
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    // table length must match the artifact's baked shape (32)
+    plogp::bench::measure_with(&mut sim, &BenchOptions::default())
+}
+
+#[test]
+fn artifact_loads_and_reports_meta() {
+    let Some(t) = artifact_tuner() else { return };
+    let Backend::Artifact(art) = &t.backend else { panic!("expected artifact") };
+    assert_eq!(art.meta.num_strategies, 13);
+    assert_eq!(art.meta.num_bcast, 10);
+    assert_eq!(art.meta.strategy_names[5], "bcast/seg_chain");
+}
+
+#[test]
+fn artifact_times_match_native_models() {
+    let Some(t) = artifact_tuner() else { return };
+    let Backend::Artifact(art) = &t.backend else { unreachable!() };
+    let net = measured_net();
+
+    let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
+    let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
+    // the real query points; everything beyond is pad (and the kernel's
+    // scatter-chain sum is only defined for P <= JMAX = 64, so padded
+    // rows past the cluster size are not contractual)
+    let p_real = [2usize, 5, 8, 16, 24, 32, 48, 50];
+    let p_grid: Vec<f32> = collective_tuner::runtime::pad_grid_f32(
+        p_real.iter().map(|&p| p as f32).collect(),
+        art.meta.p_grid_len,
+    );
+    let m_grid: Vec<f32> = collective_tuner::runtime::pad_grid_f32(
+        grids::default_m_grid().iter().map(|&m| m as f32).collect(),
+        art.meta.m_grid_len,
+    );
+    let s_grid: Vec<f32> = collective_tuner::runtime::pad_grid_f32(
+        grids::default_s_grid().iter().map(|&s| s as f32).collect(),
+        art.meta.s_grid_len,
+    );
+    let out = art
+        .execute(&sizes, &gaps, net.l as f32, &p_grid, &m_grid, &s_grid)
+        .expect("artifact execution");
+
+    let s_grid_u: Vec<u64> = s_grid.iter().map(|&s| s as u64).collect();
+    let mut checked = 0usize;
+    for (qi, &p) in p_real.iter().enumerate() {
+        for (mi, &mf) in m_grid.iter().enumerate() {
+            let m = mf as u64;
+            for strat in Strategy::ALL {
+                let native = if strat.is_segmented() {
+                    models::best_segment(strat, &net, p, m, &s_grid_u).0
+                } else {
+                    models::predict(strat, &net, p, m, None)
+                };
+                let art_t = out.time(strat.index(), qi, mi) as f64;
+                let rel = (art_t - native).abs() / native.abs().max(1e-12);
+                assert!(
+                    rel < 2e-3,
+                    "{} P={p} m={m}: artifact {art_t} vs native {native} (rel {rel})",
+                    strat.name()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 13 * 8 * 48);
+}
+
+#[test]
+fn artifact_decisions_match_native_decisions() {
+    let Some(t_art) = artifact_tuner() else { return };
+    let t_nat = Tuner::native();
+    let net = measured_net();
+    let p_grid: Vec<usize> = vec![2, 4, 8, 16, 24, 32, 48, 50];
+    let m_grid = grids::log_grid(1, 1 << 20, 24);
+
+    let (ab, as_) = t_art.tune(&net, &p_grid, &m_grid).expect("artifact tune");
+    let (nb, ns) = t_nat.tune(&net, &p_grid, &m_grid).expect("native tune");
+
+    for (op, a, n) in [(Op::Bcast, &ab, &nb), (Op::Scatter, &as_, &ns)] {
+        let mut disagreements = 0usize;
+        for qi in 0..p_grid.len() {
+            for mi in 0..m_grid.len() {
+                let da = a.at(qi, mi);
+                let dn = n.at(qi, mi);
+                if da.strategy != dn.strategy {
+                    // ties: times must be within f32 noise of each other
+                    let rel = (da.predicted - dn.predicted).abs()
+                        / dn.predicted.abs().max(1e-12);
+                    assert!(
+                        rel < 1e-3,
+                        "{:?} ({}, {}): artifact {:?} vs native {:?}",
+                        op,
+                        p_grid[qi],
+                        m_grid[mi],
+                        da,
+                        dn
+                    );
+                    disagreements += 1;
+                }
+            }
+        }
+        // near-total agreement (ties excepted)
+        let total = p_grid.len() * m_grid.len();
+        assert!(
+            disagreements * 10 <= total,
+            "{op:?}: {disagreements}/{total} tie-disagreements"
+        );
+    }
+}
+
+#[test]
+fn artifact_is_reusable_across_executions() {
+    let Some(t) = artifact_tuner() else { return };
+    let net = measured_net();
+    let p_grid = vec![8usize, 24];
+    let m_grid = grids::log_grid(64, 1 << 20, 8);
+    let (a1, _) = t.tune(&net, &p_grid, &m_grid).unwrap();
+    let (a2, _) = t.tune(&net, &p_grid, &m_grid).unwrap();
+    for (d1, d2) in a1.entries.iter().zip(&a2.entries) {
+        assert_eq!(d1.strategy, d2.strategy);
+        assert_eq!(d1.predicted, d2.predicted);
+    }
+}
+
+// ---- extended-collectives artifact (tuner_ext.hlo.txt) -----------------
+
+#[test]
+fn ext_artifact_times_match_native_ext_models() {
+    use collective_tuner::models::ext::{predict_ext, ExtStrategy};
+    use collective_tuner::runtime::ExtArtifact;
+    let art = match ExtArtifact::load(&TunerArtifact::default_dir()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("SKIPPING ext artifact test ({e:#})");
+            return;
+        }
+    };
+    let net = measured_net();
+    let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
+    let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
+    let p_real = [2usize, 5, 8, 16, 24, 32, 48, 50];
+    let p_grid = collective_tuner::runtime::pad_grid_f32(
+        p_real.iter().map(|&p| p as f32).collect(),
+        art.meta.p_grid_len,
+    );
+    let m_grid = collective_tuner::runtime::pad_grid_f32(
+        grids::default_m_grid().iter().map(|&m| m as f32).collect(),
+        art.meta.m_grid_len,
+    );
+    let out = art
+        .execute(&sizes, &gaps, net.l as f32, &p_grid, &m_grid)
+        .expect("ext artifact execution");
+    let mut checked = 0;
+    for (qi, &p) in p_real.iter().enumerate() {
+        for (mi, &mf) in m_grid.iter().enumerate() {
+            let m = mf as u64;
+            for strat in ExtStrategy::ALL {
+                let native = predict_ext(strat, &net, p, m);
+                let got = out.time(strat.index(), qi, mi) as f64;
+                let rel = (got - native).abs() / native.abs().max(1e-12);
+                assert!(
+                    rel < 2e-3,
+                    "{} P={p} m={m}: artifact {got} vs native {native}",
+                    strat.name()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 10 * 8 * 48);
+}
+
+#[test]
+fn ext_artifact_winners_match_native_ext_tuner() {
+    use collective_tuner::tuner::ext::ExtTuner;
+    let dir = TunerArtifact::default_dir();
+    let Ok(t_art) = ExtTuner::with_artifact(&dir) else {
+        eprintln!("SKIPPING ext winner test — run `make artifacts`");
+        return;
+    };
+    let t_nat = ExtTuner::native();
+    let net = measured_net();
+    let p_grid = vec![2usize, 8, 24, 48];
+    let m_grid = grids::log_grid(1, 1 << 20, 16);
+    let arts = t_art.tune(&net, &p_grid, &m_grid).unwrap();
+    let nats = t_nat.tune(&net, &p_grid, &m_grid).unwrap();
+    for (a, n) in arts.iter().zip(&nats) {
+        let mut disagreements = 0;
+        for (da, dn) in a.entries.iter().zip(&n.entries) {
+            if da.strategy != dn.strategy {
+                let rel =
+                    (da.predicted - dn.predicted).abs() / dn.predicted.abs().max(1e-12);
+                assert!(rel < 1e-3, "{:?}: {da:?} vs {dn:?}", a.op);
+                disagreements += 1;
+            }
+        }
+        assert!(disagreements * 10 <= a.entries.len(), "{:?}", a.op);
+    }
+}

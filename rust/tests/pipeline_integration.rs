@@ -1,0 +1,161 @@
+//! Full-pipeline integration: measure → tune → run → compare, across
+//! network presets — the system test for the whole L3 stack (the e2e
+//! example does the same at icluster-1 scale; these are the fast,
+//! assertion-dense versions).
+
+use collective_tuner::collectives::{multilevel, Strategy};
+use collective_tuner::harness::experiments;
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp;
+use collective_tuner::topology::{ClusterSpec, GridSpec};
+use collective_tuner::tuner::validate::{validate_selection, ValidateOptions};
+use collective_tuner::tuner::{grids, Tuner};
+
+fn pipeline(cfg: &NetConfig, p: usize, m: u64) -> (f64, f64) {
+    // measure
+    let mut probe = Netsim::new(2, cfg.clone());
+    let net = plogp::bench::measure(&mut probe);
+    // tune — the grid includes the exact query point so the prediction
+    // refers to the same (p, m) the run executes (off-grid lookups snap
+    // to the nearest point, whose prediction is for *that* point)
+    let tuner = Tuner::native();
+    let mut m_grid = grids::log_grid(1, 1 << 20, 24);
+    m_grid.push(m);
+    m_grid.sort_unstable();
+    m_grid.dedup();
+    let (bcast, _) = tuner.tune(&net, &[p], &m_grid).unwrap();
+    let d = *bcast.lookup(p, m);
+    // run
+    let sched = d.strategy.build(p, 0, m, d.segment);
+    let mut world = World::new(Netsim::new(p, cfg.clone()));
+    let rep = world.run(&sched);
+    assert!(rep.verify(&sched).is_empty());
+    (d.predicted, rep.completion.as_secs())
+}
+
+#[test]
+fn measure_tune_run_agree_on_fast_ethernet() {
+    let (pred, meas) = pipeline(&NetConfig::fast_ethernet_ideal(), 24, 256 * 1024);
+    let rel = (pred - meas).abs() / meas;
+    assert!(rel < 0.15, "predicted {pred} vs measured {meas} (rel {rel})");
+}
+
+#[test]
+fn measure_tune_run_agree_on_gigabit() {
+    let (pred, meas) = pipeline(&NetConfig::gigabit_ethernet(), 16, 1 << 20);
+    let rel = (pred - meas).abs() / meas;
+    assert!(rel < 0.20, "predicted {pred} vs measured {meas} (rel {rel})");
+}
+
+#[test]
+fn measure_tune_run_agree_on_myrinet() {
+    let (pred, meas) = pipeline(&NetConfig::myrinet_like(), 32, 1 << 18);
+    let rel = (pred - meas).abs() / meas;
+    assert!(rel < 0.20, "predicted {pred} vs measured {meas} (rel {rel})");
+}
+
+#[test]
+fn tuned_choice_beats_untuned_defaults_at_scale() {
+    // the tuned strategy must beat the naive defaults (flat broadcast,
+    // chain broadcast) by a wide margin on the paper's cluster
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let p = 48;
+    let m = 1 << 20;
+    let mut probe = Netsim::new(2, cfg.clone());
+    let net = plogp::bench::measure(&mut probe);
+    let tuner = Tuner::native();
+    let (bcast, _) = tuner.tune(&net, &[p], &[m]).unwrap();
+    let d = bcast.at(0, 0);
+
+    let run = |s: Strategy, seg: Option<u64>| {
+        let sched = s.build(p, 0, m, seg);
+        let mut world = World::new(Netsim::new(p, cfg.clone()));
+        world.run(&sched).completion.as_secs()
+    };
+    let tuned = run(d.strategy, d.segment);
+    let flat = run(Strategy::BcastFlat, None);
+    let chain = run(Strategy::BcastChain, None);
+    assert!(tuned * 1.5 < flat, "tuned {tuned} vs flat {flat}");
+    assert!(tuned * 1.5 < chain, "tuned {tuned} vs chain {chain}");
+}
+
+#[test]
+fn selection_quality_holds_across_presets() {
+    let opts = ValidateOptions::default();
+    for cfg in [
+        NetConfig::fast_ethernet_ideal(),
+        NetConfig::gigabit_ethernet(),
+        NetConfig::myrinet_like(),
+    ] {
+        let mut probe = Netsim::new(2, cfg.clone());
+        let net = plogp::bench::measure(&mut probe);
+        let rep = validate_selection(
+            &cfg,
+            &net,
+            &Strategy::BCAST,
+            &[8, 24],
+            &[1024, 65536, 1 << 20],
+            &opts,
+        );
+        assert!(
+            rep.meaningful_accuracy() >= 0.99,
+            "preset {:?}: {rep:?}",
+            cfg.bandwidth_bps
+        );
+        assert!(rep.max_regret < 0.4, "{rep:?}");
+    }
+}
+
+#[test]
+fn experiments_all_run_and_write_csv() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let dir = std::env::temp_dir().join("ct-pipeline-csv");
+    for id in ["tables", "fig3b"] {
+        let r = experiments::run(id, &cfg).unwrap();
+        assert!(!r.table.is_empty());
+        let p = r.write_csv(&dir).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.lines().count() > 2, "{id} CSV too small");
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn multilevel_pipeline_tunes_each_cluster() {
+    // grid of two different technologies: each cluster gets its own
+    // tuned strategy, and the composed broadcast works
+    let grid = GridSpec::new(
+        vec![
+            ClusterSpec::new("fe", 10, NetConfig::fast_ethernet_ideal()),
+            ClusterSpec::new("ge", 6, NetConfig::gigabit_ethernet()),
+        ],
+        NetConfig::wan_link(),
+    );
+    let m = 128 * 1024;
+    let tuner = Tuner::native();
+    let intra: Vec<(Strategy, Option<u64>)> = grid
+        .clusters
+        .iter()
+        .map(|c| {
+            let mut probe = Netsim::new(2, c.net.clone());
+            let net = plogp::bench::measure(&mut probe);
+            let (b, _) = tuner.tune(&net, &[c.nodes], &[m]).unwrap();
+            let d = b.at(0, 0);
+            (d.strategy, d.segment)
+        })
+        .collect();
+    let sched = multilevel::bcast(&grid, m, &intra);
+    let mut world = World::new(grid.build_sim());
+    let rep = world.run(&sched);
+    assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+}
+
+#[test]
+fn bench_plogp_is_stable_across_repetitions() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let mut sim = Netsim::new(2, cfg);
+    let a = plogp::bench::measure(&mut sim);
+    let b = plogp::bench::measure(&mut sim);
+    assert_eq!(a, b, "measurement must be deterministic");
+}

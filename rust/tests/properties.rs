@@ -1,0 +1,413 @@
+//! Property-based tests over the whole coordinator: randomized
+//! (P, root, m, segment, strategy, network) cases checked against the
+//! system's invariants. Replay a failure with `CHECK_SEED=<seed>`.
+
+use collective_tuner::collectives::{composed, tree, Strategy};
+use collective_tuner::models;
+use collective_tuner::mpi::{Payload, World};
+use collective_tuner::netsim::{NetConfig, Netsim, SimTime, TcpConfig};
+use collective_tuner::plogp::{self, GapTable, PLogP};
+use collective_tuner::tuner::grids;
+use collective_tuner::util::check::property;
+use collective_tuner::util::prng::Prng;
+
+fn random_net_config(rng: &mut Prng) -> NetConfig {
+    NetConfig {
+        bandwidth_bps: rng.log_uniform(1e6, 1e9),
+        prop_delay: rng.log_uniform(1e-6, 1e-3),
+        send_overhead: rng.log_uniform(1e-6, 1e-4),
+        recv_overhead: rng.log_uniform(1e-6, 1e-4),
+        header_bytes: rng.range(0, 100),
+        mss: rng.range(500, 9000),
+        tcp: if rng.chance(0.5) {
+            TcpConfig::ideal()
+        } else {
+            TcpConfig::linux22()
+        },
+    }
+}
+
+fn random_strategy(rng: &mut Prng) -> Strategy {
+    *rng.pick(&Strategy::ALL)
+}
+
+/// Every strategy, on any cluster, delivers exactly the expected payload
+/// multiset to every rank, never deadlocks, and finishes in finite
+/// positive virtual time.
+#[test]
+fn any_collective_delivers_exactly_the_right_payloads() {
+    property("collective delivery", 120, |rng| {
+        let p = rng.range_usize(2, 33);
+        let root = rng.range(0, p as u64) as u32;
+        let m = rng.range(1, 1 << 21);
+        let strategy = random_strategy(rng);
+        let seg = if strategy.is_segmented() {
+            Some(rng.range(1, m + 1))
+        } else {
+            None
+        };
+        let cfg = random_net_config(rng);
+        let sched = strategy.build(p, root, m, seg);
+        assert!(sched.validate().is_empty(), "{:?}", sched.validate());
+        let mut world = World::new(Netsim::new(p, cfg));
+        let rep = world.run(&sched);
+        assert!(
+            rep.verify(&sched).is_empty(),
+            "{} p={p} root={root} m={m} seg={seg:?}: {:?}",
+            strategy.name(),
+            rep.verify(&sched)
+        );
+        assert!(rep.completion > SimTime::ZERO);
+        assert!(rep.completion.as_secs().is_finite());
+    });
+}
+
+/// Completion time is invariant under the choice of root (homogeneous
+/// cluster, symmetric topology).
+#[test]
+fn completion_is_root_invariant() {
+    property("root invariance", 40, |rng| {
+        let p = rng.range_usize(2, 17);
+        let m = rng.range(1, 1 << 18);
+        let strategy = random_strategy(rng);
+        let seg = strategy.is_segmented().then(|| rng.range(1, m + 1));
+        let cfg = random_net_config(rng);
+        let mut times = Vec::new();
+        for root in [0u32, (p as u32) / 2, p as u32 - 1] {
+            let sched = strategy.build(p, root, m, seg);
+            let mut world = World::new(Netsim::new(p, cfg.clone()));
+            times.push(world.run(&sched).completion);
+        }
+        assert!(
+            times.windows(2).all(|w| w[0] == w[1]),
+            "{} p={p} m={m}: {times:?}",
+            strategy.name()
+        );
+    });
+}
+
+/// Broadcast send counts are structural: P-1 sends for unsegmented
+/// strategies, (P-1)*k for segmented ones.
+#[test]
+fn broadcast_send_counts_are_structural() {
+    property("bcast send counts", 60, |rng| {
+        let p = rng.range_usize(2, 40);
+        let m = rng.range(1, 1 << 20);
+        let seg = rng.range(1, m + 1);
+        let k = m.div_ceil(seg) as usize;
+        for (strategy, want) in [
+            (Strategy::BcastFlat, p - 1),
+            (Strategy::BcastChain, p - 1),
+            (Strategy::BcastBinary, p - 1),
+            (Strategy::BcastBinomial, p - 1),
+            (Strategy::BcastSegFlat, (p - 1) * k),
+            (Strategy::BcastSegChain, (p - 1) * k),
+            (Strategy::BcastSegBinomial, (p - 1) * k),
+        ] {
+            let sched = strategy.build(p, 0, m, Some(seg));
+            assert_eq!(
+                sched.total_sends(),
+                want,
+                "{} p={p} m={m} seg={seg}",
+                strategy.name()
+            );
+        }
+    });
+}
+
+/// Segment reassembly is lossless: the union of segment ranges delivered
+/// to any rank is exactly [0, m) with no overlap.
+#[test]
+fn segmented_broadcast_reassembles_losslessly() {
+    property("segment reassembly", 60, |rng| {
+        let p = rng.range_usize(2, 20);
+        let m = rng.range(2, 1 << 20);
+        let seg = rng.range(1, m + 1);
+        let strategy = *rng.pick(&[
+            Strategy::BcastSegFlat,
+            Strategy::BcastSegChain,
+            Strategy::BcastSegBinomial,
+        ]);
+        let sched = strategy.build(p, 0, m, Some(seg));
+        let mut world = World::new(Netsim::new(p, NetConfig::fast_ethernet_ideal()));
+        let rep = world.run(&sched);
+        for (r, payloads) in rep.received.iter().enumerate() {
+            if r == 0 {
+                continue;
+            }
+            let mut ranges: Vec<(u64, u64)> = payloads
+                .iter()
+                .map(|pl| match pl {
+                    Payload::Range { offset, len } => (*offset, *len),
+                    other => panic!("unexpected payload {other:?}"),
+                })
+                .collect();
+            ranges.sort();
+            let mut cursor = 0;
+            for (off, len) in &ranges {
+                assert_eq!(*off, cursor, "gap/overlap at rank {r}");
+                cursor = off + len;
+            }
+            assert_eq!(cursor, m, "rank {r} total");
+        }
+    });
+}
+
+/// The models never go negative or non-finite, and segmentation with the
+/// message size itself equals the unsegmented model.
+#[test]
+fn model_sanity_invariants() {
+    property("model sanity", 200, |rng| {
+        let l = rng.log_uniform(1e-6, 1e-2);
+        let n = rng.range_usize(2, 40);
+        let mut sizes = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += rng.uniform(1.0, 10_000.0);
+            sizes.push(acc);
+        }
+        let gaps: Vec<f64> = sizes
+            .iter()
+            .map(|s| rng.log_uniform(1e-6, 1e-3) + s * rng.log_uniform(1e-10, 1e-6))
+            .collect();
+        let net = PLogP::new(l, GapTable::new(sizes, gaps));
+        let p = rng.range_usize(1, 64);
+        let m = rng.range(1, 1 << 22);
+        for strategy in Strategy::ALL {
+            let t = models::predict(strategy, &net, p, m, None);
+            assert!(t.is_finite() && t >= 0.0, "{} p={p} m={m}: {t}", strategy.name());
+            if strategy.is_segmented() {
+                let unseg = match strategy {
+                    Strategy::BcastSegFlat => {
+                        models::predict(Strategy::BcastFlat, &net, p, m, None)
+                    }
+                    Strategy::BcastSegChain => {
+                        models::predict(Strategy::BcastChain, &net, p, m, None)
+                    }
+                    Strategy::BcastSegBinomial => {
+                        models::predict(Strategy::BcastBinomial, &net, p, m, None)
+                    }
+                    _ => unreachable!(),
+                };
+                let with_m = models::predict(strategy, &net, p, m, Some(m));
+                assert!(
+                    (with_m - unseg).abs() < 1e-9 * unseg.abs().max(1.0),
+                    "{}: seg=m {with_m} != unseg {unseg}",
+                    strategy.name()
+                );
+            }
+        }
+    });
+}
+
+/// best_segment always returns the grid minimum (including m itself).
+#[test]
+fn best_segment_is_argmin() {
+    let net = {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        plogp::bench::measure(&mut sim)
+    };
+    property("best segment argmin", 80, |rng| {
+        let p = rng.range_usize(2, 50);
+        let m = rng.range(1, 1 << 20);
+        let grid: Vec<u64> = (0..rng.range_usize(1, 12))
+            .map(|_| rng.range(1, 1 << 20))
+            .collect();
+        let strategy = *rng.pick(&[
+            Strategy::BcastSegFlat,
+            Strategy::BcastSegChain,
+            Strategy::BcastSegBinomial,
+        ]);
+        let (best_t, best_s) = models::best_segment(strategy, &net, p, m, &grid);
+        for cand in grid.iter().copied().chain(std::iter::once(m)) {
+            let t = models::predict(strategy, &net, p, m, Some(cand));
+            assert!(
+                best_t <= t + 1e-12,
+                "{}: best {best_t}@{best_s} beaten by {t}@{cand}",
+                strategy.name()
+            );
+        }
+    });
+}
+
+/// Decision tables are total and consistent: every lookup returns a
+/// strategy of the right family with positive predicted time; segmented
+/// choices carry a valid segment.
+#[test]
+fn decision_tables_are_total_functions() {
+    let net = {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+        plogp::bench::measure(&mut sim)
+    };
+    let tuner = collective_tuner::tuner::Tuner::native();
+    let p_grid: Vec<usize> = vec![2, 13, 37];
+    let m_grid = grids::log_grid(1, 1 << 20, 16);
+    let (b, s) = tuner.tune(&net, &p_grid, &m_grid).unwrap();
+    property("decision table totality", 200, |rng| {
+        let p = rng.range_usize(2, 64);
+        let m = rng.range(1, 1 << 22);
+        let db = b.lookup(p, m);
+        assert!(db.strategy.is_bcast());
+        assert!(db.predicted > 0.0);
+        let ds = s.lookup(p, m);
+        assert!(ds.strategy.is_scatter());
+        if let Some(seg) = db.segment {
+            assert!(db.strategy.is_segmented());
+            assert!(seg >= 1);
+        }
+    });
+}
+
+/// Binomial tree helpers: parent/children consistent, spanning, and the
+/// scatter split covers every rank exactly once.
+#[test]
+fn tree_structure_invariants() {
+    property("tree invariants", 100, |rng| {
+        let p = rng.range_usize(1, 200);
+        // spanning + each rank visited once
+        let mut seen = vec![false; p];
+        let mut stack = vec![0u32];
+        while let Some(v) = stack.pop() {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+            for c in tree::binomial_children(v, p) {
+                assert_eq!(tree::binomial_parent(c), v);
+                stack.push(c);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+        assert_eq!(tree::binomial_subtree_size(0, p), p);
+        // scatter split partitions [0, p)
+        if p >= 2 {
+            fn walk(lo: u32, hi: u32, acc: &mut Vec<u32>) {
+                if hi - lo <= 1 {
+                    acc.push(lo);
+                    return;
+                }
+                let mid = tree::scatter_mid(lo, hi);
+                walk(lo, mid, acc);
+                walk(mid, hi, acc);
+            }
+            let mut acc = Vec::new();
+            walk(0, p as u32, &mut acc);
+            acc.sort_unstable();
+            assert_eq!(acc, (0..p as u32).collect::<Vec<_>>());
+        }
+    });
+}
+
+/// Failure injection: slowing a node or a link never makes any collective
+/// complete earlier.
+#[test]
+fn failure_injection_is_monotone() {
+    property("failure monotonicity", 40, |rng| {
+        let p = rng.range_usize(3, 17);
+        let m = rng.range(1024, 1 << 18);
+        let strategy = *rng.pick(&[
+            Strategy::BcastFlat,
+            Strategy::BcastChain,
+            Strategy::BcastBinomial,
+            Strategy::ScatterFlat,
+            Strategy::ScatterBinomial,
+        ]);
+        let sched = strategy.build(p, 0, m, None);
+        let cfg = NetConfig::fast_ethernet_ideal();
+
+        let mut clean = World::new(Netsim::new(p, cfg.clone()));
+        let t_clean = clean.run(&sched).completion;
+
+        let mut slowed = World::new(Netsim::new(p, cfg.clone()));
+        let victim = rng.range(0, p as u64) as u32;
+        slowed.sim_mut().inject_node_slowdown(victim, rng.uniform(1.0, 8.0));
+        let t_slow = slowed.run(&sched).completion;
+        assert!(t_slow >= t_clean, "{}: slowdown sped things up", strategy.name());
+
+        let mut lagged = World::new(Netsim::new(p, cfg));
+        let a = rng.range(0, p as u64) as u32;
+        let b = (a + 1 + rng.range(0, p as u64 - 1) as u32) % p as u32;
+        lagged.sim_mut().inject_link_delay(a, b, rng.uniform(0.0, 5e-3));
+        let t_lag = lagged.run(&sched).completion;
+        assert!(t_lag >= t_clean, "{}: link delay sped things up", strategy.name());
+    });
+}
+
+/// Composed collectives (gather/reduce/barrier/allgather/allreduce)
+/// verify on random cluster sizes and networks.
+#[test]
+fn composed_collectives_always_verify() {
+    property("composed ops", 60, |rng| {
+        let p = rng.range_usize(2, 33);
+        let m = rng.range(1, 1 << 16);
+        let cfg = random_net_config(rng);
+        let scheds = [
+            composed::gather_flat(p, 0, m),
+            composed::gather_binomial(p, 0, m),
+            composed::reduce_binomial(p, 0, m),
+            composed::barrier_binomial(p),
+            composed::allgather(p, 0, m),
+            composed::allreduce(p, 0, m),
+        ];
+        for sched in &scheds {
+            assert!(sched.validate().is_empty(), "{}: {:?}", sched.name, sched.validate());
+            let mut world = World::new(Netsim::new(p, cfg.clone()));
+            let rep = world.run(sched);
+            assert!(
+                rep.verify(sched).is_empty(),
+                "{} p={p} m={m}: {:?}",
+                sched.name,
+                rep.verify(sched)
+            );
+        }
+    });
+}
+
+/// The pLogP gap table interpolates within the min/max of the bracketing
+/// samples for interior queries, and is exact at samples.
+#[test]
+fn gap_table_interpolation_bounds() {
+    property("gap interpolation", 100, |rng| {
+        let n = rng.range_usize(2, 30);
+        let mut sizes = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += rng.uniform(1.0, 1000.0);
+            sizes.push(acc);
+        }
+        let gaps: Vec<f64> = (0..n).map(|_| rng.log_uniform(1e-6, 1e-2)).collect();
+        let table = GapTable::new(sizes.clone(), gaps.clone());
+        for _ in 0..20 {
+            let i = rng.range_usize(0, n - 1);
+            let t = rng.next_f64();
+            let m = sizes[i] + t * (sizes[i + 1] - sizes[i]);
+            let g = table.gap(m);
+            let (lo, hi) = (gaps[i].min(gaps[i + 1]), gaps[i].max(gaps[i + 1]));
+            assert!(
+                g >= lo - 1e-12 && g <= hi + 1e-12,
+                "g({m})={g} outside [{lo},{hi}]"
+            );
+        }
+        for (s, g) in sizes.iter().zip(&gaps) {
+            assert!((table.gap(*s) - g).abs() < 1e-9 * g.abs().max(1e-9));
+        }
+    });
+}
+
+/// Simulator determinism: identical runs give bit-identical completion
+/// times and message counts.
+#[test]
+fn simulation_is_deterministic() {
+    property("determinism", 30, |rng| {
+        let p = rng.range_usize(2, 25);
+        let m = rng.range(1, 1 << 19);
+        let strategy = random_strategy(rng);
+        let seg = strategy.is_segmented().then(|| rng.range(1, m + 1));
+        let cfg = random_net_config(rng);
+        let sched = strategy.build(p, 0, m, seg);
+        let run = |cfg: &NetConfig| {
+            let mut world = World::new(Netsim::new(p, cfg.clone()));
+            let rep = world.run(&sched);
+            (rep.completion, rep.messages, rep.data_bytes)
+        };
+        assert_eq!(run(&cfg), run(&cfg));
+    });
+}
