@@ -1,0 +1,150 @@
+//! COORDINATOR STRESS — the L3 decision service under concurrent load.
+//!
+//! Demonstrates the acceptance path of the coordinator subsystem
+//! end-to-end, printing evidence at each step:
+//!
+//!   1. build a 4-island grid (two hardware classes, so two islands
+//!      share each signature);
+//!   2. register the islands (pLogP probe per island);
+//!   3. hammer the service from worker threads with a mixed
+//!      `(op, cluster, P, m)` workload — cold misses coalesce, the hot
+//!      path is sharded cache hits;
+//!   4. build and run a multi-level broadcast whose per-island
+//!      strategies are fetched from the coordinator (NOT tuned inline);
+//!   5. persist, warm-start a second coordinator, and show it answers
+//!      identically with zero tuner runs.
+//!
+//! ```bash
+//! cargo run --release --example coordinator_stress
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use collective_tuner::collectives::multilevel;
+use collective_tuner::coordinator::{Coordinator, CoordinatorConfig};
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::NetConfig;
+use collective_tuner::topology::{ClusterSpec, GridSpec};
+use collective_tuner::tuner::{grids, Op};
+use collective_tuner::util::prng::Prng;
+use collective_tuner::util::table::fmt_time;
+
+const THREADS: usize = 8;
+const REQUESTS_PER_THREAD: usize = 25_000;
+
+fn main() -> anyhow::Result<()> {
+    println!("=================================================================");
+    println!(" coordinator stress: concurrent cached decision-table service");
+    println!("=================================================================\n");
+
+    // ---- 1. a grid of four islands, two hardware classes ---------------
+    let grid = GridSpec::new(
+        vec![
+            ClusterSpec::new("fe-0", 12, NetConfig::fast_ethernet_icluster1()),
+            ClusterSpec::new("ge-0", 8, NetConfig::gigabit_ethernet()),
+            ClusterSpec::new("fe-1", 12, NetConfig::fast_ethernet_icluster1()),
+            ClusterSpec::new("ge-1", 8, NetConfig::gigabit_ethernet()),
+        ],
+        NetConfig::wan_link(),
+    );
+
+    let coord = Coordinator::new(CoordinatorConfig {
+        p_grid: vec![2, 4, 8, 12, 16, 24],
+        m_grid: grids::log_grid(1, 1 << 20, 16),
+        ..CoordinatorConfig::default()
+    });
+
+    // ---- 2. registration (probe each island) ----------------------------
+    let t0 = Instant::now();
+    let sigs = coord.register_islands(&grid);
+    println!(
+        "[1] registered {} islands in {:?}; {} distinct signature(s): fe-0/fe-1 \
+         and ge-0/ge-1 pair up: {}",
+        sigs.len(),
+        t0.elapsed(),
+        {
+            let mut s = sigs.clone();
+            s.sort();
+            s.dedup();
+            s.len()
+        },
+        sigs[0] == sigs[2] && sigs[1] == sigs[3] && sigs[0] != sigs[1]
+    );
+
+    // ---- 3. concurrent mixed load ---------------------------------------
+    let names: Vec<String> = grid.clusters.iter().map(|c| c.name.clone()).collect();
+    let served = AtomicU64::new(0);
+    let t1 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let coord = &coord;
+            let names = &names;
+            let served = &served;
+            s.spawn(move || {
+                let mut rng = Prng::new(0x5712E55 ^ t as u64);
+                for _ in 0..REQUESTS_PER_THREAD {
+                    let name = rng.pick(names);
+                    let op = if rng.chance(0.5) { Op::Bcast } else { Op::Scatter };
+                    let p = rng.range_usize(2, 25);
+                    let m = rng.range(1, 1 << 20);
+                    let d = coord.decision(op, name, p, m).expect("registered");
+                    std::hint::black_box(d);
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let dt = t1.elapsed().as_secs_f64();
+    let st = coord.stats();
+    println!(
+        "[2] served {} queries from {THREADS} threads in {:.2} s ({:.0} kq/s)",
+        served.load(Ordering::Relaxed),
+        dt,
+        served.load(Ordering::Relaxed) as f64 / dt / 1e3
+    );
+    println!(
+        "    cache: {} entries, {} hits / {} misses / {} evictions",
+        st.cache.entries, st.cache.hits, st.cache.misses, st.cache.evictions
+    );
+    println!(
+        "    tuner runs: {} (4 islands, 2 signatures — coalescing + sharing held)",
+        st.tunes
+    );
+    assert_eq!(st.tunes, 2, "exactly one tune per distinct signature");
+
+    // ---- 4. multilevel broadcast from coordinator tables ----------------
+    let sched = multilevel::tuned_bcast(&grid, 256 * 1024, &coord)?;
+    let mut world = World::new(grid.build_sim());
+    let rep = world.run(&sched);
+    let problems = rep.verify(&sched);
+    println!(
+        "[3] multilevel bcast over {} nodes via coordinator tables: \
+         completion {}, verified {}",
+        grid.total_nodes(),
+        fmt_time(rep.completion.as_secs()),
+        if problems.is_empty() { "ok" } else { "FAILED" }
+    );
+    assert!(problems.is_empty(), "{problems:?}");
+    assert_eq!(coord.tune_count(), 2, "schedule build must not tune inline");
+
+    // ---- 5. persist → warm start ----------------------------------------
+    let dir = std::env::temp_dir().join("ct-coordinator-stress");
+    let saved = coord.persist_to(&dir)?;
+    let warm = Coordinator::new(coord.config().clone());
+    let loaded = warm.warm_start_from(&dir)?;
+    let d_cold = coord.decision(Op::Bcast, "fe-0", 12, 1 << 18)?;
+    let d_warm = warm.decision(Op::Bcast, "fe-0", 12, 1 << 18)?;
+    println!(
+        "[4] persisted {saved} table pair(s); warm-started coordinator loaded \
+         {loaded} and answered {} (tuner runs: {})",
+        d_warm.strategy.name(),
+        warm.tune_count()
+    );
+    assert_eq!(d_cold.strategy, d_warm.strategy);
+    assert_eq!(warm.tune_count(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("\nSTRESS RESULT: OK — one tune per signature under {THREADS}-way load");
+    Ok(())
+}

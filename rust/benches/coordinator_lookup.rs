@@ -1,0 +1,138 @@
+//! Bench: the coordinator's decision path — cold miss (a full tuner
+//! run), warm hit (sharded cache lookup), and contended hit (the same
+//! lookup while 7 background threads hammer the service). Emits
+//! `BENCH_coordinator.json` at the repository root so subsequent PRs can
+//! track the hot path.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use collective_tuner::coordinator::{Coordinator, CoordinatorConfig};
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp::{bench as plogp_bench, PLogP};
+use collective_tuner::tuner::{grids, Op};
+use collective_tuner::util::benchkit::{bench, bench_with, section, BenchOpts, BenchResult};
+use collective_tuner::util::prng::Prng;
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        // moderate grid: big enough to be a real tuner run, small enough
+        // that the cold-miss bench finishes in seconds
+        p_grid: vec![2, 4, 8, 16, 24, 48],
+        m_grid: grids::log_grid(1, 1 << 20, 16),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn measured(cfg: NetConfig) -> PLogP {
+    let mut sim = Netsim::new(2, cfg);
+    plogp_bench::measure(&mut sim)
+}
+
+fn json_entry(label: &str, r: &BenchResult) -> String {
+    let s = &r.summary;
+    format!(
+        "    {{\"name\": \"{label}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
+         \"p95_s\": {:e}, \"iters\": {}}}",
+        s.mean, s.p50, s.p95, r.iters
+    )
+}
+
+fn main() {
+    let net_fe = measured(NetConfig::fast_ethernet_icluster1());
+    let net_ge = measured(NetConfig::gigabit_ethernet());
+
+    // ---- cold miss: fresh coordinator, first query runs the tuner ------
+    section("cold miss (one coalesced tuner run)");
+    let cold_opts = BenchOpts { warmup_iters: 1, min_iters: 5, max_iters: 50, min_seconds: 1.0 };
+    let r_cold = bench_with("cold miss: tables_for on empty cache", &cold_opts, || {
+        let coord = Coordinator::new(config());
+        coord.register("fe", 24, net_fe.clone());
+        std::hint::black_box(coord.tables("fe").unwrap());
+    });
+
+    // ---- warm hit: cached table, sharded read path ----------------------
+    section("warm hit (sharded cache lookup + table lookup)");
+    let coord = Coordinator::new(config());
+    coord.register("fe", 24, net_fe.clone());
+    coord.register("ge", 16, net_ge.clone());
+    let _ = coord.tables("fe").unwrap();
+    let _ = coord.tables("ge").unwrap();
+    let hit_opts = BenchOpts {
+        warmup_iters: 100,
+        min_iters: 10_000,
+        max_iters: 2_000_000,
+        min_seconds: 1.0,
+    };
+    let mut flip = 0u64;
+    let r_warm = bench_with("warm hit: decision()", &hit_opts, || {
+        flip = flip.wrapping_add(1);
+        let (name, op) = if flip % 2 == 0 { ("fe", Op::Bcast) } else { ("ge", Op::Scatter) };
+        std::hint::black_box(coord.decision(op, name, 24, 65536).unwrap());
+    });
+
+    // ---- contended hit: same lookup under 7 hammering threads ----------
+    section("contended hit (7 background threads on the same service)");
+    let stop = AtomicBool::new(false);
+    let background = AtomicU64::new(0);
+    let r_contended = std::thread::scope(|s| {
+        for t in 0..7u64 {
+            let coord = &coord;
+            let stop = &stop;
+            let background = &background;
+            s.spawn(move || {
+                let mut rng = Prng::new(0xBE4C_4000 ^ t);
+                while !stop.load(Ordering::Relaxed) {
+                    let name = if rng.chance(0.5) { "fe" } else { "ge" };
+                    let op = if rng.chance(0.5) { Op::Bcast } else { Op::Scatter };
+                    let p = rng.range_usize(2, 49);
+                    let m = rng.range(1, 1 << 20);
+                    std::hint::black_box(coord.decision(op, name, p, m).unwrap());
+                    background.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        let r = bench("contended hit: decision()", || {
+            std::hint::black_box(coord.decision(Op::Bcast, "fe", 24, 65536).unwrap());
+        });
+        stop.store(true, Ordering::Relaxed);
+        r
+    });
+    println!(
+        "background threads completed {} queries during the contended bench",
+        background.load(Ordering::Relaxed)
+    );
+    let st = coord.stats();
+    println!(
+        "service counters: {} entries, {} hits / {} misses, {} tuner runs",
+        st.cache.entries, st.cache.hits, st.cache.misses, st.tunes
+    );
+
+    // ---- emit BENCH_coordinator.json at the repo root -------------------
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits one level below the repo root")
+        .join("BENCH_coordinator.json");
+    let json = format!
+("{{
+  \"benchmark\": \"coordinator_lookup\",
+  \"description\": \"L3 coordinator decision path: cold miss vs warm hit vs contended hit\",
+  \"unit\": \"seconds per query\",
+  \"results\": [
+{},
+{},
+{}
+  ],
+  \"slowdown_cold_over_warm\": {:.1},
+  \"tuner_runs\": {}
+}}
+",
+        json_entry("cold_miss", &r_cold),
+        json_entry("warm_hit", &r_warm),
+        json_entry("contended_hit", &r_contended),
+        r_cold.summary.p50 / r_warm.summary.p50.max(1e-12),
+        st.tunes
+    );
+    std::fs::write(&out, json).expect("writing BENCH_coordinator.json");
+    println!("wrote {}", out.display());
+}

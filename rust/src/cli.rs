@@ -138,6 +138,17 @@ COMMANDS:
                   --out results/
   discover      recover islands-of-clusters from latency probes
                   --nodes 12  --clusters 2
+  serve         run the L3 tuning coordinator under concurrent load:
+                register islands, serve (op, cluster, P, m) queries from
+                worker threads, then run one drift-refresh pass
+                  --clusters 3   --nodes 16        (islands, nodes per island)
+                  --threads 8    --requests 10000  (load per thread)
+                  --shards 8     --capacity 32     (decision-table cache)
+                  --backend auto|native|artifact   --save dir/  --warm dir/
+  query         one-shot coordinator query (tunes on first use, cached after)
+                  --op bcast|scatter  --procs 24  --bytes 64k
+                  --cluster default   --nodes 50  --preset icluster1
+                  --save dir/  --warm dir/        (persist / warm-start tables)
   info          show artifact metadata and presets
   help          this text
 
@@ -146,6 +157,8 @@ EXAMPLES:
   collective-tuner tune --procs 8,24,48 --backend auto
   collective-tuner run --op bcast --strategy auto --procs 24 --bytes 256k
   collective-tuner experiment --id fig2 --out results/
+  collective-tuner serve --clusters 4 --threads 16 --requests 50000
+  collective-tuner query --op bcast --procs 48 --bytes 1M --save tables/
 ";
 
 #[cfg(test)]

@@ -8,8 +8,12 @@
 //! parameters. The whole thing is still one [`CommSchedule`] executed by
 //! the same deterministic executor.
 
+use anyhow::Result;
+
+use crate::coordinator::Coordinator;
 use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
 use crate::topology::GridSpec;
+use crate::tuner::Op;
 
 use super::{tree, Strategy};
 
@@ -83,6 +87,29 @@ pub fn bcast(
         }
     }
     s
+}
+
+/// Multi-level broadcast with the per-island strategy of every cluster
+/// fetched from the [`Coordinator`] — the construction both companion
+/// papers require: inter-cluster phase over the WAN, intra-cluster phase
+/// with whatever the tuner chose for *that island's* network.
+///
+/// The clusters must be registered with the coordinator under the names
+/// in `grid` (e.g. via [`Coordinator::register_islands`]); tables are
+/// tuned once per distinct signature and served from the cache on every
+/// subsequent schedule build — the coordinator is the only component
+/// that ever runs the tuner.
+pub fn tuned_bcast(
+    grid: &GridSpec,
+    bytes: u64,
+    coord: &Coordinator,
+) -> Result<CommSchedule> {
+    let mut intra = Vec::with_capacity(grid.clusters.len());
+    for c in &grid.clusters {
+        let d = coord.decision(Op::Bcast, &c.name, c.nodes, bytes)?;
+        intra.push((d.strategy, d.segment));
+    }
+    Ok(bcast(grid, bytes, &intra))
 }
 
 /// Multi-level barrier: intra-cluster fan-in to each cluster root,
@@ -316,6 +343,41 @@ mod tests {
             let rep = w.run(&sched);
             assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
         }
+    }
+
+    #[test]
+    fn tuned_bcast_fetches_per_island_tables_from_coordinator() {
+        use crate::coordinator::{Coordinator, CoordinatorConfig};
+        use crate::tuner::grids;
+        let g = GridSpec::new(
+            vec![
+                ClusterSpec::new("fast", 5, NetConfig::fast_ethernet_icluster1()),
+                ClusterSpec::new("giga", 4, NetConfig::gigabit_ethernet()),
+            ],
+            NetConfig::wan_link(),
+        );
+        let coord = Coordinator::new(CoordinatorConfig {
+            p_grid: vec![2, 8, 24],
+            m_grid: grids::log_grid(1, 1 << 20, 6),
+            ..CoordinatorConfig::default()
+        });
+        coord.register_islands(&g);
+        let sched = tuned_bcast(&g, 1 << 16, &coord).unwrap();
+        assert!(sched.validate().is_empty(), "{:?}", sched.validate());
+        let mut w = World::new(g.build_sim());
+        let rep = w.run(&sched);
+        assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        assert_eq!(coord.tune_count(), 2, "one tune per distinct island signature");
+        // a second schedule build is pure cache hits — no inline tuning
+        let _ = tuned_bcast(&g, 1 << 10, &coord).unwrap();
+        assert_eq!(coord.tune_count(), 2);
+    }
+
+    #[test]
+    fn tuned_bcast_unregistered_island_is_an_error() {
+        let g = grid(3, 3);
+        let coord = crate::coordinator::Coordinator::with_defaults();
+        assert!(tuned_bcast(&g, 4096, &coord).is_err());
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Sharded concurrent decision-table cache.
+//!
+//! The coordinator's hot path is a lookup by [`ClusterSignature`]; the
+//! cold path is a tuner run that can take milliseconds. A single lock
+//! would serialize every client behind every miss, so the cache is
+//! sharded: signatures hash to one of `N` independent
+//! `RwLock<HashMap<..>>` shards, readers on the hot path take one shard's
+//! read lock only, and writers (table publication, refresh swaps) block
+//! just their shard. Each shard evicts least-recently-used entries when
+//! it reaches capacity; hit/miss/eviction counters are lock-free.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use super::signature::ClusterSignature;
+
+/// Lock-free counter snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries resident across all shards at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0 when no lookups yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry<V> {
+    value: V,
+    /// Logical timestamp of the last touch; bumped on every `get` hit
+    /// without upgrading the shard's read lock.
+    last_used: AtomicU64,
+}
+
+/// A sharded LRU map from [`ClusterSignature`] to a shared value
+/// (the coordinator stores `Arc<TablePair>`).
+pub struct ShardedCache<V> {
+    shards: Vec<RwLock<HashMap<ClusterSignature, Entry<V>>>>,
+    capacity_per_shard: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<V: Clone> ShardedCache<V> {
+    pub fn new(num_shards: usize, capacity_per_shard: usize) -> ShardedCache<V> {
+        assert!(num_shards >= 1, "need at least one shard");
+        assert!(capacity_per_shard >= 1, "need capacity for at least one entry");
+        ShardedCache {
+            shards: (0..num_shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            capacity_per_shard,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &ClusterSignature) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Hot-path lookup: one shard read lock, counters and recency are
+    /// atomic bumps.
+    pub fn get(&self, key: &ClusterSignature) -> Option<V> {
+        let shard = self.shards[self.shard_of(key)].read().unwrap();
+        match shard.get(key) {
+            Some(e) => {
+                e.last_used.store(self.next_tick(), Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Counter-neutral lookup: same read path as [`ShardedCache::get`]
+    /// (including the recency bump) but without touching the hit/miss
+    /// counters. The coordinator's miss path re-checks the cache under
+    /// its in-flight lock, and that re-check must not double-count the
+    /// logical miss the first `get` already recorded.
+    pub fn peek(&self, key: &ClusterSignature) -> Option<V> {
+        let shard = self.shards[self.shard_of(key)].read().unwrap();
+        shard.get(key).map(|e| {
+            e.last_used.store(self.next_tick(), Ordering::Relaxed);
+            e.value.clone()
+        })
+    }
+
+    /// Publish (or atomically replace) the value for `key`, evicting the
+    /// shard's least-recently-used entry if the shard is full.
+    pub fn insert(&self, key: ClusterSignature, value: V) {
+        let t = self.next_tick();
+        let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
+        if !shard.contains_key(&key) && shard.len() >= self.capacity_per_shard {
+            let victim = shard
+                .iter()
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                shard.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.insert(key, Entry { value, last_used: AtomicU64::new(t) });
+    }
+
+    /// Drop one entry (refresh uses this to retire a drifted signature).
+    pub fn remove(&self, key: &ClusterSignature) -> bool {
+        self.shards[self.shard_of(key)]
+            .write()
+            .unwrap()
+            .remove(key)
+            .is_some()
+    }
+
+    pub fn contains(&self, key: &ClusterSignature) -> bool {
+        self.shards[self.shard_of(key)].read().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total capacity across shards.
+    pub fn capacity(&self) -> usize {
+        self.shards.len() * self.capacity_per_shard
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+    }
+
+    /// Counter + occupancy snapshot (counters are monotonic; the
+    /// snapshot is not atomic across shards).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    /// Copy out every resident `(signature, value)` pair (persistence).
+    pub fn snapshot(&self) -> Vec<(ClusterSignature, V)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let shard = s.read().unwrap();
+            out.extend(shard.iter().map(|(k, e)| (*k, e.value.clone())));
+        }
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(nodes: usize) -> ClusterSignature {
+        ClusterSignature {
+            nodes,
+            ops: super::super::signature::OPS_ALL,
+            l_bucket: -170,
+            gap_buckets: [-203, -190, -120, -80, -52],
+        }
+    }
+
+    #[test]
+    fn get_miss_then_insert_then_hit() {
+        let c: ShardedCache<u32> = ShardedCache::new(4, 8);
+        assert_eq!(c.get(&sig(2)), None);
+        c.insert(sig(2), 42);
+        assert_eq!(c.get(&sig(2)), Some(42));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insert_replaces_in_place() {
+        let c: ShardedCache<u32> = ShardedCache::new(2, 2);
+        c.insert(sig(3), 1);
+        c.insert(sig(3), 2);
+        assert_eq!(c.get(&sig(3)), Some(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn lru_eviction_order_single_shard() {
+        // one shard so all keys contend for the same capacity
+        let c: ShardedCache<u32> = ShardedCache::new(1, 3);
+        c.insert(sig(10), 10);
+        c.insert(sig(11), 11);
+        c.insert(sig(12), 12);
+        // touch 10 so 11 becomes the LRU
+        assert_eq!(c.get(&sig(10)), Some(10));
+        c.insert(sig(13), 13);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.contains(&sig(10)), "recently-used entry survived");
+        assert!(!c.contains(&sig(11)), "LRU entry evicted");
+        assert!(c.contains(&sig(12)));
+        assert!(c.contains(&sig(13)));
+    }
+
+    #[test]
+    fn peek_reads_without_touching_counters() {
+        let c: ShardedCache<u32> = ShardedCache::new(2, 4);
+        c.insert(sig(2), 7);
+        assert_eq!(c.peek(&sig(2)), Some(7));
+        assert_eq!(c.peek(&sig(3)), None);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (0, 0));
+        // but peek still refreshes recency: 2 must survive over 4
+        let c1: ShardedCache<u32> = ShardedCache::new(1, 2);
+        c1.insert(sig(2), 2);
+        c1.insert(sig(4), 4);
+        assert_eq!(c1.peek(&sig(2)), Some(2)); // 4 becomes LRU
+        c1.insert(sig(5), 5);
+        assert!(c1.contains(&sig(2)));
+        assert!(!c1.contains(&sig(4)));
+    }
+
+    #[test]
+    fn remove_and_clear() {
+        let c: ShardedCache<u32> = ShardedCache::new(2, 4);
+        c.insert(sig(5), 5);
+        assert!(c.remove(&sig(5)));
+        assert!(!c.remove(&sig(5)));
+        c.insert(sig(6), 6);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let c: ShardedCache<u32> = ShardedCache::new(4, 8);
+        for n in [9usize, 3, 7, 5] {
+            c.insert(sig(n), n as u32);
+        }
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 4);
+        let nodes: Vec<usize> = snap.iter().map(|(k, _)| k.nodes).collect();
+        assert_eq!(nodes, vec![3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_do_not_lose_counts() {
+        use std::sync::atomic::AtomicU64;
+        let c: ShardedCache<u64> = ShardedCache::new(8, 16);
+        for n in 2..10usize {
+            c.insert(sig(n), n as u64);
+        }
+        let found = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let c = &c;
+                let found = &found;
+                scope.spawn(move || {
+                    for i in 0..1000usize {
+                        let n = 2 + (i + t) % 8;
+                        if c.get(&sig(n)) == Some(n as u64) {
+                            found.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(found.load(Ordering::Relaxed), 8 * 1000);
+        assert_eq!(c.stats().hits, 8 * 1000);
+    }
+}

@@ -1,1 +1,49 @@
-// paper's L3 coordination contribution
+//! L3 tuning coordinator — a concurrent, cached decision-table service.
+//!
+//! The paper's end state is a runtime that tunes **once per network**
+//! and then serves strategy decisions statically (§5); its companion
+//! papers (cs/0408033 on logical-cluster identification, cs/0206038 on
+//! multi-level collectives) assume a per-cluster coordination layer that
+//! owns those decisions. This module is that layer:
+//!
+//! * [`signature`] — [`ClusterSignature`] fingerprints a network by its
+//!   quantized pLogP parameters, node count, and op set, so equivalent
+//!   clusters share one decision table.
+//! * [`cache`] — [`ShardedCache`], N shards of
+//!   `RwLock<HashMap<Signature, Arc<TablePair>>>` with per-shard LRU
+//!   eviction and lock-free hit/miss/eviction counters; the hot path
+//!   never serializes behind tuning.
+//! * [`service`] — [`Coordinator`], the long-running service: registry
+//!   of discovered clusters, `(op, cluster, P, m) → Decision` queries,
+//!   and a request-coalescing miss path (concurrent cold misses on one
+//!   signature block on a single in-flight tuner run).
+//! * [`refresh`] — [`RefreshPolicy`], periodic pLogP re-probing with
+//!   drift detection and atomic table swap.
+//!
+//! Typical service lifecycle (what `collective-tuner serve` runs):
+//!
+//! ```no_run
+//! use collective_tuner::coordinator::Coordinator;
+//! use collective_tuner::netsim::NetConfig;
+//! use collective_tuner::topology::{ClusterSpec, GridSpec};
+//! use collective_tuner::tuner::Op;
+//!
+//! let grid = GridSpec::new(
+//!     vec![ClusterSpec::icluster1()],
+//!     NetConfig::wan_link(),
+//! );
+//! let coord = Coordinator::with_defaults();
+//! coord.register_islands(&grid);                       // discovery feeds the registry
+//! let d = coord.decision(Op::Bcast, "icluster-1", 48, 1 << 20).unwrap();
+//! println!("use {} (segment {:?})", d.strategy.name(), d.segment);
+//! ```
+
+pub mod cache;
+pub mod refresh;
+pub mod service;
+pub mod signature;
+
+pub use cache::{CacheStats, ShardedCache};
+pub use refresh::{RefreshOutcome, RefreshPolicy};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats, RegisteredCluster, TablePair};
+pub use signature::ClusterSignature;

@@ -1,0 +1,223 @@
+//! Refresh policy: detect pLogP drift and atomically re-tune.
+//!
+//! The paper's operating mode is "tune once, serve statically" (§5) —
+//! valid exactly as long as the measured parameters still describe the
+//! network. Hardware swaps, kernel upgrades (the §4 TCP behaviours are
+//! kernel-version-specific), or load changes move `L` and `g(m)`; a
+//! deployed coordinator therefore periodically re-probes and compares
+//! against the parameters a cluster was registered with. Below the
+//! drift threshold nothing happens (lookups stay on the cached table);
+//! above it the cluster is re-registered under its new signature, a
+//! fresh table is tuned, and the published `Arc` is swapped atomically —
+//! concurrent readers see either the old or the new table, never a
+//! partial one.
+
+use anyhow::{Context, Result};
+
+use crate::netsim::Netsim;
+use crate::plogp::bench::{self, BenchOptions};
+
+use super::service::Coordinator;
+use super::signature::{self, ClusterSignature};
+
+/// When and how to re-probe.
+#[derive(Debug, Clone)]
+pub struct RefreshPolicy {
+    /// Re-tune when [`signature::drift`] exceeds this. The default (10 %)
+    /// sits above measurement noise (~couple %) and below the margins
+    /// at which strategy crossover points actually move.
+    pub drift_tolerance: f64,
+    /// Measurement options for the re-probe.
+    pub bench: BenchOptions,
+}
+
+impl Default for RefreshPolicy {
+    fn default() -> Self {
+        RefreshPolicy { drift_tolerance: 0.10, bench: BenchOptions::default() }
+    }
+}
+
+/// What one refresh pass decided.
+#[derive(Debug, Clone)]
+pub enum RefreshOutcome {
+    /// Drift under tolerance; the cached table stands.
+    Unchanged { drift: f64 },
+    /// Drift over tolerance; table re-tuned and swapped in.
+    Refreshed {
+        drift: f64,
+        old: ClusterSignature,
+        new: ClusterSignature,
+    },
+}
+
+impl RefreshOutcome {
+    pub fn drift(&self) -> f64 {
+        match self {
+            RefreshOutcome::Unchanged { drift } | RefreshOutcome::Refreshed { drift, .. } => {
+                *drift
+            }
+        }
+    }
+
+    pub fn refreshed(&self) -> bool {
+        matches!(self, RefreshOutcome::Refreshed { .. })
+    }
+}
+
+impl Coordinator {
+    /// Re-probe `cluster`'s network on `sim` — between the same
+    /// representative pair it was registered from — and re-tune if the
+    /// parameters drifted beyond the policy's tolerance.
+    pub fn refresh(
+        &self,
+        cluster: &str,
+        sim: &mut Netsim,
+        policy: &RefreshPolicy,
+    ) -> Result<RefreshOutcome> {
+        let rc = self
+            .cluster(cluster)
+            .with_context(|| format!("cluster '{cluster}' is not registered"))?;
+        let fresh = bench::measure_pair_with(sim, rc.probe.0, rc.probe.1, &policy.bench);
+        let drift = signature::drift(&rc.net, &fresh);
+        if drift <= policy.drift_tolerance {
+            return Ok(RefreshOutcome::Unchanged { drift });
+        }
+        let new = self.register_with_probe(cluster, rc.nodes, fresh.clone(), rc.probe);
+        self.force_retune(new, &fresh);
+        if new != rc.signature {
+            // Retire the drifted table unless another registered cluster
+            // still resolves to that signature.
+            let still_used = self
+                .clusters()
+                .iter()
+                .any(|c| c.name != cluster && c.signature == rc.signature);
+            if !still_used {
+                self.evict_signature(&rc.signature);
+            }
+        }
+        Ok(RefreshOutcome::Refreshed { drift, old: rc.signature, new })
+    }
+
+    /// Refresh every registered cluster against simulators produced by
+    /// `make_sim` (name → probe simulator). Returns per-cluster outcomes
+    /// sorted by name.
+    pub fn refresh_all<F: FnMut(&str) -> Netsim>(
+        &self,
+        mut make_sim: F,
+        policy: &RefreshPolicy,
+    ) -> Result<Vec<(String, RefreshOutcome)>> {
+        let mut out = Vec::new();
+        for rc in self.clusters() {
+            let mut sim = make_sim(&rc.name);
+            let outcome = self.refresh(&rc.name, &mut sim, policy)?;
+            out.push((rc.name, outcome));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NetConfig;
+    use crate::plogp;
+    use crate::tuner::{grids, Op};
+
+    use super::super::service::CoordinatorConfig;
+
+    fn small() -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            shards: 2,
+            capacity_per_shard: 4,
+            p_grid: vec![2, 8, 24],
+            m_grid: grids::log_grid(1, 1 << 20, 6),
+            ..CoordinatorConfig::default()
+        })
+    }
+
+    fn measured(cfg: NetConfig) -> crate::plogp::PLogP {
+        let mut sim = Netsim::new(2, cfg);
+        plogp::bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn stable_network_is_unchanged() {
+        let c = small();
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        let _ = c.tables("a").unwrap();
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        let outcome = c.refresh("a", &mut sim, &RefreshPolicy::default()).unwrap();
+        assert!(!outcome.refreshed(), "{outcome:?}");
+        assert!(outcome.drift() < 0.01, "{outcome:?}");
+        assert_eq!(c.tune_count(), 1, "no re-tune on a stable network");
+    }
+
+    #[test]
+    fn drifted_network_is_retuned_and_swapped() {
+        let c = small();
+        // register as Fast Ethernet, then "the network got upgraded"
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        let before = c.tables("a").unwrap();
+        let mut upgraded = Netsim::new(2, NetConfig::gigabit_ethernet());
+        let outcome = c.refresh("a", &mut upgraded, &RefreshPolicy::default()).unwrap();
+        assert!(outcome.refreshed(), "{outcome:?}");
+        assert!(outcome.drift() > 0.10, "{outcome:?}");
+        assert_eq!(c.tune_count(), 2);
+        // registry now answers from the new table
+        let after = c.tables("a").unwrap();
+        assert!(!std::sync::Arc::ptr_eq(&before, &after));
+        // and the decision reflects the faster network
+        let d = c.decision(Op::Bcast, "a", 24, 1 << 20).unwrap();
+        assert!(d.predicted > 0.0 && d.predicted.is_finite());
+        match outcome {
+            RefreshOutcome::Refreshed { old, new, .. } => assert_ne!(old, new),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn refresh_probes_the_registered_pair_not_rank_zero() {
+        let c = small();
+        // "b" is an island living on nodes 4..8 of a larger simulator;
+        // it was measured between (4, 5) and must be re-probed there
+        let mut sim = Netsim::new(8, NetConfig::fast_ethernet_ideal());
+        let net_b = plogp::bench::measure_pair(&mut sim, 4, 5);
+        c.register_with_probe("b", 4, net_b, (4, 5));
+        let _ = c.tables("b").unwrap();
+        // degrade only the (0, 1) links; island "b" is untouched
+        sim.inject_link_delay(0, 1, 500e-6);
+        sim.inject_link_delay(1, 0, 500e-6);
+        let outcome = c.refresh("b", &mut sim, &RefreshPolicy::default()).unwrap();
+        assert!(
+            !outcome.refreshed(),
+            "refresh must re-probe (4, 5), not (0, 1): {outcome:?}"
+        );
+        assert!(outcome.drift() < 0.01, "{outcome:?}");
+    }
+
+    #[test]
+    fn refresh_unknown_cluster_errors() {
+        let c = small();
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        assert!(c.refresh("ghost", &mut sim, &RefreshPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn refresh_all_visits_every_cluster() {
+        let c = small();
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("b", 8, measured(NetConfig::gigabit_ethernet()));
+        // every re-probe sees Fast Ethernet: "a" is unchanged, while
+        // "b" (registered as gigabit) has drifted
+        let outcomes = c
+            .refresh_all(
+                |_name| Netsim::new(2, NetConfig::fast_ethernet_ideal()),
+                &RefreshPolicy::default(),
+            )
+            .unwrap();
+        assert_eq!(outcomes.len(), 2);
+        assert_eq!(outcomes[0].0, "a");
+        assert!(!outcomes[0].1.refreshed());
+        assert!(outcomes[1].1.refreshed(), "b drifted from gigabit to fast ethernet");
+    }
+}

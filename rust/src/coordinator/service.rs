@@ -1,0 +1,544 @@
+//! The tuning coordinator: a long-running, thread-safe decision service.
+//!
+//! One [`Coordinator`] owns the decision tables for every logical
+//! cluster it has been told about (registered explicitly, from a
+//! [`GridSpec`], or recovered by `topology::discover`) and answers
+//! `(op, cluster, P, m) → Decision` queries from any number of threads:
+//!
+//! * **hot path** — a sharded cache lookup by [`ClusterSignature`]
+//!   ([`ShardedCache`]); equivalent networks share one table.
+//! * **cold path** — a tuner run (artifact backend when available,
+//!   native models otherwise). Concurrent misses on the same signature
+//!   *coalesce*: exactly one thread tunes, the rest block on the
+//!   in-flight run and reuse its result.
+//! * **persistence** — [`Coordinator::persist_to`] /
+//!   [`Coordinator::warm_start_from`] save and restore the registry and
+//!   every cached table, the paper's tune-once-then-static operating
+//!   mode across process restarts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::netsim::{Netsim, NodeId};
+use crate::plogp::{bench, GapTable, PLogP};
+use crate::topology::GridSpec;
+use crate::tuner::{grids, persist, Decision, DecisionTable, Op, Tuner};
+
+use super::cache::{CacheStats, ShardedCache};
+use super::signature::ClusterSignature;
+
+/// The two per-operation decision tables tuned for one signature.
+#[derive(Debug, Clone)]
+pub struct TablePair {
+    pub bcast: DecisionTable,
+    pub scatter: DecisionTable,
+}
+
+impl TablePair {
+    pub fn table(&self, op: Op) -> &DecisionTable {
+        match op {
+            Op::Bcast => &self.bcast,
+            Op::Scatter => &self.scatter,
+        }
+    }
+
+    /// Snap-to-nearest decision lookup.
+    pub fn decision(&self, op: Op, p: usize, m: u64) -> Decision {
+        *self.table(op).lookup(p, m)
+    }
+}
+
+/// Coordinator construction parameters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Cache shards (lock-striping width for the hot path).
+    pub shards: usize,
+    /// LRU capacity of each shard.
+    pub capacity_per_shard: usize,
+    /// Signature quantization tolerance (see [`super::signature`]).
+    pub tolerance: f64,
+    /// Process-count grid every table is tuned over.
+    pub p_grid: Vec<usize>,
+    /// Message-size grid every table is tuned over.
+    pub m_grid: Vec<u64>,
+    /// When set, try the AOT artifact backend from this directory
+    /// (falling back to native models if it cannot be loaded).
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            shards: 8,
+            capacity_per_shard: 32,
+            tolerance: super::signature::DEFAULT_TOLERANCE,
+            p_grid: grids::default_p_grid(),
+            m_grid: grids::default_m_grid(),
+            artifact_dir: None,
+        }
+    }
+}
+
+/// One cluster known to the coordinator.
+#[derive(Debug, Clone)]
+pub struct RegisteredCluster {
+    pub name: String,
+    pub nodes: usize,
+    pub net: PLogP,
+    pub signature: ClusterSignature,
+    /// The representative node pair the pLogP parameters were measured
+    /// between — the refresh policy re-probes the *same* pair, which
+    /// matters when a cluster is an island inside a larger simulator
+    /// (its link is not the `(0, 1)` link).
+    pub probe: (NodeId, NodeId),
+}
+
+/// An in-flight tuner run that concurrent misses block on.
+#[derive(Default)]
+struct Inflight {
+    result: Mutex<Option<Arc<TablePair>>>,
+    ready: Condvar,
+}
+
+/// Aggregate service counters.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorStats {
+    pub cache: CacheStats,
+    /// Actual tuner executions (coalesced misses count once).
+    pub tunes: u64,
+    /// Clusters in the registry.
+    pub registered: usize,
+}
+
+/// The L3 tuning coordinator. Cheap to share: every method takes
+/// `&self`; wrap in an [`Arc`] or borrow across `std::thread::scope`.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    tuner: Tuner,
+    cache: ShardedCache<Arc<TablePair>>,
+    inflight: Mutex<HashMap<ClusterSignature, Arc<Inflight>>>,
+    registry: RwLock<HashMap<String, RegisteredCluster>>,
+    tunes: AtomicU64,
+}
+
+const MANIFEST_HEADER: &str = "# collective-tuner coordinator manifest v1";
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        let tuner = match &cfg.artifact_dir {
+            Some(dir) => Tuner::auto(dir),
+            None => Tuner::native(),
+        };
+        let cache = ShardedCache::new(cfg.shards, cfg.capacity_per_shard);
+        Coordinator {
+            cfg,
+            tuner,
+            cache,
+            inflight: Mutex::new(HashMap::new()),
+            registry: RwLock::new(HashMap::new()),
+            tunes: AtomicU64::new(0),
+        }
+    }
+
+    /// Paper-sized grids, native backend, 8×32 cache.
+    pub fn with_defaults() -> Coordinator {
+        Coordinator::new(CoordinatorConfig::default())
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.tuner.backend.name()
+    }
+
+    // ---- registry -----------------------------------------------------
+
+    /// Register (or re-register) a cluster under `name`, measured
+    /// between ranks `(0, 1)` of its own simulator. Returns its
+    /// signature; tables are tuned lazily on first query.
+    pub fn register(&self, name: &str, nodes: usize, net: PLogP) -> ClusterSignature {
+        self.register_with_probe(name, nodes, net, (0, 1))
+    }
+
+    /// Register a cluster whose parameters were measured between an
+    /// explicit representative pair (e.g. two members of a discovered
+    /// island inside a grid simulator); refresh re-probes that pair.
+    pub fn register_with_probe(
+        &self,
+        name: &str,
+        nodes: usize,
+        net: PLogP,
+        probe: (NodeId, NodeId),
+    ) -> ClusterSignature {
+        let signature = ClusterSignature::with_tolerance(&net, nodes, self.cfg.tolerance);
+        let rc = RegisteredCluster { name: name.to_string(), nodes, net, signature, probe };
+        self.registry.write().unwrap().insert(rc.name.clone(), rc);
+        signature
+    }
+
+    /// Register every cluster of a [`GridSpec`]: probe each island's own
+    /// network parameters on a 2-node simulator of its `NetConfig` (the
+    /// LogP benchmark procedure measures between two representative
+    /// nodes; homogeneity makes that sufficient, §1).
+    pub fn register_islands(&self, grid: &GridSpec) -> Vec<ClusterSignature> {
+        grid.clusters
+            .iter()
+            .map(|c| {
+                let mut sim = Netsim::new(2, c.net.clone());
+                let net = bench::measure(&mut sim);
+                self.register(&c.name, c.nodes, net)
+            })
+            .collect()
+    }
+
+    /// Blind wiring of the two companion papers' pipeline: recover the
+    /// islands from latency probes (`topology::discover`), measure pLogP
+    /// between the first two members of each island, and register them
+    /// as `island-<i>`. Single-node islands have nothing to tune and are
+    /// skipped.
+    pub fn register_discovered(
+        &self,
+        sim: &mut Netsim,
+        threshold_factor: f64,
+    ) -> Vec<RegisteredCluster> {
+        let d = crate::topology::discover::discover(sim, threshold_factor);
+        let mut out = Vec::new();
+        for c in 0..d.num_clusters {
+            let members = d.members(c);
+            if members.len() < 2 {
+                log::warn!("island {c} has a single node; skipping (nothing to tune)");
+                continue;
+            }
+            let net = bench::measure_pair(sim, members[0], members[1]);
+            let name = format!("island-{c}");
+            self.register_with_probe(&name, members.len(), net, (members[0], members[1]));
+            out.push(self.cluster(&name).unwrap());
+        }
+        out
+    }
+
+    /// Look up one registered cluster.
+    pub fn cluster(&self, name: &str) -> Option<RegisteredCluster> {
+        self.registry.read().unwrap().get(name).cloned()
+    }
+
+    /// All registered clusters, sorted by name.
+    pub fn clusters(&self) -> Vec<RegisteredCluster> {
+        let mut v: Vec<RegisteredCluster> =
+            self.registry.read().unwrap().values().cloned().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    // ---- the decision path --------------------------------------------
+
+    /// Tables for a registered cluster (tuning on first use).
+    pub fn tables(&self, cluster: &str) -> Result<Arc<TablePair>> {
+        let rc = self
+            .cluster(cluster)
+            .with_context(|| format!("cluster '{cluster}' is not registered"))?;
+        Ok(self.tables_for(rc.signature, &rc.net))
+    }
+
+    /// The full query API: strategy + segment + predicted time for one
+    /// `(op, cluster, P, m)` point.
+    pub fn decision(&self, op: Op, cluster: &str, p: usize, m: u64) -> Result<Decision> {
+        Ok(self.tables(cluster)?.decision(op, p, m))
+    }
+
+    /// Tables for an explicit signature/parameter pair. Cache hit → one
+    /// sharded read-lock. Cache miss → coalesced tuner run: the first
+    /// thread in tunes, every concurrent caller of the same signature
+    /// blocks on that run instead of starting its own.
+    pub fn tables_for(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TablePair> {
+        if let Some(t) = self.cache.get(&signature) {
+            return t;
+        }
+        let (flight, leader) = {
+            let mut map = self.inflight.lock().unwrap();
+            // Re-check under the lock: a finishing leader publishes to
+            // the cache *before* retiring its in-flight entry, so if the
+            // entry is gone the table is already visible here. `peek`
+            // keeps the hit/miss counters honest — the logical miss was
+            // already counted by the `get` above.
+            if let Some(t) = self.cache.peek(&signature) {
+                return t;
+            }
+            match map.get(&signature) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Inflight::default());
+                    map.insert(signature, Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            let tables = Arc::new(self.tune_now(net));
+            self.cache.insert(signature, Arc::clone(&tables));
+            *flight.result.lock().unwrap() = Some(Arc::clone(&tables));
+            flight.ready.notify_all();
+            self.inflight.lock().unwrap().remove(&signature);
+            tables
+        } else {
+            let mut guard = flight.result.lock().unwrap();
+            while guard.is_none() {
+                guard = flight.ready.wait(guard).unwrap();
+            }
+            Arc::clone(guard.as_ref().unwrap())
+        }
+    }
+
+    /// Run the tuner (counted; this is what miss-coalescing avoids).
+    fn tune_now(&self, net: &PLogP) -> TablePair {
+        self.tunes.fetch_add(1, Ordering::Relaxed);
+        let (bcast, scatter) = match self.tuner.tune(net, &self.cfg.p_grid, &self.cfg.m_grid) {
+            Ok(t) => t,
+            Err(e) => {
+                log::warn!("artifact tuner failed ({e:#}); re-tuning with native models");
+                Tuner::native()
+                    .tune(net, &self.cfg.p_grid, &self.cfg.m_grid)
+                    .expect("native tuner is infallible")
+            }
+        };
+        TablePair { bcast, scatter }
+    }
+
+    /// Re-tune a signature right now and atomically publish the result
+    /// (the refresh policy's swap; readers only ever see the old or the
+    /// new `Arc`, never a partial table).
+    pub(super) fn force_retune(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TablePair> {
+        let tables = Arc::new(self.tune_now(net));
+        self.cache.insert(signature, Arc::clone(&tables));
+        tables
+    }
+
+    /// Drop a cached signature (refresh retires drifted tables).
+    pub(super) fn evict_signature(&self, signature: &ClusterSignature) -> bool {
+        self.cache.remove(signature)
+    }
+
+    // ---- observability -------------------------------------------------
+
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            cache: self.cache.stats(),
+            tunes: self.tunes.load(Ordering::Relaxed),
+            registered: self.registry.read().unwrap().len(),
+        }
+    }
+
+    /// Actual tuner executions so far.
+    pub fn tune_count(&self) -> u64 {
+        self.tunes.load(Ordering::Relaxed)
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    /// Save the registry and every cached table pair under `dir`.
+    /// Returns the number of table pairs written. Values use Rust's
+    /// shortest-roundtrip float formatting, so a warm start recomputes
+    /// bit-identical signatures.
+    pub fn persist_to(&self, dir: &Path) -> Result<usize> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut manifest = String::from(MANIFEST_HEADER);
+        manifest.push('\n');
+        for rc in self.clusters() {
+            let sizes: Vec<String> =
+                rc.net.table.sizes().iter().map(|x| x.to_string()).collect();
+            let gaps: Vec<String> =
+                rc.net.table.gaps().iter().map(|x| x.to_string()).collect();
+            manifest.push_str(&format!(
+                "cluster\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                rc.name,
+                rc.nodes,
+                rc.probe.0,
+                rc.probe.1,
+                rc.net.l,
+                sizes.join(","),
+                gaps.join(",")
+            ));
+        }
+        std::fs::write(dir.join("manifest.tsv"), manifest)
+            .with_context(|| format!("writing {}", dir.join("manifest.tsv").display()))?;
+        let mut saved = 0usize;
+        for (sig, tables) in self.cache.snapshot() {
+            persist::save(&tables.bcast, &dir.join(format!("{}.bcast.tsv", sig.key())))?;
+            persist::save(&tables.scatter, &dir.join(format!("{}.scatter.tsv", sig.key())))?;
+            saved += 1;
+        }
+        Ok(saved)
+    }
+
+    /// Load a directory written by [`Coordinator::persist_to`]:
+    /// re-register every cluster and pre-warm the cache with every table
+    /// pair found on disk. Returns the number of table pairs loaded.
+    pub fn warm_start_from(&self, dir: &Path) -> Result<usize> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        if lines.next() != Some(MANIFEST_HEADER) {
+            bail!("{} is not a coordinator manifest", path.display());
+        }
+        let mut loaded = 0usize;
+        for (ln, line) in lines.enumerate() {
+            let mut f = line.split('\t');
+            match f.next() {
+                Some("cluster") => {
+                    let name = f.next().context("cluster name")?;
+                    let nodes: usize = f.next().context("node count")?.parse()?;
+                    let probe_a: NodeId = f.next().context("probe src")?.parse()?;
+                    let probe_b: NodeId = f.next().context("probe dst")?.parse()?;
+                    let l: f64 = f.next().context("latency")?.parse()?;
+                    let sizes = parse_f64_csv(f.next().context("gap sizes")?)?;
+                    let gaps = parse_f64_csv(f.next().context("gap values")?)?;
+                    let net = PLogP::new(l, GapTable::new(sizes, gaps));
+                    let sig = self.register_with_probe(name, nodes, net, (probe_a, probe_b));
+                    let b = dir.join(format!("{}.bcast.tsv", sig.key()));
+                    let s = dir.join(format!("{}.scatter.tsv", sig.key()));
+                    if b.exists() && s.exists() && !self.cache.contains(&sig) {
+                        let pair = TablePair {
+                            bcast: persist::load(&b)?,
+                            scatter: persist::load(&s)?,
+                        };
+                        self.cache.insert(sig, Arc::new(pair));
+                        loaded += 1;
+                    }
+                }
+                Some("") | None => {}
+                Some(other) => bail!("line {}: unknown record '{other}'", ln + 2),
+            }
+        }
+        Ok(loaded)
+    }
+}
+
+fn parse_f64_csv(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|t| t.trim().parse::<f64>().with_context(|| format!("bad float '{t}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NetConfig;
+    use crate::topology::ClusterSpec;
+
+    fn small_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            shards: 2,
+            capacity_per_shard: 4,
+            p_grid: vec![2, 8, 24],
+            m_grid: grids::log_grid(1, 1 << 20, 6),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    fn measured(cfg: NetConfig) -> PLogP {
+        let mut sim = Netsim::new(2, cfg);
+        bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn unknown_cluster_is_an_error() {
+        let c = Coordinator::new(small_config());
+        let err = c.decision(Op::Bcast, "nowhere", 8, 1024).unwrap_err();
+        assert!(err.to_string().contains("not registered"), "{err}");
+    }
+
+    #[test]
+    fn decision_matches_direct_tuner_output() {
+        let cfg = small_config();
+        let c = Coordinator::new(cfg.clone());
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        c.register("a", 24, net.clone());
+        let want = {
+            let (b, _) = Tuner::native().tune(&net, &cfg.p_grid, &cfg.m_grid).unwrap();
+            *b.lookup(24, 65536)
+        };
+        let got = c.decision(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(got.strategy, want.strategy);
+        assert_eq!(got.segment, want.segment);
+        assert_eq!(c.tune_count(), 1);
+    }
+
+    #[test]
+    fn equivalent_clusters_share_one_table() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("b", 24, measured(NetConfig::fast_ethernet_ideal()));
+        let ta = c.tables("a").unwrap();
+        let tb = c.tables("b").unwrap();
+        assert!(Arc::ptr_eq(&ta, &tb), "same signature must share one Arc");
+        assert_eq!(c.tune_count(), 1);
+        assert_eq!(c.stats().registered, 2);
+    }
+
+    #[test]
+    fn distinct_networks_tune_separately() {
+        let c = Coordinator::new(small_config());
+        c.register("fe", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("ge", 24, measured(NetConfig::gigabit_ethernet()));
+        let _ = c.tables("fe").unwrap();
+        let _ = c.tables("ge").unwrap();
+        assert_eq!(c.tune_count(), 2);
+    }
+
+    #[test]
+    fn repeated_queries_hit_the_cache() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        for _ in 0..10 {
+            c.decision(Op::Scatter, "a", 8, 4096).unwrap();
+        }
+        assert_eq!(c.tune_count(), 1);
+        let st = c.stats();
+        assert!(st.cache.hits >= 9, "{st:?}");
+    }
+
+    #[test]
+    fn register_islands_covers_a_grid() {
+        let grid = GridSpec::new(
+            vec![
+                ClusterSpec::new("alpha", 5, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("beta", 3, NetConfig::gigabit_ethernet()),
+            ],
+            NetConfig::wan_link(),
+        );
+        let c = Coordinator::new(small_config());
+        let sigs = c.register_islands(&grid);
+        assert_eq!(sigs.len(), 2);
+        assert_ne!(sigs[0], sigs[1]);
+        assert!(c.cluster("alpha").is_some());
+        assert!(c.cluster("beta").is_some());
+    }
+
+    #[test]
+    fn register_discovered_finds_and_measures_islands() {
+        let grid = GridSpec::new(
+            vec![
+                ClusterSpec::new("a", 4, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("b", 4, NetConfig::fast_ethernet_ideal()),
+            ],
+            NetConfig::wan_link(),
+        );
+        let mut sim = grid.build_sim();
+        let c = Coordinator::new(small_config());
+        let found = c.register_discovered(&mut sim, 3.0);
+        assert_eq!(found.len(), 2);
+        assert_eq!(found[0].nodes, 4);
+        // both islands are the same hardware: one signature, one tune
+        let _ = c.tables("island-0").unwrap();
+        let _ = c.tables("island-1").unwrap();
+        assert_eq!(c.tune_count(), 1);
+    }
+}

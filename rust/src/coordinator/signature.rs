@@ -1,0 +1,160 @@
+//! Cluster signatures: a quantized fingerprint of one network.
+//!
+//! The paper tunes once per network and serves decisions statically
+//! (§5). Two clusters whose pLogP parameters agree to within measurement
+//! noise should therefore *share* one decision table rather than tune
+//! twice — homogeneous islands of the same hardware generation are the
+//! common case in the grids both companion papers target. A
+//! [`ClusterSignature`] quantizes the parameters that actually enter the
+//! cost models (`L` and `g(m)` at a fixed set of probe sizes) into
+//! multiplicative buckets, together with the node count and the op set,
+//! so equivalence is a plain `Eq`/`Hash` and the coordinator's cache can
+//! key on it.
+
+use crate::plogp::PLogP;
+
+/// Default quantization tolerance: parameters within ±5 % land in the
+/// same bucket (the pLogP benchmark's run-to-run noise is below this on
+/// the simulated testbed; see `plogp::bench` tests).
+pub const DEFAULT_TOLERANCE: f64 = 0.05;
+
+/// Gap-table probe sizes entering the fingerprint (bytes, as f64 for
+/// [`PLogP::gap`]): 1 B, 1 KiB, 64 KiB, 1 MiB, 4 MiB — the span the
+/// tuner's m-grid and s-grid actually exercise.
+pub const PROBE_SIZES: [f64; 5] = [1.0, 1024.0, 65536.0, 1048576.0, 4194304.0];
+
+/// Op-set bit: the signature covers broadcast tables.
+pub const OPS_BCAST: u8 = 1 << 0;
+/// Op-set bit: the signature covers scatter tables.
+pub const OPS_SCATTER: u8 = 1 << 1;
+/// Both paper operations (what [`super::service::TablePair`] holds).
+pub const OPS_ALL: u8 = OPS_BCAST | OPS_SCATTER;
+
+/// Quantize `x > 0` into a multiplicative bucket: values within a factor
+/// of `(1 + tol)` of each other map to the same or adjacent buckets, and
+/// values differing by less than ~`tol/2` around a bucket center map to
+/// the same bucket.
+pub fn bucket(x: f64, tol: f64) -> i64 {
+    assert!(x > 0.0 && x.is_finite(), "bucket() needs a positive finite value, got {x}");
+    assert!(tol > 0.0, "tolerance must be positive");
+    (x.ln() / (1.0 + tol).ln()).round() as i64
+}
+
+/// The quantized fingerprint of one cluster's network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClusterSignature {
+    /// Number of nodes in the cluster.
+    pub nodes: usize,
+    /// Which operation families the tables cover ([`OPS_ALL`] today).
+    pub ops: u8,
+    /// Quantized one-way latency `L`.
+    pub l_bucket: i64,
+    /// Quantized `g(m)` at each of [`PROBE_SIZES`].
+    pub gap_buckets: [i64; 5],
+}
+
+impl ClusterSignature {
+    /// Fingerprint with the default tolerance.
+    pub fn of(net: &PLogP, nodes: usize) -> ClusterSignature {
+        ClusterSignature::with_tolerance(net, nodes, DEFAULT_TOLERANCE)
+    }
+
+    /// Fingerprint with an explicit quantization tolerance.
+    pub fn with_tolerance(net: &PLogP, nodes: usize, tol: f64) -> ClusterSignature {
+        assert!(nodes >= 1);
+        ClusterSignature {
+            nodes,
+            ops: OPS_ALL,
+            l_bucket: bucket(net.l, tol),
+            gap_buckets: PROBE_SIZES.map(|m| bucket(net.gap(m), tol)),
+        }
+    }
+
+    /// Stable, filesystem-safe key for persistence
+    /// (`sig-p<nodes>-o<ops>-l<bucket>-g<b0>_<b1>_...`).
+    pub fn key(&self) -> String {
+        let gaps: Vec<String> = self.gap_buckets.iter().map(|b| b.to_string()).collect();
+        format!(
+            "sig-p{}-o{}-l{}-g{}",
+            self.nodes,
+            self.ops,
+            self.l_bucket,
+            gaps.join("_")
+        )
+    }
+}
+
+/// Maximum relative difference between two parameter sets, over `L` and
+/// `g(m)` at the probe sizes — the scalar the refresh policy thresholds
+/// on to decide whether a network has drifted enough to re-tune.
+pub fn drift(baseline: &PLogP, fresh: &PLogP) -> f64 {
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+    let mut d = rel(baseline.l, fresh.l);
+    for m in PROBE_SIZES {
+        d = d.max(rel(baseline.gap(m), fresh.gap(m)));
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, Netsim};
+    use crate::plogp::{bench, GapTable};
+
+    fn measured(cfg: NetConfig) -> PLogP {
+        let mut sim = Netsim::new(2, cfg);
+        bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn bucket_groups_within_tolerance_and_splits_beyond() {
+        // ln(1.02)/ln(1.05) ≈ 0.41 -> rounds to 0, same bucket as 1.0
+        assert_eq!(bucket(1.0, 0.05), bucket(1.02, 0.05));
+        // a factor of 2 is ~14 buckets away at 5 %
+        assert_ne!(bucket(1.0, 0.05), bucket(2.0, 0.05));
+        assert!(bucket(2.0, 0.05) > bucket(1.0, 0.05) + 10);
+    }
+
+    #[test]
+    fn identical_measurements_identical_signature() {
+        let a = measured(NetConfig::fast_ethernet_ideal());
+        let b = measured(NetConfig::fast_ethernet_ideal());
+        assert_eq!(ClusterSignature::of(&a, 8), ClusterSignature::of(&b, 8));
+    }
+
+    #[test]
+    fn node_count_separates_signatures() {
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        assert_ne!(ClusterSignature::of(&net, 8), ClusterSignature::of(&net, 16));
+    }
+
+    #[test]
+    fn different_network_class_separates_signatures() {
+        let fe = measured(NetConfig::fast_ethernet_ideal());
+        let ge = measured(NetConfig::gigabit_ethernet());
+        assert_ne!(ClusterSignature::of(&fe, 8), ClusterSignature::of(&ge, 8));
+    }
+
+    #[test]
+    fn key_is_stable_and_filesystem_safe() {
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        let sig = ClusterSignature::of(&net, 24);
+        let k = sig.key();
+        assert_eq!(k, sig.key());
+        assert!(k.starts_with("sig-p24-"));
+        assert!(k.chars().all(|c| c.is_ascii_alphanumeric() || "-_".contains(c)), "{k}");
+    }
+
+    #[test]
+    fn drift_zero_for_identical_and_positive_for_scaled() {
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        assert!(drift(&net, &net) < 1e-12);
+        let slower = PLogP::new(
+            net.l * 1.5,
+            GapTable::new(net.table.sizes().to_vec(), net.table.gaps().to_vec()),
+        );
+        let d = drift(&net, &slower);
+        assert!((d - 0.5).abs() < 1e-9, "drift {d}");
+    }
+}

@@ -27,6 +27,14 @@
 //!   segment-size search, with a *fast path* that executes the whole
 //!   decision tensor as one AOT-compiled XLA computation (see
 //!   `python/compile/`) through [`runtime`].
+//! * [`coordinator`] — the L3 service layer on top of the tuner: a
+//!   long-running, thread-safe decision-table service. Clusters are
+//!   fingerprinted by quantized pLogP signatures so equivalent networks
+//!   share tables; a sharded LRU cache keeps lookups off the tuning
+//!   path; concurrent cold misses coalesce into one tuner run; a
+//!   refresh policy re-probes for parameter drift and swaps tables
+//!   atomically. `topology::discover` feeds its registry and
+//!   `collectives::multilevel` consumes its per-island decisions.
 //! * [`harness`] — experiment drivers that regenerate every figure of
 //!   the paper's evaluation (measured vs predicted).
 //!
@@ -35,6 +43,7 @@
 //! self-contained afterwards.
 
 pub mod collectives;
+pub mod coordinator;
 pub mod harness;
 pub mod models;
 pub mod mpi;

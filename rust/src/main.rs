@@ -1,21 +1,23 @@
 //! `collective-tuner` — the L3 coordinator binary.
 //!
-//! Subcommands: `bench-plogp`, `tune`, `run`, `experiment`, `info`.
-//! See `cli::USAGE` or run with `help`.
+//! Subcommands: `bench-plogp`, `tune`, `run`, `experiment`, `discover`,
+//! `serve`, `query`, `info`. See `cli::USAGE` or run with `help`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
-use collective_tuner::collectives::{composed, Strategy};
+use collective_tuner::collectives::{composed, multilevel, Strategy};
+use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy};
 use collective_tuner::harness::experiments;
 use collective_tuner::mpi::World;
-use collective_tuner::netsim::Netsim;
+use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp;
 use collective_tuner::runtime::TunerArtifact;
-use collective_tuner::topology::discover;
+use collective_tuner::topology::{discover, ClusterSpec, GridSpec};
 use collective_tuner::tuner::ext::{build_ext_schedule, ExtOp, ExtTuner};
-use collective_tuner::tuner::{grids, persist, Tuner};
+use collective_tuner::tuner::{grids, persist, Op, Tuner};
+use collective_tuner::util::prng::Prng;
 use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
 
 use collective_tuner::cli::{self, Args};
@@ -42,6 +44,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" => cmd_run(args),
         "experiment" => cmd_experiment(args),
         "discover" => cmd_discover(args),
+        "serve" => cmd_serve(args),
+        "query" => cmd_query(args),
         "info" => cmd_info(args),
         "help" | "--help" | "-h" => {
             println!("{}", cli::USAGE);
@@ -307,6 +311,198 @@ fn cmd_discover(args: &Args) -> Result<()> {
     println!("planted layout {:?} -> {}", sizes, if ok { "RECOVERED" } else { "MISSED" });
     if !ok {
         bail!("discovery failed");
+    }
+    Ok(())
+}
+
+fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
+    let mut cfg = CoordinatorConfig::default();
+    cfg.shards = args.usize_or("shards", cfg.shards)?.max(1);
+    cfg.capacity_per_shard = args.usize_or("capacity", cfg.capacity_per_shard)?.max(1);
+    cfg.artifact_dir = match args.get_or("backend", "auto").as_str() {
+        "native" => None,
+        "auto" | "artifact" => {
+            let dir = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(TunerArtifact::default_dir);
+            // an explicit artifact request must fail loudly, not fall
+            // back to native like `auto` does
+            if args.get_or("backend", "auto") == "artifact" {
+                Tuner::with_artifact(&dir)?;
+            }
+            Some(dir)
+        }
+        other => bail!("unknown --backend '{other}' (auto, native, artifact)"),
+    };
+    Ok(Coordinator::new(cfg))
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let cfg = args.net_config()?;
+    let coord = coordinator_from_args(args)?;
+    if let Some(dir) = args.get("warm") {
+        let n = coord.warm_start_from(Path::new(dir))?;
+        println!("warm start: loaded {n} table pair(s) from {dir}");
+    }
+    let name = args.get_or("cluster", "default");
+    let nodes = args.usize_or("nodes", 50)?;
+    if coord.cluster(&name).is_none() {
+        let mut sim = Netsim::new(2, cfg);
+        let net = plogp::bench::measure(&mut sim);
+        println!("measured {}", net.summary());
+        coord.register(&name, nodes, net);
+    }
+    let op = match args.get_or("op", "bcast").as_str() {
+        "bcast" => Op::Bcast,
+        "scatter" => Op::Scatter,
+        other => bail!("unknown --op '{other}' (bcast, scatter)"),
+    };
+    let p = args.usize_or("procs", 24)?;
+    let m = args.u64_or("bytes", 64 * 1024)?;
+    let t0 = std::time::Instant::now();
+    let d = coord.decision(op, &name, p, m)?;
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _ = coord.decision(op, &name, p, m)?;
+    let repeat = t1.elapsed();
+    println!("cluster   : {name} ({nodes} nodes, backend {})", coord.backend_name());
+    println!("query     : {} @ (P={p}, m={})", op.name(), fmt_bytes(m as f64));
+    println!(
+        "decision  : {} (segment {}, predicted {})",
+        d.strategy.name(),
+        d.segment.map(|s| fmt_bytes(s as f64)).unwrap_or_else(|| "-".into()),
+        fmt_time(d.predicted)
+    );
+    println!(
+        "latency   : first {:.2} ms, repeat {:.1} us (cache hit)",
+        first.as_secs_f64() * 1e3,
+        repeat.as_secs_f64() * 1e6
+    );
+    let st = coord.stats();
+    println!(
+        "service   : {} cached signature(s), {} hit(s) / {} miss(es), {} tuner run(s)",
+        st.cache.entries, st.cache.hits, st.cache.misses, st.tunes
+    );
+    if let Some(dir) = args.get("save") {
+        let n = coord.persist_to(Path::new(dir))?;
+        println!("persisted {n} table pair(s) to {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let k = args.usize_or("clusters", 3)?.max(1);
+    let nodes = args.usize_or("nodes", 16)?.max(2);
+    let threads = args.usize_or("threads", 8)?.max(1);
+    let requests = args.usize_or("requests", 10_000)?;
+    let coord = coordinator_from_args(args)?;
+    if let Some(dir) = args.get("warm") {
+        let n = coord.warm_start_from(Path::new(dir))?;
+        println!("warm start: loaded {n} table pair(s) from {dir}");
+    }
+
+    // Alternate hardware classes across islands: distinct signatures
+    // exist, and once k exceeds the preset count, islands *share*
+    // signatures — exercising both the miss and the dedup path.
+    let presets = [
+        NetConfig::fast_ethernet_icluster1(),
+        NetConfig::gigabit_ethernet(),
+        NetConfig::myrinet_like(),
+    ];
+    let grid = GridSpec::new(
+        (0..k)
+            .map(|i| {
+                ClusterSpec::new(
+                    format!("island-{i}"),
+                    nodes,
+                    presets[i % presets.len()].clone(),
+                )
+            })
+            .collect(),
+        NetConfig::wan_link(),
+    );
+    let t_reg = std::time::Instant::now();
+    coord.register_islands(&grid);
+    println!(
+        "registered {k} island(s) of {nodes} nodes (backend {}) in {:.2} ms",
+        coord.backend_name(),
+        t_reg.elapsed().as_secs_f64() * 1e3
+    );
+
+    let names: Vec<String> = coord.clusters().iter().map(|c| c.name.clone()).collect();
+    let served = AtomicU64::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let coord = &coord;
+            let names = &names;
+            let served = &served;
+            s.spawn(move || {
+                let mut rng = Prng::new(0xC0DE_5EED ^ t as u64);
+                for _ in 0..requests {
+                    let name = rng.pick(names);
+                    let op = if rng.chance(0.5) { Op::Bcast } else { Op::Scatter };
+                    let p = rng.range_usize(2, nodes.max(3));
+                    let m = rng.range(1, 1 << 20);
+                    let d = coord.decision(op, name, p, m).expect("cluster registered");
+                    std::hint::black_box(d);
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let total = served.load(Ordering::Relaxed);
+    let st = coord.stats();
+    println!(
+        "served {total} queries from {threads} thread(s) in {:.2} s ({:.0} kq/s)",
+        dt,
+        total as f64 / dt / 1e3
+    );
+    println!(
+        "cache: {} entries, {} hits / {} misses / {} evictions; {} tuner run(s) for {k} island(s)",
+        st.cache.entries, st.cache.hits, st.cache.misses, st.cache.evictions, st.tunes
+    );
+
+    // The multi-level construction both companion papers need: build a
+    // grid-wide broadcast whose per-island strategies come from the
+    // coordinator's cached tables, and execute it on the simulator.
+    let sched = multilevel::tuned_bcast(&grid, 64 * 1024, &coord)?;
+    let mut world = World::new(grid.build_sim());
+    let rep = world.run(&sched);
+    println!(
+        "multilevel broadcast over {} nodes: completion {}, verified {}",
+        grid.total_nodes(),
+        fmt_time(rep.completion.as_secs()),
+        if rep.verify(&sched).is_empty() { "ok" } else { "FAILED" }
+    );
+
+    // One refresh pass: re-probe every island's current parameters.
+    let outcomes = coord.refresh_all(
+        |name| {
+            let spec = grid.clusters.iter().find(|c| c.name == name);
+            Netsim::new(
+                2,
+                spec.map(|c| c.net.clone())
+                    .unwrap_or_else(NetConfig::fast_ethernet_icluster1),
+            )
+        },
+        &RefreshPolicy::default(),
+    )?;
+    for (name, outcome) in &outcomes {
+        println!(
+            "refresh {name}: drift {:.2}% -> {}",
+            outcome.drift() * 100.0,
+            if outcome.refreshed() { "re-tuned" } else { "table unchanged" }
+        );
+    }
+
+    if let Some(dir) = args.get("save") {
+        let n = coord.persist_to(Path::new(dir))?;
+        println!("persisted {n} table pair(s) to {dir}");
     }
     Ok(())
 }

@@ -14,7 +14,7 @@
 //! Measurement runs on ranks 0 and 1 of the cluster, like the original
 //! tool; homogeneity makes that representative (§1).
 
-use crate::netsim::{Netsim, SimTime};
+use crate::netsim::{Netsim, NodeId, SimTime};
 
 use super::{default_size_grid, GapTable, PLogP};
 
@@ -33,34 +33,66 @@ impl Default for BenchOptions {
     }
 }
 
+fn assert_probe_pair(sim: &Netsim, src: NodeId, dst: NodeId) {
+    assert!(src != dst, "probe endpoints must differ");
+    assert!(
+        (src as usize) < sim.num_nodes() && (dst as usize) < sim.num_nodes(),
+        "probe pair ({src}, {dst}) out of range for {} nodes",
+        sim.num_nodes()
+    );
+}
+
 /// Measure the sender gap for one message size (median of `reps`
-/// individually-spaced messages).
+/// individually-spaced messages) between ranks 0 and 1.
 pub fn measure_gap(sim: &mut Netsim, bytes: u64, reps: usize) -> f64 {
-    assert!(sim.num_nodes() >= 2, "need two nodes to measure");
+    measure_gap_between(sim, 0, 1, bytes, reps)
+}
+
+/// Measure the sender gap between an explicit node pair — the
+/// coordinator probes *inside* a discovered island of a larger grid, so
+/// the representative pair is not always ranks 0 and 1.
+pub fn measure_gap_between(
+    sim: &mut Netsim,
+    src: NodeId,
+    dst: NodeId,
+    bytes: u64,
+    reps: usize,
+) -> f64 {
+    assert_probe_pair(sim, src, dst);
     sim.reset();
     let mut samples: Vec<f64> = Vec::with_capacity(reps);
     // space the probes far apart so each is an individual transmission
     let spacing = 1.0;
     for i in 0..reps {
         let at = SimTime::from_secs(i as f64 * spacing);
-        let out = sim.send(at, 0, 1, bytes);
+        let out = sim.send(at, src, dst, bytes);
         samples.push(out.tx_done.saturating_sub(out.tx_start).as_secs());
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     samples[samples.len() / 2]
 }
 
-/// Measure one-way latency via 1-byte round trips:
+/// Measure one-way latency via 1-byte round trips between ranks 0 and 1:
 /// `L = RTT/2 - g(1)`.
 pub fn measure_latency(sim: &mut Netsim, reps: usize) -> f64 {
-    assert!(sim.num_nodes() >= 2);
-    let g1 = measure_gap(sim, 1, reps);
+    measure_latency_between(sim, 0, 1, reps)
+}
+
+/// Measure one-way latency between an explicit node pair.
+pub fn measure_latency_between(
+    sim: &mut Netsim,
+    src: NodeId,
+    dst: NodeId,
+    reps: usize,
+) -> f64 {
+    assert_probe_pair(sim, src, dst);
+    let g1 = measure_gap_between(sim, src, dst, 1, reps);
     sim.reset();
     let mut rtts: Vec<f64> = Vec::with_capacity(reps);
     for i in 0..reps {
         let at = SimTime::from_secs(i as f64);
-        let fwd = sim.send(at, 0, 1, 1);
-        let back = sim.send(fwd.delivered, 1, 0, 1);
+        let fwd = sim.send(at, src, dst, 1);
+        let back = sim.send(fwd.delivered, dst, src, 1);
         rtts.push(back.delivered.saturating_sub(at).as_secs());
     }
     rtts.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -68,19 +100,35 @@ pub fn measure_latency(sim: &mut Netsim, reps: usize) -> f64 {
     (rtt / 2.0 - g1).max(1e-9)
 }
 
-/// Full pLogP measurement with default options.
+/// Full pLogP measurement with default options (ranks 0 and 1).
 pub fn measure(sim: &mut Netsim) -> PLogP {
     measure_with(sim, &BenchOptions::default())
 }
 
-/// Full pLogP measurement.
+/// Full pLogP measurement (ranks 0 and 1).
 pub fn measure_with(sim: &mut Netsim, opts: &BenchOptions) -> PLogP {
-    let l = measure_latency(sim, opts.reps);
+    measure_pair_with(sim, 0, 1, opts)
+}
+
+/// Full pLogP measurement between an explicit representative pair, with
+/// default options.
+pub fn measure_pair(sim: &mut Netsim, src: NodeId, dst: NodeId) -> PLogP {
+    measure_pair_with(sim, src, dst, &BenchOptions::default())
+}
+
+/// Full pLogP measurement between an explicit representative pair.
+pub fn measure_pair_with(
+    sim: &mut Netsim,
+    src: NodeId,
+    dst: NodeId,
+    opts: &BenchOptions,
+) -> PLogP {
+    let l = measure_latency_between(sim, src, dst, opts.reps);
     let sizes: Vec<f64> = opts.size_grid.iter().map(|&m| m as f64).collect();
     let gaps: Vec<f64> = opts
         .size_grid
         .iter()
-        .map(|&m| measure_gap(sim, m, opts.reps))
+        .map(|&m| measure_gap_between(sim, src, dst, m, opts.reps))
         .collect();
     sim.reset();
     PLogP::new(l, GapTable::new(sizes, gaps))
@@ -148,6 +196,33 @@ mod tests {
         let pge = measure(&mut ge);
         assert!(pge.l < pfe.l);
         assert!(pge.table.gap((1 << 20) as f64) < pfe.table.gap((1 << 20) as f64));
+    }
+
+    #[test]
+    fn pair_measurement_matches_rank01_inside_an_island() {
+        use crate::topology::{ClusterSpec, GridSpec};
+        // islands 0..4 and 4..8; an intra-island pair of the second
+        // island must measure the same parameters as ranks (0, 1)
+        let grid = GridSpec::new(
+            vec![
+                ClusterSpec::new("a", 4, NetConfig::fast_ethernet_ideal()),
+                ClusterSpec::new("b", 4, NetConfig::fast_ethernet_ideal()),
+            ],
+            NetConfig::wan_link(),
+        );
+        let mut sim = grid.build_sim();
+        let base = measure_pair(&mut sim, 0, 1);
+        let island_b = measure_pair(&mut sim, 4, 5);
+        assert!((base.l - island_b.l).abs() / base.l < 1e-9);
+        for m in [1.0f64, 65536.0] {
+            assert!(
+                (base.gap(m) - island_b.gap(m)).abs() / base.gap(m) < 1e-9,
+                "g({m}) differs between islands of identical hardware"
+            );
+        }
+        // a cross-island (WAN) pair must NOT match
+        let wan = measure_latency_between(&mut sim, 1, 5, 3);
+        assert!(wan > 2.0 * base.l, "wan {wan} vs lan {}", base.l);
     }
 
     #[test]

@@ -1,0 +1,38 @@
+//! Offline stand-in for the `log` facade crate. No logger registry:
+//! `warn!`/`error!` always go to stderr (nothing in this workspace
+//! installs a logger, so silently dropping them would hide the tuner's
+//! artifact-fallback notices); `info!`/`debug!`/`trace!` only print when
+//! `RUST_LOG` is set, mirroring the "no logger, no output" default.
+
+/// Implementation detail of the macros.
+#[doc(hidden)]
+pub fn __emit(level: &'static str, always: bool, msg: std::fmt::Arguments<'_>) {
+    if always || std::env::var_os("RUST_LOG").is_some() {
+        eprintln!("[{level}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", false, format_args!($($arg)*)) };
+}

@@ -1,0 +1,150 @@
+//! Stub of the `xla` PJRT bindings used by `collective_tuner::runtime`.
+//!
+//! The real crate links the native XLA/PJRT runtime, which is not
+//! present in this build environment. This stub keeps the exact API
+//! surface the runtime layer compiles against, but [`PjRtClient::cpu`]
+//! returns an "unavailable" error — so `Tuner::auto` and
+//! `ExtTuner::auto` cleanly fall back to the native Rust models, and
+//! `Tuner::with_artifact` reports a clear reason. Swapping the real
+//! bindings back in is a one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the shape the runtime layer expects
+/// (`std::error::Error`, so `anyhow` context attaches to it).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error {
+        msg: format!(
+            "{what}: XLA/PJRT native bindings are not linked in this offline build \
+             (stub crate rust/vendor/xla)"
+        ),
+    }
+}
+
+/// Parsed HLO module (stub: carries nothing).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// In the real bindings this initializes the PJRT CPU plugin; here it
+    /// reports that no plugin is linked.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer produced by an execution.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side tensor literal.
+pub struct Literal {
+    _priv: (),
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Destructure a 2-tuple literal.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    /// Copy out the literal's elements.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(err.to_string().contains("offline"), "{err}");
+    }
+
+    #[test]
+    fn error_is_std_error() {
+        fn takes_std<E: std::error::Error + Send + Sync + 'static>(_e: E) {}
+        takes_std(unavailable("x"));
+    }
+}
