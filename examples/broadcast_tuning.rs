@@ -7,7 +7,7 @@
 //! ```
 
 use collective_tuner::collectives::Strategy;
-use collective_tuner::harness::experiments::{measure_net, measure_strategy};
+use collective_tuner::eval::SimEval;
 use collective_tuner::models;
 use collective_tuner::netsim::NetConfig;
 use collective_tuner::tuner::grids;
@@ -15,7 +15,8 @@ use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
 
 fn main() {
     let cfg = NetConfig::fast_ethernet_icluster1();
-    let net = measure_net(&cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     println!("network: {}\n", net.summary());
     let s_grid = grids::default_s_grid();
 
@@ -34,7 +35,7 @@ fn main() {
             } else {
                 (models::predict(strat, &net, p, m, None), None)
             };
-            let t_meas = measure_strategy(&cfg, strat, p, m, seg);
+            let t_meas = eval.measure(strat, p, m, seg);
             rows.push((strat, t_pred, t_meas, seg));
         }
         rows.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
@@ -73,7 +74,7 @@ fn main() {
                 let seg = s
                     .is_segmented()
                     .then(|| models::best_segment(s, &net, p, m, &s_grid).1);
-                (s, measure_strategy(&cfg, s, p, m, seg))
+                (s, eval.measure(s, p, m, seg))
             })
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap()

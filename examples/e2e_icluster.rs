@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. fast tuning through the XLA artifact -----------------------
     let tuner = Tuner::auto(&TunerArtifact::default_dir());
-    println!("[2] tuner backend: {}", tuner.backend.name());
+    println!("[2] tuner backend: {} ({} sweep worker(s))", tuner.backend_name(), tuner.jobs);
     let p_grid = grids::default_p_grid();
     let m_grid = grids::default_m_grid();
     let t1 = Instant::now();

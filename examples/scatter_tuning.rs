@@ -7,14 +7,15 @@
 //! ```
 
 use collective_tuner::collectives::Strategy;
-use collective_tuner::harness::experiments::{measure_net, measure_strategy};
+use collective_tuner::eval::SimEval;
 use collective_tuner::models;
 use collective_tuner::netsim::NetConfig;
 use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
 
 fn main() {
     let cfg = NetConfig::fast_ethernet_icluster1();
-    let net = measure_net(&cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     println!("network: {}\n", net.summary());
 
     // Flat vs Binomial across P at a fixed chunk size (paper Fig 3b/4).
@@ -23,9 +24,9 @@ fn main() {
         "P", "flat meas", "flat pred", "binom meas", "binom pred", "winner",
     ]);
     for &p in &[2usize, 4, 8, 12, 16, 24, 32, 40, 48] {
-        let fm = measure_strategy(&cfg, Strategy::ScatterFlat, p, m, None);
+        let fm = eval.measure(Strategy::ScatterFlat, p, m, None);
         let fp = models::predict(Strategy::ScatterFlat, &net, p, m, None);
-        let bm = measure_strategy(&cfg, Strategy::ScatterBinomial, p, m, None);
+        let bm = eval.measure(Strategy::ScatterBinomial, p, m, None);
         let bp = models::predict(Strategy::ScatterBinomial, &net, p, m, None);
         table.row(vec![
             p.to_string(),
@@ -42,9 +43,9 @@ fn main() {
     // flat scatter beats the model fed by per-message pLogP parameters.
     println!("bulk-transmission effect at P=24 (measured / predicted):");
     for &m in &[1024u64, 8192, 65536] {
-        let fm = measure_strategy(&cfg, Strategy::ScatterFlat, 24, m, None);
+        let fm = eval.measure(Strategy::ScatterFlat, 24, m, None);
         let fp = models::predict(Strategy::ScatterFlat, &net, 24, m, None);
-        let bm = measure_strategy(&cfg, Strategy::ScatterBinomial, 24, m, None);
+        let bm = eval.measure(Strategy::ScatterBinomial, 24, m, None);
         let bp = models::predict(Strategy::ScatterBinomial, &net, 24, m, None);
         println!(
             "  m={:>8}: flat {:.2} (streams!)   binomial {:.2} (follows model)",
@@ -55,11 +56,11 @@ fn main() {
     }
 
     // And with the TCP behaviours disabled, both follow their models.
-    let ideal = NetConfig::fast_ethernet_ideal();
-    let net_i = measure_net(&ideal);
+    let eval_i = SimEval::new(NetConfig::fast_ethernet_ideal());
+    let net_i = eval_i.measure_net();
     println!("\nsame ratios on the ideal (no-TCP-anomaly) network:");
     for &m in &[1024u64, 8192, 65536] {
-        let fm = measure_strategy(&ideal, Strategy::ScatterFlat, 24, m, None);
+        let fm = eval_i.measure(Strategy::ScatterFlat, 24, m, None);
         let fp = models::predict(Strategy::ScatterFlat, &net_i, 24, m, None);
         println!("  m={:>8}: flat {:.3}", fmt_bytes(m as f64), fm / fp);
     }

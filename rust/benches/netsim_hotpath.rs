@@ -58,7 +58,7 @@ fn main() {
     for (label, sched) in [
         ("barrier P=50", composed::barrier_binomial(50)),
         ("allgather P=50 m=4k", composed::allgather(50, 0, 4096)),
-        ("allreduce P=50 m=64k", composed::allreduce(50, 0, 64 * 1024)),
+        ("allreduce P=50 m=64k", composed::allreduce(50, 0, 64 * 1024).expect("p <= 64")),
     ] {
         let mut world = World::new(Netsim::new(50, cfg.clone()));
         bench(label, || {

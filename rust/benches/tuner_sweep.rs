@@ -1,0 +1,68 @@
+//! Bench: the parallel tuning sweep — sequential (`--jobs 1`) vs
+//! parallel (one worker per core) native-model tune of the full default
+//! grid, plus the determinism contract (byte-identical tables). Emits
+//! `BENCH_tuner.json` at the repository root so the perf trajectory
+//! tracks the parallel engine's speedup PR over PR.
+
+use std::path::PathBuf;
+
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp;
+use collective_tuner::tuner::{grids, persist, Tuner};
+use collective_tuner::util::benchkit::{bench_with, section, BenchOpts, BenchResult};
+
+fn json_entry(label: &str, r: &BenchResult) -> String {
+    let s = &r.summary;
+    format!(
+        "    {{\"name\": \"{label}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
+         \"p95_s\": {:e}, \"iters\": {}}}",
+        s.mean, s.p50, s.p95, r.iters
+    )
+}
+
+fn main() {
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    let net = plogp::bench::measure(&mut sim);
+    let p_grid = grids::default_p_grid();
+    let m_grid = grids::default_m_grid();
+    let points = p_grid.len() * m_grid.len();
+    let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let seq_tuner = Tuner::native().jobs(1);
+    let par_tuner = Tuner::native().jobs(0); // 0 = one worker per core
+
+    section(&format!("native sweep of {points} (P, m) points x 2 ops"));
+    let opts = BenchOpts { warmup_iters: 2, min_iters: 10, max_iters: 500, min_seconds: 1.0 };
+    let r_seq = bench_with("sequential sweep (--jobs 1)", &opts, || {
+        std::hint::black_box(seq_tuner.tune(&net, &p_grid, &m_grid).unwrap());
+    });
+    let r_par = bench_with(&format!("parallel sweep (--jobs {jobs})"), &opts, || {
+        std::hint::black_box(par_tuner.tune(&net, &p_grid, &m_grid).unwrap());
+    });
+
+    // determinism contract: worker count must never change the tables
+    let (sb, ss) = seq_tuner.tune(&net, &p_grid, &m_grid).unwrap();
+    let (pb, ps) = par_tuner.tune(&net, &p_grid, &m_grid).unwrap();
+    let identical = persist::to_string(&sb) == persist::to_string(&pb)
+        && persist::to_string(&ss) == persist::to_string(&ps);
+    assert!(identical, "parallel sweep must be byte-identical to sequential");
+
+    let speedup = r_seq.summary.p50 / r_par.summary.p50.max(1e-12);
+    println!("\nspeedup: {speedup:.2}x with {jobs} worker(s); tables identical: {identical}");
+
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits one level below the repo root")
+        .join("BENCH_tuner.json");
+    let json = format!(
+        "{{\n  \"benchmark\": \"tuner_sweep\",\n  \"description\": \"sequential vs parallel \
+         native tuning sweep of the default {points}-point grid (both ops)\",\n  \"unit\": \
+         \"seconds per full tune\",\n  \"jobs_parallel\": {jobs},\n  \"results\": [\n{},\n{}\n  \
+         ],\n  \"speedup_parallel_over_sequential\": {speedup:.2},\n  \"tables_identical\": \
+         {identical}\n}}\n",
+        json_entry("sequential_jobs_1", &r_seq),
+        json_entry("parallel_jobs_auto", &r_par),
+    );
+    std::fs::write(&out, json).expect("writing BENCH_tuner.json");
+    println!("wrote {}", out.display());
+}

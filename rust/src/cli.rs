@@ -129,6 +129,7 @@ COMMANDS:
                   --preset icluster1|ideal|gigabit|myrinet  --tcp default|ideal|linux22
   tune          build broadcast + scatter decision tables
                   --procs 2,8,24,48   --backend auto|native|artifact
+                  --jobs N            (parallel sweep workers; 0 = all cores)
                   --save results/     (persist tables as TSV)
   run           execute one collective on the simulated cluster
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
@@ -144,6 +145,7 @@ COMMANDS:
                   --clusters 3   --nodes 16        (islands, nodes per island)
                   --threads 8    --requests 10000  (load per thread)
                   --shards 8     --capacity 32     (decision-table cache)
+                  --jobs N       (tuner sweep workers; 0 = all cores)
                   --backend auto|native|artifact   --save dir/  --warm dir/
   query         one-shot coordinator query (tunes on first use, cached after)
                   --op bcast|scatter  --procs 24  --bytes 64k

@@ -10,6 +10,8 @@
 //! * [`allgather`] — Gather to root + Broadcast of the full buffer.
 //! * [`allreduce`] — Reduce to root + Broadcast of the result.
 
+use anyhow::Result;
+
 use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
 
 use super::tree;
@@ -72,9 +74,10 @@ pub fn gather_binomial(p: usize, root: Rank, bytes: u64) -> CommSchedule {
 
 /// Binomial reduce: same fan-in tree as [`gather_binomial`], but the
 /// combined traffic stays `bytes` long (element-wise reduction) and the
-/// payloads are contributor bitmasks. Supports P <= 64.
-pub fn reduce_binomial(p: usize, root: Rank, bytes: u64) -> CommSchedule {
-    assert!(p <= 64, "contributor masks support at most 64 ranks");
+/// payloads are contributor bitmasks — a structured error (not a wrong
+/// mask) when `p` exceeds [`Payload::MAX_MASK_RANKS`].
+pub fn reduce_binomial(p: usize, root: Rank, bytes: u64) -> Result<CommSchedule> {
+    Payload::check_mask_capacity(p)?;
     let mut s = CommSchedule::new(p, "reduce/binomial");
     // mask of all virtual ranks in vr's subtree
     fn subtree_mask(vr: Rank, p: usize) -> u64 {
@@ -107,7 +110,7 @@ pub fn reduce_binomial(p: usize, root: Rank, bytes: u64) -> CommSchedule {
         });
         s.ranks[dst as usize].expected.push(payload);
     }
-    s
+    Ok(s)
 }
 
 /// Binomial barrier: control-token fan-in to the root, then fan-out.
@@ -209,11 +212,12 @@ pub fn allgather(p: usize, root: Rank, bytes: u64) -> CommSchedule {
     s
 }
 
-/// AllReduce as Reduce-to-root + Broadcast-of-result.
-pub fn allreduce(p: usize, root: Rank, bytes: u64) -> CommSchedule {
-    let mut s = reduce_binomial(p, root, bytes);
+/// AllReduce as Reduce-to-root + Broadcast-of-result. Errors like
+/// [`reduce_binomial`] when `p` exceeds the contributor-mask capacity.
+pub fn allreduce(p: usize, root: Rank, bytes: u64) -> Result<CommSchedule> {
+    let mut s = reduce_binomial(p, root, bytes)?;
     s.name = "allreduce/reduce+bcast".into();
-    let full: u64 = if p == 64 { u64::MAX } else { (1u64 << p) - 1 };
+    let full: u64 = Payload::all_ranks_mask(p)?;
     let root_children: Vec<Tag> = tree::binomial_children(0, p)
         .iter()
         .map(|c| Tag(GATHER_BASE + *c as u64))
@@ -242,7 +246,7 @@ pub fn allreduce(p: usize, root: Rank, bytes: u64) -> CommSchedule {
             s.ranks[dst as usize].expected.push(Payload::Ranks(full));
         }
     }
-    s
+    Ok(s)
 }
 
 #[cfg(test)]
@@ -295,7 +299,7 @@ mod tests {
     #[test]
     fn reduce_combines_all_ranks() {
         for p in [2usize, 5, 8, 16] {
-            let rep = run(&reduce_binomial(p, 0, 1024), p);
+            let rep = run(&reduce_binomial(p, 0, 1024).unwrap(), p);
             // union of masks delivered to root + root's own = all ranks
             let mut mask = 1u64; // root vr 0
             for pl in &rep.received[0] {
@@ -310,7 +314,7 @@ mod tests {
     #[test]
     fn reduce_traffic_is_message_sized() {
         let p = 8;
-        let s = reduce_binomial(p, 0, 4096);
+        let s = reduce_binomial(p, 0, 4096).unwrap();
         for spec in s.ranks.iter().flat_map(|r| &r.sends) {
             assert_eq!(spec.bytes, 4096);
         }
@@ -360,7 +364,7 @@ mod tests {
     #[test]
     fn allreduce_delivers_full_reduction_everywhere() {
         let p = 8;
-        let rep = run(&allreduce(p, 0, 1024), p);
+        let rep = run(&allreduce(p, 0, 1024).unwrap(), p);
         let full = (1u64 << p) - 1;
         for r in 1..p {
             assert!(
@@ -376,5 +380,19 @@ mod tests {
         let g = run(&gather_binomial(p, 0, 1024), p);
         let ag = run(&allgather(p, 0, 1024), p);
         assert!(ag.completion > g.completion);
+    }
+
+    #[test]
+    fn reductions_reject_more_than_64_ranks() {
+        // regression: Payload::Ranks is a u64 bitmask — p > 64 used to
+        // silently wrap into wrong masks; now it is a structured error
+        let err = reduce_binomial(65, 0, 8).unwrap_err();
+        assert!(err.to_string().contains("64"), "{err}");
+        assert!(allreduce(100, 0, 8).is_err());
+        // 64 is the boundary: the full mask must not overflow
+        let rep = run(&allreduce(64, 0, 8).unwrap(), 64);
+        for r in 1..64usize {
+            assert!(rep.received[r].contains(&Payload::Ranks(u64::MAX)), "rank {r}");
+        }
     }
 }

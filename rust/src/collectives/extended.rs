@@ -5,6 +5,8 @@
 //! Barrier. Each comes with a pLogP model in [`crate::models::ext`] so
 //! the tuner can choose between them like it does for Broadcast/Scatter.
 
+use anyhow::Result;
+
 use crate::mpi::{CommSchedule, Payload, Protocol, Rank, SendSpec, Tag, Trigger};
 
 use super::tree;
@@ -92,14 +94,16 @@ pub fn allgather_recursive_doubling(p: usize, bytes: u64) -> CommSchedule {
 /// Recursive-doubling AllReduce: ceil(log2 P) exchange rounds of the full
 /// m-byte vector; after round r every rank holds the combination of its
 /// 2^(r+1)-group. Power-of-two exact; non-powers fall back to
-/// reduce+broadcast. Model: `log2 P (g(m) + L)`.
-pub fn allreduce_recursive_doubling(p: usize, bytes: u64) -> CommSchedule {
+/// reduce+broadcast. Model: `log2 P (g(m) + L)`. Errors when `p`
+/// exceeds the contributor-mask capacity
+/// ([`Payload::MAX_MASK_RANKS`]).
+pub fn allreduce_recursive_doubling(p: usize, bytes: u64) -> Result<CommSchedule> {
     if !p.is_power_of_two() {
-        let mut s = super::composed::allreduce(p, 0, bytes);
+        let mut s = super::composed::allreduce(p, 0, bytes)?;
         s.name = "allreduce/recursive_doubling(tree-fallback)".into();
-        return s;
+        return Ok(s);
     }
-    assert!(p <= 64, "contributor masks support at most 64 ranks");
+    Payload::check_mask_capacity(p)?;
     let mut s = CommSchedule::new(p, "allreduce/recursive_doubling");
     let rounds = tree::ceil_log2(p);
     for r in 0..rounds {
@@ -128,7 +132,7 @@ pub fn allreduce_recursive_doubling(p: usize, bytes: u64) -> CommSchedule {
             s.ranks[partner as usize].expected.push(Payload::Ranks(mask));
         }
     }
-    s
+    Ok(s)
 }
 
 /// Dissemination barrier (Hensgen/Finkel/Manber): ceil(log2 P) rounds; in
@@ -249,7 +253,7 @@ mod tests {
     #[test]
     fn rd_allreduce_combines_everything() {
         for p in [2usize, 4, 8, 16, 32] {
-            let rep = run(&allreduce_recursive_doubling(p, 4096), p);
+            let rep = run(&allreduce_recursive_doubling(p, 4096).unwrap(), p);
             let full_prev = (1u64 << (p / 2)) - 1; // half-group mask exists
             let _ = full_prev;
             // final round delivered each rank a half-cluster mask; union
@@ -268,9 +272,18 @@ mod tests {
 
     #[test]
     fn rd_allreduce_fallback_non_power_of_two() {
-        let s = allreduce_recursive_doubling(6, 1024);
+        let s = allreduce_recursive_doubling(6, 1024).unwrap();
         assert!(s.name.contains("fallback"));
         run(&s, 6);
+    }
+
+    #[test]
+    fn rd_allreduce_rejects_more_than_64_ranks() {
+        // regression for the u64 contributor-mask cap: both the
+        // power-of-two path and the tree fallback must error, not wrap
+        assert!(allreduce_recursive_doubling(128, 64).is_err());
+        assert!(allreduce_recursive_doubling(65, 64).is_err());
+        assert!(allreduce_recursive_doubling(64, 64).is_ok());
     }
 
     #[test]

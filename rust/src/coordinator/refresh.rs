@@ -8,9 +8,10 @@
 //! against the parameters a cluster was registered with. Below the
 //! drift threshold nothing happens (lookups stay on the cached table);
 //! above it the cluster is re-registered under its new signature, a
-//! fresh table is tuned, and the published `Arc` is swapped atomically —
-//! concurrent readers see either the old or the new table, never a
-//! partial one.
+//! fresh table is tuned (on the coordinator's parallel tuning engine —
+//! see [`crate::tuner::Tuner::jobs`]), and the published `Arc` is
+//! swapped atomically — concurrent readers see either the old or the
+//! new table, never a partial one.
 
 use anyhow::{Context, Result};
 

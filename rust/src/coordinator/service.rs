@@ -68,6 +68,9 @@ pub struct CoordinatorConfig {
     /// When set, try the AOT artifact backend from this directory
     /// (falling back to native models if it cannot be loaded).
     pub artifact_dir: Option<PathBuf>,
+    /// Worker threads for the tuner's parallel grid sweep (0 = one per
+    /// core). Coalesced misses and drift re-tunes both run on it.
+    pub jobs: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,6 +82,7 @@ impl Default for CoordinatorConfig {
             p_grid: grids::default_p_grid(),
             m_grid: grids::default_m_grid(),
             artifact_dir: None,
+            jobs: 0,
         }
     }
 }
@@ -132,7 +136,8 @@ impl Coordinator {
         let tuner = match &cfg.artifact_dir {
             Some(dir) => Tuner::auto(dir),
             None => Tuner::native(),
-        };
+        }
+        .jobs(cfg.jobs);
         let cache = ShardedCache::new(cfg.shards, cfg.capacity_per_shard);
         Coordinator {
             cfg,
@@ -154,7 +159,7 @@ impl Coordinator {
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.tuner.backend.name()
+        self.tuner.backend_name()
     }
 
     // ---- registry -----------------------------------------------------
@@ -303,6 +308,7 @@ impl Coordinator {
             Err(e) => {
                 log::warn!("artifact tuner failed ({e:#}); re-tuning with native models");
                 Tuner::native()
+                    .jobs(self.cfg.jobs)
                     .tune(net, &self.cfg.p_grid, &self.cfg.m_grid)
                     .expect("native tuner is infallible")
             }

@@ -1,0 +1,214 @@
+//! The evaluation layer: one trait, three ways to score a collective.
+//!
+//! The paper's entire premise is that a `(strategy, P, m, segment)`
+//! point can be scored three interchangeable ways:
+//!
+//! * **analytically** — the closed-form pLogP cost models of Tables 1
+//!   and 2 ([`ModelEval`], wrapping the strategy-indexed registry in
+//!   [`crate::models`]); this is the "fast" in *Fast Tuning*;
+//! * **empirically** — build the schedule and run it on the simulated
+//!   cluster ([`SimEval`], wrapping [`crate::mpi::World`] over
+//!   [`crate::netsim::Netsim`]); this is the exhaustive benchmarking
+//!   the paper replaces, kept as ground truth for validation;
+//! * **via the AOT artifact** — one PJRT execution of the compiled XLA
+//!   kernel evaluates the whole decision tensor at once
+//!   ([`ArtifactEval`], wrapping [`crate::runtime::TunerArtifact`]).
+//!
+//! Everything above this layer — the tuner's grid sweep, the
+//! model-vs-simulation cross-check in [`crate::tuner::validate`], the
+//! coordinator's cold-miss tuning — talks to the [`Evaluator`] trait
+//! only, so new backends (a real-MPI runner, trace replay) drop in
+//! without touching the tuner. The trait is `Send + Sync`: the tuner's
+//! parallel sweep shares one evaluator across its worker threads.
+
+mod artifact;
+mod model;
+mod sim;
+
+pub use artifact::ArtifactEval;
+pub use model::ModelEval;
+pub use sim::SimEval;
+
+use anyhow::Result;
+
+use crate::collectives::Strategy;
+use crate::plogp::PLogP;
+use crate::tuner::decision::{Decision, Op};
+
+/// A way to score collective-communication strategies on one network.
+///
+/// Implementations must be cheap to share across threads (`&self`
+/// methods only); the tuner's parallel sweep calls [`Evaluator::best`]
+/// concurrently from its worker pool.
+pub trait Evaluator: Send + Sync {
+    /// Short backend name for logs and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// Predicted (or measured) completion time, in seconds, of one
+    /// explicit `(strategy, p, m, segment)` point. `net` carries the
+    /// measured pLogP parameters; backends that re-measure instead of
+    /// predicting (the simulator) may ignore it.
+    fn predict(
+        &self,
+        op: Op,
+        strategy: Strategy,
+        p: usize,
+        m: u64,
+        seg: Option<u64>,
+        net: &PLogP,
+    ) -> f64;
+
+    /// Whether [`Evaluator::predict_grid`] evaluates the whole grid in
+    /// one backend call (the AOT artifact does); the tuner then hands it
+    /// the full grid instead of sweeping cells across threads.
+    fn batched(&self) -> bool {
+        false
+    }
+
+    /// Search the segment grid (plus `m` itself, the unsegmented
+    /// degenerate) for the best segment of one segmented strategy.
+    /// Returns `(best_time, best_segment)`.
+    fn tune_segment(
+        &self,
+        strategy: Strategy,
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+    ) -> (f64, u64) {
+        let op = Op::of(strategy);
+        let mut best = (self.predict(op, strategy, p, m, Some(m), net), m);
+        for &s in s_grid {
+            let s = s.clamp(1, m);
+            let t = self.predict(op, strategy, p, m, Some(s), net);
+            if t < best.0 {
+                best = (t, s);
+            }
+        }
+        best
+    }
+
+    /// Score every strategy of `family` at one grid cell and return
+    /// `(strategy, time, segment)` sorted ascending by time (stable, so
+    /// exact ties keep family order). Segmented entries carry their
+    /// tuned segment.
+    fn rank(
+        &self,
+        family: &[Strategy],
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+    ) -> Vec<(Strategy, f64, Option<u64>)> {
+        let mut out: Vec<(Strategy, f64, Option<u64>)> = family
+            .iter()
+            .map(|&s| {
+                if s.is_segmented() {
+                    let (t, seg) = self.tune_segment(s, net, p, m, s_grid);
+                    (s, t, Some(seg))
+                } else {
+                    (s, self.predict(Op::of(s), s, p, m, None, net), None)
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        out
+    }
+
+    /// The argmin decision at one grid cell (equal to `rank(..)[0]`;
+    /// backends may override with a pruned search as long as exact ties
+    /// still resolve to the earliest strategy in family order).
+    fn best(&self, op: Op, net: &PLogP, p: usize, m: u64, s_grid: &[u64]) -> Decision {
+        let ranked = self.rank(op.family(), net, p, m, s_grid);
+        let (strategy, predicted, segment) = ranked[0];
+        Decision { strategy, segment, predicted }
+    }
+
+    /// Batched whole-grid evaluation: the best [`Decision`] for every
+    /// `(p, m)` cell, row-major `[p_grid.len() × m_grid.len()]`. The
+    /// default sweeps cells through [`Evaluator::best`]; batched
+    /// backends override this with one backend execution.
+    fn predict_grid(
+        &self,
+        op: Op,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+        s_grid: &[u64],
+    ) -> Result<Vec<Decision>> {
+        let mut out = Vec::with_capacity(p_grid.len() * m_grid.len());
+        for &p in p_grid {
+            for &m in m_grid {
+                out.push(self.best(op, net, p, m, s_grid));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, Netsim};
+    use crate::plogp;
+
+    fn measured() -> PLogP {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        plogp::bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn evaluators_are_send_and_sync() {
+        fn assert_ss<T: Send + Sync>() {}
+        assert_ss::<ModelEval>();
+        assert_ss::<SimEval>();
+        assert_ss::<ArtifactEval>();
+        assert_ss::<Box<dyn Evaluator>>();
+    }
+
+    #[test]
+    fn trait_objects_score_points() {
+        let net = measured();
+        let evals: Vec<Box<dyn Evaluator>> = vec![
+            Box::new(ModelEval),
+            Box::new(SimEval::new(NetConfig::fast_ethernet_ideal())),
+        ];
+        for e in &evals {
+            let t = e.predict(Op::Bcast, Strategy::BcastBinomial, 8, 4096, None, &net);
+            assert!(t > 0.0 && t.is_finite(), "{}: {t}", e.name());
+            let d = e.best(Op::Scatter, &net, 8, 4096, &[512, 1024]);
+            assert!(d.strategy.is_scatter());
+            assert!(d.predicted > 0.0);
+        }
+    }
+
+    #[test]
+    fn default_rank_is_sorted_and_complete() {
+        let net = measured();
+        let ranked = ModelEval.rank(&Strategy::BCAST, &net, 8, 65536, &[1024, 8192]);
+        assert_eq!(ranked.len(), 10);
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        for (s, _, seg) in &ranked {
+            assert_eq!(seg.is_some(), s.is_segmented());
+        }
+    }
+
+    #[test]
+    fn best_matches_rank_head_for_both_families() {
+        let net = measured();
+        let s_grid = [256u64, 4096, 65536];
+        for op in [Op::Bcast, Op::Scatter] {
+            for p in [2usize, 8, 24] {
+                for m in [64u64, 8192, 1 << 20] {
+                    let d = ModelEval.best(op, &net, p, m, &s_grid);
+                    let ranked = ModelEval.rank(op.family(), &net, p, m, &s_grid);
+                    assert_eq!(d.strategy, ranked[0].0, "{op:?} P={p} m={m}");
+                    assert_eq!(d.predicted, ranked[0].1);
+                    assert_eq!(d.segment, ranked[0].2);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! [`ModelEval`] — the analytic backend: Tables 1 and 2 as closed-form
+//! pLogP cost models, via the strategy-indexed registry in
+//! [`crate::models`].
+
+use crate::collectives::Strategy;
+use crate::models;
+use crate::plogp::PLogP;
+use crate::tuner::decision::{Decision, Op};
+
+use super::Evaluator;
+
+/// The native model evaluator. Stateless and free to construct; the
+/// tuner's parallel sweep shares one across all workers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModelEval;
+
+impl ModelEval {
+    pub fn new() -> ModelEval {
+        ModelEval
+    }
+}
+
+impl Evaluator for ModelEval {
+    fn name(&self) -> &'static str {
+        // historical CLI name for the pure-Rust model backend
+        "native"
+    }
+
+    fn predict(
+        &self,
+        _op: Op,
+        strategy: Strategy,
+        p: usize,
+        m: u64,
+        seg: Option<u64>,
+        net: &PLogP,
+    ) -> f64 {
+        models::predict(strategy, net, p, m, seg)
+    }
+
+    /// Delegated to [`models::best_segment`] so the pruned [`Self::best`]
+    /// (which uses the same function) can never drift from `rank()[0]`.
+    fn tune_segment(
+        &self,
+        strategy: Strategy,
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+    ) -> (f64, u64) {
+        models::best_segment(strategy, net, p, m, s_grid)
+    }
+
+    /// Delegated to [`models::rank_strategies`] (same reason).
+    fn rank(
+        &self,
+        family: &[Strategy],
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+    ) -> Vec<(Strategy, f64, Option<u64>)> {
+        models::rank_strategies(family, net, p, m, s_grid)
+    }
+
+    /// Argmin with early pruning: a segmented strategy whose
+    /// segment-size-independent lower bound already loses to the best
+    /// unpruned candidate skips its whole segment-grid search. Exact
+    /// ties are never pruned (strict `>`), so the winner is identical to
+    /// `rank(..)[0]` — first in family order among the minima.
+    fn best(&self, op: Op, net: &PLogP, p: usize, m: u64, s_grid: &[u64]) -> Decision {
+        let mut best: Option<Decision> = None;
+        for &s in op.family() {
+            if s.is_segmented() {
+                if let Some(b) = &best {
+                    if models::segmented_lower_bound(s, net, p) > b.predicted {
+                        continue;
+                    }
+                }
+                let (t, seg) = models::best_segment(s, net, p, m, s_grid);
+                if best.as_ref().map_or(true, |b| t < b.predicted) {
+                    best = Some(Decision { strategy: s, segment: Some(seg), predicted: t });
+                }
+            } else {
+                let t = models::predict(s, net, p, m, None);
+                if best.as_ref().map_or(true, |b| t < b.predicted) {
+                    best = Some(Decision { strategy: s, segment: None, predicted: t });
+                }
+            }
+        }
+        best.expect("op families are non-empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{NetConfig, Netsim};
+    use crate::plogp;
+
+    fn measured() -> PLogP {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+        plogp::bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn predict_delegates_to_models() {
+        let net = measured();
+        for s in Strategy::ALL {
+            let seg = s.is_segmented().then_some(4096u64);
+            assert_eq!(
+                ModelEval.predict(Op::of(s), s, 24, 65536, seg, &net),
+                models::predict(s, &net, 24, 65536, seg),
+                "{}",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_best_matches_exhaustive_argmin_over_a_grid() {
+        let net = measured();
+        let s_grid: Vec<u64> = crate::tuner::grids::default_s_grid();
+        for op in [Op::Bcast, Op::Scatter] {
+            for p in [2usize, 5, 16, 48] {
+                for m in [1u64, 256, 8192, 1 << 17, 1 << 20] {
+                    let d = ModelEval.best(op, &net, p, m, &s_grid);
+                    let want = models::rank_strategies(op.family(), &net, p, m, &s_grid);
+                    assert_eq!(d.strategy, want[0].0, "{op:?} P={p} m={m}");
+                    assert_eq!(d.predicted, want[0].1);
+                    assert_eq!(d.segment, want[0].2);
+                }
+            }
+        }
+    }
+}

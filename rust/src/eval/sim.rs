@@ -1,0 +1,125 @@
+//! [`SimEval`] — the empirical backend: build the schedule and execute
+//! it on a fresh simulated cluster. This is the exhaustive benchmarking
+//! the paper's fast tuning replaces; the validation layer keeps it as
+//! ground truth, and it is the reference side of every
+//! `cross_validate` run.
+
+use crate::collectives::Strategy;
+use crate::models;
+use crate::mpi::World;
+use crate::netsim::{NetConfig, Netsim};
+use crate::plogp::{self, PLogP};
+use crate::tuner::decision::Op;
+
+use super::Evaluator;
+
+/// Scores strategies by actually running them on a simulated cluster of
+/// the given configuration. Construction is cheap (the simulator is
+/// built per measurement, so `&self` stays shareable across the tuner's
+/// worker threads).
+#[derive(Debug, Clone)]
+pub struct SimEval {
+    cfg: NetConfig,
+}
+
+impl SimEval {
+    pub fn new(cfg: NetConfig) -> SimEval {
+        SimEval { cfg }
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    /// Measure the cluster's pLogP parameters on a fresh two-node probe
+    /// simulator (the experiments' common setup).
+    pub fn measure_net(&self) -> PLogP {
+        let mut sim = Netsim::new(2, self.cfg.clone());
+        plogp::bench::measure(&mut sim)
+    }
+
+    /// Run one strategy empirically at `(p, m)` on a fresh cluster and
+    /// return its completion time in (simulated) seconds.
+    pub fn measure(&self, strategy: Strategy, p: usize, m: u64, seg: Option<u64>) -> f64 {
+        let sched = strategy.build(p, 0, m, seg);
+        let mut world = World::new(Netsim::new(p, self.cfg.clone()));
+        let rep = world.run(&sched);
+        debug_assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        rep.completion.as_secs()
+    }
+}
+
+impl Evaluator for SimEval {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn predict(
+        &self,
+        _op: Op,
+        strategy: Strategy,
+        p: usize,
+        m: u64,
+        seg: Option<u64>,
+        _net: &PLogP,
+    ) -> f64 {
+        self.measure(strategy, p, m, seg)
+    }
+
+    /// Segments are tuned *analytically*, then that one schedule is
+    /// measured — a deployed runtime executes the model-tuned segment,
+    /// and measuring every candidate segment empirically would be
+    /// exactly the exhaustive sweep the paper replaces.
+    fn tune_segment(
+        &self,
+        strategy: Strategy,
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+    ) -> (f64, u64) {
+        let (_, seg) = models::best_segment(strategy, net, p, m, s_grid);
+        (self.measure(strategy, p, m, Some(seg)), seg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_is_deterministic_and_positive() {
+        let e = SimEval::new(NetConfig::fast_ethernet_ideal());
+        let a = e.measure(Strategy::BcastBinomial, 8, 4096, None);
+        let b = e.measure(Strategy::BcastBinomial, 8, 4096, None);
+        assert!(a > 0.0 && a.is_finite());
+        assert_eq!(a, b, "fresh simulators must reproduce bit-identical runs");
+    }
+
+    #[test]
+    fn rank_uses_model_tuned_segments() {
+        let e = SimEval::new(NetConfig::fast_ethernet_ideal());
+        let net = e.measure_net();
+        let s_grid = [1024u64, 8192, 65536];
+        let ranked = e.rank(&Strategy::BCAST, &net, 8, 1 << 18, &s_grid);
+        assert_eq!(ranked.len(), 10);
+        for (s, t, seg) in &ranked {
+            assert!(*t > 0.0);
+            if s.is_segmented() {
+                let want = models::best_segment(*s, &net, 8, 1 << 18, &s_grid).1;
+                assert_eq!(*seg, Some(want), "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn faster_network_measures_faster() {
+        let fe = SimEval::new(NetConfig::fast_ethernet_ideal());
+        let ge = SimEval::new(NetConfig::gigabit_ethernet());
+        let m = 1 << 18;
+        assert!(
+            ge.measure(Strategy::BcastBinomial, 16, m, None)
+                < fe.measure(Strategy::BcastBinomial, 16, m, None)
+        );
+    }
+}

@@ -7,41 +7,27 @@
 //! the benchmark tool, exactly the paper's methodology.
 
 use crate::collectives::Strategy;
+use crate::eval::SimEval;
 use crate::models;
-use crate::mpi::World;
-use crate::netsim::{NetConfig, Netsim};
-use crate::plogp::{self, PLogP};
+use crate::netsim::NetConfig;
+use crate::plogp::PLogP;
 use crate::tuner::validate::{validate_selection, ValidateOptions};
 use crate::tuner::{grids, Op};
 use crate::util::table::{fmt_bytes, fmt_time, Table};
 
 use super::{ExperimentResult, Series};
 
-/// Measure one strategy empirically at `(p, m)` on a fresh cluster.
-pub fn measure_strategy(
-    cfg: &NetConfig,
-    strategy: Strategy,
-    p: usize,
-    m: u64,
-    seg: Option<u64>,
-) -> f64 {
-    let sched = strategy.build(p, 0, m, seg);
-    let mut world = World::new(Netsim::new(p, cfg.clone()));
-    let rep = world.run(&sched);
-    debug_assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
-    rep.completion.as_secs()
-}
-
-/// Measure pLogP parameters of a config (the experiments' common setup).
+/// Measure pLogP parameters of a config (the experiments' common
+/// setup). Strategy measurements go through [`SimEval`] — the harness
+/// no longer carries its own measurement helpers.
 pub fn measure_net(cfg: &NetConfig) -> PLogP {
-    let mut sim = Netsim::new(2, cfg.clone());
-    plogp::bench::measure(&mut sim)
+    SimEval::new(cfg.clone()).measure_net()
 }
 
 /// Shared driver: measured-vs-predicted sweep over message sizes for one
 /// strategy at fixed P.
 fn sweep_m(
-    cfg: &NetConfig,
+    eval: &SimEval,
     net: &PLogP,
     strategy: Strategy,
     p: usize,
@@ -58,7 +44,7 @@ fn sweep_m(
         } else {
             (models::predict(strategy, net, p, m, None), None)
         };
-        let t_meas = measure_strategy(cfg, strategy, p, m, seg);
+        let t_meas = eval.measure(strategy, p, m, seg);
         meas.push(m as f64, t_meas);
         pred.push(m as f64, t_pred);
         tab.row(vec![
@@ -85,11 +71,12 @@ fn merge_tables(mut a: Table, b: &Table) -> Table {
 /// Fig 1(a): Binomial Broadcast, measured vs predicted, m-sweep at two
 /// cluster sizes.
 pub fn fig1a(cfg: &NetConfig) -> ExperimentResult {
-    let net = measure_net(cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     let m_grid = grids::log_grid(1 << 10, 1 << 20, 11);
     let s_grid = grids::default_s_grid();
-    let (m24, p24, t1) = sweep_m(cfg, &net, Strategy::BcastBinomial, 24, &m_grid, &s_grid);
-    let (m48, p48, t2) = sweep_m(cfg, &net, Strategy::BcastBinomial, 48, &m_grid, &s_grid);
+    let (m24, p24, t1) = sweep_m(&eval, &net, Strategy::BcastBinomial, 24, &m_grid, &s_grid);
+    let (m48, p48, t2) = sweep_m(&eval, &net, Strategy::BcastBinomial, 48, &m_grid, &s_grid);
     let table = merge_tables(t1, &t2);
     let notes = vec![
         note_rel_err("P=24", &m24, &p24),
@@ -107,11 +94,12 @@ pub fn fig1a(cfg: &NetConfig) -> ExperimentResult {
 
 /// Fig 1(b): Segmented Chain Broadcast, measured vs predicted.
 pub fn fig1b(cfg: &NetConfig) -> ExperimentResult {
-    let net = measure_net(cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     let m_grid = grids::log_grid(1 << 10, 1 << 20, 11);
     let s_grid = grids::default_s_grid();
-    let (m24, p24, t1) = sweep_m(cfg, &net, Strategy::BcastSegChain, 24, &m_grid, &s_grid);
-    let (m48, p48, t2) = sweep_m(cfg, &net, Strategy::BcastSegChain, 48, &m_grid, &s_grid);
+    let (m24, p24, t1) = sweep_m(&eval, &net, Strategy::BcastSegChain, 24, &m_grid, &s_grid);
+    let (m48, p48, t2) = sweep_m(&eval, &net, Strategy::BcastSegChain, 48, &m_grid, &s_grid);
     let table = merge_tables(t1, &t2);
     let notes = vec![
         note_rel_err("P=24", &m24, &p24),
@@ -130,11 +118,12 @@ pub fn fig1b(cfg: &NetConfig) -> ExperimentResult {
 /// Fig 2: Chain vs Binomial Broadcast and their predictions at fixed P.
 pub fn fig2(cfg: &NetConfig) -> ExperimentResult {
     let p = 24;
-    let net = measure_net(cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     let m_grid = grids::log_grid(1 << 10, 1 << 20, 13);
     let s_grid = grids::default_s_grid();
-    let (sc_m, sc_p, t1) = sweep_m(cfg, &net, Strategy::BcastSegChain, p, &m_grid, &s_grid);
-    let (bi_m, bi_p, t2) = sweep_m(cfg, &net, Strategy::BcastBinomial, p, &m_grid, &s_grid);
+    let (sc_m, sc_p, t1) = sweep_m(&eval, &net, Strategy::BcastSegChain, p, &m_grid, &s_grid);
+    let (bi_m, bi_p, t2) = sweep_m(&eval, &net, Strategy::BcastBinomial, p, &m_grid, &s_grid);
     let table = merge_tables(t1, &t2);
 
     // crossover: below it binomial wins, above it the segmented chain
@@ -177,11 +166,12 @@ pub fn fig2(cfg: &NetConfig) -> ExperimentResult {
 /// Fig 3(a): Flat vs Binomial Scatter, m-sweep at fixed P.
 pub fn fig3a(cfg: &NetConfig) -> ExperimentResult {
     let p = 32;
-    let net = measure_net(cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     let m_grid = grids::log_grid(1 << 10, 1 << 17, 9);
     let s_grid = grids::default_s_grid();
-    let (fl_m, fl_p, t1) = sweep_m(cfg, &net, Strategy::ScatterFlat, p, &m_grid, &s_grid);
-    let (bi_m, bi_p, t2) = sweep_m(cfg, &net, Strategy::ScatterBinomial, p, &m_grid, &s_grid);
+    let (fl_m, fl_p, t1) = sweep_m(&eval, &net, Strategy::ScatterFlat, p, &m_grid, &s_grid);
+    let (bi_m, bi_p, t2) = sweep_m(&eval, &net, Strategy::ScatterBinomial, p, &m_grid, &s_grid);
     let table = merge_tables(t1, &t2);
     let wins = m_grid
         .iter()
@@ -205,7 +195,8 @@ pub fn fig3a(cfg: &NetConfig) -> ExperimentResult {
 /// Fig 3(b): Flat vs Binomial Scatter, P-sweep at fixed m.
 pub fn fig3b(cfg: &NetConfig) -> ExperimentResult {
     let m = 32 * 1024;
-    let net = measure_net(cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     let p_grid: Vec<usize> = vec![2, 4, 8, 12, 16, 24, 32, 40, 48];
     let mut fl_m = Series::new("scatter/flat measured");
     let mut fl_p = Series::new("scatter/flat predicted");
@@ -219,7 +210,7 @@ pub fn fig3b(cfg: &NetConfig) -> ExperimentResult {
             (Strategy::ScatterBinomial, &mut bi_m, &mut bi_p),
         ] {
             let t_pred = models::predict(strategy, &net, p, m, None);
-            let t_meas = measure_strategy(cfg, strategy, p, m, None);
+            let t_meas = eval.measure(strategy, p, m, None);
             ms.push(p as f64, t_meas);
             ps.push(p as f64, t_pred);
             table.row(vec![
@@ -260,11 +251,12 @@ pub fn fig3b(cfg: &NetConfig) -> ExperimentResult {
 /// §4.2) while binomial follows its model.
 pub fn fig4(cfg: &NetConfig) -> ExperimentResult {
     let p = 24;
-    let net = measure_net(cfg);
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
     let m_grid = grids::log_grid(1 << 10, 1 << 17, 9);
     let s_grid = grids::default_s_grid();
-    let (fl_m, fl_p, t1) = sweep_m(cfg, &net, Strategy::ScatterFlat, p, &m_grid, &s_grid);
-    let (bi_m, bi_p, t2) = sweep_m(cfg, &net, Strategy::ScatterBinomial, p, &m_grid, &s_grid);
+    let (fl_m, fl_p, t1) = sweep_m(&eval, &net, Strategy::ScatterFlat, p, &m_grid, &s_grid);
+    let (bi_m, bi_p, t2) = sweep_m(&eval, &net, Strategy::ScatterBinomial, p, &m_grid, &s_grid);
     let table = merge_tables(t1, &t2);
     // quantify the bulk effect: measured/predicted ratio per strategy
     let ratio = |m: &Series, pr: &Series| {

@@ -22,11 +22,18 @@
 //!   MagPIe-style multi-level variants.
 //! * [`plogp`] — the pLogP parameter model and the measurement procedure
 //!   of Kielmann et al.'s LogP benchmark, run against the simulator.
-//! * [`models`] — the analytic cost models of Tables 1 and 2 in Rust.
+//! * [`models`] — the analytic cost models of Tables 1 and 2 in Rust,
+//!   as a strategy-indexed registry of closed-form cost functions.
+//! * [`eval`] — the evaluation layer: the [`eval::Evaluator`] trait with
+//!   three interchangeable backends — analytic models
+//!   ([`eval::ModelEval`]), empirical simulation ([`eval::SimEval`]) and
+//!   the AOT-compiled XLA artifact ([`eval::ArtifactEval`]). Everything
+//!   that scores a `(strategy, P, m, segment)` point goes through it.
 //! * [`tuner`] — the paper's contribution: strategy selection and
-//!   segment-size search, with a *fast path* that executes the whole
-//!   decision tensor as one AOT-compiled XLA computation (see
-//!   `python/compile/`) through [`runtime`].
+//!   segment-size search over any [`eval::Evaluator`], swept in parallel
+//!   across worker threads (`tune --jobs N`), with the AOT artifact
+//!   (see `python/compile/`, loaded through [`runtime`]) as the batched
+//!   fast path.
 //! * [`coordinator`] — the L3 service layer on top of the tuner: a
 //!   long-running, thread-safe decision-table service. Clusters are
 //!   fingerprinted by quantized pLogP signatures so equivalent networks
@@ -44,6 +51,7 @@
 
 pub mod collectives;
 pub mod coordinator;
+pub mod eval;
 pub mod harness;
 pub mod models;
 pub mod mpi;

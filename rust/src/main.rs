@@ -74,12 +74,13 @@ fn backend_tuner(args: &Args) -> Result<Tuner> {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(TunerArtifact::default_dir);
-    Ok(match args.get_or("backend", "auto").as_str() {
+    let tuner = match args.get_or("backend", "auto").as_str() {
         "auto" => Tuner::auto(&dir),
         "native" => Tuner::native(),
         "artifact" => Tuner::with_artifact(&dir)?,
         other => bail!("unknown --backend '{other}' (auto, native, artifact)"),
-    })
+    };
+    Ok(tuner.jobs(args.usize_or("jobs", 0)?))
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -89,7 +90,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     println!("measured {}", net.summary());
 
     let tuner = backend_tuner(args)?;
-    println!("backend: {}", tuner.backend.name());
+    println!("backend: {} ({} sweep worker(s))", tuner.backend_name(), tuner.jobs);
     let p_grid = args
         .usize_list("procs")?
         .unwrap_or_else(grids::default_p_grid);
@@ -174,7 +175,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown strategy '{full}'"))?;
             return run_strategy(&cfg, strategy, p, m, seg);
         }
-        "reduce" => composed::reduce_binomial(p, 0, m),
+        "reduce" => composed::reduce_binomial(p, 0, m)?,
         "gather" | "barrier" | "allgather" | "allreduce" => {
             let family = match op.as_str() {
                 "gather" => ExtOp::Gather,
@@ -198,7 +199,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     d.strategy.name(),
                     fmt_time(d.predicted)
                 );
-                build_ext_schedule(family, d.strategy, p, m)
+                build_ext_schedule(family, d.strategy, p, m)?
             } else {
                 match args.get_or("strategy", "auto").as_str() {
                     "flat" => composed::gather_flat(p, 0, m),
@@ -216,10 +217,10 @@ fn cmd_run(args: &Args) -> Result<()> {
                     "rec_doubling" => {
                         collective_tuner::collectives::extended::allreduce_recursive_doubling(
                             p, m,
-                        )
+                        )?
                     }
                     "gather+bcast" => composed::allgather(p, 0, m),
-                    "reduce+bcast" => composed::allreduce(p, 0, m),
+                    "reduce+bcast" => composed::allreduce(p, 0, m)?,
                     other => bail!("unknown {op} strategy '{other}'"),
                 }
             }
@@ -319,6 +320,7 @@ fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
     let mut cfg = CoordinatorConfig::default();
     cfg.shards = args.usize_or("shards", cfg.shards)?.max(1);
     cfg.capacity_per_shard = args.usize_or("capacity", cfg.capacity_per_shard)?.max(1);
+    cfg.jobs = args.usize_or("jobs", 0)?;
     cfg.artifact_dir = match args.get_or("backend", "auto").as_str() {
         "native" => None,
         "auto" | "artifact" => {

@@ -25,50 +25,166 @@ fn floor_log2(p: usize) -> f64 {
     crate::collectives::tree::floor_log2(p) as f64
 }
 
+/// Pre-computed quantities shared by every per-strategy cost function.
+/// Built once per [`predict`] call, so the registry entries stay tiny
+/// closed-form expressions.
+pub struct CostInputs<'a> {
+    pub net: &'a PLogP,
+    pub procs: usize,
+    /// P as f64.
+    pub p: f64,
+    /// Message size as f64.
+    pub mf: f64,
+    pub l: f64,
+    pub g_m: f64,
+    /// floor(log2 P) and ceil(log2 P) as f64.
+    pub fl: f64,
+    pub ce: f64,
+    /// Rendezvous handshake cost `2 g(1) + 3 L`.
+    pub rdv: f64,
+    /// Effective segment size, clamped to `[1, m]`.
+    pub s_eff: f64,
+    /// Segment count `k = ceil(m / s_eff)`.
+    pub k: f64,
+    /// Per-segment gap `g(s_eff)`.
+    pub g_s: f64,
+}
+
+impl<'a> CostInputs<'a> {
+    pub fn new(net: &'a PLogP, procs: usize, m: u64, seg: Option<u64>) -> CostInputs<'a> {
+        assert!(procs >= 1);
+        assert!(m >= 1);
+        let mf = m as f64;
+        let s_eff = seg.unwrap_or(m).clamp(1, m) as f64;
+        CostInputs {
+            net,
+            procs,
+            p: procs as f64,
+            mf,
+            l: net.l,
+            g_m: net.gap(mf),
+            fl: floor_log2(procs),
+            ce: ceil_log2(procs),
+            rdv: 2.0 * net.gap(1.0) + 3.0 * net.l,
+            s_eff,
+            k: (mf / s_eff).ceil(),
+            g_s: net.gap(s_eff),
+        }
+    }
+}
+
+/// One closed-form cost model (an entry of [`COST_MODELS`]).
+pub type CostFn = fn(&CostInputs) -> f64;
+
+fn cost_bcast_flat(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * x.g_m + x.l
+}
+
+fn cost_bcast_flat_rdv(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * x.g_m + x.rdv
+}
+
+fn cost_bcast_seg_flat(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * (x.g_s * x.k) + x.l
+}
+
+fn cost_bcast_chain(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * (x.g_m + x.l)
+}
+
+fn cost_bcast_chain_rdv(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * (x.g_m + x.rdv)
+}
+
+fn cost_bcast_seg_chain(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * (x.g_s + x.l) + x.g_s * (x.k - 1.0)
+}
+
+fn cost_bcast_binary(x: &CostInputs) -> f64 {
+    x.ce * (2.0 * x.g_m + x.l)
+}
+
+fn cost_bcast_binomial(x: &CostInputs) -> f64 {
+    x.fl * x.g_m + x.ce * x.l
+}
+
+fn cost_bcast_binomial_rdv(x: &CostInputs) -> f64 {
+    x.fl * x.g_m + x.ce * x.rdv
+}
+
+fn cost_bcast_seg_binomial(x: &CostInputs) -> f64 {
+    x.fl * x.g_s * x.k + x.ce * x.l
+}
+
+fn cost_scatter_flat(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * x.g_m + x.l
+}
+
+fn cost_scatter_chain(x: &CostInputs) -> f64 {
+    let sum: f64 = (1..x.procs).map(|j| x.net.gap(j as f64 * x.mf)).sum();
+    sum + (x.p - 1.0) * x.l
+}
+
+fn cost_scatter_binomial(x: &CostInputs) -> f64 {
+    let sum: f64 = (0..ceil_log2(x.procs) as u32)
+        .map(|j| x.net.gap((1u64 << j) as f64 * x.mf))
+        .sum();
+    sum + x.ce * x.l
+}
+
+/// Strategy-indexed cost registry: entry `i` models
+/// `Strategy::from_index(i)`. New backends and tools (the `eval` layer,
+/// ablations, docs generators) index this table instead of growing a
+/// match ladder.
+pub const COST_MODELS: [CostFn; Strategy::COUNT] = [
+    cost_bcast_flat,
+    cost_bcast_flat_rdv,
+    cost_bcast_seg_flat,
+    cost_bcast_chain,
+    cost_bcast_chain_rdv,
+    cost_bcast_seg_chain,
+    cost_bcast_binary,
+    cost_bcast_binomial,
+    cost_bcast_binomial_rdv,
+    cost_bcast_seg_binomial,
+    cost_scatter_flat,
+    cost_scatter_chain,
+    cost_scatter_binomial,
+];
+
+/// The cost model of one strategy.
+pub fn cost_fn(strategy: Strategy) -> CostFn {
+    COST_MODELS[strategy.index()]
+}
+
 /// Predicted completion time of `strategy` on a `procs`-rank cluster for
 /// message size `m`, with optional segment size (segmented strategies
 /// only; `None` means one segment).
 ///
 /// For scatter strategies `m` is the per-rank chunk size.
 pub fn predict(strategy: Strategy, net: &PLogP, procs: usize, m: u64, seg: Option<u64>) -> f64 {
-    assert!(procs >= 1);
-    assert!(m >= 1);
+    cost_fn(strategy)(&CostInputs::new(net, procs, m, seg))
+}
+
+/// Conservative lower bound on a segmented strategy's best achievable
+/// time over *any* segment size — the tuner's per-cell pruning test.
+///
+/// Sound because interpolated and extrapolated gaps never drop below the
+/// table's minimum sampled gap (`GapTable::gap` clamps below the first
+/// sample, stays between bracketing samples inside, and floors at the
+/// last sample above), and the segment count satisfies `k >= 1`; so
+/// replacing every `k·g(s)` / `g(s)` term by `min(samples)` bounds each
+/// model from below.
+pub fn segmented_lower_bound(strategy: Strategy, net: &PLogP, procs: usize) -> f64 {
+    assert!(strategy.is_segmented());
+    let g_min = net.table.gaps().iter().copied().fold(f64::INFINITY, f64::min);
     let l = net.l;
     let p = procs as f64;
-    let mf = m as f64;
-    let g_m = net.gap(mf);
-    let g_1 = net.gap(1.0);
-    let fl = floor_log2(procs);
-    let ce = ceil_log2(procs);
-    let rdv = 2.0 * g_1 + 3.0 * l;
-
-    // segmented quantities
-    let s_eff = seg.unwrap_or(m).clamp(1, m) as f64;
-    let k = (mf / s_eff).ceil();
-    let g_s = net.gap(s_eff);
-
     match strategy {
-        Strategy::BcastFlat => (p - 1.0) * g_m + l,
-        Strategy::BcastFlatRdv => (p - 1.0) * g_m + rdv,
-        Strategy::BcastSegFlat => (p - 1.0) * (g_s * k) + l,
-        Strategy::BcastChain => (p - 1.0) * (g_m + l),
-        Strategy::BcastChainRdv => (p - 1.0) * (g_m + rdv),
-        Strategy::BcastSegChain => (p - 1.0) * (g_s + l) + g_s * (k - 1.0),
-        Strategy::BcastBinary => ce * (2.0 * g_m + l),
-        Strategy::BcastBinomial => fl * g_m + ce * l,
-        Strategy::BcastBinomialRdv => fl * g_m + ce * rdv,
-        Strategy::BcastSegBinomial => fl * g_s * k + ce * l,
-        Strategy::ScatterFlat => (p - 1.0) * g_m + l,
-        Strategy::ScatterChain => {
-            let sum: f64 = (1..procs).map(|j| net.gap(j as f64 * mf)).sum();
-            sum + (p - 1.0) * l
-        }
-        Strategy::ScatterBinomial => {
-            let sum: f64 = (0..ceil_log2(procs) as u32)
-                .map(|j| net.gap((1u64 << j) as f64 * mf))
-                .sum();
-            sum + ce * l
-        }
+        Strategy::BcastSegFlat => (p - 1.0) * g_min + l,
+        Strategy::BcastSegChain => (p - 1.0) * (g_min + l),
+        Strategy::BcastSegBinomial => floor_log2(procs) * g_min + ceil_log2(procs) * l,
+        _ => unreachable!("is_segmented() covers exactly the three Seg variants"),
     }
 }
 
@@ -229,6 +345,47 @@ mod tests {
         // P=1: no sends; flat model (P-1)g+L degenerates to L
         assert!((predict(Strategy::BcastFlat, &n, 1, 8, None) - 10.0).abs() < 1e-9);
         assert_eq!(predict(Strategy::BcastBinomial, &n, 1, 8, None), 0.0);
+    }
+
+    #[test]
+    fn registry_is_indexed_by_strategy() {
+        // every registry entry reproduces predict() for its own strategy
+        let n = toy();
+        for s in Strategy::ALL {
+            let x = CostInputs::new(&n, 5, 8, Some(2));
+            assert_eq!(
+                cost_fn(s)(&x),
+                predict(s, &n, 5, 8, Some(2)),
+                "{} registry/predict mismatch",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn segmented_lower_bound_is_a_true_lower_bound() {
+        let nets = [
+            toy(),
+            // steep, non-monotone-ish table: all overhead, no bandwidth
+            PLogP::new(1.0, GapTable::new(vec![1.0, 1024.0], vec![100.0, 101.0])),
+        ];
+        for net in &nets {
+            for procs in [1usize, 2, 5, 8, 31, 64] {
+                for m in [1u64, 7, 8, 1024] {
+                    for strat in Strategy::ALL.iter().filter(|s| s.is_segmented()) {
+                        let bound = segmented_lower_bound(*strat, net, procs);
+                        for s in [1u64, 2, 3, 8, 64, 1024, 1 << 20] {
+                            let t = predict(*strat, net, procs, m, Some(s));
+                            assert!(
+                                bound <= t + 1e-12,
+                                "{} P={procs} m={m} s={s}: bound {bound} > time {t}",
+                                strat.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! simulator allocation-free while letting tests verify that every rank
 //! ends up with exactly the right data.
 
+use anyhow::{bail, Result};
+
 use super::Rank;
 
 /// Message tag. The low 32 bits identify the logical transfer (e.g. the
@@ -45,8 +47,36 @@ pub enum Payload {
 }
 
 impl Payload {
+    /// `Ranks` payloads are u64 bitmasks, so reduction schedules can
+    /// track at most this many contributors.
+    pub const MAX_MASK_RANKS: usize = 64;
+
     pub fn range(offset: u64, len: u64) -> Payload {
         Payload::Range { offset, len }
+    }
+
+    /// Gate for reduction schedule builders: a structured error (rather
+    /// than a silently wrong bitmask) when `p` exceeds what a u64
+    /// contributor mask can represent.
+    pub fn check_mask_capacity(p: usize) -> Result<()> {
+        if p > Payload::MAX_MASK_RANKS {
+            bail!(
+                "reduction payloads track contributors in a u64 bitmask: \
+                 p = {p} exceeds the {}-rank limit",
+                Payload::MAX_MASK_RANKS
+            );
+        }
+        Ok(())
+    }
+
+    /// Bitmask of all ranks `0..p` (checked against the mask capacity).
+    pub fn all_ranks_mask(p: usize) -> Result<u64> {
+        Payload::check_mask_capacity(p)?;
+        Ok(if p == Payload::MAX_MASK_RANKS {
+            u64::MAX
+        } else {
+            (1u64 << p) - 1
+        })
     }
 }
 
@@ -211,6 +241,17 @@ mod tests {
         s.ranks[0].sends.push(send(2, 1, Trigger::AtStart));
         assert_eq!(s.total_sends(), 2);
         assert_eq!(s.total_send_bytes(), 200);
+    }
+
+    #[test]
+    fn mask_capacity_is_enforced_at_65_ranks() {
+        assert!(Payload::check_mask_capacity(64).is_ok());
+        let err = Payload::check_mask_capacity(65).unwrap_err();
+        assert!(err.to_string().contains("64"), "{err}");
+        assert_eq!(Payload::all_ranks_mask(1).unwrap(), 1);
+        assert_eq!(Payload::all_ranks_mask(3).unwrap(), 0b111);
+        assert_eq!(Payload::all_ranks_mask(64).unwrap(), u64::MAX);
+        assert!(Payload::all_ranks_mask(65).is_err());
     }
 
     #[test]

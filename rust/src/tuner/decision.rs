@@ -16,6 +16,15 @@ pub enum Op {
 }
 
 impl Op {
+    /// The operation family a strategy belongs to.
+    pub fn of(strategy: Strategy) -> Op {
+        if strategy.is_bcast() {
+            Op::Bcast
+        } else {
+            Op::Scatter
+        }
+    }
+
     pub fn family(self) -> &'static [Strategy] {
         match self {
             Op::Bcast => &Strategy::BCAST,

@@ -1,50 +1,51 @@
-//! The tuning engine: evaluate all models over the grid, take the argmin.
+//! The tuning engine: sweep the `(P, m)` grid through an
+//! [`Evaluator`] and take the per-cell argmin.
+//!
+//! The engine is backend-agnostic — it owns a `Box<dyn Evaluator>`
+//! (analytic models, the simulator, or the AOT artifact; see
+//! [`crate::eval`]) — and parallel: non-batched evaluators are swept by
+//! a hand-rolled `std::thread::scope` work queue (`--jobs N` on the
+//! CLI), with per-cell early pruning of segmented variants whose
+//! segment-independent lower bound already loses
+//! ([`crate::models::segmented_lower_bound`]). Batched evaluators (the
+//! artifact) receive the whole grid in one call instead. Results are
+//! bit-identical regardless of the worker count: every cell is computed
+//! independently and merged by index.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
-use crate::collectives::Strategy;
-use crate::models;
+use crate::eval::{ArtifactEval, Evaluator, ModelEval};
 use crate::plogp::PLogP;
-use crate::runtime::{pad_grid_f32, TunerArtifact};
 
 use super::decision::{Decision, DecisionTable, Op};
 use super::grids;
 
-/// Which evaluator produces the decision tensor.
-pub enum Backend {
-    /// One PJRT execution of the AOT-compiled kernel — the fast path.
-    Artifact(Box<TunerArtifact>),
-    /// The Rust model mirror — fallback and cross-check.
-    Native,
+/// One sweep worker per core by default.
+fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-impl Backend {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Artifact(_) => "artifact",
-            Backend::Native => "native",
-        }
-    }
-}
-
-/// The tuner: a backend plus a segment-size search grid.
+/// The tuner: an evaluator, a segment-size search grid, and a worker
+/// count for the parallel sweep.
 pub struct Tuner {
-    pub backend: Backend,
+    evaluator: Box<dyn Evaluator>,
     pub s_grid: Vec<u64>,
+    /// Sweep workers (1 = sequential). Set via [`Tuner::jobs`].
+    pub jobs: usize,
 }
 
 impl Tuner {
-    /// Native (pure Rust) tuner.
+    /// Native (pure Rust model) tuner.
     pub fn native() -> Tuner {
-        Tuner { backend: Backend::Native, s_grid: grids::default_s_grid() }
+        Tuner::with_evaluator(Box::new(ModelEval))
     }
 
     /// Load the AOT artifact from `dir`.
     pub fn with_artifact(dir: &Path) -> Result<Tuner> {
-        let art = TunerArtifact::load(dir)?;
-        Ok(Tuner { backend: Backend::Artifact(Box::new(art)), s_grid: grids::default_s_grid() })
+        Ok(Tuner::with_evaluator(Box::new(ArtifactEval::load(dir)?)))
     }
 
     /// Prefer the artifact; fall back to native (logging the reason).
@@ -58,6 +59,26 @@ impl Tuner {
         }
     }
 
+    /// Build on any evaluation backend.
+    pub fn with_evaluator(evaluator: Box<dyn Evaluator>) -> Tuner {
+        Tuner { evaluator, s_grid: grids::default_s_grid(), jobs: default_jobs() }
+    }
+
+    /// Set the sweep worker count (`0` = one per core).
+    pub fn jobs(mut self, n: usize) -> Tuner {
+        self.jobs = if n == 0 { default_jobs() } else { n };
+        self
+    }
+
+    pub fn evaluator(&self) -> &dyn Evaluator {
+        self.evaluator.as_ref()
+    }
+
+    /// Backend name for logs and CLI output.
+    pub fn backend_name(&self) -> &'static str {
+        self.evaluator.name()
+    }
+
     /// Tune both operations over the given grids. Returns the broadcast
     /// and scatter decision tables.
     pub fn tune(
@@ -66,116 +87,82 @@ impl Tuner {
         p_grid: &[usize],
         m_grid: &[u64],
     ) -> Result<(DecisionTable, DecisionTable)> {
-        match &self.backend {
-            Backend::Native => Ok(self.tune_native(net, p_grid, m_grid)),
-            Backend::Artifact(art) => self.tune_artifact(art, net, p_grid, m_grid),
-        }
+        Ok((
+            self.tune_op(Op::Bcast, net, p_grid, m_grid)?,
+            self.tune_op(Op::Scatter, net, p_grid, m_grid)?,
+        ))
     }
 
-    fn decide(
+    /// Tune one operation over the grid.
+    pub fn tune_op(
         &self,
         op: Op,
         net: &PLogP,
         p_grid: &[usize],
         m_grid: &[u64],
-        pick: impl Fn(usize, u64) -> Decision,
-    ) -> DecisionTable {
-        let _ = net;
-        let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
-        for &p in p_grid {
-            for &m in m_grid {
-                entries.push(pick(p, m));
-            }
-        }
-        DecisionTable::new(op, p_grid.to_vec(), m_grid.to_vec(), entries)
-    }
-
-    fn tune_native(&self, net: &PLogP, p_grid: &[usize], m_grid: &[u64]) -> (DecisionTable, DecisionTable) {
-        let pick = |family: &'static [Strategy]| {
-            move |net: &PLogP, s_grid: &[u64], p: usize, m: u64| -> Decision {
-                let ranked = models::rank_strategies(family, net, p, m, s_grid);
-                let (strategy, predicted, segment) = ranked[0];
-                Decision { strategy, segment, predicted }
-            }
+    ) -> Result<DecisionTable> {
+        let cells = p_grid.len() * m_grid.len();
+        let entries = if self.evaluator.batched() || self.jobs <= 1 || cells <= 1 {
+            self.evaluator.predict_grid(op, net, p_grid, m_grid, &self.s_grid)?
+        } else {
+            self.sweep_parallel(op, net, p_grid, m_grid)
         };
-        let pick_b = pick(&Strategy::BCAST);
-        let pick_s = pick(&Strategy::SCATTER);
-        let b = self.decide(Op::Bcast, net, p_grid, m_grid, |p, m| {
-            pick_b(net, &self.s_grid, p, m)
-        });
-        let s = self.decide(Op::Scatter, net, p_grid, m_grid, |p, m| {
-            pick_s(net, &self.s_grid, p, m)
-        });
-        (b, s)
+        Ok(DecisionTable::new(op, p_grid.to_vec(), m_grid.to_vec(), entries))
     }
 
-    fn tune_artifact(
+    /// The parallel grid sweep: a shared atomic cursor hands cells to
+    /// `jobs` scoped workers; each worker's `(index, decision)` pairs
+    /// are merged by index afterwards, so scheduling order never
+    /// influences the table.
+    fn sweep_parallel(
         &self,
-        art: &TunerArtifact,
+        op: Op,
         net: &PLogP,
         p_grid: &[usize],
         m_grid: &[u64],
-    ) -> Result<(DecisionTable, DecisionTable)> {
-        let meta = &art.meta;
-        assert!(
-            p_grid.len() <= meta.p_grid_len && m_grid.len() <= meta.m_grid_len,
-            "grid larger than artifact shape ({} x {} vs {} x {})",
-            p_grid.len(),
-            m_grid.len(),
-            meta.p_grid_len,
-            meta.m_grid_len
-        );
-        // pad every input to the artifact's baked shapes
-        let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
-        let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
-        assert_eq!(
-            sizes.len(),
-            meta.table_len,
-            "gap table has {} samples but the artifact expects {} — \
-             measure with plogp::default_size_grid({})",
-            sizes.len(),
-            meta.table_len,
-            meta.table_len
-        );
-        let pf = pad_grid_f32(p_grid.iter().map(|&p| p as f32).collect(), meta.p_grid_len);
-        let mf = pad_grid_f32(m_grid.iter().map(|&m| m as f32).collect(), meta.m_grid_len);
-        let sf = pad_grid_f32(
-            self.s_grid.iter().map(|&s| s as f32).collect(),
-            meta.s_grid_len,
-        );
-        let out = art.execute(&sizes, &gaps, net.l as f32, &pf, &mf, &sf)?;
-
-        let build = |op: Op| -> DecisionTable {
-            let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
-            for qi in 0..p_grid.len() {
-                for mi in 0..m_grid.len() {
-                    let widx = match op {
-                        Op::Bcast => out.bcast_win(qi, mi),
-                        Op::Scatter => out.scatter_win(qi, mi),
-                    };
-                    let strategy = Strategy::from_index(widx).expect("winner index");
-                    let seg = out.seg(widx, qi, mi);
-                    let segment = if strategy.is_segmented() && seg > 0.0 {
-                        Some(seg as u64)
-                    } else {
-                        None
-                    };
-                    entries.push(Decision {
-                        strategy,
-                        segment,
-                        predicted: out.time(widx, qi, mi) as f64,
-                    });
-                }
-            }
-            DecisionTable::new(op, p_grid.to_vec(), m_grid.to_vec(), entries)
-        };
-        Ok((build(Op::Bcast), build(Op::Scatter)))
+    ) -> Vec<Decision> {
+        let cells = p_grid.len() * m_grid.len();
+        let workers = self.jobs.min(cells).max(1);
+        let cursor = AtomicUsize::new(0);
+        let evaluator: &dyn Evaluator = self.evaluator.as_ref();
+        let s_grid: &[u64] = &self.s_grid;
+        let partials: Vec<Vec<(usize, Decision)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let cursor = &cursor;
+                    scope.spawn(move || {
+                        let mut mine = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= cells {
+                                break;
+                            }
+                            let p = p_grid[i / m_grid.len()];
+                            let m = m_grid[i % m_grid.len()];
+                            mine.push((i, evaluator.best(op, net, p, m, s_grid)));
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tuner sweep worker panicked"))
+                .collect()
+        });
+        let mut out: Vec<Option<Decision>> = vec![None; cells];
+        for (i, d) in partials.into_iter().flatten() {
+            out[i] = Some(d);
+        }
+        out.into_iter().map(|d| d.expect("every cell swept")).collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::Strategy;
+    use crate::models;
     use crate::netsim::{NetConfig, Netsim};
     use crate::plogp;
 
@@ -244,5 +231,25 @@ mod tests {
                 assert_eq!(b.at(qi, mi).strategy, want);
             }
         }
+    }
+
+    #[test]
+    fn worker_count_never_changes_the_tables() {
+        let net = measured();
+        let p_grid = vec![2usize, 8, 24, 48];
+        let m_grid = grids::log_grid(1, 1 << 20, 12);
+        let (b1, s1) = Tuner::native().jobs(1).tune(&net, &p_grid, &m_grid).unwrap();
+        for jobs in [2usize, 3, 8, 64] {
+            let (bn, sn) = Tuner::native().jobs(jobs).tune(&net, &p_grid, &m_grid).unwrap();
+            assert_eq!(b1.entries, bn.entries, "jobs={jobs}");
+            assert_eq!(s1.entries, sn.entries, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn jobs_zero_means_all_cores() {
+        let t = Tuner::native().jobs(0);
+        assert!(t.jobs >= 1);
+        assert_eq!(t.backend_name(), "native");
     }
 }

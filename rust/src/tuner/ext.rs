@@ -201,28 +201,30 @@ impl ExtTuner {
     }
 }
 
-/// Build the schedule for an extended decision.
+/// Build the schedule for an extended decision. Reduction strategies
+/// error when `p` exceeds the contributor-mask capacity
+/// (see [`crate::mpi::Payload::MAX_MASK_RANKS`]).
 pub fn build_ext_schedule(
     _op: ExtOp,
     strategy: ExtStrategy,
     p: usize,
     m: u64,
-) -> crate::mpi::CommSchedule {
+) -> Result<crate::mpi::CommSchedule> {
     use crate::collectives::{composed, extended};
-    match strategy {
+    Ok(match strategy {
         ExtStrategy::GatherFlat => composed::gather_flat(p, 0, m),
         ExtStrategy::GatherBinomial => composed::gather_binomial(p, 0, m),
-        ExtStrategy::ReduceBinomial => composed::reduce_binomial(p, 0, m),
+        ExtStrategy::ReduceBinomial => composed::reduce_binomial(p, 0, m)?,
         ExtStrategy::BarrierTree => composed::barrier_binomial(p),
         ExtStrategy::BarrierDissemination => extended::barrier_dissemination(p),
         ExtStrategy::AllGatherGatherBcast => composed::allgather(p, 0, m),
         ExtStrategy::AllGatherRing => extended::allgather_ring(p, m),
         ExtStrategy::AllGatherRecDoubling => extended::allgather_recursive_doubling(p, m),
-        ExtStrategy::AllReduceReduceBcast => composed::allreduce(p, 0, m),
+        ExtStrategy::AllReduceReduceBcast => composed::allreduce(p, 0, m)?,
         ExtStrategy::AllReduceRecDoubling => {
-            extended::allreduce_recursive_doubling(p, m)
+            extended::allreduce_recursive_doubling(p, m)?
         }
-    }
+    })
 }
 
 #[cfg(test)]
@@ -281,7 +283,7 @@ mod tests {
         let tables = t.tune(&net, &[8], &[4096]).unwrap();
         for table in &tables {
             let d = table.at(0, 0);
-            let sched = build_ext_schedule(table.op, d.strategy, 8, 4096);
+            let sched = build_ext_schedule(table.op, d.strategy, 8, 4096).unwrap();
             let mut world =
                 World::new(Netsim::new(8, NetConfig::fast_ethernet_ideal()));
             let rep = world.run(&sched);
@@ -300,7 +302,7 @@ mod tests {
         let tables = t.tune(&net, &[p], &[m]).unwrap();
         for table in &tables {
             let d = table.at(0, 0);
-            let sched = build_ext_schedule(table.op, d.strategy, p, m);
+            let sched = build_ext_schedule(table.op, d.strategy, p, m).unwrap();
             let mut world = World::new(Netsim::new(p, cfg.clone()));
             let meas = world.run(&sched).completion.as_secs();
             let rel = (d.predicted - meas).abs() / meas;

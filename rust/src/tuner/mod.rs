@@ -1,18 +1,22 @@
 //! The paper's contribution: fast, model-driven strategy selection.
 //!
-//! Given measured pLogP parameters, the tuner evaluates the cost model of
-//! every candidate implementation over a `(P, m)` grid — including the
-//! segment-size search for segmented strategies — and materializes
+//! Given measured pLogP parameters, the tuner evaluates every candidate
+//! implementation over a `(P, m)` grid — including the segment-size
+//! search for segmented strategies — and materializes
 //! [`decision::DecisionTable`]s that the collective runtime consults at
-//! call time. Two backends:
+//! call time. All scoring goes through the [`crate::eval::Evaluator`]
+//! trait:
 //!
-//! * **Artifact** ([`engine::Backend::Artifact`]) — one AOT-compiled XLA
+//! * **artifact** ([`crate::eval::ArtifactEval`]) — one AOT-compiled XLA
 //!   execution evaluates the entire decision tensor (all 13 strategies ×
-//!   P-grid × m-grid × segment grid) in a single call; this is the "fast"
-//!   in *Fast Tuning*.
-//! * **Native** ([`engine::Backend::Native`]) — the Rust mirror of the
-//!   models; used when no artifact is present and for cross-validation
+//!   P-grid × m-grid × segment grid) in a single call; this is the
+//!   "fast" in *Fast Tuning*.
+//! * **native** ([`crate::eval::ModelEval`]) — the Rust model mirror,
+//!   swept in parallel across worker threads (`--jobs N`) with per-cell
+//!   pruning; used when no artifact is present and for cross-validation
 //!   (the two must agree, see `rust/tests/artifact_roundtrip.rs`).
+//! * **sim** ([`crate::eval::SimEval`]) — empirical ground truth for
+//!   [`validate`]'s model-vs-measurement cross-checks.
 
 pub mod decision;
 pub mod ext;
@@ -22,4 +26,4 @@ pub mod persist;
 pub mod validate;
 
 pub use decision::{Decision, DecisionTable, Op};
-pub use engine::{Backend, Tuner};
+pub use engine::Tuner;

@@ -1,15 +1,18 @@
-//! Selection-quality validation: does the model-predicted winner match
-//! the empirically best strategy on the simulated cluster?
+//! Selection-quality validation, generalized: does one evaluator's
+//! predicted winner match another evaluator's empirically best strategy?
 //!
 //! This is the paper's §4 headline claim, quantified: "the selection of
 //! the best communication implementation can be made with the help of
 //! the communication models", even where the models' absolute numbers
-//! drift (small-message TCP anomalies).
+//! drift (small-message TCP anomalies). [`cross_validate`] runs the
+//! check between *any* two [`Evaluator`]s — the classic configuration
+//! (analytic models judged against the simulator) is wrapped by
+//! [`validate_selection`], and future backends (real MPI, trace replay)
+//! cross-check the same way for free.
 
 use crate::collectives::Strategy;
-use crate::models;
-use crate::mpi::World;
-use crate::netsim::{NetConfig, Netsim};
+use crate::eval::{Evaluator, ModelEval, SimEval};
+use crate::netsim::NetConfig;
 use crate::plogp::PLogP;
 
 /// Result of validating one operation family over a grid.
@@ -66,7 +69,8 @@ impl Default for ValidateOptions {
 /// Run every strategy of `family` empirically at `(p, m)` and return
 /// `(strategy, measured seconds, segment)` sorted by time. The segment
 /// used for segmented strategies is the model-tuned one (that is what a
-/// deployed runtime would execute).
+/// deployed runtime would execute). Compatibility wrapper over
+/// [`SimEval`]'s ranking.
 pub fn empirical_ranking(
     cfg: &NetConfig,
     net: &PLogP,
@@ -75,26 +79,15 @@ pub fn empirical_ranking(
     m: u64,
     s_grid: &[u64],
 ) -> Vec<(Strategy, f64, Option<u64>)> {
-    let mut out = Vec::with_capacity(family.len());
-    for &s in family {
-        let seg = if s.is_segmented() {
-            Some(models::best_segment(s, net, p, m, s_grid).1)
-        } else {
-            None
-        };
-        let sched = s.build(p, 0, m, seg);
-        let mut world = World::new(Netsim::new(p, cfg.clone()));
-        let rep = world.run(&sched);
-        debug_assert!(rep.verify(&sched).is_empty());
-        out.push((s, rep.completion.as_secs(), seg));
-    }
-    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-    out
+    SimEval::new(cfg.clone()).rank(family, net, p, m, s_grid)
 }
 
-/// Validate model-driven selection for one family over a (P, m) grid.
-pub fn validate_selection(
-    cfg: &NetConfig,
+/// Cross-check two evaluators over a `(P, m)` grid: `candidate` picks a
+/// winner per cell, `reference` supplies the ground-truth ranking the
+/// pick is judged against.
+pub fn cross_validate(
+    reference: &dyn Evaluator,
+    candidate: &dyn Evaluator,
     net: &PLogP,
     family: &[Strategy],
     p_list: &[usize],
@@ -112,8 +105,8 @@ pub fn validate_selection(
     let mut err_sum = 0.0;
     for &p in p_list {
         for &m in m_list {
-            let predicted = models::rank_strategies(family, net, p, m, &opts.s_grid);
-            let measured = empirical_ranking(cfg, net, family, p, m, &opts.s_grid);
+            let predicted = candidate.rank(family, net, p, m, &opts.s_grid);
+            let measured = reference.rank(family, net, p, m, &opts.s_grid);
             let chosen = predicted[0].0;
             let best = measured[0].0;
             let chosen_measured = measured
@@ -145,9 +138,23 @@ pub fn validate_selection(
     rep
 }
 
+/// The classic configuration: analytic model selection judged against
+/// the simulated cluster.
+pub fn validate_selection(
+    cfg: &NetConfig,
+    net: &PLogP,
+    family: &[Strategy],
+    p_list: &[usize],
+    m_list: &[u64],
+    opts: &ValidateOptions,
+) -> ValidationReport {
+    cross_validate(&SimEval::new(cfg.clone()), &ModelEval, net, family, p_list, m_list, opts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::Netsim;
     use crate::plogp;
 
     fn setup() -> (NetConfig, PLogP) {
@@ -203,5 +210,26 @@ mod tests {
             &opts,
         );
         assert!(rep.meaningful_accuracy() >= 0.99, "{rep:?}");
+    }
+
+    #[test]
+    fn an_evaluator_validates_perfectly_against_itself() {
+        // sim vs sim: deterministic simulation means identical rankings,
+        // so accuracy is total and regret/error are zero
+        let (cfg, net) = setup();
+        let sim = SimEval::new(cfg);
+        let opts = ValidateOptions::default();
+        let rep = cross_validate(
+            &sim,
+            &sim,
+            &net,
+            &Strategy::BCAST,
+            &[4, 16],
+            &[1024, 1 << 18],
+            &opts,
+        );
+        assert_eq!(rep.correct, rep.points);
+        assert_eq!(rep.max_regret, 0.0);
+        assert_eq!(rep.mean_rel_err, 0.0);
     }
 }

@@ -9,11 +9,21 @@ use collective_tuner::models;
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp::{self, bench::BenchOptions};
 use collective_tuner::runtime::TunerArtifact;
-use collective_tuner::tuner::{grids, Backend, Op, Tuner};
+use collective_tuner::tuner::{grids, Op, Tuner};
 
 fn artifact_tuner() -> Option<Tuner> {
     match Tuner::with_artifact(&TunerArtifact::default_dir()) {
         Ok(t) => Some(t),
+        Err(e) => {
+            eprintln!("SKIPPING artifact tests — run `make artifacts` ({e:#})");
+            None
+        }
+    }
+}
+
+fn raw_artifact() -> Option<TunerArtifact> {
+    match TunerArtifact::load(&TunerArtifact::default_dir()) {
+        Ok(a) => Some(a),
         Err(e) => {
             eprintln!("SKIPPING artifact tests — run `make artifacts` ({e:#})");
             None
@@ -29,17 +39,18 @@ fn measured_net() -> plogp::PLogP {
 
 #[test]
 fn artifact_loads_and_reports_meta() {
-    let Some(t) = artifact_tuner() else { return };
-    let Backend::Artifact(art) = &t.backend else { panic!("expected artifact") };
+    let Some(art) = raw_artifact() else { return };
     assert_eq!(art.meta.num_strategies, 13);
     assert_eq!(art.meta.num_bcast, 10);
     assert_eq!(art.meta.strategy_names[5], "bcast/seg_chain");
+    // the tuner built on it reports the artifact backend
+    let Some(t) = artifact_tuner() else { return };
+    assert_eq!(t.backend_name(), "artifact");
 }
 
 #[test]
 fn artifact_times_match_native_models() {
-    let Some(t) = artifact_tuner() else { return };
-    let Backend::Artifact(art) = &t.backend else { unreachable!() };
+    let Some(art) = raw_artifact() else { return };
     let net = measured_net();
 
     let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();

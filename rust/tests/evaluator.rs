@@ -1,0 +1,160 @@
+//! Cross-evaluator contracts: the `eval` layer's three backends must
+//! agree where the paper says they should, the parallel tuner sweep
+//! must be bit-deterministic, and the pruned argmin must be exact.
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::eval::{Evaluator, ModelEval, SimEval};
+use collective_tuner::models;
+use collective_tuner::netsim::{NetConfig, Netsim, TcpConfig};
+use collective_tuner::plogp::{self, GapTable, PLogP};
+use collective_tuner::tuner::validate::{cross_validate, empirical_ranking, ValidateOptions};
+use collective_tuner::tuner::{grids, persist, Op, Tuner};
+use collective_tuner::util::prng::Prng;
+
+/// A random LAN-class switched-Ethernet config (ideal TCP): parameters
+/// interpolate between the fast-ethernet / gigabit / myrinet presets the
+/// model accuracy is already pinned on elsewhere.
+fn lan_config(rng: &mut Prng) -> NetConfig {
+    NetConfig {
+        bandwidth_bps: rng.log_uniform(8e6, 250e6),
+        prop_delay: rng.log_uniform(5e-6, 1e-4),
+        send_overhead: rng.log_uniform(2e-6, 4e-5),
+        recv_overhead: rng.log_uniform(2e-6, 4e-5),
+        header_bytes: 58,
+        mss: 1460,
+        tcp: TcpConfig::ideal(),
+    }
+}
+
+/// Satellite requirement: on random networks, `ModelEval` and `SimEval`
+/// agree on the argmin strategy wherever the empirical margin is
+/// meaningful, on a coarse tuning grid.
+#[test]
+fn model_and_sim_agree_on_argmin_across_random_networks() {
+    let mut rng = Prng::new(0xE7A1_0001);
+    let opts = ValidateOptions::default();
+    for case in 0..5 {
+        let cfg = lan_config(&mut rng);
+        let sim = SimEval::new(cfg.clone());
+        let net = sim.measure_net();
+        for family in [&Strategy::BCAST[..], &Strategy::SCATTER[..]] {
+            let rep = cross_validate(
+                &sim,
+                &ModelEval,
+                &net,
+                family,
+                &[4, 16],
+                &[1024, 65536, 1 << 20],
+                &opts,
+            );
+            assert!(
+                rep.meaningful_accuracy() >= 0.9,
+                "case {case} ({} strategies): {rep:?}\ncfg: {cfg:?}",
+                family.len()
+            );
+            assert!(rep.max_regret < 0.5, "case {case}: {rep:?}");
+        }
+    }
+}
+
+/// Acceptance criterion: `--jobs 1` and `--jobs 8` produce byte-identical
+/// decision tables (compared through the persistence serialization).
+#[test]
+fn jobs_1_and_jobs_8_tables_are_byte_identical() {
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    let net = plogp::bench::measure(&mut sim);
+    let p_grid = vec![2usize, 8, 24, 48];
+    let m_grid = grids::log_grid(1, 1 << 20, 16);
+    let (b1, s1) = Tuner::native().jobs(1).tune(&net, &p_grid, &m_grid).unwrap();
+    let (b8, s8) = Tuner::native().jobs(8).tune(&net, &p_grid, &m_grid).unwrap();
+    assert_eq!(persist::to_string(&b1), persist::to_string(&b8));
+    assert_eq!(persist::to_string(&s1), persist::to_string(&s8));
+}
+
+/// The pruned per-cell argmin must match the exhaustive ranking exactly,
+/// including on adversarial (non-monotone) gap tables where the lower
+/// bound is weakest.
+#[test]
+fn pruned_argmin_is_exact_on_random_gap_tables() {
+    let mut rng = Prng::new(0xBEEF_0002);
+    for _ in 0..200 {
+        let n = rng.range_usize(2, 24);
+        let mut sizes = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += rng.uniform(1.0, 50_000.0);
+            sizes.push(acc);
+        }
+        let gaps: Vec<f64> = (0..n).map(|_| rng.log_uniform(1e-6, 1e-2)).collect();
+        let net = PLogP::new(rng.log_uniform(1e-6, 1e-3), GapTable::new(sizes, gaps));
+        let p = rng.range_usize(1, 64);
+        let m = rng.range(1, 1 << 21);
+        let s_grid: Vec<u64> = (0..rng.range_usize(0, 10))
+            .map(|_| rng.range(1, 1 << 21))
+            .collect();
+        for op in [Op::Bcast, Op::Scatter] {
+            let d = ModelEval.best(op, &net, p, m, &s_grid);
+            let want = models::rank_strategies(op.family(), &net, p, m, &s_grid);
+            assert_eq!(d.strategy, want[0].0, "{op:?} P={p} m={m} s_grid={s_grid:?}");
+            assert_eq!(d.predicted, want[0].1);
+            assert_eq!(d.segment, want[0].2);
+        }
+    }
+}
+
+/// `SimEval::rank` is the legacy `empirical_ranking`, verbatim.
+#[test]
+fn sim_eval_rank_matches_legacy_empirical_ranking() {
+    let cfg = NetConfig::fast_ethernet_ideal();
+    let sim = SimEval::new(cfg.clone());
+    let net = sim.measure_net();
+    let s_grid = [2048u64, 16384, 131072];
+    for (p, m) in [(4usize, 4096u64), (16, 1 << 18)] {
+        let legacy = empirical_ranking(&cfg, &net, &Strategy::BCAST, p, m, &s_grid);
+        let ranked = sim.rank(&Strategy::BCAST, &net, p, m, &s_grid);
+        assert_eq!(legacy.len(), ranked.len());
+        for (a, b) in legacy.iter().zip(&ranked) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+            assert_eq!(a.2, b.2);
+        }
+    }
+}
+
+/// The tuner works over an arbitrary boxed evaluator — the extension
+/// point future backends (real MPI, trace replay) plug into.
+#[test]
+fn tuner_runs_over_a_custom_boxed_evaluator() {
+    /// A toy backend: flat strategies are free, everything else costs 1s.
+    struct FlatLover;
+    impl Evaluator for FlatLover {
+        fn name(&self) -> &'static str {
+            "flat-lover"
+        }
+        fn predict(
+            &self,
+            _op: Op,
+            strategy: Strategy,
+            _p: usize,
+            _m: u64,
+            _seg: Option<u64>,
+            _net: &PLogP,
+        ) -> f64 {
+            match strategy {
+                Strategy::BcastFlat | Strategy::ScatterFlat => 1e-6,
+                _ => 1.0,
+            }
+        }
+    }
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+    let net = plogp::bench::measure(&mut sim);
+    let t = Tuner::with_evaluator(Box::new(FlatLover)).jobs(4);
+    assert_eq!(t.backend_name(), "flat-lover");
+    let (b, s) = t.tune(&net, &[2, 8, 24], &[1024, 65536]).unwrap();
+    for d in b.entries.iter() {
+        assert_eq!(d.strategy, Strategy::BcastFlat);
+    }
+    for d in s.entries.iter() {
+        assert_eq!(d.strategy, Strategy::ScatterFlat);
+    }
+}

@@ -342,10 +342,10 @@ fn composed_collectives_always_verify() {
         let scheds = [
             composed::gather_flat(p, 0, m),
             composed::gather_binomial(p, 0, m),
-            composed::reduce_binomial(p, 0, m),
+            composed::reduce_binomial(p, 0, m).expect("p <= 64"),
             composed::barrier_binomial(p),
             composed::allgather(p, 0, m),
-            composed::allreduce(p, 0, m),
+            composed::allreduce(p, 0, m).expect("p <= 64"),
         ];
         for sched in &scheds {
             assert!(sched.validate().is_empty(), "{}: {:?}", sched.name, sched.validate());
