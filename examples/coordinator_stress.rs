@@ -136,7 +136,7 @@ fn main() -> anyhow::Result<()> {
     let d_cold = coord.decision(Op::Bcast, "fe-0", 12, 1 << 18)?;
     let d_warm = warm.decision(Op::Bcast, "fe-0", 12, 1 << 18)?;
     println!(
-        "[4] persisted {saved} table pair(s); warm-started coordinator loaded \
+        "[4] persisted {saved} table set(s); warm-started coordinator loaded \
          {loaded} and answered {} (tuner runs: {})",
         d_warm.strategy.name(),
         warm.tune_count()

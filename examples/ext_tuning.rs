@@ -1,0 +1,111 @@
+//! Extended-collectives tuning walkthrough: gather, barrier, allgather,
+//! and allreduce selected through the *same* evaluation framework as the
+//! paper's broadcast and scatter — the unified cost-model registry, the
+//! parallel sweep, and the simulator as ground truth.
+//!
+//! ```bash
+//! cargo run --release --example ext_tuning
+//! ```
+
+use collective_tuner::eval::SimEval;
+use collective_tuner::models;
+use collective_tuner::mpi::World;
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::tuner::ext::{build_ext_schedule, ExtTuner};
+use collective_tuner::tuner::grids;
+use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
+
+fn main() {
+    let cfg = NetConfig::fast_ethernet_icluster1();
+    let eval = SimEval::new(cfg.clone());
+    let net = eval.measure_net();
+    println!("network: {}\n", net.summary());
+
+    // One parallel sweep per extended op, all through Box<dyn Evaluator>.
+    let tuner = ExtTuner::native().jobs(0);
+    let p_grid = vec![2usize, 4, 8, 16, 24, 32, 48];
+    let m_grid = grids::log_grid(1, 1 << 20, 12);
+    let tables = tuner
+        .tune(&net, &p_grid, &m_grid)
+        .expect("native ext tune is infallible");
+
+    // Model matrix at P = 16: predicted vs simulated for every strategy.
+    let p = 16usize;
+    let m_list = [1024u64, 32 * 1024, 1024 * 1024];
+    let mut matrix = Table::new(vec!["strategy", "m", "predicted", "measured", "rel err"]);
+    for table in &tables {
+        for &m in &m_list {
+            for &strat in table.op.family() {
+                let t_pred = models::predict(strat, &net, p, m, None);
+                let t_meas = eval.measure(strat, p, m, None);
+                matrix.row(vec![
+                    strat.name().to_string(),
+                    fmt_bytes(m as f64),
+                    fmt_time(t_pred),
+                    fmt_time(t_meas),
+                    format!("{:.1}%", (t_pred - t_meas).abs() / t_meas * 100.0),
+                ]);
+            }
+        }
+    }
+    println!("{}", matrix.to_ascii());
+
+    // Decision-table summary: winner share per op, and the model-picked
+    // winner at a probe point agrees with the measured winner.
+    let mut agree = 0usize;
+    let mut probes = 0usize;
+    for table in &tables {
+        println!("== {} decision table ==", table.op.name());
+        let mut share = Table::new(vec!["strategy", "share"]);
+        for (st, frac) in table.share() {
+            share.row(vec![st.name().to_string(), format!("{:.0}%", frac * 100.0)]);
+        }
+        println!("{}", share.to_ascii());
+
+        for &m in &m_list {
+            let chosen = table.lookup(p, m).strategy;
+            let measured_best = table
+                .op
+                .family()
+                .iter()
+                .map(|&s| (s, eval.measure(s, p, m, None)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0;
+            probes += 1;
+            if chosen == measured_best {
+                agree += 1;
+            }
+            println!(
+                "  {} @ (P={p}, m={:>7}): model {:<24} measured best {:<24} {}",
+                table.op.name(),
+                fmt_bytes(m as f64),
+                chosen.name(),
+                measured_best.name(),
+                if chosen == measured_best { "AGREE" } else { "differ" }
+            );
+        }
+        println!();
+    }
+    println!("selection agreement: {agree}/{probes} probe points\n");
+
+    // Every tuned decision builds a schedule that runs and verifies.
+    for table in &tables {
+        let d = table.lookup(p, 32 * 1024);
+        let sched = build_ext_schedule(table.op, d.strategy, p, 32 * 1024)
+            .expect("tuned decision must schedule");
+        let mut world = World::new(Netsim::new(p, cfg.clone()));
+        let rep = world.run(&sched);
+        assert!(
+            rep.verify(&sched).is_empty(),
+            "{}: {:?}",
+            sched.name,
+            rep.verify(&sched)
+        );
+        println!(
+            "verified {:<24} on {p} ranks: completion {}",
+            sched.name,
+            fmt_time(rep.completion.as_secs())
+        );
+    }
+}

@@ -8,7 +8,7 @@
 //!    recursive-doubling allgather across message sizes.
 
 use collective_tuner::collectives::Strategy;
-use collective_tuner::models::{self, ext::ExtStrategy};
+use collective_tuner::models;
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp::{self, bench::BenchOptions, default_size_grid};
 use collective_tuner::tuner::grids;
@@ -93,19 +93,21 @@ fn main() {
     for &m in &[1u64, 1024, 65536, 1 << 20] {
         tab.row(vec![
             fmt_bytes(m as f64),
-            fmt_time(models::ext::predict_ext(ExtStrategy::BarrierTree, &reference, 32, 1)),
-            fmt_time(models::ext::predict_ext(
-                ExtStrategy::BarrierDissemination,
+            fmt_time(models::predict(Strategy::BarrierTree, &reference, 32, 1, None)),
+            fmt_time(models::predict(
+                Strategy::BarrierDissemination,
                 &reference,
                 32,
                 1,
+                None,
             )),
-            fmt_time(models::ext::predict_ext(ExtStrategy::AllGatherRing, &reference, 32, m)),
-            fmt_time(models::ext::predict_ext(
-                ExtStrategy::AllGatherRecDoubling,
+            fmt_time(models::predict(Strategy::AllGatherRing, &reference, 32, m, None)),
+            fmt_time(models::predict(
+                Strategy::AllGatherRecDoubling,
                 &reference,
                 32,
                 m,
+                None,
             )),
         ]);
     }

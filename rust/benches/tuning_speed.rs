@@ -38,9 +38,11 @@ fn main() {
     };
 
     section("exhaustive empirical benchmarking (the alternative)");
-    // One (P, m) point: run all 13 strategies on the simulated cluster.
+    // One (P, m) point: run every strategy on the simulated cluster.
+    let n_strategies = Strategy::ALL.len();
     let opts = BenchOpts { warmup_iters: 1, min_iters: 3, max_iters: 20, min_seconds: 1.0 };
-    let r_emp = bench_with("empirical: ONE (P=24, m=64k) point, 13 strategies", &opts, || {
+    let label = format!("empirical: ONE (P=24, m=64k) point, {n_strategies} strategies");
+    let r_emp = bench_with(&label, &opts, || {
         std::hint::black_box(empirical_ranking(
             &cfg,
             &net,

@@ -127,7 +127,9 @@ USAGE:
 COMMANDS:
   bench-plogp   measure pLogP parameters (L and the g(m) table)
                   --preset icluster1|ideal|gigabit|myrinet  --tcp default|ideal|linux22
-  tune          build broadcast + scatter decision tables
+  tune          build decision tables for any collective family
+                  --op bcast,scatter|gather|barrier|allgather|allreduce|all
+                      (comma-separated; default bcast,scatter)
                   --procs 2,8,24,48   --backend auto|native|artifact
                   --jobs N            (parallel sweep workers; 0 = all cores)
                   --save results/     (persist tables as TSV)
@@ -140,15 +142,17 @@ COMMANDS:
   discover      recover islands-of-clusters from latency probes
                   --nodes 12  --clusters 2
   serve         run the L3 tuning coordinator under concurrent load:
-                register islands, serve (op, cluster, P, m) queries from
-                worker threads, then run one drift-refresh pass
+                register islands, serve (op, cluster, P, m) queries — a
+                mix of all seven op families — from worker threads, then
+                run one drift-refresh pass
                   --clusters 3   --nodes 16        (islands, nodes per island)
                   --threads 8    --requests 10000  (load per thread)
                   --shards 8     --capacity 32     (decision-table cache)
                   --jobs N       (tuner sweep workers; 0 = all cores)
                   --backend auto|native|artifact   --save dir/  --warm dir/
   query         one-shot coordinator query (tunes on first use, cached after)
-                  --op bcast|scatter  --procs 24  --bytes 64k
+                  --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
+                  --procs 24  --bytes 64k
                   --cluster default   --nodes 50  --preset icluster1
                   --save dir/  --warm dir/        (persist / warm-start tables)
   info          show artifact metadata and presets
@@ -157,7 +161,10 @@ COMMANDS:
 EXAMPLES:
   collective-tuner bench-plogp --preset icluster1
   collective-tuner tune --procs 8,24,48 --backend auto
+  collective-tuner tune --op allreduce --jobs 8
   collective-tuner run --op bcast --strategy auto --procs 24 --bytes 256k
+  collective-tuner run --op allgather --strategy ring --procs 16 --bytes 64k
+  collective-tuner query --op barrier --procs 32 --nodes 32
   collective-tuner experiment --id fig2 --out results/
   collective-tuner serve --clusters 4 --threads 16 --requests 50000
   collective-tuner query --op bcast --procs 48 --bytes 1M --save tables/

@@ -75,11 +75,11 @@ pub fn allgather_recursive_doubling(p: usize, bytes: u64) -> CommSchedule {
             let trigger = if r == 0 {
                 Trigger::AtStart
             } else {
-                Trigger::OnRecv(Tag(RD_BASE + (r as u64 - 1) << 8 | i as u64))
+                Trigger::OnRecv(Tag(((RD_BASE + r as u64 - 1) << 8) | i as u64))
             };
             s.ranks[i as usize].sends.push(SendSpec {
                 to: partner,
-                tag: Tag(RD_BASE + (r as u64) << 8 | partner as u64),
+                tag: Tag(((RD_BASE + r as u64) << 8) | partner as u64),
                 bytes: blk,
                 payload: Payload::range(base, blk),
                 trigger,
@@ -119,11 +119,11 @@ pub fn allreduce_recursive_doubling(p: usize, bytes: u64) -> Result<CommSchedule
             let trigger = if r == 0 {
                 Trigger::AtStart
             } else {
-                Trigger::OnRecv(Tag(RD_BASE + (r as u64 - 1) << 8 | i as u64))
+                Trigger::OnRecv(Tag(((RD_BASE + r as u64 - 1) << 8) | i as u64))
             };
             s.ranks[i as usize].sends.push(SendSpec {
                 to: partner,
-                tag: Tag(RD_BASE + (r as u64) << 8 | partner as u64),
+                tag: Tag(((RD_BASE + r as u64) << 8) | partner as u64),
                 bytes,
                 payload: Payload::Ranks(mask),
                 trigger,
@@ -152,11 +152,11 @@ pub fn barrier_dissemination(p: usize) -> CommSchedule {
                 Trigger::AtStart
             } else {
                 // wait for the previous round's token to arrive
-                Trigger::OnRecv(Tag(DISS_BASE + (r as u64 - 1) << 8 | i as u64))
+                Trigger::OnRecv(Tag(((DISS_BASE + r as u64 - 1) << 8) | i as u64))
             };
             s.ranks[i as usize].sends.push(SendSpec {
                 to: dst,
-                tag: Tag(DISS_BASE + (r as u64) << 8 | dst as u64),
+                tag: Tag(((DISS_BASE + r as u64) << 8) | dst as u64),
                 bytes: 1,
                 payload: Payload::Control,
                 trigger,

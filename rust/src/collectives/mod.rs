@@ -19,10 +19,16 @@ pub mod multilevel;
 pub mod scatter;
 pub mod tree;
 
+use anyhow::Result;
+
 use crate::mpi::CommSchedule;
 
-/// An implementation strategy, numbered identically to the Python kernel
-/// and the AOT artifact (see `ref.STRATEGY_NAMES`).
+/// An implementation strategy. The first [`Strategy::EXT_BASE`] entries
+/// (broadcast + scatter) are numbered identically to the Python kernel
+/// and the core AOT artifact (see `ref.STRATEGY_NAMES`); the extended
+/// entries continue at `EXT_BASE` in the index order of the second
+/// artifact (`python/compile/kernels/ext_models.py`), so an ext-artifact
+/// winner index `w` is `Strategy::from_index(Strategy::EXT_BASE + w)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 #[repr(usize)]
 pub enum Strategy {
@@ -39,12 +45,26 @@ pub enum Strategy {
     ScatterFlat = 10,
     ScatterChain = 11,
     ScatterBinomial = 12,
+    GatherFlat = 13,
+    GatherBinomial = 14,
+    ReduceBinomial = 15,
+    BarrierTree = 16,
+    BarrierDissemination = 17,
+    AllGatherGatherBcast = 18,
+    AllGatherRing = 19,
+    AllGatherRecDoubling = 20,
+    AllReduceReduceBcast = 21,
+    AllReduceRecDoubling = 22,
 }
 
 impl Strategy {
-    pub const COUNT: usize = 13;
+    pub const COUNT: usize = 23;
 
-    pub const ALL: [Strategy; 13] = [
+    /// First extended-strategy index: ext-artifact winner `w` maps to
+    /// `Strategy::from_index(EXT_BASE + w)`.
+    pub const EXT_BASE: usize = 13;
+
+    pub const ALL: [Strategy; 23] = [
         Strategy::BcastFlat,
         Strategy::BcastFlatRdv,
         Strategy::BcastSegFlat,
@@ -58,6 +78,48 @@ impl Strategy {
         Strategy::ScatterFlat,
         Strategy::ScatterChain,
         Strategy::ScatterBinomial,
+        Strategy::GatherFlat,
+        Strategy::GatherBinomial,
+        Strategy::ReduceBinomial,
+        Strategy::BarrierTree,
+        Strategy::BarrierDissemination,
+        Strategy::AllGatherGatherBcast,
+        Strategy::AllGatherRing,
+        Strategy::AllGatherRecDoubling,
+        Strategy::AllReduceReduceBcast,
+        Strategy::AllReduceRecDoubling,
+    ];
+
+    /// The paper's two core operations (the strategies the core AOT
+    /// artifact evaluates), in artifact index order.
+    pub const CORE: [Strategy; 13] = [
+        Strategy::BcastFlat,
+        Strategy::BcastFlatRdv,
+        Strategy::BcastSegFlat,
+        Strategy::BcastChain,
+        Strategy::BcastChainRdv,
+        Strategy::BcastSegChain,
+        Strategy::BcastBinary,
+        Strategy::BcastBinomial,
+        Strategy::BcastBinomialRdv,
+        Strategy::BcastSegBinomial,
+        Strategy::ScatterFlat,
+        Strategy::ScatterChain,
+        Strategy::ScatterBinomial,
+    ];
+
+    /// The extended strategies, in ext-artifact index order.
+    pub const EXT: [Strategy; 10] = [
+        Strategy::GatherFlat,
+        Strategy::GatherBinomial,
+        Strategy::ReduceBinomial,
+        Strategy::BarrierTree,
+        Strategy::BarrierDissemination,
+        Strategy::AllGatherGatherBcast,
+        Strategy::AllGatherRing,
+        Strategy::AllGatherRecDoubling,
+        Strategy::AllReduceReduceBcast,
+        Strategy::AllReduceRecDoubling,
     ];
 
     pub const BCAST: [Strategy; 10] = [
@@ -79,6 +141,24 @@ impl Strategy {
         Strategy::ScatterBinomial,
     ];
 
+    pub const GATHER: [Strategy; 2] = [Strategy::GatherFlat, Strategy::GatherBinomial];
+
+    pub const REDUCE: [Strategy; 1] = [Strategy::ReduceBinomial];
+
+    pub const BARRIER: [Strategy; 2] =
+        [Strategy::BarrierTree, Strategy::BarrierDissemination];
+
+    pub const ALLGATHER: [Strategy; 3] = [
+        Strategy::AllGatherGatherBcast,
+        Strategy::AllGatherRing,
+        Strategy::AllGatherRecDoubling,
+    ];
+
+    pub const ALLREDUCE: [Strategy; 2] = [
+        Strategy::AllReduceReduceBcast,
+        Strategy::AllReduceRecDoubling,
+    ];
+
     pub fn index(self) -> usize {
         self as usize
     }
@@ -87,7 +167,8 @@ impl Strategy {
         Strategy::ALL.get(i).copied()
     }
 
-    /// Name matching `ref.STRATEGY_NAMES` on the Python side.
+    /// Name matching `ref.STRATEGY_NAMES` / `ext_models.py` on the
+    /// Python side.
     pub fn name(self) -> &'static str {
         match self {
             Strategy::BcastFlat => "bcast/flat",
@@ -103,6 +184,16 @@ impl Strategy {
             Strategy::ScatterFlat => "scatter/flat",
             Strategy::ScatterChain => "scatter/chain",
             Strategy::ScatterBinomial => "scatter/binomial",
+            Strategy::GatherFlat => "gather/flat",
+            Strategy::GatherBinomial => "gather/binomial",
+            Strategy::ReduceBinomial => "reduce/binomial",
+            Strategy::BarrierTree => "barrier/tree",
+            Strategy::BarrierDissemination => "barrier/dissemination",
+            Strategy::AllGatherGatherBcast => "allgather/gather+bcast",
+            Strategy::AllGatherRing => "allgather/ring",
+            Strategy::AllGatherRecDoubling => "allgather/rec_doubling",
+            Strategy::AllReduceReduceBcast => "allreduce/reduce+bcast",
+            Strategy::AllReduceRecDoubling => "allreduce/rec_doubling",
         }
     }
 
@@ -115,7 +206,13 @@ impl Strategy {
     }
 
     pub fn is_scatter(self) -> bool {
-        (self as usize) >= 10
+        (10..Strategy::EXT_BASE).contains(&(self as usize))
+    }
+
+    /// Is this one of the extended-collective strategies (gather /
+    /// reduce / barrier / allgather / allreduce)?
+    pub fn is_ext(self) -> bool {
+        (self as usize) >= Strategy::EXT_BASE
     }
 
     /// Does this strategy segment the message (and thus need a segment
@@ -135,17 +232,37 @@ impl Strategy {
         )
     }
 
-    /// Build the schedule for this strategy.
+    /// Build the schedule for this strategy, panicking on structural
+    /// errors (see [`Strategy::try_build`] for the fallible form —
+    /// reduction-based strategies error when `p` exceeds the
+    /// contributor-mask capacity).
     ///
     /// * `p` — number of ranks; `root` — root rank; `bytes` — the
-    ///   per-destination message size `m` (for scatter, each rank's chunk).
+    ///   per-destination message size `m` (for scatter, each rank's chunk;
+    ///   for gather/allgather, each rank's block; ignored by barriers).
     /// * `segment` — segment size for segmented strategies (clamped to
     ///   `bytes`; `None` means "do not segment", i.e. one segment).
     pub fn build(self, p: usize, root: u32, bytes: u64, segment: Option<u64>) -> CommSchedule {
+        self.try_build(p, root, bytes, segment)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", self.name()))
+    }
+
+    /// Fallible schedule build: the extended reduction strategies return
+    /// a structured error (not a wrong bitmask) when `p` exceeds
+    /// [`crate::mpi::Payload::MAX_MASK_RANKS`]. Rootless strategies
+    /// (barriers, ring / recursive-doubling allgather and allreduce)
+    /// ignore `root`; unsegmented ones ignore `segment`.
+    pub fn try_build(
+        self,
+        p: usize,
+        root: u32,
+        bytes: u64,
+        segment: Option<u64>,
+    ) -> Result<CommSchedule> {
         assert!(p >= 1 && (root as usize) < p, "root {root} out of range for p={p}");
         assert!(bytes >= 1, "zero-byte collectives are no-ops");
         let seg = segment.map(|s| s.clamp(1, bytes));
-        match self {
+        Ok(match self {
             Strategy::BcastFlat => bcast::flat(p, root, bytes, false),
             Strategy::BcastFlatRdv => bcast::flat(p, root, bytes, true),
             Strategy::BcastSegFlat => bcast::seg_flat(p, root, bytes, seg.unwrap_or(bytes)),
@@ -161,7 +278,19 @@ impl Strategy {
             Strategy::ScatterFlat => scatter::flat(p, root, bytes),
             Strategy::ScatterChain => scatter::chain(p, root, bytes),
             Strategy::ScatterBinomial => scatter::binomial(p, root, bytes),
-        }
+            Strategy::GatherFlat => composed::gather_flat(p, root, bytes),
+            Strategy::GatherBinomial => composed::gather_binomial(p, root, bytes),
+            Strategy::ReduceBinomial => composed::reduce_binomial(p, root, bytes)?,
+            Strategy::BarrierTree => composed::barrier_binomial(p),
+            Strategy::BarrierDissemination => extended::barrier_dissemination(p),
+            Strategy::AllGatherGatherBcast => composed::allgather(p, root, bytes),
+            Strategy::AllGatherRing => extended::allgather_ring(p, bytes),
+            Strategy::AllGatherRecDoubling => extended::allgather_recursive_doubling(p, bytes),
+            Strategy::AllReduceReduceBcast => composed::allreduce(p, root, bytes)?,
+            Strategy::AllReduceRecDoubling => {
+                extended::allreduce_recursive_doubling(p, bytes)?
+            }
+        })
     }
 }
 
@@ -175,7 +304,11 @@ mod tests {
             assert_eq!(s.index(), i);
             assert_eq!(Strategy::from_index(i), Some(*s));
         }
-        assert_eq!(Strategy::from_index(13), None);
+        assert_eq!(Strategy::from_index(Strategy::COUNT), None);
+        // ext strategies sit at EXT_BASE + their ext-artifact index
+        for (w, s) in Strategy::EXT.iter().enumerate() {
+            assert_eq!(s.index(), Strategy::EXT_BASE + w);
+        }
     }
 
     #[test]
@@ -189,9 +322,23 @@ mod tests {
     #[test]
     fn families_partition() {
         for s in Strategy::ALL {
-            assert!(s.is_bcast() ^ s.is_scatter());
+            assert_eq!(
+                1,
+                [s.is_bcast(), s.is_scatter(), s.is_ext()].iter().filter(|&&x| x).count(),
+                "{}",
+                s.name()
+            );
         }
-        assert_eq!(Strategy::BCAST.len() + Strategy::SCATTER.len(), 13);
+        assert_eq!(Strategy::BCAST.len() + Strategy::SCATTER.len(), Strategy::CORE.len());
+        assert_eq!(
+            Strategy::GATHER.len()
+                + Strategy::REDUCE.len()
+                + Strategy::BARRIER.len()
+                + Strategy::ALLGATHER.len()
+                + Strategy::ALLREDUCE.len(),
+            Strategy::EXT.len()
+        );
+        assert_eq!(Strategy::CORE.len() + Strategy::EXT.len(), Strategy::COUNT);
     }
 
     #[test]
@@ -231,5 +378,20 @@ mod tests {
     #[should_panic]
     fn bad_root_panics() {
         Strategy::BcastFlat.build(4, 9, 100, None);
+    }
+
+    #[test]
+    fn reduction_strategies_error_beyond_mask_capacity() {
+        let cap = crate::mpi::Payload::MAX_MASK_RANKS;
+        for s in [
+            Strategy::ReduceBinomial,
+            Strategy::AllReduceReduceBcast,
+            Strategy::AllReduceRecDoubling,
+        ] {
+            assert!(s.try_build(cap, 0, 64, None).is_ok(), "{} at capacity", s.name());
+            assert!(s.try_build(cap + 1, 0, 64, None).is_err(), "{} over capacity", s.name());
+        }
+        // non-reduction ext strategies have no mask limit
+        assert!(Strategy::AllGatherRing.try_build(cap + 1, 0, 64, None).is_ok());
     }
 }

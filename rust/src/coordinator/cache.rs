@@ -47,7 +47,7 @@ struct Entry<V> {
 }
 
 /// A sharded LRU map from [`ClusterSignature`] to a shared value
-/// (the coordinator stores `Arc<TablePair>`).
+/// (the coordinator stores `Arc<TableSet>`).
 pub struct ShardedCache<V> {
     shards: Vec<RwLock<HashMap<ClusterSignature, Entry<V>>>>,
     capacity_per_shard: usize,

@@ -10,7 +10,7 @@
 //!   quantized pLogP parameters, node count, and op set, so equivalent
 //!   clusters share one decision table.
 //! * [`cache`] — [`ShardedCache`], N shards of
-//!   `RwLock<HashMap<Signature, Arc<TablePair>>>` with per-shard LRU
+//!   `RwLock<HashMap<Signature, Arc<TableSet>>>` with per-shard LRU
 //!   eviction and lock-free hit/miss/eviction counters; the hot path
 //!   never serializes behind tuning.
 //! * [`service`] — [`Coordinator`], the long-running service: registry
@@ -45,5 +45,5 @@ pub mod signature;
 
 pub use cache::{CacheStats, ShardedCache};
 pub use refresh::{RefreshOutcome, RefreshPolicy};
-pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats, RegisteredCluster, TablePair};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats, RegisteredCluster, TableSet};
 pub use signature::ClusterSignature;

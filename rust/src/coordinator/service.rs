@@ -31,19 +31,31 @@ use crate::tuner::{grids, persist, Decision, DecisionTable, Op, Tuner};
 use super::cache::{CacheStats, ShardedCache};
 use super::signature::ClusterSignature;
 
-/// The two per-operation decision tables tuned for one signature.
+/// The per-operation decision tables tuned for one signature: one
+/// [`DecisionTable`] per [`Op::ALL`] entry (broadcast, scatter, and the
+/// extended collectives), all produced by a single coalesced tuner run.
 #[derive(Debug, Clone)]
-pub struct TablePair {
-    pub bcast: DecisionTable,
-    pub scatter: DecisionTable,
+pub struct TableSet {
+    tables: Vec<DecisionTable>,
 }
 
-impl TablePair {
-    pub fn table(&self, op: Op) -> &DecisionTable {
-        match op {
-            Op::Bcast => &self.bcast,
-            Op::Scatter => &self.scatter,
+impl TableSet {
+    /// Build from one table per op, in [`Op::ALL`] order.
+    pub fn new(tables: Vec<DecisionTable>) -> TableSet {
+        assert_eq!(tables.len(), Op::COUNT, "one table per Op::ALL entry");
+        for (i, t) in tables.iter().enumerate() {
+            assert_eq!(t.op.index(), i, "tables must be in Op::ALL order");
         }
+        TableSet { tables }
+    }
+
+    pub fn table(&self, op: Op) -> &DecisionTable {
+        &self.tables[op.index()]
+    }
+
+    /// All tables, in [`Op::ALL`] order.
+    pub fn tables(&self) -> &[DecisionTable] {
+        &self.tables
     }
 
     /// Snap-to-nearest decision lookup.
@@ -104,7 +116,7 @@ pub struct RegisteredCluster {
 /// An in-flight tuner run that concurrent misses block on.
 #[derive(Default)]
 struct Inflight {
-    result: Mutex<Option<Arc<TablePair>>>,
+    result: Mutex<Option<Arc<TableSet>>>,
     ready: Condvar,
 }
 
@@ -123,7 +135,7 @@ pub struct CoordinatorStats {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     tuner: Tuner,
-    cache: ShardedCache<Arc<TablePair>>,
+    cache: ShardedCache<Arc<TableSet>>,
     inflight: Mutex<HashMap<ClusterSignature, Arc<Inflight>>>,
     registry: RwLock<HashMap<String, RegisteredCluster>>,
     tunes: AtomicU64,
@@ -244,7 +256,7 @@ impl Coordinator {
     // ---- the decision path --------------------------------------------
 
     /// Tables for a registered cluster (tuning on first use).
-    pub fn tables(&self, cluster: &str) -> Result<Arc<TablePair>> {
+    pub fn tables(&self, cluster: &str) -> Result<Arc<TableSet>> {
         let rc = self
             .cluster(cluster)
             .with_context(|| format!("cluster '{cluster}' is not registered"))?;
@@ -261,7 +273,7 @@ impl Coordinator {
     /// sharded read-lock. Cache miss → coalesced tuner run: the first
     /// thread in tunes, every concurrent caller of the same signature
     /// blocks on that run instead of starting its own.
-    pub fn tables_for(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TablePair> {
+    pub fn tables_for(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
         if let Some(t) = self.cache.get(&signature) {
             return t;
         }
@@ -300,26 +312,29 @@ impl Coordinator {
         }
     }
 
-    /// Run the tuner (counted; this is what miss-coalescing avoids).
-    fn tune_now(&self, net: &PLogP) -> TablePair {
+    /// Run the tuner for every op family (counted; this is what
+    /// miss-coalescing avoids). One run produces the whole [`TableSet`],
+    /// so a single cold miss covers broadcast, scatter, and all the
+    /// extended collectives.
+    fn tune_now(&self, net: &PLogP) -> TableSet {
         self.tunes.fetch_add(1, Ordering::Relaxed);
-        let (bcast, scatter) = match self.tuner.tune(net, &self.cfg.p_grid, &self.cfg.m_grid) {
+        let tables = match self.tuner.tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid) {
             Ok(t) => t,
             Err(e) => {
                 log::warn!("artifact tuner failed ({e:#}); re-tuning with native models");
                 Tuner::native()
                     .jobs(self.cfg.jobs)
-                    .tune(net, &self.cfg.p_grid, &self.cfg.m_grid)
+                    .tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid)
                     .expect("native tuner is infallible")
             }
         };
-        TablePair { bcast, scatter }
+        TableSet::new(tables)
     }
 
     /// Re-tune a signature right now and atomically publish the result
     /// (the refresh policy's swap; readers only ever see the old or the
     /// new `Arc`, never a partial table).
-    pub(super) fn force_retune(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TablePair> {
+    pub(super) fn force_retune(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
         let tables = Arc::new(self.tune_now(net));
         self.cache.insert(signature, Arc::clone(&tables));
         tables
@@ -347,8 +362,8 @@ impl Coordinator {
 
     // ---- persistence ---------------------------------------------------
 
-    /// Save the registry and every cached table pair under `dir`.
-    /// Returns the number of table pairs written. Values use Rust's
+    /// Save the registry and every cached table set under `dir`.
+    /// Returns the number of table sets written. Values use Rust's
     /// shortest-roundtrip float formatting, so a warm start recomputes
     /// bit-identical signatures.
     pub fn persist_to(&self, dir: &Path) -> Result<usize> {
@@ -376,8 +391,10 @@ impl Coordinator {
             .with_context(|| format!("writing {}", dir.join("manifest.tsv").display()))?;
         let mut saved = 0usize;
         for (sig, tables) in self.cache.snapshot() {
-            persist::save(&tables.bcast, &dir.join(format!("{}.bcast.tsv", sig.key())))?;
-            persist::save(&tables.scatter, &dir.join(format!("{}.scatter.tsv", sig.key())))?;
+            for table in tables.tables() {
+                let name = format!("{}.{}.tsv", sig.key(), table.op.name());
+                persist::save(table, &dir.join(name))?;
+            }
             saved += 1;
         }
         Ok(saved)
@@ -385,7 +402,7 @@ impl Coordinator {
 
     /// Load a directory written by [`Coordinator::persist_to`]:
     /// re-register every cluster and pre-warm the cache with every table
-    /// pair found on disk. Returns the number of table pairs loaded.
+    /// set found on disk. Returns the number of table sets loaded.
     pub fn warm_start_from(&self, dir: &Path) -> Result<usize> {
         let path = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&path)
@@ -408,14 +425,32 @@ impl Coordinator {
                     let gaps = parse_f64_csv(f.next().context("gap values")?)?;
                     let net = PLogP::new(l, GapTable::new(sizes, gaps));
                     let sig = self.register_with_probe(name, nodes, net, (probe_a, probe_b));
-                    let b = dir.join(format!("{}.bcast.tsv", sig.key()));
-                    let s = dir.join(format!("{}.scatter.tsv", sig.key()));
-                    if b.exists() && s.exists() && !self.cache.contains(&sig) {
-                        let pair = TablePair {
-                            bcast: persist::load(&b)?,
-                            scatter: persist::load(&s)?,
-                        };
-                        self.cache.insert(sig, Arc::new(pair));
+                    let paths: Vec<PathBuf> = Op::ALL
+                        .iter()
+                        .map(|op| dir.join(format!("{}.{}.tsv", sig.key(), op.name())))
+                        .collect();
+                    // warm only complete sets: a partial directory (e.g.
+                    // written before the extended ops existed) re-tunes
+                    // lazily instead of serving half-initialized state
+                    if paths.iter().all(|p| p.exists()) && !self.cache.contains(&sig) {
+                        let tables = paths
+                            .iter()
+                            .map(|p| persist::load(p))
+                            .collect::<Result<Vec<_>>>()?;
+                        // a structured error (not the TableSet invariant
+                        // panic) when a file's op record contradicts its
+                        // filename — hand-edited or miscopied tables
+                        for (op, t) in Op::ALL.iter().zip(&tables) {
+                            if t.op != *op {
+                                bail!(
+                                    "{}: table declares op '{}' but the filename says '{}'",
+                                    paths[op.index()].display(),
+                                    t.op.name(),
+                                    op.name()
+                                );
+                            }
+                        }
+                        self.cache.insert(sig, Arc::new(TableSet::new(tables)));
                         loaded += 1;
                     }
                 }
@@ -487,6 +522,29 @@ mod tests {
         assert!(Arc::ptr_eq(&ta, &tb), "same signature must share one Arc");
         assert_eq!(c.tune_count(), 1);
         assert_eq!(c.stats().registered, 2);
+    }
+
+    #[test]
+    fn ext_decisions_match_direct_tuner_output_from_one_tune() {
+        let cfg = small_config();
+        let c = Coordinator::new(cfg.clone());
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        c.register("a", 24, net.clone());
+        let want = {
+            let t = Tuner::native()
+                .tune_op(Op::AllGather, &net, &cfg.p_grid, &cfg.m_grid)
+                .unwrap();
+            *t.lookup(24, 65536)
+        };
+        let got = c.decision(Op::AllGather, "a", 24, 65536).unwrap();
+        assert_eq!(got.strategy, want.strategy);
+        assert_eq!(got.predicted, want.predicted);
+        // the one coalesced tuner run covers every op family
+        for op in Op::ALL {
+            let d = c.decision(op, "a", 16, 4096).unwrap();
+            assert!(op.family().contains(&d.strategy), "{:?}", d);
+        }
+        assert_eq!(c.tune_count(), 1);
     }
 
     #[test]

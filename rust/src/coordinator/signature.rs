@@ -27,8 +27,25 @@ pub const PROBE_SIZES: [f64; 5] = [1.0, 1024.0, 65536.0, 1048576.0, 4194304.0];
 pub const OPS_BCAST: u8 = 1 << 0;
 /// Op-set bit: the signature covers scatter tables.
 pub const OPS_SCATTER: u8 = 1 << 1;
-/// Both paper operations (what [`super::service::TablePair`] holds).
-pub const OPS_ALL: u8 = OPS_BCAST | OPS_SCATTER;
+/// Op-set bit: gather tables.
+pub const OPS_GATHER: u8 = 1 << 2;
+/// Op-set bit: reduce tables.
+pub const OPS_REDUCE: u8 = 1 << 3;
+/// Op-set bit: barrier tables.
+pub const OPS_BARRIER: u8 = 1 << 4;
+/// Op-set bit: allgather tables.
+pub const OPS_ALLGATHER: u8 = 1 << 5;
+/// Op-set bit: allreduce tables.
+pub const OPS_ALLREDUCE: u8 = 1 << 6;
+/// Every collective family (what [`super::service::TableSet`] holds —
+/// one bit per [`crate::tuner::Op::ALL`] entry).
+pub const OPS_ALL: u8 = OPS_BCAST
+    | OPS_SCATTER
+    | OPS_GATHER
+    | OPS_REDUCE
+    | OPS_BARRIER
+    | OPS_ALLGATHER
+    | OPS_ALLREDUCE;
 
 /// Quantize `x > 0` into a multiplicative bucket: values within a factor
 /// of `(1 + tol)` of each other map to the same or adjacent buckets, and
@@ -134,6 +151,11 @@ mod tests {
         let fe = measured(NetConfig::fast_ethernet_ideal());
         let ge = measured(NetConfig::gigabit_ethernet());
         assert_ne!(ClusterSignature::of(&fe, 8), ClusterSignature::of(&ge, 8));
+    }
+
+    #[test]
+    fn ops_bitset_covers_every_op() {
+        assert_eq!(OPS_ALL.count_ones() as usize, crate::tuner::Op::COUNT);
     }
 
     #[test]

@@ -1,15 +1,21 @@
 //! [`ArtifactEval`] — the AOT backend: one PJRT execution of the
 //! compiled XLA tuner kernel evaluates the whole decision tensor (all 13
-//! strategies × P-grid × m-grid × segment grid) at once.
+//! core strategies × P-grid × m-grid × segment grid) at once. The
+//! extended collectives go through the second artifact
+//! (`tuner_ext.hlo.txt`), loaded from the same directory when present —
+//! one device execution serves all four extended ops — and fall back to
+//! the native models when it is absent.
 
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::collectives::Strategy;
 use crate::plogp::PLogP;
-use crate::runtime::{pad_grid_f32, ArtifactMeta, TunerArtifact, TunerOutput};
+use crate::runtime::{
+    pad_grid_f32, ArtifactMeta, ExtArtifact, ExtOutput, TunerArtifact, TunerOutput,
+};
 use crate::tuner::decision::{Decision, Op};
 
 use super::{Evaluator, ModelEval};
@@ -25,33 +31,73 @@ struct GridMemo {
     out: TunerOutput,
 }
 
-/// Scores strategies through the AOT-compiled tuner artifact. Segment
-/// sizes come from the kernel's baked segment-grid search; an explicit
-/// `seg` argument to [`Evaluator::predict`] cannot be forced through
-/// the compiled graph and is ignored (documented contract;
-/// `tune_segment` reads the kernel's tuned segment instead).
+/// Memo of the last extended-artifact execution: one device run serves
+/// the gather, barrier, allgather, and allreduce passes of a tune.
+struct ExtGridMemo {
+    net: PLogP,
+    p_grid: Vec<usize>,
+    m_grid: Vec<u64>,
+    out: ExtOutput,
+}
+
+/// Scores strategies through the AOT-compiled tuner artifacts (core +
+/// optional extended). Segment sizes come from the kernel's baked
+/// segment-grid search; an explicit `seg` argument to
+/// [`Evaluator::predict`] cannot be forced through the compiled graph
+/// and is ignored (documented contract; `tune_segment` reads the
+/// kernel's tuned segment instead).
 pub struct ArtifactEval {
     art: TunerArtifact,
+    /// The extended-collectives artifact, when `tuner_ext.hlo.txt` is
+    /// present next to the core one; `None` falls back to [`ModelEval`]
+    /// for the extended ops.
+    ext: Option<ExtArtifact>,
     /// Whole-grid executions (one per `tune`, serving both ops).
     memo_grid: Mutex<Option<GridMemo>>,
     /// Single-cell point queries (`predict`/`rank`/`tune_segment`) — a
     /// separate slot so point queries never clobber the full-grid memo
     /// between a tune's broadcast and scatter passes.
     memo_point: Mutex<Option<GridMemo>>,
+    /// Whole-grid / point memos for the extended artifact (same split).
+    ext_memo_grid: Mutex<Option<ExtGridMemo>>,
+    ext_memo_point: Mutex<Option<ExtGridMemo>>,
 }
 
 impl ArtifactEval {
-    /// Load `tuner.hlo.txt` + `tuner.meta.json` from `dir` and compile.
+    /// Load `tuner.hlo.txt` + `tuner.meta.json` from `dir` and compile;
+    /// also picks up the extended artifact (`tuner_ext.*`) when present.
     pub fn load(dir: &Path) -> Result<ArtifactEval> {
-        Ok(ArtifactEval::new(TunerArtifact::load(dir)?))
+        let mut eval = ArtifactEval::new(TunerArtifact::load(dir)?);
+        eval.ext = match ExtArtifact::load(dir) {
+            Ok(a) => Some(a),
+            Err(e) => {
+                log::info!("ext artifact unavailable ({e:#}); ext ops use native models");
+                None
+            }
+        };
+        Ok(eval)
     }
 
+    /// Wrap an already-loaded core artifact (no extended artifact; the
+    /// extended ops fall back to the native models).
     pub fn new(art: TunerArtifact) -> ArtifactEval {
-        ArtifactEval { art, memo_grid: Mutex::new(None), memo_point: Mutex::new(None) }
+        ArtifactEval {
+            art,
+            ext: None,
+            memo_grid: Mutex::new(None),
+            memo_point: Mutex::new(None),
+            ext_memo_grid: Mutex::new(None),
+            ext_memo_point: Mutex::new(None),
+        }
     }
 
     pub fn meta(&self) -> &ArtifactMeta {
         &self.art.meta
+    }
+
+    /// Is the extended-collectives artifact loaded?
+    pub fn has_ext(&self) -> bool {
+        self.ext.is_some()
     }
 
     /// Execute the artifact over the given grids (padding every input to
@@ -122,6 +168,70 @@ impl ArtifactEval {
     fn point_grids(p: usize, m: u64) -> (Vec<usize>, Vec<u64>) {
         (vec![p, p + 1], vec![m, m.saturating_add(1)])
     }
+
+    /// Execute the *extended* artifact over the given grids (padding to
+    /// its baked shapes), memoizing the last execution in `memo_slot`.
+    fn execute_ext_memo(
+        &self,
+        memo_slot: &Mutex<Option<ExtGridMemo>>,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<ExtOutput> {
+        let ext = self
+            .ext
+            .as_ref()
+            .ok_or_else(|| anyhow!("extended artifact is not loaded"))?;
+        {
+            let memo = memo_slot.lock().unwrap();
+            if let Some(m) = &*memo {
+                if m.net == *net && m.p_grid == p_grid && m.m_grid == m_grid {
+                    return Ok(m.out.clone());
+                }
+            }
+        }
+        let meta = &ext.meta;
+        if p_grid.len() > meta.p_grid_len || m_grid.len() > meta.m_grid_len {
+            bail!(
+                "grid larger than ext artifact shape ({} x {} vs {} x {})",
+                p_grid.len(),
+                m_grid.len(),
+                meta.p_grid_len,
+                meta.m_grid_len
+            );
+        }
+        let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
+        let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
+        if sizes.len() != meta.table_len {
+            bail!(
+                "gap table has {} samples but the ext artifact expects {}",
+                sizes.len(),
+                meta.table_len
+            );
+        }
+        let pf = pad_grid_f32(p_grid.iter().map(|&p| p as f32).collect(), meta.p_grid_len);
+        let mf = pad_grid_f32(m_grid.iter().map(|&m| m as f32).collect(), meta.m_grid_len);
+        let out = ext.execute(&sizes, &gaps, net.l as f32, &pf, &mf)?;
+        *memo_slot.lock().unwrap() = Some(ExtGridMemo {
+            net: net.clone(),
+            p_grid: p_grid.to_vec(),
+            m_grid: m_grid.to_vec(),
+            out: out.clone(),
+        });
+        Ok(out)
+    }
+
+    /// One single-cell extended execution (ext point-query memo slot).
+    fn execute_ext_point(&self, net: &PLogP, p: usize, m: u64) -> Result<ExtOutput> {
+        let (pg, mg) = Self::point_grids(p, m);
+        self.execute_ext_memo(&self.ext_memo_point, net, &pg, &mg)
+    }
+
+    /// Row of `strategy` in the extended artifact's times tensor.
+    fn ext_row(strategy: Strategy) -> usize {
+        debug_assert!(strategy.is_ext());
+        strategy.index() - Strategy::EXT_BASE
+    }
 }
 
 impl Evaluator for ArtifactEval {
@@ -146,6 +256,20 @@ impl Evaluator for ArtifactEval {
         _seg: Option<u64>,
         net: &PLogP,
     ) -> f64 {
+        if strategy.is_ext() {
+            // the extended artifact (or the native ext models when it is
+            // absent — same formulas, so silently equivalent)
+            return match &self.ext {
+                Some(_) => match self.execute_ext_point(net, p, m) {
+                    Ok(out) => out.time(Self::ext_row(strategy), 0, 0) as f64,
+                    Err(e) => {
+                        log::warn!("ext artifact predict failed ({e:#}); using native model");
+                        ModelEval.predict(op, strategy, p, m, None, net)
+                    }
+                },
+                None => ModelEval.predict(op, strategy, p, m, None, net),
+            };
+        }
         let s_grid = crate::tuner::grids::default_s_grid();
         match self.execute_point(net, p, m, &s_grid) {
             Ok(out) => out.time(strategy.index(), 0, 0) as f64,
@@ -199,6 +323,25 @@ impl Evaluator for ArtifactEval {
         m: u64,
         s_grid: &[u64],
     ) -> Vec<(Strategy, f64, Option<u64>)> {
+        if family.iter().all(|s| s.is_ext()) {
+            if self.ext.is_none() {
+                return ModelEval.rank(family, net, p, m, s_grid);
+            }
+            return match self.execute_ext_point(net, p, m) {
+                Ok(out) => {
+                    let mut ranked: Vec<(Strategy, f64, Option<u64>)> = family
+                        .iter()
+                        .map(|&s| (s, out.time(Self::ext_row(s), 0, 0) as f64, None))
+                        .collect();
+                    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                    ranked
+                }
+                Err(e) => {
+                    log::warn!("ext artifact rank failed ({e:#}); using native models");
+                    ModelEval.rank(family, net, p, m, s_grid)
+                }
+            };
+        }
         let out = match self.execute_point(net, p, m, s_grid) {
             Ok(out) => out,
             Err(e) => {
@@ -221,6 +364,10 @@ impl Evaluator for ArtifactEval {
 
     /// The batched fast path: one device execution covers the whole
     /// grid; winners and tuned segments are read off the output tensors.
+    /// Extended ops run through the ext artifact (one execution serves
+    /// all four ext ops of a tune); without it — and for Reduce, whose
+    /// single-strategy family has no artifact row — they sweep the
+    /// native models instead.
     fn predict_grid(
         &self,
         op: Op,
@@ -229,6 +376,31 @@ impl Evaluator for ArtifactEval {
         m_grid: &[u64],
         s_grid: &[u64],
     ) -> Result<Vec<Decision>> {
+        if op.is_ext() {
+            let row = op.ext_artifact_row();
+            if self.ext.is_none() || row.is_none() {
+                return ModelEval.predict_grid(op, net, p_grid, m_grid, s_grid);
+            }
+            let row = row.unwrap();
+            let out = self.execute_ext_memo(&self.ext_memo_grid, net, p_grid, m_grid)?;
+            let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
+            for qi in 0..p_grid.len() {
+                for mi in 0..m_grid.len() {
+                    let widx = out.winner(row, qi, mi);
+                    let strategy = Strategy::from_index(Strategy::EXT_BASE + widx)
+                        .filter(|s| op.family().contains(s))
+                        .with_context(|| {
+                            format!("ext winner index {widx} invalid for {}", op.name())
+                        })?;
+                    entries.push(Decision {
+                        strategy,
+                        segment: None,
+                        predicted: out.time(widx, qi, mi) as f64,
+                    });
+                }
+            }
+            return Ok(entries);
+        }
         let out = self.execute_grid_memo(&self.memo_grid, net, p_grid, m_grid, s_grid)?;
         let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
         for qi in 0..p_grid.len() {
@@ -236,6 +408,7 @@ impl Evaluator for ArtifactEval {
                 let widx = match op {
                     Op::Bcast => out.bcast_win(qi, mi),
                     Op::Scatter => out.scatter_win(qi, mi),
+                    _ => unreachable!("extended ops returned above"),
                 };
                 let strategy = Strategy::from_index(widx)
                     .with_context(|| format!("artifact winner index {widx} out of range"))?;
@@ -274,5 +447,12 @@ mod tests {
         let (pg, mg) = ArtifactEval::point_grids(24, 65536);
         assert!(pg.windows(2).all(|w| w[0] < w[1]));
         assert!(mg.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn ext_rows_match_strategy_layout() {
+        for (w, s) in Strategy::EXT.iter().enumerate() {
+            assert_eq!(ArtifactEval::ext_row(*s), w);
+        }
     }
 }

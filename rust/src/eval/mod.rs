@@ -20,6 +20,12 @@
 //! only, so new backends (a real-MPI runner, trace replay) drop in
 //! without touching the tuner. The trait is `Send + Sync`: the tuner's
 //! parallel sweep shares one evaluator across its worker threads.
+//!
+//! The trait covers *every* collective family, not just the paper's
+//! broadcast and scatter: the extended ops (gather / reduce / barrier /
+//! allgather / allreduce) score through the same three backends — the
+//! unified [`crate::models::COST_MODELS`] registry, schedule-building
+//! simulation, and the second AOT artifact (`tuner_ext.hlo.txt`).
 
 mod artifact;
 mod model;
@@ -196,10 +202,10 @@ mod tests {
     }
 
     #[test]
-    fn best_matches_rank_head_for_both_families() {
+    fn best_matches_rank_head_for_every_family() {
         let net = measured();
         let s_grid = [256u64, 4096, 65536];
-        for op in [Op::Bcast, Op::Scatter] {
+        for op in Op::ALL {
             for p in [2usize, 8, 24] {
                 for m in [64u64, 8192, 1 << 20] {
                     let d = ModelEval.best(op, &net, p, m, &s_grid);
@@ -208,6 +214,23 @@ mod tests {
                     assert_eq!(d.predicted, ranked[0].1);
                     assert_eq!(d.segment, ranked[0].2);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn ext_ops_score_through_the_trait() {
+        let net = measured();
+        let evals: Vec<Box<dyn Evaluator>> = vec![
+            Box::new(ModelEval),
+            Box::new(SimEval::new(NetConfig::fast_ethernet_ideal())),
+        ];
+        for e in &evals {
+            for op in Op::EXT {
+                let d = e.best(op, &net, 8, 4096, &[]);
+                assert!(op.family().contains(&d.strategy), "{}: {d:?}", e.name());
+                assert!(d.segment.is_none(), "ext strategies never segment");
+                assert!(d.predicted > 0.0 && d.predicted.is_finite(), "{}", e.name());
             }
         }
     }

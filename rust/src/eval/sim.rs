@@ -39,9 +39,21 @@ impl SimEval {
     }
 
     /// Run one strategy empirically at `(p, m)` on a fresh cluster and
-    /// return its completion time in (simulated) seconds.
+    /// return its completion time in (simulated) seconds. A strategy
+    /// that cannot be scheduled at this scale (the extended reduction
+    /// trees beyond [`crate::mpi::Payload::MAX_MASK_RANKS`] ranks)
+    /// scores `+inf`, so the argmin never selects it.
     pub fn measure(&self, strategy: Strategy, p: usize, m: u64, seg: Option<u64>) -> f64 {
-        let sched = strategy.build(p, 0, m, seg);
+        let sched = match strategy.try_build(p, 0, m, seg) {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!(
+                    "{}: cannot schedule at p={p} ({e:#}); scoring as +inf",
+                    strategy.name()
+                );
+                return f64::INFINITY;
+            }
+        };
         let mut world = World::new(Netsim::new(p, self.cfg.clone()));
         let rep = world.run(&sched);
         debug_assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
@@ -110,6 +122,19 @@ mod tests {
                 assert_eq!(*seg, Some(want), "{}", s.name());
             }
         }
+    }
+
+    #[test]
+    fn ext_strategies_measure_and_score() {
+        let e = SimEval::new(NetConfig::fast_ethernet_ideal());
+        for s in Strategy::EXT {
+            let t = e.measure(s, 8, 4096, None);
+            assert!(t > 0.0 && t.is_finite(), "{}: {t}", s.name());
+        }
+        // beyond the contributor-mask capacity the reduction trees score
+        // +inf instead of panicking, so the argmin skips them
+        let over = crate::mpi::Payload::MAX_MASK_RANKS + 1;
+        assert!(e.measure(Strategy::AllReduceRecDoubling, over, 64, None).is_infinite());
     }
 
     #[test]

@@ -352,7 +352,7 @@ pub fn tables(cfg: &NetConfig) -> ExperimentResult {
     }
     ExperimentResult {
         id: "tables".into(),
-        title: "Tables 1 & 2: every model at representative points".into(),
+        title: "Tables 1 & 2 + extended ops: every model at representative points".into(),
         table,
         series: vec![],
         notes: vec![],

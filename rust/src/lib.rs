@@ -17,23 +17,27 @@
 //!   protocols) over the simulator, executing declarative communication
 //!   schedules.
 //! * [`collectives`] — every implementation strategy of the paper's
-//!   Tables 1 and 2 (ten Broadcasts, three Scatters) plus the composed
+//!   Tables 1 and 2 (ten Broadcasts, three Scatters) plus the extended
 //!   operations (Gather, Reduce, Barrier, AllGather, AllReduce) and
-//!   MagPIe-style multi-level variants.
+//!   MagPIe-style multi-level variants — all addressed through one
+//!   [`collectives::Strategy`] enum, so the tuner selects among
+//!   implementations of *every* collective.
 //! * [`plogp`] — the pLogP parameter model and the measurement procedure
 //!   of Kielmann et al.'s LogP benchmark, run against the simulator.
-//! * [`models`] — the analytic cost models of Tables 1 and 2 in Rust,
-//!   as a strategy-indexed registry of closed-form cost functions.
+//! * [`models`] — the analytic cost models of Tables 1 and 2 in Rust
+//!   plus the extended-op models derived the same way, as one
+//!   strategy-indexed registry of closed-form cost functions.
 //! * [`eval`] — the evaluation layer: the [`eval::Evaluator`] trait with
 //!   three interchangeable backends — analytic models
 //!   ([`eval::ModelEval`]), empirical simulation ([`eval::SimEval`]) and
 //!   the AOT-compiled XLA artifact ([`eval::ArtifactEval`]). Everything
 //!   that scores a `(strategy, P, m, segment)` point goes through it.
 //! * [`tuner`] — the paper's contribution: strategy selection and
-//!   segment-size search over any [`eval::Evaluator`], swept in parallel
-//!   across worker threads (`tune --jobs N`), with the AOT artifact
-//!   (see `python/compile/`, loaded through [`runtime`]) as the batched
-//!   fast path.
+//!   segment-size search over any [`eval::Evaluator`] for all seven
+//!   operation families ([`tuner::Op::ALL`]), swept in parallel across
+//!   worker threads (`tune --jobs N`), with the AOT artifacts (see
+//!   `python/compile/`, loaded through [`runtime`]) as the batched fast
+//!   path.
 //! * [`coordinator`] — the L3 service layer on top of the tuner: a
 //!   long-running, thread-safe decision-table service. Clusters are
 //!   fingerprinted by quantized pLogP signatures so equivalent networks

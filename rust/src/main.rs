@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
-use collective_tuner::collectives::{composed, multilevel, Strategy};
+use collective_tuner::collectives::{multilevel, Strategy};
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy};
 use collective_tuner::harness::experiments;
 use collective_tuner::mpi::World;
@@ -15,7 +15,6 @@ use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp;
 use collective_tuner::runtime::TunerArtifact;
 use collective_tuner::topology::{discover, ClusterSpec, GridSpec};
-use collective_tuner::tuner::ext::{build_ext_schedule, ExtOp, ExtTuner};
 use collective_tuner::tuner::{grids, persist, Op, Tuner};
 use collective_tuner::util::prng::Prng;
 use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
@@ -83,6 +82,28 @@ fn backend_tuner(args: &Args) -> Result<Tuner> {
     Ok(tuner.jobs(args.usize_or("jobs", 0)?))
 }
 
+/// Parse `--op` into a list of operation families: a comma-separated
+/// list of op names, `all` for every family, or the default (bcast +
+/// scatter, the paper's core pair).
+fn op_list(args: &Args) -> Result<Vec<Op>> {
+    match args.get("op") {
+        None => Ok(vec![Op::Bcast, Op::Scatter]),
+        Some("all") => Ok(Op::ALL.to_vec()),
+        Some(spec) => spec
+            .split(',')
+            .map(|tok| {
+                let tok = tok.trim();
+                Op::from_name(tok).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown --op '{tok}' (all, bcast, scatter, gather, reduce, \
+                         barrier, allgather, allreduce)"
+                    )
+                })
+            })
+            .collect(),
+    }
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
     let cfg = args.net_config()?;
     let mut sim = Netsim::new(2, cfg);
@@ -91,26 +112,31 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
     let tuner = backend_tuner(args)?;
     println!("backend: {} ({} sweep worker(s))", tuner.backend_name(), tuner.jobs);
+    let ops = op_list(args)?;
     let p_grid = args
         .usize_list("procs")?
         .unwrap_or_else(grids::default_p_grid);
     let m_grid = grids::default_m_grid();
     let t0 = std::time::Instant::now();
-    let (b, s) = tuner.tune(&net, &p_grid, &m_grid)?;
+    let tables = ops
+        .iter()
+        .map(|&op| tuner.tune_op(op, &net, &p_grid, &m_grid))
+        .collect::<Result<Vec<_>>>()?;
     let dt = t0.elapsed();
     if let Some(dir) = args.get("save") {
         let dir = PathBuf::from(dir);
-        persist::save(&b, &dir.join("bcast.table.tsv"))?;
-        persist::save(&s, &dir.join("scatter.table.tsv"))?;
+        for table in &tables {
+            persist::save(table, &dir.join(format!("{}.table.tsv", table.op.name())))?;
+        }
         println!("saved decision tables to {}", dir.display());
     }
     println!(
         "tuned {} grid points in {:.2} ms\n",
-        2 * p_grid.len() * m_grid.len(),
+        ops.len() * p_grid.len() * m_grid.len(),
         dt.as_secs_f64() * 1e3
     );
 
-    for table in [&b, &s] {
+    for table in &tables {
         println!("== {} decision table ==", table.op.name());
         let mut t = Table::new(vec!["P", "m", "strategy", "segment", "predicted"]);
         for (qi, &p) in table.p_grid.iter().enumerate() {
@@ -175,54 +201,41 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown strategy '{full}'"))?;
             return run_strategy(&cfg, strategy, p, m, seg);
         }
-        "reduce" => composed::reduce_binomial(p, 0, m)?,
-        "gather" | "barrier" | "allgather" | "allreduce" => {
-            let family = match op.as_str() {
-                "gather" => ExtOp::Gather,
-                "barrier" => ExtOp::Barrier,
-                "allgather" => ExtOp::AllGather,
-                _ => ExtOp::AllReduce,
-            };
-            if args.get_or("strategy", "auto") == "auto" {
+        "gather" | "reduce" | "barrier" | "allgather" | "allreduce" => {
+            let family = Op::from_name(&op).expect("matched op names parse");
+            // barriers carry no payload: accept --bytes 0 (the schedule
+            // builders ignore the size entirely)
+            let m = if family == Op::Barrier { m.max(1) } else { m };
+            let strategy_name = args.get_or("strategy", "auto");
+            if strategy_name == "auto" {
+                // measure + tune the one family + look up, exactly like
+                // the core ops: same engine, same evaluator backends
                 let mut sim = Netsim::new(2, cfg.clone());
                 let net = plogp::bench::measure(&mut sim);
-                let dir = args
-                    .get("artifacts")
-                    .map(PathBuf::from)
-                    .unwrap_or_else(TunerArtifact::default_dir);
-                let tuner = ExtTuner::auto(&dir);
-                let tables =
-                    tuner.tune(&net, &grids::default_p_grid(), &grids::default_m_grid())?;
-                let d = *tables[family as usize].lookup(p, m);
+                let tuner = backend_tuner(args)?;
+                let table = tuner.tune_op(
+                    family,
+                    &net,
+                    &grids::default_p_grid(),
+                    &grids::default_m_grid(),
+                )?;
+                let d = *table.lookup(p, m);
                 println!(
                     "tuned choice: {} (predicted {})",
                     d.strategy.name(),
                     fmt_time(d.predicted)
                 );
-                build_ext_schedule(family, d.strategy, p, m)?
+                d.strategy.try_build(p, 0, m, None)?
             } else {
-                match args.get_or("strategy", "auto").as_str() {
-                    "flat" => composed::gather_flat(p, 0, m),
-                    "binomial" if op == "gather" => composed::gather_binomial(p, 0, m),
-                    "tree" => composed::barrier_binomial(p),
-                    "dissemination" => {
-                        collective_tuner::collectives::extended::barrier_dissemination(p)
-                    }
-                    "ring" => collective_tuner::collectives::extended::allgather_ring(p, m),
-                    "rec_doubling" if op == "allgather" => {
-                        collective_tuner::collectives::extended::allgather_recursive_doubling(
-                            p, m,
-                        )
-                    }
-                    "rec_doubling" => {
-                        collective_tuner::collectives::extended::allreduce_recursive_doubling(
-                            p, m,
-                        )?
-                    }
-                    "gather+bcast" => composed::allgather(p, 0, m),
-                    "reduce+bcast" => composed::allreduce(p, 0, m)?,
-                    other => bail!("unknown {op} strategy '{other}'"),
-                }
+                let full = if strategy_name.contains('/') {
+                    strategy_name.clone()
+                } else {
+                    format!("{op}/{strategy_name}")
+                };
+                let strategy = Strategy::from_name(&full)
+                    .filter(|s| family.family().contains(s))
+                    .ok_or_else(|| anyhow::anyhow!("unknown {op} strategy '{full}'"))?;
+                strategy.try_build(p, 0, m, None)?
             }
         }
         other => bail!("unknown --op '{other}'"),
@@ -317,11 +330,8 @@ fn cmd_discover(args: &Args) -> Result<()> {
 }
 
 fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
-    let mut cfg = CoordinatorConfig::default();
-    cfg.shards = args.usize_or("shards", cfg.shards)?.max(1);
-    cfg.capacity_per_shard = args.usize_or("capacity", cfg.capacity_per_shard)?.max(1);
-    cfg.jobs = args.usize_or("jobs", 0)?;
-    cfg.artifact_dir = match args.get_or("backend", "auto").as_str() {
+    let defaults = CoordinatorConfig::default();
+    let artifact_dir = match args.get_or("backend", "auto").as_str() {
         "native" => None,
         "auto" | "artifact" => {
             let dir = args
@@ -337,6 +347,13 @@ fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
         }
         other => bail!("unknown --backend '{other}' (auto, native, artifact)"),
     };
+    let cfg = CoordinatorConfig {
+        shards: args.usize_or("shards", defaults.shards)?.max(1),
+        capacity_per_shard: args.usize_or("capacity", defaults.capacity_per_shard)?.max(1),
+        jobs: args.usize_or("jobs", 0)?,
+        artifact_dir,
+        ..defaults
+    };
     Ok(Coordinator::new(cfg))
 }
 
@@ -345,7 +362,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     let coord = coordinator_from_args(args)?;
     if let Some(dir) = args.get("warm") {
         let n = coord.warm_start_from(Path::new(dir))?;
-        println!("warm start: loaded {n} table pair(s) from {dir}");
+        println!("warm start: loaded {n} table set(s) from {dir}");
     }
     let name = args.get_or("cluster", "default");
     let nodes = args.usize_or("nodes", 50)?;
@@ -355,11 +372,13 @@ fn cmd_query(args: &Args) -> Result<()> {
         println!("measured {}", net.summary());
         coord.register(&name, nodes, net);
     }
-    let op = match args.get_or("op", "bcast").as_str() {
-        "bcast" => Op::Bcast,
-        "scatter" => Op::Scatter,
-        other => bail!("unknown --op '{other}' (bcast, scatter)"),
-    };
+    let op_name = args.get_or("op", "bcast");
+    let op = Op::from_name(&op_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown --op '{op_name}' (bcast, scatter, gather, reduce, barrier, \
+             allgather, allreduce)"
+        )
+    })?;
     let p = args.usize_or("procs", 24)?;
     let m = args.u64_or("bytes", 64 * 1024)?;
     let t0 = std::time::Instant::now();
@@ -388,7 +407,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     );
     if let Some(dir) = args.get("save") {
         let n = coord.persist_to(Path::new(dir))?;
-        println!("persisted {n} table pair(s) to {dir}");
+        println!("persisted {n} table set(s) to {dir}");
     }
     Ok(())
 }
@@ -403,7 +422,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = coordinator_from_args(args)?;
     if let Some(dir) = args.get("warm") {
         let n = coord.warm_start_from(Path::new(dir))?;
-        println!("warm start: loaded {n} table pair(s) from {dir}");
+        println!("warm start: loaded {n} table set(s) from {dir}");
     }
 
     // Alternate hardware classes across islands: distinct signatures
@@ -446,7 +465,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let mut rng = Prng::new(0xC0DE_5EED ^ t as u64);
                 for _ in 0..requests {
                     let name = rng.pick(names);
-                    let op = if rng.chance(0.5) { Op::Bcast } else { Op::Scatter };
+                    let op = *rng.pick(&Op::ALL);
                     let p = rng.range_usize(2, nodes.max(3));
                     let m = rng.range(1, 1 << 20);
                     let d = coord.decision(op, name, p, m).expect("cluster registered");
@@ -504,7 +523,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     if let Some(dir) = args.get("save") {
         let n = coord.persist_to(Path::new(dir))?;
-        println!("persisted {n} table pair(s) to {dir}");
+        println!("persisted {n} table set(s) to {dir}");
     }
     Ok(())
 }

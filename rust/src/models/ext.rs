@@ -1,160 +1,97 @@
 //! pLogP cost models for the extended operations (Gather, Reduce,
 //! Barrier, AllGather, AllReduce) — derived exactly the way the paper
-//! derives Tables 1 and 2, so the tuner can select among implementations
-//! of *every* collective, not just Broadcast and Scatter.
+//! derives Tables 1 and 2, so the tuner selects among implementations of
+//! *every* collective, not just Broadcast and Scatter.
 //!
-//! Index layout is shared with `python/compile/kernels/ext_models.py`
-//! (the second AOT artifact) — see `ExtStrategy`.
+//! These are plain [`super::CostFn`] entries of the unified
+//! strategy-indexed [`super::COST_MODELS`] registry; evaluate them
+//! through [`super::predict`] with the extended
+//! [`crate::collectives::Strategy`] variants. The index layout
+//! (ext-artifact winner index = `Strategy::index() -
+//! Strategy::EXT_BASE`) is shared with
+//! `python/compile/kernels/ext_models.py`, the second AOT artifact.
+//!
+//! `m` is the per-rank block size (gather/allgather) or vector size
+//! (reduce/allreduce); barriers ignore it. None of the extended
+//! strategies segment, so the segment fields of [`CostInputs`] are
+//! ignored throughout.
 
-use crate::collectives::tree::{ceil_log2, floor_log2};
-use crate::plogp::PLogP;
+use crate::collectives::tree::ceil_log2;
 
-/// Extended-operation strategies, numbered identically to the Python
-/// kernel `ext_models.py`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-#[repr(usize)]
-pub enum ExtStrategy {
-    /// Gather, flat tree: every rank sends its block straight to the
-    /// root; the root's NIC serializes. `(P-1) g(m) + L`.
-    GatherFlat = 0,
-    /// Gather, binomial fan-in: combined blocks double per round.
-    /// `sum_{j=0}^{ceil(log2 P)-1} g(2^j m) + ceil(log2 P) L`.
-    GatherBinomial = 1,
-    /// Reduce, binomial fan-in of m-sized partials:
-    /// `floor(log2 P) g(m) + ceil(log2 P) L` (paper §3: constructed like
-    /// the binomial broadcast, reversed).
-    ReduceBinomial = 2,
-    /// Barrier, binomial fan-in + fan-out: `2 (floor(log2 P) g(1) +
-    /// ceil(log2 P) L)`.
-    BarrierTree = 3,
-    /// Barrier, dissemination: `ceil(log2 P) (g(1) + L)`.
-    BarrierDissemination = 4,
-    /// AllGather as gather + broadcast of the P·m result (MagPIe-style,
-    /// the paper's §3 example): `gather_binomial(m) + binomial(P·m)`.
-    AllGatherGatherBcast = 5,
-    /// AllGather, ring: `(P-1)(g(m) + L)`.
-    AllGatherRing = 6,
-    /// AllGather, recursive doubling:
-    /// `sum_{j=0}^{log2 P - 1} (g(2^j m) + L)`.
-    AllGatherRecDoubling = 7,
-    /// AllReduce as reduce + broadcast:
-    /// `2 floor(log2 P) g(m) + 2 ceil(log2 P) L`.
-    AllReduceReduceBcast = 8,
-    /// AllReduce, recursive doubling: `log2 P (g(m) + L)`.
-    AllReduceRecDoubling = 9,
+use super::CostInputs;
+
+/// `sum_{j=0}^{ceil(log2 P)-1} g(2^j · unit)` — the fan-in/fan-out
+/// doubling sum shared by the binomial gather and recursive-doubling
+/// models.
+fn doubling_sum(x: &CostInputs, unit: f64) -> f64 {
+    (0..ceil_log2(x.procs)).map(|j| x.net.gap((1u64 << j) as f64 * unit)).sum()
 }
 
-impl ExtStrategy {
-    pub const COUNT: usize = 10;
-
-    pub const ALL: [ExtStrategy; 10] = [
-        ExtStrategy::GatherFlat,
-        ExtStrategy::GatherBinomial,
-        ExtStrategy::ReduceBinomial,
-        ExtStrategy::BarrierTree,
-        ExtStrategy::BarrierDissemination,
-        ExtStrategy::AllGatherGatherBcast,
-        ExtStrategy::AllGatherRing,
-        ExtStrategy::AllGatherRecDoubling,
-        ExtStrategy::AllReduceReduceBcast,
-        ExtStrategy::AllReduceRecDoubling,
-    ];
-
-    pub const GATHER: [ExtStrategy; 2] = [ExtStrategy::GatherFlat, ExtStrategy::GatherBinomial];
-    pub const BARRIER: [ExtStrategy; 2] =
-        [ExtStrategy::BarrierTree, ExtStrategy::BarrierDissemination];
-    pub const ALLGATHER: [ExtStrategy; 3] = [
-        ExtStrategy::AllGatherGatherBcast,
-        ExtStrategy::AllGatherRing,
-        ExtStrategy::AllGatherRecDoubling,
-    ];
-    pub const ALLREDUCE: [ExtStrategy; 2] = [
-        ExtStrategy::AllReduceReduceBcast,
-        ExtStrategy::AllReduceRecDoubling,
-    ];
-
-    pub fn index(self) -> usize {
-        self as usize
-    }
-
-    pub fn from_index(i: usize) -> Option<ExtStrategy> {
-        ExtStrategy::ALL.get(i).copied()
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            ExtStrategy::GatherFlat => "gather/flat",
-            ExtStrategy::GatherBinomial => "gather/binomial",
-            ExtStrategy::ReduceBinomial => "reduce/binomial",
-            ExtStrategy::BarrierTree => "barrier/tree",
-            ExtStrategy::BarrierDissemination => "barrier/dissemination",
-            ExtStrategy::AllGatherGatherBcast => "allgather/gather+bcast",
-            ExtStrategy::AllGatherRing => "allgather/ring",
-            ExtStrategy::AllGatherRecDoubling => "allgather/rec_doubling",
-            ExtStrategy::AllReduceReduceBcast => "allreduce/reduce+bcast",
-            ExtStrategy::AllReduceRecDoubling => "allreduce/rec_doubling",
-        }
-    }
+/// Gather, flat tree: every rank sends its block straight to the root;
+/// the root's NIC serializes. `(P-1) g(m) + L`.
+pub(super) fn cost_gather_flat(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * x.g_m + x.l
 }
 
-/// Predicted completion time (seconds) of an extended strategy. `m` is
-/// the per-rank block size (gather/allgather) or vector size
-/// (reduce/allreduce); ignored for barriers.
-pub fn predict_ext(strategy: ExtStrategy, net: &PLogP, procs: usize, m: u64) -> f64 {
-    assert!(procs >= 1);
-    let l = net.l;
-    let p = procs as f64;
-    let mf = m.max(1) as f64;
-    let g_m = net.gap(mf);
-    let g_1 = net.gap(1.0);
-    let fl = floor_log2(procs) as f64;
-    let ce = ceil_log2(procs) as f64;
-
-    let doubling_sum = |unit: f64| -> f64 {
-        (0..ceil_log2(procs)).map(|j| net.gap((1u64 << j) as f64 * unit)).sum()
-    };
-
-    match strategy {
-        ExtStrategy::GatherFlat => (p - 1.0) * g_m + l,
-        ExtStrategy::GatherBinomial => doubling_sum(mf) + ce * l,
-        ExtStrategy::ReduceBinomial => fl * g_m + ce * l,
-        ExtStrategy::BarrierTree => 2.0 * (fl * g_1 + ce * l),
-        ExtStrategy::BarrierDissemination => ce * (g_1 + l),
-        ExtStrategy::AllGatherGatherBcast => {
-            // gather of m-blocks + broadcast of the P·m result
-            (doubling_sum(mf) + ce * l) + (fl * net.gap(p * mf) + ce * l)
-        }
-        ExtStrategy::AllGatherRing => (p - 1.0) * (g_m + l),
-        ExtStrategy::AllGatherRecDoubling => {
-            (0..ceil_log2(procs))
-                .map(|j| net.gap((1u64 << j) as f64 * mf) + l)
-                .sum()
-        }
-        ExtStrategy::AllReduceReduceBcast => 2.0 * (fl * g_m + ce * l),
-        ExtStrategy::AllReduceRecDoubling => ce * (g_m + l),
-    }
+/// Gather, binomial fan-in: combined blocks double per round.
+/// `sum_{j} g(2^j m) + ceil(log2 P) L`.
+pub(super) fn cost_gather_binomial(x: &CostInputs) -> f64 {
+    doubling_sum(x, x.mf) + x.ce * x.l
 }
 
-/// Rank the strategies of one extended-op family, ascending by predicted
-/// time.
-pub fn rank_ext(
-    family: &[ExtStrategy],
-    net: &PLogP,
-    procs: usize,
-    m: u64,
-) -> Vec<(ExtStrategy, f64)> {
-    let mut out: Vec<(ExtStrategy, f64)> = family
-        .iter()
-        .map(|&s| (s, predict_ext(s, net, procs, m)))
-        .collect();
-    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-    out
+/// Reduce, binomial fan-in of m-sized partials:
+/// `floor(log2 P) g(m) + ceil(log2 P) L` (paper §3: constructed like the
+/// binomial broadcast, reversed).
+pub(super) fn cost_reduce_binomial(x: &CostInputs) -> f64 {
+    x.fl * x.g_m + x.ce * x.l
+}
+
+/// Barrier, binomial fan-in + fan-out:
+/// `2 (floor(log2 P) g(1) + ceil(log2 P) L)`.
+pub(super) fn cost_barrier_tree(x: &CostInputs) -> f64 {
+    2.0 * (x.fl * x.net.gap(1.0) + x.ce * x.l)
+}
+
+/// Barrier, dissemination: `ceil(log2 P) (g(1) + L)`.
+pub(super) fn cost_barrier_dissemination(x: &CostInputs) -> f64 {
+    x.ce * (x.net.gap(1.0) + x.l)
+}
+
+/// AllGather as gather + broadcast of the P·m result (MagPIe-style, the
+/// paper's §3 example): `gather_binomial(m) + binomial(P·m)`.
+pub(super) fn cost_allgather_gather_bcast(x: &CostInputs) -> f64 {
+    (doubling_sum(x, x.mf) + x.ce * x.l) + (x.fl * x.net.gap(x.p * x.mf) + x.ce * x.l)
+}
+
+/// AllGather, ring: `(P-1)(g(m) + L)`.
+pub(super) fn cost_allgather_ring(x: &CostInputs) -> f64 {
+    (x.p - 1.0) * (x.g_m + x.l)
+}
+
+/// AllGather, recursive doubling:
+/// `sum_{j=0}^{log2 P - 1} (g(2^j m) + L)`.
+pub(super) fn cost_allgather_rec_doubling(x: &CostInputs) -> f64 {
+    (0..ceil_log2(x.procs))
+        .map(|j| x.net.gap((1u64 << j) as f64 * x.mf) + x.l)
+        .sum()
+}
+
+/// AllReduce as reduce + broadcast:
+/// `2 floor(log2 P) g(m) + 2 ceil(log2 P) L`.
+pub(super) fn cost_allreduce_reduce_bcast(x: &CostInputs) -> f64 {
+    2.0 * (x.fl * x.g_m + x.ce * x.l)
+}
+
+/// AllReduce, recursive doubling: `log2 P (g(m) + L)`.
+pub(super) fn cost_allreduce_rec_doubling(x: &CostInputs) -> f64 {
+    x.ce * (x.g_m + x.l)
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-    use crate::plogp::GapTable;
+    use crate::collectives::Strategy;
+    use crate::models::predict;
+    use crate::plogp::{GapTable, PLogP};
 
     /// g(m) = 1 + m, L = 10 (hand-checkable toy network).
     fn toy() -> PLogP {
@@ -167,34 +104,28 @@ mod tests {
     fn hand_values() {
         let n = toy();
         // P=5, m=8: ce=3, fl=2, g(8)=9, g(1)=2
-        assert_eq!(predict_ext(ExtStrategy::GatherFlat, &n, 5, 8), 4.0 * 9.0 + 10.0);
+        assert_eq!(predict(Strategy::GatherFlat, &n, 5, 8, None), 4.0 * 9.0 + 10.0);
         // gather binomial: g(8)+g(16)+g(32) + 3L = 9+17+33+30 = 89
-        assert_eq!(predict_ext(ExtStrategy::GatherBinomial, &n, 5, 8), 89.0);
-        assert_eq!(predict_ext(ExtStrategy::ReduceBinomial, &n, 5, 8), 2.0 * 9.0 + 30.0);
-        assert_eq!(predict_ext(ExtStrategy::BarrierTree, &n, 5, 1), 2.0 * (2.0 * 2.0 + 30.0));
-        assert_eq!(predict_ext(ExtStrategy::BarrierDissemination, &n, 5, 1), 3.0 * 12.0);
-        assert_eq!(predict_ext(ExtStrategy::AllGatherRing, &n, 5, 8), 4.0 * 19.0);
-        // rec doubling allgather: (9+10)+(17+10)+(33+10) = 89
-        assert_eq!(predict_ext(ExtStrategy::AllGatherRecDoubling, &n, 5, 8), 89.0);
-        assert_eq!(predict_ext(ExtStrategy::AllReduceRecDoubling, &n, 5, 8), 3.0 * 19.0);
+        assert_eq!(predict(Strategy::GatherBinomial, &n, 5, 8, None), 89.0);
+        assert_eq!(predict(Strategy::ReduceBinomial, &n, 5, 8, None), 2.0 * 9.0 + 30.0);
         assert_eq!(
-            predict_ext(ExtStrategy::AllReduceReduceBcast, &n, 5, 8),
+            predict(Strategy::BarrierTree, &n, 5, 1, None),
+            2.0 * (2.0 * 2.0 + 30.0)
+        );
+        assert_eq!(predict(Strategy::BarrierDissemination, &n, 5, 1, None), 3.0 * 12.0);
+        assert_eq!(predict(Strategy::AllGatherRing, &n, 5, 8, None), 4.0 * 19.0);
+        // rec doubling allgather: (9+10)+(17+10)+(33+10) = 89
+        assert_eq!(predict(Strategy::AllGatherRecDoubling, &n, 5, 8, None), 89.0);
+        assert_eq!(predict(Strategy::AllReduceRecDoubling, &n, 5, 8, None), 3.0 * 19.0);
+        assert_eq!(
+            predict(Strategy::AllReduceReduceBcast, &n, 5, 8, None),
             2.0 * (2.0 * 9.0 + 30.0)
         );
         // allgather gather+bcast: 89 + (2*g(40) + 30) = 89 + 2*41 + 30
         assert_eq!(
-            predict_ext(ExtStrategy::AllGatherGatherBcast, &n, 5, 8),
+            predict(Strategy::AllGatherGatherBcast, &n, 5, 8, None),
             89.0 + 2.0 * 41.0 + 30.0
         );
-    }
-
-    #[test]
-    fn indices_and_names_roundtrip() {
-        for (i, s) in ExtStrategy::ALL.iter().enumerate() {
-            assert_eq!(s.index(), i);
-            assert_eq!(ExtStrategy::from_index(i), Some(*s));
-        }
-        assert_eq!(ExtStrategy::from_index(10), None);
     }
 
     #[test]
@@ -202,8 +133,8 @@ mod tests {
         let n = toy();
         for p in [4usize, 8, 16, 32] {
             assert!(
-                predict_ext(ExtStrategy::BarrierDissemination, &n, p, 1)
-                    < predict_ext(ExtStrategy::BarrierTree, &n, p, 1),
+                predict(Strategy::BarrierDissemination, &n, p, 1, None)
+                    < predict(Strategy::BarrierTree, &n, p, 1, None),
                 "p={p}"
             );
         }
@@ -211,34 +142,35 @@ mod tests {
 
     #[test]
     fn ring_vs_rec_doubling_crossover_in_model() {
-        // latency-dominated: rec doubling wins; bandwidth-dominated:
-        // comparable (ring within ~2x) — check the small-m ordering
+        // latency-dominated: rec doubling wins — check the small-m ordering
         let n = toy();
-        let p = 16;
-        let small = rank_ext(&ExtStrategy::ALLGATHER, &n, p, 1);
-        assert_eq!(small[0].0, ExtStrategy::AllGatherRecDoubling);
+        let ranked = crate::models::rank_strategies(&Strategy::ALLGATHER, &n, 16, 1, &[]);
+        assert_eq!(ranked[0].0, Strategy::AllGatherRecDoubling);
     }
 
     #[test]
-    fn rank_ext_sorted() {
+    fn ext_models_finite_positive() {
         let n = toy();
-        let r = rank_ext(&ExtStrategy::ALL, &n, 9, 64);
-        for w in r.windows(2) {
-            assert!(w[0].1 <= w[1].1);
-        }
-        assert_eq!(r.len(), 10);
-    }
-
-    #[test]
-    fn all_models_finite_positive() {
-        let n = toy();
-        for p in [1usize, 2, 3, 17, 64] {
+        for p in [1usize, 2, 3, 17, 64, 200] {
             for m in [1u64, 100, 1 << 20] {
-                for s in ExtStrategy::ALL {
-                    let t = predict_ext(s, &n, p, m);
+                for s in Strategy::EXT {
+                    let t = predict(s, &n, p, m, None);
                     assert!(t.is_finite() && t >= 0.0, "{} p={p} m={m}", s.name());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn ext_models_ignore_segment_inputs() {
+        let n = toy();
+        for s in Strategy::EXT {
+            assert_eq!(
+                predict(s, &n, 9, 64, None),
+                predict(s, &n, 9, 64, Some(4)),
+                "{}",
+                s.name()
+            );
         }
     }
 }

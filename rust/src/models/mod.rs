@@ -1,4 +1,6 @@
-//! Analytic pLogP cost models — Tables 1 and 2 of the paper, in Rust.
+//! Analytic pLogP cost models — Tables 1 and 2 of the paper, in Rust,
+//! plus the extended-collective models ([`ext`]) derived the same way —
+//! one strategy-indexed registry ([`COST_MODELS`]) for every collective.
 //!
 //! These are the same formulas the AOT-compiled XLA artifact evaluates
 //! (`python/compile/kernels/cost_models.py`); the Rust mirror exists for
@@ -133,9 +135,11 @@ fn cost_scatter_binomial(x: &CostInputs) -> f64 {
 }
 
 /// Strategy-indexed cost registry: entry `i` models
-/// `Strategy::from_index(i)`. New backends and tools (the `eval` layer,
-/// ablations, docs generators) index this table instead of growing a
-/// match ladder.
+/// `Strategy::from_index(i)`. One registry covers every collective —
+/// broadcast and scatter (Tables 1 and 2) and the extended operations
+/// (gather / reduce / barrier / allgather / allreduce, [`ext`]) — so new
+/// backends and tools (the `eval` layer, ablations, docs generators)
+/// index this table instead of growing per-op match ladders.
 pub const COST_MODELS: [CostFn; Strategy::COUNT] = [
     cost_bcast_flat,
     cost_bcast_flat_rdv,
@@ -150,6 +154,16 @@ pub const COST_MODELS: [CostFn; Strategy::COUNT] = [
     cost_scatter_flat,
     cost_scatter_chain,
     cost_scatter_binomial,
+    ext::cost_gather_flat,
+    ext::cost_gather_binomial,
+    ext::cost_reduce_binomial,
+    ext::cost_barrier_tree,
+    ext::cost_barrier_dissemination,
+    ext::cost_allgather_gather_bcast,
+    ext::cost_allgather_ring,
+    ext::cost_allgather_rec_doubling,
+    ext::cost_allreduce_reduce_bcast,
+    ext::cost_allreduce_rec_doubling,
 ];
 
 /// The cost model of one strategy.
@@ -161,7 +175,9 @@ pub fn cost_fn(strategy: Strategy) -> CostFn {
 /// message size `m`, with optional segment size (segmented strategies
 /// only; `None` means one segment).
 ///
-/// For scatter strategies `m` is the per-rank chunk size.
+/// For scatter strategies `m` is the per-rank chunk size; for
+/// gather/allgather it is the per-rank block, for reduce/allreduce the
+/// vector size, and barriers ignore it.
 pub fn predict(strategy: Strategy, net: &PLogP, procs: usize, m: u64, seg: Option<u64>) -> f64 {
     cost_fn(strategy)(&CostInputs::new(net, procs, m, seg))
 }

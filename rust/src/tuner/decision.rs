@@ -8,20 +8,53 @@
 
 use crate::collectives::Strategy;
 
-/// Which operation family a table covers.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which operation family a table covers — the paper's two core
+/// operations plus the extended collectives its §3 constructs the same
+/// way. Discriminants index per-op table sets (see
+/// [`crate::coordinator::TableSet`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
 pub enum Op {
-    Bcast,
-    Scatter,
+    Bcast = 0,
+    Scatter = 1,
+    Gather = 2,
+    Reduce = 3,
+    Barrier = 4,
+    AllGather = 5,
+    AllReduce = 6,
 }
 
 impl Op {
+    pub const COUNT: usize = 7;
+
+    /// Every operation family, in discriminant order.
+    pub const ALL: [Op; 7] = [
+        Op::Bcast,
+        Op::Scatter,
+        Op::Gather,
+        Op::Reduce,
+        Op::Barrier,
+        Op::AllGather,
+        Op::AllReduce,
+    ];
+
+    /// The four extended ops the ext tuner sweeps (in the ext artifact's
+    /// winner-row order; Reduce has a single implementation and no
+    /// artifact row, so it is not part of the sweep set).
+    pub const EXT: [Op; 4] = [Op::Gather, Op::Barrier, Op::AllGather, Op::AllReduce];
+
     /// The operation family a strategy belongs to.
     pub fn of(strategy: Strategy) -> Op {
-        if strategy.is_bcast() {
-            Op::Bcast
-        } else {
-            Op::Scatter
+        // index ranges match the Strategy enum layout (asserted by
+        // `op_of_partitions_families` below)
+        match strategy.index() {
+            0..=9 => Op::Bcast,
+            10..=12 => Op::Scatter,
+            13..=14 => Op::Gather,
+            15 => Op::Reduce,
+            16..=17 => Op::Barrier,
+            18..=20 => Op::AllGather,
+            _ => Op::AllReduce,
         }
     }
 
@@ -29,6 +62,11 @@ impl Op {
         match self {
             Op::Bcast => &Strategy::BCAST,
             Op::Scatter => &Strategy::SCATTER,
+            Op::Gather => &Strategy::GATHER,
+            Op::Reduce => &Strategy::REDUCE,
+            Op::Barrier => &Strategy::BARRIER,
+            Op::AllGather => &Strategy::ALLGATHER,
+            Op::AllReduce => &Strategy::ALLREDUCE,
         }
     }
 
@@ -36,6 +74,43 @@ impl Op {
         match self {
             Op::Bcast => "bcast",
             Op::Scatter => "scatter",
+            Op::Gather => "gather",
+            Op::Reduce => "reduce",
+            Op::Barrier => "barrier",
+            Op::AllGather => "allgather",
+            Op::AllReduce => "allreduce",
+        }
+    }
+
+    /// Inverse of [`Op::name`] (CLI parsing, table deserialization).
+    pub fn from_name(name: &str) -> Option<Op> {
+        Op::ALL.iter().copied().find(|o| o.name() == name)
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<Op> {
+        Op::ALL.get(i).copied()
+    }
+
+    /// Is this one of the extended operations (everything beyond the
+    /// paper's broadcast/scatter)?
+    pub fn is_ext(self) -> bool {
+        self.index() >= 2
+    }
+
+    /// This op's winner row in the extended AOT artifact (`[4, Q, M]`:
+    /// gather, barrier, allgather, allreduce). `None` for the core ops
+    /// (which the core artifact covers) and for Reduce.
+    pub fn ext_artifact_row(self) -> Option<usize> {
+        match self {
+            Op::Gather => Some(0),
+            Op::Barrier => Some(1),
+            Op::AllGather => Some(2),
+            Op::AllReduce => Some(3),
+            _ => None,
         }
     }
 }
@@ -165,5 +240,33 @@ mod tests {
     #[should_panic]
     fn wrong_entry_count_panics() {
         DecisionTable::new(Op::Bcast, vec![2], vec![1, 2], vec![]);
+    }
+
+    #[test]
+    fn op_of_partitions_families() {
+        // every strategy maps to exactly the family that contains it
+        for op in Op::ALL {
+            for &s in op.family() {
+                assert_eq!(Op::of(s), op, "{}", s.name());
+            }
+        }
+        // and the families cover the strategy space exactly once
+        let total: usize = Op::ALL.iter().map(|o| o.family().len()).sum();
+        assert_eq!(total, Strategy::COUNT);
+    }
+
+    #[test]
+    fn op_names_and_indices_roundtrip() {
+        for (i, op) in Op::ALL.iter().enumerate() {
+            assert_eq!(op.index(), i);
+            assert_eq!(Op::from_index(i), Some(*op));
+            assert_eq!(Op::from_name(op.name()), Some(*op));
+        }
+        assert_eq!(Op::from_name("warp"), None);
+        assert_eq!(Op::from_index(Op::COUNT), None);
+        // ext rows match the ext artifact's winner layout
+        assert_eq!(Op::EXT.map(|o| o.ext_artifact_row().unwrap()), [0, 1, 2, 3]);
+        assert_eq!(Op::Bcast.ext_artifact_row(), None);
+        assert_eq!(Op::Reduce.ext_artifact_row(), None);
     }
 }

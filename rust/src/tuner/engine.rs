@@ -79,8 +79,8 @@ impl Tuner {
         self.evaluator.name()
     }
 
-    /// Tune both operations over the given grids. Returns the broadcast
-    /// and scatter decision tables.
+    /// Tune both core operations over the given grids. Returns the
+    /// broadcast and scatter decision tables.
     pub fn tune(
         &self,
         net: &PLogP,
@@ -91,6 +91,28 @@ impl Tuner {
             self.tune_op(Op::Bcast, net, p_grid, m_grid)?,
             self.tune_op(Op::Scatter, net, p_grid, m_grid)?,
         ))
+    }
+
+    /// Tune the four extended ops ([`Op::EXT`]: gather, barrier,
+    /// allgather, allreduce) over the grid — same parallel work queue,
+    /// one table per op in `Op::EXT` order.
+    pub fn tune_ext(
+        &self,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<Vec<DecisionTable>> {
+        Op::EXT.iter().map(|&op| self.tune_op(op, net, p_grid, m_grid)).collect()
+    }
+
+    /// Tune every operation family ([`Op::ALL`] order, one table each).
+    pub fn tune_all(
+        &self,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+    ) -> Result<Vec<DecisionTable>> {
+        Op::ALL.iter().map(|&op| self.tune_op(op, net, p_grid, m_grid)).collect()
     }
 
     /// Tune one operation over the grid.
@@ -251,5 +273,35 @@ mod tests {
         let t = Tuner::native().jobs(0);
         assert!(t.jobs >= 1);
         assert_eq!(t.backend_name(), "native");
+    }
+
+    #[test]
+    fn tune_all_covers_every_op_in_order() {
+        let net = measured();
+        let t = Tuner::native();
+        let tables = t.tune_all(&net, &[4, 16], &[1, 4096]).unwrap();
+        assert_eq!(tables.len(), Op::COUNT);
+        for (i, table) in tables.iter().enumerate() {
+            assert_eq!(table.op.index(), i);
+            assert_eq!(table.entries.len(), 4);
+            for d in &table.entries {
+                assert!(table.op.family().contains(&d.strategy), "{:?}", d);
+                assert!(d.predicted > 0.0 && d.predicted.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn ext_worker_count_never_changes_the_tables() {
+        let net = measured();
+        let p_grid = vec![2usize, 8, 24, 48];
+        let m_grid = grids::log_grid(1, 1 << 20, 12);
+        let ext1 = Tuner::native().jobs(1).tune_ext(&net, &p_grid, &m_grid).unwrap();
+        for jobs in [2usize, 8] {
+            let extn = Tuner::native().jobs(jobs).tune_ext(&net, &p_grid, &m_grid).unwrap();
+            for (a, b) in ext1.iter().zip(&extn) {
+                assert_eq!(a.entries, b.entries, "{:?} jobs={jobs}", a.op);
+            }
+        }
     }
 }

@@ -1,203 +1,84 @@
 //! Tuning for the extended collectives (gather / barrier / allgather /
-//! allreduce) — same argmin machinery as the Broadcast/Scatter tuner,
-//! over the [`crate::models::ext`] model set, with the second AOT
-//! artifact (`tuner_ext.hlo.txt`) as fast path.
+//! allreduce) — a thin driver over the same [`Tuner`] engine the core
+//! ops use. All scoring goes through [`crate::eval::Evaluator`] (the
+//! unified cost-model registry, the simulator, or the second AOT
+//! artifact via [`crate::eval::ArtifactEval`]); the sweep runs on the
+//! engine's `thread::scope` work queue, so `--jobs N` and per-cell
+//! pruning apply uniformly and `--jobs 1` vs `--jobs 8` tables are
+//! byte-identical (asserted in `rust/tests/evaluator.rs`).
+//!
+//! This module used to carry its own artifact plumbing and private
+//! `ExtStrategy`/`ExtDecisionTable` types; the extended strategies now
+//! live in [`Strategy`] (indices `Strategy::EXT_BASE..`), the ops in
+//! [`Op`], and the tables are ordinary [`DecisionTable`]s.
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::models::ext::{predict_ext, rank_ext, ExtStrategy};
+use crate::collectives::Strategy;
+use crate::eval::Evaluator;
 use crate::plogp::PLogP;
-use crate::runtime::{pad_grid_f32, ExtArtifact};
 
-/// Extended-op families, in the artifact's winner-row order.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ExtOp {
-    Gather = 0,
-    Barrier = 1,
-    AllGather = 2,
-    AllReduce = 3,
-}
+use super::decision::{DecisionTable, Op};
+use super::engine::Tuner;
 
-impl ExtOp {
-    pub const ALL: [ExtOp; 4] =
-        [ExtOp::Gather, ExtOp::Barrier, ExtOp::AllGather, ExtOp::AllReduce];
+/// The extended ops, in ext-artifact winner-row order (see [`Op::EXT`]).
+pub const EXT_OPS: [Op; 4] = Op::EXT;
 
-    pub fn family(self) -> &'static [ExtStrategy] {
-        match self {
-            ExtOp::Gather => &ExtStrategy::GATHER,
-            ExtOp::Barrier => &ExtStrategy::BARRIER,
-            ExtOp::AllGather => &ExtStrategy::ALLGATHER,
-            ExtOp::AllReduce => &ExtStrategy::ALLREDUCE,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            ExtOp::Gather => "gather",
-            ExtOp::Barrier => "barrier",
-            ExtOp::AllGather => "allgather",
-            ExtOp::AllReduce => "allreduce",
-        }
-    }
-}
-
-/// One tuned extended decision.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct ExtDecision {
-    pub strategy: ExtStrategy,
-    pub predicted: f64,
-}
-
-/// Decision table for one extended op.
-#[derive(Debug, Clone)]
-pub struct ExtDecisionTable {
-    pub op: ExtOp,
-    pub p_grid: Vec<usize>,
-    pub m_grid: Vec<u64>,
-    pub entries: Vec<ExtDecision>,
-}
-
-impl ExtDecisionTable {
-    pub fn at(&self, qi: usize, mi: usize) -> &ExtDecision {
-        &self.entries[qi * self.m_grid.len() + mi]
-    }
-
-    /// Snap-to-nearest lookup (same semantics as the core tables).
-    pub fn lookup(&self, p: usize, m: u64) -> &ExtDecision {
-        let qi = self
-            .p_grid
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, &g)| g.abs_diff(p))
-            .map(|(i, _)| i)
-            .unwrap();
-        let lm = m.max(1) as f64;
-        let mi = self
-            .m_grid
-            .iter()
-            .enumerate()
-            .min_by(|(_, &a), (_, &b)| {
-                let da = ((a as f64) / lm).ln().abs();
-                let db = ((b as f64) / lm).ln().abs();
-                da.partial_cmp(&db).unwrap()
-            })
-            .map(|(i, _)| i)
-            .unwrap();
-        self.at(qi, mi)
-    }
-}
-
-/// The extended tuner.
+/// The extended-collectives tuner: a [`Tuner`] restricted to
+/// [`EXT_OPS`]. Kept as a named façade so callers that only care about
+/// the extended family don't thread `Op` lists around.
 pub struct ExtTuner {
-    artifact: Option<ExtArtifact>,
+    inner: Tuner,
 }
 
 impl ExtTuner {
+    /// Native (pure Rust model) tuner.
     pub fn native() -> ExtTuner {
-        ExtTuner { artifact: None }
+        ExtTuner { inner: Tuner::native() }
     }
 
+    /// Load the AOT artifacts from `dir` (the ext artifact is optional;
+    /// ext ops fall back to the native models without it).
     pub fn with_artifact(dir: &Path) -> Result<ExtTuner> {
-        Ok(ExtTuner { artifact: Some(ExtArtifact::load(dir)?) })
+        Ok(ExtTuner { inner: Tuner::with_artifact(dir)? })
     }
 
-    /// Prefer the artifact; fall back to native.
+    /// Prefer the artifact; fall back to native (logging the reason).
     pub fn auto(dir: &Path) -> ExtTuner {
-        match Self::with_artifact(dir) {
-            Ok(t) => t,
-            Err(e) => {
-                log::warn!("ext artifact unavailable ({e:#}); using native models");
-                ExtTuner::native()
-            }
-        }
+        ExtTuner { inner: Tuner::auto(dir) }
+    }
+
+    /// Build on any evaluation backend.
+    pub fn with_evaluator(evaluator: Box<dyn Evaluator>) -> ExtTuner {
+        ExtTuner { inner: Tuner::with_evaluator(evaluator) }
+    }
+
+    /// Set the sweep worker count (`0` = one per core).
+    pub fn jobs(mut self, n: usize) -> ExtTuner {
+        self.inner = self.inner.jobs(n);
+        self
+    }
+
+    /// The underlying engine (shared with the core ops).
+    pub fn tuner(&self) -> &Tuner {
+        &self.inner
     }
 
     pub fn backend_name(&self) -> &'static str {
-        if self.artifact.is_some() {
-            "artifact"
-        } else {
-            "native"
-        }
+        self.inner.backend_name()
     }
 
-    /// Tune all four extended ops over the grid.
+    /// Tune all four extended ops over the grid, one [`DecisionTable`]
+    /// per [`EXT_OPS`] entry.
     pub fn tune(
         &self,
         net: &PLogP,
         p_grid: &[usize],
         m_grid: &[u64],
-    ) -> Result<Vec<ExtDecisionTable>> {
-        match &self.artifact {
-            None => Ok(self.tune_native(net, p_grid, m_grid)),
-            Some(art) => self.tune_artifact(art, net, p_grid, m_grid),
-        }
-    }
-
-    fn tune_native(
-        &self,
-        net: &PLogP,
-        p_grid: &[usize],
-        m_grid: &[u64],
-    ) -> Vec<ExtDecisionTable> {
-        ExtOp::ALL
-            .iter()
-            .map(|&op| {
-                let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
-                for &p in p_grid {
-                    for &m in m_grid {
-                        let (strategy, predicted) = rank_ext(op.family(), net, p, m)[0];
-                        entries.push(ExtDecision { strategy, predicted });
-                    }
-                }
-                ExtDecisionTable {
-                    op,
-                    p_grid: p_grid.to_vec(),
-                    m_grid: m_grid.to_vec(),
-                    entries,
-                }
-            })
-            .collect()
-    }
-
-    fn tune_artifact(
-        &self,
-        art: &ExtArtifact,
-        net: &PLogP,
-        p_grid: &[usize],
-        m_grid: &[u64],
-    ) -> Result<Vec<ExtDecisionTable>> {
-        let meta = &art.meta;
-        assert!(p_grid.len() <= meta.p_grid_len && m_grid.len() <= meta.m_grid_len);
-        let sizes: Vec<f32> = net.table.sizes().iter().map(|&x| x as f32).collect();
-        let gaps: Vec<f32> = net.table.gaps().iter().map(|&x| x as f32).collect();
-        assert_eq!(sizes.len(), meta.table_len, "gap table length mismatch");
-        let pf = pad_grid_f32(p_grid.iter().map(|&p| p as f32).collect(), meta.p_grid_len);
-        let mf = pad_grid_f32(m_grid.iter().map(|&m| m as f32).collect(), meta.m_grid_len);
-        let out = art.execute(&sizes, &gaps, net.l as f32, &pf, &mf)?;
-        Ok(ExtOp::ALL
-            .iter()
-            .map(|&op| {
-                let mut entries = Vec::with_capacity(p_grid.len() * m_grid.len());
-                for qi in 0..p_grid.len() {
-                    for mi in 0..m_grid.len() {
-                        let widx = out.winner(op as usize, qi, mi);
-                        let strategy = ExtStrategy::from_index(widx).expect("winner");
-                        entries.push(ExtDecision {
-                            strategy,
-                            predicted: out.time(widx, qi, mi) as f64,
-                        });
-                    }
-                }
-                ExtDecisionTable {
-                    op,
-                    p_grid: p_grid.to_vec(),
-                    m_grid: m_grid.to_vec(),
-                    entries,
-                }
-            })
-            .collect())
+    ) -> Result<Vec<DecisionTable>> {
+        self.inner.tune_ext(net, p_grid, m_grid)
     }
 }
 
@@ -205,26 +86,18 @@ impl ExtTuner {
 /// error when `p` exceeds the contributor-mask capacity
 /// (see [`crate::mpi::Payload::MAX_MASK_RANKS`]).
 pub fn build_ext_schedule(
-    _op: ExtOp,
-    strategy: ExtStrategy,
+    op: Op,
+    strategy: Strategy,
     p: usize,
     m: u64,
 ) -> Result<crate::mpi::CommSchedule> {
-    use crate::collectives::{composed, extended};
-    Ok(match strategy {
-        ExtStrategy::GatherFlat => composed::gather_flat(p, 0, m),
-        ExtStrategy::GatherBinomial => composed::gather_binomial(p, 0, m),
-        ExtStrategy::ReduceBinomial => composed::reduce_binomial(p, 0, m)?,
-        ExtStrategy::BarrierTree => composed::barrier_binomial(p),
-        ExtStrategy::BarrierDissemination => extended::barrier_dissemination(p),
-        ExtStrategy::AllGatherGatherBcast => composed::allgather(p, 0, m),
-        ExtStrategy::AllGatherRing => extended::allgather_ring(p, m),
-        ExtStrategy::AllGatherRecDoubling => extended::allgather_recursive_doubling(p, m),
-        ExtStrategy::AllReduceReduceBcast => composed::allreduce(p, 0, m)?,
-        ExtStrategy::AllReduceRecDoubling => {
-            extended::allreduce_recursive_doubling(p, m)?
-        }
-    })
+    ensure!(
+        op.family().contains(&strategy),
+        "{} is not a {} strategy",
+        strategy.name(),
+        op.name()
+    );
+    strategy.try_build(p, 0, m, None)
 }
 
 #[cfg(test)]
@@ -246,11 +119,13 @@ mod tests {
         let t = ExtTuner::native();
         let tables = t.tune(&net, &[4, 16, 32], &grids::log_grid(1, 1 << 18, 8)).unwrap();
         assert_eq!(tables.len(), 4);
-        for table in &tables {
+        for (table, op) in tables.iter().zip(EXT_OPS) {
+            assert_eq!(table.op, op);
             assert_eq!(table.entries.len(), 24);
             for d in &table.entries {
                 assert!(d.predicted > 0.0);
                 assert!(table.op.family().contains(&d.strategy), "{:?}", d);
+                assert!(d.segment.is_none(), "ext strategies never segment");
             }
         }
     }
@@ -260,20 +135,21 @@ mod tests {
         let net = measured();
         let t = ExtTuner::native();
         let tables = t.tune(&net, &[16, 32], &[1]).unwrap();
-        let barrier = &tables[ExtOp::Barrier as usize];
+        let barrier = &tables[1]; // EXT_OPS order: gather, barrier, ...
+        assert_eq!(barrier.op, Op::Barrier);
         for d in &barrier.entries {
-            assert_eq!(d.strategy, ExtStrategy::BarrierDissemination);
+            assert_eq!(d.strategy, Strategy::BarrierDissemination);
         }
     }
 
     #[test]
-    fn allgather_tuner_crosses_from_rec_doubling_to_ring_family() {
-        // latency-bound: rec doubling; bandwidth-bound: ring catches up.
+    fn allgather_tuner_latency_bound_picks_rec_doubling() {
         let net = measured();
         let t = ExtTuner::native();
         let tables = t.tune(&net, &[32], &[1, 1 << 20]).unwrap();
-        let ag = &tables[ExtOp::AllGather as usize];
-        assert_eq!(ag.at(0, 0).strategy, ExtStrategy::AllGatherRecDoubling);
+        let ag = &tables[2];
+        assert_eq!(ag.op, Op::AllGather);
+        assert_eq!(ag.at(0, 0).strategy, Strategy::AllGatherRecDoubling);
     }
 
     #[test]
@@ -284,8 +160,7 @@ mod tests {
         for table in &tables {
             let d = table.at(0, 0);
             let sched = build_ext_schedule(table.op, d.strategy, 8, 4096).unwrap();
-            let mut world =
-                World::new(Netsim::new(8, NetConfig::fast_ethernet_ideal()));
+            let mut world = World::new(Netsim::new(8, NetConfig::fast_ethernet_ideal()));
             let rep = world.run(&sched);
             assert!(rep.verify(&sched).is_empty(), "{}: {:?}", sched.name, rep.verify(&sched));
         }
@@ -324,5 +199,11 @@ mod tests {
         let g = &tables[0];
         let d = g.lookup(30, 900_000);
         assert!(g.op.family().contains(&d.strategy));
+    }
+
+    #[test]
+    fn build_rejects_cross_family_pairs() {
+        assert!(build_ext_schedule(Op::Barrier, Strategy::GatherFlat, 8, 64).is_err());
+        assert!(build_ext_schedule(Op::Gather, Strategy::GatherFlat, 8, 64).is_ok());
     }
 }

@@ -4,13 +4,17 @@
 //! implementation over a `(P, m)` grid — including the segment-size
 //! search for segmented strategies — and materializes
 //! [`decision::DecisionTable`]s that the collective runtime consults at
-//! call time. All scoring goes through the [`crate::eval::Evaluator`]
-//! trait:
+//! call time. One selection framework covers every collective family
+//! ([`decision::Op::ALL`]): broadcast and scatter (the paper's Tables 1
+//! and 2) and the extended ops (gather / reduce / barrier / allgather /
+//! allreduce, driven by [`ext`]). All scoring goes through the
+//! [`crate::eval::Evaluator`] trait:
 //!
 //! * **artifact** ([`crate::eval::ArtifactEval`]) — one AOT-compiled XLA
-//!   execution evaluates the entire decision tensor (all 13 strategies ×
-//!   P-grid × m-grid × segment grid) in a single call; this is the
-//!   "fast" in *Fast Tuning*.
+//!   execution evaluates the entire core decision tensor (13 strategies
+//!   × P-grid × m-grid × segment grid) in a single call, and a second
+//!   execution of the ext artifact serves all four extended ops; this is
+//!   the "fast" in *Fast Tuning*.
 //! * **native** ([`crate::eval::ModelEval`]) — the Rust model mirror,
 //!   swept in parallel across worker threads (`--jobs N`) with per-cell
 //!   pruning; used when no artifact is present and for cross-validation

@@ -66,11 +66,11 @@ pub fn from_str(text: &str) -> Result<DecisionTable> {
         let mut f = line.split('\t');
         match f.next() {
             Some("op") => {
-                op = Some(match f.next() {
-                    Some("bcast") => Op::Bcast,
-                    Some("scatter") => Op::Scatter,
-                    other => bail!("line {}: bad op {other:?}", ln + 2),
-                })
+                let tok = f.next().context("op name")?;
+                op = Some(
+                    Op::from_name(tok)
+                        .with_context(|| format!("line {}: bad op '{tok}'", ln + 2))?,
+                );
             }
             Some("p_grid") => {
                 p_grid = f
@@ -209,6 +209,21 @@ mod tests {
         // drop one entry line -> incomplete
         let truncated: Vec<&str> = text.lines().filter(|l| !l.contains("entry\t0\t0")).collect();
         assert!(from_str(&truncated.join("\n")).is_err());
+    }
+
+    #[test]
+    fn ext_table_roundtrips() {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+        let net = plogp::bench::measure(&mut sim);
+        for table in Tuner::native().tune_ext(&net, &[2, 8, 24], &[1, 1024, 1 << 20]).unwrap()
+        {
+            let back = from_str(&to_string(&table)).unwrap();
+            assert_eq!(back.op, table.op);
+            for (a, b) in table.entries.iter().zip(&back.entries) {
+                assert_eq!(a.strategy, b.strategy);
+                assert_eq!(a.segment, None);
+            }
+        }
     }
 
     #[test]

@@ -139,6 +139,45 @@ fn coalesced_clients_share_the_same_arc() {
     assert_eq!(coord.tune_count(), 1);
 }
 
+#[test]
+fn concurrent_ext_cold_misses_coalesce_into_one_tune() {
+    // same contract as the bcast/scatter path: ≥8 concurrent cold
+    // clients asking for an *extended* table trigger exactly one tuner
+    // run, and that run serves every op family afterwards for free
+    let coord = Coordinator::new(small_config());
+    let net = measured(NetConfig::fast_ethernet_icluster1());
+    coord.register("cold-ext", 24, net);
+
+    const CLIENTS: usize = 10;
+    let gate = Barrier::new(CLIENTS);
+    let served = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for i in 0..CLIENTS {
+            let coord = &coord;
+            let gate = &gate;
+            let served = &served;
+            s.spawn(move || {
+                gate.wait(); // all clients hit the cold signature together
+                let op = [Op::AllReduce, Op::Gather, Op::Barrier, Op::AllGather]
+                    [i % 4];
+                let d = coord.decision(op, "cold-ext", 24, 65536).expect("registered");
+                assert!(op.family().contains(&d.strategy), "{d:?}");
+                assert!(d.predicted > 0.0);
+                served.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(served.load(Ordering::Relaxed), CLIENTS as u64);
+    assert_eq!(
+        coord.tune_count(),
+        1,
+        "{CLIENTS} concurrent ext cold clients must coalesce into one tuner run"
+    );
+    // the core ops ride on the same cached table set
+    let _ = coord.decision(Op::Bcast, "cold-ext", 24, 65536).unwrap();
+    assert_eq!(coord.tune_count(), 1);
+}
+
 // ---- persist → warm-start roundtrip ------------------------------------
 
 #[test]
@@ -152,6 +191,7 @@ fn persist_then_warm_start_roundtrip_without_retuning() {
     first.register("ge", 16, measured(NetConfig::gigabit_ethernet()));
     let d_fe = first.decision(Op::Bcast, "fe", 24, 1 << 18).unwrap();
     let d_ge = first.decision(Op::Scatter, "ge", 16, 4096).unwrap();
+    let d_ar = first.decision(Op::AllReduce, "fe", 24, 1 << 18).unwrap();
     assert_eq!(first.tune_count(), 2);
     let saved = first.persist_to(&dir).unwrap();
     assert_eq!(saved, 2);
@@ -162,10 +202,12 @@ fn persist_then_warm_start_roundtrip_without_retuning() {
     assert_eq!(loaded, 2);
     let d_fe2 = second.decision(Op::Bcast, "fe", 24, 1 << 18).unwrap();
     let d_ge2 = second.decision(Op::Scatter, "ge", 16, 4096).unwrap();
+    let d_ar2 = second.decision(Op::AllReduce, "fe", 24, 1 << 18).unwrap();
     assert_eq!(second.tune_count(), 0, "warm-started tables must not re-tune");
     assert_eq!(d_fe.strategy, d_fe2.strategy);
     assert_eq!(d_fe.segment, d_fe2.segment);
     assert_eq!(d_ge.strategy, d_ge2.strategy);
+    assert_eq!(d_ar.strategy, d_ar2.strategy, "ext tables survive the roundtrip");
     assert!((d_fe.predicted - d_fe2.predicted).abs() <= 1e-8 * d_fe.predicted.abs());
 
     // registry survives too, including the representative probe pair

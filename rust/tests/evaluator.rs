@@ -71,6 +71,80 @@ fn jobs_1_and_jobs_8_tables_are_byte_identical() {
     assert_eq!(persist::to_string(&s1), persist::to_string(&s8));
 }
 
+/// Acceptance criterion for the ext port: `tune --op allreduce --jobs 1`
+/// and `--jobs 8` produce byte-identical decision tables — and the same
+/// holds for every other extended op.
+#[test]
+fn ext_jobs_1_and_jobs_8_tables_are_byte_identical() {
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    let net = plogp::bench::measure(&mut sim);
+    let p_grid = vec![2usize, 8, 24, 48];
+    let m_grid = grids::log_grid(1, 1 << 20, 16);
+    for op in Op::EXT {
+        let t1 = Tuner::native().jobs(1).tune_op(op, &net, &p_grid, &m_grid).unwrap();
+        let t8 = Tuner::native().jobs(8).tune_op(op, &net, &p_grid, &m_grid).unwrap();
+        assert_eq!(
+            persist::to_string(&t1),
+            persist::to_string(&t8),
+            "{} tables must not depend on the worker count",
+            op.name()
+        );
+    }
+}
+
+/// Cross-evaluator argmin agreement on the extended ops: the analytic
+/// models and the simulator pick the same winner wherever the empirical
+/// margin is meaningful, across the three hardware presets.
+#[test]
+fn model_and_sim_agree_on_ext_argmin() {
+    let opts = ValidateOptions::default();
+    for cfg in [
+        NetConfig::fast_ethernet_ideal(),
+        NetConfig::fast_ethernet_icluster1(),
+        NetConfig::gigabit_ethernet(),
+    ] {
+        let sim = SimEval::new(cfg.clone());
+        let net = sim.measure_net();
+        for op in Op::EXT {
+            let rep = cross_validate(
+                &sim,
+                &ModelEval,
+                &net,
+                op.family(),
+                &[4, 16],
+                &[1024, 65536, 1 << 20],
+                &opts,
+            );
+            assert_eq!(rep.points, 6, "{}", op.name());
+            // where the top-two empirical margin is meaningful the model
+            // must pick right at least 2/3 of the time, and the chosen
+            // strategy is never catastrophically worse than the best
+            assert!(
+                3 * rep.correct_meaningful >= 2 * rep.meaningful,
+                "{} on {cfg:?}: {rep:?}",
+                op.name()
+            );
+            assert!(rep.max_regret < 1.0, "{} on {cfg:?}: {rep:?}", op.name());
+        }
+    }
+}
+
+/// Deterministic ext ground truth: an evaluator cross-validated against
+/// itself is perfect on every extended family.
+#[test]
+fn ext_sim_validates_perfectly_against_itself() {
+    let cfg = NetConfig::fast_ethernet_ideal();
+    let sim = SimEval::new(cfg);
+    let net = sim.measure_net();
+    let opts = ValidateOptions::default();
+    for op in Op::EXT {
+        let rep = cross_validate(&sim, &sim, &net, op.family(), &[4, 16], &[1024, 1 << 18], &opts);
+        assert_eq!(rep.correct, rep.points, "{}", op.name());
+        assert_eq!(rep.max_regret, 0.0);
+        assert_eq!(rep.mean_rel_err, 0.0);
+    }
+}
+
 /// The pruned per-cell argmin must match the exhaustive ranking exactly,
 /// including on adversarial (non-monotone) gap tables where the lower
 /// bound is weakest.

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Perf regression gate for the committed BENCH_*.json baselines.
+
+Compares a freshly-run bench JSON against the committed baseline,
+result by result (matched on ``name``), and fails when any fresh
+``mean_s`` exceeds the baseline's by more than ``--tolerance``
+(default 25%).
+
+The benches overwrite their JSON in place, so CI stashes the committed
+file first:
+
+    cp BENCH_tuner.json /tmp/baseline.json
+    cargo bench --bench tuner_sweep
+    tools/check_perf.py /tmp/baseline.json BENCH_tuner.json
+
+Baseline entries whose ``mean_s`` is null (the original "pending"
+placeholders) are skipped with a note; the gate fails outright if
+*nothing* was comparable, so an accidentally emptied baseline cannot
+silently disable the gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("fresh", help="freshly-run BENCH_*.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed relative regression (0.25 = fail at >25%% over baseline)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    name = fresh.get("benchmark", args.fresh)
+    base_by_name = {r.get("name"): r for r in base.get("results", [])}
+
+    failures = []
+    compared = 0
+    print(f"== perf gate: {name} (tolerance {args.tolerance:.0%}) ==")
+    for r in fresh.get("results", []):
+        rname = r.get("name")
+        b = base_by_name.get(rname)
+        if b is None:
+            print(f"  {rname}: NEW (no baseline entry, not gated)")
+            continue
+        b_mean = b.get("mean_s")
+        f_mean = r.get("mean_s")
+        if b_mean is None:
+            print(f"  {rname}: baseline pending, not gated")
+            continue
+        if f_mean is None:
+            failures.append(f"{rname}: fresh run produced no mean_s")
+            continue
+        compared += 1
+        limit = b_mean * (1.0 + args.tolerance)
+        ratio = f_mean / b_mean if b_mean > 0 else float("inf")
+        verdict = "ok" if f_mean <= limit else "REGRESSION"
+        print(
+            f"  {rname}: fresh {f_mean:.6g}s vs baseline {b_mean:.6g}s "
+            f"({ratio:.2f}x, limit {limit:.6g}s) -> {verdict}"
+        )
+        if f_mean > limit:
+            failures.append(
+                f"{rname}: {f_mean:.6g}s exceeds baseline {b_mean:.6g}s "
+                f"by more than {args.tolerance:.0%}"
+            )
+
+    if compared == 0:
+        failures.append("no comparable results: the baseline gates nothing")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+    print(f"perf gate passed ({compared} result(s) within tolerance)")
+
+
+if __name__ == "__main__":
+    main()
