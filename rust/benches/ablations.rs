@@ -56,11 +56,18 @@ fn main() {
     ]);
     let dense = {
         let mut s = Netsim::new(2, cfg.clone());
-        plogp::bench::measure_with(&mut s, &BenchOptions { reps: 7, size_grid: default_size_grid(128) })
+        let opts = BenchOptions { reps: 7, size_grid: default_size_grid(128) };
+        plogp::bench::measure_with(&mut s, &opts)
     };
     let truth_g = dense.gap(100_000.0);
-    let truth_t =
-        models::best_segment(Strategy::BcastSegChain, &dense, 24, 1 << 20, &grids::default_s_grid()).0;
+    let truth_t = models::best_segment(
+        Strategy::BcastSegChain,
+        &dense,
+        24,
+        1 << 20,
+        &grids::default_s_grid(),
+    )
+    .0;
     for n in [4usize, 8, 16, 32, 64] {
         let mut s = Netsim::new(2, cfg.clone());
         let net = plogp::bench::measure_with(

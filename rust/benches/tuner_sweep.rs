@@ -1,11 +1,16 @@
 //! Bench: the parallel tuning sweep — sequential (`--jobs 1`) vs
 //! parallel (one worker per core) native-model tune of the full default
-//! grid, plus the determinism contract (byte-identical tables). Emits
-//! `BENCH_tuner.json` at the repository root so the perf trajectory
-//! tracks the parallel engine's speedup PR over PR.
+//! grid, plus the determinism contract (byte-identical tables) and the
+//! pruning-effectiveness counters (model invocations per cell, pruned
+//! searches, warm-start hit rate — deterministic, unlike wall time).
+//! Emits `BENCH_tuner.json` at the repository root so the perf
+//! trajectory tracks both the parallel speedup and the eval-count
+//! reduction PR over PR.
 
 use std::path::PathBuf;
 
+use collective_tuner::collectives::Strategy;
+use collective_tuner::eval::exhaustive_invocations;
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp;
 use collective_tuner::tuner::{grids, persist, Tuner};
@@ -17,6 +22,13 @@ fn json_entry(label: &str, r: &BenchResult) -> String {
         "    {{\"name\": \"{label}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
          \"p95_s\": {:e}, \"iters\": {}}}",
         s.mean, s.p50, s.p95, r.iters
+    )
+}
+
+fn json_metric(name: &str, value: f64, larger_is_better: bool) -> String {
+    format!(
+        "    {{\"name\": \"{name}\", \"value\": {value}, \
+         \"larger_is_better\": {larger_is_better}}}"
     )
 }
 
@@ -50,6 +62,22 @@ fn main() {
     let speedup = r_seq.summary.p50 / r_par.summary.p50.max(1e-12);
     println!("\nspeedup: {speedup:.2}x with {jobs} worker(s); tables identical: {identical}");
 
+    // pruning effectiveness on deterministic counters: one clean
+    // sequential tune of both default ops
+    let stats_tuner = Tuner::native().jobs(1);
+    let _ = stats_tuner.tune(&net, &p_grid, &m_grid).unwrap();
+    let counts = stats_tuner.stats();
+    let families = [&Strategy::BCAST[..], &Strategy::SCATTER[..]];
+    let exhaustive = exhaustive_invocations(&families, points as u64, stats_tuner.s_grid.len());
+    let reduction = counts.reduction_vs(exhaustive);
+    println!(
+        "pruning: {} model invocations vs {exhaustive} exhaustive ({reduction:.2}x fewer), \
+         {} searches pruned, warm hit rate {:.2}",
+        counts.model_invocations,
+        counts.seg_searches_pruned,
+        counts.warm_hit_rate()
+    );
+
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("package sits one level below the repo root")
@@ -58,10 +86,15 @@ fn main() {
         "{{\n  \"benchmark\": \"tuner_sweep\",\n  \"description\": \"sequential vs parallel \
          native tuning sweep of the default {points}-point grid (both ops)\",\n  \"unit\": \
          \"seconds per full tune\",\n  \"jobs_parallel\": {jobs},\n  \"results\": [\n{},\n{}\n  \
-         ],\n  \"speedup_parallel_over_sequential\": {speedup:.2},\n  \"tables_identical\": \
-         {identical}\n}}\n",
+         ],\n  \"metrics\": [\n{},\n{},\n{}\n  ],\n  \
+         \"speedup_parallel_over_sequential\": {speedup:.2},\n  \"tables_identical\": \
+         {identical},\n  \"eval\": {}\n}}\n",
         json_entry("sequential_jobs_1", &r_seq),
         json_entry("parallel_jobs_auto", &r_par),
+        json_metric("model_invocations_per_tune", counts.model_invocations as f64, false),
+        json_metric("eval_reduction_vs_exhaustive", reduction, true),
+        json_metric("warm_start_hit_rate", counts.warm_hit_rate(), true),
+        counts.to_json(),
     );
     std::fs::write(&out, json).expect("writing BENCH_tuner.json");
     println!("wrote {}", out.display());

@@ -26,6 +26,16 @@ fn main() {
     let r_native = bench("native models: full bcast+scatter tune", || {
         std::hint::black_box(native.tune(&net, &p_grid, &m_grid).unwrap());
     });
+    // the pruned sweep's per-tune cost in deterministic counters
+    native.reset_stats();
+    let _ = native.tune(&net, &p_grid, &m_grid).unwrap();
+    let counts = native.stats();
+    println!(
+        "  ({} model invocations / tune, {:.1} per cell, warm hit rate {:.2})",
+        counts.model_invocations,
+        counts.invocations_per_cell(),
+        counts.warm_hit_rate()
+    );
 
     let r_artifact = match Tuner::with_artifact(&TunerArtifact::default_dir()) {
         Ok(tuner) => Some(bench("XLA artifact: full bcast+scatter tune", || {

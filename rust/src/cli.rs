@@ -133,6 +133,8 @@ COMMANDS:
                   --procs 2,8,24,48   --backend auto|native|artifact
                   --jobs N            (parallel sweep workers; 0 = all cores)
                   --save results/     (persist tables as TSV)
+                  --stats             (sweep counters: model invocations,
+                                       pruned searches, warm-start hits)
   run           execute one collective on the simulated cluster
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --strategy <name|auto>  --procs 24  --bytes 64k  --segment 8k
@@ -150,11 +152,13 @@ COMMANDS:
                   --shards 8     --capacity 32     (decision-table cache)
                   --jobs N       (tuner sweep workers; 0 = all cores)
                   --backend auto|native|artifact   --save dir/  --warm dir/
+                  --stats        (one JSON blob: cache hit/miss + sweep counters)
   query         one-shot coordinator query (tunes on first use, cached after)
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --procs 24  --bytes 64k
                   --cluster default   --nodes 50  --preset icluster1
                   --save dir/  --warm dir/        (persist / warm-start tables)
+                  --stats        (one JSON blob: cache hit/miss + sweep counters)
   info          show artifact metadata and presets
   help          this text
 

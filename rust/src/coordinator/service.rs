@@ -23,6 +23,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
+use crate::eval::EvalCounts;
 use crate::netsim::{Netsim, NodeId};
 use crate::plogp::{bench, GapTable, PLogP};
 use crate::topology::GridSpec;
@@ -128,6 +129,10 @@ pub struct CoordinatorStats {
     pub tunes: u64,
     /// Clusters in the registry.
     pub registered: usize,
+    /// The tuner's cumulative sweep counters across those runs (model
+    /// invocations, pruned searches, warm-start hits — see
+    /// [`EvalCounts`]).
+    pub eval: EvalCounts,
 }
 
 /// The L3 tuning coordinator. Cheap to share: every method takes
@@ -322,10 +327,14 @@ impl Coordinator {
             Ok(t) => t,
             Err(e) => {
                 log::warn!("artifact tuner failed ({e:#}); re-tuning with native models");
-                Tuner::native()
-                    .jobs(self.cfg.jobs)
+                let fallback = Tuner::native().jobs(self.cfg.jobs);
+                let tables = fallback
                     .tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid)
-                    .expect("native tuner is infallible")
+                    .expect("native tuner is infallible");
+                // keep the service's cumulative eval counters honest:
+                // this run's sweep work happened on the fallback tuner
+                self.tuner.merge_stats(&fallback.stats());
+                tables
             }
         };
         TableSet::new(tables)
@@ -352,12 +361,34 @@ impl Coordinator {
             cache: self.cache.stats(),
             tunes: self.tunes.load(Ordering::Relaxed),
             registered: self.registry.read().unwrap().len(),
+            eval: self.tuner.stats(),
         }
     }
 
     /// Actual tuner executions so far.
     pub fn tune_count(&self) -> u64 {
         self.tunes.load(Ordering::Relaxed)
+    }
+
+    /// Every service counter in one JSON blob — the cache hit/miss
+    /// path *and* the per-tune sweep counters — so a running `serve`
+    /// instance (or `query --stats`) reports its whole cost picture in
+    /// one machine-readable line.
+    pub fn stats_json(&self) -> String {
+        let st = self.stats();
+        format!(
+            "{{\"backend\":\"{}\",\"registered\":{},\"tunes\":{},\
+             \"cache\":{{\"entries\":{},\"hits\":{},\"misses\":{},\"evictions\":{}}},\
+             \"eval\":{}}}",
+            self.backend_name(),
+            st.registered,
+            st.tunes,
+            st.cache.entries,
+            st.cache.hits,
+            st.cache.misses,
+            st.cache.evictions,
+            st.eval.to_json()
+        )
     }
 
     // ---- persistence ---------------------------------------------------
@@ -555,6 +586,23 @@ mod tests {
         let _ = c.tables("fe").unwrap();
         let _ = c.tables("ge").unwrap();
         assert_eq!(c.tune_count(), 2);
+    }
+
+    #[test]
+    fn stats_json_reports_cache_and_eval_counters_together() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        c.decision(Op::Bcast, "a", 8, 4096).unwrap();
+        c.decision(Op::Bcast, "a", 8, 4096).unwrap();
+        let json = c.stats_json();
+        assert!(json.contains("\"backend\":\"native\""), "{json}");
+        assert!(json.contains("\"tunes\":1"), "{json}");
+        assert!(json.contains("\"hits\":"), "{json}");
+        assert!(json.contains("\"model_invocations\":"), "{json}");
+        // the native sweep actually ran: the eval counters are live
+        let st = c.stats();
+        assert!(st.eval.cells > 0, "{:?}", st.eval);
+        assert!(st.eval.model_invocations > 0);
     }
 
     #[test]

@@ -26,20 +26,51 @@
 //! allgather / allreduce) score through the same three backends — the
 //! unified [`crate::models::COST_MODELS`] registry, schedule-building
 //! simulation, and the second AOT artifact (`tuner_ext.hlo.txt`).
+//!
+//! The sweep hot path is instrumented and pruned: the engine threads a
+//! [`CellCtx`] (warm-start hint + per-tune [`crate::plogp::GapCache`] +
+//! shared [`EvalStats`] counters) through [`Evaluator::best_in`], and
+//! [`ModelEval`] uses the m-aware [`crate::models::LOWER_BOUNDS`] to
+//! skip strategies and whole segment-grid searches that provably cannot
+//! win — while producing tables byte-identical to the exhaustive
+//! argmin (`rust/tests/evaluator.rs`).
 
 mod artifact;
 mod model;
 mod sim;
+mod stats;
 
 pub use artifact::ArtifactEval;
 pub use model::ModelEval;
 pub use sim::SimEval;
+pub use stats::{exhaustive_invocations, exhaustive_invocations_per_cell, EvalCounts, EvalStats};
 
 use anyhow::Result;
 
 use crate::collectives::Strategy;
-use crate::plogp::PLogP;
+use crate::plogp::{GapCache, PLogP};
 use crate::tuner::decision::{Decision, Op};
+
+/// Optional per-cell sweep context the tuning engine threads through
+/// [`Evaluator::best_in`]: a warm-start hint (the winning strategy of
+/// an adjacent cell — adjacent `(P, m)` cells almost always share an
+/// argmin, so scoring the hint first makes the pruning threshold tight
+/// before the family scan begins), the per-tune [`GapCache`], and the
+/// shared [`EvalStats`] counters. Everything is optional —
+/// `CellCtx::default()` makes [`Evaluator::best_in`] equivalent to
+/// [`Evaluator::best`] — and none of it may change the result: backends
+/// use the context only to *order and prune* the search, never to alter
+/// the argmin (exactness is asserted in `rust/tests/evaluator.rs`).
+#[derive(Clone, Copy, Default)]
+pub struct CellCtx<'a> {
+    /// An adjacent cell's winning strategy, scored first when it
+    /// belongs to the op family being tuned.
+    pub hint: Option<Strategy>,
+    /// Pre-interpolated gaps + bound statistics for this tune's grids.
+    pub cache: Option<&'a GapCache>,
+    /// Shared sweep counters (one flush per cell).
+    pub stats: Option<&'a EvalStats>,
+}
 
 /// A way to score collective-communication strategies on one network.
 ///
@@ -128,6 +159,24 @@ pub trait Evaluator: Send + Sync {
         let ranked = self.rank(op.family(), net, p, m, s_grid);
         let (strategy, predicted, segment) = ranked[0];
         Decision { strategy, segment, predicted }
+    }
+
+    /// [`Evaluator::best`] with sweep context: the engine's per-cell
+    /// entry point. The context is advisory — the returned decision
+    /// must be identical to [`Evaluator::best`] for every hint and
+    /// cache state. The default ignores it; [`ModelEval`] overrides
+    /// with the warm-started, bound-pruned, gap-cached search.
+    fn best_in(
+        &self,
+        op: Op,
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+        ctx: &CellCtx<'_>,
+    ) -> Decision {
+        let _ = ctx;
+        self.best(op, net, p, m, s_grid)
     }
 
     /// Batched whole-grid evaluation: the best [`Decision`] for every

@@ -1,13 +1,25 @@
 //! [`ModelEval`] — the analytic backend: Tables 1 and 2 as closed-form
 //! pLogP cost models, via the strategy-indexed registry in
 //! [`crate::models`].
+//!
+//! This is the sweep's hot backend, so [`Evaluator::best_in`] carries
+//! the whole prune-and-warm-start pipeline: the adjacent cell's winner
+//! is scored first, every other strategy is screened by its m-aware
+//! [`crate::models::LOWER_BOUNDS`] entry (in ascending-bound order, so
+//! the incumbent is tightest when the expensive candidates are
+//! screened), surviving segment searches read their gaps from the
+//! per-tune [`crate::plogp::GapCache`] and skip candidates a
+//! per-candidate `k·gap_min` bound already rules out. None of that may
+//! change the argmin: every skip requires a *strictly* losing bound
+//! (plus [`crate::models::PRUNE_MARGIN`]), so the produced tables are
+//! byte-identical to the exhaustive ranking.
 
 use crate::collectives::Strategy;
-use crate::models;
-use crate::plogp::PLogP;
+use crate::models::{self, BoundInputs, CostInputs};
+use crate::plogp::{CachedRow, GapCache, PLogP};
 use crate::tuner::decision::{Decision, Op};
 
-use super::Evaluator;
+use super::{CellCtx, EvalCounts, Evaluator};
 
 /// The native model evaluator. Stateless and free to construct; the
 /// tuner's parallel sweep shares one across all workers.
@@ -17,6 +29,104 @@ pub struct ModelEval;
 impl ModelEval {
     pub fn new() -> ModelEval {
         ModelEval
+    }
+}
+
+/// One cell's evaluation state: the `(P, m)` point, the optional cache
+/// row, and locally-accumulated counters (flushed to the shared
+/// [`super::EvalStats`] once per cell).
+struct Cell<'a> {
+    net: &'a PLogP,
+    p: usize,
+    m: u64,
+    s_grid: &'a [u64],
+    cached: Option<(&'a GapCache, &'a CachedRow)>,
+    n: EvalCounts,
+}
+
+impl Cell<'_> {
+    /// One unsegmented model evaluation (bit-identical to
+    /// [`models::predict`] with `seg = None`).
+    fn predict_unseg(&mut self, strategy: Strategy) -> f64 {
+        self.n.model_invocations += 1;
+        match self.cached {
+            Some((c, r)) => {
+                let x =
+                    CostInputs::from_parts(self.net, self.p, self.m, self.m, r.g_m, r.g_m, c.rdv());
+                models::cost_fn(strategy)(&x)
+            }
+            None => models::predict(strategy, self.net, self.p, self.m, None),
+        }
+    }
+
+    /// Mirror of [`models::best_segment`] with two exact skips: grid
+    /// candidates that clamp onto the already-seeded `s = m` point
+    /// (bit-identical value, so the strict-`<` argmin cannot change),
+    /// and candidates whose `k`-scaled min-gap bound already loses to
+    /// the search incumbent (strictly worse, so they cannot win or
+    /// tie). Gaps come from the cache when one is attached.
+    fn best_segment(&mut self, strategy: Strategy, bi: &BoundInputs) -> (f64, u64) {
+        let mf = self.m as f64;
+        // `s = m` degenerates to the unsegmented model (`CostInputs`
+        // clamps `seg` to `m` either way), so the seed IS the
+        // unsegmented evaluation
+        let mut best = (self.predict_unseg(strategy), self.m);
+        for (i, &s) in self.s_grid.iter().enumerate() {
+            let sc = s.clamp(1, self.m);
+            if sc == self.m {
+                // duplicates the seed candidate bit-for-bit
+                self.n.seg_points_skipped += 1;
+                continue;
+            }
+            let k = (mf / sc as f64).ceil();
+            if models::prunes(candidate_lower_bound(strategy, bi, k), best.0) {
+                self.n.seg_points_skipped += 1;
+                continue;
+            }
+            self.n.model_invocations += 1;
+            let t = match self.cached {
+                Some((c, r)) => {
+                    let g_s = if sc == s {
+                        c.gap_at_segment(i)
+                    } else {
+                        self.net.gap(sc as f64)
+                    };
+                    let x =
+                        CostInputs::from_parts(self.net, self.p, self.m, sc, r.g_m, g_s, c.rdv());
+                    models::cost_fn(strategy)(&x)
+                }
+                None => models::predict(strategy, self.net, self.p, self.m, Some(sc)),
+            };
+            if t < best.0 {
+                best = (t, sc);
+            }
+        }
+        best
+    }
+
+    /// Score one strategy fully (segment search for segmented ones).
+    fn eval(&mut self, strategy: Strategy, bi: &BoundInputs) -> (f64, Option<u64>) {
+        if strategy.is_segmented() {
+            let (t, seg) = self.best_segment(strategy, bi);
+            (t, Some(seg))
+        } else {
+            (self.predict_unseg(strategy), None)
+        }
+    }
+}
+
+/// Per-candidate lower bound of a segmented strategy at segment count
+/// `k`: every model term scales either with `k·g(s) >= k·gap_min` or
+/// with `g(s) >= gap_min`, and `k` is known without interpolating a
+/// single gap — so small-segment candidates (huge `k`) are skipped for
+/// the price of one multiply.
+fn candidate_lower_bound(strategy: Strategy, b: &BoundInputs, k: f64) -> f64 {
+    match strategy {
+        Strategy::BcastSegFlat => (b.p - 1.0) * k * b.gap_min + b.l,
+        // (P-1)(g+L) + (k-1) g = (P+k-2) g + (P-1) L, coefficient >= 0
+        Strategy::BcastSegChain => (b.p + k - 2.0) * b.gap_min + (b.p - 1.0) * b.l,
+        Strategy::BcastSegBinomial => b.fl * k * b.gap_min + b.ce * b.l,
+        _ => f64::NEG_INFINITY,
     }
 }
 
@@ -38,8 +148,8 @@ impl Evaluator for ModelEval {
         models::predict(strategy, net, p, m, seg)
     }
 
-    /// Delegated to [`models::best_segment`] so the pruned [`Self::best`]
-    /// (which uses the same function) can never drift from `rank()[0]`.
+    /// Delegated to [`models::best_segment`] so the pruned
+    /// [`Self::best_in`] can never drift from `rank()[0]`.
     fn tune_segment(
         &self,
         strategy: Strategy,
@@ -63,38 +173,125 @@ impl Evaluator for ModelEval {
         models::rank_strategies(family, net, p, m, s_grid)
     }
 
-    /// Argmin with early pruning: a segmented strategy whose
-    /// segment-size-independent lower bound already loses to the best
-    /// unpruned candidate skips its whole segment-grid search. Exact
-    /// ties are never pruned (strict `>`), so the winner is identical to
-    /// `rank(..)[0]` — first in family order among the minima.
+    /// The context-free pruned argmin (still bound-pruned — just
+    /// without a warm-start hint or gap cache).
     fn best(&self, op: Op, net: &PLogP, p: usize, m: u64, s_grid: &[u64]) -> Decision {
-        let mut best: Option<Decision> = None;
-        for &s in op.family() {
-            if s.is_segmented() {
-                if let Some(b) = &best {
-                    if models::segmented_lower_bound(s, net, p) > b.predicted {
-                        continue;
-                    }
+        self.best_in(op, net, p, m, s_grid, &CellCtx::default())
+    }
+
+    /// The warm-started, bound-pruned, gap-cached argmin. Exactness
+    /// argument: a strategy (or segment candidate) is skipped only when
+    /// its lower bound strictly exceeds a cost some other candidate
+    /// *achieved* — so it can neither win nor tie — and every scored
+    /// value is computed with arithmetic bit-identical to the
+    /// exhaustive path. The final selection takes the minimum over the
+    /// scored strategies with earliest-family-index tie-breaking, which
+    /// is exactly `rank(..)[0]`.
+    fn best_in(
+        &self,
+        op: Op,
+        net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+        ctx: &CellCtx<'_>,
+    ) -> Decision {
+        let family = op.family();
+        let cached = ctx
+            .cache
+            .filter(|c| c.covers(s_grid))
+            .and_then(|c| c.row(m).map(|r| (c, r)));
+        let mut cell = Cell {
+            net,
+            p,
+            m,
+            s_grid,
+            cached,
+            n: EvalCounts { cells: 1, ..EvalCounts::default() },
+        };
+        let bi = match cell.cached {
+            Some((c, r)) => BoundInputs::from_stats(p, m, c.l(), c.g1(), r.range, c.gap_floor()),
+            None => BoundInputs::new(net, p, m),
+        };
+
+        // Scored strategies, indexed in family order.
+        let mut results: Vec<Option<(f64, Option<u64>)>> = vec![None; family.len()];
+        // The best cost *achieved* so far — the pruning threshold.
+        let mut threshold = f64::INFINITY;
+
+        // 1. Warm start: score the adjacent cell's winner first so the
+        //    threshold is tight before anything else is screened.
+        let hint_idx = ctx.hint.and_then(|h| family.iter().position(|&s| s == h));
+        if let Some(idx) = hint_idx {
+            let r = cell.eval(family[idx], &bi);
+            threshold = r.0;
+            results[idx] = Some(r);
+        }
+
+        // 2. Screen every remaining strategy by its lower bound, in
+        //    ascending-bound order: likely winners are scored first, so
+        //    the expensive losers face the tightest threshold.
+        let mut order: Vec<(f64, usize)> = family
+            .iter()
+            .enumerate()
+            .filter(|(idx, _)| results[*idx].is_none())
+            .map(|(idx, &s)| {
+                cell.n.bound_evals += 1;
+                (models::lower_bound(s, &bi), idx)
+            })
+            .collect();
+        order.sort_by(|a, b| a.partial_cmp(b).expect("bounds are finite"));
+        for (lb, idx) in order {
+            let s = family[idx];
+            if models::prunes(lb, threshold) {
+                if s.is_segmented() {
+                    cell.n.seg_searches_pruned += 1;
+                    cell.n.seg_points_skipped += s_grid.len() as u64 + 1;
+                } else {
+                    cell.n.strategies_pruned += 1;
                 }
-                let (t, seg) = models::best_segment(s, net, p, m, s_grid);
-                if best.as_ref().map_or(true, |b| t < b.predicted) {
-                    best = Some(Decision { strategy: s, segment: Some(seg), predicted: t });
-                }
-            } else {
-                let t = models::predict(s, net, p, m, None);
-                if best.as_ref().map_or(true, |b| t < b.predicted) {
-                    best = Some(Decision { strategy: s, segment: None, predicted: t });
+                continue;
+            }
+            let r = cell.eval(s, &bi);
+            if r.0 < threshold {
+                threshold = r.0;
+            }
+            results[idx] = Some(r);
+        }
+
+        // 3. Argmin over the scored strategies, earliest family index
+        //    on exact ties — identical to `rank(..)[0]`.
+        let mut win: Option<(usize, (f64, Option<u64>))> = None;
+        for (idx, r) in results.iter().enumerate() {
+            if let Some(r) = *r {
+                let better = match win {
+                    None => true,
+                    Some((_, b)) => r.0 < b.0,
+                };
+                if better {
+                    win = Some((idx, r));
                 }
             }
         }
-        best.expect("op families are non-empty")
+        let (idx, (t, seg)) = win.expect("op families are non-empty and ties are never pruned");
+        if hint_idx.is_some() {
+            if hint_idx == Some(idx) {
+                cell.n.warm_hits += 1;
+            } else {
+                cell.n.warm_misses += 1;
+            }
+        }
+        if let Some(stats) = ctx.stats {
+            stats.add(&cell.n);
+        }
+        Decision { strategy: family[idx], segment: seg, predicted: t }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::EvalStats;
     use crate::netsim::{NetConfig, Netsim};
     use crate::plogp;
 
@@ -132,5 +329,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn best_in_is_hint_and_cache_independent() {
+        let net = measured();
+        let s_grid = crate::tuner::grids::default_s_grid();
+        let m_grid = [64u64, 8192, 1 << 20];
+        let cache = GapCache::new(&net, &m_grid, &s_grid);
+        let stats = EvalStats::new();
+        for op in Op::ALL {
+            for p in [2usize, 24, 48] {
+                for m in m_grid {
+                    let bare = ModelEval.best(op, &net, p, m, &s_grid);
+                    // every hint, with and without the cache
+                    for hint in op.family() {
+                        for cache_ref in [None, Some(&cache)] {
+                            let ctx = CellCtx {
+                                hint: Some(*hint),
+                                cache: cache_ref,
+                                stats: Some(&stats),
+                            };
+                            let d = ModelEval.best_in(op, &net, p, m, &s_grid, &ctx);
+                            assert_eq!(d.strategy, bare.strategy, "{op:?} P={p} m={m} {hint:?}");
+                            assert_eq!(d.predicted, bare.predicted);
+                            assert_eq!(d.segment, bare.segment);
+                        }
+                    }
+                    // a hint from the wrong family is ignored
+                    let foreign = if op == Op::Bcast {
+                        Strategy::ScatterFlat
+                    } else {
+                        Strategy::BcastFlat
+                    };
+                    let ctx = CellCtx { hint: Some(foreign), cache: Some(&cache), stats: None };
+                    let d = ModelEval.best_in(op, &net, p, m, &s_grid, &ctx);
+                    assert_eq!(d.strategy, bare.strategy);
+                }
+            }
+        }
+        let counts = stats.snapshot();
+        assert!(counts.cells > 0 && counts.model_invocations > 0);
+        assert_eq!(counts.warm_hits + counts.warm_misses, counts.cells);
+    }
+
+    #[test]
+    fn stats_count_pruned_work() {
+        let net = measured();
+        let s_grid = crate::tuner::grids::default_s_grid();
+        let stats = EvalStats::new();
+        let ctx = CellCtx { hint: None, cache: None, stats: Some(&stats) };
+        let _ = ModelEval.best_in(Op::Bcast, &net, 48, 256, &s_grid, &ctx);
+        let c = stats.snapshot();
+        assert_eq!(c.cells, 1);
+        assert_eq!(c.bound_evals, Strategy::BCAST.len() as u64);
+        // pruning must save real work on a mid-size cell at P=48
+        let exhaustive =
+            crate::eval::exhaustive_invocations_per_cell(&Strategy::BCAST, s_grid.len());
+        assert!(
+            c.model_invocations < exhaustive,
+            "no savings: {} vs {exhaustive}",
+            c.model_invocations
+        );
     }
 }

@@ -3,6 +3,13 @@
 //! the paper's fast tuning replaces; the validation layer keeps it as
 //! ground truth, and it is the reference side of every
 //! `cross_validate` run.
+//!
+//! The sweep context ([`super::CellCtx`]) is deliberately *not* used
+//! here: this backend measures schedules rather than evaluating cost
+//! models, so the m-aware model bounds cannot soundly prune it, the gap
+//! cache has nothing to feed it, and its runs never count as model
+//! invocations in [`super::EvalStats`] — `best_in` falls through to the
+//! default exhaustive [`super::Evaluator::best`].
 
 use crate::collectives::Strategy;
 use crate::models;

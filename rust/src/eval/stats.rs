@@ -1,0 +1,217 @@
+//! [`EvalStats`] — cheap shared counters for the tuning sweep, so the
+//! prune/warm-start/cache pipeline's effectiveness is asserted on
+//! deterministic numbers instead of flaky wall time.
+//!
+//! The counters are relaxed atomics: the engine's worker threads share
+//! one [`EvalStats`] through [`super::CellCtx`], each cell accumulates
+//! its deltas locally and flushes once, and a [`EvalCounts`] snapshot
+//! is read by `tune --stats`, `query --stats`, the benches
+//! (`BENCH_tuner.json`), and the eval-count regression tests in
+//! `rust/tests/evaluator.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::collectives::Strategy;
+
+/// Shared sweep counters (see the module docs). Construction is free;
+/// every method takes `&self`.
+#[derive(Debug, Default)]
+pub struct EvalStats {
+    cells: AtomicU64,
+    model_invocations: AtomicU64,
+    bound_evals: AtomicU64,
+    strategies_pruned: AtomicU64,
+    seg_searches_pruned: AtomicU64,
+    seg_points_skipped: AtomicU64,
+    warm_hits: AtomicU64,
+    warm_misses: AtomicU64,
+}
+
+/// One point-in-time reading of [`EvalStats`] (plain integers), plus
+/// derived rates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EvalCounts {
+    /// Grid cells evaluated.
+    pub cells: u64,
+    /// Full cost-model evaluations (the paper's unit of sweep cost).
+    pub model_invocations: u64,
+    /// O(1) lower-bound evaluations ([`crate::models::LOWER_BOUNDS`]).
+    pub bound_evals: u64,
+    /// Unsegmented strategies skipped because their bound lost.
+    pub strategies_pruned: u64,
+    /// Whole segment-grid searches skipped because their bound lost.
+    pub seg_searches_pruned: u64,
+    /// Individual segment candidates skipped inside surviving searches
+    /// (clamp duplicates and per-candidate bound losers), plus the
+    /// candidates of pruned searches.
+    pub seg_points_skipped: u64,
+    /// Cells whose warm-start hint was the final winner.
+    pub warm_hits: u64,
+    /// Cells with a hint that did not win.
+    pub warm_misses: u64,
+}
+
+impl EvalStats {
+    pub fn new() -> EvalStats {
+        EvalStats::default()
+    }
+
+    /// Fold one cell's locally-accumulated deltas in.
+    pub fn add(&self, d: &EvalCounts) {
+        self.cells.fetch_add(d.cells, Ordering::Relaxed);
+        self.model_invocations.fetch_add(d.model_invocations, Ordering::Relaxed);
+        self.bound_evals.fetch_add(d.bound_evals, Ordering::Relaxed);
+        self.strategies_pruned.fetch_add(d.strategies_pruned, Ordering::Relaxed);
+        self.seg_searches_pruned.fetch_add(d.seg_searches_pruned, Ordering::Relaxed);
+        self.seg_points_skipped.fetch_add(d.seg_points_skipped, Ordering::Relaxed);
+        self.warm_hits.fetch_add(d.warm_hits, Ordering::Relaxed);
+        self.warm_misses.fetch_add(d.warm_misses, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> EvalCounts {
+        EvalCounts {
+            cells: self.cells.load(Ordering::Relaxed),
+            model_invocations: self.model_invocations.load(Ordering::Relaxed),
+            bound_evals: self.bound_evals.load(Ordering::Relaxed),
+            strategies_pruned: self.strategies_pruned.load(Ordering::Relaxed),
+            seg_searches_pruned: self.seg_searches_pruned.load(Ordering::Relaxed),
+            seg_points_skipped: self.seg_points_skipped.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            warm_misses: self.warm_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.cells.store(0, Ordering::Relaxed);
+        self.model_invocations.store(0, Ordering::Relaxed);
+        self.bound_evals.store(0, Ordering::Relaxed);
+        self.strategies_pruned.store(0, Ordering::Relaxed);
+        self.seg_searches_pruned.store(0, Ordering::Relaxed);
+        self.seg_points_skipped.store(0, Ordering::Relaxed);
+        self.warm_hits.store(0, Ordering::Relaxed);
+        self.warm_misses.store(0, Ordering::Relaxed);
+    }
+}
+
+impl EvalCounts {
+    /// Mean full model evaluations per grid cell.
+    pub fn invocations_per_cell(&self) -> f64 {
+        if self.cells == 0 {
+            0.0
+        } else {
+            self.model_invocations as f64 / self.cells as f64
+        }
+    }
+
+    /// Fraction of hinted cells whose hint won.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let hinted = self.warm_hits + self.warm_misses;
+        if hinted == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / hinted as f64
+        }
+    }
+
+    /// How many times fewer model invocations than `exhaustive`
+    /// (the unpruned baseline) this run used.
+    pub fn reduction_vs(&self, exhaustive: u64) -> f64 {
+        exhaustive as f64 / self.model_invocations.max(1) as f64
+    }
+
+    /// Flat JSON object (counters plus derived rates) for `--stats`
+    /// output and the bench JSONs.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"cells\":{},\"model_invocations\":{},\"invocations_per_cell\":{:.2},\
+             \"bound_evals\":{},\"strategies_pruned\":{},\"seg_searches_pruned\":{},\
+             \"seg_points_skipped\":{},\"warm_hits\":{},\"warm_misses\":{},\
+             \"warm_hit_rate\":{:.4}}}",
+            self.cells,
+            self.model_invocations,
+            self.invocations_per_cell(),
+            self.bound_evals,
+            self.strategies_pruned,
+            self.seg_searches_pruned,
+            self.seg_points_skipped,
+            self.warm_hits,
+            self.warm_misses,
+            self.warm_hit_rate()
+        )
+    }
+}
+
+/// Model invocations one *unpruned* cell costs: every segmented
+/// strategy scans the full segment grid plus the `s = m` seed, every
+/// unsegmented strategy is a single evaluation. This is the baseline
+/// the measured counters are compared against (the pre-pruning sweep
+/// evaluated exactly this many models per cell).
+pub fn exhaustive_invocations_per_cell(family: &[Strategy], s_grid_len: usize) -> u64 {
+    family
+        .iter()
+        .map(|s| if s.is_segmented() { s_grid_len as u64 + 1 } else { 1 })
+        .sum()
+}
+
+/// The unpruned baseline for a whole sweep: the per-cell exhaustive
+/// count summed over every tuned family, times the grid cells per
+/// family. One definition shared by `tune --stats`, the tuner bench,
+/// and the ≥5× reduction test, so the baseline cannot silently diverge
+/// between them.
+pub fn exhaustive_invocations(families: &[&[Strategy]], cells: u64, s_grid_len: usize) -> u64 {
+    families
+        .iter()
+        .map(|f| cells * exhaustive_invocations_per_cell(f, s_grid_len))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_snapshot_reset_roundtrip() {
+        let s = EvalStats::new();
+        let d = EvalCounts {
+            cells: 2,
+            model_invocations: 10,
+            bound_evals: 20,
+            strategies_pruned: 3,
+            seg_searches_pruned: 4,
+            seg_points_skipped: 50,
+            warm_hits: 1,
+            warm_misses: 1,
+        };
+        s.add(&d);
+        s.add(&d);
+        let got = s.snapshot();
+        assert_eq!(got.cells, 4);
+        assert_eq!(got.model_invocations, 20);
+        assert_eq!(got.seg_points_skipped, 100);
+        assert_eq!(got.warm_hit_rate(), 0.5);
+        assert_eq!(got.invocations_per_cell(), 5.0);
+        assert_eq!(got.reduction_vs(200), 10.0);
+        s.reset();
+        assert_eq!(s.snapshot(), EvalCounts::default());
+    }
+
+    #[test]
+    fn exhaustive_baseline_counts_segment_grids() {
+        // bcast: 7 unsegmented + 3 segmented * (32 + 1)
+        assert_eq!(exhaustive_invocations_per_cell(&Strategy::BCAST, 32), 106);
+        assert_eq!(exhaustive_invocations_per_cell(&Strategy::SCATTER, 32), 3);
+        assert_eq!(exhaustive_invocations_per_cell(&Strategy::BARRIER, 32), 2);
+        // the default bcast+scatter tune on the default 16x48 grid —
+        // the number committed in BENCH_tuner.json's metric baseline
+        let families = [&Strategy::BCAST[..], &Strategy::SCATTER[..]];
+        assert_eq!(exhaustive_invocations(&families, 768, 32), 83_712);
+    }
+
+    #[test]
+    fn empty_counts_have_safe_rates() {
+        let c = EvalCounts::default();
+        assert_eq!(c.invocations_per_cell(), 0.0);
+        assert_eq!(c.warm_hit_rate(), 0.0);
+        assert!(c.to_json().contains("\"cells\":0"));
+    }
+}

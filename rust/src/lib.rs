@@ -31,13 +31,18 @@
 //!   three interchangeable backends — analytic models
 //!   ([`eval::ModelEval`]), empirical simulation ([`eval::SimEval`]) and
 //!   the AOT-compiled XLA artifact ([`eval::ArtifactEval`]). Everything
-//!   that scores a `(strategy, P, m, segment)` point goes through it.
+//!   that scores a `(strategy, P, m, segment)` point goes through it,
+//!   and the sweep's cost is observable through the [`eval::EvalStats`]
+//!   counters (model invocations, pruned searches, warm-start hits).
 //! * [`tuner`] — the paper's contribution: strategy selection and
 //!   segment-size search over any [`eval::Evaluator`] for all seven
 //!   operation families ([`tuner::Op::ALL`]), swept in parallel across
-//!   worker threads (`tune --jobs N`), with the AOT artifacts (see
-//!   `python/compile/`, loaded through [`runtime`]) as the batched fast
-//!   path.
+//!   worker threads (`tune --jobs N`) with m-aware bound pruning
+//!   ([`models::LOWER_BOUNDS`]), incumbent warm-starting, and a
+//!   per-tune gap cache ([`plogp::GapCache`]) — byte-identical to the
+//!   exhaustive argmin at a fraction of the model evaluations — with
+//!   the AOT artifacts (see `python/compile/`, loaded through
+//!   [`runtime`]) as the batched fast path.
 //! * [`coordinator`] — the L3 service layer on top of the tuner: a
 //!   long-running, thread-safe decision-table service. Clusters are
 //!   fingerprinted by quantized pLogP signatures so equivalent networks

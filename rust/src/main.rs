@@ -9,6 +9,7 @@ use anyhow::{bail, Result};
 
 use collective_tuner::collectives::{multilevel, Strategy};
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy};
+use collective_tuner::eval;
 use collective_tuner::harness::experiments;
 use collective_tuner::mpi::World;
 use collective_tuner::netsim::{NetConfig, Netsim};
@@ -135,6 +136,26 @@ fn cmd_tune(args: &Args) -> Result<()> {
         ops.len() * p_grid.len() * m_grid.len(),
         dt.as_secs_f64() * 1e3
     );
+    if args.flag("stats") {
+        let counts = tuner.stats();
+        if counts.cells == 0 {
+            // the batched artifact path never sweeps per-cell models,
+            // so there are no counters to report (and no pruning claim
+            // to make)
+            println!("sweep stats: n/a (batched {} backend)\n", tuner.backend_name());
+        } else {
+            let cells = (p_grid.len() * m_grid.len()) as u64;
+            let families: Vec<&[Strategy]> = ops.iter().map(|op| op.family()).collect();
+            let exhaustive = eval::exhaustive_invocations(&families, cells, tuner.s_grid.len());
+            println!("sweep stats: {}", counts.to_json());
+            println!(
+                "model invocations: {} vs {} exhaustive ({:.1}x fewer)\n",
+                counts.model_invocations,
+                exhaustive,
+                counts.reduction_vs(exhaustive)
+            );
+        }
+    }
 
     for table in &tables {
         println!("== {} decision table ==", table.op.name());
@@ -405,6 +426,9 @@ fn cmd_query(args: &Args) -> Result<()> {
         "service   : {} cached signature(s), {} hit(s) / {} miss(es), {} tuner run(s)",
         st.cache.entries, st.cache.hits, st.cache.misses, st.tunes
     );
+    if args.flag("stats") {
+        println!("stats     : {}", coord.stats_json());
+    }
     if let Some(dir) = args.get("save") {
         let n = coord.persist_to(Path::new(dir))?;
         println!("persisted {n} table set(s) to {dir}");
@@ -487,6 +511,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "cache: {} entries, {} hits / {} misses / {} evictions; {} tuner run(s) for {k} island(s)",
         st.cache.entries, st.cache.hits, st.cache.misses, st.cache.evictions, st.tunes
     );
+    if args.flag("stats") {
+        println!("stats: {}", coord.stats_json());
+    }
 
     // The multi-level construction both companion papers need: build a
     // grid-wide broadcast whose per-island strategies come from the

@@ -87,6 +87,57 @@ pub(super) fn cost_allreduce_rec_doubling(x: &CostInputs) -> f64 {
     x.ce * (x.g_m + x.l)
 }
 
+// ---- lower bounds ([`super::LOWER_BOUNDS`] entries) --------------------
+//
+// None of the extended strategies segment, so these bounds exist to
+// skip whole model evaluations (the doubling/triangular sums cost a
+// log-P chain of gap interpolations) once an incumbent is tight, never
+// to skip segment searches. `g(m) >= gap_min` because `m` lies in the
+// `[1, m]` statistics interval; the doubling sums evaluate `g` beyond
+// `m`, where only the table-wide `gap_floor` is sound. The two barrier
+// models depend on `g(1)` and `L` alone, so their tightest bounds are
+// the models themselves.
+
+pub(super) fn lb_gather_flat(b: &super::BoundInputs) -> f64 {
+    (b.p - 1.0) * b.gap_min + b.l
+}
+
+pub(super) fn lb_gather_binomial(b: &super::BoundInputs) -> f64 {
+    b.ce * (b.gap_floor + b.l)
+}
+
+pub(super) fn lb_reduce_binomial(b: &super::BoundInputs) -> f64 {
+    b.fl * b.gap_min + b.ce * b.l
+}
+
+pub(super) fn lb_barrier_tree(b: &super::BoundInputs) -> f64 {
+    2.0 * (b.fl * b.g1 + b.ce * b.l)
+}
+
+pub(super) fn lb_barrier_dissemination(b: &super::BoundInputs) -> f64 {
+    b.ce * (b.g1 + b.l)
+}
+
+pub(super) fn lb_allgather_gather_bcast(b: &super::BoundInputs) -> f64 {
+    (b.ce * b.gap_floor + b.ce * b.l) + (b.fl * b.gap_floor + b.ce * b.l)
+}
+
+pub(super) fn lb_allgather_ring(b: &super::BoundInputs) -> f64 {
+    (b.p - 1.0) * (b.gap_min + b.l)
+}
+
+pub(super) fn lb_allgather_rec_doubling(b: &super::BoundInputs) -> f64 {
+    b.ce * (b.gap_floor + b.l)
+}
+
+pub(super) fn lb_allreduce_reduce_bcast(b: &super::BoundInputs) -> f64 {
+    2.0 * (b.fl * b.gap_min + b.ce * b.l)
+}
+
+pub(super) fn lb_allreduce_rec_doubling(b: &super::BoundInputs) -> f64 {
+    b.ce * (b.gap_min + b.l)
+}
+
 #[cfg(test)]
 mod tests {
     use crate::collectives::Strategy;

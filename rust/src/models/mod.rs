@@ -15,7 +15,7 @@
 pub mod ext;
 
 use crate::collectives::Strategy;
-use crate::plogp::PLogP;
+use crate::plogp::{GapRange, PLogP};
 
 /// ceil(log2 p) as f64 (0 for p = 1).
 fn ceil_log2(p: usize) -> f64 {
@@ -71,6 +71,43 @@ impl<'a> CostInputs<'a> {
             s_eff,
             k: (mf / s_eff).ceil(),
             g_s: net.gap(s_eff),
+        }
+    }
+
+    /// Build from pre-interpolated gap values — the per-tune
+    /// [`crate::plogp::GapCache`] fast path. The caller supplies
+    /// `g_m = g(m)`, the *already clamped* segment `s_eff` with its gap
+    /// `g_s = g(s_eff)`, and the rendezvous constant `rdv`, all
+    /// produced once per tune by exactly the arithmetic
+    /// [`CostInputs::new`] would use — so the resulting costs are
+    /// bit-identical to the uncached path.
+    pub fn from_parts(
+        net: &'a PLogP,
+        procs: usize,
+        m: u64,
+        s_eff: u64,
+        g_m: f64,
+        g_s: f64,
+        rdv: f64,
+    ) -> CostInputs<'a> {
+        assert!(procs >= 1);
+        assert!(m >= 1);
+        debug_assert!(s_eff >= 1 && s_eff <= m, "s_eff must be pre-clamped to [1, m]");
+        let mf = m as f64;
+        let se = s_eff as f64;
+        CostInputs {
+            net,
+            procs,
+            p: procs as f64,
+            mf,
+            l: net.l,
+            g_m,
+            fl: floor_log2(procs),
+            ce: ceil_log2(procs),
+            rdv,
+            s_eff: se,
+            k: (mf / se).ceil(),
+            g_s,
         }
     }
 }
@@ -171,6 +208,198 @@ pub fn cost_fn(strategy: Strategy) -> CostFn {
     COST_MODELS[strategy.index()]
 }
 
+/// Pre-computed quantities shared by every per-strategy lower bound at
+/// one `(P, m)` cell: the usual scalar shape terms plus extremum
+/// statistics of the gap function over the candidate-segment interval
+/// `[1, m]` ([`crate::plogp::GapTable::range_stats`]) and the
+/// table-wide gap floor. Cheap to build from a
+/// [`crate::plogp::GapCache`] row; [`BoundInputs::new`] computes the
+/// statistics directly for one-off queries.
+pub struct BoundInputs {
+    pub procs: usize,
+    /// P as f64.
+    pub p: f64,
+    /// Message size as f64.
+    pub mf: f64,
+    pub l: f64,
+    /// floor(log2 P) and ceil(log2 P) as f64.
+    pub fl: f64,
+    pub ce: f64,
+    /// Rendezvous handshake cost `2 g(1) + 3 L`.
+    pub rdv: f64,
+    /// `g(1)`.
+    pub g1: f64,
+    /// `min g(s)` over candidate segments `s ∈ [1, m]`.
+    pub gap_min: f64,
+    /// `max g(s)` over `s ∈ [1, m]`.
+    pub gap_max: f64,
+    /// `min g(s)/s` over `s ∈ [1, m]` — the subadditive per-byte rate.
+    pub rate_min: f64,
+    /// `min` of the sampled gaps: a sound bound on `g` at *any* size
+    /// (the doubling/triangular sums evaluate `g` beyond `m`).
+    pub gap_floor: f64,
+}
+
+impl BoundInputs {
+    pub fn new(net: &PLogP, procs: usize, m: u64) -> BoundInputs {
+        let range = net.table.range_stats(1.0, m.max(1) as f64);
+        BoundInputs::from_stats(procs, m, net.l, net.gap(1.0), range, net.table.min_gap())
+    }
+
+    /// Assemble from cached statistics (the sweep hot path).
+    pub fn from_stats(
+        procs: usize,
+        m: u64,
+        l: f64,
+        g1: f64,
+        range: GapRange,
+        gap_floor: f64,
+    ) -> BoundInputs {
+        assert!(procs >= 1);
+        assert!(m >= 1);
+        BoundInputs {
+            procs,
+            p: procs as f64,
+            mf: m as f64,
+            l,
+            fl: floor_log2(procs),
+            ce: ceil_log2(procs),
+            rdv: 2.0 * g1 + 3.0 * l,
+            g1,
+            gap_min: range.gap_min,
+            gap_max: range.gap_max,
+            rate_min: range.rate_min,
+            gap_floor,
+        }
+    }
+}
+
+/// One strategy's m-aware lower bound (an entry of [`LOWER_BOUNDS`]).
+pub type BoundFn = fn(&BoundInputs) -> f64;
+
+/// Lower bound on `k · g(s)` over any candidate segment `s ∈ [1, m]`:
+/// `k >= 1` gives the min-gap term, and `k >= m/s` gives the
+/// subadditive per-byte term `m · min g(s)/s` — streaming `m` bytes in
+/// segments is never cheaper than `m` times the best per-byte rate.
+/// This is what makes the segmented bounds m-aware: the old min-gap
+/// bound ignored the message size entirely.
+fn seg_stream_lb(b: &BoundInputs) -> f64 {
+    b.gap_min.max(b.mf * b.rate_min)
+}
+
+fn lb_bcast_flat(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * b.gap_min + b.l
+}
+
+fn lb_bcast_flat_rdv(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * b.gap_min + b.rdv
+}
+
+fn lb_bcast_seg_flat(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * seg_stream_lb(b) + b.l
+}
+
+fn lb_bcast_chain(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * (b.gap_min + b.l)
+}
+
+fn lb_bcast_chain_rdv(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * (b.gap_min + b.rdv)
+}
+
+/// `(P-1)(g(s)+L) + (k-1) g(s)`: the per-stage terms bound through
+/// `gap_min`, the pipeline tail through `(k-1) g(s) = k g(s) - g(s) >=
+/// m·rate_min - gap_max` (clamped at zero).
+fn lb_bcast_seg_chain(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * (b.gap_min + b.l) + (b.mf * b.rate_min - b.gap_max).max(0.0)
+}
+
+fn lb_bcast_binary(b: &BoundInputs) -> f64 {
+    b.ce * (2.0 * b.gap_min + b.l)
+}
+
+fn lb_bcast_binomial(b: &BoundInputs) -> f64 {
+    b.fl * b.gap_min + b.ce * b.l
+}
+
+fn lb_bcast_binomial_rdv(b: &BoundInputs) -> f64 {
+    b.fl * b.gap_min + b.ce * b.rdv
+}
+
+fn lb_bcast_seg_binomial(b: &BoundInputs) -> f64 {
+    b.fl * seg_stream_lb(b) + b.ce * b.l
+}
+
+fn lb_scatter_flat(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * b.gap_min + b.l
+}
+
+/// The triangular sum evaluates `g` at `j·m` beyond the candidate
+/// interval, so only the table-wide floor is sound.
+fn lb_scatter_chain(b: &BoundInputs) -> f64 {
+    (b.p - 1.0) * (b.gap_floor + b.l)
+}
+
+fn lb_scatter_binomial(b: &BoundInputs) -> f64 {
+    b.ce * (b.gap_floor + b.l)
+}
+
+/// Strategy-indexed lower-bound registry, aligned index-for-index with
+/// [`COST_MODELS`]: entry `i` is a sound lower bound on *any* cost
+/// entry `i` can achieve at `(P, m)` — over every candidate segment
+/// size for the segmented strategies — and each entry is O(1) to
+/// evaluate from cached [`BoundInputs`], where the models themselves
+/// cost a segment-grid scan (segmented broadcast) or a log/linear sum
+/// of gap interpolations. The sweep uses these to skip strategies (and
+/// whole segment-grid searches) that provably cannot beat the
+/// incumbent; exact ties are never skipped (see [`prunes`]), so pruned
+/// tables stay byte-identical to the exhaustive argmin.
+pub const LOWER_BOUNDS: [BoundFn; Strategy::COUNT] = [
+    lb_bcast_flat,
+    lb_bcast_flat_rdv,
+    lb_bcast_seg_flat,
+    lb_bcast_chain,
+    lb_bcast_chain_rdv,
+    lb_bcast_seg_chain,
+    lb_bcast_binary,
+    lb_bcast_binomial,
+    lb_bcast_binomial_rdv,
+    lb_bcast_seg_binomial,
+    lb_scatter_flat,
+    lb_scatter_chain,
+    lb_scatter_binomial,
+    ext::lb_gather_flat,
+    ext::lb_gather_binomial,
+    ext::lb_reduce_binomial,
+    ext::lb_barrier_tree,
+    ext::lb_barrier_dissemination,
+    ext::lb_allgather_gather_bcast,
+    ext::lb_allgather_ring,
+    ext::lb_allgather_rec_doubling,
+    ext::lb_allreduce_reduce_bcast,
+    ext::lb_allreduce_rec_doubling,
+];
+
+/// The m-aware lower bound of one strategy at `(P, m)`.
+pub fn lower_bound(strategy: Strategy, b: &BoundInputs) -> f64 {
+    LOWER_BOUNDS[strategy.index()](b)
+}
+
+/// Relative safety margin of the pruning test. The bounds are
+/// mathematically below every achievable cost, but the piecewise-linear
+/// gap interpolation can round a handful of ulps past a sampled
+/// extremum; the margin keeps knife-edge cells on the evaluate side so
+/// pruned tables stay byte-identical to the exhaustive argmin.
+pub const PRUNE_MARGIN: f64 = 1e-9;
+
+/// Should a candidate with lower bound `bound` be skipped against an
+/// incumbent that already achieved `incumbent`? Strict inequality plus
+/// [`PRUNE_MARGIN`]: ties are always evaluated, so family-order
+/// tie-breaking is preserved exactly.
+pub fn prunes(bound: f64, incumbent: f64) -> bool {
+    bound > incumbent + incumbent.abs() * PRUNE_MARGIN
+}
+
 /// Predicted completion time of `strategy` on a `procs`-rank cluster for
 /// message size `m`, with optional segment size (segmented strategies
 /// only; `None` means one segment).
@@ -183,7 +412,10 @@ pub fn predict(strategy: Strategy, net: &PLogP, procs: usize, m: u64, seg: Optio
 }
 
 /// Conservative lower bound on a segmented strategy's best achievable
-/// time over *any* segment size — the tuner's per-cell pruning test.
+/// time over *any* segment size — the original min-gap pruning test,
+/// kept as the reference the m-aware [`LOWER_BOUNDS`] must dominate
+/// (asserted by the property tests below); the sweep itself now prunes
+/// through [`lower_bound`].
 ///
 /// Sound because interpolated and extrapolated gaps never drop below the
 /// table's minimum sampled gap (`GapTable::gap` clamps below the first
@@ -409,5 +641,124 @@ mod tests {
         let n = toy();
         // P=3, m=4: g(4)+g(8) + 2L = 5 + 9 + 20 = 34
         assert!((predict(Strategy::ScatterChain, &n, 3, 4, None) - 34.0).abs() < 1e-9);
+    }
+
+    /// A random pLogP net with an adversarial (non-monotone) gap table.
+    fn random_net(rng: &mut crate::util::prng::Prng) -> PLogP {
+        crate::plogp::adversarial_net(rng, 16, 60_000.0)
+    }
+
+    /// Property (ISSUE 4 satellite): the m-aware [`LOWER_BOUNDS`]
+    /// dominate the legacy min-gap bound on the segmented strategies —
+    /// never looser — across randomized networks, process counts, and
+    /// message sizes. (Up to a relative ulp slack: the min-gap bound
+    /// uses the raw sampled minimum while the m-aware bound evaluates
+    /// the interpolant, which can round a few ulps at sample points.)
+    #[test]
+    fn m_aware_bound_dominates_the_min_gap_bound() {
+        let mut rng = crate::util::prng::Prng::new(0xB0DD_0001);
+        for _ in 0..60 {
+            let net = random_net(&mut rng);
+            for procs in [1usize, 2, 5, 17, 48] {
+                for m in [1u64, 7, 256, 65_536, 1 << 20] {
+                    let bi = BoundInputs::new(&net, procs, m);
+                    for strat in Strategy::ALL.iter().filter(|s| s.is_segmented()) {
+                        let new = lower_bound(*strat, &bi);
+                        let old = segmented_lower_bound(*strat, &net, procs);
+                        assert!(
+                            new >= old - old.abs() * 1e-12,
+                            "{} P={procs} m={m}: m-aware {new} looser than min-gap {old}",
+                            strat.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property (ISSUE 4 satellite): every [`LOWER_BOUNDS`] entry is a
+    /// true lower bound — densely sampling segment sizes (the segmented
+    /// strategies' whole search space; unsegmented models ignore the
+    /// segment) never finds a cost below the bound, on randomized nets.
+    #[test]
+    fn lower_bounds_hold_against_dense_segment_sampling() {
+        let mut rng = crate::util::prng::Prng::new(0xB0DD_0002);
+        for _ in 0..40 {
+            let net = random_net(&mut rng);
+            for procs in [1usize, 2, 5, 17, 48] {
+                for m in [1u64, 7, 256, 65_536, 1 << 20] {
+                    let bi = BoundInputs::new(&net, procs, m);
+                    // dense log-ish sample of [1, m] plus the endpoints
+                    let mut segs: Vec<u64> = vec![1, m];
+                    let mut s = 1u64;
+                    while s < m {
+                        segs.push(s);
+                        s = (s * 3 / 2).max(s + 1);
+                    }
+                    for _ in 0..16 {
+                        segs.push(rng.range(1, m + 1));
+                    }
+                    for strat in Strategy::ALL {
+                        let lb = lower_bound(strat, &bi);
+                        for &seg in &segs {
+                            let t = predict(strat, &net, procs, m, Some(seg));
+                            assert!(
+                                lb <= t + t.abs() * 1e-9,
+                                "{} P={procs} m={m} s={seg}: bound {lb} > cost {t}",
+                                strat.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bound_inputs_match_cached_stats_assembly() {
+        let net = toy();
+        let direct = BoundInputs::new(&net, 5, 8);
+        let range = net.table.range_stats(1.0, 8.0);
+        let cached =
+            BoundInputs::from_stats(5, 8, net.l, net.gap(1.0), range, net.table.min_gap());
+        assert_eq!(direct.gap_min, cached.gap_min);
+        assert_eq!(direct.gap_max, cached.gap_max);
+        assert_eq!(direct.rate_min, cached.rate_min);
+        assert_eq!(direct.gap_floor, cached.gap_floor);
+        assert_eq!(direct.rdv, cached.rdv);
+        assert_eq!(direct.fl, cached.fl);
+        assert_eq!(direct.ce, cached.ce);
+    }
+
+    #[test]
+    fn prune_test_never_fires_on_ties() {
+        assert!(!prunes(1.0, 1.0));
+        assert!(!prunes(0.0, 0.0));
+        assert!(!prunes(1.0 + 1e-12, 1.0), "sub-margin excess must not prune");
+        assert!(prunes(1.1, 1.0));
+        assert!(prunes(1.0, 0.0));
+        assert!(!prunes(5.0, f64::INFINITY));
+    }
+
+    #[test]
+    fn cost_inputs_from_parts_is_bit_identical_to_new() {
+        let n = toy();
+        for (procs, m, seg) in [(5usize, 8u64, 2u64), (1, 1, 1), (48, 1 << 20, 4096)] {
+            let a = CostInputs::new(&n, procs, m, Some(seg));
+            let rdv = 2.0 * n.gap(1.0) + 3.0 * n.l;
+            let s_eff = seg.clamp(1, m);
+            let b = CostInputs::from_parts(
+                &n,
+                procs,
+                m,
+                s_eff,
+                n.gap(m as f64),
+                n.gap(s_eff as f64),
+                rdv,
+            );
+            for s in Strategy::ALL {
+                assert_eq!(cost_fn(s)(&a), cost_fn(s)(&b), "{} P={procs} m={m}", s.name());
+            }
+        }
     }
 }

@@ -1,0 +1,182 @@
+//! [`GapCache`] — per-tune precomputation of the gap interpolations the
+//! sweep hot path would otherwise redo for every cell.
+//!
+//! One tuning sweep evaluates the same message-size grid and the same
+//! segment-size grid thousands of times (cells × strategies × segment
+//! candidates), and every cost-model evaluation starts with one or two
+//! binary-search interpolations into the [`super::GapTable`]. The cache
+//! computes each distinct interpolation exactly once — `g(m)` per
+//! message-grid row, `g(s)` per segment-grid point, `g(1)` and the
+//! rendezvous constant — so the innermost loop becomes array indexing.
+//! It also precomputes the per-row [`super::GapRange`] statistics that
+//! feed the m-aware pruning bounds ([`crate::models::LOWER_BOUNDS`]).
+//!
+//! Exactness: every cached value is produced by the same
+//! [`super::GapTable::gap`] call the uncached path would make, so a
+//! cost model fed from the cache returns bit-identical `f64`s — the
+//! tuner's tables cannot drift from the exhaustive argmin (asserted in
+//! `rust/tests/evaluator.rs`).
+
+use super::{GapRange, PLogP};
+
+/// Cached per-message-size quantities: the interpolated gap and the
+/// `[1, m]` range statistics behind the m-aware lower bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct CachedRow {
+    /// The message size this row caches.
+    pub m: u64,
+    /// `g(m)`.
+    pub g_m: f64,
+    /// Extrema of `g` and `g(s)/s` over candidate segments `[1, m]`.
+    pub range: GapRange,
+}
+
+/// Precomputed gap interpolations for one `(net, m_grid, s_grid)`
+/// tuning sweep. Built once per tuned operation by the engine and
+/// threaded to the evaluator through [`crate::eval::CellCtx`].
+#[derive(Debug, Clone)]
+pub struct GapCache {
+    l: f64,
+    g1: f64,
+    rdv: f64,
+    gap_floor: f64,
+    m_grid: Vec<u64>,
+    /// Whether `m_grid` is strictly ascending (the normal case); rows
+    /// are binary-searched when it is and linear-scanned when not, so a
+    /// caller-supplied unsorted grid degrades gracefully instead of
+    /// silently missing every lookup.
+    m_sorted: bool,
+    rows: Vec<CachedRow>,
+    s_grid: Vec<u64>,
+    gap_at_s: Vec<f64>,
+}
+
+impl GapCache {
+    /// Interpolate every grid point of one sweep up front.
+    pub fn new(net: &PLogP, m_grid: &[u64], s_grid: &[u64]) -> GapCache {
+        let rows = m_grid
+            .iter()
+            .map(|&m| CachedRow {
+                m,
+                g_m: net.gap(m as f64),
+                range: net.table.range_stats(1.0, m.max(1) as f64),
+            })
+            .collect();
+        GapCache {
+            l: net.l,
+            g1: net.gap(1.0),
+            // identical expression to `CostInputs::new` — bit-exact
+            rdv: 2.0 * net.gap(1.0) + 3.0 * net.l,
+            gap_floor: net.table.min_gap(),
+            m_sorted: m_grid.windows(2).all(|w| w[0] < w[1]),
+            m_grid: m_grid.to_vec(),
+            rows,
+            s_grid: s_grid.to_vec(),
+            gap_at_s: s_grid.iter().map(|&s| net.gap(s as f64)).collect(),
+        }
+    }
+
+    /// The cached row for message size `m`, if `m` is on this cache's
+    /// message grid (point queries off the grid fall back to direct
+    /// interpolation).
+    pub fn row(&self, m: u64) -> Option<&CachedRow> {
+        let i = if self.m_sorted {
+            self.m_grid.binary_search(&m).ok()?
+        } else {
+            self.m_grid.iter().position(|&x| x == m)?
+        };
+        Some(&self.rows[i])
+    }
+
+    /// Was this cache built for exactly this segment grid?
+    pub fn covers(&self, s_grid: &[u64]) -> bool {
+        self.s_grid == s_grid
+    }
+
+    /// `g(s_grid[i])` (unclamped; callers substitute `g(m)` for
+    /// candidates that clamp onto the message size).
+    pub fn gap_at_segment(&self, i: usize) -> f64 {
+        self.gap_at_s[i]
+    }
+
+    /// Network latency `L`.
+    pub fn l(&self) -> f64 {
+        self.l
+    }
+
+    /// `g(1)`.
+    pub fn g1(&self) -> f64 {
+        self.g1
+    }
+
+    /// The rendezvous handshake constant `2 g(1) + 3 L`.
+    pub fn rdv(&self) -> f64 {
+        self.rdv
+    }
+
+    /// The table-wide minimum sampled gap (sound at any size).
+    pub fn gap_floor(&self) -> f64 {
+        self.gap_floor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plogp::GapTable;
+
+    fn toy() -> PLogP {
+        let sizes: Vec<f64> = vec![1., 2., 4., 8., 16., 32., 64., 128.];
+        let gaps: Vec<f64> = sizes.iter().map(|s| 1.0 + s).collect();
+        PLogP::new(10.0, GapTable::new(sizes, gaps))
+    }
+
+    #[test]
+    fn cached_gaps_are_bit_identical_to_direct_interpolation() {
+        let net = toy();
+        let m_grid = [1u64, 3, 8, 200];
+        let s_grid = [2u64, 5, 64, 4096];
+        let c = GapCache::new(&net, &m_grid, &s_grid);
+        for (i, &s) in s_grid.iter().enumerate() {
+            assert_eq!(c.gap_at_segment(i), net.gap(s as f64));
+        }
+        for &m in &m_grid {
+            let row = c.row(m).unwrap();
+            assert_eq!(row.g_m, net.gap(m as f64));
+            assert_eq!(row.range, net.table.range_stats(1.0, m as f64));
+        }
+        assert_eq!(c.g1(), net.gap(1.0));
+        assert_eq!(c.rdv(), 2.0 * net.gap(1.0) + 3.0 * net.l);
+        assert_eq!(c.gap_floor(), net.table.min_gap());
+        assert_eq!(c.l(), net.l);
+    }
+
+    #[test]
+    fn off_grid_sizes_have_no_row() {
+        let net = toy();
+        let c = GapCache::new(&net, &[4, 16], &[8]);
+        assert!(c.row(4).is_some());
+        assert!(c.row(5).is_none());
+    }
+
+    #[test]
+    fn unsorted_message_grids_still_resolve_rows() {
+        let net = toy();
+        let c = GapCache::new(&net, &[8192, 64, 16], &[8]);
+        for m in [16u64, 64, 8192] {
+            let row = c.row(m).expect("row present despite unsorted grid");
+            assert_eq!(row.m, m);
+            assert_eq!(row.g_m, net.gap(m as f64));
+        }
+        assert!(c.row(7).is_none());
+    }
+
+    #[test]
+    fn covers_matches_exact_segment_grid_only() {
+        let net = toy();
+        let c = GapCache::new(&net, &[4], &[8, 64]);
+        assert!(c.covers(&[8, 64]));
+        assert!(!c.covers(&[8]));
+        assert!(!c.covers(&[8, 65]));
+    }
+}

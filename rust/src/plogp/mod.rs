@@ -14,6 +14,24 @@
 //! the same procedure the MPI LogP Benchmark uses on real hardware.
 
 pub mod bench;
+pub mod cache;
+
+pub use cache::{CachedRow, GapCache};
+
+/// Extremum statistics of the gap function over one size interval —
+/// the raw material of the tuner's m-aware sweep lower bounds
+/// ([`crate::models::LOWER_BOUNDS`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GapRange {
+    /// `min g(s)` over the interval.
+    pub gap_min: f64,
+    /// `max g(s)` over the interval.
+    pub gap_max: f64,
+    /// `min g(s)/s` over the interval — the best per-byte gap rate; by
+    /// subadditivity, streaming `m` bytes in segments can never beat
+    /// `m · rate_min`.
+    pub rate_min: f64,
+}
 
 /// Sampled gap function `g(m)` with piecewise-linear interpolation.
 #[derive(Debug, Clone, PartialEq)]
@@ -91,6 +109,46 @@ impl GapTable {
     pub fn gap1(&self) -> f64 {
         self.gap(1.0)
     }
+
+    /// The smallest sampled gap. Every interpolated or extrapolated
+    /// value stays at or above it (interior points lie between their
+    /// bracketing samples, values below the table clamp to the first
+    /// sample, and extrapolation floors at the last sample), so this is
+    /// a global lower bound on `g` at *any* size.
+    pub fn min_gap(&self) -> f64 {
+        self.gaps.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Extremum statistics of `g` (and of the per-byte rate `g(s)/s`)
+    /// over `[lo, hi]`. On every piece of the interpolant — clamped
+    /// below the table, linear between samples, slope-extrapolated with
+    /// a floor above it — both `g` and `g(s)/s` are monotone, so the
+    /// interval extrema are attained at the interval endpoints or at
+    /// interior sample points; the scan evaluates exactly those.
+    pub fn range_stats(&self, lo: f64, hi: f64) -> GapRange {
+        assert!(lo >= 1.0 && hi >= lo, "need 1 <= lo <= hi");
+        let mut r = GapRange {
+            gap_min: f64::INFINITY,
+            gap_max: f64::NEG_INFINITY,
+            rate_min: f64::INFINITY,
+        };
+        let mut visit = |s: f64| {
+            let g = self.gap(s);
+            r.gap_min = r.gap_min.min(g);
+            r.gap_max = r.gap_max.max(g);
+            r.rate_min = r.rate_min.min(g / s);
+        };
+        visit(lo);
+        if hi > lo {
+            visit(hi);
+        }
+        for &s in &self.sizes {
+            if s > lo && s < hi {
+                visit(s);
+            }
+        }
+        r
+    }
 }
 
 /// A full pLogP parameter set for one network.
@@ -122,6 +180,28 @@ impl PLogP {
             self.table.len()
         )
     }
+}
+
+/// A random pLogP parameter set over an adversarial (non-monotone) gap
+/// table: up to `max_samples` cumulative-uniform sizes (step up to
+/// `size_step` bytes) with independently log-uniform gaps — the regime
+/// where the sweep's pruning bounds are weakest. Shared by the
+/// model-layer property tests and the sweep-exactness integration
+/// tests so both fuzz the same distribution.
+pub fn adversarial_net(
+    rng: &mut crate::util::prng::Prng,
+    max_samples: usize,
+    size_step: f64,
+) -> PLogP {
+    let n = rng.range_usize(2, max_samples.max(3));
+    let mut sizes = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += rng.uniform(1.0, size_step);
+        sizes.push(acc);
+    }
+    let gaps: Vec<f64> = (0..n).map(|_| rng.log_uniform(1e-6, 1e-2)).collect();
+    PLogP::new(rng.log_uniform(1e-6, 1e-3), GapTable::new(sizes, gaps))
 }
 
 /// The default measurement grid: log-spaced from 1 byte to 4 MB,
@@ -217,6 +297,43 @@ mod tests {
             assert!(g.windows(2).all(|w| w[0] < w[1]), "{g:?}");
             assert_eq!(g[0], 1);
             assert!(*g.last().unwrap() >= 4 << 20);
+        }
+    }
+
+    #[test]
+    fn range_stats_find_interval_extrema() {
+        // non-monotone gaps: dip at 10, spike at 100
+        let t = GapTable::new(vec![1.0, 10.0, 100.0, 1000.0], vec![5.0, 2.0, 9.0, 4.0]);
+        assert_eq!(t.min_gap(), 2.0);
+        let r = t.range_stats(1.0, 1000.0);
+        assert_eq!(r.gap_min, 2.0);
+        assert_eq!(r.gap_max, 9.0);
+        // restricting the interval excludes the dip
+        let r = t.range_stats(100.0, 1000.0);
+        assert_eq!(r.gap_min, 4.0);
+        assert_eq!(r.gap_max, 9.0);
+        // degenerate interval: everything collapses to g(lo)
+        let r = t.range_stats(10.0, 10.0);
+        assert_eq!(r.gap_min, 2.0);
+        assert_eq!(r.gap_max, 2.0);
+        assert_eq!(r.rate_min, 0.2);
+    }
+
+    #[test]
+    fn range_stats_bound_a_dense_scan() {
+        // brute-force check on an adversarial table: candidate-point
+        // extrema really do bound a dense sampling of the interval
+        let t = GapTable::new(vec![2.0, 7.0, 30.0, 900.0], vec![8.0, 3.0, 11.0, 2.5]);
+        for (lo, hi) in [(1.0, 4.0), (1.0, 100.0), (5.0, 2000.0), (1.0, 1e6)] {
+            let r = t.range_stats(lo, hi);
+            let mut s = lo;
+            while s <= hi {
+                let g = t.gap(s);
+                assert!(r.gap_min <= g + 1e-12, "min at s={s}");
+                assert!(r.gap_max >= g - 1e-12, "max at s={s}");
+                assert!(r.rate_min <= g / s + 1e-12, "rate at s={s}");
+                s *= 1.037;
+            }
         }
     }
 

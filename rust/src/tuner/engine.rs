@@ -5,20 +5,29 @@
 //! (analytic models, the simulator, or the AOT artifact; see
 //! [`crate::eval`]) — and parallel: non-batched evaluators are swept by
 //! a hand-rolled `std::thread::scope` work queue (`--jobs N` on the
-//! CLI), with per-cell early pruning of segmented variants whose
-//! segment-independent lower bound already loses
-//! ([`crate::models::segmented_lower_bound`]). Batched evaluators (the
-//! artifact) receive the whole grid in one call instead. Results are
-//! bit-identical regardless of the worker count: every cell is computed
-//! independently and merged by index.
+//! CLI). Batched evaluators (the artifact) receive the whole grid in
+//! one call instead.
+//!
+//! The sweep hot path is pruned and instrumented: each tuned op builds
+//! one [`GapCache`] (every gap interpolation of the sweep, computed
+//! once), each worker seeds the next cell with its previous cell's
+//! winner (the warm-start hint — adjacent cells almost always share an
+//! argmin, so the m-aware [`crate::models::LOWER_BOUNDS`] pruning test
+//! fires early), and the shared [`EvalStats`] counters record exactly
+//! how much work the bounds saved (`tune --stats`, `BENCH_tuner.json`).
+//! Results are bit-identical regardless of the worker count *and* of
+//! the hints: every cell's argmin is hint-independent (asserted in
+//! `rust/tests/evaluator.rs`), cells are computed independently and
+//! merged by index.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
-use crate::eval::{ArtifactEval, Evaluator, ModelEval};
-use crate::plogp::PLogP;
+use crate::collectives::Strategy;
+use crate::eval::{ArtifactEval, CellCtx, EvalCounts, EvalStats, Evaluator, ModelEval};
+use crate::plogp::{GapCache, PLogP};
 
 use super::decision::{Decision, DecisionTable, Op};
 use super::grids;
@@ -35,6 +44,9 @@ pub struct Tuner {
     pub s_grid: Vec<u64>,
     /// Sweep workers (1 = sequential). Set via [`Tuner::jobs`].
     pub jobs: usize,
+    /// Cumulative sweep counters (all tunes since construction or the
+    /// last [`Tuner::reset_stats`]); shared by every worker.
+    stats: EvalStats,
 }
 
 impl Tuner {
@@ -61,7 +73,31 @@ impl Tuner {
 
     /// Build on any evaluation backend.
     pub fn with_evaluator(evaluator: Box<dyn Evaluator>) -> Tuner {
-        Tuner { evaluator, s_grid: grids::default_s_grid(), jobs: default_jobs() }
+        Tuner {
+            evaluator,
+            s_grid: grids::default_s_grid(),
+            jobs: default_jobs(),
+            stats: EvalStats::new(),
+        }
+    }
+
+    /// Snapshot of the sweep counters (model invocations, pruned
+    /// cells/searches, warm-start hits — see [`EvalCounts`]).
+    pub fn stats(&self) -> EvalCounts {
+        self.stats.snapshot()
+    }
+
+    /// Zero the sweep counters (e.g. between bench iterations).
+    pub fn reset_stats(&self) {
+        self.stats.reset()
+    }
+
+    /// Fold another tuner's counters into this one's — used when a
+    /// caller substitutes a fallback tuner for one run (the
+    /// coordinator's artifact-failure path) but wants one cumulative
+    /// cost picture.
+    pub fn merge_stats(&self, d: &EvalCounts) {
+        self.stats.add(d)
     }
 
     /// Set the sweep worker count (`0` = one per core).
@@ -123,45 +159,63 @@ impl Tuner {
         p_grid: &[usize],
         m_grid: &[u64],
     ) -> Result<DecisionTable> {
-        let cells = p_grid.len() * m_grid.len();
-        let entries = if self.evaluator.batched() || self.jobs <= 1 || cells <= 1 {
+        let entries = if self.evaluator.batched() {
             self.evaluator.predict_grid(op, net, p_grid, m_grid, &self.s_grid)?
         } else {
-            self.sweep_parallel(op, net, p_grid, m_grid)
+            self.sweep(op, net, p_grid, m_grid)
         };
         Ok(DecisionTable::new(op, p_grid.to_vec(), m_grid.to_vec(), entries))
     }
 
-    /// The parallel grid sweep: a shared atomic cursor hands cells to
-    /// `jobs` scoped workers; each worker's `(index, decision)` pairs
-    /// are merged by index afterwards, so scheduling order never
-    /// influences the table.
-    fn sweep_parallel(
-        &self,
-        op: Op,
-        net: &PLogP,
-        p_grid: &[usize],
-        m_grid: &[u64],
-    ) -> Vec<Decision> {
+    /// The pruned grid sweep. One [`GapCache`] is built per tuned op;
+    /// every cell is evaluated through [`Evaluator::best_in`] with the
+    /// cache, the shared counters, and a warm-start hint — the winner
+    /// of the cell the same worker computed just before. Sequential
+    /// (`jobs == 1`) runs inline in row-major order; the parallel path
+    /// hands cells to scoped workers off a shared atomic cursor and
+    /// merges `(index, decision)` pairs by index afterwards, so neither
+    /// scheduling order nor the per-worker hints can influence the
+    /// table (hints are advisory by the `best_in` contract).
+    fn sweep(&self, op: Op, net: &PLogP, p_grid: &[usize], m_grid: &[u64]) -> Vec<Decision> {
+        let cache = GapCache::new(net, m_grid, &self.s_grid);
         let cells = p_grid.len() * m_grid.len();
         let workers = self.jobs.min(cells).max(1);
-        let cursor = AtomicUsize::new(0);
         let evaluator: &dyn Evaluator = self.evaluator.as_ref();
         let s_grid: &[u64] = &self.s_grid;
+        let stats = &self.stats;
+        let cell = |i: usize, hint: Option<Strategy>| -> Decision {
+            let p = p_grid[i / m_grid.len()];
+            let m = m_grid[i % m_grid.len()];
+            let ctx = CellCtx { hint, cache: Some(&cache), stats: Some(stats) };
+            evaluator.best_in(op, net, p, m, s_grid, &ctx)
+        };
+        if workers == 1 {
+            let mut hint = None;
+            return (0..cells)
+                .map(|i| {
+                    let d = cell(i, hint);
+                    hint = Some(d.strategy);
+                    d
+                })
+                .collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let cell = &cell;
         let partials: Vec<Vec<(usize, Decision)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     let cursor = &cursor;
                     scope.spawn(move || {
                         let mut mine = Vec::new();
+                        let mut hint = None;
                         loop {
                             let i = cursor.fetch_add(1, Ordering::Relaxed);
                             if i >= cells {
                                 break;
                             }
-                            let p = p_grid[i / m_grid.len()];
-                            let m = m_grid[i % m_grid.len()];
-                            mine.push((i, evaluator.best(op, net, p, m, s_grid)));
+                            let d = cell(i, hint);
+                            hint = Some(d.strategy);
+                            mine.push((i, d));
                         }
                         mine
                     })
@@ -273,6 +327,44 @@ mod tests {
         let t = Tuner::native().jobs(0);
         assert!(t.jobs >= 1);
         assert_eq!(t.backend_name(), "native");
+    }
+
+    #[test]
+    fn sweep_counters_accumulate_and_reset() {
+        let net = measured();
+        let t = Tuner::native().jobs(1);
+        let _ = t.tune_op(Op::Bcast, &net, &[2, 8], &[64, 4096]).unwrap();
+        let c = t.stats();
+        assert_eq!(c.cells, 4);
+        assert!(c.model_invocations > 0);
+        // row-major sequential sweep: every cell after the first has a
+        // warm-start hint
+        assert_eq!(c.warm_hits + c.warm_misses, 3);
+        let _ = t.tune_op(Op::Bcast, &net, &[2, 8], &[64, 4096]).unwrap();
+        assert_eq!(t.stats().cells, 8, "counters are cumulative");
+        t.reset_stats();
+        assert_eq!(t.stats().cells, 0);
+    }
+
+    #[test]
+    fn pruned_sweep_beats_the_exhaustive_invocation_count() {
+        let net = measured();
+        let t = Tuner::native().jobs(1);
+        let p_grid = grids::default_p_grid();
+        let m_grid = grids::default_m_grid();
+        let _ = t.tune_op(Op::Bcast, &net, &p_grid, &m_grid).unwrap();
+        let c = t.stats();
+        let cells = (p_grid.len() * m_grid.len()) as u64;
+        let baseline = cells
+            * crate::eval::exhaustive_invocations_per_cell(&Strategy::BCAST, t.s_grid.len());
+        assert!(
+            c.model_invocations < baseline / 2,
+            "pruning saved too little: {} of {baseline}",
+            c.model_invocations
+        );
+        assert!(c.seg_searches_pruned > 0);
+        assert!(c.seg_points_skipped > 0);
+        assert!(c.warm_hits > c.warm_misses, "{c:?}");
     }
 
     #[test]

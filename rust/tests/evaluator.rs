@@ -3,12 +3,12 @@
 //! must be bit-deterministic, and the pruned argmin must be exact.
 
 use collective_tuner::collectives::Strategy;
-use collective_tuner::eval::{Evaluator, ModelEval, SimEval};
+use collective_tuner::eval::{exhaustive_invocations, Evaluator, ModelEval, SimEval};
 use collective_tuner::models;
 use collective_tuner::netsim::{NetConfig, Netsim, TcpConfig};
 use collective_tuner::plogp::{self, GapTable, PLogP};
 use collective_tuner::tuner::validate::{cross_validate, empirical_ranking, ValidateOptions};
-use collective_tuner::tuner::{grids, persist, Op, Tuner};
+use collective_tuner::tuner::{grids, persist, Decision, DecisionTable, Op, Tuner};
 use collective_tuner::util::prng::Prng;
 
 /// A random LAN-class switched-Ethernet config (ideal TCP): parameters
@@ -172,6 +172,111 @@ fn pruned_argmin_is_exact_on_random_gap_tables() {
             assert_eq!(d.strategy, want[0].0, "{op:?} P={p} m={m} s_grid={s_grid:?}");
             assert_eq!(d.predicted, want[0].1);
             assert_eq!(d.segment, want[0].2);
+        }
+    }
+}
+
+/// A random pLogP net over an adversarial (non-monotone) gap table —
+/// the regime where the sweep's pruning bounds are weakest (shared
+/// generator: [`plogp::adversarial_net`]).
+fn random_plogp(rng: &mut Prng) -> PLogP {
+    plogp::adversarial_net(rng, 24, 50_000.0)
+}
+
+/// Acceptance criterion (ISSUE 4): the pruned + warm-started +
+/// gap-cached sweep produces tables *byte-identical* to the exhaustive
+/// `rank_strategies` argmin for all 7 ops on randomized nets, at
+/// `--jobs 1` and `--jobs 8`.
+#[test]
+fn pruned_sweep_tables_are_byte_identical_to_exhaustive_argmin_for_all_ops() {
+    let mut rng = Prng::new(0x5EEB_0001);
+    for case in 0..3 {
+        let net = random_plogp(&mut rng);
+        let p_grid = vec![1usize, 2, 7, 24, 48];
+        let m_grid = grids::log_grid(1, 1 << 20, 10);
+        let tuner1 = Tuner::native().jobs(1);
+        let s_grid = tuner1.s_grid.clone();
+        for op in Op::ALL {
+            // the exhaustive reference: rank every cell, take the head
+            let mut entries: Vec<Decision> = Vec::new();
+            for &p in &p_grid {
+                for &m in &m_grid {
+                    let (strategy, predicted, segment) =
+                        models::rank_strategies(op.family(), &net, p, m, &s_grid)[0];
+                    entries.push(Decision { strategy, segment, predicted });
+                }
+            }
+            let reference = DecisionTable::new(op, p_grid.clone(), m_grid.clone(), entries);
+            let t1 = tuner1.tune_op(op, &net, &p_grid, &m_grid).unwrap();
+            let t8 = Tuner::native().jobs(8).tune_op(op, &net, &p_grid, &m_grid).unwrap();
+            assert_eq!(
+                persist::to_string(&t1),
+                persist::to_string(&reference),
+                "case {case}: pruned --jobs 1 {} table drifted from the exhaustive argmin",
+                op.name()
+            );
+            assert_eq!(
+                persist::to_string(&t8),
+                persist::to_string(&reference),
+                "case {case}: pruned --jobs 8 {} table drifted from the exhaustive argmin",
+                op.name()
+            );
+        }
+    }
+}
+
+/// Acceptance criterion (ISSUE 4): ≥5× fewer cost-model invocations
+/// than the unpruned baseline on the default 16×48×32 grids, asserted
+/// on the deterministic [`collective_tuner::eval::EvalStats`] counters
+/// — not wall time.
+#[test]
+fn pruned_sweep_cuts_model_invocations_5x_on_default_grids() {
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    let net = plogp::bench::measure(&mut sim);
+    let tuner = Tuner::native().jobs(1);
+    let p_grid = grids::default_p_grid();
+    let m_grid = grids::default_m_grid();
+    let _ = tuner.tune(&net, &p_grid, &m_grid).unwrap();
+    let counts = tuner.stats();
+    let cells = (p_grid.len() * m_grid.len()) as u64;
+    let families = [&Strategy::BCAST[..], &Strategy::SCATTER[..]];
+    let exhaustive = exhaustive_invocations(&families, cells, tuner.s_grid.len());
+    assert_eq!(counts.cells, 2 * cells);
+    assert!(
+        counts.model_invocations * 5 <= exhaustive,
+        "only {:.2}x fewer invocations ({} of {exhaustive}): {counts:?}",
+        counts.reduction_vs(exhaustive),
+        counts.model_invocations
+    );
+    // the individual mechanisms all contributed
+    assert!(counts.seg_searches_pruned > 0, "{counts:?}");
+    assert!(counts.seg_points_skipped > 0, "{counts:?}");
+    assert!(counts.warm_hits > counts.warm_misses, "{counts:?}");
+}
+
+/// The warm-start hint is advisory: feeding every cell a deliberately
+/// wrong hint still reproduces the unhinted tables byte-for-byte.
+#[test]
+fn adversarial_hints_cannot_change_decisions() {
+    let mut rng = Prng::new(0x5EEB_0002);
+    let net = random_plogp(&mut rng);
+    let s_grid = grids::default_s_grid();
+    for op in Op::ALL {
+        for p in [2usize, 48] {
+            for m in [1u64, 8192, 1 << 20] {
+                let bare = ModelEval.best(op, &net, p, m, &s_grid);
+                for hint in op.family() {
+                    let ctx = collective_tuner::eval::CellCtx {
+                        hint: Some(*hint),
+                        cache: None,
+                        stats: None,
+                    };
+                    let d = ModelEval.best_in(op, &net, p, m, &s_grid, &ctx);
+                    assert_eq!(d.strategy, bare.strategy, "{op:?} P={p} m={m} hint {hint:?}");
+                    assert_eq!(d.predicted, bare.predicted);
+                    assert_eq!(d.segment, bare.segment);
+                }
+            }
         }
     }
 }

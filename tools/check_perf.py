@@ -13,10 +13,21 @@ file first:
     cargo bench --bench tuner_sweep
     tools/check_perf.py /tmp/baseline.json BENCH_tuner.json
 
-Baseline entries whose ``mean_s`` is null (the original "pending"
-placeholders) are skipped with a note; the gate fails outright if
-*nothing* was comparable, so an accidentally emptied baseline cannot
-silently disable the gate.
+Besides the wall-time ``results``, a bench may emit a ``metrics`` list
+of deterministic counters (eval counts, reduction factors, hit rates),
+each entry ``{"name", "value", "larger_is_better"}``. Those are gated
+direction-aware with their own much tighter ``--metrics-tolerance``
+(default 5%): a smaller-is-better metric fails when the fresh value
+exceeds baseline*(1+tol), a larger-is-better metric fails when it
+drops below baseline*(1-tol). Counters are exact, so regressions there
+are sharp signals rather than machine noise — and a baselined metric
+that disappears from the fresh run fails the gate outright (dropping
+the emission must not silently disable it).
+
+Baseline entries whose ``mean_s`` (or metric ``value``) is null (the
+original "pending" placeholders) are skipped with a note; the gate
+fails outright if *nothing* was comparable, so an accidentally emptied
+baseline cannot silently disable the gate.
 """
 
 import argparse
@@ -39,6 +50,14 @@ def main():
         default=0.25,
         help="allowed relative regression (0.25 = fail at >25%% over baseline)",
     )
+    ap.add_argument(
+        "--metrics-tolerance",
+        type=float,
+        default=0.05,
+        help="allowed relative regression for deterministic 'metrics' entries "
+        "(counters are exact, so this is much tighter than the wall-time "
+        "tolerance; default 5%%)",
+    )
     args = ap.parse_args()
 
     base = load(args.baseline)
@@ -48,6 +67,7 @@ def main():
 
     failures = []
     compared = 0
+    compared_results = 0
     print(f"== perf gate: {name} (tolerance {args.tolerance:.0%}) ==")
     for r in fresh.get("results", []):
         rname = r.get("name")
@@ -64,6 +84,7 @@ def main():
             failures.append(f"{rname}: fresh run produced no mean_s")
             continue
         compared += 1
+        compared_results += 1
         limit = b_mean * (1.0 + args.tolerance)
         ratio = f_mean / b_mean if b_mean > 0 else float("inf")
         verdict = "ok" if f_mean <= limit else "REGRESSION"
@@ -77,6 +98,60 @@ def main():
                 f"by more than {args.tolerance:.0%}"
             )
 
+    base_metrics = {m.get("name"): m for m in base.get("metrics", [])}
+    seen_metrics = set()
+    for m in fresh.get("metrics", []):
+        mname = m.get("name")
+        seen_metrics.add(mname)
+        b = base_metrics.get(mname)
+        if b is None:
+            print(f"  {mname}: NEW metric (no baseline entry, not gated)")
+            continue
+        b_val = b.get("value")
+        f_val = m.get("value")
+        if b_val is None:
+            print(f"  {mname}: baseline pending, not gated")
+            continue
+        if f_val is None:
+            failures.append(f"{mname}: fresh run produced no value")
+            continue
+        compared += 1
+        larger_is_better = bool(b.get("larger_is_better", m.get("larger_is_better", False)))
+        if larger_is_better:
+            limit = b_val * (1.0 - args.metrics_tolerance)
+            ok = f_val >= limit
+            direction = "floor"
+        else:
+            limit = b_val * (1.0 + args.metrics_tolerance)
+            ok = f_val <= limit
+            direction = "ceiling"
+        ratio = f_val / b_val if b_val else float("inf")
+        print(
+            f"  {mname}: fresh {f_val:.6g} vs baseline {b_val:.6g} "
+            f"({ratio:.2f}x, {direction} {limit:.6g}) -> "
+            f"{'ok' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append(
+                f"{mname}: {f_val:.6g} breaks the baseline {direction} {limit:.6g}"
+            )
+    # a baselined (non-pending) metric the fresh run stopped emitting is a
+    # gate-disabling change, not a pass
+    for mname, b in base_metrics.items():
+        if b.get("value") is not None and mname not in seen_metrics:
+            failures.append(f"{mname}: baselined metric missing from the fresh run")
+
+    # metrics passing must not mask a disabled wall-time gate: if the
+    # baseline defines any non-pending wall-time result, at least one
+    # must have been compared
+    baseline_gates_walltime = any(
+        r.get("mean_s") is not None for r in base.get("results", [])
+    )
+    if baseline_gates_walltime and compared_results == 0:
+        failures.append(
+            "no comparable wall-time results despite a non-pending baseline: "
+            "the wall-time gate is silently disabled"
+        )
     if compared == 0:
         failures.append("no comparable results: the baseline gates nothing")
     for f in failures:
