@@ -130,11 +130,32 @@ COMMANDS:
   tune          build decision tables for any collective family
                   --op bcast,scatter|gather|barrier|allgather|allreduce|all
                       (comma-separated; default bcast,scatter)
-                  --procs 2,8,24,48   --backend auto|native|artifact
+                  --procs 2,8,24,48   --backend auto|native|artifact|replay
+                  --trace-dir dir/    (replay backend: tune from captured
+                                       traces over the captured grids)
                   --jobs N            (parallel sweep workers; 0 = all cores)
                   --save results/     (persist tables as TSV)
                   --stats             (sweep counters: model invocations,
                                        pruned searches, warm-start hits)
+  record        capture message traces: run every strategy of each op on
+                the traced simulator and persist one trace per
+                (op, strategy, P, m) cell — the replay backend's input
+                  --trace-dir dir/    (output; required)
+                  --op <list|all>     (default bcast,scatter)
+                  --procs 2,4,8,16,32 --mpoints 9   (capture grids)
+                  --capacity 65536    (per-run trace ring capacity)
+  replay        tune from captured traces (deterministic regression mode):
+                exact scores for captured cells, gap-model interpolation
+                in between, +inf for anything unobserved
+                  --trace-dir dir/    (required)  --op <list|all>
+                  --jobs N  --save results/  --stats  (replay coverage)
+  validate      cross-check two evaluation backends: the candidate picks
+                per-cell winners, the reference judges them
+                  --candidate native|sim|replay     (default native)
+                  --reference sim|replay            (default sim)
+                  --trace-dir dir/    (required when either side is replay;
+                                       grids default to the captured ones)
+                  --op <list|all>     (default bcast,scatter)
   run           execute one collective on the simulated cluster
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --strategy <name|auto>  --procs 24  --bytes 64k  --segment 8k
@@ -158,6 +179,8 @@ COMMANDS:
                   --procs 24  --bytes 64k
                   --cluster default   --nodes 50  --preset icluster1
                   --save dir/  --warm dir/        (persist / warm-start tables)
+                  --traces dir/  (warm-start from captured traces: replay-tune
+                                  the recorded workload, needs --op all capture)
                   --stats        (one JSON blob: cache hit/miss + sweep counters)
   info          show artifact metadata and presets
   help          this text
@@ -166,6 +189,9 @@ EXAMPLES:
   collective-tuner bench-plogp --preset icluster1
   collective-tuner tune --procs 8,24,48 --backend auto
   collective-tuner tune --op allreduce --jobs 8
+  collective-tuner record --op all --trace-dir traces/ --procs 2,4,8,16
+  collective-tuner replay --trace-dir traces/ --op bcast --stats
+  collective-tuner validate --candidate native --reference replay --trace-dir traces/
   collective-tuner run --op bcast --strategy auto --procs 24 --bytes 256k
   collective-tuner run --op allgather --strategy ring --procs 16 --bytes 64k
   collective-tuner query --op barrier --procs 32 --nodes 32

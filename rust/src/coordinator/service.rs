@@ -23,7 +23,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::eval::EvalCounts;
+use crate::eval::{EvalCounts, ReplayEval};
 use crate::netsim::{Netsim, NodeId};
 use crate::plogp::{bench, GapTable, PLogP};
 use crate::topology::GridSpec;
@@ -431,6 +431,52 @@ impl Coordinator {
         Ok(saved)
     }
 
+    /// Warm-start from a directory of captured traces (the `record`
+    /// CLI subcommand's output): replay-tune one [`TableSet`] over the
+    /// captured grids, register the captured network as `cluster`, and
+    /// pre-warm the cache with the result — tuned tables grounded in a
+    /// *recorded* workload rather than a live backend. Requires full op
+    /// coverage (`record --op all`) and full strategy coverage of the
+    /// captured grid: any cell whose every candidate went unobserved
+    /// would tune to `+inf`, and serving that is refused loudly.
+    pub fn warm_start_from_traces(&self, dir: &Path, cluster: &str) -> Result<ClusterSignature> {
+        let replay = ReplayEval::load(dir)?;
+        let captured_ops = replay.set().ops();
+        for op in Op::ALL {
+            if !captured_ops.iter().any(|o| o == op.name()) {
+                bail!(
+                    "{}: no '{}' traces captured; a coordinator warm start needs every \
+                     op family (re-record with --op all)",
+                    dir.display(),
+                    op.name()
+                );
+            }
+        }
+        let p_grid = replay.set().p_values();
+        let m_grid = replay.set().m_values();
+        let nodes = replay.set().max_p().expect("non-empty set");
+        let net = replay.net().clone();
+        let tuner = Tuner::with_evaluator(Box::new(replay)).jobs(self.cfg.jobs);
+        let tables = tuner.tune_all(&net, &p_grid, &m_grid)?;
+        for table in &tables {
+            for (i, d) in table.entries.iter().enumerate() {
+                if !d.predicted.is_finite() {
+                    bail!(
+                        "{}: captured traces cover no '{}' strategy at grid cell \
+                         (P={}, m={}) — refusing to warm-start from an unobserved cell",
+                        dir.display(),
+                        table.op.name(),
+                        table.p_grid[i / table.m_grid.len()],
+                        table.m_grid[i % table.m_grid.len()]
+                    );
+                }
+            }
+        }
+        let sig = self.register(cluster, nodes, net);
+        self.cache.insert(sig, Arc::new(TableSet::new(tables)));
+        Ok(sig)
+    }
+
     /// Load a directory written by [`Coordinator::persist_to`]:
     /// re-register every cluster and pre-warm the cache with every table
     /// set found on disk. Returns the number of table sets loaded.
@@ -615,6 +661,41 @@ mod tests {
         assert_eq!(c.tune_count(), 1);
         let st = c.stats();
         assert!(st.cache.hits >= 9, "{st:?}");
+    }
+
+    #[test]
+    fn warm_start_from_traces_builds_served_tables_without_a_tuner_run() {
+        use crate::harness::experiments::record_traces;
+
+        let dir = std::env::temp_dir().join("ct-coord-trace-warm-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let p_grid = [2usize, 4, 8];
+        let m_grid = [64u64, 4096];
+        let (set, _net) = record_traces(&cfg, &Op::ALL, &p_grid, &m_grid, &[1024, 8192], 1 << 14);
+        set.save_dir(&dir).unwrap();
+
+        let c = Coordinator::new(small_config());
+        let sig = c.warm_start_from_traces(&dir, "captured").unwrap();
+        // served straight from the replay-tuned cache: no tuner run
+        for op in Op::ALL {
+            let d = c.decision(op, "captured", 4, 4096).unwrap();
+            assert!(op.family().contains(&d.strategy), "{d:?}");
+            assert!(d.predicted.is_finite() && d.predicted > 0.0);
+        }
+        assert_eq!(c.tune_count(), 0);
+        assert_eq!(c.cluster("captured").unwrap().nodes, 8);
+        assert!(c.cluster("captured").unwrap().signature == sig);
+
+        // a partial capture (one op family missing) is refused loudly
+        let partial = std::env::temp_dir().join("ct-coord-trace-warm-partial");
+        let _ = std::fs::remove_dir_all(&partial);
+        let (set, _) = record_traces(&cfg, &[Op::Bcast], &p_grid, &m_grid, &[1024, 8192], 1 << 14);
+        set.save_dir(&partial).unwrap();
+        let err = c.warm_start_from_traces(&partial, "partial").unwrap_err();
+        assert!(err.to_string().contains("--op all"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&partial).ok();
     }
 
     #[test]

@@ -1,7 +1,7 @@
-//! The evaluation layer: one trait, three ways to score a collective.
+//! The evaluation layer: one trait, four ways to score a collective.
 //!
 //! The paper's entire premise is that a `(strategy, P, m, segment)`
-//! point can be scored three interchangeable ways:
+//! point can be scored several interchangeable ways:
 //!
 //! * **analytically** — the closed-form pLogP cost models of Tables 1
 //!   and 2 ([`ModelEval`], wrapping the strategy-indexed registry in
@@ -9,7 +9,15 @@
 //! * **empirically** — build the schedule and run it on the simulated
 //!   cluster ([`SimEval`], wrapping [`crate::mpi::World`] over
 //!   [`crate::netsim::Netsim`]); this is the exhaustive benchmarking
-//!   the paper replaces, kept as ground truth for validation;
+//!   the paper replaces, kept as ground truth for validation. With a
+//!   [`TraceRecorder`] attached it doubles as the capture path: every
+//!   run's message trace is persisted in the versioned format of
+//!   [`crate::netsim::TraceSet`];
+//! * **by replaying captured traces** — [`ReplayEval`] scores from a
+//!   recorded [`crate::netsim::TraceSet`]: exact lookups for captured
+//!   cells, gap-model interpolation between captured sizes, `+inf` plus
+//!   a counted miss ([`ReplayStats`]) for everything unobserved — the
+//!   fixed-workload regression backend the golden-trace CI suite runs;
 //! * **via the AOT artifact** — one PJRT execution of the compiled XLA
 //!   kernel evaluates the whole decision tensor at once
 //!   ([`ArtifactEval`], wrapping [`crate::runtime::TunerArtifact`]).
@@ -17,9 +25,10 @@
 //! Everything above this layer — the tuner's grid sweep, the
 //! model-vs-simulation cross-check in [`crate::tuner::validate`], the
 //! coordinator's cold-miss tuning — talks to the [`Evaluator`] trait
-//! only, so new backends (a real-MPI runner, trace replay) drop in
-//! without touching the tuner. The trait is `Send + Sync`: the tuner's
-//! parallel sweep shares one evaluator across its worker threads.
+//! only, so new backends (a real-MPI runner emitting the same trace
+//! format) drop in without touching the tuner. The trait is
+//! `Send + Sync`: the tuner's parallel sweep shares one evaluator
+//! across its worker threads.
 //!
 //! The trait covers *every* collective family, not just the paper's
 //! broadcast and scatter: the extended ops (gather / reduce / barrier /
@@ -37,12 +46,14 @@
 
 mod artifact;
 mod model;
+mod replay;
 mod sim;
 mod stats;
 
 pub use artifact::ArtifactEval;
 pub use model::ModelEval;
-pub use sim::SimEval;
+pub use replay::{ReplayEval, ReplayStats};
+pub use sim::{SimEval, TraceRecorder, DEFAULT_TRACE_CAPACITY};
 pub use stats::{exhaustive_invocations, exhaustive_invocations_per_cell, EvalCounts, EvalStats};
 
 use anyhow::Result;
@@ -218,6 +229,7 @@ mod tests {
         assert_ss::<ModelEval>();
         assert_ss::<SimEval>();
         assert_ss::<ArtifactEval>();
+        assert_ss::<ReplayEval>();
         assert_ss::<Box<dyn Evaluator>>();
     }
 

@@ -1,0 +1,411 @@
+//! [`ReplayEval`] — the trace-replay backend: score strategies from a
+//! recorded [`TraceSet`] instead of a live simulator.
+//!
+//! This is the repeatable-regression half of the paper's methodology:
+//! capture one empirical sweep (`SimEval`'s record mode, the `record`
+//! CLI subcommand, or — eventually — a real-MPI run emitting the same
+//! format), commit the traces, and every later tuning or validation run
+//! replays the *fixed* workload deterministically. Scoring works at
+//! three levels of fidelity:
+//!
+//! * **exact** — the queried `(op, strategy, P, m, segment)` point was
+//!   captured: the score is the record's reconstructed critical path
+//!   (the last recorded delivery — equal to the executor's reported
+//!   completion, and robust to ring-buffer drops, which only lose the
+//!   oldest events). A segment-less query against a captured cell
+//!   resolves to the cell's tuned-segment run, exactly the schedule a
+//!   deployed runtime would execute.
+//! * **interpolated** — `m` falls between two captured sizes of the
+//!   same `(op, strategy, P)` column: the score is interpolated between
+//!   the bracketing records *in gap-model coordinates* — linear in the
+//!   captured network's `g(m)` rather than in raw `m`, because
+//!   per-message cost grows with the pLogP gap, not linearly in bytes —
+//!   clamped to the bracketing scores (degenerate gap spans fall back
+//!   to log-`m` interpolation).
+//! * **miss** — the strategy/P was never captured, or `m` lies outside
+//!   the captured range: the score is `+inf` (the argmin can never
+//!   select an unobserved strategy) and the miss is counted in
+//!   [`ReplayStats`], the replay analogue of the sweep's
+//!   [`super::EvalStats`] counters.
+//!
+//! Like every backend, `ReplayEval` is a plain [`Evaluator`]: the
+//! tuner's sweep, `cross_validate`, and the coordinator consume it with
+//! zero signature changes (asserted in `rust/tests/replay_golden.rs`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::collectives::Strategy;
+use crate::models;
+use crate::netsim::{TraceKey, TraceSet};
+use crate::plogp::{GapTable, PLogP};
+use crate::tuner::decision::Op;
+
+use super::Evaluator;
+
+/// Relaxed-atomic replay counters (shared by clones of one
+/// [`ReplayEval`], mirroring the [`super::EvalStats`] idiom).
+#[derive(Debug, Default)]
+struct Counters {
+    exact: AtomicU64,
+    interpolated: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// One point-in-time reading of a replay's coverage counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplayStats {
+    /// Records in the backing trace set.
+    pub records: u64,
+    /// Events across those records.
+    pub events: u64,
+    /// Queries answered from a captured cell.
+    pub exact_hits: u64,
+    /// Queries answered by gap-model interpolation between captured m's.
+    pub interp_hits: u64,
+    /// Queries outside the captured workload (scored `+inf`).
+    pub misses: u64,
+}
+
+impl ReplayStats {
+    /// Fraction of queries answered from the capture (exact or
+    /// interpolated).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.exact_hits + self.interp_hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.exact_hits + self.interp_hits) as f64 / total as f64
+        }
+    }
+
+    /// Flat JSON object for `replay`/`validate` CLI output.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"records\":{},\"events\":{},\"exact_hits\":{},\"interp_hits\":{},\
+             \"misses\":{},\"hit_rate\":{:.4}}}",
+            self.records,
+            self.events,
+            self.exact_hits,
+            self.interp_hits,
+            self.misses,
+            self.hit_rate()
+        )
+    }
+}
+
+/// The trace-replay evaluator. Cheap to clone (the set and counters are
+/// shared), so a caller can keep a handle for [`ReplayEval::stats`]
+/// after boxing a clone into a [`crate::tuner::Tuner`].
+#[derive(Debug, Clone)]
+pub struct ReplayEval {
+    set: Arc<TraceSet>,
+    net: PLogP,
+    counters: Arc<Counters>,
+}
+
+impl ReplayEval {
+    /// Build over a captured set. Fails on an empty set and on a set
+    /// whose records disagree about the network they were captured on
+    /// (mixed-network merges have no single replay signature).
+    pub fn new(set: TraceSet) -> Result<ReplayEval> {
+        let first = match set.records().next() {
+            Some(r) => r.meta.clone(),
+            None => bail!("empty trace set: nothing to replay"),
+        };
+        for r in set.records() {
+            if r.meta.plogp_l != first.plogp_l
+                || r.meta.plogp_sizes != first.plogp_sizes
+                || r.meta.plogp_gaps != first.plogp_gaps
+            {
+                bail!(
+                    "trace set mixes networks: '{}' and '{}' carry different pLogP \
+                     signatures",
+                    first.key().file_name(),
+                    r.meta.key().file_name()
+                );
+            }
+        }
+        let net = PLogP::new(
+            first.plogp_l,
+            GapTable::new(first.plogp_sizes.clone(), first.plogp_gaps.clone()),
+        );
+        Ok(ReplayEval { set: Arc::new(set), net, counters: Arc::new(Counters::default()) })
+    }
+
+    /// Load every trace under `dir` and build the evaluator.
+    pub fn load(dir: &Path) -> Result<ReplayEval> {
+        ReplayEval::new(
+            TraceSet::load_dir(dir)
+                .with_context(|| format!("loading trace directory {}", dir.display()))?,
+        )
+    }
+
+    /// The backing trace set.
+    pub fn set(&self) -> &TraceSet {
+        &self.set
+    }
+
+    /// The pLogP parameters the traces were captured under (drives the
+    /// gap-model interpolation and stands in for a fresh measurement).
+    pub fn net(&self) -> &PLogP {
+        &self.net
+    }
+
+    /// Snapshot of the replay coverage counters.
+    pub fn stats(&self) -> ReplayStats {
+        ReplayStats {
+            records: self.set.len() as u64,
+            events: self.set.total_events() as u64,
+            exact_hits: self.counters.exact.load(Ordering::Relaxed),
+            interp_hits: self.counters.interpolated.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the coverage counters.
+    pub fn reset_stats(&self) {
+        self.counters.exact.store(0, Ordering::Relaxed);
+        self.counters.interpolated.store(0, Ordering::Relaxed);
+        self.counters.misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Score one point from the capture (see the module docs for the
+    /// exact / interpolated / miss ladder).
+    fn score(&self, op: Op, strategy: Strategy, p: usize, m: u64, seg: Option<u64>) -> f64 {
+        let op_name = op.name();
+        let strat_name = strategy.name();
+        if let Some(s) = seg {
+            let key = TraceKey {
+                op: op_name.to_string(),
+                strategy: strat_name.to_string(),
+                p,
+                m,
+                segment: Some(s),
+            };
+            if let Some(rec) = self.set.get(&key) {
+                self.counters.exact.fetch_add(1, Ordering::Relaxed);
+                return rec.critical_path().as_secs();
+            }
+        }
+        // a captured cell answers any segment variant with its tuned run
+        if let Some(rec) = self.set.at_cell(op_name, strat_name, p, m) {
+            self.counters.exact.fetch_add(1, Ordering::Relaxed);
+            return rec.critical_path().as_secs();
+        }
+        if let Some(t) = self.interpolate(op_name, strat_name, p, m) {
+            self.counters.interpolated.fetch_add(1, Ordering::Relaxed);
+            return t;
+        }
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        f64::INFINITY
+    }
+
+    /// Gap-model interpolation between the two captured sizes
+    /// bracketing `m` in the `(op, strategy, p)` column. `None` when no
+    /// bracket exists (uncaptured column, or `m` outside its range —
+    /// replay never extrapolates an unobserved regime).
+    fn interpolate(&self, op: &str, strategy: &str, p: usize, m: u64) -> Option<f64> {
+        let column = self.set.cells_for(op, strategy, p);
+        let hi = column.iter().position(|r| r.meta.m > m)?;
+        if hi == 0 {
+            return None; // m below the captured range
+        }
+        let (lo_rec, hi_rec) = (column[hi - 1], column[hi]);
+        let (t0, t1) = (lo_rec.critical_path().as_secs(), hi_rec.critical_path().as_secs());
+        let (x0, x1) = (self.net.gap(lo_rec.meta.m as f64), self.net.gap(hi_rec.meta.m as f64));
+        let frac = if (x1 - x0).abs() > f64::EPSILON * x1.abs() {
+            (self.net.gap(m as f64) - x0) / (x1 - x0)
+        } else {
+            // flat gap span: fall back to log-m interpolation
+            ((m as f64) / (lo_rec.meta.m as f64)).ln()
+                / ((hi_rec.meta.m as f64) / (lo_rec.meta.m as f64)).ln()
+        };
+        let t = t0 + frac * (t1 - t0);
+        // stay inside the observed bracket even on a non-monotone gap
+        Some(t.clamp(t0.min(t1), t0.max(t1)))
+    }
+}
+
+impl Evaluator for ReplayEval {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn predict(
+        &self,
+        op: Op,
+        strategy: Strategy,
+        p: usize,
+        m: u64,
+        seg: Option<u64>,
+        _net: &PLogP,
+    ) -> f64 {
+        self.score(op, strategy, p, m, seg)
+    }
+
+    /// Captured cells return their tuned segment's recorded run (the
+    /// capture already executed the model-tuned segment — same policy
+    /// as [`super::SimEval`]); uncaptured cells tune the segment
+    /// analytically against the captured network and score the result
+    /// through the interpolation/miss ladder.
+    fn tune_segment(
+        &self,
+        strategy: Strategy,
+        _net: &PLogP,
+        p: usize,
+        m: u64,
+        s_grid: &[u64],
+    ) -> (f64, u64) {
+        let op = Op::of(strategy);
+        if let Some(rec) = self.set.at_cell(op.name(), strategy.name(), p, m) {
+            self.counters.exact.fetch_add(1, Ordering::Relaxed);
+            return (rec.critical_path().as_secs(), rec.meta.segment.unwrap_or(m));
+        }
+        let (_, seg) = models::best_segment(strategy, &self.net, p, m, s_grid);
+        (self.score(op, strategy, p, m, Some(seg)), seg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{SimEval, TraceRecorder};
+    use crate::netsim::NetConfig;
+
+    /// Capture a small bcast+scatter sweep on the ideal network.
+    fn captured() -> (TraceSet, NetConfig) {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let rec = Arc::new(TraceRecorder::new(&cfg, 1 << 14));
+        let eval = SimEval::new(cfg.clone()).with_recorder(Arc::clone(&rec));
+        let net = rec.net().clone();
+        let s_grid = [1024u64, 8192];
+        for op in [Op::Bcast, Op::Scatter] {
+            for &strategy in op.family() {
+                for p in [4usize, 8] {
+                    for m in [256u64, 65536] {
+                        let mut seg = None;
+                        if strategy.is_segmented() {
+                            seg = Some(models::best_segment(strategy, &net, p, m, &s_grid).1);
+                        }
+                        eval.measure(strategy, p, m, seg);
+                    }
+                }
+            }
+        }
+        (rec.take(), cfg)
+    }
+
+    #[test]
+    fn empty_and_mixed_sets_are_rejected() {
+        assert!(ReplayEval::new(TraceSet::new()).is_err());
+        let (set, _) = captured();
+        let mut mixed = set.clone();
+        let mut alien = set.records().next().unwrap().clone();
+        alien.meta.plogp_l *= 2.0;
+        alien.meta.p += 1;
+        mixed.insert(alien);
+        assert!(ReplayEval::new(mixed).is_err());
+    }
+
+    #[test]
+    fn exact_cells_reproduce_the_simulator_bit_for_bit() {
+        let (set, cfg) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let sim = SimEval::new(cfg);
+        let net = replay.net().clone();
+        for op in [Op::Bcast, Op::Scatter] {
+            for &strategy in op.family() {
+                if strategy.is_segmented() {
+                    continue; // exercised via tune_segment below
+                }
+                for p in [4usize, 8] {
+                    for m in [256u64, 65536] {
+                        let r = replay.predict(op, strategy, p, m, None, &net);
+                        let s = sim.predict(op, strategy, p, m, None, &net);
+                        assert_eq!(r, s, "{} p={p} m={m}", strategy.name());
+                    }
+                }
+            }
+        }
+        let st = replay.stats();
+        assert!(st.exact_hits > 0 && st.misses == 0, "{st:?}");
+    }
+
+    #[test]
+    fn captured_cells_answer_segment_queries_with_the_tuned_run() {
+        let (set, _) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let net = replay.net().clone();
+        let (t, seg) = replay.tune_segment(Strategy::BcastSegChain, &net, 8, 65536, &[1024, 8192]);
+        assert!(t.is_finite() && t > 0.0);
+        let want = models::best_segment(Strategy::BcastSegChain, &net, 8, 65536, &[1024, 8192]).1;
+        assert_eq!(seg, want, "capture ran the model-tuned segment");
+    }
+
+    #[test]
+    fn in_between_sizes_interpolate_within_the_bracket() {
+        let (set, _) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let net = replay.net().clone();
+        let t_lo = replay.predict(Op::Bcast, Strategy::BcastBinomial, 8, 256, None, &net);
+        let t_hi = replay.predict(Op::Bcast, Strategy::BcastBinomial, 8, 65536, None, &net);
+        let t_mid = replay.predict(Op::Bcast, Strategy::BcastBinomial, 8, 4096, None, &net);
+        assert!(t_mid.is_finite());
+        assert!(t_mid >= t_lo.min(t_hi) && t_mid <= t_lo.max(t_hi), "{t_lo} {t_mid} {t_hi}");
+        assert_eq!(replay.stats().interp_hits, 1);
+    }
+
+    #[test]
+    fn uncaptured_points_miss_with_infinite_score() {
+        let (set, _) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let net = replay.net().clone();
+        // never-captured family
+        let t = replay.predict(Op::Gather, Strategy::GatherFlat, 8, 256, None, &net);
+        assert!(t.is_infinite());
+        // captured strategy, uncaptured P
+        let t = replay.predict(Op::Bcast, Strategy::BcastBinomial, 12, 256, None, &net);
+        assert!(t.is_infinite());
+        // m outside the captured range is a miss, not an extrapolation
+        let t = replay.predict(Op::Bcast, Strategy::BcastBinomial, 8, 1 << 20, None, &net);
+        assert!(t.is_infinite());
+        let st = replay.stats();
+        assert_eq!(st.misses, 3);
+        assert!(st.hit_rate() < 1.0);
+        assert!(st.to_json().contains("\"misses\":3"));
+    }
+
+    #[test]
+    fn best_never_selects_an_unobserved_strategy() {
+        let (set, _) = captured();
+        // drop every binomial bcast record: the argmin must fall back
+        // to an observed strategy rather than score the hole
+        let mut pruned = TraceSet::new();
+        for r in set.records() {
+            if r.meta.strategy != "bcast/binomial" {
+                pruned.insert(r.clone());
+            }
+        }
+        let replay = ReplayEval::new(pruned).unwrap();
+        let net = replay.net().clone();
+        let d = replay.best(Op::Bcast, &net, 8, 256, &[1024, 8192]);
+        assert_ne!(d.strategy, Strategy::BcastBinomial);
+        assert!(d.predicted.is_finite());
+    }
+
+    #[test]
+    fn clones_share_the_set_and_counters() {
+        let (set, _) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let clone = replay.clone();
+        let net = replay.net().clone();
+        clone.predict(Op::Bcast, Strategy::BcastFlat, 8, 256, None, &net);
+        assert_eq!(replay.stats().exact_hits, 1, "counters are shared");
+        replay.reset_stats();
+        assert_eq!(clone.stats().exact_hits, 0);
+    }
+}

@@ -11,27 +11,93 @@
 //! invocations in [`super::EvalStats`] — `best_in` falls through to the
 //! default exhaustive [`super::Evaluator::best`].
 
+use std::sync::{Arc, Mutex};
+
 use crate::collectives::Strategy;
 use crate::models;
 use crate::mpi::World;
-use crate::netsim::{NetConfig, Netsim};
+use crate::netsim::{NetConfig, Netsim, TraceMeta, TraceRecord, TraceSet};
 use crate::plogp::{self, PLogP};
 use crate::tuner::decision::Op;
 
 use super::Evaluator;
 
+/// Capture sink for [`SimEval`]'s record mode: every measured run's
+/// message trace is drained into a shared [`TraceSet`], keyed by the
+/// `(op, strategy, p, m, segment)` point it executed and stamped with
+/// the pLogP signature of the captured network (measured once, at
+/// construction, on a two-node probe of the same configuration). The
+/// interior mutex keeps the recorder shareable across the tuner's sweep
+/// workers — contention is irrelevant next to the simulation itself.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    net: PLogP,
+    capacity: usize,
+    set: Mutex<TraceSet>,
+}
+
+/// Default per-run ring capacity: enough for every non-degenerate
+/// schedule at paper scale; heavily-segmented giants drop their oldest
+/// events (counted in the record's metadata, harmless to replay — the
+/// critical path lives in the newest events).
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+impl TraceRecorder {
+    /// Probe `cfg`'s pLogP parameters and build an empty recorder whose
+    /// per-run ring buffers hold `capacity` events.
+    pub fn new(cfg: &NetConfig, capacity: usize) -> TraceRecorder {
+        assert!(capacity > 0);
+        let mut sim = Netsim::new(2, cfg.clone());
+        let net = plogp::bench::measure(&mut sim);
+        TraceRecorder { net, capacity, set: Mutex::new(TraceSet::new()) }
+    }
+
+    /// The captured network's pLogP parameters (stamped on every record).
+    pub fn net(&self) -> &PLogP {
+        &self.net
+    }
+
+    /// Records captured so far.
+    pub fn len(&self) -> usize {
+        self.set.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.lock().unwrap().is_empty()
+    }
+
+    /// Drain the captured set (the recorder keeps recording afterwards).
+    pub fn take(&self) -> TraceSet {
+        std::mem::take(&mut *self.set.lock().unwrap())
+    }
+
+    fn store(&self, rec: TraceRecord) {
+        self.set.lock().unwrap().insert(rec);
+    }
+}
+
 /// Scores strategies by actually running them on a simulated cluster of
 /// the given configuration. Construction is cheap (the simulator is
 /// built per measurement, so `&self` stays shareable across the tuner's
-/// worker threads).
+/// worker threads). With [`SimEval::with_recorder`] attached, every
+/// measured run additionally drains its message trace into the shared
+/// [`TraceRecorder`] — the capture side of the trace-replay pipeline.
 #[derive(Debug, Clone)]
 pub struct SimEval {
     cfg: NetConfig,
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl SimEval {
     pub fn new(cfg: NetConfig) -> SimEval {
-        SimEval { cfg }
+        SimEval { cfg, recorder: None }
+    }
+
+    /// Record mode: attach a trace to every measured run and file the
+    /// result in `recorder`.
+    pub fn with_recorder(mut self, recorder: Arc<TraceRecorder>) -> SimEval {
+        self.recorder = Some(recorder);
+        self
     }
 
     pub fn config(&self) -> &NetConfig {
@@ -61,9 +127,31 @@ impl SimEval {
                 return f64::INFINITY;
             }
         };
-        let mut world = World::new(Netsim::new(p, self.cfg.clone()));
+        let mut sim = Netsim::new(p, self.cfg.clone());
+        if let Some(rec) = &self.recorder {
+            sim.enable_trace(rec.capacity);
+        }
+        let mut world = World::new(sim);
         let rep = world.run(&sched);
         debug_assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        if let Some(rec) = &self.recorder {
+            let trace = world.sim().trace().expect("trace was enabled above");
+            rec.store(TraceRecord {
+                meta: TraceMeta {
+                    op: Op::of(strategy).name().to_string(),
+                    strategy: strategy.name().to_string(),
+                    p,
+                    m,
+                    segment: seg,
+                    completion_ns: rep.completion.0,
+                    dropped: trace.dropped(),
+                    plogp_l: rec.net.l,
+                    plogp_sizes: rec.net.table.sizes().to_vec(),
+                    plogp_gaps: rec.net.table.gaps().to_vec(),
+                },
+                events: trace.events(),
+            });
+        }
         rep.completion.as_secs()
     }
 }
@@ -142,6 +230,42 @@ mod tests {
         // +inf instead of panicking, so the argmin skips them
         let over = crate::mpi::Payload::MAX_MASK_RANKS + 1;
         assert!(e.measure(Strategy::AllReduceRecDoubling, over, 64, None).is_infinite());
+    }
+
+    #[test]
+    fn recorder_captures_one_record_per_measured_cell() {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let rec = Arc::new(TraceRecorder::new(&cfg, 1 << 12));
+        let e = SimEval::new(cfg).with_recorder(Arc::clone(&rec));
+        let t = e.measure(Strategy::BcastBinomial, 8, 4096, None);
+        assert_eq!(rec.len(), 1);
+        let set = rec.take();
+        let r = set.at_cell("bcast", "bcast/binomial", 8, 4096).unwrap();
+        assert_eq!(r.meta.dropped, 0);
+        assert!(!r.events.is_empty());
+        // the recorded critical path IS the measurement
+        assert_eq!(r.critical_path().as_secs(), t);
+        assert_eq!(r.meta.completion_ns, r.critical_path().0);
+        // the pLogP stamp matches the probe
+        assert_eq!(r.meta.plogp_l, rec.net().l);
+        // unschedulable points run nothing and record nothing
+        let over = crate::mpi::Payload::MAX_MASK_RANKS + 1;
+        assert!(e.measure(Strategy::AllReduceRecDoubling, over, 64, None).is_infinite());
+        assert!(rec.is_empty(), "take() drained and the bad point added nothing");
+    }
+
+    #[test]
+    fn recorder_survives_ring_wraparound() {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let rec = Arc::new(TraceRecorder::new(&cfg, 2));
+        let e = SimEval::new(cfg).with_recorder(Arc::clone(&rec));
+        e.measure(Strategy::BcastBinomial, 16, 4096, None);
+        let set = rec.take();
+        let r = set.at_cell("bcast", "bcast/binomial", 16, 4096).unwrap();
+        assert!(r.meta.dropped > 0, "16 ranks cannot fit a 2-event ring");
+        assert_eq!(r.events.len(), 2);
+        // drops lose the oldest events, so the critical path survives
+        assert_eq!(r.critical_path().0, r.meta.completion_ns);
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! against the *model* predictions fed by pLogP parameters measured with
 //! the benchmark tool, exactly the paper's methodology.
 
+use std::sync::Arc;
+
 use crate::collectives::Strategy;
-use crate::eval::SimEval;
+use crate::eval::{SimEval, TraceRecorder};
 use crate::models;
-use crate::netsim::NetConfig;
+use crate::netsim::{NetConfig, TraceSet};
 use crate::plogp::PLogP;
 use crate::tuner::validate::{validate_selection, ValidateOptions};
 use crate::tuner::{grids, Op};
@@ -22,6 +24,41 @@ use super::{ExperimentResult, Series};
 /// no longer carries its own measurement helpers.
 pub fn measure_net(cfg: &NetConfig) -> PLogP {
     SimEval::new(cfg.clone()).measure_net()
+}
+
+/// The harness's record mode: execute every strategy of every listed
+/// op at every `(P, m)` grid cell on a traced simulator and return one
+/// [`crate::netsim::TraceRecord`] per cell (segmented strategies run
+/// their model-tuned segment — the schedule a deployed runtime would
+/// execute, and what [`crate::eval::ReplayEval`] replays as an exact
+/// cell). Also returns the captured network's pLogP parameters.
+pub fn record_traces(
+    cfg: &NetConfig,
+    ops: &[Op],
+    p_grid: &[usize],
+    m_grid: &[u64],
+    s_grid: &[u64],
+    capacity: usize,
+) -> (TraceSet, PLogP) {
+    let recorder = Arc::new(TraceRecorder::new(cfg, capacity));
+    let net = recorder.net().clone();
+    let eval = SimEval::new(cfg.clone()).with_recorder(Arc::clone(&recorder));
+    for &op in ops {
+        for &strategy in op.family() {
+            for &p in p_grid {
+                for &m in m_grid {
+                    let seg = if strategy.is_segmented() {
+                        Some(models::best_segment(strategy, &net, p, m, s_grid).1)
+                    } else {
+                        None
+                    };
+                    // unschedulable points score +inf and record nothing
+                    let _ = eval.measure(strategy, p, m, seg);
+                }
+            }
+        }
+    }
+    (recorder.take(), net)
 }
 
 /// Shared driver: measured-vs-predicted sweep over message sizes for one
@@ -460,6 +497,29 @@ mod tests {
                 .parse()
                 .unwrap();
             assert!(pct >= 90.0, "{note}");
+        }
+    }
+
+    #[test]
+    fn record_mode_captures_every_schedulable_cell() {
+        let (set, net) = record_traces(
+            &NetConfig::fast_ethernet_ideal(),
+            &[Op::Bcast, Op::AllReduce],
+            &[2, 4],
+            &[64, 4096],
+            &[1024, 8192],
+            1 << 14,
+        );
+        // every (strategy, p, m) cell of both families is schedulable
+        // at these scales, so every cell has exactly one record
+        let cells = (Strategy::BCAST.len() + Strategy::ALLREDUCE.len()) * 2 * 2;
+        assert_eq!(set.len(), cells);
+        assert_eq!(set.ops(), ["allreduce", "bcast"]);
+        assert_eq!(set.p_values(), [2, 4]);
+        assert_eq!(set.m_values(), [64, 4096]);
+        for r in set.records() {
+            assert_eq!(r.meta.plogp_l, net.l);
+            assert!(r.critical_path().as_secs() > 0.0);
         }
     }
 

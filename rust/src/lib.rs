@@ -12,7 +12,9 @@
 //! * [`netsim`] — a discrete-event simulator of a switched-Ethernet
 //!   cluster (the stand-in for the paper's 50-node icluster-1 testbed),
 //!   including the Linux TCP delayed-ACK and buffer-coalescing behaviours
-//!   the paper's §4 anomalies trace back to.
+//!   the paper's §4 anomalies trace back to, plus the per-message trace
+//!   layer ([`netsim::Trace`] ring buffer, [`netsim::TraceSet`]
+//!   versioned on-disk capture format) that feeds trace replay.
 //! * [`mpi`] — an MPI-like point-to-point runtime (eager + rendezvous
 //!   protocols) over the simulator, executing declarative communication
 //!   schedules.
@@ -28,9 +30,12 @@
 //!   plus the extended-op models derived the same way, as one
 //!   strategy-indexed registry of closed-form cost functions.
 //! * [`eval`] — the evaluation layer: the [`eval::Evaluator`] trait with
-//!   three interchangeable backends — analytic models
-//!   ([`eval::ModelEval`]), empirical simulation ([`eval::SimEval`]) and
-//!   the AOT-compiled XLA artifact ([`eval::ArtifactEval`]). Everything
+//!   four interchangeable backends — analytic models
+//!   ([`eval::ModelEval`]), empirical simulation ([`eval::SimEval`],
+//!   whose record mode captures per-message traces), captured-trace
+//!   replay ([`eval::ReplayEval`], scoring against a fixed recorded
+//!   workload — the golden-trace regression backend) and the
+//!   AOT-compiled XLA artifact ([`eval::ArtifactEval`]). Everything
 //!   that scores a `(strategy, P, m, segment)` point goes through it,
 //!   and the sweep's cost is observable through the [`eval::EvalStats`]
 //!   counters (model invocations, pruned searches, warm-start hits).

@@ -16,7 +16,7 @@ use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp;
 use collective_tuner::runtime::TunerArtifact;
 use collective_tuner::topology::{discover, ClusterSpec, GridSpec};
-use collective_tuner::tuner::{grids, persist, Op, Tuner};
+use collective_tuner::tuner::{grids, persist, DecisionTable, Op, Tuner};
 use collective_tuner::util::prng::Prng;
 use collective_tuner::util::table::{fmt_bytes, fmt_time, Table};
 
@@ -41,6 +41,9 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "bench-plogp" => cmd_bench_plogp(args),
         "tune" => cmd_tune(args),
+        "record" => cmd_record(args),
+        "replay" => cmd_replay(args),
+        "validate" => cmd_validate(args),
         "run" => cmd_run(args),
         "experiment" => cmd_experiment(args),
         "discover" => cmd_discover(args),
@@ -105,7 +108,50 @@ fn op_list(args: &Args) -> Result<Vec<Op>> {
     }
 }
 
+/// Persist tables when `--save` was given, then print them.
+fn save_and_print_tables(args: &Args, tables: &[DecisionTable]) -> Result<()> {
+    if let Some(dir) = args.get("save") {
+        let dir = PathBuf::from(dir);
+        for table in tables {
+            persist::save(table, &dir.join(format!("{}.table.tsv", table.op.name())))?;
+        }
+        println!("saved decision tables to {}", dir.display());
+    }
+    for table in tables {
+        println!("== {} decision table ==", table.op.name());
+        let mut t = Table::new(vec!["P", "m", "strategy", "segment", "predicted"]);
+        for (qi, &p) in table.p_grid.iter().enumerate() {
+            for (mi, &m) in table.m_grid.iter().enumerate() {
+                // compact: only print every 4th m column of wide grids
+                if table.m_grid.len() > 12 && mi % 4 != 0 {
+                    continue;
+                }
+                let d = table.at(qi, mi);
+                t.row(vec![
+                    p.to_string(),
+                    fmt_bytes(m as f64),
+                    d.strategy.name().to_string(),
+                    d.segment.map(|x| fmt_bytes(x as f64)).unwrap_or_else(|| "-".into()),
+                    fmt_time(d.predicted),
+                ]);
+            }
+        }
+        println!("{}", t.to_ascii());
+        let mut share = Table::new(vec!["strategy", "share"]);
+        for (st, frac) in table.share() {
+            share.row(vec![st.name().to_string(), format!("{:.0}%", frac * 100.0)]);
+        }
+        println!("{}", share.to_ascii());
+    }
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
+    // tuning against captured traces is the replay path, whichever
+    // spelling the caller used
+    if args.get("trace-dir").is_some() || args.get_or("backend", "auto") == "replay" {
+        return cmd_replay(args);
+    }
     let cfg = args.net_config()?;
     let mut sim = Netsim::new(2, cfg);
     let net = plogp::bench::measure(&mut sim);
@@ -124,13 +170,6 @@ fn cmd_tune(args: &Args) -> Result<()> {
         .map(|&op| tuner.tune_op(op, &net, &p_grid, &m_grid))
         .collect::<Result<Vec<_>>>()?;
     let dt = t0.elapsed();
-    if let Some(dir) = args.get("save") {
-        let dir = PathBuf::from(dir);
-        for table in &tables {
-            persist::save(table, &dir.join(format!("{}.table.tsv", table.op.name())))?;
-        }
-        println!("saved decision tables to {}", dir.display());
-    }
     println!(
         "tuned {} grid points in {:.2} ms\n",
         ops.len() * p_grid.len() * m_grid.len(),
@@ -157,31 +196,184 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
     }
 
-    for table in &tables {
-        println!("== {} decision table ==", table.op.name());
-        let mut t = Table::new(vec!["P", "m", "strategy", "segment", "predicted"]);
-        for (qi, &p) in table.p_grid.iter().enumerate() {
-            for (mi, &m) in table.m_grid.iter().enumerate() {
-                // compact: only print every 4th m column
-                if mi % 4 != 0 {
-                    continue;
-                }
-                let d = table.at(qi, mi);
-                t.row(vec![
-                    p.to_string(),
-                    fmt_bytes(m as f64),
-                    d.strategy.name().to_string(),
-                    d.segment.map(|x| fmt_bytes(x as f64)).unwrap_or_else(|| "-".into()),
-                    fmt_time(d.predicted),
-                ]);
+    save_and_print_tables(args, &tables)
+}
+
+/// Capture message traces: the replay backend's input, one file per
+/// `(op, strategy, P, m)` cell.
+fn cmd_record(args: &Args) -> Result<()> {
+    let cfg = args.net_config()?;
+    let dir = args
+        .get("trace-dir")
+        .ok_or_else(|| anyhow::anyhow!("record needs --trace-dir <dir>"))?;
+    let ops = op_list(args)?;
+    let p_grid = args.usize_list("procs")?.unwrap_or_else(|| vec![2, 4, 8, 16, 32]);
+    let mpoints = args.usize_or("mpoints", 9)?.max(2);
+    let m_grid = grids::log_grid(1, 1 << 20, mpoints);
+    let capacity = args.usize_or("capacity", eval::DEFAULT_TRACE_CAPACITY)?.max(1);
+    let t0 = std::time::Instant::now();
+    let (set, net) = experiments::record_traces(
+        &cfg,
+        &ops,
+        &p_grid,
+        &m_grid,
+        &grids::default_s_grid(),
+        capacity,
+    );
+    println!("measured {}", net.summary());
+    let n = set.save_dir(Path::new(dir))?;
+    println!(
+        "captured {n} trace(s) ({} events across {} op families) in {:.2} s",
+        set.total_events(),
+        set.ops().len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("wrote {dir}");
+    Ok(())
+}
+
+/// Tune from captured traces — the deterministic regression backend.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let dir = args
+        .get("trace-dir")
+        .ok_or_else(|| anyhow::anyhow!("the replay backend needs --trace-dir <dir>"))?;
+    let replay = eval::ReplayEval::load(Path::new(dir))?;
+    let net = replay.net().clone();
+    println!(
+        "replaying {} trace(s) ({} events) from {dir}",
+        replay.set().len(),
+        replay.set().total_events()
+    );
+    println!("captured {}", net.summary());
+    // default to every captured op family, and to the captured grids —
+    // off-grid cells would just miss to +inf
+    let ops: Vec<Op> = match args.get("op") {
+        None => {
+            let captured = replay.set().ops();
+            captured.iter().filter_map(|n| Op::from_name(n)).collect()
+        }
+        Some(_) => op_list(args)?,
+    };
+    let p_grid = args.usize_list("procs")?.unwrap_or_else(|| replay.set().p_values());
+    let m_grid = replay.set().m_values();
+    let handle = replay.clone();
+    let tuner = Tuner::with_evaluator(Box::new(replay)).jobs(args.usize_or("jobs", 0)?);
+    let t0 = std::time::Instant::now();
+    let tables = ops
+        .iter()
+        .map(|&op| tuner.tune_op(op, &net, &p_grid, &m_grid))
+        .collect::<Result<Vec<_>>>()?;
+    println!(
+        "replay-tuned {} grid points in {:.2} ms\n",
+        ops.len() * p_grid.len() * m_grid.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if args.flag("stats") {
+        println!("replay stats: {}\n", handle.stats().to_json());
+    }
+    save_and_print_tables(args, &tables)
+}
+
+/// Cross-check two evaluation backends over a grid.
+fn cmd_validate(args: &Args) -> Result<()> {
+    use collective_tuner::eval::{Evaluator, ModelEval, ReplayEval, SimEval};
+    use collective_tuner::tuner::validate::{cross_validate, ValidateOptions};
+
+    let cfg = args.net_config()?;
+    let trace_dir = args.get("trace-dir");
+    let mut replay_handle: Option<ReplayEval> = None;
+    let mut build = |name: &str, role: &str| -> Result<Box<dyn Evaluator>> {
+        match name {
+            "native" => Ok(Box::new(ModelEval)),
+            "sim" => Ok(Box::new(SimEval::new(cfg.clone()))),
+            "replay" => {
+                let dir = trace_dir.ok_or_else(|| {
+                    anyhow::anyhow!("--{role} replay needs --trace-dir <dir>")
+                })?;
+                let r = ReplayEval::load(Path::new(dir))?;
+                replay_handle = Some(r.clone());
+                Ok(Box::new(r))
             }
+            other => bail!("unknown --{role} '{other}' (native, sim, replay)"),
         }
-        println!("{}", t.to_ascii());
-        let mut share = Table::new(vec!["strategy", "share"]);
-        for (st, frac) in table.share() {
-            share.row(vec![st.name().to_string(), format!("{:.0}%", frac * 100.0)]);
+    };
+    let reference = build(&args.get_or("reference", "sim"), "reference")?;
+    let candidate = build(&args.get_or("candidate", "native"), "candidate")?;
+    let net = match &replay_handle {
+        Some(r) => r.net().clone(),
+        None => {
+            let mut sim = Netsim::new(2, cfg.clone());
+            plogp::bench::measure(&mut sim)
         }
-        println!("{}", share.to_ascii());
+    };
+    // judge over the captured grids when replay is involved (anything
+    // else scores +inf misses), over the paper's spread otherwise
+    let (p_list, m_list) = match &replay_handle {
+        Some(r) => (r.set().p_values(), r.set().m_values()),
+        None => (vec![4usize, 8, 16, 24, 32, 48], vec![256u64, 4096, 65536, 1 << 18, 1 << 20]),
+    };
+    let p_list = match args.usize_list("procs")? {
+        None => p_list,
+        Some(requested) => {
+            // an uncaptured P makes every replay score +inf and the
+            // report meaningless — reject it instead of judging noise
+            if let Some(r) = &replay_handle {
+                for &p in &requested {
+                    if !r.set().p_values().contains(&p) {
+                        bail!(
+                            "--procs {p} is not in the captured trace grid \
+                             (captured: {:?})",
+                            r.set().p_values()
+                        );
+                    }
+                }
+            }
+            requested
+        }
+    };
+    let ops = op_list(args)?;
+    let opts = ValidateOptions::default();
+    println!(
+        "validate: candidate {} judged by reference {} over {}x{} cells",
+        candidate.name(),
+        reference.name(),
+        p_list.len(),
+        m_list.len()
+    );
+    let mut table = Table::new(vec![
+        "op", "points", "correct", "meaningful", "correct_meaningful", "mean_rel_err",
+        "max_regret",
+    ]);
+    for &op in &ops {
+        let rep = cross_validate(
+            reference.as_ref(),
+            candidate.as_ref(),
+            &net,
+            op.family(),
+            &p_list,
+            &m_list,
+            &opts,
+        );
+        table.row(vec![
+            op.name().to_string(),
+            rep.points.to_string(),
+            rep.correct.to_string(),
+            rep.meaningful.to_string(),
+            rep.correct_meaningful.to_string(),
+            format!("{:.3}", rep.mean_rel_err),
+            format!("{:.3}", rep.max_regret),
+        ]);
+        println!(
+            "{}: {:.0}% overall, {:.0}% where it matters (>10% margin), worst regret {:.1}%",
+            op.name(),
+            rep.accuracy() * 100.0,
+            rep.meaningful_accuracy() * 100.0,
+            rep.max_regret * 100.0
+        );
+    }
+    println!("{}", table.to_ascii());
+    if let Some(r) = &replay_handle {
+        println!("replay stats: {}", r.stats().to_json());
     }
     Ok(())
 }
@@ -387,6 +579,14 @@ fn cmd_query(args: &Args) -> Result<()> {
     }
     let name = args.get_or("cluster", "default");
     let nodes = args.usize_or("nodes", 50)?;
+    if let Some(dir) = args.get("traces") {
+        let sig = coord.warm_start_from_traces(Path::new(dir), &name)?;
+        println!(
+            "trace warm start: replay-tuned tables for '{name}' from {dir} \
+             (signature {})",
+            sig.key()
+        );
+    }
     if coord.cluster(&name).is_none() {
         let mut sim = Netsim::new(2, cfg);
         let net = plogp::bench::measure(&mut sim);

@@ -29,4 +29,4 @@ pub mod trace;
 pub use config::{NetConfig, TcpConfig};
 pub use event::{EventQueue, SimTime};
 pub use sim::{MsgId, Netsim, NodeId, SendOutcome};
-pub use trace::{Trace, TraceEvent};
+pub use trace::{PairTimings, Trace, TraceEvent, TraceKey, TraceMeta, TraceRecord, TraceSet};

@@ -1,4 +1,60 @@
-//! Per-message trace recording (bounded ring buffer).
+//! Per-message trace recording and the stable on-disk trace format.
+//!
+//! Two layers live here:
+//!
+//! * [`Trace`] — the in-simulator bounded ring buffer
+//!   [`super::Netsim`] appends to while a run executes. **Drop
+//!   semantics**: the buffer keeps the *newest* `capacity` events. While
+//!   `len() < capacity` nothing is ever lost; once the buffer is full,
+//!   each further [`Trace::record`] overwrites the oldest surviving
+//!   event and increments [`Trace::dropped`] by exactly one — the
+//!   counter is the number of events that were recorded but are no
+//!   longer in the buffer, so `dropped() + len()` is the total ever
+//!   recorded. There is no other coalescing: capacity exhaustion is the
+//!   *only* way events disappear, and it is always counted. Because the
+//!   oldest events are the ones lost, tail statistics (e.g. the final
+//!   delivery time, which is the collective's completion) survive any
+//!   amount of wraparound.
+//! * [`TraceRecord`] / [`TraceSet`] — the persistent capture layer: one
+//!   record per executed `(op, strategy, P, m, segment)` point, holding
+//!   the drained events plus capture metadata (the pLogP signature the
+//!   schedule was tuned under, the reported completion time, and the
+//!   drop count), serialized as a versioned, diff-friendly TSV. A
+//!   [`TraceSet`] is a directory of records keyed by [`TraceKey`]; the
+//!   replay evaluator ([`crate::eval::ReplayEval`]) scores strategies
+//!   from these files instead of re-running the simulator.
+//!
+//! ## File format (`trace v1`)
+//!
+//! ```text
+//! # collective-tuner message trace v1
+//! op      bcast
+//! strategy        bcast/binomial
+//! p       8
+//! m       4096
+//! segment -
+//! completion_ns   1234567
+//! dropped 0
+//! plogp_l 6.05e-5
+//! plogp_sizes     1,2,4,...
+//! plogp_gaps      1.2e-5,...
+//! event   msg     src     dst     bytes   tx_start_ns     delivered_ns    ack     coal
+//! event   0       0       1       4096    0       123456  0       0
+//! ```
+//!
+//! Metadata records are `key\tvalue` lines; the event block is rendered
+//! through [`crate::util::table::Table::to_tsv`] with a leading `event`
+//! column (the first `event` line, whose second field is `msg`, is the
+//! column header). Floats use Rust's shortest-roundtrip formatting, so
+//! `save → load → save` is byte-identical — the golden-trace regression
+//! suite (`rust/tests/replay_golden.rs`) depends on that.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::table::Table;
 
 use super::event::SimTime;
 use super::sim::{MsgId, NodeId};
@@ -17,7 +73,8 @@ pub struct TraceEvent {
 }
 
 /// Bounded ring buffer of trace events. When full, the oldest events are
-/// overwritten; `dropped()` reports how many were lost.
+/// overwritten; `dropped()` reports how many were lost (see the module
+/// docs for the exact semantics).
 #[derive(Debug, Clone)]
 pub struct Trace {
     buf: Vec<TraceEvent>,
@@ -58,6 +115,13 @@ impl Trace {
         self.buf.is_empty()
     }
 
+    /// The ring's fixed capacity (events beyond it evict the oldest).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events recorded but no longer in the buffer (overwritten after
+    /// capacity exhaustion). `dropped() + len()` = total ever recorded.
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
@@ -70,15 +134,435 @@ impl Trace {
 
     /// Render as a tab-separated log for offline inspection.
     pub fn to_tsv(&self) -> String {
-        let mut s = String::from("msg\tsrc\tdst\tbytes\ttx_start_ns\tdelivered_ns\tack\tcoal\n");
-        for e in self.events() {
-            s.push_str(&format!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
-                e.msg, e.src, e.dst, e.bytes, e.tx_start.0, e.delivered.0,
-                e.ack_stalled as u8, e.coalesced as u8
-            ));
+        event_table(&self.events(), false).to_tsv()
+    }
+}
+
+/// The shared event columns, with or without the leading `event`
+/// record-type column the file format uses.
+fn event_table(events: &[TraceEvent], tagged: bool) -> Table {
+    let mut header =
+        vec!["msg", "src", "dst", "bytes", "tx_start_ns", "delivered_ns", "ack", "coal"];
+    if tagged {
+        header.insert(0, "event");
+    }
+    let mut t = Table::new(header);
+    for e in events {
+        let mut row = vec![
+            e.msg.to_string(),
+            e.src.to_string(),
+            e.dst.to_string(),
+            e.bytes.to_string(),
+            e.tx_start.0.to_string(),
+            e.delivered.0.to_string(),
+            (e.ack_stalled as u8).to_string(),
+            (e.coalesced as u8).to_string(),
+        ];
+        if tagged {
+            row.insert(0, "event".to_string());
         }
-        s
+        t.row(row);
+    }
+    t
+}
+
+const TRACE_HEADER: &str = "# collective-tuner message trace v1";
+
+/// Capture metadata of one recorded run: the tuned point it executed
+/// and the pLogP signature of the network it ran on (raw `L` + gap
+/// samples, so this module stays independent of [`crate::plogp`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    /// Operation family name ([`crate::tuner::Op::name`]).
+    pub op: String,
+    /// Strategy name ([`crate::collectives::Strategy::name`]).
+    pub strategy: String,
+    /// Ranks the schedule ran with.
+    pub p: usize,
+    /// Message size in bytes.
+    pub m: u64,
+    /// Tuned segment size (None for unsegmented strategies).
+    pub segment: Option<u64>,
+    /// The executor-reported completion time of the run, in integer
+    /// nanoseconds. Redundant with the event stream (it equals the last
+    /// delivery; checked on load when nothing was dropped) — kept so a
+    /// human can read a trace's score without replaying it.
+    pub completion_ns: u64,
+    /// Ring-buffer drops during capture (oldest events missing).
+    pub dropped: u64,
+    /// pLogP one-way latency `L` (seconds) of the captured network.
+    pub plogp_l: f64,
+    /// pLogP gap-table sample sizes (bytes).
+    pub plogp_sizes: Vec<f64>,
+    /// pLogP gap-table sample gaps (seconds).
+    pub plogp_gaps: Vec<f64>,
+}
+
+impl TraceMeta {
+    /// The set key this record files under.
+    pub fn key(&self) -> TraceKey {
+        TraceKey {
+            op: self.op.clone(),
+            strategy: self.strategy.clone(),
+            p: self.p,
+            m: self.m,
+            segment: self.segment,
+        }
+    }
+}
+
+/// The identity of one captured grid point. Ordering is lexicographic
+/// over `(op, strategy, p, m, segment)`, which is what lets
+/// [`TraceSet`] range-scan a cell's segment variants or a strategy's
+/// captured m column.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceKey {
+    pub op: String,
+    pub strategy: String,
+    pub p: usize,
+    pub m: u64,
+    pub segment: Option<u64>,
+}
+
+impl TraceKey {
+    /// Stable file name for this key (`/` in strategy names becomes
+    /// `.`; an absent segment is `s0` — real segments are >= 1). Purely
+    /// cosmetic: loading keys records from their metadata, not names.
+    pub fn file_name(&self) -> String {
+        format!(
+            "{}.p{}.m{}.s{}.trace.tsv",
+            self.strategy.replace('/', "."),
+            self.p,
+            self.m,
+            self.segment.unwrap_or(0)
+        )
+    }
+}
+
+/// Per-(src, dst) timing extraction: `(tx_start, delivered)` pairs in
+/// recording order for each directed node pair.
+pub type PairTimings = BTreeMap<(NodeId, NodeId), Vec<(SimTime, SimTime)>>;
+
+/// One captured run: metadata plus the drained event stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub meta: TraceMeta,
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceRecord {
+    /// The end of the run's critical path: the last recorded delivery.
+    /// Every schedule terminates with a delivery (a send's `tx_done`
+    /// precedes its own delivery, and local copies happen at an earlier
+    /// event's time), so this equals the executor's reported completion
+    /// — and it survives ring-buffer drops, which only lose the oldest
+    /// events. Empty event streams fall back to the metadata value.
+    pub fn critical_path(&self) -> SimTime {
+        self.events
+            .iter()
+            .map(|e| e.delivered)
+            .max()
+            .unwrap_or(SimTime(self.meta.completion_ns))
+    }
+
+    /// Recorded timings grouped by directed `(src, dst)` pair — the raw
+    /// material of per-link characterisation (observed delivery
+    /// latencies, ACK-stall localisation).
+    pub fn pair_timings(&self) -> PairTimings {
+        let mut out = PairTimings::new();
+        for e in &self.events {
+            let pair = out.entry((e.src, e.dst)).or_default();
+            pair.push((e.tx_start, e.delivered));
+        }
+        out
+    }
+
+    /// Serialize in the `trace v1` format (see module docs).
+    pub fn to_tsv(&self) -> String {
+        let m = &self.meta;
+        let mut out = String::from(TRACE_HEADER);
+        out.push('\n');
+        out.push_str(&format!("op\t{}\n", m.op));
+        out.push_str(&format!("strategy\t{}\n", m.strategy));
+        out.push_str(&format!("p\t{}\n", m.p));
+        out.push_str(&format!("m\t{}\n", m.m));
+        out.push_str(&format!(
+            "segment\t{}\n",
+            m.segment.map(|s| s.to_string()).unwrap_or_else(|| "-".into())
+        ));
+        out.push_str(&format!("completion_ns\t{}\n", m.completion_ns));
+        out.push_str(&format!("dropped\t{}\n", m.dropped));
+        out.push_str(&format!("plogp_l\t{}\n", m.plogp_l));
+        out.push_str(&format!("plogp_sizes\t{}\n", join_f64(&m.plogp_sizes)));
+        out.push_str(&format!("plogp_gaps\t{}\n", join_f64(&m.plogp_gaps)));
+        out.push_str(&event_table(&self.events, true).to_tsv());
+        out
+    }
+
+    /// Parse the `trace v1` format, validating internal consistency
+    /// (a complete capture's last delivery must equal the reported
+    /// completion).
+    pub fn from_tsv(text: &str) -> Result<TraceRecord> {
+        let mut lines = text.lines();
+        if lines.next() != Some(TRACE_HEADER) {
+            bail!("not a trace file (missing '{TRACE_HEADER}')");
+        }
+        let mut op = None;
+        let mut strategy = None;
+        let mut p = None;
+        let mut m = None;
+        let mut segment = None;
+        let mut completion_ns = None;
+        let mut dropped = None;
+        let mut plogp_l = None;
+        let mut plogp_sizes = None;
+        let mut plogp_gaps = None;
+        let mut events: Vec<TraceEvent> = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            let mut f = line.split('\t');
+            let err = |what: &str| format!("line {}: {what}", ln + 2);
+            match f.next() {
+                Some("op") => op = Some(f.next().context("op value")?.to_string()),
+                Some("strategy") => {
+                    strategy = Some(f.next().context("strategy value")?.to_string())
+                }
+                Some("p") => p = Some(f.next().context("p value")?.parse()?),
+                Some("m") => m = Some(f.next().context("m value")?.parse()?),
+                Some("segment") => {
+                    let tok = f.next().context("segment value")?;
+                    segment = match tok {
+                        "-" => Some(None),
+                        s => Some(Some(s.parse::<u64>()?)),
+                    };
+                }
+                Some("completion_ns") => {
+                    completion_ns = Some(f.next().context("completion value")?.parse()?)
+                }
+                Some("dropped") => dropped = Some(f.next().context("dropped value")?.parse()?),
+                Some("plogp_l") => plogp_l = Some(f.next().context("plogp_l value")?.parse()?),
+                Some("plogp_sizes") => {
+                    plogp_sizes = Some(split_f64(f.next().context("plogp_sizes value")?)?)
+                }
+                Some("plogp_gaps") => {
+                    plogp_gaps = Some(split_f64(f.next().context("plogp_gaps value")?)?)
+                }
+                Some("event") => {
+                    let fields: Vec<&str> = f.collect();
+                    if fields.first() == Some(&"msg") {
+                        continue; // the event block's column-header line
+                    }
+                    if fields.len() != 8 {
+                        bail!(err(&format!("event row has {} fields, want 8", fields.len())));
+                    }
+                    events.push(TraceEvent {
+                        msg: fields[0].parse()?,
+                        src: fields[1].parse()?,
+                        dst: fields[2].parse()?,
+                        bytes: fields[3].parse()?,
+                        tx_start: SimTime(fields[4].parse()?),
+                        delivered: SimTime(fields[5].parse()?),
+                        ack_stalled: parse_bool01(fields[6])?,
+                        coalesced: parse_bool01(fields[7])?,
+                    });
+                }
+                Some("") | None => {}
+                Some(other) => bail!(err(&format!("unknown record '{other}'"))),
+            }
+        }
+        let rec = TraceRecord {
+            meta: TraceMeta {
+                op: op.context("missing op record")?,
+                strategy: strategy.context("missing strategy record")?,
+                p: p.context("missing p record")?,
+                m: m.context("missing m record")?,
+                segment: segment.context("missing segment record")?,
+                completion_ns: completion_ns.context("missing completion_ns record")?,
+                dropped: dropped.context("missing dropped record")?,
+                plogp_l: plogp_l.context("missing plogp_l record")?,
+                plogp_sizes: plogp_sizes.context("missing plogp_sizes record")?,
+                plogp_gaps: plogp_gaps.context("missing plogp_gaps record")?,
+            },
+            events,
+        };
+        if rec.meta.dropped == 0 && !rec.events.is_empty() {
+            let last = rec.critical_path();
+            if last.0 != rec.meta.completion_ns {
+                bail!(
+                    "corrupt trace: last delivery at {} ns but completion_ns says {} \
+                     (and no events were dropped)",
+                    last.0,
+                    rec.meta.completion_ns
+                );
+            }
+        }
+        Ok(rec)
+    }
+}
+
+fn join_f64(xs: &[f64]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn split_f64(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|t| t.trim().parse::<f64>().with_context(|| format!("bad float '{t}'")))
+        .collect()
+}
+
+fn parse_bool01(s: &str) -> Result<bool> {
+    match s {
+        "0" => Ok(false),
+        "1" => Ok(true),
+        other => bail!("bad flag '{other}' (want 0 or 1)"),
+    }
+}
+
+/// A keyed collection of captured traces — one capture sweep's output,
+/// or a directory of committed golden fixtures. Insertion replaces an
+/// existing record with the same key (re-capturing a cell supersedes
+/// the old run); merging obeys the same rule, with the incoming set
+/// winning conflicts.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSet {
+    records: BTreeMap<TraceKey, TraceRecord>,
+}
+
+impl TraceSet {
+    pub fn new() -> TraceSet {
+        TraceSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Total events across every record.
+    pub fn total_events(&self) -> usize {
+        self.records.values().map(|r| r.events.len()).sum()
+    }
+
+    /// File (= key-replacing) insert.
+    pub fn insert(&mut self, rec: TraceRecord) {
+        self.records.insert(rec.meta.key(), rec);
+    }
+
+    /// Fold `other` in; its records win key conflicts. Returns how many
+    /// keys were new (not replacements).
+    pub fn merge(&mut self, other: TraceSet) -> usize {
+        let mut added = 0;
+        for (k, r) in other.records {
+            if self.records.insert(k, r).is_none() {
+                added += 1;
+            }
+        }
+        added
+    }
+
+    pub fn get(&self, key: &TraceKey) -> Option<&TraceRecord> {
+        self.records.get(key)
+    }
+
+    /// The record captured at `(op, strategy, p, m)` regardless of its
+    /// segment (each capture stores one record per cell — the tuned
+    /// segment's run).
+    pub fn at_cell(&self, op: &str, strategy: &str, p: usize, m: u64) -> Option<&TraceRecord> {
+        let lo = TraceKey {
+            op: op.to_string(),
+            strategy: strategy.to_string(),
+            p,
+            m,
+            segment: None,
+        };
+        let hi = TraceKey { segment: Some(u64::MAX), ..lo.clone() };
+        self.records.range(lo..=hi).map(|(_, r)| r).next()
+    }
+
+    /// Every record for `(op, strategy, p)`, ascending in `m` — the
+    /// column the replay evaluator interpolates over.
+    pub fn cells_for(&self, op: &str, strategy: &str, p: usize) -> Vec<&TraceRecord> {
+        let lo = TraceKey {
+            op: op.to_string(),
+            strategy: strategy.to_string(),
+            p,
+            m: 0,
+            segment: None,
+        };
+        let hi = TraceKey { m: u64::MAX, segment: Some(u64::MAX), ..lo.clone() };
+        self.records.range(lo..=hi).map(|(_, r)| r).collect()
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.records.values()
+    }
+
+    /// Distinct op names captured, sorted.
+    pub fn ops(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.records.keys().map(|k| k.op.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Distinct captured process counts, ascending.
+    pub fn p_values(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.records.keys().map(|k| k.p).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Distinct captured message sizes, ascending.
+    pub fn m_values(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.records.keys().map(|k| k.m).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// The largest captured process count (a proxy for cluster size).
+    pub fn max_p(&self) -> Option<usize> {
+        self.records.keys().map(|k| k.p).max()
+    }
+
+    /// Write one `*.trace.tsv` per record under `dir` (created if
+    /// needed). Returns the number of files written.
+    pub fn save_dir(&self, dir: &Path) -> Result<usize> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        for (key, rec) in &self.records {
+            let path = dir.join(key.file_name());
+            std::fs::write(&path, rec.to_tsv())
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        Ok(self.records.len())
+    }
+
+    /// Load every `*.trace.tsv` under `dir` (sorted by file name, so
+    /// load order — and any merge outcome — is deterministic).
+    pub fn load_dir(dir: &Path) -> Result<TraceSet> {
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(".trace.tsv"))
+            })
+            .collect();
+        paths.sort();
+        let mut set = TraceSet::new();
+        for path in paths {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rec = TraceRecord::from_tsv(&text)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            set.insert(rec);
+        }
+        Ok(set)
     }
 }
 
@@ -96,6 +580,25 @@ mod tests {
             delivered: SimTime(msg * 100 + 50),
             ack_stalled: false,
             coalesced: false,
+        }
+    }
+
+    fn record(op: &str, strategy: &str, p: usize, m: u64, seg: Option<u64>) -> TraceRecord {
+        let events: Vec<TraceEvent> = (0..4).map(ev).collect();
+        TraceRecord {
+            meta: TraceMeta {
+                op: op.into(),
+                strategy: strategy.into(),
+                p,
+                m,
+                segment: seg,
+                completion_ns: events.iter().map(|e| e.delivered.0).max().unwrap(),
+                dropped: 0,
+                plogp_l: 6.05e-5,
+                plogp_sizes: vec![1.0, 1024.0, 65536.0],
+                plogp_gaps: vec![1.1e-5, 1.3e-5, 6.4e-5],
+            },
+            events,
         }
     }
 
@@ -126,6 +629,25 @@ mod tests {
     }
 
     #[test]
+    fn capacity_exhaustion_counts_every_overwrite_exactly_once() {
+        // filling to capacity drops nothing; each event past it drops
+        // exactly one, so dropped() + len() is the total ever recorded
+        let mut t = Trace::new(4);
+        for i in 0..4 {
+            t.record(ev(i));
+            assert_eq!(t.dropped(), 0, "no drops before exhaustion");
+        }
+        assert_eq!(t.capacity(), 4);
+        for i in 4..11 {
+            t.record(ev(i));
+            assert_eq!(t.dropped() + t.len() as u64, i + 1);
+        }
+        assert_eq!(t.dropped(), 7);
+        // and the survivors are exactly the newest window
+        assert_eq!(t.events().iter().map(|e| e.msg).collect::<Vec<_>>(), [7, 8, 9, 10]);
+    }
+
+    #[test]
     fn clear_resets() {
         let mut t = Trace::new(2);
         t.record(ev(0));
@@ -143,5 +665,108 @@ mod tests {
         let tsv = t.to_tsv();
         assert!(tsv.starts_with("msg\t"));
         assert!(tsv.contains("\n7\t0\t1\t10\t"));
+    }
+
+    #[test]
+    fn trace_record_roundtrips_bytes() {
+        let rec = record("bcast", "bcast/seg_chain", 8, 4096, Some(512));
+        let text = rec.to_tsv();
+        let back = TraceRecord::from_tsv(&text).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.to_tsv(), text, "serialization must be byte-stable");
+    }
+
+    #[test]
+    fn from_tsv_rejects_garbage_and_inconsistency() {
+        assert!(TraceRecord::from_tsv("hello").is_err());
+        assert!(TraceRecord::from_tsv(TRACE_HEADER).is_err()); // no metadata
+        let rec = record("bcast", "bcast/flat", 4, 64, None);
+        let text = rec.to_tsv();
+        // a wrong completion with dropped=0 contradicts the events
+        let bad = text.replace(
+            &format!("completion_ns\t{}", rec.meta.completion_ns),
+            "completion_ns\t1",
+        );
+        assert!(TraceRecord::from_tsv(&bad).is_err());
+        // but with drops the tail-only check cannot apply
+        let dropped = text.replace("dropped\t0", "dropped\t3");
+        assert!(TraceRecord::from_tsv(&dropped).is_ok());
+    }
+
+    #[test]
+    fn critical_path_is_last_delivery() {
+        let rec = record("bcast", "bcast/binomial", 4, 64, None);
+        assert_eq!(rec.critical_path(), SimTime(350));
+        let empty = TraceRecord { meta: rec.meta.clone(), events: vec![] };
+        assert_eq!(empty.critical_path(), SimTime(rec.meta.completion_ns));
+    }
+
+    #[test]
+    fn pair_timings_group_by_directed_pair() {
+        let mut rec = record("bcast", "bcast/flat", 4, 64, None);
+        rec.events.push(TraceEvent { src: 1, dst: 0, ..ev(9) });
+        let pt = rec.pair_timings();
+        assert_eq!(pt.len(), 2);
+        assert_eq!(pt[&(0, 1)].len(), 4);
+        assert_eq!(pt[&(1, 0)], vec![(SimTime(900), SimTime(950))]);
+    }
+
+    #[test]
+    fn set_keys_cells_and_columns() {
+        let mut set = TraceSet::new();
+        for m in [64u64, 4096, 65536] {
+            set.insert(record("bcast", "bcast/seg_chain", 8, m, Some(m / 2)));
+        }
+        set.insert(record("bcast", "bcast/seg_chain", 4, 64, Some(32)));
+        set.insert(record("scatter", "scatter/flat", 8, 64, None));
+        assert_eq!(set.len(), 5);
+        assert!(set.at_cell("bcast", "bcast/seg_chain", 8, 4096).is_some());
+        assert!(set.at_cell("bcast", "bcast/seg_chain", 16, 4096).is_none());
+        let col = set.cells_for("bcast", "bcast/seg_chain", 8);
+        assert_eq!(col.iter().map(|r| r.meta.m).collect::<Vec<_>>(), [64, 4096, 65536]);
+        assert_eq!(set.ops(), ["bcast", "scatter"]);
+        assert_eq!(set.p_values(), [4, 8]);
+        assert_eq!(set.m_values(), [64, 4096, 65536]);
+        assert_eq!(set.max_p(), Some(8));
+    }
+
+    #[test]
+    fn insert_and_merge_replace_by_key() {
+        let mut a = TraceSet::new();
+        a.insert(record("bcast", "bcast/flat", 4, 64, None));
+        let mut newer = record("bcast", "bcast/flat", 4, 64, None);
+        newer.events.truncate(2);
+        newer.meta.completion_ns = newer.events.last().unwrap().delivered.0;
+        let mut b = TraceSet::new();
+        b.insert(newer.clone());
+        b.insert(record("scatter", "scatter/flat", 4, 64, None));
+        assert_eq!(a.merge(b), 1, "one new key, one replacement");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.at_cell("bcast", "bcast/flat", 4, 64).unwrap().events.len(), 2);
+    }
+
+    #[test]
+    fn dir_roundtrip_is_byte_identical() {
+        let dir = std::env::temp_dir().join("ct-trace-dir-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut set = TraceSet::new();
+        set.insert(record("bcast", "bcast/seg_chain", 8, 4096, Some(512)));
+        set.insert(record("allreduce", "allreduce/rec_doubling", 8, 4096, None));
+        assert_eq!(set.save_dir(&dir).unwrap(), 2);
+        let back = TraceSet::load_dir(&dir).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in set.records().zip(back.records()) {
+            assert_eq!(a, b);
+            assert_eq!(a.to_tsv(), b.to_tsv());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_names_are_stable_and_fs_safe() {
+        let k = record("allgather", "allgather/gather+bcast", 8, 64, None).meta.key();
+        assert_eq!(k.file_name(), "allgather.gather+bcast.p8.m64.s0.trace.tsv");
+        let k = record("bcast", "bcast/seg_chain", 8, 4096, Some(512)).meta.key();
+        assert_eq!(k.file_name(), "bcast.seg_chain.p8.m4096.s512.trace.tsv");
     }
 }

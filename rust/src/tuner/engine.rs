@@ -26,7 +26,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use anyhow::Result;
 
 use crate::collectives::Strategy;
-use crate::eval::{ArtifactEval, CellCtx, EvalCounts, EvalStats, Evaluator, ModelEval};
+use crate::eval::{ArtifactEval, CellCtx, EvalCounts, EvalStats, Evaluator, ModelEval, ReplayEval};
 use crate::plogp::{GapCache, PLogP};
 
 use super::decision::{Decision, DecisionTable, Op};
@@ -58,6 +58,14 @@ impl Tuner {
     /// Load the AOT artifact from `dir`.
     pub fn with_artifact(dir: &Path) -> Result<Tuner> {
         Ok(Tuner::with_evaluator(Box::new(ArtifactEval::load(dir)?)))
+    }
+
+    /// Replay captured traces from `dir` ([`crate::eval::ReplayEval`]):
+    /// tuning against a fixed, recorded workload instead of a live
+    /// backend. Tune over the captured grids (the trace set's
+    /// `p_values()`/`m_values()`) — uncaptured cells score `+inf`.
+    pub fn with_replay(dir: &Path) -> Result<Tuner> {
+        Ok(Tuner::with_evaluator(Box::new(ReplayEval::load(dir)?)))
     }
 
     /// Prefer the artifact; fall back to native (logging the reason).

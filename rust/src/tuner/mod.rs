@@ -21,6 +21,10 @@
 //!   (the two must agree, see `rust/tests/artifact_roundtrip.rs`).
 //! * **sim** ([`crate::eval::SimEval`]) — empirical ground truth for
 //!   [`validate`]'s model-vs-measurement cross-checks.
+//! * **replay** ([`crate::eval::ReplayEval`]) — captured-trace replay
+//!   ([`engine::Tuner::with_replay`], `tune --trace-dir`): tuning and
+//!   validation against a fixed, recorded workload for reproducible
+//!   regression suites (the golden-trace CI gate).
 
 pub mod decision;
 pub mod ext;

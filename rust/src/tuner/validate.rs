@@ -7,8 +7,11 @@
 //! drift (small-message TCP anomalies). [`cross_validate`] runs the
 //! check between *any* two [`Evaluator`]s — the classic configuration
 //! (analytic models judged against the simulator) is wrapped by
-//! [`validate_selection`], and future backends (real MPI, trace replay)
-//! cross-check the same way for free.
+//! [`validate_selection`]; the trace-replay backend
+//! ([`crate::eval::ReplayEval`]) slots in as either side with no
+//! changes here (judging models against a *committed* workload, or
+//! re-judging a replayed run against the live simulator), and a future
+//! real-MPI backend cross-checks the same way for free.
 
 use crate::collectives::Strategy;
 use crate::eval::{Evaluator, ModelEval, SimEval};
@@ -210,6 +213,40 @@ mod tests {
             &opts,
         );
         assert!(rep.meaningful_accuracy() >= 0.99, "{rep:?}");
+    }
+
+    #[test]
+    fn replay_slots_into_cross_validate_as_the_reference() {
+        // capture a small sweep, then judge the analytic models against
+        // the *recorded* workload — replay as reference, no API changes
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let p_list = [4usize, 8];
+        let m_list = [1024u64, 1 << 18];
+        let (set, net) = crate::harness::experiments::record_traces(
+            &cfg,
+            &[crate::tuner::Op::Bcast],
+            &p_list,
+            &m_list,
+            &ValidateOptions::default().s_grid,
+            1 << 14,
+        );
+        let replay = crate::eval::ReplayEval::new(set).unwrap();
+        let opts = ValidateOptions::default();
+        let rep = cross_validate(
+            &replay,
+            &ModelEval,
+            &net,
+            &Strategy::BCAST,
+            &p_list,
+            &m_list,
+            &opts,
+        );
+        assert_eq!(rep.points, 4);
+        // the captured workload is the simulator's, so the models must
+        // judge exactly as they do against SimEval on the same cells
+        let live = validate_selection(&cfg, &net, &Strategy::BCAST, &p_list, &m_list, &opts);
+        assert_eq!(rep.correct, live.correct);
+        assert_eq!(rep.max_regret, live.max_regret);
     }
 
     #[test]

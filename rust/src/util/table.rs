@@ -65,6 +65,22 @@ impl Table {
         out
     }
 
+    /// Tab-separated rendering: header line then one line per row.
+    /// Cells must not contain tabs or newlines (they are replaced with
+    /// spaces — TSV has no quoting); used by the netsim trace format,
+    /// which is numeric throughout.
+    pub fn to_tsv(&self) -> String {
+        let esc = |s: &str| s.replace(['\t', '\n'], " ");
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join("\t"));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') || s.contains('\n') {
@@ -166,6 +182,14 @@ mod tests {
     #[should_panic]
     fn row_width_mismatch_panics() {
         Table::new(vec!["a"]).row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn tsv_renders_header_and_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "x\ty"]);
+        let tsv = t.to_tsv();
+        assert_eq!(tsv, "a\tb\n1\tx y\n");
     }
 
     #[test]

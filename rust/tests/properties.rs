@@ -5,7 +5,9 @@
 use collective_tuner::collectives::{composed, tree, Strategy};
 use collective_tuner::models;
 use collective_tuner::mpi::{Payload, World};
-use collective_tuner::netsim::{NetConfig, Netsim, SimTime, TcpConfig};
+use collective_tuner::netsim::{
+    NetConfig, Netsim, SimTime, TcpConfig, Trace, TraceEvent, TraceMeta, TraceRecord, TraceSet,
+};
 use collective_tuner::plogp::{self, GapTable, PLogP};
 use collective_tuner::tuner::grids;
 use collective_tuner::util::check::property;
@@ -390,6 +392,106 @@ fn gap_table_interpolation_bounds() {
             assert!((table.gap(*s) - g).abs() < 1e-9 * g.abs().max(1e-9));
         }
     });
+}
+
+fn random_trace_event(rng: &mut Prng, msg: u64) -> TraceEvent {
+    let tx = rng.range(0, 1 << 40);
+    TraceEvent {
+        msg,
+        src: rng.range(0, 64) as u32,
+        dst: rng.range(0, 64) as u32,
+        bytes: rng.range(1, 1 << 20),
+        tx_start: SimTime(tx),
+        delivered: SimTime(tx + rng.range(1, 1 << 30)),
+        ack_stalled: rng.chance(0.2),
+        coalesced: rng.chance(0.2),
+    }
+}
+
+/// The trace ring buffer is a sliding window over the newest events:
+/// `events()` returns the last `min(n, capacity)` records in order,
+/// `dropped()` counts exactly the overwritten remainder, and
+/// `len`/`is_empty`/`clear` behave like the window they describe.
+#[test]
+fn trace_ring_buffer_is_a_counted_sliding_window() {
+    property("trace ring window", 150, |rng| {
+        let capacity = rng.range_usize(1, 40);
+        let n = rng.range_usize(0, 120);
+        let mut trace = Trace::new(capacity);
+        assert!(trace.is_empty());
+        let all: Vec<TraceEvent> = (0..n as u64).map(|i| random_trace_event(rng, i)).collect();
+        for e in &all {
+            trace.record(*e);
+        }
+        assert_eq!(trace.capacity(), capacity);
+        assert_eq!(trace.len(), n.min(capacity));
+        assert_eq!(trace.is_empty(), n == 0);
+        assert_eq!(trace.dropped(), n.saturating_sub(capacity) as u64);
+        assert_eq!(trace.dropped() + trace.len() as u64, n as u64);
+        // the survivors are exactly the newest window, in record order
+        assert_eq!(trace.events(), all[n - n.min(capacity)..]);
+        trace.clear();
+        assert!(trace.is_empty());
+        assert_eq!(trace.dropped(), 0);
+        assert_eq!(trace.capacity(), capacity);
+    });
+}
+
+/// Captured trace records survive the on-disk TSV round trip exactly:
+/// `save → load` reproduces every field, and re-serialization is
+/// byte-identical (the golden-fixture property), across random event
+/// streams, capacities, and metadata.
+#[test]
+fn trace_records_roundtrip_through_the_tsv_format() {
+    let dir = std::env::temp_dir().join("ct-prop-trace-roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    property("trace tsv roundtrip", 60, |rng| {
+        let strategy = random_strategy(rng);
+        let op = collective_tuner::tuner::Op::of(strategy);
+        let n = rng.range_usize(0, 50);
+        let events: Vec<TraceEvent> = (0..n as u64).map(|i| random_trace_event(rng, i)).collect();
+        let completion_ns = events.iter().map(|e| e.delivered.0).max().unwrap_or(0);
+        let samples = rng.range_usize(2, 10);
+        let mut acc = 0.0;
+        let mut sizes = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            acc += rng.uniform(1.0, 4096.0);
+            sizes.push(acc);
+        }
+        let m = rng.range(1, 1 << 20);
+        let rec = TraceRecord {
+            meta: TraceMeta {
+                op: op.name().into(),
+                strategy: strategy.name().into(),
+                p: rng.range_usize(2, 64),
+                m,
+                segment: if strategy.is_segmented() {
+                    Some(rng.range(1, m + 1))
+                } else {
+                    None
+                },
+                completion_ns,
+                // zero ~70% of the time, so both validation paths run
+                dropped: rng.range(0, 100).saturating_sub(70),
+                plogp_l: rng.log_uniform(1e-6, 1e-3),
+                plogp_sizes: sizes,
+                plogp_gaps: (0..samples).map(|_| rng.log_uniform(1e-6, 1e-2)).collect(),
+            },
+            events,
+        };
+        let text = rec.to_tsv();
+        let back = TraceRecord::from_tsv(&text).expect("own serialization parses");
+        assert_eq!(back, rec);
+        assert_eq!(back.to_tsv(), text, "re-serialization must be byte-identical");
+        // and through a directory: the set round-trips record-exact
+        let mut set = TraceSet::new();
+        set.insert(rec.clone());
+        set.save_dir(&dir).unwrap();
+        let loaded = TraceSet::load_dir(&dir).unwrap();
+        assert_eq!(loaded.get(&rec.meta.key()), Some(&rec));
+        std::fs::remove_dir_all(&dir).ok();
+    });
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Simulator determinism: identical runs give bit-identical completion

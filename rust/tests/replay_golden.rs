@@ -1,0 +1,194 @@
+//! Golden-trace regression suite: the committed trace fixtures under
+//! `tests/fixtures/traces/` are the *fixed workload* every replay run
+//! is judged against.
+//!
+//! Lifecycle: the capture is fully deterministic (the simulator runs in
+//! integer nanoseconds and the trace format uses shortest-roundtrip
+//! float formatting), so a fresh capture must reproduce the committed
+//! fixtures byte for byte. When the fixtures directory is missing or
+//! empty the suite *bootstraps* it — captures and writes the files —
+//! so the first toolchain-enabled run (CI uploads the directory as an
+//! artifact) produces exactly what should be committed. Regenerate
+//! deliberately with `UPDATE_TRACE_FIXTURES=1 cargo test --test
+//! replay_golden`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use collective_tuner::eval::{Evaluator, ModelEval, ReplayEval, SimEval};
+use collective_tuner::harness::experiments::record_traces;
+use collective_tuner::netsim::{NetConfig, TraceSet};
+use collective_tuner::tuner::validate::{cross_validate, ValidateOptions};
+use collective_tuner::tuner::{grids, persist, Op, Tuner};
+
+/// The fixture nets: three hardware classes, one directory each.
+const NETS: [&str; 3] = ["ideal", "icluster1", "gigabit"];
+
+/// The captured families (the paper's core pair plus one extended op).
+const OPS: [Op; 3] = [Op::Bcast, Op::Scatter, Op::AllReduce];
+
+const P_GRID: [usize; 3] = [2, 4, 8];
+const M_GRID: [u64; 3] = [64, 4096, 65536];
+
+fn net_config(name: &str) -> NetConfig {
+    match name {
+        "ideal" => NetConfig::fast_ethernet_ideal(),
+        "icluster1" => NetConfig::fast_ethernet_icluster1(),
+        "gigabit" => NetConfig::gigabit_ethernet(),
+        other => panic!("unknown fixture net '{other}'"),
+    }
+}
+
+fn fixture_dir(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/traces").join(name)
+}
+
+fn capture(name: &str) -> TraceSet {
+    let s_grid = grids::default_s_grid();
+    record_traces(&net_config(name), &OPS, &P_GRID, &M_GRID, &s_grid, 1 << 16).0
+}
+
+/// Serializes fixture-directory access across the suite's threads.
+static FIXTURE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Does the directory hold any trace files at all? (Presence is decided
+/// by file names, NOT by whether they parse: committed-but-unparseable
+/// goldens must fail the suite loudly, never silently regenerate — a
+/// format-breaking change is exactly the drift this gate exists for.)
+fn has_trace_files(dir: &Path) -> bool {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return false;
+    };
+    entries
+        .filter_map(|e| e.ok())
+        .any(|e| e.file_name().to_string_lossy().ends_with(".trace.tsv"))
+}
+
+/// The committed fixture set for one net, bootstrapping the directory
+/// from a fresh capture when it is absent (or on explicit request).
+fn fixture_set(name: &str) -> TraceSet {
+    let _guard = FIXTURE_LOCK.lock().unwrap();
+    let dir = fixture_dir(name);
+    let update = std::env::var("UPDATE_TRACE_FIXTURES").is_ok();
+    if update || !has_trace_files(&dir) {
+        let n = capture(name).save_dir(&dir).unwrap();
+        eprintln!("bootstrapped {n} golden trace(s) into {}", dir.display());
+    }
+    let set = TraceSet::load_dir(&dir).unwrap_or_else(|e| {
+        panic!(
+            "{}: committed golden traces failed to load ({e:#}) — the trace \
+             format drifted; fix the regression or deliberately regenerate \
+             with UPDATE_TRACE_FIXTURES=1",
+            dir.display()
+        )
+    });
+    assert!(!set.is_empty(), "{}: no records loaded", dir.display());
+    set
+}
+
+#[test]
+fn golden_fixtures_match_a_fresh_capture_byte_for_byte() {
+    for name in NETS {
+        let committed = fixture_set(name);
+        let fresh = capture(name);
+        assert_eq!(committed.len(), fresh.len(), "{name}: fixture count drifted");
+        for (a, b) in committed.records().zip(fresh.records()) {
+            assert_eq!(a.meta.key(), b.meta.key(), "{name}: fixture keys drifted");
+            assert_eq!(
+                a.to_tsv(),
+                b.to_tsv(),
+                "{name}/{}: capture no longer reproduces the committed golden \
+                 trace — if the simulator or trace format changed deliberately, \
+                 regenerate with UPDATE_TRACE_FIXTURES=1",
+                a.meta.key().file_name()
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_tuned_tables_are_byte_identical_across_runs_and_jobs() {
+    for name in NETS {
+        let set = fixture_set(name);
+        let tune = |jobs: usize| -> Vec<String> {
+            let replay = ReplayEval::new(set.clone()).unwrap();
+            let net = replay.net().clone();
+            let tuner = Tuner::with_evaluator(Box::new(replay)).jobs(jobs);
+            let mut out = Vec::new();
+            for &op in &OPS {
+                let table = tuner.tune_op(op, &net, &P_GRID, &M_GRID).unwrap();
+                out.push(persist::to_string(&table));
+            }
+            out
+        };
+        let first = tune(1);
+        for text in &first {
+            assert!(!text.is_empty());
+        }
+        assert_eq!(first, tune(1), "{name}: replay tuning is not reproducible");
+        assert_eq!(first, tune(8), "{name}: worker count changed a replay table");
+    }
+}
+
+#[test]
+fn replay_argmin_agrees_with_sim_on_captured_cells() {
+    let s_grid = grids::default_s_grid();
+    for name in NETS {
+        let set = fixture_set(name);
+        let replay = ReplayEval::new(set).unwrap();
+        let sim = SimEval::new(net_config(name));
+        let net = replay.net().clone();
+        let (mut total, mut agree) = (0usize, 0usize);
+        for op in OPS {
+            for &p in &P_GRID {
+                for &m in &M_GRID {
+                    let r = replay.best(op, &net, p, m, &s_grid);
+                    let s = sim.best(op, &net, p, m, &s_grid);
+                    total += 1;
+                    if r.strategy == s.strategy {
+                        agree += 1;
+                    }
+                    assert!(r.predicted.is_finite(), "{name} {op:?} P={p} m={m}");
+                }
+            }
+        }
+        assert!(
+            agree * 10 >= total * 9,
+            "{name}: replay agrees with sim on only {agree}/{total} captured cells"
+        );
+    }
+}
+
+#[test]
+fn replay_drops_into_tuner_and_cross_validate_unchanged() {
+    // round-trip through disk + Tuner::with_replay (the CLI's path)
+    let dir = std::env::temp_dir().join("ct-replay-golden-dropin");
+    let _ = std::fs::remove_dir_all(&dir);
+    let set = fixture_set("icluster1");
+    set.save_dir(&dir).unwrap();
+    let tuner = Tuner::with_replay(&dir).unwrap();
+    assert_eq!(tuner.backend_name(), "replay");
+    let replay = ReplayEval::load(&dir).unwrap();
+    let net = replay.net().clone();
+    let table = tuner.tune_op(Op::Bcast, &net, &P_GRID, &M_GRID).unwrap();
+    for d in &table.entries {
+        assert!(d.strategy.is_bcast());
+        assert!(d.predicted.is_finite() && d.predicted > 0.0);
+    }
+
+    // replay as cross_validate's reference, the models as candidate —
+    // the trait boundary is the whole interface
+    let opts = ValidateOptions::default();
+    let rep = cross_validate(
+        &replay,
+        &ModelEval,
+        &net,
+        Op::Bcast.family(),
+        &P_GRID,
+        &M_GRID,
+        &opts,
+    );
+    assert_eq!(rep.points, P_GRID.len() * M_GRID.len());
+    assert!(rep.meaningful_accuracy() > 0.5, "{rep:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Adopt a green CI run's measured BENCH_*.json as the committed baselines.
+
+The ``perf`` CI job uploads the freshly-measured ``bench-json`` artifact
+on every run. This script turns "replace the authored ceilings with CI
+numbers" (a ROADMAP item) into one command:
+
+    gh run download <run-id> --name bench-json --dir /tmp/bench-json
+    python3 tools/update_bench_baselines.py /tmp/bench-json
+    git add BENCH_*.json && git commit
+
+For every ``BENCH_*.json`` in the artifact directory it rewrites the
+matching committed file, taking the measured ``results`` (wall times)
+and ``metrics`` (deterministic counters) from the CI run while keeping
+the committed file's ``benchmark``/``description``/``unit`` prose, and
+stamps ``status`` with the provenance. A measured wall time may only
+*tighten* a committed ceiling unless ``--allow-looser`` is passed — a
+slow runner must not quietly widen the gate.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def adopt(committed_path, fresh_path, allow_looser):
+    committed = load(committed_path)
+    fresh = load(fresh_path)
+    out = dict(fresh)
+    for key in ("benchmark", "description", "unit"):
+        if key in committed:
+            out[key] = committed[key]
+
+    loosened = []
+    by_name = {r.get("name"): r for r in committed.get("results", [])}
+    for r in out.get("results", []):
+        b = by_name.get(r.get("name"))
+        if b and b.get("mean_s") is not None and r.get("mean_s") is not None:
+            if r["mean_s"] > b["mean_s"]:
+                loosened.append(
+                    f"{r['name']}: measured {r['mean_s']:.6g}s > committed "
+                    f"ceiling {b['mean_s']:.6g}s"
+                )
+    # the deterministic metrics gate the same way, direction-aware: a
+    # larger-is-better floor must not ratchet down, a smaller-is-better
+    # ceiling must not ratchet up, and a numeric baseline must never be
+    # replaced by null (check_perf treats null as "pending, not gated")
+    metrics_by_name = {m.get("name"): m for m in committed.get("metrics", [])}
+    for m in out.get("metrics", []):
+        b = metrics_by_name.get(m.get("name"))
+        if b is None or b.get("value") is None:
+            continue
+        if m.get("value") is None:
+            loosened.append(
+                f"{m['name']}: measured value is null but the committed "
+                f"baseline is {b['value']:.6g} (adoption would disable the gate)"
+            )
+        elif bool(b.get("larger_is_better")) and m["value"] < b["value"]:
+            loosened.append(
+                f"{m['name']}: measured {m['value']:.6g} < committed "
+                f"floor {b['value']:.6g}"
+            )
+        elif not b.get("larger_is_better") and m["value"] > b["value"]:
+            loosened.append(
+                f"{m['name']}: measured {m['value']:.6g} > committed "
+                f"ceiling {b['value']:.6g}"
+            )
+    if loosened and not allow_looser:
+        for line in loosened:
+            print(f"REFUSED: {line}", file=sys.stderr)
+        return None
+
+    out["status"] = (
+        "CI-measured baselines adopted via tools/update_bench_baselines.py "
+        f"from {os.path.basename(fresh_path)}; the bench overwrites this "
+        "file in place on every run — re-adopt newer green-run artifacts "
+        "to keep tightening the gate"
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact_dir", help="directory holding a CI run's BENCH_*.json")
+    ap.add_argument(
+        "--repo-root",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        help="repository root holding the committed baselines",
+    )
+    ap.add_argument(
+        "--allow-looser",
+        action="store_true",
+        help="accept measured wall times above the committed ceilings",
+    )
+    args = ap.parse_args()
+
+    fresh_files = sorted(glob.glob(os.path.join(args.artifact_dir, "BENCH_*.json")))
+    if not fresh_files:
+        print(f"no BENCH_*.json under {args.artifact_dir}", file=sys.stderr)
+        sys.exit(2)
+    # two-phase (check everything, then write everything) so one refused
+    # file never leaves the baselines partially adopted
+    pending = []
+    refused = False
+    for fresh in fresh_files:
+        committed = os.path.join(args.repo_root, os.path.basename(fresh))
+        if not os.path.exists(committed):
+            print(f"skipping {fresh}: no committed counterpart", file=sys.stderr)
+            continue
+        out = adopt(committed, fresh, args.allow_looser)
+        if out is None:
+            refused = True
+        else:
+            pending.append((committed, fresh, out))
+    if refused:
+        print(
+            "measured numbers are looser than the committed baselines; "
+            "nothing was written — re-run with --allow-looser to adopt anyway",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    for committed, fresh, out in pending:
+        with open(committed, "w", encoding="utf-8") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"adopted {fresh} -> {committed}")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()
