@@ -16,15 +16,19 @@
 //!
 //! ```bash
 //! cargo run --release --example coordinator_stress
+//! # with live observability: a registry snapshot every N seconds, a
+//! # final OBS_SNAPSHOT_JSON line, and the decision flight recorder
+//! cargo run --release --example coordinator_stress -- --metrics-interval 1
 //! ```
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use collective_tuner::collectives::multilevel;
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig};
 use collective_tuner::mpi::World;
 use collective_tuner::netsim::NetConfig;
+use collective_tuner::obs;
 use collective_tuner::topology::{ClusterSpec, GridSpec};
 use collective_tuner::tuner::{grids, Op};
 use collective_tuner::util::prng::Prng;
@@ -33,7 +37,23 @@ use collective_tuner::util::table::fmt_time;
 const THREADS: usize = 8;
 const REQUESTS_PER_THREAD: usize = 25_000;
 
+/// Parse `--metrics-interval N` (seconds) from the example's argv.
+/// 0 (or absent) leaves observability disabled — the default run is
+/// byte-for-byte what it was before the obs layer existed.
+fn metrics_interval() -> u64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--metrics-interval")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 fn main() -> anyhow::Result<()> {
+    let interval = metrics_interval();
+    if interval > 0 {
+        obs::set_enabled(true);
+    }
     println!("=================================================================");
     println!(" coordinator stress: concurrent cached decision-table service");
     println!("=================================================================\n");
@@ -75,25 +95,47 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. concurrent mixed load ---------------------------------------
     let names: Vec<String> = grid.clusters.iter().map(|c| c.name.clone()).collect();
     let served = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
     let t1 = Instant::now();
     std::thread::scope(|s| {
-        for t in 0..THREADS {
-            let coord = &coord;
-            let names = &names;
-            let served = &served;
+        let done = &done;
+        if interval > 0 {
             s.spawn(move || {
-                let mut rng = Prng::new(0x5712E55 ^ t as u64);
-                for _ in 0..REQUESTS_PER_THREAD {
-                    let name = rng.pick(names);
-                    let op = if rng.chance(0.5) { Op::Bcast } else { Op::Scatter };
-                    let p = rng.range_usize(2, 25);
-                    let m = rng.range(1, 1 << 20);
-                    let d = coord.decision(op, name, p, m).expect("registered");
-                    std::hint::black_box(d);
-                    served.fetch_add(1, Ordering::Relaxed);
+                let tick = Duration::from_millis(50);
+                let period = Duration::from_secs(interval);
+                let mut last = Instant::now();
+                while !done.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if last.elapsed() >= period {
+                        println!("metrics: {}", obs::registry().snapshot_json());
+                        last = Instant::now();
+                    }
                 }
             });
         }
+        let workers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let coord = &coord;
+                let names = &names;
+                let served = &served;
+                s.spawn(move || {
+                    let mut rng = Prng::new(0x5712E55 ^ t as u64);
+                    for _ in 0..REQUESTS_PER_THREAD {
+                        let name = rng.pick(names);
+                        let op = if rng.chance(0.5) { Op::Bcast } else { Op::Scatter };
+                        let p = rng.range_usize(2, 25);
+                        let m = rng.range(1, 1 << 20);
+                        let d = coord.decision(op, name, p, m).expect("registered");
+                        std::hint::black_box(d);
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("stress worker panicked");
+        }
+        done.store(true, Ordering::Relaxed);
     });
     let dt = t1.elapsed().as_secs_f64();
     let st = coord.stats();
@@ -144,6 +186,23 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(d_cold.strategy, d_warm.strategy);
     assert_eq!(warm.tune_count(), 0);
     let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- 6. final observability dump (only with --metrics-interval) -----
+    if interval > 0 {
+        // Single-line marker so CI (and humans piping to python) can
+        // grab the final snapshot without any multi-line parsing.
+        println!("OBS_SNAPSHOT_JSON {}", obs::registry().snapshot_json());
+        let fr = obs::flight();
+        println!(
+            "[5] flight recorder: {} event(s), {} dropped, {} total",
+            fr.len(),
+            fr.dropped(),
+            fr.total()
+        );
+        print!("{}", fr.to_tsv());
+        assert!(!fr.is_empty(), "load ran, so the flight ring must hold events");
+        assert_eq!(fr.dropped() + fr.len() as u64, fr.total(), "ring drop accounting");
+    }
 
     println!("\nSTRESS RESULT: OK — one tune per signature under {THREADS}-way load");
     Ok(())

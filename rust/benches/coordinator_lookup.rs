@@ -1,14 +1,18 @@
 //! Bench: the coordinator's decision path — cold miss (a full tuner
 //! run), warm hit (sharded cache lookup), and contended hit (the same
-//! lookup while 7 background threads hammer the service). Emits
-//! `BENCH_coordinator.json` at the repository root so subsequent PRs can
-//! track the hot path.
+//! lookup while 7 background threads hammer the service). Runs with the
+//! obs layer enabled so the registry's `coordinator.decision_ns`
+//! histogram yields a gated `decision_latency_p95` metric. Emits
+//! `BENCH_coordinator.candidate.json` at the repository root by default;
+//! pass `-- --write-baseline` to overwrite the committed
+//! `BENCH_coordinator.json` instead.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig};
 use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::obs;
 use collective_tuner::plogp::{bench as plogp_bench, PLogP};
 use collective_tuner::tuner::{grids, Op};
 use collective_tuner::util::benchkit::{bench, bench_with, section, BenchOpts, BenchResult};
@@ -38,7 +42,18 @@ fn json_entry(label: &str, r: &BenchResult) -> String {
     )
 }
 
+fn json_metric(name: &str, value: f64, larger_is_better: bool) -> String {
+    format!(
+        "    {{\"name\": \"{name}\", \"value\": {value}, \
+         \"larger_is_better\": {larger_is_better}}}"
+    )
+}
+
 fn main() {
+    // Observability stays on for the whole bench: the warm/contended
+    // numbers below therefore INCLUDE the instrumented path's overhead,
+    // which is exactly what the committed ceilings should gate.
+    obs::set_enabled(true);
     let net_fe = measured(NetConfig::fast_ethernet_icluster1());
     let net_ge = measured(NetConfig::gigabit_ethernet());
 
@@ -70,6 +85,14 @@ fn main() {
         let (name, op) = if flip % 2 == 0 { ("fe", Op::Bcast) } else { ("ge", Op::Scatter) };
         std::hint::black_box(coord.decision(op, name, 24, 65536).unwrap());
     });
+    // The registry's own view of the warm path: p95 of every decision()
+    // latency recorded so far (cold registration went through tables(),
+    // which does not record, so this is pure warm-hit data).
+    let decision_p95_ns = obs::registry()
+        .histogram_snapshot("coordinator.decision_ns")
+        .map(|s| s.p95())
+        .unwrap_or(0);
+    println!("registry decision_latency p95: {decision_p95_ns} ns");
 
     // ---- contended hit: same lookup under 7 hammering threads ----------
     section("contended hit (7 background threads on the same service)");
@@ -108,11 +131,16 @@ fn main() {
         st.cache.entries, st.cache.hits, st.cache.misses, st.tunes
     );
 
-    // ---- emit BENCH_coordinator.json at the repo root -------------------
+    // ---- emit the bench JSON at the repo root ---------------------------
+    // Default to a .candidate file so a casual local run can never
+    // clobber the committed baseline; CI gates committed vs candidate.
+    let write_baseline = std::env::args().any(|a| a == "--write-baseline");
+    let file =
+        if write_baseline { "BENCH_coordinator.json" } else { "BENCH_coordinator.candidate.json" };
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("package sits one level below the repo root")
-        .join("BENCH_coordinator.json");
+        .join(file);
     let json = format!
 ("{{
   \"benchmark\": \"coordinator_lookup\",
@@ -123,6 +151,9 @@ fn main() {
 {},
 {}
   ],
+  \"metrics\": [
+{}
+  ],
   \"slowdown_cold_over_warm\": {:.1},
   \"tuner_runs\": {}
 }}
@@ -130,9 +161,13 @@ fn main() {
         json_entry("cold_miss", &r_cold),
         json_entry("warm_hit", &r_warm),
         json_entry("contended_hit", &r_contended),
+        json_metric("decision_latency_p95", decision_p95_ns as f64, false),
         r_cold.summary.p50 / r_warm.summary.p50.max(1e-12),
         st.tunes
     );
-    std::fs::write(&out, json).expect("writing BENCH_coordinator.json");
+    std::fs::write(&out, json).expect("writing the bench JSON");
     println!("wrote {}", out.display());
+    if !write_baseline {
+        println!("(pass `-- --write-baseline` to overwrite the committed BENCH_coordinator.json)");
+    }
 }

@@ -3,9 +3,10 @@
 //! grid, plus the determinism contract (byte-identical tables) and the
 //! pruning-effectiveness counters (model invocations per cell, pruned
 //! searches, warm-start hit rate — deterministic, unlike wall time).
-//! Emits `BENCH_tuner.json` at the repository root so the perf
-//! trajectory tracks both the parallel speedup and the eval-count
-//! reduction PR over PR.
+//! Emits `BENCH_tuner.candidate.json` at the repository root by default
+//! (pass `-- --write-baseline` to overwrite the committed
+//! `BENCH_tuner.json`) so the perf trajectory tracks both the parallel
+//! speedup and the eval-count reduction PR over PR.
 
 use std::path::PathBuf;
 
@@ -78,10 +79,14 @@ fn main() {
         counts.warm_hit_rate()
     );
 
+    // Default to a .candidate file so a casual local run can never
+    // clobber the committed baseline; CI gates committed vs candidate.
+    let write_baseline = std::env::args().any(|a| a == "--write-baseline");
+    let file = if write_baseline { "BENCH_tuner.json" } else { "BENCH_tuner.candidate.json" };
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("package sits one level below the repo root")
-        .join("BENCH_tuner.json");
+        .join(file);
     let json = format!(
         "{{\n  \"benchmark\": \"tuner_sweep\",\n  \"description\": \"sequential vs parallel \
          native tuning sweep of the default {points}-point grid (both ops)\",\n  \"unit\": \
@@ -96,6 +101,9 @@ fn main() {
         json_metric("warm_start_hit_rate", counts.warm_hit_rate(), true),
         counts.to_json(),
     );
-    std::fs::write(&out, json).expect("writing BENCH_tuner.json");
+    std::fs::write(&out, json).expect("writing the bench JSON");
     println!("wrote {}", out.display());
+    if !write_baseline {
+        println!("(pass `-- --write-baseline` to overwrite the committed BENCH_tuner.json)");
+    }
 }

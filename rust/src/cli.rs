@@ -1,6 +1,8 @@
 //! Hand-rolled CLI argument handling (clap is unavailable offline).
 //!
 //! Grammar: `collective-tuner <command> [--key value | --flag]...`
+//! The `obs` command additionally takes one positional subcommand
+//! (`obs dump`); every other command still rejects positionals.
 
 use std::collections::BTreeMap;
 
@@ -12,6 +14,7 @@ use crate::netsim::NetConfig;
 #[derive(Debug, Clone)]
 pub struct Args {
     pub command: String,
+    subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
@@ -21,6 +24,14 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
         let mut it = args.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut subcommand = None;
+        if command == "obs" {
+            if let Some(v) = it.peek() {
+                if !v.starts_with("--") {
+                    subcommand = it.next();
+                }
+            }
+        }
         let mut opts = BTreeMap::new();
         let mut flags = Vec::new();
         while let Some(a) = it.next() {
@@ -34,7 +45,12 @@ impl Args {
                 _ => flags.push(key.to_string()),
             }
         }
-        Ok(Args { command, opts, flags })
+        Ok(Args { command, subcommand, opts, flags })
+    }
+
+    /// The positional subcommand (only the `obs` command takes one).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -81,6 +97,19 @@ impl Args {
         }
     }
 
+    /// The `--log-level` option parsed to a [`log::Level`] (any
+    /// command takes it; `main` installs the stderr sink).
+    pub fn log_level(&self) -> Result<Option<log::Level>> {
+        match self.get("log-level") {
+            None => Ok(None),
+            Some(v) => log::Level::from_name(v).map(Some).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--log-level: '{v}' is not a level (error, warn, info, debug, trace)"
+                )
+            }),
+        }
+    }
+
     /// Network preset by name.
     pub fn net_config(&self) -> Result<NetConfig> {
         let preset = self.get_or("preset", "icluster1");
@@ -123,6 +152,11 @@ collective-tuner — fast tuning of intra-cluster collective communications
 
 USAGE:
   collective-tuner <command> [options]
+
+GLOBAL OPTIONS:
+  --log-level error|warn|info|debug|trace
+                install the built-in stderr logger (timestamped lines,
+                level filter); without it only warn/error are printed
 
 COMMANDS:
   bench-plogp   measure pLogP parameters (L and the g(m) table)
@@ -174,6 +208,9 @@ COMMANDS:
                   --jobs N       (tuner sweep workers; 0 = all cores)
                   --backend auto|native|artifact   --save dir/  --warm dir/
                   --stats        (one JSON blob: cache hit/miss + sweep counters)
+                  --metrics-interval N   (print an obs registry snapshot every
+                                          N seconds while serving, plus a final
+                                          snapshot and flight-recorder dump)
   query         one-shot coordinator query (tunes on first use, cached after)
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --procs 24  --bytes 64k
@@ -182,6 +219,11 @@ COMMANDS:
                   --traces dir/  (warm-start from captured traces: replay-tune
                                   the recorded workload, needs --op all capture)
                   --stats        (one JSON blob: cache hit/miss + sweep counters)
+  obs           observability inspection
+                  obs dump: exercise a miniature coordinator workload and
+                  print the metrics registry snapshot (JSON), the
+                  Prometheus text exposition, and the decision
+                  flight-recorder ring (TSV)
   info          show artifact metadata and presets
   help          this text
 
@@ -197,6 +239,8 @@ EXAMPLES:
   collective-tuner query --op barrier --procs 32 --nodes 32
   collective-tuner experiment --id fig2 --out results/
   collective-tuner serve --clusters 4 --threads 16 --requests 50000
+  collective-tuner serve --threads 8 --metrics-interval 1 --log-level info
+  collective-tuner obs dump
   collective-tuner query --op bcast --procs 48 --bytes 1M --save tables/
 ";
 
@@ -226,6 +270,32 @@ mod tests {
     #[test]
     fn rejects_positional() {
         assert!(Args::parse(["run".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn obs_takes_one_subcommand_word() {
+        let a = parse(&["obs", "dump"]);
+        assert_eq!(a.command, "obs");
+        assert_eq!(a.subcommand(), Some("dump"));
+        // bare `obs` is fine (main prints usage), options still parse
+        let b = parse(&["obs"]);
+        assert_eq!(b.subcommand(), None);
+        let c = parse(&["obs", "dump", "--log-level", "debug"]);
+        assert_eq!(c.subcommand(), Some("dump"));
+        assert_eq!(c.get("log-level"), Some("debug"));
+        // a second positional is still rejected
+        assert!(Args::parse(["obs".into(), "dump".into(), "oops".into()]).is_err());
+        // other commands never absorb a positional
+        assert_eq!(parse(&["tune"]).subcommand(), None);
+    }
+
+    #[test]
+    fn log_level_parses_or_errors() {
+        assert_eq!(parse(&["tune"]).log_level().unwrap(), None);
+        let a = parse(&["tune", "--log-level", "debug"]);
+        assert_eq!(a.log_level().unwrap(), Some(log::Level::Debug));
+        let b = parse(&["tune", "--log-level", "loud"]);
+        assert!(b.log_level().is_err());
     }
 
     #[test]

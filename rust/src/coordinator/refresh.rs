@@ -16,6 +16,7 @@
 use anyhow::{Context, Result};
 
 use crate::netsim::Netsim;
+use crate::obs::{self, Span};
 use crate::plogp::bench::{self, BenchOptions};
 
 use super::service::Coordinator;
@@ -75,6 +76,10 @@ impl Coordinator {
         sim: &mut Netsim,
         policy: &RefreshPolicy,
     ) -> Result<RefreshOutcome> {
+        let _pass = Span::start("coordinator.refresh_ns");
+        if obs::enabled() {
+            obs::registry().counter("coordinator.refresh.checks").inc();
+        }
         let rc = self
             .cluster(cluster)
             .with_context(|| format!("cluster '{cluster}' is not registered"))?;
@@ -85,6 +90,9 @@ impl Coordinator {
         }
         let new = self.register_with_probe(cluster, rc.nodes, fresh.clone(), rc.probe);
         self.force_retune(new, &fresh);
+        if obs::enabled() {
+            obs::registry().counter("coordinator.refresh.swaps").inc();
+        }
         if new != rc.signature {
             // Retire the drifted table unless another registered cluster
             // still resolves to that signature.

@@ -25,9 +25,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::eval::{EvalCounts, ReplayEval};
 use crate::netsim::{Netsim, NodeId};
+use crate::obs::{self, DecisionEvent, DecisionOutcome, Span};
 use crate::plogp::{bench, GapTable, PLogP};
 use crate::topology::GridSpec;
 use crate::tuner::{grids, persist, Decision, DecisionTable, Op, Tuner};
+use crate::util::json::Json;
 
 use super::cache::{CacheStats, ShardedCache};
 use super::signature::ClusterSignature;
@@ -269,9 +271,33 @@ impl Coordinator {
     }
 
     /// The full query API: strategy + segment + predicted time for one
-    /// `(op, cluster, P, m)` point.
+    /// `(op, cluster, P, m)` point. When observability is enabled the
+    /// end-to-end latency lands in `coordinator.decision_ns` and the
+    /// decision itself in the flight recorder.
     pub fn decision(&self, op: Op, cluster: &str, p: usize, m: u64) -> Result<Decision> {
-        Ok(self.tables(cluster)?.decision(op, p, m))
+        let t0 = obs::timer_start();
+        let rc = self
+            .cluster(cluster)
+            .with_context(|| format!("cluster '{cluster}' is not registered"))?;
+        let (tables, outcome) = self.tables_for_traced(rc.signature, &rc.net);
+        let d = tables.decision(op, p, m);
+        if let Some(t0) = t0 {
+            let latency_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            let reg = obs::registry();
+            reg.histogram("coordinator.decision_ns").record(latency_ns);
+            reg.counter("coordinator.decisions").inc();
+            let fr = obs::flight();
+            fr.record(DecisionEvent {
+                ts_ns: fr.now_ns(),
+                signature: rc.signature.key(),
+                op: op.name(),
+                outcome,
+                strategy: d.strategy.name(),
+                segment: d.segment,
+                latency_ns,
+            });
+        }
+        Ok(d)
     }
 
     /// Tables for an explicit signature/parameter pair. Cache hit → one
@@ -279,8 +305,26 @@ impl Coordinator {
     /// thread in tunes, every concurrent caller of the same signature
     /// blocks on that run instead of starting its own.
     pub fn tables_for(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
-        if let Some(t) = self.cache.get(&signature) {
-            return t;
+        self.tables_for_traced(signature, net).0
+    }
+
+    /// [`Coordinator::tables_for`] plus how the lookup resolved, with
+    /// each phase timed into its own histogram when observability is on
+    /// (`coordinator.decision.{cache_read,coalesce_wait,tune}_ns`).
+    fn tables_for_traced(
+        &self,
+        signature: ClusterSignature,
+        net: &PLogP,
+    ) -> (Arc<TableSet>, DecisionOutcome) {
+        let cached = {
+            let _read = Span::start("coordinator.decision.cache_read_ns");
+            self.cache.get(&signature)
+        };
+        if let Some(t) = cached {
+            if obs::enabled() {
+                obs::registry().counter("coordinator.cache_hits").inc();
+            }
+            return (t, DecisionOutcome::Hit);
         }
         let (flight, leader) = {
             let mut map = self.inflight.lock().unwrap();
@@ -290,7 +334,10 @@ impl Coordinator {
             // keeps the hit/miss counters honest — the logical miss was
             // already counted by the `get` above.
             if let Some(t) = self.cache.peek(&signature) {
-                return t;
+                if obs::enabled() {
+                    obs::registry().counter("coordinator.cache_hits").inc();
+                }
+                return (t, DecisionOutcome::Hit);
             }
             match map.get(&signature) {
                 Some(f) => (Arc::clone(f), false),
@@ -302,18 +349,26 @@ impl Coordinator {
             }
         };
         if leader {
+            if obs::enabled() {
+                obs::registry().counter("coordinator.cache_misses").inc();
+            }
+            let _tune = Span::start("coordinator.decision.tune_ns");
             let tables = Arc::new(self.tune_now(net));
             self.cache.insert(signature, Arc::clone(&tables));
             *flight.result.lock().unwrap() = Some(Arc::clone(&tables));
             flight.ready.notify_all();
             self.inflight.lock().unwrap().remove(&signature);
-            tables
+            (tables, DecisionOutcome::Miss)
         } else {
+            if obs::enabled() {
+                obs::registry().counter("coordinator.coalesced_waits").inc();
+            }
+            let _wait = Span::start("coordinator.decision.coalesce_wait_ns");
             let mut guard = flight.result.lock().unwrap();
             while guard.is_none() {
                 guard = flight.ready.wait(guard).unwrap();
             }
-            Arc::clone(guard.as_ref().unwrap())
+            (Arc::clone(guard.as_ref().unwrap()), DecisionOutcome::Coalesced)
         }
     }
 
@@ -370,25 +425,35 @@ impl Coordinator {
         self.tunes.load(Ordering::Relaxed)
     }
 
-    /// Every service counter in one JSON blob — the cache hit/miss
-    /// path *and* the per-tune sweep counters — so a running `serve`
-    /// instance (or `query --stats`) reports its whole cost picture in
-    /// one machine-readable line.
-    pub fn stats_json(&self) -> String {
+    /// Every service counter as one [`Json`] value — the cache
+    /// hit/miss path *and* the per-tune sweep counters.
+    pub fn stats_to_json(&self) -> Json {
         let st = self.stats();
-        format!(
-            "{{\"backend\":\"{}\",\"registered\":{},\"tunes\":{},\
-             \"cache\":{{\"entries\":{},\"hits\":{},\"misses\":{},\"evictions\":{}}},\
-             \"eval\":{}}}",
-            self.backend_name(),
-            st.registered,
-            st.tunes,
-            st.cache.entries,
-            st.cache.hits,
-            st.cache.misses,
-            st.cache.evictions,
-            st.eval.to_json()
-        )
+        Json::obj(vec![
+            ("backend", Json::str(self.backend_name())),
+            ("registered", Json::from(st.registered)),
+            ("tunes", Json::from(st.tunes)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("entries", Json::from(st.cache.entries)),
+                    ("hits", Json::from(st.cache.hits)),
+                    ("misses", Json::from(st.cache.misses)),
+                    ("evictions", Json::from(st.cache.evictions)),
+                ]),
+            ),
+            ("eval", st.eval.to_json_value()),
+        ])
+    }
+
+    /// Every service counter in one JSON blob — rendered through the
+    /// shared [`crate::util::json`] writer (no hand-rolled formatting),
+    /// so a running `serve` instance (or `query --stats`) reports its
+    /// whole cost picture in one machine-readable line. Keys are
+    /// unchanged from the hand-formatted original (objects serialize
+    /// with sorted keys).
+    pub fn stats_json(&self) -> String {
+        self.stats_to_json().to_string()
     }
 
     // ---- persistence ---------------------------------------------------
@@ -645,6 +710,18 @@ mod tests {
         assert!(json.contains("\"tunes\":1"), "{json}");
         assert!(json.contains("\"hits\":"), "{json}");
         assert!(json.contains("\"model_invocations\":"), "{json}");
+        // emitted through the shared util::json writer: the blob parses
+        // back, and the original hand-formatted shape is intact
+        let doc = crate::util::json::parse(&json).expect("stats_json is valid JSON");
+        let crate::util::json::Json::Obj(top) = &doc else { panic!("not an object") };
+        for key in ["backend", "registered", "tunes", "cache", "eval"] {
+            assert!(top.contains_key(key), "missing '{key}' in {json}");
+        }
+        let crate::util::json::Json::Obj(cache) = &top["cache"] else { panic!() };
+        for key in ["entries", "hits", "misses", "evictions"] {
+            assert!(cache.contains_key(key), "missing cache '{key}' in {json}");
+        }
+        assert_eq!(top["tunes"], crate::util::json::Json::Num(1.0));
         // the native sweep actually ran: the eval counters are live
         let st = c.stats();
         assert!(st.eval.cells > 0, "{:?}", st.eval);

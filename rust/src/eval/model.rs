@@ -16,6 +16,7 @@
 
 use crate::collectives::Strategy;
 use crate::models::{self, BoundInputs, CostInputs};
+use crate::obs::Span;
 use crate::plogp::{CachedRow, GapCache, PLogP};
 use crate::tuner::decision::{Decision, Op};
 
@@ -219,11 +220,23 @@ impl Evaluator for ModelEval {
         // The best cost *achieved* so far — the pruning threshold.
         let mut threshold = f64::INFINITY;
 
+        // Stage timing (no-op unless `obs` is enabled): full scoring is
+        // attributed to segment_search for segmented strategies and
+        // model_eval for unsegmented ones.
+        let timed_eval = |cell: &mut Cell<'_>, s: Strategy, bi: &BoundInputs| {
+            let _stage = if s.is_segmented() {
+                Span::start("tuner.stage.segment_search_ns")
+            } else {
+                Span::start("tuner.stage.model_eval_ns")
+            };
+            cell.eval(s, bi)
+        };
+
         // 1. Warm start: score the adjacent cell's winner first so the
         //    threshold is tight before anything else is screened.
         let hint_idx = ctx.hint.and_then(|h| family.iter().position(|&s| s == h));
         if let Some(idx) = hint_idx {
-            let r = cell.eval(family[idx], &bi);
+            let r = timed_eval(&mut cell, family[idx], &bi);
             threshold = r.0;
             results[idx] = Some(r);
         }
@@ -231,16 +244,20 @@ impl Evaluator for ModelEval {
         // 2. Screen every remaining strategy by its lower bound, in
         //    ascending-bound order: likely winners are scored first, so
         //    the expensive losers face the tightest threshold.
-        let mut order: Vec<(f64, usize)> = family
-            .iter()
-            .enumerate()
-            .filter(|(idx, _)| results[*idx].is_none())
-            .map(|(idx, &s)| {
-                cell.n.bound_evals += 1;
-                (models::lower_bound(s, &bi), idx)
-            })
-            .collect();
-        order.sort_by(|a, b| a.partial_cmp(b).expect("bounds are finite"));
+        let order: Vec<(f64, usize)> = {
+            let _screen = Span::start("tuner.stage.bound_screen_ns");
+            let mut order: Vec<(f64, usize)> = family
+                .iter()
+                .enumerate()
+                .filter(|(idx, _)| results[*idx].is_none())
+                .map(|(idx, &s)| {
+                    cell.n.bound_evals += 1;
+                    (models::lower_bound(s, &bi), idx)
+                })
+                .collect();
+            order.sort_by(|a, b| a.partial_cmp(b).expect("bounds are finite"));
+            order
+        };
         for (lb, idx) in order {
             let s = family[idx];
             if models::prunes(lb, threshold) {
@@ -252,7 +269,7 @@ impl Evaluator for ModelEval {
                 }
                 continue;
             }
-            let r = cell.eval(s, &bi);
+            let r = timed_eval(&mut cell, s, &bi);
             if r.0 < threshold {
                 threshold = r.0;
             }

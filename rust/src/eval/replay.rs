@@ -82,18 +82,20 @@ impl ReplayStats {
         }
     }
 
-    /// Flat JSON object for `replay`/`validate` CLI output.
+    /// Flat JSON object for `replay`/`validate` CLI output, rendered
+    /// through the shared `util::json` writer (hit_rate keeps the
+    /// original 4-decimal rounding).
     pub fn to_json(&self) -> String {
-        format!(
-            "{{\"records\":{},\"events\":{},\"exact_hits\":{},\"interp_hits\":{},\
-             \"misses\":{},\"hit_rate\":{:.4}}}",
-            self.records,
-            self.events,
-            self.exact_hits,
-            self.interp_hits,
-            self.misses,
-            self.hit_rate()
-        )
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("records", Json::from(self.records)),
+            ("events", Json::from(self.events)),
+            ("exact_hits", Json::from(self.exact_hits)),
+            ("interp_hits", Json::from(self.interp_hits)),
+            ("misses", Json::from(self.misses)),
+            ("hit_rate", Json::from((self.hit_rate() * 10_000.0).round() / 10_000.0)),
+        ])
+        .to_string()
     }
 }
 

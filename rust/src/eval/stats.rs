@@ -12,6 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::collectives::Strategy;
+use crate::util::json::Json;
 
 /// Shared sweep counters (see the module docs). Construction is free;
 /// every method takes `&self`.
@@ -119,25 +120,30 @@ impl EvalCounts {
         exhaustive as f64 / self.model_invocations.max(1) as f64
     }
 
-    /// Flat JSON object (counters plus derived rates) for `--stats`
-    /// output and the bench JSONs.
+    /// Flat JSON object (counters plus derived rates) as a [`Json`]
+    /// value, so callers can embed it in larger documents without
+    /// string splicing. Rates keep the original rounding (2 and 4
+    /// decimal places).
+    pub fn to_json_value(&self) -> Json {
+        let round = |x: f64, scale: f64| (x * scale).round() / scale;
+        Json::obj(vec![
+            ("cells", Json::from(self.cells)),
+            ("model_invocations", Json::from(self.model_invocations)),
+            ("invocations_per_cell", Json::from(round(self.invocations_per_cell(), 100.0))),
+            ("bound_evals", Json::from(self.bound_evals)),
+            ("strategies_pruned", Json::from(self.strategies_pruned)),
+            ("seg_searches_pruned", Json::from(self.seg_searches_pruned)),
+            ("seg_points_skipped", Json::from(self.seg_points_skipped)),
+            ("warm_hits", Json::from(self.warm_hits)),
+            ("warm_misses", Json::from(self.warm_misses)),
+            ("warm_hit_rate", Json::from(round(self.warm_hit_rate(), 10_000.0))),
+        ])
+    }
+
+    /// [`EvalCounts::to_json_value`] rendered through the shared
+    /// `util::json` writer, for `--stats` output and the bench JSONs.
     pub fn to_json(&self) -> String {
-        format!(
-            "{{\"cells\":{},\"model_invocations\":{},\"invocations_per_cell\":{:.2},\
-             \"bound_evals\":{},\"strategies_pruned\":{},\"seg_searches_pruned\":{},\
-             \"seg_points_skipped\":{},\"warm_hits\":{},\"warm_misses\":{},\
-             \"warm_hit_rate\":{:.4}}}",
-            self.cells,
-            self.model_invocations,
-            self.invocations_per_cell(),
-            self.bound_evals,
-            self.strategies_pruned,
-            self.seg_searches_pruned,
-            self.seg_points_skipped,
-            self.warm_hits,
-            self.warm_misses,
-            self.warm_hit_rate()
-        )
+        self.to_json_value().to_string()
     }
 }
 

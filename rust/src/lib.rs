@@ -58,6 +58,11 @@
 //!   `collectives::multilevel` consumes its per-island decisions.
 //! * [`harness`] — experiment drivers that regenerate every figure of
 //!   the paper's evaluation (measured vs predicted).
+//! * [`obs`] — first-class observability over all of the above: a
+//!   global registry of counters/gauges/log-linear histograms, RAII
+//!   [`obs::Span`] timers on the coordinator/tuner/eval hot paths, a
+//!   decision flight recorder, and JSON/Prometheus export. Off by
+//!   default; disabled call sites cost one relaxed atomic load.
 //!
 //! The Python under `python/` is build-time only: it authors and lowers
 //! the tuner kernel to `artifacts/tuner.hlo.txt`; the binary is
@@ -70,6 +75,7 @@ pub mod harness;
 pub mod models;
 pub mod mpi;
 pub mod netsim;
+pub mod obs;
 pub mod plogp;
 pub mod runtime;
 pub mod topology;

@@ -1,7 +1,7 @@
 //! `collective-tuner` — the L3 coordinator binary.
 //!
 //! Subcommands: `bench-plogp`, `tune`, `run`, `experiment`, `discover`,
-//! `serve`, `query`, `info`. See `cli::USAGE` or run with `help`.
+//! `serve`, `query`, `obs`, `info`. See `cli::USAGE` or run with `help`.
 
 use std::path::{Path, PathBuf};
 
@@ -13,6 +13,7 @@ use collective_tuner::eval;
 use collective_tuner::harness::experiments;
 use collective_tuner::mpi::World;
 use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::obs;
 use collective_tuner::plogp;
 use collective_tuner::runtime::TunerArtifact;
 use collective_tuner::topology::{discover, ClusterSpec, GridSpec};
@@ -38,6 +39,14 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    if let Some(level) = args.log_level()? {
+        obs::init_logging(level);
+    }
+    // Observability is opt-in (see the obs module's overhead contract):
+    // turn it on exactly when a surface that reads it was requested.
+    if args.flag("stats") || args.get("metrics-interval").is_some() || args.command == "obs" {
+        obs::set_enabled(true);
+    }
     match args.command.as_str() {
         "bench-plogp" => cmd_bench_plogp(args),
         "tune" => cmd_tune(args),
@@ -49,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "discover" => cmd_discover(args),
         "serve" => cmd_serve(args),
         "query" => cmd_query(args),
+        "obs" => cmd_obs(args),
         "info" => cmd_info(args),
         "help" | "--help" | "-h" => {
             println!("{}", cli::USAGE);
@@ -194,6 +204,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 counts.reduction_vs(exhaustive)
             );
         }
+        println!("obs: {}\n", obs::registry().snapshot_json());
     }
 
     save_and_print_tables(args, &tables)
@@ -628,6 +639,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     );
     if args.flag("stats") {
         println!("stats     : {}", coord.stats_json());
+        println!("obs       : {}", obs::registry().snapshot_json());
     }
     if let Some(dir) = args.get("save") {
         let n = coord.persist_to(Path::new(dir))?;
@@ -637,8 +649,9 @@ fn cmd_query(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+    let metrics_interval = args.u64_or("metrics-interval", 0)?;
     let k = args.usize_or("clusters", 3)?.max(1);
     let nodes = args.usize_or("nodes", 16)?.max(2);
     let threads = args.usize_or("threads", 8)?.max(1);
@@ -679,25 +692,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let names: Vec<String> = coord.clusters().iter().map(|c| c.name.clone()).collect();
     let served = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
-        for t in 0..threads {
-            let coord = &coord;
-            let names = &names;
-            let served = &served;
+        let done = &done;
+        if metrics_interval > 0 {
+            // Periodic snapshot printer: one line per interval while the
+            // load threads run. Polls `done` at a finer grain than the
+            // interval so shutdown never waits a full period.
             s.spawn(move || {
-                let mut rng = Prng::new(0xC0DE_5EED ^ t as u64);
-                for _ in 0..requests {
-                    let name = rng.pick(names);
-                    let op = *rng.pick(&Op::ALL);
-                    let p = rng.range_usize(2, nodes.max(3));
-                    let m = rng.range(1, 1 << 20);
-                    let d = coord.decision(op, name, p, m).expect("cluster registered");
-                    std::hint::black_box(d);
-                    served.fetch_add(1, Ordering::Relaxed);
+                let tick = std::time::Duration::from_millis(50);
+                let period = std::time::Duration::from_secs(metrics_interval);
+                let mut last = std::time::Instant::now();
+                while !done.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if last.elapsed() >= period {
+                        println!("metrics: {}", obs::registry().snapshot_json());
+                        last = std::time::Instant::now();
+                    }
                 }
             });
         }
+        let workers: Vec<_> = (0..threads)
+            .map(|t| {
+                let coord = &coord;
+                let names = &names;
+                let served = &served;
+                s.spawn(move || {
+                    let mut rng = Prng::new(0xC0DE_5EED ^ t as u64);
+                    for _ in 0..requests {
+                        let name = rng.pick(names);
+                        let op = *rng.pick(&Op::ALL);
+                        let p = rng.range_usize(2, nodes.max(3));
+                        let m = rng.range(1, 1 << 20);
+                        let d = coord.decision(op, name, p, m).expect("cluster registered");
+                        std::hint::black_box(d);
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("serve worker panicked");
+        }
+        done.store(true, Ordering::Relaxed);
     });
     let dt = t0.elapsed().as_secs_f64().max(1e-9);
     let total = served.load(Ordering::Relaxed);
@@ -713,6 +751,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if args.flag("stats") {
         println!("stats: {}", coord.stats_json());
+    }
+    if obs::enabled() {
+        println!("obs: {}", obs::registry().snapshot_json());
+        let fr = obs::flight();
+        println!(
+            "flight recorder: {} event(s), {} dropped, {} total",
+            fr.len(),
+            fr.dropped(),
+            fr.total()
+        );
+        print!("{}", fr.to_tsv());
     }
 
     // The multi-level construction both companion papers need: build a
@@ -752,6 +801,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let n = coord.persist_to(Path::new(dir))?;
         println!("persisted {n} table set(s) to {dir}");
     }
+    Ok(())
+}
+
+/// `obs <subcommand>` — the observability layer's own CLI surface.
+fn cmd_obs(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("dump") => cmd_obs_dump(args),
+        Some(other) => bail!("unknown obs subcommand '{other}' (try: obs dump)"),
+        None => bail!("obs needs a subcommand (try: obs dump)"),
+    }
+}
+
+/// A fresh process starts with an empty registry, so `obs dump` first
+/// exercises a miniature coordinator workload — register, decide across
+/// three op families and a spread of sizes — and then prints all three
+/// export surfaces: the JSON snapshot, the Prometheus text exposition,
+/// and the decision flight-recorder ring as TSV.
+fn cmd_obs_dump(args: &Args) -> Result<()> {
+    obs::set_enabled(true);
+    let cfg = args.net_config()?;
+    let coord = coordinator_from_args(args)?;
+    let mut sim = Netsim::new(2, cfg);
+    let net = plogp::bench::measure(&mut sim);
+    coord.register("obs-demo", 8, net);
+    for op in [Op::Bcast, Op::Scatter, Op::AllReduce] {
+        for m in [1024u64, 64 * 1024, 1 << 20] {
+            let _ = coord.decision(op, "obs-demo", 8, m)?;
+        }
+    }
+    println!("== registry snapshot (json) ==");
+    println!("{}", obs::registry().snapshot_json());
+    println!();
+    println!("== prometheus exposition ==");
+    print!("{}", obs::registry().prometheus());
+    println!();
+    let fr = obs::flight();
+    println!("== decision flight recorder ({} event(s), {} dropped) ==", fr.len(), fr.dropped());
+    print!("{}", fr.to_tsv());
     Ok(())
 }
 

@@ -1,0 +1,220 @@
+//! Decision flight recorder: a fixed-capacity ring of the most recent
+//! coordinator decisions, with the same drop-counting contract as
+//! [`crate::netsim::Trace`] — once full, each new event overwrites the
+//! oldest and bumps `dropped`, so `dropped() + len() == total()` holds
+//! at all times and nothing is lost silently.
+
+use crate::util::table::Table;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity used by the global recorder.
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 4096;
+
+/// Outcome of one coordinator decision lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionOutcome {
+    /// Served from the sharded cache.
+    Hit,
+    /// Cold miss; this request led the tune.
+    Miss,
+    /// Cold miss coalesced onto another request's in-flight tune.
+    Coalesced,
+}
+
+impl DecisionOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionOutcome::Hit => "hit",
+            DecisionOutcome::Miss => "miss",
+            DecisionOutcome::Coalesced => "coalesced",
+        }
+    }
+}
+
+/// One recorded decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionEvent {
+    /// Nanoseconds since the recorder's construction.
+    pub ts_ns: u64,
+    /// Cluster signature the decision keyed on.
+    pub signature: String,
+    /// Collective op name.
+    pub op: &'static str,
+    /// How the lookup resolved.
+    pub outcome: DecisionOutcome,
+    /// Chosen strategy name.
+    pub strategy: &'static str,
+    /// Segment size in bytes for segmented strategies.
+    pub segment: Option<u64>,
+    /// End-to-end decision latency.
+    pub latency_ns: u64,
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<DecisionEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    start: usize,
+    dropped: u64,
+}
+
+/// Fixed-capacity, mutex-protected event ring. The lock is held for a
+/// constant-time slot write on record and a linear copy on read.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    capacity: usize,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        assert!(capacity > 0, "flight recorder capacity must be positive");
+        FlightRecorder {
+            capacity,
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                buf: Vec::with_capacity(capacity),
+                start: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Nanoseconds since the recorder was constructed — the timestamp
+    /// base for [`DecisionEvent::ts_ns`].
+    pub fn now_ns(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    /// Record one event; overwrites the oldest and bumps `dropped`
+    /// when the ring is full (mirroring `netsim::Trace`).
+    pub fn record(&self, ev: DecisionEvent) {
+        let mut r = self.ring.lock().unwrap();
+        if r.buf.len() < self.capacity {
+            r.buf.push(ev);
+        } else {
+            let start = r.start;
+            r.buf[start] = ev;
+            r.start = (start + 1) % self.capacity;
+            r.dropped += 1;
+        }
+    }
+
+    /// Events oldest-first.
+    pub fn events(&self) -> Vec<DecisionEvent> {
+        let r = self.ring.lock().unwrap();
+        let mut out = Vec::with_capacity(r.buf.len());
+        out.extend_from_slice(&r.buf[r.start..]);
+        out.extend_from_slice(&r.buf[..r.start]);
+        out
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// Total events ever recorded: `dropped() + len()`.
+    pub fn total(&self) -> u64 {
+        let r = self.ring.lock().unwrap();
+        r.dropped + r.buf.len() as u64
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Empty the ring and zero the drop counter.
+    pub fn clear(&self) {
+        let mut r = self.ring.lock().unwrap();
+        r.buf.clear();
+        r.start = 0;
+        r.dropped = 0;
+    }
+
+    /// The ring as TSV (oldest-first) through [`Table`]: columns
+    /// `ts_ns, signature, op, outcome, strategy, segment, latency_ns`.
+    pub fn to_tsv(&self) -> String {
+        let mut t = Table::new(vec![
+            "ts_ns",
+            "signature",
+            "op",
+            "outcome",
+            "strategy",
+            "segment",
+            "latency_ns",
+        ]);
+        for ev in self.events() {
+            t.row(vec![
+                ev.ts_ns.to_string(),
+                ev.signature.clone(),
+                ev.op.to_string(),
+                ev.outcome.name().to_string(),
+                ev.strategy.to_string(),
+                ev.segment.map_or_else(|| "-".to_string(), |s| s.to_string()),
+                ev.latency_ns.to_string(),
+            ]);
+        }
+        t.to_tsv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> DecisionEvent {
+        DecisionEvent {
+            ts_ns: i,
+            signature: format!("sig-{i}"),
+            op: "bcast",
+            outcome: DecisionOutcome::Hit,
+            strategy: "binomial",
+            segment: if i % 2 == 0 { Some(1024) } else { None },
+            latency_ns: 100 + i,
+        }
+    }
+
+    #[test]
+    fn ring_preserves_drop_accounting_invariant() {
+        let fr = FlightRecorder::new(4);
+        for i in 0..10 {
+            fr.record(ev(i));
+            assert_eq!(fr.dropped() + fr.len() as u64, fr.total());
+            assert_eq!(fr.total(), i + 1);
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.dropped(), 6);
+        // oldest-first and only the newest `capacity` survive
+        let ts: Vec<u64> = fr.events().iter().map(|e| e.ts_ns).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn tsv_dump_has_header_and_rows() {
+        let fr = FlightRecorder::new(8);
+        fr.record(ev(0));
+        fr.record(ev(1));
+        let tsv = fr.to_tsv();
+        let lines: Vec<&str> = tsv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("ts_ns\tsignature\top"));
+        assert!(lines[1].contains("sig-0"));
+        assert!(lines[1].contains("\t1024\t"));
+        assert!(lines[2].contains("\t-\t"));
+        fr.clear();
+        assert!(fr.is_empty());
+        assert_eq!(fr.total(), 0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Built-in `log::Log` sink: timestamped stderr lines with a level
+//! filter, installed by the CLI's `--log-level` flag so the crate's
+//! existing `log::` call sites actually emit output.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Minimal stderr sink: `<unix-secs>.<millis> [LEVEL] message`.
+#[derive(Debug, Default)]
+pub struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn log(&self, level: log::Level, msg: std::fmt::Arguments<'_>) {
+        let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+        eprintln!(
+            "{}.{:03} [{}] {msg}",
+            now.as_secs(),
+            now.subsec_millis(),
+            level.as_str()
+        );
+    }
+}
+
+/// Install the stderr sink at the given maximum level. Returns false
+/// if a logger was already installed (the first one wins).
+pub fn init_logging(level: log::Level) -> bool {
+    log::set_logger(Box::new(StderrLogger), level)
+}

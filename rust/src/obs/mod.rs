@@ -1,0 +1,142 @@
+//! First-class observability: a global metrics [`Registry`], scoped
+//! [`Span`] timers, and a decision [`FlightRecorder`] — the measurement
+//! layer the ROADMAP's network-fronted coordinator needs (latency
+//! distributions, per-stage timings, and a record of what the service
+//! actually decided), built with zero new dependencies.
+//!
+//! Three instrument kinds live in the registry:
+//!
+//! * [`Counter`] / [`Gauge`] — single relaxed-atomic `u64`s;
+//! * [`Histogram`] — log-linear buckets (8 sub-buckets per octave, so
+//!   every recorded value lands in a bucket within 12.5 % relative
+//!   width) over nanosecond values, with mergeable
+//!   [`HistogramSnapshot`]s and p50/p95/p99 extraction.
+//!
+//! Instrument catalogue (all registered on first use):
+//!
+//! | instrument | kind | meaning |
+//! |---|---|---|
+//! | `coordinator.decision_ns` | histogram | whole `decision()` latency |
+//! | `coordinator.decision.cache_read_ns` | histogram | sharded-cache read phase |
+//! | `coordinator.decision.coalesce_wait_ns` | histogram | follower wait on an in-flight tune |
+//! | `coordinator.decision.tune_ns` | histogram | leader tuner run on a cold miss |
+//! | `coordinator.decisions` / `.cache_hits` / `.cache_misses` / `.coalesced_waits` | counter | decision-path outcomes |
+//! | `coordinator.refresh_ns` | histogram | one drift-refresh pass |
+//! | `coordinator.refresh.checks` / `.swaps` | counter | refresh passes / atomic table swaps |
+//! | `tuner.sweep_ns` | histogram | one per-op grid sweep |
+//! | `tuner.stage.bound_screen_ns` | histogram | per-cell bound screening |
+//! | `tuner.stage.model_eval_ns` | histogram | per-cell unsegmented model evaluations |
+//! | `tuner.stage.segment_search_ns` | histogram | per-cell segment-grid searches |
+//! | `eval.<backend>.cell_ns` | histogram | per-backend `Evaluator::best_in` call latency |
+//!
+//! ## Overhead contract
+//!
+//! Observability is **off by default** ([`set_enabled`]). Every timing
+//! site is gated on [`enabled`], so a disabled path costs exactly one
+//! relaxed atomic load — no `Instant::now()`, no allocation, no lock.
+//! Enabled counters/gauges/histograms are relaxed-atomic increments;
+//! the only lock on a hot path is the flight recorder's ring mutex,
+//! held for a constant-time slot write. The tuner's sweep tables and
+//! the coordinator's decisions are byte-identical with observability
+//! on or off — instruments observe, they never steer.
+//!
+//! ## Export surfaces
+//!
+//! * [`Registry::snapshot_json`] — one JSON blob (rendered through
+//!   [`crate::util::json::Json`], never hand-formatted);
+//! * [`Registry::prometheus`] — Prometheus text exposition (summary
+//!   quantiles per histogram) for the future network coordinator;
+//! * [`FlightRecorder::to_tsv`] — the recent-decision ring as TSV
+//!   through [`crate::util::table::Table`], with the drop-counting
+//!   semantics proven for [`crate::netsim::Trace`]
+//!   (`dropped + len == total ever recorded`);
+//! * CLI: `serve --metrics-interval N`, `obs dump`, and the `--stats`
+//!   flags of `tune`/`query` (see `cli::USAGE`).
+
+mod flight;
+mod logger;
+mod registry;
+mod span;
+
+pub use flight::{DecisionEvent, DecisionOutcome, FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
+pub use logger::{init_logging, StderrLogger};
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, Registry, NUM_BUCKETS};
+pub use span::Span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+static FLIGHT: OnceLock<FlightRecorder> = OnceLock::new();
+
+/// The process-wide instrument registry (created on first use).
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// The process-wide decision flight recorder (created on first use).
+pub fn flight() -> &'static FlightRecorder {
+    FLIGHT.get_or_init(|| FlightRecorder::new(DEFAULT_FLIGHT_CAPACITY))
+}
+
+/// Turn observability on or off (default: off — see the overhead
+/// contract in the module docs). Instruments keep their accumulated
+/// state across toggles; [`Registry::reset`] clears it.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether timing sites are live. One relaxed load.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start a manual timer iff observability is enabled; pair with
+/// [`record_since`]. This is the zero-allocation alternative to
+/// [`Span`] for call sites that attribute one duration to a name
+/// chosen at record time.
+pub fn timer_start() -> Option<Instant> {
+    enabled().then(Instant::now)
+}
+
+/// Record the elapsed nanoseconds since a [`timer_start`] into the
+/// named histogram. A `None` start (observability was off) is free.
+pub fn record_since(name: &str, start: Option<Instant>) {
+    if let Some(t0) = start {
+        registry().histogram(name).record_duration(t0.elapsed());
+    }
+}
+
+/// Serializes tests that toggle the process-wide [`ENABLED`] flag —
+/// cargo runs tests concurrently, and an unsynchronized toggle in one
+/// test would flip another's gating mid-assertion.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_gating_follows_the_enabled_flag() {
+        let _guard = test_lock();
+        set_enabled(false);
+        assert!(timer_start().is_none());
+        // record_since on a None start must not touch the registry
+        record_since("obs.test.never_ns", None);
+        assert!(registry().histogram_snapshot("obs.test.never_ns").is_none());
+
+        set_enabled(true);
+        let t0 = timer_start();
+        assert!(t0.is_some());
+        record_since("obs.test.timer_ns", t0);
+        let snap = registry().histogram_snapshot("obs.test.timer_ns").unwrap();
+        assert_eq!(snap.count, 1);
+        set_enabled(false);
+    }
+}

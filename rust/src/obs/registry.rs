@@ -1,0 +1,481 @@
+//! Named-instrument registry: relaxed-atomic [`Counter`]s and
+//! [`Gauge`]s plus log-linear [`Histogram`]s with mergeable snapshots.
+//!
+//! Histogram bucketing is log-linear with 8 sub-buckets per octave:
+//! values 0..8 get exact singleton buckets, and every larger value
+//! lands in a bucket whose width is 1/8 of its lower power of two.
+//! Percentiles therefore carry a bounded relative error: the reported
+//! value is the bucket's upper bound (clamped to the observed max),
+//! at most 12.5 % above the true sample quantile.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Sub-buckets per octave (power of two). 8 gives ≤ 12.5 % relative
+/// bucket width, 496 buckets total — ~4 KiB per histogram.
+const SUB: usize = 8;
+
+/// Total bucket count: 8 exact singletons for 0..8, then 8 sub-buckets
+/// for each of the 61 octaves `[2^e, 2^(e+1))` with `e` in `3..=63`.
+pub const NUM_BUCKETS: usize = SUB + 61 * SUB;
+
+/// Bucket index for a value. Exact for `v < 8`; otherwise log-linear.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros();
+    let sub = ((v >> (e - 3)) - 8) as usize;
+    (e as usize - 3) * SUB + SUB + sub
+}
+
+/// Inclusive lower bound of a bucket.
+fn bucket_lo(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let d = idx - SUB;
+    let e = (3 + d / SUB) as u32;
+    let sub = (d % SUB) as u64;
+    (8 + sub) << (e - 3)
+}
+
+/// Inclusive upper bound of a bucket.
+fn bucket_hi(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let d = idx - SUB;
+    let e = (3 + d / SUB) as u32;
+    bucket_lo(idx) + (1u64 << (e - 3)) - 1
+}
+
+/// Monotonically increasing relaxed-atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins relaxed-atomic gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log-linear histogram over `u64` values (nanoseconds by
+/// convention). Recording is a handful of relaxed atomic RMWs; reading
+/// is done through an owned [`HistogramSnapshot`].
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64; NUM_BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every bucket and summary atomic (tests / `obs dump`).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Owned point-in-time copy of a [`Histogram`], mergeable across
+/// workers/processes: bucket counts, count, and sum add; min/max fold.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> HistogramSnapshot {
+        HistogramSnapshot::empty()
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Fold another snapshot into this one. Bucket-exact: merging
+    /// snapshots and snapshotting a merged stream commute.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) as the matching bucket's upper
+    /// bound, clamped to the observed min/max. Monotone in `q`, and at
+    /// most one bucket width (≤ 12.5 %) above the true sample value.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return bucket_hi(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// JSON object with the summary fields exported by
+    /// [`Registry::snapshot_json`] (buckets stay internal — the
+    /// percentiles are the contract, the layout is not).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count)),
+            ("sum", Json::from(self.sum)),
+            ("min", Json::from(self.min())),
+            ("max", Json::from(self.max())),
+            ("mean", Json::from(self.mean())),
+            ("p50", Json::from(self.p50())),
+            ("p95", Json::from(self.p95())),
+            ("p99", Json::from(self.p99())),
+        ])
+    }
+}
+
+/// Global registry of named instruments. Lookup is a read-lock +
+/// clone of an `Arc`; registration on first use takes the write lock
+/// once per name. Hot paths hold the returned `Arc` and never touch
+/// the maps again.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: RwLock<std::collections::BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<std::collections::BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<std::collections::BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn get_or_register<T: Default>(
+    map: &RwLock<std::collections::BTreeMap<String, Arc<T>>>,
+    name: &str,
+) -> Arc<T> {
+    if let Some(x) = map.read().unwrap().get(name) {
+        return Arc::clone(x);
+    }
+    let mut w = map.write().unwrap();
+    Arc::clone(w.entry(name.to_string()).or_default())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_register(&self.counters, name)
+    }
+
+    /// Get-or-register the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_register(&self.gauges, name)
+    }
+
+    /// Get-or-register the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_register(&self.histograms, name)
+    }
+
+    /// Snapshot one histogram, or `None` if it was never registered.
+    pub fn histogram_snapshot(&self, name: &str) -> Option<HistogramSnapshot> {
+        self.histograms.read().unwrap().get(name).map(|h| h.snapshot())
+    }
+
+    /// Zero every instrument without unregistering any name.
+    pub fn reset(&self) {
+        for c in self.counters.read().unwrap().values() {
+            c.0.store(0, Ordering::Relaxed);
+        }
+        for g in self.gauges.read().unwrap().values() {
+            g.0.store(0, Ordering::Relaxed);
+        }
+        for h in self.histograms.read().unwrap().values() {
+            h.reset();
+        }
+    }
+
+    /// The whole registry as one [`Json`] value:
+    /// `{"counters":{..},"gauges":{..},"histograms":{name:{count,..,p99}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::from(v.get())))
+            .collect();
+        let gauges = self
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::from(v.get())))
+            .collect();
+        let histograms = self
+            .histograms
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot().to_json()))
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(histograms)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// One compact JSON blob of every instrument — the snapshot export
+    /// surface used by `serve --metrics-interval` and `obs dump`.
+    pub fn snapshot_json(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Prometheus text exposition: counters and gauges as-is,
+    /// histograms as summaries (quantile series + `_sum`/`_count`).
+    /// Names are sanitized (`.` and other non-alphanumerics → `_`).
+    pub fn prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        let mut out = String::new();
+        for (name, c) in self.counters.read().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.read().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.read().unwrap().iter() {
+            let n = sanitize(name);
+            let s = h.snapshot();
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for (q, v) in [(0.5, s.p50()), (0.95, s.p95()), (0.99, s.p99())] {
+                out.push_str(&format!("{n}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", s.sum, s.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_exact_below_eight_and_covers_u64() {
+        for v in 0..8u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lo(v as usize), v);
+            assert_eq!(bucket_hi(v as usize), v);
+        }
+        assert_eq!(bucket_index(8), 8);
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_hi(NUM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_bounds_tile_the_domain() {
+        // every bucket starts exactly one past the previous bucket's end
+        for idx in 1..NUM_BUCKETS {
+            assert_eq!(bucket_lo(idx), bucket_hi(idx - 1) + 1, "bucket {idx}");
+        }
+        // boundary values land in the bucket that claims them
+        for idx in 0..NUM_BUCKETS {
+            assert_eq!(bucket_index(bucket_lo(idx)), idx);
+            assert_eq!(bucket_index(bucket_hi(idx)), idx);
+        }
+    }
+
+    #[test]
+    fn histogram_summary_fields_track_records() {
+        let h = Histogram::new();
+        for v in [3, 5, 1000, 1_000_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 3 + 5 + 1000 + 1_000_000);
+        assert_eq!(s.min(), 3);
+        assert_eq!(s.max(), 1_000_000);
+        assert!(s.p50() >= 5 && s.p50() <= 1125, "p50 {}", s.p50());
+        assert!(s.p99() >= 1_000_000, "p99 {}", s.p99());
+        // the reported p99 may only exceed the true max-bucket value by
+        // the bucket's relative width, and is clamped to the observed max
+        assert_eq!(s.p99(), 1_000_000.max(s.max()).min(s.p99()));
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zero() {
+        let s = Histogram::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!((s.min(), s.max(), s.p50(), s.p99()), (0, 0, 0, 0));
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_registers_on_first_use_and_snapshots() {
+        let r = Registry::new();
+        r.counter("a.hits").add(3);
+        r.counter("a.hits").inc();
+        r.gauge("a.depth").set(7);
+        r.histogram("a.lat_ns").record(100);
+        assert_eq!(r.counter("a.hits").get(), 4);
+        let json = r.snapshot_json();
+        assert!(json.contains("\"a.hits\":4"), "{json}");
+        assert!(json.contains("\"a.depth\":7"), "{json}");
+        assert!(json.contains("\"a.lat_ns\":{\"count\":1"), "{json}");
+        let prom = r.prometheus();
+        assert!(prom.contains("a_hits 4"), "{prom}");
+        assert!(prom.contains("a_lat_ns{quantile=\"0.95\"}"), "{prom}");
+        r.reset();
+        assert_eq!(r.counter("a.hits").get(), 0);
+        assert!(r.histogram_snapshot("a.lat_ns").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,74 @@
+//! RAII span timers: a [`Span`] records its elapsed nanoseconds into a
+//! named histogram when dropped, so a timing site is one line at the
+//! top of a scope. When observability is disabled (see the module
+//! overhead contract) [`Span::start`] returns `None` without reading
+//! the clock, and the `Option<Span>` binding is free to drop.
+
+use super::registry::Histogram;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scoped timer bound to one histogram. Construct with
+/// [`Span::start`]; the elapsed time records on drop.
+#[derive(Debug)]
+pub struct Span {
+    hist: Arc<Histogram>,
+    start: Instant,
+}
+
+impl Span {
+    /// Start timing into the named histogram, or `None` when
+    /// observability is disabled. Bind the result (`let _span = ...`)
+    /// — an unbound `let _ = ...` drops immediately and records ~0 ns.
+    pub fn start(name: &str) -> Option<Span> {
+        if !super::enabled() {
+            return None;
+        }
+        Some(Span {
+            hist: super::registry().histogram(name),
+            start: Instant::now(),
+        })
+    }
+
+    /// Start a nested stage under a parent instrument: the stage label
+    /// joins the parent name as `<parent>.<stage>_ns`, e.g.
+    /// `Span::stage("tuner.stage", "bound_screen")`.
+    pub fn stage(parent: &str, stage: &str) -> Option<Span> {
+        if !super::enabled() {
+            return None;
+        }
+        Span::start(&format!("{parent}.{stage}_ns"))
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.hist.record_duration(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_on_drop() {
+        let _guard = super::super::test_lock();
+        super::super::set_enabled(true);
+        {
+            let _span = Span::start("obs.test.span_ns");
+        }
+        {
+            let _span = Span::stage("obs.test.span", "inner");
+        }
+        let reg = super::super::registry();
+        assert_eq!(reg.histogram_snapshot("obs.test.span_ns").unwrap().count, 1);
+        assert_eq!(
+            reg.histogram_snapshot("obs.test.span.inner_ns").unwrap().count,
+            1
+        );
+        super::super::set_enabled(false);
+        assert!(Span::start("obs.test.span_ns").is_none());
+        assert!(Span::stage("obs.test.span", "inner").is_none());
+    }
+}

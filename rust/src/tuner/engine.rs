@@ -27,6 +27,7 @@ use anyhow::Result;
 
 use crate::collectives::Strategy;
 use crate::eval::{ArtifactEval, CellCtx, EvalCounts, EvalStats, Evaluator, ModelEval, ReplayEval};
+use crate::obs::{self, Span};
 use crate::plogp::{GapCache, PLogP};
 
 use super::decision::{Decision, DecisionTable, Op};
@@ -185,17 +186,28 @@ impl Tuner {
     /// scheduling order nor the per-worker hints can influence the
     /// table (hints are advisory by the `best_in` contract).
     fn sweep(&self, op: Op, net: &PLogP, p_grid: &[usize], m_grid: &[u64]) -> Vec<Decision> {
+        let _sweep_span = Span::start("tuner.sweep_ns");
         let cache = GapCache::new(net, m_grid, &self.s_grid);
         let cells = p_grid.len() * m_grid.len();
         let workers = self.jobs.min(cells).max(1);
         let evaluator: &dyn Evaluator = self.evaluator.as_ref();
         let s_grid: &[u64] = &self.s_grid;
         let stats = &self.stats;
+        // per-backend cell latency: resolve the histogram once per sweep
+        // so workers share one Arc and never touch the registry maps
+        let cell_hist = obs::enabled()
+            .then(|| obs::registry().histogram(&format!("eval.{}.cell_ns", evaluator.name())));
+        let cell_hist = &cell_hist;
         let cell = |i: usize, hint: Option<Strategy>| -> Decision {
             let p = p_grid[i / m_grid.len()];
             let m = m_grid[i % m_grid.len()];
             let ctx = CellCtx { hint, cache: Some(&cache), stats: Some(stats) };
-            evaluator.best_in(op, net, p, m, s_grid, &ctx)
+            let t0 = cell_hist.as_ref().map(|_| std::time::Instant::now());
+            let d = evaluator.best_in(op, net, p, m, s_grid, &ctx);
+            if let (Some(h), Some(t0)) = (cell_hist.as_ref(), t0) {
+                h.record_duration(t0.elapsed());
+            }
+            d
         };
         if workers == 1 {
             let mut hint = None;

@@ -1,11 +1,16 @@
-//! Minimal JSON reader — just enough to parse the artifact metadata
-//! sidecar (`artifacts/tuner.meta.json`) written by `python/compile/aot.py`.
-//! serde_json is not available in this offline build.
+//! Minimal JSON reader *and writer* — the reader is just enough to
+//! parse the artifact metadata sidecar (`artifacts/tuner.meta.json`)
+//! written by `python/compile/aot.py`; the writer ([`Json`]'s
+//! [`fmt::Display`] impl) is the shared serializer behind every JSON
+//! blob the crate emits (`Coordinator::stats_json`, the `obs` registry
+//! snapshot, `EvalCounts::to_json`), so a renamed field can no longer
+//! silently produce malformed output the way hand-rolled `format!`
+//! strings could. serde_json is not available in this offline build.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
-/// A parsed JSON value.
+/// A parsed (or built) JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -17,6 +22,18 @@ pub enum Json {
 }
 
 impl Json {
+    /// Build an object from `(key, value)` pairs. Keys are emitted in
+    /// sorted order (the `BTreeMap` invariant) — stable output for
+    /// golden tests and diffs.
+    pub fn obj<K: Into<String>>(pairs: Vec<(K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// A string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -47,6 +64,103 @@ impl Json {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
+        }
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+/// Escape a string body per RFC 8259 (quotes are the caller's job).
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    Ok(())
+}
+
+/// Compact (single-line) JSON serialization. Numbers use Rust's
+/// shortest-roundtrip float formatting (`1500.0` prints as `1500`);
+/// non-finite numbers — which JSON cannot represent — serialize as
+/// `null` rather than producing an unparseable document.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(x) if !x.is_finite() => f.write_str("null"),
+            Json::Num(x) => write!(f, "{x}"),
+            Json::Str(s) => {
+                f.write_str("\"")?;
+                write_escaped(f, s)?;
+                f.write_str("\"")
+            }
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    f.write_str("\"")?;
+                    write_escaped(f, k)?;
+                    f.write_str("\":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
         }
     }
 }
@@ -318,5 +432,44 @@ mod tests {
     fn whitespace_everywhere() {
         let v = parse(" \n{ \"a\" :\t[ 1 , 2 ] }\r\n").unwrap();
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writes_scalars_compactly() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::Bool(true).to_string(), "true");
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(0.25).to_string(), "0.25");
+        assert_eq!(Json::Num(-1500.0).to_string(), "-1500");
+        assert_eq!(Json::str("hi").to_string(), "\"hi\"");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn writes_escaped_strings_that_reparse() {
+        let original = "a\n\t\"\\ b\u{8}\u{c}\u{1}";
+        let text = Json::str(original).to_string();
+        assert_eq!(parse(&text).unwrap().as_str(), Some(original));
+    }
+
+    #[test]
+    fn write_parse_roundtrip_for_nested_values() {
+        let v = Json::obj(vec![
+            ("name", Json::str("warm_hit")),
+            ("count", Json::from(3u64)),
+            ("rates", Json::Arr(vec![Json::from(0.5), Json::Null])),
+            ("inner", Json::obj(vec![("ok", Json::from(true))])),
+        ]);
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, v);
+        // keys are emitted sorted: stable output for substring asserts
+        assert!(text.starts_with("{\"count\":3,"), "{text}");
     }
 }

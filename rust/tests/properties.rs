@@ -513,3 +513,119 @@ fn simulation_is_deterministic() {
         assert_eq!(run(&cfg), run(&cfg));
     });
 }
+
+// ---------------------------------------------------------------------------
+// Observability layer: histogram and flight-recorder invariants
+// ---------------------------------------------------------------------------
+
+use collective_tuner::obs::{DecisionEvent, DecisionOutcome, FlightRecorder, Histogram};
+
+fn random_sample(rng: &mut Prng) -> u64 {
+    // span the exact small buckets, the log-bucketed mid-range, and big
+    // outliers — capped so a few hundred samples can never overflow the
+    // histogram's u64 sum
+    match rng.range(0, 3) {
+        0 => rng.range(0, 8),
+        1 => rng.range(8, 1 << 20),
+        _ => rng.range(1 << 20, 1 << 40),
+    }
+}
+
+/// Merging snapshots conserves every bucket count, the total count, and
+/// the sum; min/max fold; and snapshot-then-merge is the same snapshot
+/// as recording everything into one histogram (merged-then-snapshot).
+#[test]
+fn histogram_merge_conserves_counts_and_commutes_with_recording() {
+    property("histogram merge conservation", 60, |rng| {
+        let (ha, hb, hall) = (Histogram::new(), Histogram::new(), Histogram::new());
+        let na = rng.range_usize(0, 200);
+        let nb = rng.range_usize(0, 200);
+        for _ in 0..na {
+            let v = random_sample(rng);
+            ha.record(v);
+            hall.record(v);
+        }
+        for _ in 0..nb {
+            let v = random_sample(rng);
+            hb.record(v);
+            hall.record(v);
+        }
+        let (sa, sb) = (ha.snapshot(), hb.snapshot());
+        let mut merged = sa.clone();
+        merged.merge(&sb);
+        assert_eq!(merged.count, (na + nb) as u64);
+        assert_eq!(merged.sum, sa.sum + sb.sum);
+        for (i, (&m, (&a, &b))) in merged
+            .buckets()
+            .iter()
+            .zip(sa.buckets().iter().zip(sb.buckets()))
+            .enumerate()
+        {
+            assert_eq!(m, a + b, "bucket {i} not conserved");
+        }
+        assert_eq!(merged.buckets().iter().sum::<u64>(), merged.count);
+        // snapshot(a) merge snapshot(b) == snapshot(a then b)
+        assert_eq!(merged, hall.snapshot());
+    });
+}
+
+/// Percentiles are monotone in `q` and sit within one log-linear bucket
+/// (≤ 1/8 relative error) above the true sample quantile.
+#[test]
+fn histogram_percentiles_are_monotone_and_bracket_the_sample_quantile() {
+    property("histogram percentile bracketing", 60, |rng| {
+        let h = Histogram::new();
+        let n = rng.range_usize(1, 300);
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = random_sample(rng);
+            h.record(v);
+            samples.push(v);
+        }
+        samples.sort_unstable();
+        let snap = h.snapshot();
+        let mut last = 0u64;
+        for i in 0..=20u64 {
+            let q = i as f64 / 20.0;
+            let p = snap.percentile(q);
+            assert!(p >= last, "percentile not monotone: q={q} gave {p} < {last}");
+            last = p;
+            // the true q-quantile under the same rank convention
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let truth = samples[rank - 1];
+            assert!(
+                p >= truth && p <= truth + truth / 8,
+                "q={q}: reported {p} outside [{truth}, {truth} + {truth}/8]"
+            );
+        }
+        assert_eq!(snap.percentile(1.0), *samples.last().unwrap());
+    });
+}
+
+/// The flight-recorder ring keeps exactly the newest `capacity` events
+/// oldest-first and never loses count: `dropped + len == total`.
+#[test]
+fn flight_recorder_ring_accounts_for_every_event() {
+    property("flight ring accounting", 60, |rng| {
+        let capacity = rng.range_usize(1, 64);
+        let fr = FlightRecorder::new(capacity);
+        let n = rng.range(0, 200);
+        for i in 0..n {
+            fr.record(DecisionEvent {
+                ts_ns: i,
+                signature: format!("sig-{}", i % 3),
+                op: "bcast",
+                outcome: DecisionOutcome::Hit,
+                strategy: "binomial",
+                segment: None,
+                latency_ns: i,
+            });
+            assert_eq!(fr.dropped() + fr.len() as u64, fr.total());
+        }
+        assert_eq!(fr.total(), n);
+        assert_eq!(fr.len(), (n as usize).min(capacity));
+        let ts: Vec<u64> = fr.events().iter().map(|e| e.ts_ns).collect();
+        let expect: Vec<u64> = (n.saturating_sub(fr.len() as u64)..n).collect();
+        assert_eq!(ts, expect, "ring must hold the newest events oldest-first");
+    });
+}

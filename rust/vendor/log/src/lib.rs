@@ -1,38 +1,157 @@
-//! Offline stand-in for the `log` facade crate. No logger registry:
-//! `warn!`/`error!` always go to stderr (nothing in this workspace
-//! installs a logger, so silently dropping them would hide the tuner's
-//! artifact-fallback notices); `info!`/`debug!`/`trace!` only print when
-//! `RUST_LOG` is set, mirroring the "no logger, no output" default.
+//! Offline stand-in for the `log` facade crate, now with the facade's
+//! actual shape: a [`Level`] filter, a [`Log`] sink trait, and a
+//! one-shot [`set_logger`]. With no logger installed the legacy
+//! default still applies: `warn!`/`error!` go straight to stderr
+//! (silently dropping them would hide the tuner's artifact-fallback
+//! notices) and `info!`/`debug!`/`trace!` only print when `RUST_LOG`
+//! is set, mirroring the real facade's "no logger, no output" default.
+
+use std::fmt::Arguments;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Log severity, most severe first. `Error < Warn < ... < Trace` in
+/// the derived order, so "emit at most `max`" is `level <= max`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    /// Parse a level name case-insensitively (`"warn"`, `"DEBUG"`, ...).
+    pub fn from_name(name: &str) -> Option<Level> {
+        match name.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+/// A log sink. Level filtering happens in the facade before `log` is
+/// called, so implementations just format and write.
+pub trait Log: Send + Sync {
+    fn log(&self, level: Level, msg: Arguments<'_>);
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+/// 0 = no logger installed; otherwise the installed max `Level as usize`.
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-wide logger with a maximum level. The first
+/// call wins; later calls return false and change nothing.
+pub fn set_logger(logger: Box<dyn Log>, max: Level) -> bool {
+    let installed = LOGGER.set(logger).is_ok();
+    if installed {
+        MAX_LEVEL.store(max as usize, Ordering::Relaxed);
+    }
+    installed
+}
+
+/// The installed logger's maximum level, or `None` if no logger is set.
+pub fn max_level() -> Option<Level> {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => Some(Level::Error),
+        2 => Some(Level::Warn),
+        3 => Some(Level::Info),
+        4 => Some(Level::Debug),
+        5 => Some(Level::Trace),
+        _ => None,
+    }
+}
 
 /// Implementation detail of the macros.
 #[doc(hidden)]
-pub fn __emit(level: &'static str, always: bool, msg: std::fmt::Arguments<'_>) {
-    if always || std::env::var_os("RUST_LOG").is_some() {
-        eprintln!("[{level}] {msg}");
+pub fn __emit(level: Level, msg: Arguments<'_>) {
+    match LOGGER.get() {
+        Some(logger) => {
+            if (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed) {
+                logger.log(level, msg);
+            }
+        }
+        None => {
+            let always = matches!(level, Level::Error | Level::Warn);
+            if always || std::env::var_os("RUST_LOG").is_some() {
+                eprintln!("[{}] {msg}", level.as_str());
+            }
+        }
     }
 }
 
 #[macro_export]
 macro_rules! error {
-    ($($arg:tt)*) => { $crate::__emit("ERROR", true, format_args!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Error, format_args!($($arg)*)) };
 }
 
 #[macro_export]
 macro_rules! warn {
-    ($($arg:tt)*) => { $crate::__emit("WARN", true, format_args!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Warn, format_args!($($arg)*)) };
 }
 
 #[macro_export]
 macro_rules! info {
-    ($($arg:tt)*) => { $crate::__emit("INFO", false, format_args!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Info, format_args!($($arg)*)) };
 }
 
 #[macro_export]
 macro_rules! debug {
-    ($($arg:tt)*) => { $crate::__emit("DEBUG", false, format_args!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Debug, format_args!($($arg)*)) };
 }
 
 #[macro_export]
 macro_rules! trace {
-    ($($arg:tt)*) => { $crate::__emit("TRACE", false, format_args!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn level_names_roundtrip() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::from_name(l.as_str()), Some(l));
+            assert_eq!(Level::from_name(&l.as_str().to_lowercase()), Some(l));
+        }
+        assert_eq!(Level::from_name("warning"), Some(Level::Warn));
+        assert_eq!(Level::from_name("nope"), None);
+    }
+
+    #[test]
+    fn second_set_logger_loses() {
+        struct Sink;
+        impl Log for Sink {
+            fn log(&self, _: Level, _: Arguments<'_>) {}
+        }
+        assert_eq!(max_level(), None);
+        assert!(set_logger(Box::new(Sink), Level::Info));
+        assert_eq!(max_level(), Some(Level::Info));
+        assert!(!set_logger(Box::new(Sink), Level::Trace));
+        assert_eq!(max_level(), Some(Level::Info));
+    }
 }

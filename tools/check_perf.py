@@ -6,12 +6,13 @@ result by result (matched on ``name``), and fails when any fresh
 ``mean_s`` exceeds the baseline's by more than ``--tolerance``
 (default 25%).
 
-The benches overwrite their JSON in place, so CI stashes the committed
-file first:
+The benches write ``BENCH_*.candidate.json`` next to the committed
+baseline by default (pass ``-- --write-baseline`` to a bench to
+overwrite the committed file deliberately), so the gate compares the
+two in place with no stashing:
 
-    cp BENCH_tuner.json /tmp/baseline.json
     cargo bench --bench tuner_sweep
-    tools/check_perf.py /tmp/baseline.json BENCH_tuner.json
+    tools/check_perf.py BENCH_tuner.json BENCH_tuner.candidate.json
 
 Besides the wall-time ``results``, a bench may emit a ``metrics`` list
 of deterministic counters (eval counts, reduction factors, hit rates),

@@ -110,7 +110,10 @@ def main():
     pending = []
     refused = False
     for fresh in fresh_files:
-        committed = os.path.join(args.repo_root, os.path.basename(fresh))
+        # benches emit BENCH_x.candidate.json by default; it adopts onto
+        # the committed BENCH_x.json
+        basename = os.path.basename(fresh).replace(".candidate.json", ".json")
+        committed = os.path.join(args.repo_root, basename)
         if not os.path.exists(committed):
             print(f"skipping {fresh}: no committed counterpart", file=sys.stderr)
             continue
