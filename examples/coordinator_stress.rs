@@ -8,7 +8,7 @@
 //!   2. register the islands (pLogP probe per island);
 //!   3. hammer the service from worker threads with a mixed
 //!      `(op, cluster, P, m)` workload — cold misses coalesce, the hot
-//!      path is sharded cache hits;
+//!      path is lock-free snapshot reads;
 //!   4. build and run a multi-level broadcast whose per-island
 //!      strategies are fetched from the coordinator (NOT tuned inline);
 //!   5. persist, warm-start a second coordinator, and show it answers

@@ -1,8 +1,11 @@
 //! Bench: the coordinator's decision path — cold miss (a full tuner
-//! run), warm hit (sharded cache lookup), and contended hit (the same
-//! lookup while 7 background threads hammer the service). Runs with the
-//! obs layer enabled so the registry's `coordinator.decision_ns`
-//! histogram yields a gated `decision_latency_p95` metric. Emits
+//! run), warm hit (lock-free snapshot read + dense-table index),
+//! contended hit (the same lookup while 7 background threads hammer the
+//! service), and a 32-reader publish storm (warm reads racing a writer
+//! that refreshes — re-tunes and republishes — continuously). Runs with
+//! the obs layer enabled so the registry's `coordinator.decision_ns`
+//! histogram yields the gated `decision_latency_p95` and
+//! `contended_p95_over_warm_p95` metrics. Emits
 //! `BENCH_coordinator.candidate.json` at the repository root by default;
 //! pass `-- --write-baseline` to overwrite the committed
 //! `BENCH_coordinator.json` instead.
@@ -10,7 +13,7 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-use collective_tuner::coordinator::{Coordinator, CoordinatorConfig};
+use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy};
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::obs;
 use collective_tuner::plogp::{bench as plogp_bench, PLogP};
@@ -46,6 +49,21 @@ fn json_metric(name: &str, value: f64, larger_is_better: bool) -> String {
     format!(
         "    {{\"name\": \"{name}\", \"value\": {value}, \
          \"larger_is_better\": {larger_is_better}}}"
+    )
+}
+
+/// A results entry sourced from the obs registry's latency histogram
+/// instead of benchkit wall clocks — the storm phase measures every
+/// reader thread's decisions, not one foreground loop.
+fn json_hist_entry(label: &str, s: &obs::HistogramSnapshot) -> String {
+    let mean = if s.count == 0 { 0.0 } else { (s.sum as f64 / s.count as f64) * 1e-9 };
+    format!(
+        "    {{\"name\": \"{label}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
+         \"p95_s\": {:e}, \"iters\": {}}}",
+        mean,
+        s.p50() as f64 * 1e-9,
+        s.p95() as f64 * 1e-9,
+        s.count
     )
 }
 
@@ -131,6 +149,76 @@ fn main() {
         st.cache.entries, st.cache.hits, st.cache.misses, st.tunes
     );
 
+    // ---- publish storm: 32 readers vs continuous republication ----------
+    // A dedicated coordinator so the churn tunes don't perturb the
+    // counters printed above. The writer refreshes a third cluster
+    // between two drifted networks, so every cycle re-tunes and
+    // republishes the snapshot while 32 readers take warm decisions;
+    // latency comes from the registry's decision histogram (reset
+    // first), which sees every reader's decisions.
+    section("publish storm (32 readers vs continuous refresh)");
+    let storm = Coordinator::new(CoordinatorConfig { jobs: 1, ..config() });
+    storm.register("fe", 24, net_fe.clone());
+    storm.register("ge", 16, net_ge.clone());
+    storm.register("churn", 8, net_fe.clone());
+    let _ = storm.tables("fe").unwrap();
+    let _ = storm.tables("ge").unwrap();
+    let _ = storm.tables("churn").unwrap();
+    obs::registry().reset();
+    let stop = AtomicBool::new(false);
+    let reads = AtomicU64::new(0);
+    let publishes = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        let storm = &storm;
+        let (stop, reads, publishes) = (&stop, &reads, &publishes);
+        s.spawn(move || {
+            let policy = RefreshPolicy::default();
+            let mut k = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let cfg = if k % 2 == 0 {
+                    NetConfig::gigabit_ethernet()
+                } else {
+                    NetConfig::fast_ethernet_icluster1()
+                };
+                let mut sim = Netsim::new(2, cfg);
+                storm.refresh("churn", &mut sim, &policy).unwrap();
+                publishes.fetch_add(1, Ordering::Relaxed);
+                k += 1;
+            }
+        });
+        for t in 0..32u64 {
+            s.spawn(move || {
+                let mut rng = Prng::new(0x32C0_5701 ^ t);
+                while !stop.load(Ordering::Relaxed) {
+                    let (name, op, p) = if rng.chance(0.5) {
+                        ("fe", Op::Bcast, 24)
+                    } else {
+                        ("ge", Op::Scatter, 16)
+                    };
+                    let m = rng.range(1, 1 << 20);
+                    std::hint::black_box(storm.decision(op, name, p, m).unwrap());
+                    reads.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1500));
+        stop.store(true, Ordering::Relaxed);
+    });
+    let snap32 = obs::registry()
+        .histogram_snapshot("coordinator.decision_ns")
+        .expect("the storm readers recorded decisions");
+    let contended32_p95_ns = snap32.p95();
+    let ratio_p95 = contended32_p95_ns as f64 / decision_p95_ns.max(1) as f64;
+    println!(
+        "storm: {} warm reads across 32 threads, {} republications; \
+         p50 {} ns, p95 {} ns ({:.2}x the uncontended warm p95)",
+        reads.load(Ordering::Relaxed),
+        publishes.load(Ordering::Relaxed),
+        snap32.p50(),
+        contended32_p95_ns,
+        ratio_p95
+    );
+
     // ---- emit the bench JSON at the repo root ---------------------------
     // Default to a .candidate file so a casual local run can never
     // clobber the committed baseline; CI gates committed vs candidate.
@@ -149,9 +237,11 @@ fn main() {
   \"results\": [
 {},
 {},
+{},
 {}
   ],
   \"metrics\": [
+{},
 {}
   ],
   \"slowdown_cold_over_warm\": {:.1},
@@ -161,7 +251,9 @@ fn main() {
         json_entry("cold_miss", &r_cold),
         json_entry("warm_hit", &r_warm),
         json_entry("contended_hit", &r_contended),
+        json_hist_entry("contended_hit_32t", &snap32),
         json_metric("decision_latency_p95", decision_p95_ns as f64, false),
+        json_metric("contended_p95_over_warm_p95", ratio_p95, false),
         r_cold.summary.p50 / r_warm.summary.p50.max(1e-12),
         st.tunes
     );

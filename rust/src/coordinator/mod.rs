@@ -9,10 +9,12 @@
 //! * [`signature`] — [`ClusterSignature`] fingerprints a network by its
 //!   quantized pLogP parameters, node count, and op set, so equivalent
 //!   clusters share one decision table.
-//! * [`cache`] — [`ShardedCache`], N shards of
-//!   `RwLock<HashMap<Signature, Arc<TableSet>>>` with per-shard LRU
-//!   eviction and lock-free hit/miss/eviction counters; the hot path
-//!   never serializes behind tuning.
+//! * [`snapshot`] — [`SnapshotCache`], epoch-published immutable
+//!   snapshots behind a hand-rolled atomic `Arc` swap
+//!   ([`crate::util::arcswap`]): warm reads are one atomic snapshot pin
+//!   plus a [`DenseTable`] index — no lock, ever — while writers build
+//!   the next snapshot aside and publish it atomically, with
+//!   generation-counter LRU eviction.
 //! * [`service`] — [`Coordinator`], the long-running service: registry
 //!   of discovered clusters, `(op, cluster, P, m) → Decision` queries,
 //!   and a request-coalescing miss path (concurrent cold misses on one
@@ -38,12 +40,12 @@
 //! println!("use {} (segment {:?})", d.strategy.name(), d.segment);
 //! ```
 
-pub mod cache;
 pub mod refresh;
 pub mod service;
 pub mod signature;
+pub mod snapshot;
 
-pub use cache::{CacheStats, ShardedCache};
 pub use refresh::{RefreshOutcome, RefreshPolicy};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats, RegisteredCluster, TableSet};
 pub use signature::ClusterSignature;
+pub use snapshot::{CacheStats, DenseTable, SnapshotCache};

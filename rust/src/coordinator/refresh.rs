@@ -9,9 +9,10 @@
 //! drift threshold nothing happens (lookups stay on the cached table);
 //! above it the cluster is re-registered under its new signature, a
 //! fresh table is tuned (on the coordinator's parallel tuning engine —
-//! see [`crate::tuner::Tuner::jobs`]), and the published `Arc` is
-//! swapped atomically — concurrent readers see either the old or the
-//! new table, never a partial one.
+//! see [`crate::tuner::Tuner::jobs`]), and a fresh cache snapshot is
+//! published atomically (see [`super::snapshot`]) — concurrent readers
+//! keep answering lock-free from whichever snapshot they pinned, old
+//! or new, never a partial one.
 
 use anyhow::{Context, Result};
 

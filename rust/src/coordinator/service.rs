@@ -5,8 +5,12 @@
 //! [`GridSpec`], or recovered by `topology::discover`) and answers
 //! `(op, cluster, P, m) → Decision` queries from any number of threads:
 //!
-//! * **hot path** — a sharded cache lookup by [`ClusterSignature`]
-//!   ([`ShardedCache`]); equivalent networks share one table.
+//! * **hot path** — one lock-free pin of the epoch-published
+//!   [`super::snapshot::SnapshotCache`] snapshot: the cluster name
+//!   resolves through the published index straight to a flattened
+//!   [`super::snapshot::DenseTable`], so a warm `decision()` touches no
+//!   mutex, no `RwLock`, and allocates nothing; equivalent networks
+//!   share one table.
 //! * **cold path** — a tuner run (artifact backend when available,
 //!   native models otherwise). Concurrent misses on the same signature
 //!   *coalesce*: exactly one thread tunes, the rest block on the
@@ -20,6 +24,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -31,8 +36,8 @@ use crate::topology::GridSpec;
 use crate::tuner::{grids, persist, Decision, DecisionTable, Op, Tuner};
 use crate::util::json::Json;
 
-use super::cache::{CacheStats, ShardedCache};
 use super::signature::ClusterSignature;
+use super::snapshot::{CacheStats, SnapshotCache};
 
 /// The per-operation decision tables tuned for one signature: one
 /// [`DecisionTable`] per [`Op::ALL`] entry (broadcast, scatter, and the
@@ -70,9 +75,12 @@ impl TableSet {
 /// Coordinator construction parameters.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Cache shards (lock-striping width for the hot path).
+    /// Historical lock-striping width. Reads no longer shard (the cache
+    /// is one epoch-published snapshot); the field survives so existing
+    /// configs keep meaning: total LRU capacity is
+    /// `shards * capacity_per_shard`.
     pub shards: usize,
-    /// LRU capacity of each shard.
+    /// LRU capacity per (historical) shard.
     pub capacity_per_shard: usize,
     /// Signature quantization tolerance (see [`super::signature`]).
     pub tolerance: f64,
@@ -142,7 +150,7 @@ pub struct CoordinatorStats {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     tuner: Tuner,
-    cache: ShardedCache<Arc<TableSet>>,
+    cache: SnapshotCache,
     inflight: Mutex<HashMap<ClusterSignature, Arc<Inflight>>>,
     registry: RwLock<HashMap<String, RegisteredCluster>>,
     tunes: AtomicU64,
@@ -157,7 +165,7 @@ impl Coordinator {
             None => Tuner::native(),
         }
         .jobs(cfg.jobs);
-        let cache = ShardedCache::new(cfg.shards, cfg.capacity_per_shard);
+        let cache = SnapshotCache::new(cfg.shards.max(1) * cfg.capacity_per_shard.max(1));
         Coordinator {
             cfg,
             tuner,
@@ -203,7 +211,20 @@ impl Coordinator {
         let signature = ClusterSignature::with_tolerance(&net, nodes, self.cfg.tolerance);
         let rc = RegisteredCluster { name: name.to_string(), nodes, net, signature, probe };
         self.registry.write().unwrap().insert(rc.name.clone(), rc);
+        // republish so the snapshot's name index never resolves this
+        // name through a stale signature (re-registration moves it)
+        self.cache.sync_names(&self.name_map());
         signature
+    }
+
+    /// The current name → signature mapping, for snapshot publication.
+    fn name_map(&self) -> Vec<(String, ClusterSignature)> {
+        self.registry
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, rc)| (name.clone(), rc.signature))
+            .collect()
     }
 
     /// Register every cluster of a [`GridSpec`]: probe each island's own
@@ -274,36 +295,67 @@ impl Coordinator {
     /// `(op, cluster, P, m)` point. When observability is enabled the
     /// end-to-end latency lands in `coordinator.decision_ns` and the
     /// decision itself in the flight recorder.
+    ///
+    /// The warm path is lock-free: one atomic pin of the published
+    /// snapshot resolves the cluster name straight to its flattened
+    /// [`super::snapshot::DenseTable`] — no registry `RwLock`, no
+    /// cluster clone, no allocation. Only a cold or unindexed query
+    /// falls back to the registry + coalesced tune path below.
     pub fn decision(&self, op: Op, cluster: &str, p: usize, m: u64) -> Result<Decision> {
         let t0 = obs::timer_start();
+        let warm = {
+            let _read = Span::start("coordinator.decision.cache_read_ns");
+            self.cache.warm_decide(cluster, op, p, m)
+        };
+        if let Some((d, signature)) = warm {
+            if let Some(t0) = t0 {
+                obs::registry().counter("coordinator.cache_hits").inc();
+                self.trace_decision(t0, signature, op, DecisionOutcome::Hit, &d);
+            }
+            return Ok(d);
+        }
         let rc = self
             .cluster(cluster)
             .with_context(|| format!("cluster '{cluster}' is not registered"))?;
         let (tables, outcome) = self.tables_for_traced(rc.signature, &rc.net);
         let d = tables.decision(op, p, m);
         if let Some(t0) = t0 {
-            let latency_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
-            let reg = obs::registry();
-            reg.histogram("coordinator.decision_ns").record(latency_ns);
-            reg.counter("coordinator.decisions").inc();
-            let fr = obs::flight();
-            fr.record(DecisionEvent {
-                ts_ns: fr.now_ns(),
-                signature: rc.signature.key(),
-                op: op.name(),
-                outcome,
-                strategy: d.strategy.name(),
-                segment: d.segment,
-                latency_ns,
-            });
+            self.trace_decision(t0, rc.signature, op, outcome, &d);
         }
         Ok(d)
     }
 
+    /// Record one resolved decision into the latency histogram, the
+    /// decisions counter, and the flight recorder (obs already known to
+    /// be enabled: the caller holds a live `timer_start`).
+    fn trace_decision(
+        &self,
+        t0: Instant,
+        signature: ClusterSignature,
+        op: Op,
+        outcome: DecisionOutcome,
+        d: &Decision,
+    ) {
+        let latency_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let reg = obs::registry();
+        reg.histogram("coordinator.decision_ns").record(latency_ns);
+        reg.counter("coordinator.decisions").inc();
+        let fr = obs::flight();
+        fr.record(DecisionEvent {
+            ts_ns: fr.now_ns(),
+            signature: signature.key(),
+            op: op.name(),
+            outcome,
+            strategy: d.strategy.name(),
+            segment: d.segment,
+            latency_ns,
+        });
+    }
+
     /// Tables for an explicit signature/parameter pair. Cache hit → one
-    /// sharded read-lock. Cache miss → coalesced tuner run: the first
-    /// thread in tunes, every concurrent caller of the same signature
-    /// blocks on that run instead of starting its own.
+    /// lock-free snapshot read. Cache miss → coalesced tuner run: the
+    /// first thread in tunes, every concurrent caller of the same
+    /// signature blocks on that run instead of starting its own.
     pub fn tables_for(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
         self.tables_for_traced(signature, net).0
     }
@@ -354,7 +406,7 @@ impl Coordinator {
             }
             let _tune = Span::start("coordinator.decision.tune_ns");
             let tables = Arc::new(self.tune_now(net));
-            self.cache.insert(signature, Arc::clone(&tables));
+            self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
             *flight.result.lock().unwrap() = Some(Arc::clone(&tables));
             flight.ready.notify_all();
             self.inflight.lock().unwrap().remove(&signature);
@@ -397,16 +449,28 @@ impl Coordinator {
 
     /// Re-tune a signature right now and atomically publish the result
     /// (the refresh policy's swap; readers only ever see the old or the
-    /// new `Arc`, never a partial table).
+    /// new snapshot, never a partial table).
     pub(super) fn force_retune(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
         let tables = Arc::new(self.tune_now(net));
-        self.cache.insert(signature, Arc::clone(&tables));
+        self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
         tables
     }
 
     /// Drop a cached signature (refresh retires drifted tables).
     pub(super) fn evict_signature(&self, signature: &ClusterSignature) -> bool {
-        self.cache.remove(signature)
+        self.cache.remove(signature, &self.name_map())
+    }
+
+    /// Drop `cluster`'s cached tables, if resident: the next query for
+    /// its signature re-tunes. Returns whether anything was evicted.
+    /// Like every cache write this publishes a fresh snapshot —
+    /// concurrent readers keep answering from the one they pinned and
+    /// are never blocked.
+    pub fn invalidate(&self, cluster: &str) -> bool {
+        match self.cluster(cluster) {
+            Some(rc) => self.evict_signature(&rc.signature),
+            None => false,
+        }
     }
 
     // ---- observability -------------------------------------------------
@@ -538,7 +602,7 @@ impl Coordinator {
             }
         }
         let sig = self.register(cluster, nodes, net);
-        self.cache.insert(sig, Arc::new(TableSet::new(tables)));
+        self.cache.insert(sig, Arc::new(TableSet::new(tables)), &self.name_map());
         Ok(sig)
     }
 
@@ -592,7 +656,7 @@ impl Coordinator {
                                 );
                             }
                         }
-                        self.cache.insert(sig, Arc::new(TableSet::new(tables)));
+                        self.cache.insert(sig, Arc::new(TableSet::new(tables)), &self.name_map());
                         loaded += 1;
                     }
                 }
@@ -738,6 +802,39 @@ mod tests {
         assert_eq!(c.tune_count(), 1);
         let st = c.stats();
         assert!(st.cache.hits >= 9, "{st:?}");
+    }
+
+    #[test]
+    fn warm_decisions_equal_slow_path_decisions() {
+        // the dense-table fast path and a fresh tuner run must agree on
+        // every probed query — the flattening is exact, not approximate
+        let cfg = small_config();
+        let c = Coordinator::new(cfg.clone());
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        c.register("a", 24, net.clone());
+        let tables = c.tables("a").unwrap(); // cold tune; warms the index
+        for op in Op::ALL {
+            for p in [1usize, 2, 7, 8, 24, 100] {
+                for m in [1u64, 37, 4096, 65536, 1 << 20, 1 << 24] {
+                    let warm = c.decision(op, "a", p, m).unwrap();
+                    assert_eq!(warm, tables.decision(op, p, m), "{op:?} P={p} m={m}");
+                }
+            }
+        }
+        assert_eq!(c.tune_count(), 1, "every query above was a warm hit");
+    }
+
+    #[test]
+    fn invalidate_drops_cached_tables_and_forces_a_retune() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.decision(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(c.tune_count(), 1);
+        assert!(c.invalidate("a"));
+        assert!(!c.invalidate("a"), "second invalidation finds nothing resident");
+        c.decision(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(c.tune_count(), 2, "invalidation forces a re-tune");
+        assert!(!c.invalidate("ghost"), "unknown clusters are a no-op");
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Epoch-published decision snapshots: the coordinator's lock-free
+//! read path.
+//!
+//! The predecessor of this module (`ShardedCache`) striped the table
+//! map across `RwLock`ed shards — readers still took a lock, so a
+//! drift refresh serialized against every concurrent `decision()`. Here
+//! the entire hot-path state is one immutable [`CoordSnapshot`] behind
+//! a [`crate::util::arcswap::ArcSwap`]:
+//!
+//! * **Readers never lock.** A warm decision is one snapshot pin (two
+//!   atomic loads + one increment, see the arcswap module docs), one
+//!   hash lookup by cluster name, and one [`DenseTable`] index — no
+//!   mutex, no `RwLock`, no allocation. The stress and property tests
+//!   in `tests/coordinator.rs` / `tests/properties.rs` enforce this
+//!   path's torn-read-freedom and LRU parity.
+//! * **Writers publish.** Every mutation (cold-miss tune completion,
+//!   drift refresh, warm start, invalidation, re-registration) clones
+//!   the current map of `Arc`ed entries off to the side, edits the
+//!   clone, and publishes the new snapshot atomically under a single
+//!   writer mutex. Readers observe the old or the new snapshot in its
+//!   entirety, never a mix.
+//! * **LRU without read-side mutation.** Each entry carries a
+//!   generation stamp (`last_used: AtomicU64`) **shared across
+//!   snapshot generations** by `Arc`: a reader bumping recency on an
+//!   older snapshot still informs the next eviction, and the
+//!   tick/eviction order is exactly the old read-side-LRU order (the
+//!   property test replays access sequences against a reference
+//!   model).
+//!
+//! Publish-side instrumentation (`coordinator.snapshot_publishes`,
+//! `coordinator.publish_ns`, and the read path's
+//! `coordinator.snapshot_read_retries`) follows the obs overhead
+//! contract: one relaxed load when disabled.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::{self, Span};
+use crate::tuner::{Decision, Op};
+use crate::util::arcswap::ArcSwap;
+
+use super::service::TableSet;
+use super::signature::ClusterSignature;
+
+/// Lock-free counter snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries resident at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0 when no lookups yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A [`TableSet`] flattened for index-arithmetic lookups: per op, a
+/// dense `p → row` map and precomputed `m` bucket boundaries over one
+/// contiguous cell array, built once at publish time. `decide` is two
+/// slice indexes plus one binary search over a handful of cut points —
+/// no float math, no nearest-neighbour scan.
+///
+/// The flattening is exact: `decide(op, p, m)` equals
+/// [`TableSet::decision`] for **every** query, because the `p` map is
+/// built by evaluating [`crate::tuner::DecisionTable::nearest_p_index`]
+/// per integer and the `m` cuts are found by binary-searching the
+/// reference [`crate::tuner::DecisionTable::nearest_m_index`] predicate
+/// between adjacent grid points (the property suite replays random
+/// queries against both).
+#[derive(Debug)]
+pub struct DenseTable {
+    ops: Vec<DenseOp>,
+    /// All ops' cells, concatenated row-major.
+    cells: Box<[Decision]>,
+}
+
+#[derive(Debug)]
+struct DenseOp {
+    /// Offset of this op's first cell in `cells`.
+    base: usize,
+    m_len: usize,
+    /// `p → p-grid row`, for `p` in `0..=p_max` (larger `p` clamps).
+    p_map: Box<[u32]>,
+    /// `m_cuts[i]` is the smallest `m` that snaps past row `i`; the
+    /// bucket of `m` is the number of cuts `<= m`.
+    m_cuts: Box<[u64]>,
+}
+
+impl DenseTable {
+    pub fn new(set: &TableSet) -> DenseTable {
+        let mut cells = Vec::new();
+        let mut ops = Vec::with_capacity(Op::COUNT);
+        for t in set.tables() {
+            let base = cells.len();
+            cells.extend_from_slice(&t.entries);
+            let p_max = *t.p_grid.last().expect("p grid is non-empty");
+            let p_map: Box<[u32]> =
+                (0..=p_max).map(|p| t.nearest_p_index(p) as u32).collect();
+            let m_len = t.m_grid.len();
+            let mut m_cuts = Vec::with_capacity(m_len.saturating_sub(1));
+            for i in 0..m_len - 1 {
+                // invariant: nearest(lo) <= i < nearest(hi); shrink to
+                // the exact crossover by probing the reference predicate
+                let (mut lo, mut hi) = (t.m_grid[i], t.m_grid[i + 1]);
+                while lo + 1 < hi {
+                    let mid = lo + (hi - lo) / 2;
+                    if t.nearest_m_index(mid) > i {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                    }
+                }
+                debug_assert!(t.nearest_m_index(hi) > i);
+                debug_assert!(t.nearest_m_index(hi - 1) <= i);
+                m_cuts.push(hi);
+            }
+            ops.push(DenseOp { base, m_len, p_map, m_cuts: m_cuts.into_boxed_slice() });
+        }
+        DenseTable { ops, cells: cells.into_boxed_slice() }
+    }
+
+    /// Snap-to-nearest decision by pure index arithmetic.
+    pub fn decide(&self, op: Op, p: usize, m: u64) -> Decision {
+        let t = &self.ops[op.index()];
+        let pi = t.p_map[p.min(t.p_map.len() - 1)] as usize;
+        let mi = t.m_cuts.partition_point(|&c| c <= m);
+        self.cells[t.base + pi * t.m_len + mi]
+    }
+}
+
+/// One resident table set. Shared by `Arc` across snapshot generations,
+/// so the recency stamp a reader bumps on generation N is the same
+/// atomic the generation-N+1 eviction pass inspects.
+struct TableEntry {
+    set: Arc<TableSet>,
+    dense: DenseTable,
+    last_used: AtomicU64,
+}
+
+/// A cluster-name index entry: the signature the name resolves to and,
+/// when resident, its tables — so a warm decision needs neither the
+/// registry `RwLock` nor a signature hash.
+struct NameEntry {
+    signature: ClusterSignature,
+    entry: Option<Arc<TableEntry>>,
+}
+
+/// The immutable hot-path state one publish produces.
+#[derive(Default)]
+struct CoordSnapshot {
+    bysig: HashMap<ClusterSignature, Arc<TableEntry>>,
+    byname: HashMap<String, NameEntry>,
+}
+
+/// The coordinator's table cache: epoch-published snapshots with
+/// generation-counter LRU eviction. Same observable semantics as the
+/// sharded predecessor (hit/miss/eviction accounting, `peek`
+/// counter-neutrality, tick-ordered eviction), but reads are lock-free.
+pub struct SnapshotCache {
+    swap: ArcSwap<CoordSnapshot>,
+    /// Serializes read-modify-publish cycles (writers only).
+    publish_lock: Mutex<()>,
+    capacity: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SnapshotCache {
+    pub fn new(capacity: usize) -> SnapshotCache {
+        assert!(capacity >= 1, "need capacity for at least one entry");
+        SnapshotCache {
+            swap: ArcSwap::new(Arc::new(CoordSnapshot::default()))
+                .with_retry_metric("coordinator.snapshot_read_retries"),
+            publish_lock: Mutex::new(()),
+            capacity,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// The whole warm decision in one snapshot pin: resolve the cluster
+    /// name through the published index and answer from the dense
+    /// table. `None` when the name is unknown to the snapshot or its
+    /// tables are not resident (the caller falls back to the registry +
+    /// coalesced tune path). Counts a hit and bumps recency on success;
+    /// counter-neutral on `None` (the slow path's `get` does the
+    /// accounting there).
+    pub fn warm_decide(
+        &self,
+        name: &str,
+        op: Op,
+        p: usize,
+        m: u64,
+    ) -> Option<(Decision, ClusterSignature)> {
+        let snap = self.swap.load();
+        let ne = snap.byname.get(name)?;
+        let entry = ne.entry.as_ref()?;
+        entry.last_used.store(self.next_tick(), Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some((entry.dense.decide(op, p, m), ne.signature))
+    }
+
+    /// Hot-path lookup by signature: one snapshot pin; counters and
+    /// recency are atomic bumps.
+    pub fn get(&self, key: &ClusterSignature) -> Option<Arc<TableSet>> {
+        let snap = self.swap.load();
+        match snap.bysig.get(key) {
+            Some(e) => {
+                e.last_used.store(self.next_tick(), Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.set))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Counter-neutral lookup: same read path as [`SnapshotCache::get`]
+    /// (including the recency bump) but without touching the hit/miss
+    /// counters. The coordinator's miss path re-checks the cache under
+    /// its in-flight lock, and that re-check must not double-count the
+    /// logical miss the first `get` already recorded.
+    pub fn peek(&self, key: &ClusterSignature) -> Option<Arc<TableSet>> {
+        let snap = self.swap.load();
+        snap.bysig.get(key).map(|e| {
+            e.last_used.store(self.next_tick(), Ordering::Relaxed);
+            Arc::clone(&e.set)
+        })
+    }
+
+    /// Publish (or replace) the tables for `key`, evicting the
+    /// least-recently-used entry if at capacity. `names` is the current
+    /// cluster-name → signature mapping to index the new snapshot by.
+    pub fn insert(
+        &self,
+        key: ClusterSignature,
+        set: Arc<TableSet>,
+        names: &[(String, ClusterSignature)],
+    ) {
+        let t = self.next_tick();
+        self.publish(names, |bysig| {
+            if !bysig.contains_key(&key) && bysig.len() >= self.capacity {
+                let victim = bysig
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                    .map(|(k, _)| *k);
+                if let Some(victim) = victim {
+                    bysig.remove(&victim);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            let entry = TableEntry {
+                dense: DenseTable::new(&set),
+                set,
+                last_used: AtomicU64::new(t),
+            };
+            bysig.insert(key, Arc::new(entry));
+        });
+    }
+
+    /// Drop one entry (refresh retires a drifted signature this way).
+    pub fn remove(&self, key: &ClusterSignature, names: &[(String, ClusterSignature)]) -> bool {
+        let mut removed = false;
+        self.publish(names, |bysig| {
+            removed = bysig.remove(key).is_some();
+        });
+        removed
+    }
+
+    /// Republish with a fresh name index and unchanged tables — the
+    /// coordinator calls this after every (re-)registration so warm
+    /// reads never resolve a name through a stale signature.
+    pub fn sync_names(&self, names: &[(String, ClusterSignature)]) {
+        self.publish(names, |_| {});
+    }
+
+    /// Build-aside-and-publish: clone the resident map, let `edit`
+    /// mutate the clone, rebuild the name index, swap atomically.
+    /// Readers pinning the previous snapshot are undisturbed.
+    fn publish<F>(&self, names: &[(String, ClusterSignature)], edit: F)
+    where
+        F: FnOnce(&mut HashMap<ClusterSignature, Arc<TableEntry>>),
+    {
+        let _w = self.publish_lock.lock().unwrap();
+        let _span = Span::start("coordinator.publish_ns");
+        let mut bysig = self.swap.load_full().bysig.clone();
+        edit(&mut bysig);
+        let byname = names
+            .iter()
+            .map(|(name, sig)| {
+                let ne = NameEntry { signature: *sig, entry: bysig.get(sig).cloned() };
+                (name.clone(), ne)
+            })
+            .collect();
+        self.swap.store(Arc::new(CoordSnapshot { bysig, byname }));
+        if obs::enabled() {
+            obs::registry().counter("coordinator.snapshot_publishes").inc();
+        }
+    }
+
+    pub fn contains(&self, key: &ClusterSignature) -> bool {
+        self.swap.load().bysig.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.swap.load().bysig.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Counter + occupancy snapshot (counters are monotonic).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    /// Copy out every resident `(signature, tables)` pair, sorted by
+    /// signature (persistence).
+    pub fn snapshot(&self) -> Vec<(ClusterSignature, Arc<TableSet>)> {
+        let snap = self.swap.load();
+        let mut out: Vec<(ClusterSignature, Arc<TableSet>)> = snap
+            .bysig
+            .iter()
+            .map(|(k, e)| (*k, Arc::clone(&e.set)))
+            .collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::DecisionTable;
+
+    fn sig(nodes: usize) -> ClusterSignature {
+        ClusterSignature {
+            nodes,
+            ops: super::super::signature::OPS_ALL,
+            l_bucket: -170,
+            gap_buckets: [-203, -190, -120, -80, -52],
+        }
+    }
+
+    /// A minimal valid table set whose every decision carries `marker`
+    /// as the predicted time — enough to tell entries apart.
+    fn tiny(marker: u32) -> Arc<TableSet> {
+        let tables = Op::ALL
+            .iter()
+            .map(|&op| {
+                let d = Decision {
+                    strategy: op.family()[0],
+                    segment: None,
+                    predicted: f64::from(marker),
+                };
+                DecisionTable::new(op, vec![2], vec![1], vec![d])
+            })
+            .collect();
+        Arc::new(TableSet::new(tables))
+    }
+
+    fn marker(set: &TableSet) -> u32 {
+        set.decision(Op::Bcast, 2, 1).predicted as u32
+    }
+
+    #[test]
+    fn get_miss_then_insert_then_hit() {
+        let c = SnapshotCache::new(8);
+        assert!(c.get(&sig(2)).is_none());
+        c.insert(sig(2), tiny(42), &[]);
+        assert_eq!(c.get(&sig(2)).map(|t| marker(&t)), Some(42));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insert_replaces_in_place() {
+        let c = SnapshotCache::new(2);
+        c.insert(sig(3), tiny(1), &[]);
+        c.insert(sig(3), tiny(2), &[]);
+        assert_eq!(c.get(&sig(3)).map(|t| marker(&t)), Some(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let c = SnapshotCache::new(3);
+        c.insert(sig(10), tiny(10), &[]);
+        c.insert(sig(11), tiny(11), &[]);
+        c.insert(sig(12), tiny(12), &[]);
+        // touch 10 so 11 becomes the LRU
+        assert!(c.get(&sig(10)).is_some());
+        c.insert(sig(13), tiny(13), &[]);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.contains(&sig(10)), "recently-used entry survived");
+        assert!(!c.contains(&sig(11)), "LRU entry evicted");
+        assert!(c.contains(&sig(12)));
+        assert!(c.contains(&sig(13)));
+    }
+
+    #[test]
+    fn peek_reads_without_touching_counters() {
+        let c = SnapshotCache::new(4);
+        c.insert(sig(2), tiny(7), &[]);
+        assert_eq!(c.peek(&sig(2)).map(|t| marker(&t)), Some(7));
+        assert!(c.peek(&sig(3)).is_none());
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (0, 0));
+        // but peek still refreshes recency: 2 must survive over 4
+        let c1 = SnapshotCache::new(2);
+        c1.insert(sig(2), tiny(2), &[]);
+        c1.insert(sig(4), tiny(4), &[]);
+        assert!(c1.peek(&sig(2)).is_some()); // 4 becomes LRU
+        c1.insert(sig(5), tiny(5), &[]);
+        assert!(c1.contains(&sig(2)));
+        assert!(!c1.contains(&sig(4)));
+    }
+
+    #[test]
+    fn remove_retires_an_entry() {
+        let c = SnapshotCache::new(4);
+        c.insert(sig(5), tiny(5), &[]);
+        assert!(c.remove(&sig(5), &[]));
+        assert!(!c.remove(&sig(5), &[]));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let c = SnapshotCache::new(8);
+        for n in [9usize, 3, 7, 5] {
+            c.insert(sig(n), tiny(n as u32), &[]);
+        }
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 4);
+        let nodes: Vec<usize> = snap.iter().map(|(k, _)| k.nodes).collect();
+        assert_eq!(nodes, vec![3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn warm_decide_resolves_names_through_the_published_index() {
+        let c = SnapshotCache::new(4);
+        let names = vec![("a".to_string(), sig(2)), ("b".to_string(), sig(3))];
+        // registered but not resident: the index knows the name but
+        // warm reads must fall through to the slow path
+        c.sync_names(&names);
+        assert!(c.warm_decide("a", Op::Bcast, 2, 1).is_none());
+        assert_eq!(c.stats().hits, 0, "a warm fall-through is counter-neutral");
+
+        c.insert(sig(2), tiny(42), &names);
+        let (d, s) = c.warm_decide("a", Op::Bcast, 8, 1 << 20).unwrap();
+        assert_eq!(d.predicted as u32, 42);
+        assert_eq!(s, sig(2));
+        assert_eq!(c.stats().hits, 1);
+        assert!(c.warm_decide("b", Op::Bcast, 2, 1).is_none(), "b not resident");
+        assert!(c.warm_decide("ghost", Op::Bcast, 2, 1).is_none());
+    }
+
+    #[test]
+    fn recency_survives_republication() {
+        // a bump recorded on one snapshot generation must steer the
+        // eviction decided on a later generation (shared atomics)
+        let c = SnapshotCache::new(2);
+        c.insert(sig(2), tiny(2), &[]);
+        c.insert(sig(4), tiny(4), &[]);
+        c.sync_names(&[]); // republish: new snapshot, same entries
+        assert!(c.get(&sig(2)).is_some()); // bump on the new generation
+        c.insert(sig(5), tiny(5), &[]);
+        assert!(c.contains(&sig(2)));
+        assert!(!c.contains(&sig(4)), "LRU by shared generation stamp");
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_do_not_lose_counts() {
+        let c = SnapshotCache::new(16);
+        for n in 2..10usize {
+            c.insert(sig(n), tiny(n as u32), &[]);
+        }
+        let found = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let c = &c;
+                let found = &found;
+                scope.spawn(move || {
+                    for i in 0..1000usize {
+                        let n = 2 + (i + t) % 8;
+                        if c.get(&sig(n)).map(|v| marker(&v)) == Some(n as u32) {
+                            found.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(found.load(Ordering::Relaxed), 8 * 1000);
+        assert_eq!(c.stats().hits, 8 * 1000);
+    }
+}

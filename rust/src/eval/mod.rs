@@ -193,7 +193,10 @@ pub trait Evaluator: Send + Sync {
     /// Batched whole-grid evaluation: the best [`Decision`] for every
     /// `(p, m)` cell, row-major `[p_grid.len() × m_grid.len()]`. The
     /// default sweeps cells through [`Evaluator::best`]; batched
-    /// backends override this with one backend execution.
+    /// backends override this with one backend execution, and
+    /// [`ModelEval`] overrides it with a gap-cached, warm-started sweep
+    /// that reuses each m-row's range statistics across cells (same
+    /// bytes out, far fewer interpolations).
     fn predict_grid(
         &self,
         op: Op,

@@ -14,6 +14,8 @@
 //! (plus [`crate::models::PRUNE_MARGIN`]), so the produced tables are
 //! byte-identical to the exhaustive ranking.
 
+use anyhow::Result;
+
 use crate::collectives::Strategy;
 use crate::models::{self, BoundInputs, CostInputs};
 use crate::obs::Span;
@@ -303,6 +305,36 @@ impl Evaluator for ModelEval {
         }
         Decision { strategy: family[idx], segment: seg, predicted: t }
     }
+
+    /// Whole-grid sweep with per-row gap reuse: one [`GapCache`] per
+    /// call, so each m-row's interpolated gaps and bound statistics
+    /// (`GapTable::range_stats`) are computed once instead of once per
+    /// cell, and each cell warm-starts from its predecessor's winner.
+    /// Output is byte-identical to the default per-cell loop — hint and
+    /// cache independence is proven by
+    /// `best_in_is_hint_and_cache_independent` below. This is the path
+    /// `ArtifactEval` falls back to when no artifact covers a grid.
+    fn predict_grid(
+        &self,
+        op: Op,
+        net: &PLogP,
+        p_grid: &[usize],
+        m_grid: &[u64],
+        s_grid: &[u64],
+    ) -> Result<Vec<Decision>> {
+        let cache = GapCache::new(net, m_grid, s_grid);
+        let mut out = Vec::with_capacity(p_grid.len() * m_grid.len());
+        let mut hint: Option<Strategy> = None;
+        for &p in p_grid {
+            for &m in m_grid {
+                let ctx = CellCtx { hint, cache: Some(&cache), stats: None };
+                let d = self.best_in(op, net, p, m, s_grid, &ctx);
+                hint = Some(d.strategy);
+                out.push(d);
+            }
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +347,27 @@ mod tests {
     fn measured() -> PLogP {
         let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
         plogp::bench::measure(&mut sim)
+    }
+
+    #[test]
+    fn predict_grid_override_matches_the_per_cell_loop() {
+        let net = measured();
+        let s_grid = crate::tuner::grids::default_s_grid();
+        let p_grid = [2usize, 8, 48];
+        let m_grid = [1u64, 8192, 1 << 20];
+        for op in [Op::Bcast, Op::Scatter, Op::AllReduce] {
+            let grid = ModelEval
+                .predict_grid(op, &net, &p_grid, &m_grid, &s_grid)
+                .unwrap();
+            let mut i = 0;
+            for &p in &p_grid {
+                for &m in &m_grid {
+                    let want = ModelEval.best(op, &net, p, m, &s_grid);
+                    assert_eq!(grid[i], want, "{op:?} P={p} m={m}");
+                    i += 1;
+                }
+            }
+        }
     }
 
     #[test]

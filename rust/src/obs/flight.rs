@@ -2,9 +2,18 @@
 //! coordinator decisions, with the same drop-counting contract as
 //! [`crate::netsim::Trace`] — once full, each new event overwrites the
 //! oldest and bumps `dropped`, so `dropped() + len() == total()` holds
-//! at all times and nothing is lost silently.
+//! in every quiescent state and nothing is lost silently.
+//!
+//! The ring is *striped*: an atomic cursor assigns each event a
+//! sequence number, and the event lands in slot `seq % capacity` under
+//! that slot's own mutex. Concurrent recorders (32 decision threads on
+//! the coordinator's lock-free read path) therefore only contend when
+//! two in-flight events map to the same slot — there is no global lock
+//! to serialize them. A slot keeps the newest sequence it has seen, so
+//! a racing overwrite can never resurrect an older event.
 
 use crate::util::table::Table;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -14,7 +23,7 @@ pub const DEFAULT_FLIGHT_CAPACITY: usize = 4096;
 /// Outcome of one coordinator decision lookup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecisionOutcome {
-    /// Served from the sharded cache.
+    /// Served from the published snapshot.
     Hit,
     /// Cold miss; this request led the tune.
     Miss,
@@ -51,21 +60,17 @@ pub struct DecisionEvent {
     pub latency_ns: u64,
 }
 
-#[derive(Debug)]
-struct Ring {
-    buf: Vec<DecisionEvent>,
-    /// Index of the oldest event once the ring has wrapped.
-    start: usize,
-    dropped: u64,
-}
-
-/// Fixed-capacity, mutex-protected event ring. The lock is held for a
-/// constant-time slot write on record and a linear copy on read.
+/// Fixed-capacity, slot-striped event ring. Recording takes one atomic
+/// increment plus one per-slot mutex held for a constant-time write;
+/// reads (diagnostics) walk the slots one lock at a time.
 #[derive(Debug)]
 pub struct FlightRecorder {
     capacity: usize,
     epoch: Instant,
-    ring: Mutex<Ring>,
+    /// Sequence cursor == total events ever recorded.
+    next: AtomicU64,
+    dropped: AtomicU64,
+    slots: Box<[Mutex<Option<(u64, DecisionEvent)>>]>,
 }
 
 impl FlightRecorder {
@@ -74,11 +79,9 @@ impl FlightRecorder {
         FlightRecorder {
             capacity,
             epoch: Instant::now(),
-            ring: Mutex::new(Ring {
-                buf: Vec::with_capacity(capacity),
-                start: 0,
-                dropped: 0,
-            }),
+            next: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
         }
     }
 
@@ -88,59 +91,76 @@ impl FlightRecorder {
         u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
     }
 
-    /// Record one event; overwrites the oldest and bumps `dropped`
-    /// when the ring is full (mirroring `netsim::Trace`).
+    /// Record one event; overwrites the oldest lap's occupant of its
+    /// slot and bumps `dropped` (mirroring `netsim::Trace`). Newest
+    /// sequence wins a same-slot race, so a straggler can only ever
+    /// drop itself, never a fresher event.
     pub fn record(&self, ev: DecisionEvent) {
-        let mut r = self.ring.lock().unwrap();
-        if r.buf.len() < self.capacity {
-            r.buf.push(ev);
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut slot = self.slots[(seq as usize) % self.capacity].lock().unwrap();
+        let occupied_by_newer = match slot.as_ref() {
+            Some((s, _)) => *s > seq,
+            None => false,
+        };
+        if occupied_by_newer {
+            // a racing writer already landed a later lap here; this
+            // event is recorded-then-immediately-dropped
+            self.dropped.fetch_add(1, Ordering::Relaxed);
         } else {
-            let start = r.start;
-            r.buf[start] = ev;
-            r.start = (start + 1) % self.capacity;
-            r.dropped += 1;
+            if slot.is_some() {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            *slot = Some((seq, ev));
         }
     }
 
-    /// Events oldest-first.
+    /// Events oldest-first (by record sequence).
     pub fn events(&self) -> Vec<DecisionEvent> {
-        let r = self.ring.lock().unwrap();
-        let mut out = Vec::with_capacity(r.buf.len());
-        out.extend_from_slice(&r.buf[r.start..]);
-        out.extend_from_slice(&r.buf[..r.start]);
-        out
+        let mut seqd: Vec<(u64, DecisionEvent)> = Vec::with_capacity(self.capacity);
+        for slot in &self.slots {
+            if let Some((seq, ev)) = slot.lock().unwrap().as_ref() {
+                seqd.push((*seq, ev.clone()));
+            }
+        }
+        seqd.sort_by_key(|(seq, _)| *seq);
+        seqd.into_iter().map(|(_, ev)| ev).collect()
     }
 
     /// Events currently held (≤ capacity).
     pub fn len(&self) -> usize {
-        self.ring.lock().unwrap().buf.len()
+        self.slots
+            .iter()
+            .filter(|s| s.lock().unwrap().is_some())
+            .count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Events overwritten after the ring filled.
+    /// Events overwritten (or lost to a same-slot race) after the ring
+    /// filled.
     pub fn dropped(&self) -> u64 {
-        self.ring.lock().unwrap().dropped
+        self.dropped.load(Ordering::Relaxed)
     }
 
-    /// Total events ever recorded: `dropped() + len()`.
+    /// Total events ever recorded: `dropped() + len()` in any quiescent
+    /// state.
     pub fn total(&self) -> u64 {
-        let r = self.ring.lock().unwrap();
-        r.dropped + r.buf.len() as u64
+        self.next.load(Ordering::Relaxed)
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Empty the ring and zero the drop counter.
+    /// Empty the ring and zero the cursors.
     pub fn clear(&self) {
-        let mut r = self.ring.lock().unwrap();
-        r.buf.clear();
-        r.start = 0;
-        r.dropped = 0;
+        for slot in &self.slots {
+            *slot.lock().unwrap() = None;
+        }
+        self.next.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
     }
 
     /// The ring as TSV (oldest-first) through [`Table`]: columns
@@ -216,5 +236,27 @@ mod tests {
         fr.clear();
         assert!(fr.is_empty());
         assert_eq!(fr.total(), 0);
+    }
+
+    #[test]
+    fn concurrent_recorders_account_for_every_event() {
+        // 8 threads × 500 events through a 64-slot ring: the quiescent
+        // invariant must hold exactly afterwards, whatever interleaving
+        // the slots saw
+        let fr = FlightRecorder::new(64);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let fr = &fr;
+                scope.spawn(move || {
+                    for i in 0..500u64 {
+                        fr.record(ev(t * 1000 + i));
+                    }
+                });
+            }
+        });
+        assert_eq!(fr.total(), 8 * 500);
+        assert_eq!(fr.len(), 64);
+        assert_eq!(fr.dropped() + fr.len() as u64, fr.total());
+        assert_eq!(fr.events().len(), 64);
     }
 }

@@ -17,10 +17,13 @@
 //! | instrument | kind | meaning |
 //! |---|---|---|
 //! | `coordinator.decision_ns` | histogram | whole `decision()` latency |
-//! | `coordinator.decision.cache_read_ns` | histogram | sharded-cache read phase |
+//! | `coordinator.decision.cache_read_ns` | histogram | lock-free snapshot read phase |
 //! | `coordinator.decision.coalesce_wait_ns` | histogram | follower wait on an in-flight tune |
 //! | `coordinator.decision.tune_ns` | histogram | leader tuner run on a cold miss |
 //! | `coordinator.decisions` / `.cache_hits` / `.cache_misses` / `.coalesced_waits` | counter | decision-path outcomes |
+//! | `coordinator.snapshot_publishes` | counter | cache snapshots published (tune, refresh, warm start, invalidation, re-registration) |
+//! | `coordinator.snapshot_read_retries` | counter | hot-path reads that retried around a racing publish |
+//! | `coordinator.publish_ns` | histogram | write-side snapshot rebuild + atomic swap |
 //! | `coordinator.refresh_ns` | histogram | one drift-refresh pass |
 //! | `coordinator.refresh.checks` / `.swaps` | counter | refresh passes / atomic table swaps |
 //! | `tuner.sweep_ns` | histogram | one per-op grid sweep |
@@ -34,11 +37,13 @@
 //! Observability is **off by default** ([`set_enabled`]). Every timing
 //! site is gated on [`enabled`], so a disabled path costs exactly one
 //! relaxed atomic load — no `Instant::now()`, no allocation, no lock.
-//! Enabled counters/gauges/histograms are relaxed-atomic increments;
-//! the only lock on a hot path is the flight recorder's ring mutex,
-//! held for a constant-time slot write. The tuner's sweep tables and
-//! the coordinator's decisions are byte-identical with observability
-//! on or off — instruments observe, they never steer.
+//! Enabled counters/gauges/histograms are relaxed-atomic increments.
+//! The coordinator's decision read path takes no lock either way; the
+//! only enabled-path lock is the flight recorder's *striped* per-slot
+//! mutex, held for a constant-time write and contended only when two
+//! in-flight events land on the same slot. The tuner's sweep tables
+//! and the coordinator's decisions are byte-identical with
+//! observability on or off — instruments observe, they never steer.
 //!
 //! ## Export surfaces
 //!

@@ -147,7 +147,11 @@ impl DecisionTable {
         &self.entries[qi * self.m_grid.len() + mi]
     }
 
-    fn nearest_p(&self, p: usize) -> usize {
+    /// Index of the nearest `p_grid` entry (absolute distance, first
+    /// entry on ties). Public because the coordinator's dense snapshot
+    /// tables precompute this mapping at publish time and must agree
+    /// with it exactly.
+    pub fn nearest_p_index(&self, p: usize) -> usize {
         self.p_grid
             .iter()
             .enumerate()
@@ -156,7 +160,9 @@ impl DecisionTable {
             .unwrap()
     }
 
-    fn nearest_m(&self, m: u64) -> usize {
+    /// Index of the nearest `m_grid` entry in log space (first entry on
+    /// ties) — the `m` half of the snap-to-nearest contract.
+    pub fn nearest_m_index(&self, m: u64) -> usize {
         // nearest in log space: minimize |ln(m) - ln(grid)|
         let lm = (m.max(1)) as f64;
         self.m_grid
@@ -173,7 +179,7 @@ impl DecisionTable {
 
     /// Snap-to-nearest lookup.
     pub fn lookup(&self, p: usize, m: u64) -> &Decision {
-        self.at(self.nearest_p(p), self.nearest_m(m))
+        self.at(self.nearest_p_index(p), self.nearest_m_index(m))
     }
 
     /// Fraction of grid points won by each strategy (diagnostics).

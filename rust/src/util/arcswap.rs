@@ -1,0 +1,262 @@
+//! A hand-rolled atomic `Arc` swap — the publication primitive behind
+//! the coordinator's lock-free read path (vendored-deps-only, so we
+//! cannot reach for the `arc-swap` crate).
+//!
+//! [`ArcSwap<T>`] holds an `Arc<T>` that readers borrow through a
+//! single atomic index load and writers replace wholesale. It is a
+//! two-slot *left-right* scheme:
+//!
+//! * two value slots, one **active** (named by an atomic index) and one
+//!   spare;
+//! * readers load the active index, announce themselves on that slot's
+//!   reader counter, then re-load the index to verify it did not move
+//!   underneath them — on the (rare) race with a concurrent publish
+//!   they retract and retry;
+//! * a writer (serialized by an internal mutex) installs the new value
+//!   into the *inactive* slot — after waiting for that slot's reader
+//!   count to drain to zero — and then flips the active index.
+//!
+//! ## Guarantees
+//!
+//! * **No reader locks.** [`ArcSwap::load`] is two atomic loads and one
+//!   atomic increment on the fast path; it never touches a mutex, never
+//!   allocates, and never blocks on a writer (it can *retry* around a
+//!   concurrent flip, which the coordinator counts as
+//!   `coordinator.snapshot_read_retries`). Reads are lock-free, not
+//!   wait-free.
+//! * **Torn reads are impossible.** A verified guard pins a slot whose
+//!   value was fully written before the flip that made it active, and a
+//!   writer never touches a slot while its reader count is non-zero:
+//!   every read observes exactly one published `Arc<T>`, old or new.
+//! * **Publication ordering.** The index flip is the release-store that
+//!   publishes the new value; the reader's verified index load is the
+//!   matching acquire. (The implementation uses `SeqCst` throughout —
+//!   a strict superset of the acquire/release protocol — to keep the
+//!   invariants easy to audit and sanitizer-friendly.)
+//!
+//! ## Hazards (for callers)
+//!
+//! * A [`Guard`] pins its slot: a thread that calls [`ArcSwap::store`]
+//!   twice while holding one deadlocks itself (the second store drains
+//!   the slot the guard pins). Keep guards short; never publish while
+//!   holding one.
+//! * The value published two stores ago is dropped inside the third
+//!   [`ArcSwap::store`]; a retired `Arc<T>` therefore survives one
+//!   extra publish cycle.
+
+use std::cell::UnsafeCell;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct Slot<T> {
+    readers: AtomicUsize,
+    value: UnsafeCell<Arc<T>>,
+}
+
+impl<T> Slot<T> {
+    fn new(value: Arc<T>) -> Slot<T> {
+        Slot { readers: AtomicUsize::new(0), value: UnsafeCell::new(value) }
+    }
+}
+
+/// An atomically swappable `Arc<T>`. See the module docs for the
+/// protocol and its guarantees.
+pub struct ArcSwap<T> {
+    /// Index (0 or 1) of the slot readers should pin.
+    active: AtomicUsize,
+    slots: [Slot<T>; 2],
+    /// Serializes writers; readers never touch it.
+    writer: Mutex<()>,
+    /// Reads that had to retry around a concurrent flip (diagnostic).
+    retries: AtomicU64,
+    /// Optional obs counter name bumped on each retry (obs-gated).
+    retry_metric: Option<&'static str>,
+}
+
+// SAFETY: the UnsafeCell is only written inside `store` while holding
+// the writer mutex *and* after the slot's reader count drained to
+// zero, so `&Arc<T>` borrows handed to readers never alias a write.
+// Sharing therefore only requires the usual `Arc` bounds on `T`.
+unsafe impl<T: Send + Sync> Send for ArcSwap<T> {}
+unsafe impl<T: Send + Sync> Sync for ArcSwap<T> {}
+
+/// A pinned borrow of the currently published value. Dereferences to
+/// `T`; dropping it releases the pin. Do not hold one across
+/// [`ArcSwap::store`] (see the module hazards).
+pub struct Guard<'a, T> {
+    slot: &'a Slot<T>,
+    arc: &'a Arc<T>,
+}
+
+impl<T> Deref for Guard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.arc.as_ref()
+    }
+}
+
+impl<T> Guard<'_, T> {
+    /// Clone the pinned `Arc` (to outlive the guard).
+    pub fn cloned(&self) -> Arc<T> {
+        Arc::clone(self.arc)
+    }
+}
+
+impl<T> Drop for Guard<'_, T> {
+    fn drop(&mut self) {
+        self.slot.readers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl<T> ArcSwap<T> {
+    pub fn new(initial: Arc<T>) -> ArcSwap<T> {
+        ArcSwap {
+            active: AtomicUsize::new(0),
+            slots: [Slot::new(Arc::clone(&initial)), Slot::new(initial)],
+            writer: Mutex::new(()),
+            retries: AtomicU64::new(0),
+            retry_metric: None,
+        }
+    }
+
+    /// Count read retries into the named obs counter as well as the
+    /// local [`ArcSwap::read_retries`] total (builder-style).
+    pub fn with_retry_metric(mut self, name: &'static str) -> ArcSwap<T> {
+        self.retry_metric = Some(name);
+        self
+    }
+
+    /// Pin and borrow the currently published value. Lock-free: two
+    /// atomic loads and one increment when no publish races, a bounded
+    /// retry loop when one does.
+    pub fn load(&self) -> Guard<'_, T> {
+        loop {
+            let i = self.active.load(Ordering::SeqCst);
+            let slot = &self.slots[i];
+            slot.readers.fetch_add(1, Ordering::SeqCst);
+            if self.active.load(Ordering::SeqCst) == i {
+                // Verified: either the slot's value was complete before
+                // the flip that activated it, or our count now blocks
+                // any writer from touching it. Safe to borrow.
+                let arc = unsafe { &*slot.value.get() };
+                return Guard { slot, arc };
+            }
+            // A publish moved the active index between our two loads;
+            // retract the announcement and retry on the new slot.
+            slot.readers.fetch_sub(1, Ordering::SeqCst);
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            if let Some(name) = self.retry_metric {
+                if crate::obs::enabled() {
+                    crate::obs::registry().counter(name).inc();
+                }
+            }
+        }
+    }
+
+    /// Clone the currently published `Arc` (pin released on return).
+    pub fn load_full(&self) -> Arc<T> {
+        self.load().cloned()
+    }
+
+    /// Publish a new value: install into the inactive slot once its
+    /// readers drain, then flip the active index. Never blocks readers;
+    /// blocks (briefly) on stragglers still pinning the *previous*
+    /// publish's retired slot, and on other writers.
+    pub fn store(&self, new: Arc<T>) {
+        let _w = self.writer.lock().unwrap();
+        let inactive = 1 - self.active.load(Ordering::SeqCst);
+        let slot = &self.slots[inactive];
+        let mut spins = 0u32;
+        while slot.readers.load(Ordering::SeqCst) != 0 {
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        // SAFETY: writer mutex held and the slot's reader count is
+        // zero; late readers that increment it now will fail the index
+        // verification (active still names the other slot) and retract.
+        // This drops the Arc published two stores ago.
+        unsafe {
+            *slot.value.get() = new;
+        }
+        self.active.store(inactive, Ordering::SeqCst);
+    }
+
+    /// Total reads that retried around a concurrent publish.
+    pub fn read_retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn store_then_load_returns_latest() {
+        let s = ArcSwap::new(Arc::new(1u64));
+        assert_eq!(*s.load(), 1);
+        s.store(Arc::new(2));
+        assert_eq!(*s.load(), 2);
+        assert_eq!(*s.load_full(), 2);
+        s.store(Arc::new(3));
+        s.store(Arc::new(4));
+        assert_eq!(*s.load(), 4);
+        assert_eq!(s.read_retries(), 0, "no contention, no retries");
+    }
+
+    #[test]
+    fn guards_pin_their_value_across_a_publish() {
+        let s = ArcSwap::new(Arc::new(10u64));
+        let g1 = s.load();
+        s.store(Arc::new(20));
+        let g2 = s.load();
+        // the old guard still reads the value it pinned; the new one
+        // reads the fresh publish — both alive at once
+        assert_eq!(*g1, 10);
+        assert_eq!(*g2, 20);
+        drop(g1);
+        drop(g2);
+        s.store(Arc::new(30));
+        assert_eq!(*s.load(), 30);
+    }
+
+    #[test]
+    fn concurrent_readers_never_see_torn_pairs() {
+        // Publish (k, 7k) pairs from one writer while readers verify
+        // the invariant on every load: any torn mix of two publishes
+        // breaks it. cfg(stress) raises the iteration count in CI's
+        // concurrency step.
+        let writes: u64 = if cfg!(stress) { 200_000 } else { 20_000 };
+        let s = ArcSwap::new(Arc::new((0u64, 0u64)));
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let (s, done) = (&s, &done);
+            scope.spawn(move || {
+                for k in 1..=writes {
+                    s.store(Arc::new((k, k * 7)));
+                }
+                done.store(true, Ordering::SeqCst);
+            });
+            for _ in 0..4 {
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    while !done.load(Ordering::SeqCst) {
+                        let g = s.load();
+                        let (a, b) = *g;
+                        assert_eq!(b, a * 7, "torn read: ({a}, {b})");
+                        assert!(a >= last, "went backwards: {a} after {last}");
+                        last = a;
+                    }
+                });
+            }
+        });
+        assert_eq!(*s.load(), (writes, writes * 7));
+    }
+}

@@ -1,6 +1,7 @@
 //! Small self-contained utilities standing in for crates that are not
 //! available in this offline build (rand, serde_json, proptest, prettytable).
 
+pub mod arcswap;
 pub mod benchkit;
 pub mod check;
 pub mod json;

@@ -1,16 +1,18 @@
 //! Integration tests for the L3 tuning coordinator: signature
-//! quantization, LRU eviction, miss coalescing under real threads, and
-//! the persist → warm-start roundtrip.
+//! quantization, LRU eviction, miss coalescing under real threads,
+//! torn-read-freedom of the lock-free snapshot path under a publish
+//! storm, and the persist → warm-start roundtrip.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 
 use collective_tuner::coordinator::{
-    signature, ClusterSignature, Coordinator, CoordinatorConfig, ShardedCache,
+    signature, ClusterSignature, Coordinator, CoordinatorConfig, RefreshPolicy, SnapshotCache,
+    TableSet,
 };
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp::{bench, GapTable, PLogP};
-use collective_tuner::tuner::{grids, Op};
+use collective_tuner::tuner::{grids, Decision, DecisionTable, Op, Tuner};
 
 fn small_config() -> CoordinatorConfig {
     CoordinatorConfig {
@@ -62,23 +64,44 @@ fn signature_inequality_across_parameters_nodes_and_class() {
 
 // ---- LRU eviction ------------------------------------------------------
 
+/// A minimal valid table set whose every decision reports `marker` as
+/// its predicted time — enough to tell cache entries apart.
+fn tiny_tables(marker: u32) -> Arc<TableSet> {
+    let tables = Op::ALL
+        .iter()
+        .map(|&op| {
+            let d = Decision {
+                strategy: op.family()[0],
+                segment: None,
+                predicted: f64::from(marker),
+            };
+            DecisionTable::new(op, vec![2], vec![1], vec![d])
+        })
+        .collect();
+    Arc::new(TableSet::new(tables))
+}
+
+fn marker_of(set: &TableSet) -> u32 {
+    set.decision(Op::Bcast, 2, 1).predicted as u32
+}
+
 #[test]
 fn lru_eviction_follows_recency_order() {
-    // single shard: every key contends for the same 2 slots
-    let cache: ShardedCache<u32> = ShardedCache::new(1, 2);
+    // every key contends for the same 2 slots
+    let cache = SnapshotCache::new(2);
     let sig = |nodes: usize| ClusterSignature {
         nodes,
         ops: signature::OPS_ALL,
         l_bucket: -100,
         gap_buckets: [-1, -2, -3, -4, -5],
     };
-    cache.insert(sig(1), 1);
-    cache.insert(sig(2), 2);
-    assert_eq!(cache.get(&sig(1)), Some(1)); // 2 is now LRU
-    cache.insert(sig(3), 3);
-    assert_eq!(cache.get(&sig(2)), None, "LRU entry must be evicted");
-    assert_eq!(cache.get(&sig(1)), Some(1));
-    assert_eq!(cache.get(&sig(3)), Some(3));
+    cache.insert(sig(1), tiny_tables(1), &[]);
+    cache.insert(sig(2), tiny_tables(2), &[]);
+    assert_eq!(cache.get(&sig(1)).map(|t| marker_of(&t)), Some(1)); // 2 is now LRU
+    cache.insert(sig(3), tiny_tables(3), &[]);
+    assert!(cache.get(&sig(2)).is_none(), "LRU entry must be evicted");
+    assert_eq!(cache.get(&sig(1)).map(|t| marker_of(&t)), Some(1));
+    assert_eq!(cache.get(&sig(3)).map(|t| marker_of(&t)), Some(3));
     let st = cache.stats();
     assert_eq!(st.evictions, 1);
     assert_eq!(st.entries, 2);
@@ -259,4 +282,75 @@ fn mixed_load_many_threads_tunes_once_per_signature() {
     // every query does one cache lookup; at most 8 threads × 2
     // signatures can cold-miss before the tables publish
     assert!(st.cache.hits >= 1600 - 16, "hot path must be cache hits: {st:?}");
+}
+
+// ---- publish storm: lock-free reads must never tear --------------------
+
+#[test]
+fn refresh_publish_storm_never_serves_torn_decisions() {
+    // Readers hammer the lock-free decision path while a writer
+    // alternates the cluster between two networks — each flip is a
+    // re-registration, a re-tune, a snapshot publish, and an eviction.
+    // Both target table sets are deterministic (the tuner is
+    // byte-reproducible on a fresh simulator), so every observed
+    // decision must equal one of the two precomputed answers; a torn
+    // snapshot (old strategy with new predicted time, half-updated name
+    // index, ...) would surface as a third value. cfg(stress) raises
+    // the cycle count in CI's concurrency step.
+    let cfg = small_config();
+    let coord = Coordinator::new(cfg.clone());
+    let net_a = measured(NetConfig::fast_ethernet_icluster1());
+    let net_b = measured(NetConfig::gigabit_ethernet());
+    coord.register("x", 24, net_a.clone());
+    let ta = TableSet::new(
+        Tuner::native().tune_all(&net_a, &cfg.p_grid, &cfg.m_grid).unwrap(),
+    );
+    let tb = TableSet::new(
+        Tuner::native().tune_all(&net_b, &cfg.p_grid, &cfg.m_grid).unwrap(),
+    );
+    let probes = [
+        (Op::Bcast, 24usize, 65536u64),
+        (Op::Scatter, 8, 1024),
+        (Op::AllReduce, 24, 1 << 20),
+        (Op::Gather, 2, 64),
+    ];
+    let cycles: usize = if cfg!(stress) { 40 } else { 6 };
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let (coord, stop, ta, tb) = (&coord, &stop, &ta, &tb);
+        s.spawn(move || {
+            let policy = RefreshPolicy::default();
+            for k in 0..cycles {
+                // always drifted from the current registration, so every
+                // cycle republishes
+                let flip = if k % 2 == 0 {
+                    NetConfig::gigabit_ethernet()
+                } else {
+                    NetConfig::fast_ethernet_icluster1()
+                };
+                let mut sim = Netsim::new(2, flip);
+                let outcome = coord.refresh("x", &mut sim, &policy).unwrap();
+                assert!(outcome.refreshed(), "cycle {k}: {outcome:?}");
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        for _ in 0..4 {
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for &(op, p, m) in &probes {
+                        let d = coord.decision(op, "x", p, m).unwrap();
+                        let da = ta.decision(op, p, m);
+                        let db = tb.decision(op, p, m);
+                        assert!(
+                            d == da || d == db,
+                            "torn decision for {op:?} P={p} m={m}: \
+                             {d:?} is neither {da:?} nor {db:?}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    assert!(coord.tune_count() >= cycles as u64, "every flip re-tunes");
+    assert!(coord.stats().cache.entries <= 2, "only two signatures ever exist");
 }

@@ -629,3 +629,126 @@ fn flight_recorder_ring_accounts_for_every_event() {
         assert_eq!(ts, expect, "ring must hold the newest events oldest-first");
     });
 }
+
+// ---------------------------------------------------------------------------
+// Coordinator snapshot cache: dense-table exactness and LRU parity
+// ---------------------------------------------------------------------------
+
+use collective_tuner::coordinator::{signature, ClusterSignature, DenseTable, SnapshotCache};
+use collective_tuner::coordinator::TableSet;
+use collective_tuner::tuner::{Decision, DecisionTable, Op, Tuner};
+use std::sync::Arc;
+
+fn sig_of(nodes: usize) -> ClusterSignature {
+    ClusterSignature {
+        nodes,
+        ops: signature::OPS_ALL,
+        l_bucket: -170,
+        gap_buckets: [-203, -190, -120, -80, -52],
+    }
+}
+
+/// A minimal valid table set whose every decision carries `marker` as
+/// the predicted time — enough to tell cache entries apart.
+fn tiny_set(marker: u32) -> Arc<TableSet> {
+    let tables = Op::ALL
+        .iter()
+        .map(|&op| {
+            let d = Decision {
+                strategy: op.family()[0],
+                segment: None,
+                predicted: f64::from(marker),
+            };
+            DecisionTable::new(op, vec![2], vec![1], vec![d])
+        })
+        .collect();
+    Arc::new(TableSet::new(tables))
+}
+
+/// The flattened [`DenseTable`] the publish path builds must answer
+/// every query — any op, any `P`, any `m`, on or off the tuned grid —
+/// exactly like the nested nearest-neighbour lookup it replaces.
+#[test]
+fn dense_tables_commute_with_nested_lookups() {
+    let net = {
+        let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
+        plogp::bench::measure(&mut sim)
+    };
+    let p_grid: Vec<usize> = vec![2, 8, 24];
+    let m_grid = grids::log_grid(1, 1 << 20, 6);
+    let set = TableSet::new(Tuner::native().tune_all(&net, &p_grid, &m_grid).unwrap());
+    let dense = DenseTable::new(&set);
+    property("dense table lookup parity", 300, |rng| {
+        let op = *rng.pick(&Op::ALL);
+        let p = rng.range_usize(0, 101);
+        let m = match rng.range(0, 3) {
+            0 => rng.range(0, 64),
+            1 => rng.range(64, 1 << 20),
+            _ => rng.range(1 << 20, 1 << 40),
+        };
+        assert_eq!(
+            dense.decide(op, p, m),
+            set.decision(op, p, m),
+            "{op:?} P={p} m={m}"
+        );
+    });
+}
+
+/// The generation-counter LRU (write-side eviction over shared recency
+/// stamps) must replay any access sequence exactly like a reference
+/// least-recently-used model — the same order the old read-side-locking
+/// cache produced.
+#[test]
+fn snapshot_cache_lru_matches_a_reference_model() {
+    property("snapshot cache LRU model", 60, |rng| {
+        let capacity = rng.range_usize(1, 5);
+        let cache = SnapshotCache::new(capacity);
+        // reference model: resident (key, last-used) pairs
+        let mut model: Vec<(usize, u64)> = Vec::new();
+        let mut now = 0u64;
+        for _ in 0..40 {
+            now += 1;
+            let n = 2 + rng.range_usize(0, 8);
+            match rng.range(0, 10) {
+                0 => {
+                    let removed = cache.remove(&sig_of(n), &[]);
+                    let had = model.iter().any(|(k, _)| *k == n);
+                    model.retain(|(k, _)| *k != n);
+                    assert_eq!(removed, had, "remove({n}) parity");
+                }
+                1..=5 => {
+                    cache.insert(sig_of(n), tiny_set(n as u32), &[]);
+                    if let Some(e) = model.iter_mut().find(|(k, _)| *k == n) {
+                        e.1 = now;
+                    } else {
+                        if model.len() >= capacity {
+                            let lru = model
+                                .iter()
+                                .enumerate()
+                                .min_by_key(|(_, (_, t))| *t)
+                                .map(|(i, _)| i)
+                                .unwrap();
+                            model.remove(lru);
+                        }
+                        model.push((n, now));
+                    }
+                }
+                _ => {
+                    let hit = cache.get(&sig_of(n)).is_some();
+                    let mhit = match model.iter_mut().find(|(k, _)| *k == n) {
+                        Some(e) => {
+                            e.1 = now;
+                            true
+                        }
+                        None => false,
+                    };
+                    assert_eq!(hit, mhit, "get({n}) parity");
+                }
+            }
+            let got: Vec<usize> = cache.snapshot().iter().map(|(k, _)| k.nodes).collect();
+            let mut want: Vec<usize> = model.iter().map(|(k, _)| *k).collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "resident sets diverged");
+        }
+    });
+}
