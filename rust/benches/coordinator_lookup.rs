@@ -1,18 +1,23 @@
 //! Bench: the coordinator's decision path — cold miss (a full tuner
 //! run), warm hit (lock-free snapshot read + dense-table index),
 //! contended hit (the same lookup while 7 background threads hammer the
-//! service), and a 32-reader publish storm (warm reads racing a writer
-//! that refreshes — re-tunes and republishes — continuously). Runs with
+//! service), a 32-reader publish storm (warm reads racing a writer
+//! that refreshes — re-tunes and republishes — continuously), and a
+//! sockets phase (4 `ct/1` clients batching 16 queries per round-trip
+//! against a real TCP `CoordServer` on an ephemeral port). Runs with
 //! the obs layer enabled so the registry's `coordinator.decision_ns`
-//! histogram yields the gated `decision_latency_p95` and
-//! `contended_p95_over_warm_p95` metrics. Emits
+//! and `net.request_ns` histograms yield the gated
+//! `decision_latency_p95`, `contended_p95_over_warm_p95`, and
+//! `net_query_p95` metrics. Emits
 //! `BENCH_coordinator.candidate.json` at the repository root by default;
 //! pass `-- --write-baseline` to overwrite the committed
 //! `BENCH_coordinator.json` instead.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
+use collective_tuner::coordinator::net::{CoordServer, NetClient, Query, ServerOptions};
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy};
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::obs;
@@ -219,6 +224,74 @@ fn main() {
         ratio_p95
     );
 
+    // ---- sockets: batched ct/1 queries against a real TCP server --------
+    // A dedicated coordinator again (warm tables only — the phase gates
+    // protocol + transport cost, not tuning). One foreground client is
+    // wall-clocked by benchkit while 3 background clients keep their
+    // own connections saturated; the gated `net_query_p95` metric is
+    // the *server-side* `net.request_ns` p95 (BATCH receipt to
+    // DECISIONS write), so client-side sleeps can't flatter it.
+    section("sockets (4 ct/1 clients, BATCH(16) over TCP on an ephemeral port)");
+    let netsvc = Arc::new(Coordinator::new(config()));
+    netsvc.register("fe", 24, net_fe.clone());
+    netsvc.register("ge", 16, net_ge.clone());
+    let _ = netsvc.tables("fe").unwrap();
+    let _ = netsvc.tables("ge").unwrap();
+    obs::registry().reset();
+    let server = CoordServer::start(Arc::clone(&netsvc), "127.0.0.1:0", ServerOptions::default())
+        .expect("binding an ephemeral port");
+    let addr = server.local_addr().to_string();
+    let stop = AtomicBool::new(false);
+    let batches = AtomicU64::new(0);
+    let r_net = std::thread::scope(|s| {
+        for t in 0..3u64 {
+            let addr = addr.clone();
+            let (stop, batches) = (&stop, &batches);
+            s.spawn(move || {
+                let client = NetClient::connect(&addr).expect("background client connects");
+                let mut rng = Prng::new(0x5047_0BA7 ^ t);
+                while !stop.load(Ordering::Relaxed) {
+                    let queries: Vec<Query> = (0..16)
+                        .map(|_| Query {
+                            op: if rng.chance(0.5) { Op::Bcast } else { Op::Scatter },
+                            cluster: if rng.chance(0.5) { "fe".into() } else { "ge".into() },
+                            p: rng.range_usize(2, 49),
+                            m: rng.range(1, 1 << 20),
+                        })
+                        .collect();
+                    std::hint::black_box(client.query_batch(&queries).unwrap());
+                    batches.fetch_add(1, Ordering::Relaxed);
+                }
+                client.close();
+            });
+        }
+        let client = NetClient::connect(&addr).expect("foreground client connects");
+        let queries: Vec<Query> = (0..16u64)
+            .map(|i| Query {
+                op: if i % 2 == 0 { Op::Bcast } else { Op::Scatter },
+                cluster: if i % 4 < 2 { "fe".into() } else { "ge".into() },
+                p: 24,
+                m: 1 << (i % 20),
+            })
+            .collect();
+        let r = bench("net batch(16): query_batch() over TCP", || {
+            std::hint::black_box(client.query_batch(&queries).unwrap());
+        });
+        stop.store(true, Ordering::Relaxed);
+        client.close();
+        r
+    });
+    server.shutdown();
+    let net_query_p95_ns = obs::registry()
+        .histogram_snapshot("net.request_ns")
+        .map(|s| s.p95())
+        .unwrap_or(0);
+    println!(
+        "background clients completed {} batches; server-side net.request_ns p95: {} ns",
+        batches.load(Ordering::Relaxed),
+        net_query_p95_ns
+    );
+
     // ---- emit the bench JSON at the repo root ---------------------------
     // Default to a .candidate file so a casual local run can never
     // clobber the committed baseline; CI gates committed vs candidate.
@@ -232,15 +305,17 @@ fn main() {
     let json = format!
 ("{{
   \"benchmark\": \"coordinator_lookup\",
-  \"description\": \"L3 coordinator decision path: cold miss vs warm hit vs contended hit\",
+  \"description\": \"L3 coordinator decision path: cold miss vs warm hit vs contended hit vs batched ct/1 queries over TCP\",
   \"unit\": \"seconds per query\",
   \"results\": [
+{},
 {},
 {},
 {},
 {}
   ],
   \"metrics\": [
+{},
 {},
 {}
   ],
@@ -252,8 +327,10 @@ fn main() {
         json_entry("warm_hit", &r_warm),
         json_entry("contended_hit", &r_contended),
         json_hist_entry("contended_hit_32t", &snap32),
+        json_entry("net_batch16", &r_net),
         json_metric("decision_latency_p95", decision_p95_ns as f64, false),
         json_metric("contended_p95_over_warm_p95", ratio_p95, false),
+        json_metric("net_query_p95", net_query_p95_ns as f64, false),
         r_cold.summary.p50 / r_warm.summary.p50.max(1e-12),
         st.tunes
     );

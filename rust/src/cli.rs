@@ -211,6 +211,24 @@ COMMANDS:
                   --metrics-interval N   (print an obs registry snapshot every
                                           N seconds while serving, plus a final
                                           snapshot and flight-recorder dump)
+  coordd        run the coordinator as a network service: the ct/1
+                TSV-over-TCP protocol (docs/PROTOCOL.md) — batched
+                queries, subscriptions, INVALIDATE/TABLEUPDATE pushes
+                on drift re-publish, graceful shutdown on SIGTERM-free
+                platforms via --allow-remote-shutdown
+                  --listen 127.0.0.1:7177   (port 0 = ephemeral; the bound
+                                             address is printed as
+                                             'COORDD_LISTENING <addr>')
+                  --clusters 3   --nodes 16  (islands to register up front)
+                  --shards 8     --capacity 32   --jobs N
+                  --backend auto|native|artifact  --warm dir/
+                  --churn-ms N   (background drift loop: alternate one
+                                  island's hardware class every N ms and
+                                  refresh, driving real pushes)
+                  --allow-remote-shutdown  (accept the SHUTDOWN frame)
+                  --metrics-interval N     (print an obs snapshot every N
+                                            seconds, plus a final
+                                            OBS_SNAPSHOT_JSON line on exit)
   query         one-shot coordinator query (tunes on first use, cached after)
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --procs 24  --bytes 64k
@@ -219,6 +237,16 @@ COMMANDS:
                   --traces dir/  (warm-start from captured traces: replay-tune
                                   the recorded workload, needs --op all capture)
                   --stats        (one JSON blob: cache hit/miss + sweep counters)
+                  --connect HOST:PORT  (query a running coordd over ct/1
+                                        instead of tuning in-process;
+                                        --procs takes a comma list and
+                                        becomes one batched request)
+                  with --connect:
+                    --subscribe          (subscribe to the queried points)
+                    --wait-pushes K      (poll until K pushes arrive)
+                    --push-timeout SECS  (poll deadline, default 10)
+                    --shutdown           (ask the server to exit; needs
+                                          --allow-remote-shutdown there)
   obs           observability inspection
                   obs dump: exercise a miniature coordinator workload and
                   print the metrics registry snapshot (JSON), the
@@ -242,6 +270,9 @@ EXAMPLES:
   collective-tuner serve --threads 8 --metrics-interval 1 --log-level info
   collective-tuner obs dump
   collective-tuner query --op bcast --procs 48 --bytes 1M --save tables/
+  collective-tuner coordd --listen 127.0.0.1:7177 --clusters 3 --churn-ms 200
+  collective-tuner query --connect 127.0.0.1:7177 --cluster island-0 \\
+      --op bcast --procs 4,8,16 --bytes 64k
 ";
 
 #[cfg(test)]

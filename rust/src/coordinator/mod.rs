@@ -21,6 +21,12 @@
 //!   signature block on a single in-flight tuner run).
 //! * [`refresh`] — [`RefreshPolicy`], periodic pLogP re-probing with
 //!   drift detection and atomic table swap.
+//! * [`net`] — the coordinator over the wire: the `ct/1` TSV-over-TCP
+//!   protocol (`docs/PROTOCOL.md`), the `coordd` server
+//!   ([`net::CoordServer`]), the remote client ([`net::NetClient`]),
+//!   and a loopback in-process transport; drift re-publishes reach
+//!   subscribed clients as `INVALIDATE`/`TABLEUPDATE` pushes via
+//!   [`Coordinator::watch_publishes`].
 //!
 //! Typical service lifecycle (what `collective-tuner serve` runs):
 //!
@@ -40,12 +46,16 @@
 //! println!("use {} (segment {:?})", d.strategy.name(), d.segment);
 //! ```
 
+pub mod net;
 pub mod refresh;
 pub mod service;
 pub mod signature;
 pub mod snapshot;
 
 pub use refresh::{RefreshOutcome, RefreshPolicy};
-pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats, RegisteredCluster, TableSet};
+pub use service::{
+    Coordinator, CoordinatorConfig, CoordinatorStats, PublishEvent, PublishKind,
+    RegisteredCluster, TableSet,
+};
 pub use signature::ClusterSignature;
 pub use snapshot::{CacheStats, DenseTable, SnapshotCache};

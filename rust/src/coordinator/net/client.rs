@@ -1,0 +1,305 @@
+//! [`NetClient`]: the remote twin of the coordinator's warm-read
+//! surface. `decision()` / `query_batch()` mirror
+//! [`Coordinator::decision`](super::super::service::Coordinator::decision)
+//! over the `ct/1` wire, `subscribe()` registers for push updates, and
+//! the client enforces the protocol's invalidation-ordering guarantee
+//! (docs/PROTOCOL.md §6): it never returns a decision computed from a
+//! snapshot older than an `INVALIDATE` it had already observed when
+//! the query was sent.
+//!
+//! ## Concurrency contract
+//!
+//! * The whole connection state (reader, writer, id counter, buffered
+//!   pushes, per-cluster invalidation floors) lives behind **one
+//!   mutex**; every method takes `&self`, so a [`NetClient`] can be
+//!   shared across threads like the in-process coordinator — requests
+//!   from different threads serialize per connection (open one client
+//!   per thread for parallelism; the bench does exactly that).
+//! * The transport is any `Read`/`Write` pair: a `TcpStream` clone
+//!   pair ([`NetClient::connect`]) or a loopback pipe pair
+//!   ([`super::loopback::LoopbackServer::connect`]). The client is the
+//!   only reader of its stream.
+//! * Pushes (`INVALIDATE` / `TABLEUPDATE`) arrive interleaved with
+//!   responses and are buffered internally by whichever request is
+//!   currently draining the stream; [`NetClient::take_pushes`] hands
+//!   them out, and [`NetClient::wait_pushes`] polls for them with
+//!   `PING` round-trips (which works on any blocking transport — no
+//!   read timeouts needed).
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tuner::{Decision, Op};
+
+use super::frame::{codes, Frame, Point, Query, QueryReply, PROTOCOL_VERSION};
+
+/// A structured error the server returned for one query or request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemoteError {
+    pub code: String,
+    pub message: String,
+}
+
+impl fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
+/// A server-initiated push, as surfaced to client code.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Push {
+    /// Decisions for `cluster` carrying an epoch `< epoch` are stale.
+    Invalidate { epoch: u64, cluster: String },
+    /// Fresh decisions for every subscribed point of `cluster`.
+    TableUpdate { epoch: u64, cluster: String, rows: Vec<(Point, Decision)> },
+}
+
+struct Inner {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: Box<dyn Write + Send>,
+    next_id: u64,
+    pushes: VecDeque<Push>,
+    /// Per-cluster invalidation floor: the highest `INVALIDATE` epoch
+    /// observed. Decisions at or above the floor recorded *before* a
+    /// query was sent are guaranteed by the server; a response below
+    /// that floor is a protocol violation surfaced as `stale`.
+    invalidated: HashMap<String, u64>,
+    banner: String,
+}
+
+/// A `ct/1` client connection. See the module docs for the sharing and
+/// push-delivery contract.
+pub struct NetClient {
+    inner: Mutex<Inner>,
+}
+
+impl NetClient {
+    /// Connect over TCP and handshake.
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = stream.try_clone().context("cloning stream")?;
+        NetClient::from_transport(Box::new(reader), Box::new(stream))
+    }
+
+    /// Handshake over an arbitrary transport (the loopback pipes, or a
+    /// pre-connected socket pair).
+    pub fn from_transport(
+        reader: Box<dyn Read + Send>,
+        writer: Box<dyn Write + Send>,
+    ) -> Result<NetClient> {
+        let mut inner = Inner {
+            reader: BufReader::new(reader),
+            writer,
+            next_id: 1,
+            pushes: VecDeque::new(),
+            invalidated: HashMap::new(),
+            banner: String::new(),
+        };
+        send(&mut inner, &Frame::Hello { version: PROTOCOL_VERSION })?;
+        match recv_response(&mut inner)? {
+            Frame::Welcome { version, banner } if version == PROTOCOL_VERSION => {
+                inner.banner = banner;
+            }
+            Frame::Welcome { version, .. } => {
+                bail!("server answered ct/{version}, this client speaks ct/{PROTOCOL_VERSION}")
+            }
+            Frame::Error { code, message } => bail!("handshake refused: {code}: {message}"),
+            other => bail!("handshake violation: expected WELCOME, got {other:?}"),
+        }
+        Ok(NetClient { inner: Mutex::new(inner) })
+    }
+
+    /// The server's `WELCOME` banner.
+    pub fn banner(&self) -> String {
+        self.inner.lock().unwrap().banner.clone()
+    }
+
+    /// The warm-read surface, one point at a time: exactly the
+    /// in-process `Coordinator::decision` signature, answered remotely.
+    pub fn decision(&self, op: Op, cluster: &str, p: usize, m: u64) -> Result<Decision> {
+        let mut replies = self.query_batch(&[Query {
+            op,
+            cluster: cluster.to_string(),
+            p,
+            m,
+        }])?;
+        match replies.pop().context("server answered an empty batch")? {
+            Ok(d) => Ok(d),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// One batched round-trip: every query answered in order, each
+    /// individually a decision or a structured error (a batch can
+    /// partially succeed).
+    pub fn query_batch(&self, queries: &[Query]) -> Result<Vec<Result<Decision, RemoteError>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        // Snapshot the invalidation floors *before* sending: pushes
+        // that arrive while we wait may postdate the server's answer
+        // and must not count against it.
+        let floor: u64 = queries
+            .iter()
+            .filter_map(|q| inner.invalidated.get(&q.cluster).copied())
+            .max()
+            .unwrap_or(0);
+        send(&mut inner, &Frame::Batch { id, queries: queries.to_vec() })?;
+        let (epoch, replies) = loop {
+            match recv_response(&mut inner)? {
+                Frame::Decisions { id: rid, epoch, replies } if rid == id => {
+                    break (epoch, replies)
+                }
+                Frame::Nack { id: rid, code, message } if rid == id => {
+                    bail!(RemoteError { code, message })
+                }
+                other => bail!("expected DECISIONS for id {id}, got {other:?}"),
+            }
+        };
+        if replies.len() != queries.len() {
+            bail!("server answered {} replies to {} queries", replies.len(), queries.len());
+        }
+        let any_ok = replies.iter().any(|r| matches!(r, QueryReply::Decision(_)));
+        if any_ok && epoch < floor {
+            // The ordering guarantee says this cannot happen with a
+            // conforming server; surface it instead of serving a
+            // decision older than an acknowledged invalidation.
+            bail!(RemoteError {
+                code: codes::STALE.to_string(),
+                message: format!(
+                    "decisions at epoch {epoch} predate acknowledged invalidate at {floor}"
+                ),
+            });
+        }
+        Ok(replies
+            .into_iter()
+            .map(|r| match r {
+                QueryReply::Decision(d) => Ok(d),
+                QueryReply::Error { code, message } => Err(RemoteError { code, message }),
+            })
+            .collect())
+    }
+
+    /// Subscribe to `(op, P, m)` points of one cluster. Returns the
+    /// cluster's signature key and the subscription epoch; the initial
+    /// `TABLEUPDATE` lands in the push buffer immediately after.
+    pub fn subscribe(&self, cluster: &str, points: &[Point]) -> Result<(String, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        send(
+            &mut inner,
+            &Frame::Subscribe { id, cluster: cluster.to_string(), points: points.to_vec() },
+        )?;
+        loop {
+            match recv_response(&mut inner)? {
+                Frame::Subscribed { id: rid, signature, epoch, .. } if rid == id => {
+                    return Ok((signature, epoch))
+                }
+                Frame::Nack { id: rid, code, message } if rid == id => {
+                    bail!(RemoteError { code, message })
+                }
+                other => bail!("expected SUBSCRIBED for id {id}, got {other:?}"),
+            }
+        }
+    }
+
+    /// One `PING` round-trip; returns the server's current publish
+    /// epoch. Also drains any queued pushes into the buffer.
+    pub fn ping(&self) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        send(&mut inner, &Frame::Ping { id })?;
+        loop {
+            match recv_response(&mut inner)? {
+                Frame::Pong { id: rid, epoch } if rid == id => return Ok(epoch),
+                other => bail!("expected PONG for id {id}, got {other:?}"),
+            }
+        }
+    }
+
+    /// Drain every buffered push (non-blocking; pushes are buffered as
+    /// a side effect of any request round-trip).
+    pub fn take_pushes(&self) -> Vec<Push> {
+        self.inner.lock().unwrap().pushes.drain(..).collect()
+    }
+
+    /// Poll (via `PING` round-trips) until at least `min` pushes are
+    /// buffered or `timeout` elapses; returns whatever arrived. Works
+    /// on any blocking transport — no socket read timeouts involved.
+    pub fn wait_pushes(&self, min: usize, timeout: Duration) -> Result<Vec<Push>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let mut inner = self.inner.lock().unwrap();
+                if inner.pushes.len() >= min {
+                    return Ok(inner.pushes.drain(..).collect());
+                }
+            }
+            if Instant::now() >= deadline {
+                return Ok(self.take_pushes());
+            }
+            self.ping()?; // drains anything the server queued before the PONG
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Ask the server to shut down (requires `--allow-remote-shutdown`
+    /// on the server side). Returns once the server acknowledges with
+    /// `BYE`.
+    pub fn shutdown_server(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        send(&mut inner, &Frame::Shutdown)?;
+        match recv_response(&mut inner)? {
+            Frame::Bye => Ok(()),
+            Frame::Error { code, message } => bail!(RemoteError { code, message }),
+            other => bail!("expected BYE, got {other:?}"),
+        }
+    }
+
+    /// Polite hangup (best-effort `BYE`).
+    pub fn close(self) {
+        let mut inner = self.inner.lock().unwrap();
+        let _ = send(&mut inner, &Frame::Bye);
+    }
+}
+
+fn send(inner: &mut Inner, frame: &Frame) -> Result<()> {
+    let bytes = frame.encode();
+    inner.writer.write_all(bytes.as_bytes()).context("writing frame")?;
+    inner.writer.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read frames until a non-push arrives, buffering pushes (and folding
+/// `INVALIDATE` epochs into the per-cluster floor) on the way. A
+/// connection-level `ERROR` or EOF is fatal.
+fn recv_response(inner: &mut Inner) -> Result<Frame> {
+    loop {
+        let frame = Frame::read_from(&mut inner.reader)
+            .map_err(anyhow::Error::from)?
+            .context("server closed the connection")?;
+        match frame {
+            Frame::Invalidate { epoch, cluster, .. } => {
+                let floor = inner.invalidated.entry(cluster.clone()).or_insert(0);
+                *floor = (*floor).max(epoch);
+                inner.pushes.push_back(Push::Invalidate { epoch, cluster });
+            }
+            Frame::TableUpdate { epoch, cluster, rows, .. } => {
+                inner.pushes.push_back(Push::TableUpdate { epoch, cluster, rows });
+            }
+            other => return Ok(other),
+        }
+    }
+}

@@ -1,0 +1,665 @@
+//! Wire frames for the coordinator's TCP protocol (`ct/1`): a
+//! line-delimited, TAB-separated, versioned format — the network twin
+//! of the `tuner::persist` TSV idiom, hand-rolled because the crate
+//! vendors no serialization dependency. The normative grammar lives in
+//! `docs/PROTOCOL.md`; this module is its only implementation, shared
+//! verbatim by the server, the client, and the loopback transport so
+//! the three cannot drift apart.
+//!
+//! Every frame is one header line plus, for the batched frames
+//! (`BATCH`, `DECISIONS`, `SUBSCRIBE`, `TABLEUPDATE`), exactly the
+//! item-line count the header declares. [`Frame::encode`] produces the
+//! canonical byte form; [`Frame::read_from`] parses exactly one frame
+//! off a [`BufRead`] and is total: malformed, truncated, or oversized
+//! input returns a structured [`FrameError`] — never a panic, never an
+//! unbounded allocation (lines are capped at [`MAX_LINE_BYTES`], item
+//! counts at [`MAX_BATCH_ITEMS`]; the property suite fuzzes both).
+//!
+//! ## Concurrency contract
+//!
+//! This module is pure data: no statics, no interior mutability, no
+//! locks. Encoding and decoding are plain value transformations, safe
+//! from any thread. Framing state (partial reads) lives entirely in
+//! the caller's `BufRead`, so one reader must own one stream — the
+//! server gives each connection a dedicated reader thread, and
+//! [`super::client::NetClient`] serializes its reader behind a mutex.
+
+use std::fmt;
+use std::io::BufRead;
+
+use crate::collectives::Strategy;
+use crate::tuner::{Decision, Op};
+
+/// The one protocol revision this build speaks. `HELLO`/`WELCOME`
+/// negotiate on exact equality; see `docs/PROTOCOL.md` §2.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one frame line, including the terminating newline.
+/// A line that exceeds this is rejected before it is buffered whole.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Hard cap on the item count a batched frame may declare.
+pub const MAX_BATCH_ITEMS: usize = 4096;
+
+/// Stable machine-readable error codes carried by `ERROR`, `NACK`,
+/// and per-query `E` items (`docs/PROTOCOL.md` §7).
+pub mod codes {
+    /// Version negotiation failed.
+    pub const VERSION: &str = "version";
+    /// Syntactically invalid frame; the connection is closed.
+    pub const MALFORMED: &str = "malformed";
+    /// A line or item count exceeded its hard cap.
+    pub const TOO_LARGE: &str = "too-large";
+    /// The named cluster is not in the coordinator's registry.
+    pub const UNREGISTERED: &str = "unregistered";
+    /// The frame is valid but this server refuses it (e.g. remote
+    /// shutdown not enabled).
+    pub const UNSUPPORTED: &str = "unsupported";
+    /// A decision was computed from a snapshot older than an
+    /// acknowledged `INVALIDATE` (client-side detection; servers never
+    /// emit this).
+    pub const STALE: &str = "stale";
+}
+
+/// One `(op, cluster, P, m)` question inside a `BATCH`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Query {
+    pub op: Op,
+    pub cluster: String,
+    pub p: usize,
+    pub m: u64,
+}
+
+/// One `(op, P, m)` grid point of a subscription (the cluster is named
+/// once in the `SUBSCRIBE` header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Point {
+    pub op: Op,
+    pub p: usize,
+    pub m: u64,
+}
+
+/// One per-query outcome inside a `DECISIONS` frame: a decision (`D`
+/// item) or a structured error (`E` item) — a batch can partially
+/// succeed without failing the connection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryReply {
+    Decision(Decision),
+    Error { code: String, message: String },
+}
+
+/// Every `ct/1` frame. Client-originated: `Hello`, `Ping`, `Batch`,
+/// `Subscribe`, `Shutdown`, `Bye`. Server-originated: `Welcome`,
+/// `Pong`, `Decisions`, `Subscribed`, `Nack`, `Error`, `Bye`, and the
+/// pushes `Invalidate` / `TableUpdate`. The codec itself is
+/// direction-agnostic; direction rules are enforced by the endpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello { version: u32 },
+    Welcome { version: u32, banner: String },
+    Ping { id: u64 },
+    Pong { id: u64, epoch: u64 },
+    Batch { id: u64, queries: Vec<Query> },
+    Decisions { id: u64, epoch: u64, replies: Vec<QueryReply> },
+    Subscribe { id: u64, cluster: String, points: Vec<Point> },
+    Subscribed { id: u64, cluster: String, signature: String, epoch: u64 },
+    /// Request-level refusal, keyed by the request's `id`.
+    Nack { id: u64, code: String, message: String },
+    /// Push: the cluster's resident tables were dropped; decisions
+    /// carrying an epoch `< epoch` are stale (`docs/PROTOCOL.md` §6).
+    Invalidate { seq: u64, epoch: u64, cluster: String },
+    /// Push: fresh decisions for every subscribed point.
+    TableUpdate { seq: u64, epoch: u64, cluster: String, rows: Vec<(Point, Decision)> },
+    /// Connection-level fatal error; the sender closes after this.
+    Error { code: String, message: String },
+    Shutdown,
+    Bye,
+}
+
+/// A structured decode failure: a stable [`codes`] value plus a
+/// human-readable message. Servers echo it back as an `ERROR` frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl FrameError {
+    fn malformed(message: impl Into<String>) -> FrameError {
+        FrameError { code: codes::MALFORMED, message: message.into() }
+    }
+
+    fn too_large(message: impl Into<String>) -> FrameError {
+        FrameError { code: codes::TOO_LARGE, message: message.into() }
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// TAB and newline are field/frame delimiters; strings carried in
+/// frames must not contain them. Encoding replaces offenders with a
+/// space rather than producing an unparseable wire (the strict decoder
+/// would reject it and kill the connection over a log message).
+fn sanitize(s: &str) -> String {
+    if s.bytes().any(|b| b == b'\t' || b == b'\n' || b == b'\r') {
+        s.replace(['\t', '\n', '\r'], " ")
+    } else {
+        s.to_string()
+    }
+}
+
+fn push_decision(out: &mut String, d: &Decision) {
+    out.push_str(d.strategy.name());
+    out.push('\t');
+    match d.segment {
+        Some(s) => out.push_str(&s.to_string()),
+        None => out.push('-'),
+    }
+    out.push('\t');
+    // Shortest-roundtrip float formatting: re-encoding a decoded frame
+    // reproduces the bytes exactly (the round-trip property test).
+    out.push_str(&format!("{}", d.predicted));
+}
+
+impl Frame {
+    /// Canonical wire bytes: header line plus declared item lines,
+    /// every line newline-terminated.
+    pub fn encode(&self) -> String {
+        let mut s = String::new();
+        match self {
+            Frame::Hello { version } => {
+                s.push_str(&format!("HELLO\tct\t{version}\n"));
+            }
+            Frame::Welcome { version, banner } => {
+                s.push_str(&format!("WELCOME\tct\t{version}\t{}\n", sanitize(banner)));
+            }
+            Frame::Ping { id } => s.push_str(&format!("PING\t{id}\n")),
+            Frame::Pong { id, epoch } => s.push_str(&format!("PONG\t{id}\t{epoch}\n")),
+            Frame::Batch { id, queries } => {
+                s.push_str(&format!("BATCH\t{id}\t{}\n", queries.len()));
+                for q in queries {
+                    s.push_str(&format!(
+                        "Q\t{}\t{}\t{}\t{}\n",
+                        q.op.name(),
+                        sanitize(&q.cluster),
+                        q.p,
+                        q.m
+                    ));
+                }
+            }
+            Frame::Decisions { id, epoch, replies } => {
+                s.push_str(&format!("DECISIONS\t{id}\t{epoch}\t{}\n", replies.len()));
+                for r in replies {
+                    match r {
+                        QueryReply::Decision(d) => {
+                            s.push_str("D\t");
+                            push_decision(&mut s, d);
+                            s.push('\n');
+                        }
+                        QueryReply::Error { code, message } => {
+                            s.push_str(&format!(
+                                "E\t{}\t{}\n",
+                                sanitize(code),
+                                sanitize(message)
+                            ));
+                        }
+                    }
+                }
+            }
+            Frame::Subscribe { id, cluster, points } => {
+                s.push_str(&format!(
+                    "SUBSCRIBE\t{id}\t{}\t{}\n",
+                    sanitize(cluster),
+                    points.len()
+                ));
+                for p in points {
+                    s.push_str(&format!("P\t{}\t{}\t{}\n", p.op.name(), p.p, p.m));
+                }
+            }
+            Frame::Subscribed { id, cluster, signature, epoch } => {
+                s.push_str(&format!(
+                    "SUBSCRIBED\t{id}\t{}\t{}\t{epoch}\n",
+                    sanitize(cluster),
+                    sanitize(signature)
+                ));
+            }
+            Frame::Nack { id, code, message } => {
+                s.push_str(&format!(
+                    "NACK\t{id}\t{}\t{}\n",
+                    sanitize(code),
+                    sanitize(message)
+                ));
+            }
+            Frame::Invalidate { seq, epoch, cluster } => {
+                s.push_str(&format!("INVALIDATE\t{seq}\t{epoch}\t{}\n", sanitize(cluster)));
+            }
+            Frame::TableUpdate { seq, epoch, cluster, rows } => {
+                s.push_str(&format!(
+                    "TABLEUPDATE\t{seq}\t{epoch}\t{}\t{}\n",
+                    sanitize(cluster),
+                    rows.len()
+                ));
+                for (p, d) in rows {
+                    s.push_str(&format!("U\t{}\t{}\t{}\t", p.op.name(), p.p, p.m));
+                    push_decision(&mut s, d);
+                    s.push('\n');
+                }
+            }
+            Frame::Error { code, message } => {
+                s.push_str(&format!("ERROR\t{}\t{}\n", sanitize(code), sanitize(message)));
+            }
+            Frame::Shutdown => s.push_str("SHUTDOWN\n"),
+            Frame::Bye => s.push_str("BYE\n"),
+        }
+        s
+    }
+
+    /// Read exactly one frame. `Ok(None)` is a clean EOF *between*
+    /// frames; EOF inside a frame (missing newline, missing item lines)
+    /// is a [`FrameError`]. Never panics on any input byte sequence.
+    pub fn read_from(r: &mut impl BufRead) -> Result<Option<Frame>, FrameError> {
+        let header = match read_line(r)? {
+            Some(h) => h,
+            None => return Ok(None),
+        };
+        let f: Vec<&str> = header.split('\t').collect();
+        let frame = match f[0] {
+            "HELLO" => {
+                expect_fields(&f, 3)?;
+                expect_proto(f[1])?;
+                Frame::Hello { version: parse_u32(f[2], "version")? }
+            }
+            "WELCOME" => {
+                expect_fields(&f, 4)?;
+                expect_proto(f[1])?;
+                Frame::Welcome {
+                    version: parse_u32(f[2], "version")?,
+                    banner: f[3].to_string(),
+                }
+            }
+            "PING" => {
+                expect_fields(&f, 2)?;
+                Frame::Ping { id: parse_u64(f[1], "id")? }
+            }
+            "PONG" => {
+                expect_fields(&f, 3)?;
+                Frame::Pong { id: parse_u64(f[1], "id")?, epoch: parse_u64(f[2], "epoch")? }
+            }
+            "BATCH" => {
+                expect_fields(&f, 3)?;
+                let id = parse_u64(f[1], "id")?;
+                let n = parse_count(f[2])?;
+                let mut queries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let item = read_item(r, "Q")?;
+                    let g: Vec<&str> = item.split('\t').collect();
+                    expect_fields(&g, 5)?;
+                    queries.push(Query {
+                        op: parse_op(g[1])?,
+                        cluster: parse_cluster(g[2])?,
+                        p: parse_usize(g[3], "p")?,
+                        m: parse_u64(g[4], "m")?,
+                    });
+                }
+                Frame::Batch { id, queries }
+            }
+            "DECISIONS" => {
+                expect_fields(&f, 4)?;
+                let id = parse_u64(f[1], "id")?;
+                let epoch = parse_u64(f[2], "epoch")?;
+                let n = parse_count(f[3])?;
+                let mut replies = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let item = match read_line(r)? {
+                        Some(l) => l,
+                        None => return Err(FrameError::malformed("truncated frame: missing item")),
+                    };
+                    let g: Vec<&str> = item.split('\t').collect();
+                    match g[0] {
+                        "D" => {
+                            expect_fields(&g, 4)?;
+                            replies.push(QueryReply::Decision(parse_decision(g[1], g[2], g[3])?));
+                        }
+                        "E" => {
+                            expect_fields(&g, 3)?;
+                            replies.push(QueryReply::Error {
+                                code: g[1].to_string(),
+                                message: g[2].to_string(),
+                            });
+                        }
+                        other => {
+                            return Err(FrameError::malformed(format!(
+                                "expected 'D' or 'E' item line, got '{other}'"
+                            )))
+                        }
+                    }
+                }
+                Frame::Decisions { id, epoch, replies }
+            }
+            "SUBSCRIBE" => {
+                expect_fields(&f, 4)?;
+                let id = parse_u64(f[1], "id")?;
+                let cluster = parse_cluster(f[2])?;
+                let n = parse_count(f[3])?;
+                let mut points = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let item = read_item(r, "P")?;
+                    let g: Vec<&str> = item.split('\t').collect();
+                    expect_fields(&g, 4)?;
+                    points.push(Point {
+                        op: parse_op(g[1])?,
+                        p: parse_usize(g[2], "p")?,
+                        m: parse_u64(g[3], "m")?,
+                    });
+                }
+                Frame::Subscribe { id, cluster, points }
+            }
+            "SUBSCRIBED" => {
+                expect_fields(&f, 5)?;
+                Frame::Subscribed {
+                    id: parse_u64(f[1], "id")?,
+                    cluster: parse_cluster(f[2])?,
+                    signature: f[3].to_string(),
+                    epoch: parse_u64(f[4], "epoch")?,
+                }
+            }
+            "NACK" => {
+                expect_fields(&f, 4)?;
+                Frame::Nack {
+                    id: parse_u64(f[1], "id")?,
+                    code: f[2].to_string(),
+                    message: f[3].to_string(),
+                }
+            }
+            "INVALIDATE" => {
+                expect_fields(&f, 4)?;
+                Frame::Invalidate {
+                    seq: parse_u64(f[1], "seq")?,
+                    epoch: parse_u64(f[2], "epoch")?,
+                    cluster: parse_cluster(f[3])?,
+                }
+            }
+            "TABLEUPDATE" => {
+                expect_fields(&f, 5)?;
+                let seq = parse_u64(f[1], "seq")?;
+                let epoch = parse_u64(f[2], "epoch")?;
+                let cluster = parse_cluster(f[3])?;
+                let n = parse_count(f[4])?;
+                let mut rows = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let item = read_item(r, "U")?;
+                    let g: Vec<&str> = item.split('\t').collect();
+                    expect_fields(&g, 7)?;
+                    let point = Point {
+                        op: parse_op(g[1])?,
+                        p: parse_usize(g[2], "p")?,
+                        m: parse_u64(g[3], "m")?,
+                    };
+                    rows.push((point, parse_decision(g[4], g[5], g[6])?));
+                }
+                Frame::TableUpdate { seq, epoch, cluster, rows }
+            }
+            "ERROR" => {
+                expect_fields(&f, 3)?;
+                Frame::Error { code: f[1].to_string(), message: f[2].to_string() }
+            }
+            "SHUTDOWN" => {
+                expect_fields(&f, 1)?;
+                Frame::Shutdown
+            }
+            "BYE" => {
+                expect_fields(&f, 1)?;
+                Frame::Bye
+            }
+            other => {
+                return Err(FrameError::malformed(format!("unknown frame '{other}'")));
+            }
+        };
+        Ok(Some(frame))
+    }
+}
+
+impl Frame {
+    /// Decode a string that must contain exactly one frame (tests and
+    /// tooling; endpoints use [`Frame::read_from`] on the live stream).
+    pub fn decode(text: &str) -> Result<Frame, FrameError> {
+        let mut cur = std::io::Cursor::new(text.as_bytes());
+        let frame = Frame::read_from(&mut cur)?
+            .ok_or_else(|| FrameError::malformed("empty input"))?;
+        if (cur.position() as usize) < text.len() {
+            return Err(FrameError::malformed("trailing bytes after frame"));
+        }
+        Ok(frame)
+    }
+}
+
+/// One capped line, without its newline. `Ok(None)` on immediate EOF;
+/// EOF before the newline, a line over [`MAX_LINE_BYTES`], or invalid
+/// UTF-8 are errors.
+fn read_line(r: &mut impl BufRead) -> Result<Option<String>, FrameError> {
+    let mut buf = Vec::new();
+    let n = r
+        .take((MAX_LINE_BYTES + 1) as u64)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| FrameError::malformed(format!("read failed: {e}")))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > MAX_LINE_BYTES {
+        return Err(FrameError::too_large(format!("line exceeds {MAX_LINE_BYTES} bytes")));
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(FrameError::malformed("truncated frame: missing newline"));
+    }
+    buf.pop();
+    String::from_utf8(buf).map(Some).map_err(|_| FrameError::malformed("invalid UTF-8"))
+}
+
+/// One item line that must carry the given tag.
+fn read_item(r: &mut impl BufRead, tag: &str) -> Result<String, FrameError> {
+    match read_line(r)? {
+        Some(l) if l.split('\t').next() == Some(tag) => Ok(l),
+        Some(l) => Err(FrameError::malformed(format!(
+            "expected '{tag}' item line, got '{}'",
+            l.split('\t').next().unwrap_or("")
+        ))),
+        None => Err(FrameError::malformed("truncated frame: missing item line")),
+    }
+}
+
+fn expect_fields(f: &[&str], want: usize) -> Result<(), FrameError> {
+    if f.len() != want {
+        return Err(FrameError::malformed(format!(
+            "'{}': expected {want} fields, got {}",
+            f[0],
+            f.len()
+        )));
+    }
+    Ok(())
+}
+
+fn expect_proto(name: &str) -> Result<(), FrameError> {
+    if name != "ct" {
+        return Err(FrameError::malformed(format!("unknown protocol '{name}'")));
+    }
+    Ok(())
+}
+
+fn parse_u64(s: &str, what: &str) -> Result<u64, FrameError> {
+    s.parse().map_err(|_| FrameError::malformed(format!("bad {what} '{s}'")))
+}
+
+fn parse_u32(s: &str, what: &str) -> Result<u32, FrameError> {
+    s.parse().map_err(|_| FrameError::malformed(format!("bad {what} '{s}'")))
+}
+
+fn parse_usize(s: &str, what: &str) -> Result<usize, FrameError> {
+    s.parse().map_err(|_| FrameError::malformed(format!("bad {what} '{s}'")))
+}
+
+fn parse_count(s: &str) -> Result<usize, FrameError> {
+    let n = parse_usize(s, "item count")?;
+    if n > MAX_BATCH_ITEMS {
+        return Err(FrameError::too_large(format!(
+            "item count {n} exceeds the {MAX_BATCH_ITEMS} cap"
+        )));
+    }
+    Ok(n)
+}
+
+fn parse_op(s: &str) -> Result<Op, FrameError> {
+    Op::from_name(s).ok_or_else(|| FrameError::malformed(format!("unknown op '{s}'")))
+}
+
+fn parse_cluster(s: &str) -> Result<String, FrameError> {
+    if s.is_empty() {
+        return Err(FrameError::malformed("empty cluster name"));
+    }
+    Ok(s.to_string())
+}
+
+fn parse_decision(strategy: &str, segment: &str, predicted: &str) -> Result<Decision, FrameError> {
+    let strategy = Strategy::from_name(strategy)
+        .ok_or_else(|| FrameError::malformed(format!("unknown strategy '{strategy}'")))?;
+    let segment = match segment {
+        "-" => None,
+        s => Some(parse_u64(s, "segment")?),
+    };
+    let predicted: f64 = predicted
+        .parse()
+        .map_err(|_| FrameError::malformed(format!("bad predicted time '{predicted}'")))?;
+    Ok(Decision { strategy, segment, predicted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_line_frames_roundtrip() {
+        for f in [
+            Frame::Hello { version: 1 },
+            Frame::Welcome { version: 1, banner: "coordd test".into() },
+            Frame::Ping { id: 7 },
+            Frame::Pong { id: 7, epoch: 42 },
+            Frame::Subscribed {
+                id: 3,
+                cluster: "fe-0".into(),
+                signature: "sig-p12-o127-l-170-g-203".into(),
+                epoch: 9,
+            },
+            Frame::Nack { id: 4, code: "unregistered".into(), message: "no such cluster".into() },
+            Frame::Invalidate { seq: 1, epoch: 12, cluster: "ge-1".into() },
+            Frame::Error { code: "malformed".into(), message: "what".into() },
+            Frame::Shutdown,
+            Frame::Bye,
+        ] {
+            let enc = f.encode();
+            assert_eq!(Frame::decode(&enc).unwrap(), f, "{enc:?}");
+            assert_eq!(Frame::decode(&enc).unwrap().encode(), enc, "byte-identical");
+        }
+    }
+
+    #[test]
+    fn batched_frames_roundtrip() {
+        let d = Decision {
+            strategy: Strategy::BcastSegChain,
+            segment: Some(4096),
+            predicted: 1.5e-3,
+        };
+        let d2 = Decision { strategy: Strategy::ScatterFlat, segment: None, predicted: 0.25 };
+        let p = Point { op: Op::Bcast, p: 12, m: 65536 };
+        for f in [
+            Frame::Batch {
+                id: 10,
+                queries: vec![
+                    Query { op: Op::Bcast, cluster: "fe-0".into(), p: 12, m: 1 << 20 },
+                    Query { op: Op::AllReduce, cluster: "ge-0".into(), p: 8, m: 1 },
+                ],
+            },
+            Frame::Batch { id: 11, queries: vec![] },
+            Frame::Decisions {
+                id: 10,
+                epoch: 5,
+                replies: vec![
+                    QueryReply::Decision(d),
+                    QueryReply::Error { code: "unregistered".into(), message: "nope".into() },
+                ],
+            },
+            Frame::Subscribe { id: 2, cluster: "fe-0".into(), points: vec![p] },
+            Frame::TableUpdate {
+                seq: 3,
+                epoch: 8,
+                cluster: "fe-0".into(),
+                rows: vec![(p, d), (Point { op: Op::Gather, p: 4, m: 64 }, d2)],
+            },
+        ] {
+            let enc = f.encode();
+            assert_eq!(Frame::decode(&enc).unwrap(), f, "{enc:?}");
+            assert_eq!(Frame::decode(&enc).unwrap().encode(), enc, "byte-identical");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_without_panicking() {
+        for bad in [
+            "",
+            "NOPE\n",
+            "HELLO\tct\n",
+            "HELLO\tmq\t1\n",
+            "HELLO\tct\tx\n",
+            "PING\t1", // no newline
+            "BATCH\t1\t2\nQ\tbcast\ta\t2\t4\n", // declares 2 items, has 1
+            "BATCH\t1\t1\nP\tbcast\t2\t4\n",    // wrong item tag
+            "BATCH\t1\t1\nQ\twarp\ta\t2\t4\n",  // unknown op
+            "BATCH\t1\t1\nQ\tbcast\t\t2\t4\n",  // empty cluster
+            "BATCH\t1\t99999\n",                // count over cap
+            "DECISIONS\t1\t0\t1\nD\tbcast/flat\t-\tnope\n",
+            "DECISIONS\t1\t0\t1\nD\twarp/flat\t-\t1.0\n",
+            "HELLO\tct\t1\nBYE\n", // trailing bytes after frame (decode)
+        ] {
+            assert!(Frame::decode(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_not_buffered() {
+        let huge = format!("ERROR\tx\t{}\n", "y".repeat(MAX_LINE_BYTES));
+        let err = Frame::decode(&huge).unwrap_err();
+        assert_eq!(err.code, codes::TOO_LARGE);
+    }
+
+    #[test]
+    fn every_strict_prefix_of_a_frame_is_rejected() {
+        let f = Frame::TableUpdate {
+            seq: 3,
+            epoch: 8,
+            cluster: "fe-0".into(),
+            rows: vec![(
+                Point { op: Op::Bcast, p: 12, m: 65536 },
+                Decision { strategy: Strategy::BcastChain, segment: None, predicted: 2.5e-4 },
+            )],
+        };
+        let enc = f.encode();
+        for k in 1..enc.len() {
+            assert!(Frame::decode(&enc[..k]).is_err(), "prefix {k} of {enc:?}");
+        }
+    }
+
+    #[test]
+    fn sanitizer_keeps_delimiters_out_of_encoded_frames() {
+        let f = Frame::Error { code: "malformed".into(), message: "tab\there\nand newline".into() };
+        let enc = f.encode();
+        let reparsed = Frame::decode(&enc).unwrap();
+        match reparsed {
+            Frame::Error { message, .. } => assert_eq!(message, "tab here and newline"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

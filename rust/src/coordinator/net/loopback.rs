@@ -1,0 +1,247 @@
+//! In-process loopback transport: the same `ct/1` request loop as the
+//! TCP server, but over a pair of in-memory byte pipes — no socket, no
+//! port, no OS nondeterminism. This is the protocol's test harness
+//! (the end-to-end storm test and the in-process half of the
+//! unregistered-cluster regression both run on it) and a zero-syscall
+//! way to embed the server in another process.
+//!
+//! ## Concurrency contract
+//!
+//! * [`pipe`] is a single-producer, single-consumer byte stream: one
+//!   [`PipeWriter`], one [`PipeReader`], backed by a mutex + condvar
+//!   ring. `Write` never blocks (the buffer is unbounded); `Read`
+//!   blocks until bytes arrive or every writer is dropped (then EOF).
+//!   Dropping the reader makes subsequent writes fail with
+//!   `BrokenPipe`, which is how a server connection thread learns its
+//!   client went away.
+//! * [`LoopbackServer::connect`] spawns one server-side thread per
+//!   client, running [`super::server::serve_connection`] verbatim —
+//!   the loopback and TCP transports cannot diverge in behavior
+//!   because they share every line of the request loop.
+//! * Connection threads are detached; they exit when their client is
+//!   dropped (pipe EOF). [`LoopbackServer::shutdown`] (or `Drop`)
+//!   stops and joins only the notifier thread, so drop clients first
+//!   if you need every byte flushed.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::obs;
+
+use super::super::service::Coordinator;
+use super::client::NetClient;
+use super::server::{serve_connection, ConnContext, ConnShared, ServerOptions, SubscriptionHub};
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    /// Writer dropped → reader sees EOF after draining.
+    write_closed: bool,
+    /// Reader dropped → writes fail with `BrokenPipe`.
+    read_closed: bool,
+}
+
+struct PipeInner {
+    state: Mutex<PipeState>,
+    ready: Condvar,
+}
+
+/// Write half of an in-memory pipe. Cheap unbounded writes; see the
+/// module docs for the close semantics.
+pub struct PipeWriter(Arc<PipeInner>);
+
+/// Read half of an in-memory pipe. Blocking reads, EOF when the write
+/// half is gone.
+pub struct PipeReader(Arc<PipeInner>);
+
+/// A fresh SPSC byte pipe.
+pub fn pipe() -> (PipeWriter, PipeReader) {
+    let inner = Arc::new(PipeInner {
+        state: Mutex::new(PipeState {
+            buf: VecDeque::new(),
+            write_closed: false,
+            read_closed: false,
+        }),
+        ready: Condvar::new(),
+    });
+    (PipeWriter(Arc::clone(&inner)), PipeReader(inner))
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        let mut st = self.0.state.lock().unwrap();
+        if st.read_closed {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "pipe reader dropped",
+            ));
+        }
+        st.buf.extend(data);
+        self.0.ready.notify_all();
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        self.0.state.lock().unwrap().write_closed = true;
+        self.0.ready.notify_all();
+    }
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.0.state.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                let n = out.len().min(st.buf.len());
+                for slot in out.iter_mut().take(n) {
+                    *slot = st.buf.pop_front().expect("len checked");
+                }
+                return Ok(n);
+            }
+            if st.write_closed {
+                return Ok(0); // EOF
+            }
+            st = self.0.ready.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for PipeReader {
+    fn drop(&mut self) {
+        self.0.state.lock().unwrap().read_closed = true;
+        self.0.ready.notify_all();
+    }
+}
+
+/// An in-process `ct/1` server: same coordinator, same hub, same
+/// request loop as [`super::server::CoordServer`], minus the TCP
+/// accept loop.
+pub struct LoopbackServer {
+    ctx: Arc<ConnContext>,
+    stop: Arc<AtomicBool>,
+    notifier: Option<JoinHandle<()>>,
+    next_conn: std::sync::atomic::AtomicU64,
+}
+
+impl LoopbackServer {
+    /// Start a loopback server over `coord` with default options.
+    pub fn start(coord: Arc<Coordinator>) -> LoopbackServer {
+        let opts = ServerOptions {
+            banner: "collective-tuner loopback".to_string(),
+            ..ServerOptions::default()
+        };
+        LoopbackServer::start_with(coord, opts)
+    }
+
+    pub fn start_with(coord: Arc<Coordinator>, opts: ServerOptions) -> LoopbackServer {
+        let hub = Arc::new(SubscriptionHub::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let events = coord.watch_publishes();
+        let notifier = {
+            let coord = Arc::clone(&coord);
+            let hub = Arc::clone(&hub);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                super::server::notifier_loop(&coord, &hub, &events, &stop)
+            })
+        };
+        let ctx = Arc::new(ConnContext {
+            coord,
+            hub,
+            opts,
+            shutdown_requested: Arc::new(AtomicBool::new(false)),
+        });
+        LoopbackServer {
+            ctx,
+            stop,
+            notifier: Some(notifier),
+            next_conn: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Open one in-process connection: spawns the server-side thread
+    /// and returns a fully handshaken client.
+    pub fn connect(&self) -> Result<NetClient> {
+        let (c2s_w, c2s_r) = pipe();
+        let (s2c_w, s2c_r) = pipe();
+        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(ConnShared::new(Box::new(s2c_w), format!("loopback-{id}")));
+        if obs::enabled() {
+            obs::registry().counter("net.connections").inc();
+        }
+        let ctx = Arc::clone(&self.ctx);
+        std::thread::spawn(move || {
+            serve_connection(&ctx, std::io::BufReader::new(c2s_r), shared);
+        });
+        NetClient::from_transport(Box::new(s2c_r), Box::new(c2s_w))
+    }
+
+    /// Stop and join the notifier. Connection threads exit on their
+    /// own when their clients are dropped.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.notifier.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LoopbackServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipe_delivers_bytes_in_order_and_eofs_on_writer_drop() {
+        let (mut w, mut r) = pipe();
+        w.write_all(b"hello ").unwrap();
+        w.write_all(b"world").unwrap();
+        drop(w);
+        let mut out = String::new();
+        r.read_to_string(&mut out).unwrap();
+        assert_eq!(out, "hello world");
+    }
+
+    #[test]
+    fn pipe_write_fails_after_reader_drop() {
+        let (mut w, r) = pipe();
+        drop(r);
+        let err = w.write_all(b"x").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn pipe_read_blocks_until_data_arrives() {
+        let (mut w, mut r) = pipe();
+        let t = std::thread::spawn(move || {
+            let mut buf = [0u8; 4];
+            r.read_exact(&mut buf).unwrap();
+            buf
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        w.write_all(b"ping").unwrap();
+        assert_eq!(&t.join().unwrap(), b"ping");
+    }
+}

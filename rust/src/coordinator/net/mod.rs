@@ -1,0 +1,40 @@
+//! The coordinator over the wire: a zero-dependency, line-delimited
+//! TSV-over-TCP protocol (`ct/1`) that puts a network front-end on the
+//! L3 decision service — the paper's "tune once, serve many" premise
+//! at the scale where clients are other processes and other hosts, not
+//! threads.
+//!
+//! Three pieces share one protocol implementation:
+//!
+//! * [`frame`] — the versioned frame codec (`HELLO`, batched
+//!   `BATCH`/`DECISIONS`, `SUBSCRIBE`, and the server-initiated
+//!   `INVALIDATE`/`TABLEUPDATE` pushes). The normative spec is
+//!   `docs/PROTOCOL.md`; the codec is total (malformed, truncated, or
+//!   oversized input is a structured error, never a panic).
+//! * [`server`] — [`CoordServer`], the `coordd` TCP server:
+//!   thread-per-connection over `std::net`, a notifier thread that
+//!   turns [`Coordinator::watch_publishes`] events into pushes, and
+//!   graceful shutdown. The drift refresher re-publishing a snapshot
+//!   is what subscribed clients observe as `TABLEUPDATE`.
+//! * [`client`] — [`NetClient`], the remote warm-read surface
+//!   (`decision`, `query_batch`, `subscribe`), enforcing the
+//!   epoch-based invalidation-ordering guarantee client-side.
+//! * [`loopback`] — the same request loop over in-memory pipes: the
+//!   protocol's test harness and an embedded, socket-free transport.
+//!
+//! Per-file module docs state each piece's concurrency contract (the
+//! same way `util/arcswap.rs` documents its guarantees and hazards).
+//!
+//! [`Coordinator::watch_publishes`]: super::service::Coordinator::watch_publishes
+
+pub mod client;
+pub mod frame;
+pub mod loopback;
+pub mod server;
+
+pub use client::{NetClient, Push, RemoteError};
+pub use frame::{
+    Frame, FrameError, Point, Query, QueryReply, MAX_BATCH_ITEMS, MAX_LINE_BYTES, PROTOCOL_VERSION,
+};
+pub use loopback::LoopbackServer;
+pub use server::{CoordServer, ServerOptions};

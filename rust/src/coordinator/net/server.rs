@@ -1,0 +1,569 @@
+//! The coordinator's network front-end: a thread-per-connection
+//! `ct/1` server over `std::net`, the subscription hub, and the push
+//! notifier that turns [`Coordinator::watch_publishes`] events into
+//! `INVALIDATE` / `TABLEUPDATE` frames.
+//!
+//! [`serve_connection`] is transport-agnostic (it takes any `BufRead`
+//! plus a [`ConnShared`] writer), so the TCP server and the loopback
+//! test harness ([`super::loopback`]) run byte-for-byte the same
+//! request loop.
+//!
+//! ## Concurrency contract
+//!
+//! * **One reader thread per connection.** Only the connection's own
+//!   thread reads its stream; framing state never needs a lock.
+//! * **Writes are serialized per connection.** Both the request loop
+//!   (responses) and the notifier (pushes) write through
+//!   [`ConnShared::send`], which holds the connection's writer mutex
+//!   for exactly one whole frame — frames interleave, bytes never do.
+//! * **The notifier never tunes.** It recomputes subscriber decisions
+//!   through [`Coordinator::warm_decision`] (lock-free snapshot reads
+//!   only), so a slow tuner run can never stall push delivery; a
+//!   subscription whose tables went non-resident gets an `INVALIDATE`
+//!   instead.
+//! * **Push ordering is by epoch, not arrival.** Every push carries the
+//!   publish epoch it was derived from; the protocol's ordering
+//!   guarantee (docs/PROTOCOL.md §6) is stated in those epochs, which
+//!   is what makes the per-connection writer mutex sufficient — no
+//!   global ordering across connections is needed.
+//! * **Shutdown is graceful.** [`CoordServer::shutdown`] stops the
+//!   accept loop, shuts every live socket down (unblocking its reader
+//!   thread), and joins every thread before returning; per-connection
+//!   obs counters are final when it returns.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::obs::{self, Span};
+
+use super::super::service::{Coordinator, PublishEvent, PublishKind};
+use super::super::signature::ClusterSignature;
+use super::frame::{codes, Frame, Point, QueryReply, MAX_BATCH_ITEMS, PROTOCOL_VERSION};
+
+/// Server-side tunables shared by the TCP and loopback front-ends.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Free-text server identification echoed in `WELCOME`.
+    pub banner: String,
+    /// Honor the `SHUTDOWN` frame (off by default: a remote kill switch
+    /// is opt-in, e.g. for the CI socket smoke).
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            banner: "collective-tuner coordd".to_string(),
+            allow_remote_shutdown: false,
+        }
+    }
+}
+
+/// The write half of one connection, shared between its reader thread
+/// (responses) and the notifier (pushes). See the module docs for the
+/// locking contract.
+pub(crate) struct ConnShared {
+    writer: Mutex<Box<dyn Write + Send>>,
+    /// Per-connection push sequence number.
+    seq: AtomicU64,
+    /// Cleared when the reader thread exits or a write fails; the hub
+    /// prunes dead connections on the next notification.
+    alive: AtomicBool,
+    peer: String,
+}
+
+impl ConnShared {
+    pub(crate) fn new(writer: Box<dyn Write + Send>, peer: String) -> ConnShared {
+        ConnShared {
+            writer: Mutex::new(writer),
+            seq: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+            peer,
+        }
+    }
+
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Write one whole frame under the writer mutex and flush. On
+    /// failure the connection is marked dead (the reader thread and the
+    /// hub both observe that).
+    fn send(&self, frame: &Frame) -> std::io::Result<()> {
+        let bytes = frame.encode();
+        let mut w = self.writer.lock().unwrap();
+        let r = w.write_all(bytes.as_bytes()).and_then(|()| w.flush());
+        drop(w);
+        if r.is_err() {
+            self.alive.store(false, Ordering::Relaxed);
+        } else if obs::enabled() {
+            obs::registry().counter("net.frames_tx").inc();
+        }
+        r
+    }
+}
+
+/// One live subscription: which cluster, which grid points, and where
+/// to push. `last_sig` tracks the signature the subscriber last got
+/// tables for, so a refresh that retires the old signature right after
+/// publishing the new one does not produce a spurious `INVALIDATE`.
+struct SubEntry {
+    cluster: String,
+    points: Vec<Point>,
+    last_sig: ClusterSignature,
+    conn: Arc<ConnShared>,
+}
+
+/// All subscriptions of one server instance. Locked briefly by the
+/// request loop (add/remove) and the notifier (iterate); never held
+/// across a tuner run, and held across `send` only on the notifier
+/// thread — the request loop cannot deadlock against it.
+#[derive(Default)]
+pub(crate) struct SubscriptionHub {
+    subs: Mutex<Vec<SubEntry>>,
+}
+
+impl SubscriptionHub {
+    fn add(&self, entry: SubEntry) {
+        self.subs.lock().unwrap().push(entry);
+    }
+
+    fn drop_conn(&self, conn: &Arc<ConnShared>) {
+        self.subs.lock().unwrap().retain(|e| !Arc::ptr_eq(&e.conn, conn));
+    }
+
+    /// Fan one publish event out to the affected subscribers.
+    pub(crate) fn notify(&self, coord: &Coordinator, ev: &PublishEvent) {
+        let mut subs = self.subs.lock().unwrap();
+        subs.retain(|e| e.conn.alive.load(Ordering::Relaxed));
+        for e in subs.iter_mut() {
+            let current = coord.cluster(&e.cluster).map(|rc| rc.signature);
+            let frame = match ev.kind {
+                PublishKind::Updated if current == Some(ev.signature) => {
+                    // Fresh tables for this subscriber's cluster:
+                    // recompute its points from the published snapshot.
+                    let mut rows = Vec::with_capacity(e.points.len());
+                    let mut epoch = u64::MAX;
+                    for pt in &e.points {
+                        match coord.warm_decision(&e.cluster, pt.op, pt.p, pt.m) {
+                            Some((d, ep)) => {
+                                epoch = epoch.min(ep);
+                                rows.push((*pt, d));
+                            }
+                            // Raced with another retirement: the next
+                            // event for that publish handles it.
+                            None => break,
+                        }
+                    }
+                    if rows.len() != e.points.len() {
+                        continue;
+                    }
+                    e.last_sig = ev.signature;
+                    Frame::TableUpdate {
+                        seq: e.conn.next_seq(),
+                        epoch,
+                        cluster: e.cluster.clone(),
+                        rows,
+                    }
+                }
+                PublishKind::Invalidated
+                    if e.last_sig == ev.signature || current == Some(ev.signature) =>
+                {
+                    Frame::Invalidate {
+                        seq: e.conn.next_seq(),
+                        epoch: ev.epoch,
+                        cluster: e.cluster.clone(),
+                    }
+                }
+                _ => continue,
+            };
+            if e.conn.send(&frame).is_ok() && obs::enabled() {
+                obs::registry().counter("net.pushes").inc();
+            }
+        }
+    }
+}
+
+/// What [`serve_connection`] needs besides its streams.
+pub(crate) struct ConnContext {
+    pub coord: Arc<Coordinator>,
+    pub hub: Arc<SubscriptionHub>,
+    pub opts: ServerOptions,
+    /// Set when an authorized `SHUTDOWN` frame arrives; the owning
+    /// server polls it.
+    pub shutdown_requested: Arc<AtomicBool>,
+}
+
+/// The `ct/1` request loop, shared by the TCP server and the loopback
+/// transport: handshake, then serve frames until the peer says `BYE`,
+/// hangs up, or breaks protocol. Always leaves the connection marked
+/// dead and its subscriptions dropped; never panics on peer input.
+pub(crate) fn serve_connection(ctx: &ConnContext, mut reader: impl BufRead, conn: Arc<ConnShared>) {
+    if let Err(e) = run_connection(ctx, &mut reader, &conn) {
+        log::debug!("net: connection {} closed: {e:#}", conn.peer);
+    }
+    conn.alive.store(false, Ordering::Relaxed);
+    ctx.hub.drop_conn(&conn);
+}
+
+fn run_connection(
+    ctx: &ConnContext,
+    reader: &mut impl BufRead,
+    conn: &Arc<ConnShared>,
+) -> Result<()> {
+    // ---- handshake: exactly one HELLO, version must match ------------
+    match read_frame(reader, conn)? {
+        Some(Frame::Hello { version }) if version == PROTOCOL_VERSION => {
+            conn.send(&Frame::Welcome {
+                version: PROTOCOL_VERSION,
+                banner: ctx.opts.banner.clone(),
+            })?;
+        }
+        Some(Frame::Hello { version }) => {
+            let _ = conn.send(&Frame::Error {
+                code: codes::VERSION.to_string(),
+                message: format!("server speaks ct/{PROTOCOL_VERSION}, client sent ct/{version}"),
+            });
+            anyhow::bail!("version mismatch (peer ct/{version})");
+        }
+        Some(other) => {
+            let _ = conn.send(&Frame::Error {
+                code: codes::MALFORMED.to_string(),
+                message: "first frame must be HELLO".to_string(),
+            });
+            anyhow::bail!("handshake violation: {other:?}");
+        }
+        None => return Ok(()), // connected and left without a word
+    }
+
+    // ---- request loop -------------------------------------------------
+    while let Some(frame) = read_frame(reader, conn)? {
+        match frame {
+            Frame::Ping { id } => {
+                conn.send(&Frame::Pong { id, epoch: ctx.coord.epoch() })?;
+            }
+            Frame::Batch { id, queries } => {
+                let _span = Span::start("net.request_ns");
+                let mut epoch = u64::MAX;
+                let mut errors = 0u64;
+                let replies: Vec<QueryReply> = queries
+                    .iter()
+                    .map(|q| match ctx.coord.decision_versioned(q.op, &q.cluster, q.p, q.m) {
+                        Ok((d, ep)) => {
+                            epoch = epoch.min(ep);
+                            QueryReply::Decision(d)
+                        }
+                        Err(e) => {
+                            errors += 1;
+                            QueryReply::Error {
+                                code: codes::UNREGISTERED.to_string(),
+                                message: format!("{e:#}"),
+                            }
+                        }
+                    })
+                    .collect();
+                if obs::enabled() {
+                    let reg = obs::registry();
+                    reg.counter("net.queries").add(replies.len() as u64);
+                    reg.counter("net.query_errors").add(errors);
+                }
+                let epoch = if epoch == u64::MAX { 0 } else { epoch };
+                conn.send(&Frame::Decisions { id, epoch, replies })?;
+            }
+            Frame::Subscribe { id, cluster, points } => {
+                if points.len() > MAX_BATCH_ITEMS {
+                    conn.send(&Frame::Nack {
+                        id,
+                        code: codes::TOO_LARGE.to_string(),
+                        message: format!("at most {MAX_BATCH_ITEMS} points per subscription"),
+                    })?;
+                    continue;
+                }
+                let Some(rc) = ctx.coord.cluster(&cluster) else {
+                    conn.send(&Frame::Nack {
+                        id,
+                        code: codes::UNREGISTERED.to_string(),
+                        message: format!("cluster '{cluster}' is not registered"),
+                    })?;
+                    continue;
+                };
+                // Materialize the initial answers (this may tune — a
+                // subscription is a query-equivalent, unlike the
+                // notifier's warm-only recomputation later).
+                let mut rows = Vec::with_capacity(points.len());
+                let mut epoch = u64::MAX;
+                for pt in &points {
+                    let (d, ep) = ctx
+                        .coord
+                        .decision_versioned(pt.op, &cluster, pt.p, pt.m)
+                        .with_context(|| format!("subscribing to '{cluster}'"))?;
+                    epoch = epoch.min(ep);
+                    rows.push((*pt, d));
+                }
+                let epoch = if epoch == u64::MAX { ctx.coord.epoch() } else { epoch };
+                ctx.hub.add(SubEntry {
+                    cluster: cluster.clone(),
+                    points: points.clone(),
+                    last_sig: rc.signature,
+                    conn: Arc::clone(conn),
+                });
+                if obs::enabled() {
+                    obs::registry().counter("net.subscriptions").inc();
+                }
+                conn.send(&Frame::Subscribed {
+                    id,
+                    cluster: cluster.clone(),
+                    signature: rc.signature.key(),
+                    epoch,
+                })?;
+                // Initial state push so subscribers need no separate
+                // BATCH to seed their cache.
+                conn.send(&Frame::TableUpdate {
+                    seq: conn.next_seq(),
+                    epoch,
+                    cluster,
+                    rows,
+                })?;
+            }
+            Frame::Shutdown => {
+                if ctx.opts.allow_remote_shutdown {
+                    let _ = conn.send(&Frame::Bye);
+                    ctx.shutdown_requested.store(true, Ordering::SeqCst);
+                    return Ok(());
+                }
+                conn.send(&Frame::Error {
+                    code: codes::UNSUPPORTED.to_string(),
+                    message: "remote shutdown is not enabled on this server".to_string(),
+                })?;
+            }
+            Frame::Bye => return Ok(()),
+            other => {
+                // Server-only frames arriving at the server are a
+                // protocol violation; fatal per docs/PROTOCOL.md §7.
+                let _ = conn.send(&Frame::Error {
+                    code: codes::MALFORMED.to_string(),
+                    message: "unexpected server-originated frame".to_string(),
+                });
+                anyhow::bail!("client sent server-only frame {other:?}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame, translating a decode failure into an `ERROR` frame
+/// for the peer before propagating it (fatal to the connection).
+fn read_frame(reader: &mut impl BufRead, conn: &ConnShared) -> Result<Option<Frame>> {
+    match Frame::read_from(reader) {
+        Ok(f) => {
+            if f.is_some() && obs::enabled() {
+                obs::registry().counter("net.frames_rx").inc();
+            }
+            Ok(f)
+        }
+        Err(e) => {
+            let _ = conn.send(&Frame::Error {
+                code: e.code.to_string(),
+                message: e.message.clone(),
+            });
+            Err(e.into())
+        }
+    }
+}
+
+/// One live TCP connection, kept so shutdown can unblock and join it.
+struct LiveConn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    thread: JoinHandle<()>,
+}
+
+/// The `coordd` TCP server: nonblocking accept loop, one thread per
+/// connection, plus the notifier thread that drives pushes off
+/// [`Coordinator::watch_publishes`]. See the module docs for the full
+/// concurrency contract.
+pub struct CoordServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    notifier: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<LiveConn>>>,
+}
+
+impl CoordServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7177`, or port `0` for ephemeral)
+    /// and start serving. Returns once the listener is live;
+    /// [`CoordServer::local_addr`] has the actual port.
+    pub fn start(coord: Arc<Coordinator>, addr: &str, opts: ServerOptions) -> Result<CoordServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let local = listener.local_addr().context("local_addr")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let shutdown_requested = Arc::new(AtomicBool::new(false));
+        let hub = Arc::new(SubscriptionHub::default());
+        let conns: Arc<Mutex<Vec<LiveConn>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // Subscribe to publish events *before* serving any client, so
+        // no event between first-query and notifier-start is lost.
+        let events = coord.watch_publishes();
+        let notifier = {
+            let coord = Arc::clone(&coord);
+            let hub = Arc::clone(&hub);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || notifier_loop(&coord, &hub, &events, &stop))
+        };
+
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let ctx = Arc::new(ConnContext {
+                coord,
+                hub,
+                opts,
+                shutdown_requested: Arc::clone(&shutdown_requested),
+            });
+            std::thread::spawn(move || accept_loop(&listener, &ctx, &conns, &stop))
+        };
+
+        Ok(CoordServer {
+            addr: local,
+            stop,
+            shutdown_requested,
+            accept: Some(accept),
+            notifier: Some(notifier),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether an authorized remote `SHUTDOWN` frame has arrived.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: stop accepting, unblock every connection
+    /// reader by shutting its socket down, join all threads. Idempotent
+    /// via `Drop` (shutdown then drop is fine).
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.stream.shutdown(Shutdown::Both);
+            c.shared.alive.store(false, Ordering::Relaxed);
+            let _ = c.thread.join();
+        }
+        if let Some(h) = self.notifier.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CoordServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Drain [`Coordinator::watch_publishes`] events into hub
+/// notifications until `stop` is raised (checked on a 100 ms timeout)
+/// or the coordinator goes away. Shared with the loopback transport.
+pub(crate) fn notifier_loop(
+    coord: &Coordinator,
+    hub: &SubscriptionHub,
+    events: &mpsc::Receiver<PublishEvent>,
+    stop: &AtomicBool,
+) {
+    loop {
+        match events.recv_timeout(Duration::from_millis(100)) {
+            Ok(ev) => hub.notify(coord, &ev),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    ctx: &Arc<ConnContext>,
+    conns: &Arc<Mutex<Vec<LiveConn>>>,
+    stop: &AtomicBool,
+) {
+    let open = Arc::new(AtomicU64::new(0));
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                let (reader, writer) = match (stream.try_clone(), stream.try_clone()) {
+                    (Ok(r), Ok(w)) => (r, w),
+                    (Err(e), _) | (_, Err(e)) => {
+                        log::warn!("net: cannot clone accepted stream from {peer}: {e}");
+                        continue;
+                    }
+                };
+                let shared = Arc::new(ConnShared::new(Box::new(writer), peer.to_string()));
+                if obs::enabled() {
+                    obs::registry().counter("net.connections").inc();
+                }
+                let thread = {
+                    let ctx = Arc::clone(ctx);
+                    let shared = Arc::clone(&shared);
+                    let open = Arc::clone(&open);
+                    open.fetch_add(1, Ordering::Relaxed);
+                    std::thread::spawn(move || {
+                        serve_connection(&ctx, BufReader::new(reader), shared);
+                        let now = open.fetch_sub(1, Ordering::Relaxed) - 1;
+                        if obs::enabled() {
+                            obs::registry().gauge("net.open_connections").set(now);
+                        }
+                    })
+                };
+                if obs::enabled() {
+                    obs::registry().gauge("net.open_connections").set(open.load(Ordering::Relaxed));
+                }
+                let mut guard = conns.lock().unwrap();
+                // Reap finished connections so a long-lived server does
+                // not accumulate dead handles.
+                let mut live = Vec::with_capacity(guard.len() + 1);
+                for c in guard.drain(..) {
+                    if c.shared.alive.load(Ordering::Relaxed) {
+                        live.push(c);
+                    } else {
+                        let _ = c.thread.join();
+                    }
+                }
+                live.push(LiveConn { stream, shared, thread });
+                *guard = live;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                log::warn!("net: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}

@@ -23,7 +23,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -131,6 +131,29 @@ struct Inflight {
     ready: Condvar,
 }
 
+/// What a table-publication event did to the signature it names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishKind {
+    /// Fresh tables for the signature were published (cold-miss tune,
+    /// drift re-tune, warm start). Subscribers should re-read.
+    Updated,
+    /// The signature's resident tables were dropped (invalidation, or a
+    /// refresh retiring a drifted signature). Cached decisions derived
+    /// from them are stale.
+    Invalidated,
+}
+
+/// One table-publication event, as delivered to
+/// [`Coordinator::watch_publishes`] receivers. `epoch` is the cache's
+/// publish epoch *after* the event took effect: any decision carrying a
+/// smaller epoch may predate this event.
+#[derive(Debug, Clone)]
+pub struct PublishEvent {
+    pub kind: PublishKind,
+    pub signature: ClusterSignature,
+    pub epoch: u64,
+}
+
 /// Aggregate service counters.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorStats {
@@ -154,6 +177,9 @@ pub struct Coordinator {
     inflight: Mutex<HashMap<ClusterSignature, Arc<Inflight>>>,
     registry: RwLock<HashMap<String, RegisteredCluster>>,
     tunes: AtomicU64,
+    /// Table-publication subscribers (`watch_publishes`). Disconnected
+    /// receivers are pruned on the next notification.
+    watchers: Mutex<Vec<mpsc::Sender<PublishEvent>>>,
 }
 
 const MANIFEST_HEADER: &str = "# collective-tuner coordinator manifest v1";
@@ -173,6 +199,7 @@ impl Coordinator {
             inflight: Mutex::new(HashMap::new()),
             registry: RwLock::new(HashMap::new()),
             tunes: AtomicU64::new(0),
+            watchers: Mutex::new(Vec::new()),
         }
     }
 
@@ -302,27 +329,95 @@ impl Coordinator {
     /// cluster clone, no allocation. Only a cold or unindexed query
     /// falls back to the registry + coalesced tune path below.
     pub fn decision(&self, op: Op, cluster: &str, p: usize, m: u64) -> Result<Decision> {
+        self.decision_versioned(op, cluster, p, m).map(|(d, _)| d)
+    }
+
+    /// [`Coordinator::decision`] plus the publish epoch the answer was
+    /// computed from. The net layer serves this pair so remote clients
+    /// can order decisions against `Invalidate` pushes (the protocol's
+    /// ordering guarantee is stated in epochs, not frame arrival order —
+    /// see docs/PROTOCOL.md).
+    pub fn decision_versioned(
+        &self,
+        op: Op,
+        cluster: &str,
+        p: usize,
+        m: u64,
+    ) -> Result<(Decision, u64)> {
         let t0 = obs::timer_start();
         let warm = {
             let _read = Span::start("coordinator.decision.cache_read_ns");
             self.cache.warm_decide(cluster, op, p, m)
         };
-        if let Some((d, signature)) = warm {
+        if let Some((d, signature, epoch)) = warm {
             if let Some(t0) = t0 {
                 obs::registry().counter("coordinator.cache_hits").inc();
                 self.trace_decision(t0, signature, op, DecisionOutcome::Hit, &d);
             }
-            return Ok(d);
+            return Ok((d, epoch));
         }
         let rc = self
             .cluster(cluster)
             .with_context(|| format!("cluster '{cluster}' is not registered"))?;
         let (tables, outcome) = self.tables_for_traced(rc.signature, &rc.net);
         let d = tables.decision(op, p, m);
+        // The cold path has no single snapshot pin to read an epoch
+        // from; the cache's current epoch is a safe (conservative,
+        // never-newer-than-the-tables) stamp because the leader
+        // published the tables before we got here.
+        let epoch = self.cache.epoch();
         if let Some(t0) = t0 {
             self.trace_decision(t0, rc.signature, op, outcome, &d);
         }
-        Ok(d)
+        Ok((d, epoch))
+    }
+
+    /// Warm-path-only read: answer from the published snapshot or
+    /// return `None` — never tune, never block on an in-flight run.
+    /// This is what the net layer's push notifier uses to recompute a
+    /// subscriber's decisions after a publish: a notifier must not be
+    /// drafted into tuner work.
+    pub fn warm_decision(
+        &self,
+        cluster: &str,
+        op: Op,
+        p: usize,
+        m: u64,
+    ) -> Option<(Decision, u64)> {
+        self.cache.warm_decide(cluster, op, p, m).map(|(d, _, epoch)| (d, epoch))
+    }
+
+    /// The cache's current publish epoch (0 before any publish;
+    /// monotonic under the publish lock).
+    pub fn epoch(&self) -> u64 {
+        self.cache.epoch()
+    }
+
+    // ---- publish watchers ----------------------------------------------
+
+    /// Subscribe to table-publication events: every tune completion,
+    /// drift re-tune, warm start, and invalidation sends one
+    /// [`PublishEvent`] after its snapshot is published. Events are
+    /// delivered on an unbounded channel in publish order per writer;
+    /// use the carried `epoch` (not arrival order) to order them
+    /// globally. Dropping the receiver unsubscribes.
+    pub fn watch_publishes(&self) -> mpsc::Receiver<PublishEvent> {
+        let (tx, rx) = mpsc::channel();
+        self.watchers.lock().unwrap().push(tx);
+        rx
+    }
+
+    /// Fan one publication event out to every live watcher, pruning
+    /// disconnected ones. Called *after* the cache publish, so a watcher
+    /// that re-reads on receipt observes the new snapshot (or a newer
+    /// one — epochs disambiguate).
+    fn notify_publish(&self, kind: PublishKind, signature: ClusterSignature) {
+        let mut watchers = self.watchers.lock().unwrap();
+        if watchers.is_empty() {
+            return;
+        }
+        let ev = PublishEvent { kind, signature, epoch: self.cache.epoch() };
+        watchers.retain(|tx| tx.send(ev.clone()).is_ok());
     }
 
     /// Record one resolved decision into the latency histogram, the
@@ -407,6 +502,7 @@ impl Coordinator {
             let _tune = Span::start("coordinator.decision.tune_ns");
             let tables = Arc::new(self.tune_now(net));
             self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
+            self.notify_publish(PublishKind::Updated, signature);
             *flight.result.lock().unwrap() = Some(Arc::clone(&tables));
             flight.ready.notify_all();
             self.inflight.lock().unwrap().remove(&signature);
@@ -453,12 +549,17 @@ impl Coordinator {
     pub(super) fn force_retune(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
         let tables = Arc::new(self.tune_now(net));
         self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
+        self.notify_publish(PublishKind::Updated, signature);
         tables
     }
 
     /// Drop a cached signature (refresh retires drifted tables).
     pub(super) fn evict_signature(&self, signature: &ClusterSignature) -> bool {
-        self.cache.remove(signature, &self.name_map())
+        let removed = self.cache.remove(signature, &self.name_map());
+        if removed {
+            self.notify_publish(PublishKind::Invalidated, *signature);
+        }
+        removed
     }
 
     /// Drop `cluster`'s cached tables, if resident: the next query for
@@ -603,6 +704,7 @@ impl Coordinator {
         }
         let sig = self.register(cluster, nodes, net);
         self.cache.insert(sig, Arc::new(TableSet::new(tables)), &self.name_map());
+        self.notify_publish(PublishKind::Updated, sig);
         Ok(sig)
     }
 
@@ -657,6 +759,7 @@ impl Coordinator {
                             }
                         }
                         self.cache.insert(sig, Arc::new(TableSet::new(tables)), &self.name_map());
+                        self.notify_publish(PublishKind::Updated, sig);
                         loaded += 1;
                     }
                 }
@@ -870,6 +973,41 @@ mod tests {
         assert!(err.to_string().contains("--op all"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
         std::fs::remove_dir_all(&partial).ok();
+    }
+
+    #[test]
+    fn watch_publishes_sees_tunes_and_invalidations_in_epoch_order() {
+        let c = Coordinator::new(small_config());
+        let sig = c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        let rx = c.watch_publishes();
+        c.decision(Op::Bcast, "a", 24, 65536).unwrap(); // cold tune → Updated
+        let ev = rx.try_recv().expect("tune completion notifies watchers");
+        assert_eq!(ev.kind, PublishKind::Updated);
+        assert_eq!(ev.signature, sig);
+        assert!(ev.epoch >= 1);
+        assert!(c.invalidate("a")); // → Invalidated
+        let ev2 = rx.try_recv().expect("invalidation notifies watchers");
+        assert_eq!(ev2.kind, PublishKind::Invalidated);
+        assert_eq!(ev2.signature, sig);
+        assert!(ev2.epoch > ev.epoch, "epochs are monotonic across publishes");
+        assert!(rx.try_recv().is_err(), "no spurious events");
+        // dropping the receiver unsubscribes without disturbing service
+        drop(rx);
+        c.decision(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(c.tune_count(), 2);
+    }
+
+    #[test]
+    fn warm_decision_never_tunes() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        assert!(c.warm_decision("a", Op::Bcast, 24, 65536).is_none(), "not resident");
+        assert_eq!(c.tune_count(), 0, "warm_decision must not tune");
+        let (want, epoch) = c.decision_versioned(Op::Bcast, "a", 24, 65536).unwrap();
+        let (got, warm_epoch) = c.warm_decision("a", Op::Bcast, 24, 65536).unwrap();
+        assert_eq!(got, want);
+        assert!(warm_epoch >= epoch);
+        assert_eq!(c.tune_count(), 1);
     }
 
     #[test]

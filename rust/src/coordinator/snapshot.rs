@@ -161,6 +161,11 @@ struct NameEntry {
 struct CoordSnapshot {
     bysig: HashMap<ClusterSignature, Arc<TableEntry>>,
     byname: HashMap<String, NameEntry>,
+    /// Monotonic publish counter, stamped under the publish lock. Every
+    /// answer read from this snapshot can carry the epoch it was
+    /// computed from — the net protocol's invalidation-ordering
+    /// guarantee (docs/PROTOCOL.md) is stated in these epochs.
+    epoch: u64,
 }
 
 /// The coordinator's table cache: epoch-published snapshots with
@@ -204,19 +209,30 @@ impl SnapshotCache {
     /// coalesced tune path). Counts a hit and bumps recency on success;
     /// counter-neutral on `None` (the slow path's `get` does the
     /// accounting there).
+    /// The returned epoch is the publish epoch of the snapshot the
+    /// decision was read from — decision and epoch come from the *same*
+    /// pin, so the pairing is exact even while writers publish
+    /// concurrently.
     pub fn warm_decide(
         &self,
         name: &str,
         op: Op,
         p: usize,
         m: u64,
-    ) -> Option<(Decision, ClusterSignature)> {
+    ) -> Option<(Decision, ClusterSignature, u64)> {
         let snap = self.swap.load();
         let ne = snap.byname.get(name)?;
         let entry = ne.entry.as_ref()?;
         entry.last_used.store(self.next_tick(), Ordering::Relaxed);
         self.hits.fetch_add(1, Ordering::Relaxed);
-        Some((entry.dense.decide(op, p, m), ne.signature))
+        Some((entry.dense.decide(op, p, m), ne.signature, snap.epoch))
+    }
+
+    /// The currently-published snapshot's epoch (0 before any publish).
+    /// Monotonic: each publish stamps `epoch + 1` under the publish
+    /// lock.
+    pub fn epoch(&self) -> u64 {
+        self.swap.load().epoch
     }
 
     /// Hot-path lookup by signature: one snapshot pin; counters and
@@ -304,7 +320,8 @@ impl SnapshotCache {
     {
         let _w = self.publish_lock.lock().unwrap();
         let _span = Span::start("coordinator.publish_ns");
-        let mut bysig = self.swap.load_full().bysig.clone();
+        let cur = self.swap.load_full();
+        let mut bysig = cur.bysig.clone();
         edit(&mut bysig);
         let byname = names
             .iter()
@@ -313,7 +330,7 @@ impl SnapshotCache {
                 (name.clone(), ne)
             })
             .collect();
-        self.swap.store(Arc::new(CoordSnapshot { bysig, byname }));
+        self.swap.store(Arc::new(CoordSnapshot { bysig, byname, epoch: cur.epoch + 1 }));
         if obs::enabled() {
             obs::registry().counter("coordinator.snapshot_publishes").inc();
         }
@@ -481,12 +498,26 @@ mod tests {
         assert_eq!(c.stats().hits, 0, "a warm fall-through is counter-neutral");
 
         c.insert(sig(2), tiny(42), &names);
-        let (d, s) = c.warm_decide("a", Op::Bcast, 8, 1 << 20).unwrap();
+        let (d, s, _) = c.warm_decide("a", Op::Bcast, 8, 1 << 20).unwrap();
         assert_eq!(d.predicted as u32, 42);
         assert_eq!(s, sig(2));
         assert_eq!(c.stats().hits, 1);
         assert!(c.warm_decide("b", Op::Bcast, 2, 1).is_none(), "b not resident");
         assert!(c.warm_decide("ghost", Op::Bcast, 2, 1).is_none());
+    }
+
+    #[test]
+    fn epochs_advance_once_per_publish_and_tag_warm_reads() {
+        let c = SnapshotCache::new(4);
+        assert_eq!(c.epoch(), 0, "no publish yet");
+        let names = vec![("a".to_string(), sig(2))];
+        c.sync_names(&names); // publish 1
+        c.insert(sig(2), tiny(7), &names); // publish 2
+        assert_eq!(c.epoch(), 2);
+        let (_, _, e) = c.warm_decide("a", Op::Bcast, 2, 1).unwrap();
+        assert_eq!(e, 2, "warm read carries the epoch of the snapshot it pinned");
+        c.remove(&sig(2), &names); // publish 3
+        assert_eq!(c.epoch(), 3);
     }
 
     #[test]

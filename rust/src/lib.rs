@@ -56,6 +56,11 @@
 //!   refresh policy re-probes for parameter drift and swaps tables
 //!   atomically. `topology::discover` feeds its registry and
 //!   `collectives::multilevel` consumes its per-island decisions.
+//!   [`coordinator::net`] puts the service on the wire: the `ct/1`
+//!   TSV-over-TCP protocol (`docs/PROTOCOL.md`), the `coordd` server
+//!   with server-initiated invalidation/table-update pushes, the
+//!   [`coordinator::net::NetClient`] remote query surface, and an
+//!   in-process loopback transport for tests.
 //! * [`harness`] — experiment drivers that regenerate every figure of
 //!   the paper's evaluation (measured vs predicted).
 //! * [`obs`] — first-class observability over all of the above: a

@@ -1,11 +1,12 @@
 //! `collective-tuner` — the L3 coordinator binary.
 //!
 //! Subcommands: `bench-plogp`, `tune`, `run`, `experiment`, `discover`,
-//! `serve`, `query`, `obs`, `info`. See `cli::USAGE` or run with `help`.
+//! `serve`, `coordd`, `query`, `obs`, `info`. See `cli::USAGE` or run
+//! with `help`.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use collective_tuner::collectives::{multilevel, Strategy};
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy};
@@ -44,7 +45,13 @@ fn dispatch(args: &Args) -> Result<()> {
     }
     // Observability is opt-in (see the obs module's overhead contract):
     // turn it on exactly when a surface that reads it was requested.
-    if args.flag("stats") || args.get("metrics-interval").is_some() || args.command == "obs" {
+    // `coordd` always counts: its final OBS_SNAPSHOT_JSON line is the
+    // CI socket smoke's artifact.
+    if args.flag("stats")
+        || args.get("metrics-interval").is_some()
+        || args.command == "obs"
+        || args.command == "coordd"
+    {
         obs::set_enabled(true);
     }
     match args.command.as_str() {
@@ -57,6 +64,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "experiment" => cmd_experiment(args),
         "discover" => cmd_discover(args),
         "serve" => cmd_serve(args),
+        "coordd" => cmd_coordd(args),
         "query" => cmd_query(args),
         "obs" => cmd_obs(args),
         "info" => cmd_info(args),
@@ -582,6 +590,9 @@ fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
 }
 
 fn cmd_query(args: &Args) -> Result<()> {
+    if args.get("connect").is_some() {
+        return cmd_query_net(args);
+    }
     let cfg = args.net_config()?;
     let coord = coordinator_from_args(args)?;
     if let Some(dir) = args.get("warm") {
@@ -599,6 +610,17 @@ fn cmd_query(args: &Args) -> Result<()> {
         );
     }
     if coord.cluster(&name).is_none() {
+        // An explicit warm start that does not cover the requested
+        // cluster is a caller mistake: measuring and tuning a fresh
+        // default cluster here would silently mask it.
+        if args.get("warm").is_some() {
+            let known: Vec<String> =
+                coord.clusters().iter().map(|c| c.name.clone()).collect();
+            bail!(
+                "cluster '{name}' is not in the warm-started set \
+                 (loaded: {known:?}); drop --warm to measure and register it fresh"
+            );
+        }
         let mut sim = Netsim::new(2, cfg);
         let net = plogp::bench::measure(&mut sim);
         println!("measured {}", net.summary());
@@ -694,7 +716,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let served = AtomicU64::new(0);
     let done = AtomicBool::new(false);
     let t0 = std::time::Instant::now();
-    std::thread::scope(|s| {
+    // Workers report failures (e.g. a query against an unregistered
+    // cluster) as `Result`s joined below: a structured nonzero exit,
+    // never a worker-thread panic.
+    let worker_result: Result<()> = std::thread::scope(|s| {
         let done = &done;
         if metrics_interval > 0 {
             // Periodic snapshot printer: one line per interval while the
@@ -718,25 +743,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let coord = &coord;
                 let names = &names;
                 let served = &served;
-                s.spawn(move || {
+                s.spawn(move || -> Result<()> {
                     let mut rng = Prng::new(0xC0DE_5EED ^ t as u64);
                     for _ in 0..requests {
                         let name = rng.pick(names);
                         let op = *rng.pick(&Op::ALL);
                         let p = rng.range_usize(2, nodes.max(3));
                         let m = rng.range(1, 1 << 20);
-                        let d = coord.decision(op, name, p, m).expect("cluster registered");
+                        let d = coord
+                            .decision(op, name, p, m)
+                            .with_context(|| format!("serving cluster '{name}'"))?;
                         std::hint::black_box(d);
                         served.fetch_add(1, Ordering::Relaxed);
                     }
+                    Ok(())
                 })
             })
             .collect();
+        let mut first_err: Result<()> = Ok(());
         for w in workers {
-            w.join().expect("serve worker panicked");
+            let outcome = match w.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("serve worker panicked")),
+            };
+            if first_err.is_ok() {
+                first_err = outcome;
+            }
         }
         done.store(true, Ordering::Relaxed);
+        first_err
     });
+    worker_result?;
     let dt = t0.elapsed().as_secs_f64().max(1e-9);
     let total = served.load(Ordering::Relaxed);
     let st = coord.stats();
@@ -801,6 +838,202 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let n = coord.persist_to(Path::new(dir))?;
         println!("persisted {n} table set(s) to {dir}");
     }
+    Ok(())
+}
+
+/// `coordd` — the coordinator as a network service: register demo
+/// islands (the same mixed-hardware layout `serve` uses), bind the
+/// `ct/1` TCP server (docs/PROTOCOL.md), and run until a remote
+/// `SHUTDOWN` arrives (only honored with `--allow-remote-shutdown`) or
+/// the process is killed. `--churn-ms` runs a background drift loop so
+/// subscribed clients observe real `INVALIDATE`/`TABLEUPDATE` pushes.
+fn cmd_coordd(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use collective_tuner::coordinator::net::{CoordServer, ServerOptions};
+
+    let listen = args.get_or("listen", "127.0.0.1:7177");
+    let k = args.usize_or("clusters", 3)?.max(1);
+    let nodes = args.usize_or("nodes", 16)?.max(2);
+    let metrics_interval = args.u64_or("metrics-interval", 0)?;
+    let churn_ms = args.u64_or("churn-ms", 0)?;
+
+    let coord = Arc::new(coordinator_from_args(args)?);
+    if let Some(dir) = args.get("warm") {
+        let n = coord.warm_start_from(Path::new(dir))?;
+        println!("warm start: loaded {n} table set(s) from {dir}");
+    }
+    let presets = [
+        NetConfig::fast_ethernet_icluster1(),
+        NetConfig::gigabit_ethernet(),
+        NetConfig::myrinet_like(),
+    ];
+    let grid = GridSpec::new(
+        (0..k)
+            .map(|i| {
+                ClusterSpec::new(
+                    format!("island-{i}"),
+                    nodes,
+                    presets[i % presets.len()].clone(),
+                )
+            })
+            .collect(),
+        NetConfig::wan_link(),
+    );
+    coord.register_islands(&grid);
+    println!(
+        "registered {k} island(s) of {nodes} nodes (backend {})",
+        coord.backend_name()
+    );
+
+    let server = CoordServer::start(
+        Arc::clone(&coord),
+        &listen,
+        ServerOptions {
+            banner: format!("collective-tuner coordd ({k} island(s))"),
+            allow_remote_shutdown: args.flag("allow-remote-shutdown"),
+        },
+    )?;
+    // The machine-readable line launchers parse for the ephemeral port.
+    println!("COORDD_LISTENING {}", server.local_addr());
+
+    let stop_churn = Arc::new(AtomicBool::new(false));
+    let churn = if churn_ms > 0 {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop_churn);
+        Some(std::thread::spawn(move || {
+            // Alternate island-0 between two hardware classes: each flip
+            // drifts far past the default tolerance, so every pass
+            // re-tunes and re-publishes — subscribers see live pushes.
+            let policy = RefreshPolicy::default();
+            let mut flip = true;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(churn_ms));
+                let cfg = if flip {
+                    NetConfig::gigabit_ethernet()
+                } else {
+                    NetConfig::fast_ethernet_icluster1()
+                };
+                flip = !flip;
+                let mut sim = Netsim::new(2, cfg);
+                if let Err(e) = coord.refresh("island-0", &mut sim, &policy) {
+                    log::warn!("coordd: churn refresh failed: {e:#}");
+                }
+            }
+        }))
+    } else {
+        None
+    };
+
+    let tick = Duration::from_millis(100);
+    let period = Duration::from_secs(metrics_interval.max(1));
+    let mut last = std::time::Instant::now();
+    while !server.shutdown_requested() {
+        std::thread::sleep(tick);
+        if metrics_interval > 0 && last.elapsed() >= period {
+            println!("metrics: {}", obs::registry().snapshot_json());
+            last = std::time::Instant::now();
+        }
+    }
+    println!("coordd: remote shutdown requested, draining");
+    stop_churn.store(true, Ordering::Relaxed);
+    if let Some(h) = churn {
+        let _ = h.join();
+    }
+    server.shutdown();
+    // Machine-readable final snapshot (the CI socket smoke's artifact).
+    println!("OBS_SNAPSHOT_JSON {}", obs::registry().snapshot_json());
+    println!("coordd: shut down cleanly");
+    Ok(())
+}
+
+/// `query --connect` — the same one-shot query surface, answered by a
+/// running `coordd` over `ct/1` instead of an in-process coordinator.
+/// `--procs` accepts a comma list and becomes one batched request; any
+/// per-query error frame makes the exit status nonzero.
+fn cmd_query_net(args: &Args) -> Result<()> {
+    use std::time::Duration;
+
+    use collective_tuner::coordinator::net::{NetClient, Point, Push, Query};
+
+    let addr = args.get("connect").expect("routed here on --connect");
+    let client = NetClient::connect(addr)?;
+    println!("connected : {addr} ({})", client.banner());
+    if args.flag("shutdown") {
+        client.shutdown_server()?;
+        println!("server acknowledged shutdown");
+        return Ok(());
+    }
+    let name = args.get_or("cluster", "island-0");
+    let op_name = args.get_or("op", "bcast");
+    let op = Op::from_name(&op_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown --op '{op_name}' (bcast, scatter, gather, reduce, barrier, \
+             allgather, allreduce)"
+        )
+    })?;
+    let p_list = args.usize_list("procs")?.unwrap_or_else(|| vec![24]);
+    let m = args.u64_or("bytes", 64 * 1024)?;
+    let queries: Vec<Query> = p_list
+        .iter()
+        .map(|&p| Query { op, cluster: name.clone(), p, m })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let replies = client.query_batch(&queries)?;
+    let dt = t0.elapsed();
+    let mut failed = 0usize;
+    for (q, r) in queries.iter().zip(&replies) {
+        match r {
+            Ok(d) => println!(
+                "decision  : {} P={} m={} -> {} (segment {}, predicted {})",
+                q.op.name(),
+                q.p,
+                fmt_bytes(q.m as f64),
+                d.strategy.name(),
+                d.segment.map(|s| fmt_bytes(s as f64)).unwrap_or_else(|| "-".into()),
+                fmt_time(d.predicted)
+            ),
+            Err(e) => {
+                failed += 1;
+                println!("error     : {} P={} -> {e}", q.op.name(), q.p);
+            }
+        }
+    }
+    println!(
+        "latency   : {} quer(ies) in {:.2} ms over one round-trip",
+        replies.len(),
+        dt.as_secs_f64() * 1e3
+    );
+    if failed > 0 {
+        bail!("{failed} of {} remote queries failed", replies.len());
+    }
+    if args.flag("subscribe") || args.get("wait-pushes").is_some() {
+        let points: Vec<Point> = p_list.iter().map(|&p| Point { op, p, m }).collect();
+        let (sig, epoch) = client.subscribe(&name, &points)?;
+        println!("subscribed: {name} (signature {sig}) at epoch {epoch}");
+        let want = args.usize_or("wait-pushes", 0)?;
+        if want > 0 {
+            let timeout = Duration::from_secs(args.u64_or("push-timeout", 10)?);
+            let pushes = client.wait_pushes(want, timeout)?;
+            for p in &pushes {
+                match p {
+                    Push::Invalidate { epoch, cluster } => {
+                        println!("push      : INVALIDATE {cluster} @ epoch {epoch}")
+                    }
+                    Push::TableUpdate { epoch, cluster, rows } => println!(
+                        "push      : TABLEUPDATE {cluster} @ epoch {epoch} ({} row(s))",
+                        rows.len()
+                    ),
+                }
+            }
+            if pushes.len() < want {
+                bail!("expected {want} push(es), got {} before the deadline", pushes.len());
+            }
+        }
+    }
+    client.close();
     Ok(())
 }
 

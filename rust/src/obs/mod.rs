@@ -1,8 +1,9 @@
 //! First-class observability: a global metrics [`Registry`], scoped
 //! [`Span`] timers, and a decision [`FlightRecorder`] — the measurement
-//! layer the ROADMAP's network-fronted coordinator needs (latency
-//! distributions, per-stage timings, and a record of what the service
-//! actually decided), built with zero new dependencies.
+//! layer the network-fronted coordinator (`coordd`,
+//! [`crate::coordinator::net`]) runs on (latency distributions,
+//! per-stage timings, and a record of what the service actually
+//! decided), built with zero new dependencies.
 //!
 //! Three instrument kinds live in the registry:
 //!
@@ -26,6 +27,13 @@
 //! | `coordinator.publish_ns` | histogram | write-side snapshot rebuild + atomic swap |
 //! | `coordinator.refresh_ns` | histogram | one drift-refresh pass |
 //! | `coordinator.refresh.checks` / `.swaps` | counter | refresh passes / atomic table swaps |
+//! | `net.request_ns` | histogram | server-side `BATCH` handling latency (`coordd`) |
+//! | `net.connections` | counter | connections ever accepted (TCP + loopback) |
+//! | `net.open_connections` | gauge | currently-live TCP connections |
+//! | `net.frames_rx` / `net.frames_tx` | counter | protocol frames read / written by the server |
+//! | `net.queries` / `net.query_errors` | counter | batched queries answered / answered with an error reply |
+//! | `net.subscriptions` | counter | `SUBSCRIBE` registrations accepted |
+//! | `net.pushes` | counter | `INVALIDATE`/`TABLEUPDATE` frames delivered |
 //! | `tuner.sweep_ns` | histogram | one per-op grid sweep |
 //! | `tuner.stage.bound_screen_ns` | histogram | per-cell bound screening |
 //! | `tuner.stage.model_eval_ns` | histogram | per-cell unsegmented model evaluations |
@@ -50,7 +58,7 @@
 //! * [`Registry::snapshot_json`] — one JSON blob (rendered through
 //!   [`crate::util::json::Json`], never hand-formatted);
 //! * [`Registry::prometheus`] — Prometheus text exposition (summary
-//!   quantiles per histogram) for the future network coordinator;
+//!   quantiles per histogram) for the network front-end (`coordd`);
 //! * [`FlightRecorder::to_tsv`] — the recent-decision ring as TSV
 //!   through [`crate::util::table::Table`], with the drop-counting
 //!   semantics proven for [`crate::netsim::Trace`]

@@ -1,0 +1,500 @@
+//! Integration tests for the coordinator's network layer (`ct/1`):
+//! property tests over the frame codec (random frames round-trip
+//! byte-identically; truncated, mutated, or oversized input is rejected
+//! without panicking), the loopback transport end-to-end (batched
+//! queries, the unregistered-cluster error contract, subscriptions and
+//! pushes), a query storm during refresh churn mirroring
+//! `refresh_publish_storm_never_serves_torn_decisions`, and the TCP
+//! server over a real ephemeral-port socket.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use collective_tuner::collectives::Strategy;
+use collective_tuner::coordinator::net::{
+    frame::codes, CoordServer, Frame, LoopbackServer, NetClient, Point, Push, Query, QueryReply,
+    ServerOptions,
+};
+use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy, TableSet};
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp::{bench, PLogP};
+use collective_tuner::tuner::{grids, Decision, Op, Tuner};
+use collective_tuner::util::prng::Prng;
+
+fn small_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards: 4,
+        capacity_per_shard: 8,
+        p_grid: vec![2, 8, 24],
+        m_grid: grids::log_grid(1, 1 << 20, 6),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn measured(cfg: NetConfig) -> PLogP {
+    let mut sim = Netsim::new(2, cfg);
+    bench::measure(&mut sim)
+}
+
+// ---- frame codec property tests ----------------------------------------
+
+fn all_strategies() -> Vec<Strategy> {
+    Op::ALL.iter().flat_map(|op| op.family().iter().copied()).collect()
+}
+
+/// Wire-safe random string: no TAB/newline (the sanitizer would rewrite
+/// those, breaking byte-identity on purpose — covered separately).
+fn rand_text(rng: &mut Prng, min_len: usize) -> String {
+    const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ\
+                           0123456789 -_.:/+%()";
+    let len = rng.range_usize(min_len, min_len + 12);
+    (0..len).map(|_| *rng.pick(CHARS) as char).collect()
+}
+
+fn rand_decision(rng: &mut Prng, strategies: &[Strategy]) -> Decision {
+    Decision {
+        strategy: *rng.pick(strategies),
+        segment: if rng.chance(0.5) { Some(rng.range(1, 1 << 22)) } else { None },
+        predicted: rng.log_uniform(1e-9, 1e3),
+    }
+}
+
+fn rand_point(rng: &mut Prng) -> Point {
+    Point {
+        op: *rng.pick(&Op::ALL),
+        p: rng.range_usize(2, 512),
+        m: rng.range(1, 1 << 30),
+    }
+}
+
+fn rand_query(rng: &mut Prng) -> Query {
+    let pt = rand_point(rng);
+    Query { op: pt.op, cluster: rand_text(rng, 1), p: pt.p, m: pt.m }
+}
+
+fn rand_frame(rng: &mut Prng, strategies: &[Strategy]) -> Frame {
+    match rng.range_usize(0, 14) {
+        0 => Frame::Hello { version: rng.range(0, 1 << 16) as u32 },
+        1 => Frame::Welcome { version: rng.range(0, 1 << 16) as u32, banner: rand_text(rng, 0) },
+        2 => Frame::Ping { id: rng.next_u64() },
+        3 => Frame::Pong { id: rng.next_u64(), epoch: rng.next_u64() },
+        4 => Frame::Batch {
+            id: rng.next_u64(),
+            queries: (0..rng.range_usize(0, 5)).map(|_| rand_query(rng)).collect(),
+        },
+        5 => Frame::Decisions {
+            id: rng.next_u64(),
+            epoch: rng.next_u64(),
+            replies: (0..rng.range_usize(0, 5))
+                .map(|_| {
+                    if rng.chance(0.7) {
+                        QueryReply::Decision(rand_decision(rng, strategies))
+                    } else {
+                        QueryReply::Error {
+                            code: rand_text(rng, 1),
+                            message: rand_text(rng, 0),
+                        }
+                    }
+                })
+                .collect(),
+        },
+        6 => Frame::Subscribe {
+            id: rng.next_u64(),
+            cluster: rand_text(rng, 1),
+            points: (0..rng.range_usize(0, 5)).map(|_| rand_point(rng)).collect(),
+        },
+        7 => Frame::Subscribed {
+            id: rng.next_u64(),
+            cluster: rand_text(rng, 1),
+            signature: rand_text(rng, 0),
+            epoch: rng.next_u64(),
+        },
+        8 => Frame::Nack {
+            id: rng.next_u64(),
+            code: rand_text(rng, 1),
+            message: rand_text(rng, 0),
+        },
+        9 => Frame::Invalidate {
+            seq: rng.next_u64(),
+            epoch: rng.next_u64(),
+            cluster: rand_text(rng, 1),
+        },
+        10 => Frame::TableUpdate {
+            seq: rng.next_u64(),
+            epoch: rng.next_u64(),
+            cluster: rand_text(rng, 1),
+            rows: (0..rng.range_usize(0, 5))
+                .map(|_| (rand_point(rng), rand_decision(rng, strategies)))
+                .collect(),
+        },
+        11 => Frame::Error { code: rand_text(rng, 1), message: rand_text(rng, 0) },
+        12 => Frame::Shutdown,
+        _ => Frame::Bye,
+    }
+}
+
+#[test]
+fn random_frames_roundtrip_byte_identically() {
+    let strategies = all_strategies();
+    let mut rng = Prng::new(0xF8A3_E5);
+    for i in 0..300 {
+        let f = rand_frame(&mut rng, &strategies);
+        let enc = f.encode();
+        let back = Frame::decode(&enc).unwrap_or_else(|e| panic!("case {i}: {e} on {enc:?}"));
+        assert_eq!(back, f, "case {i}");
+        assert_eq!(back.encode(), enc, "case {i}: re-encode must be byte-identical");
+    }
+}
+
+#[test]
+fn random_frame_streams_parse_frame_by_frame() {
+    let strategies = all_strategies();
+    let mut rng = Prng::new(0xBEEF);
+    for _ in 0..20 {
+        let frames: Vec<Frame> =
+            (0..rng.range_usize(1, 8)).map(|_| rand_frame(&mut rng, &strategies)).collect();
+        let stream: String = frames.iter().map(Frame::encode).collect();
+        let mut cur = std::io::Cursor::new(stream.as_bytes());
+        for want in &frames {
+            let got = Frame::read_from(&mut cur).unwrap().expect("frame expected");
+            assert_eq!(&got, want);
+        }
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), None, "clean EOF after last frame");
+    }
+}
+
+#[test]
+fn every_strict_prefix_of_random_frames_is_rejected() {
+    let strategies = all_strategies();
+    let mut rng = Prng::new(0x7AF5);
+    for _ in 0..30 {
+        let f = rand_frame(&mut rng, &strategies);
+        let enc = f.encode();
+        for k in 1..enc.len() {
+            assert!(Frame::decode(&enc[..k]).is_err(), "prefix {k} of {enc:?} must be rejected");
+        }
+    }
+}
+
+#[test]
+fn random_mutations_never_panic() {
+    let strategies = all_strategies();
+    let mut rng = Prng::new(0xD1CE);
+    for _ in 0..200 {
+        let f = rand_frame(&mut rng, &strategies);
+        let mut bytes = f.encode().into_bytes();
+        let i = rng.range_usize(0, bytes.len());
+        bytes[i] = (rng.next_u64() & 0x7F) as u8; // keep it ASCII-ish, may still be invalid
+        if let Ok(text) = String::from_utf8(bytes) {
+            // Any outcome is fine except a panic; a mutated id digit may
+            // still parse as a (different) valid frame.
+            let _ = Frame::decode(&text);
+        }
+    }
+}
+
+// ---- loopback end-to-end ------------------------------------------------
+
+#[test]
+fn loopback_batch_queries_match_inprocess_decisions() {
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server = LoopbackServer::start(Arc::clone(&coord));
+    let client = server.connect().unwrap();
+    assert!(client.banner().contains("loopback"));
+
+    let queries: Vec<Query> = [
+        (Op::Bcast, 24usize, 65536u64),
+        (Op::Scatter, 8, 1024),
+        (Op::AllReduce, 24, 1 << 20),
+    ]
+    .iter()
+    .map(|&(op, p, m)| Query { op, cluster: "fe".into(), p, m })
+    .collect();
+    let replies = client.query_batch(&queries).unwrap();
+    assert_eq!(replies.len(), queries.len());
+    for (q, r) in queries.iter().zip(replies) {
+        let remote = r.expect("registered cluster answers");
+        let local = coord.decision(q.op, &q.cluster, q.p, q.m).unwrap();
+        assert_eq!(remote, local, "{q:?}");
+    }
+    client.close();
+}
+
+#[test]
+fn loopback_unregistered_cluster_is_structured_error_not_panic() {
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("real", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server = LoopbackServer::start(Arc::clone(&coord));
+    let client = server.connect().unwrap();
+
+    // a batch mixing a ghost and a real cluster partially succeeds
+    let replies = client
+        .query_batch(&[
+            Query { op: Op::Bcast, cluster: "ghost".into(), p: 8, m: 4096 },
+            Query { op: Op::Bcast, cluster: "real".into(), p: 8, m: 4096 },
+        ])
+        .unwrap();
+    let err = replies[0].as_ref().unwrap_err();
+    assert_eq!(err.code, codes::UNREGISTERED);
+    assert!(err.message.contains("ghost"), "{err}");
+    assert!(replies[1].is_ok());
+
+    // the connection survives the error and keeps serving
+    let d = client.decision(Op::Scatter, "real", 8, 1024).unwrap();
+    assert!(d.predicted > 0.0);
+
+    // subscribing to a ghost cluster is a NACK with the same code
+    let err = client
+        .subscribe("ghost", &[Point { op: Op::Bcast, p: 8, m: 4096 }])
+        .unwrap_err();
+    let remote = err.downcast::<collective_tuner::coordinator::net::RemoteError>().unwrap();
+    assert_eq!(remote.code, codes::UNREGISTERED);
+    client.close();
+}
+
+#[test]
+fn loopback_query_storm_during_refresh_churn_serves_only_published_tables() {
+    // The net twin of `refresh_publish_storm_never_serves_torn_decisions`:
+    // clients hammer one cluster over the wire while a writer alternates
+    // it between two networks. Both target table sets are deterministic,
+    // so every remote answer must equal one of the two precomputed
+    // decisions — a torn snapshot or a half-applied publish would
+    // surface as a third value.
+    let cfg = small_config();
+    let coord = Arc::new(Coordinator::new(cfg.clone()));
+    let net_a = measured(NetConfig::fast_ethernet_icluster1());
+    let net_b = measured(NetConfig::gigabit_ethernet());
+    coord.register("x", 24, net_a.clone());
+    let ta = TableSet::new(Tuner::native().tune_all(&net_a, &cfg.p_grid, &cfg.m_grid).unwrap());
+    let tb = TableSet::new(Tuner::native().tune_all(&net_b, &cfg.p_grid, &cfg.m_grid).unwrap());
+    let probes = [
+        (Op::Bcast, 24usize, 65536u64),
+        (Op::Scatter, 8, 1024),
+        (Op::AllReduce, 24, 1 << 20),
+        (Op::Gather, 2, 64),
+    ];
+
+    let server = LoopbackServer::start(Arc::clone(&coord));
+    let cycles: usize = if cfg!(stress) { 20 } else { 4 };
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let (coord, server, stop, ta, tb) = (&coord, &server, &stop, &ta, &tb);
+        s.spawn(move || {
+            let policy = RefreshPolicy::default();
+            for k in 0..cycles {
+                let flip = if k % 2 == 0 {
+                    NetConfig::gigabit_ethernet()
+                } else {
+                    NetConfig::fast_ethernet_icluster1()
+                };
+                let mut sim = Netsim::new(2, flip);
+                let outcome = coord.refresh("x", &mut sim, &policy).unwrap();
+                assert!(outcome.refreshed(), "cycle {k}: {outcome:?}");
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        for _ in 0..3 {
+            s.spawn(move || {
+                let client = server.connect().unwrap();
+                let queries: Vec<Query> = probes
+                    .iter()
+                    .map(|&(op, p, m)| Query { op, cluster: "x".into(), p, m })
+                    .collect();
+                while !stop.load(Ordering::Relaxed) {
+                    let replies = client.query_batch(&queries).unwrap();
+                    for (&(op, p, m), r) in probes.iter().zip(replies) {
+                        let d = r.expect("registered cluster answers");
+                        let da = ta.decision(op, p, m);
+                        let db = tb.decision(op, p, m);
+                        assert!(
+                            d == da || d == db,
+                            "torn remote decision for {op:?} P={p} m={m}: \
+                             {d:?} is neither {da:?} nor {db:?}"
+                        );
+                    }
+                }
+                client.close();
+            });
+        }
+    });
+    assert!(coord.tune_count() >= cycles as u64, "every flip re-tunes");
+}
+
+#[test]
+fn subscription_receives_initial_table_then_update_on_refresh() {
+    let cfg = small_config();
+    let coord = Arc::new(Coordinator::new(cfg.clone()));
+    let net_a = measured(NetConfig::fast_ethernet_icluster1());
+    let net_b = measured(NetConfig::gigabit_ethernet());
+    coord.register("x", 24, net_a.clone());
+    let ta = TableSet::new(Tuner::native().tune_all(&net_a, &cfg.p_grid, &cfg.m_grid).unwrap());
+    let tb = TableSet::new(Tuner::native().tune_all(&net_b, &cfg.p_grid, &cfg.m_grid).unwrap());
+
+    let server = LoopbackServer::start(Arc::clone(&coord));
+    let client = server.connect().unwrap();
+    let points = [
+        Point { op: Op::Bcast, p: 24, m: 65536 },
+        Point { op: Op::Scatter, p: 8, m: 1024 },
+    ];
+    let (signature, sub_epoch) = client.subscribe("x", &points).unwrap();
+    assert!(!signature.is_empty());
+
+    // the initial TABLEUPDATE seeds the subscriber without a BATCH
+    let pushes = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    let initial_epoch = match &pushes[..] {
+        [Push::TableUpdate { epoch, cluster, rows }] => {
+            assert_eq!(cluster, "x");
+            assert_eq!(rows.len(), points.len());
+            for (pt, d) in rows {
+                assert_eq!(*d, ta.decision(pt.op, pt.p, pt.m), "{pt:?}");
+            }
+            assert_eq!(*epoch, sub_epoch);
+            *epoch
+        }
+        other => panic!("expected exactly the initial TableUpdate, got {other:?}"),
+    };
+
+    // drift re-publish → the subscriber gets the *new* table's decisions
+    let mut sim = Netsim::new(2, NetConfig::gigabit_ethernet());
+    let outcome = coord.refresh("x", &mut sim, &RefreshPolicy::default()).unwrap();
+    assert!(outcome.refreshed());
+    let pushes = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    match &pushes[..] {
+        [Push::TableUpdate { epoch, cluster, rows }] => {
+            assert_eq!(cluster, "x");
+            for (pt, d) in rows {
+                assert_eq!(*d, tb.decision(pt.op, pt.p, pt.m), "{pt:?}");
+            }
+            assert!(
+                *epoch > initial_epoch,
+                "push epochs are monotonic: {epoch} after {initial_epoch}"
+            );
+        }
+        other => panic!("expected one TableUpdate after the refresh, got {other:?}"),
+    }
+    client.close();
+}
+
+#[test]
+fn subscription_sees_invalidate_when_tables_retire_unreplaced() {
+    // An INVALIDATE (rather than a TABLEUPDATE) is pushed exactly when a
+    // subscriber's last-known tables leave the cache while its cluster
+    // has no fresh published tables to replace them. Arrange that state
+    // deterministically: re-register the subscribed cluster to a third
+    // hardware class (no publish), then retire the old signature via a
+    // drift-refresh of another cluster that shared it.
+    let coord = Arc::new(Coordinator::new(small_config()));
+    let net_b = measured(NetConfig::gigabit_ethernet());
+    coord.register("x", 24, net_b.clone());
+
+    let server = LoopbackServer::start(Arc::clone(&coord));
+    let client = server.connect().unwrap();
+    let points = [Point { op: Op::Bcast, p: 24, m: 65536 }];
+    let (_, sub_epoch) = client.subscribe("x", &points).unwrap();
+    let initial = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    assert!(matches!(initial[..], [Push::TableUpdate { .. }]), "{initial:?}");
+
+    // "x" now points at an untuned third class; "y" shares the old
+    // signature, and refreshing it away retires the old tables.
+    coord.register("x", 24, measured(NetConfig::myrinet_like()));
+    coord.register("y", 24, net_b);
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    let outcome = coord.refresh("y", &mut sim, &RefreshPolicy::default()).unwrap();
+    assert!(outcome.refreshed());
+
+    let pushes = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    match &pushes[..] {
+        [Push::Invalidate { epoch, cluster }] => {
+            assert_eq!(cluster, "x");
+            assert!(*epoch > sub_epoch, "invalidation epoch advances: {epoch} > {sub_epoch}");
+        }
+        other => panic!("expected exactly one Invalidate, got {other:?}"),
+    }
+
+    // The ordering guarantee end-to-end: after acknowledging that
+    // INVALIDATE, a fresh query must come back at an epoch >= the
+    // invalidation floor (the client would reject it as `stale`
+    // otherwise) — and it does, because the server tunes the current
+    // signature on demand.
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert!(d.predicted > 0.0);
+    client.close();
+}
+
+// ---- TCP ---------------------------------------------------------------
+
+#[test]
+fn tcp_ephemeral_port_smoke_batch_and_clean_shutdown() {
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server =
+        CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    assert_ne!(server.local_addr().port(), 0, "ephemeral port resolved");
+
+    let client = NetClient::connect(&addr).unwrap();
+    assert!(client.banner().contains("coordd"));
+    let replies = client
+        .query_batch(&[
+            Query { op: Op::Bcast, cluster: "fe".into(), p: 24, m: 65536 },
+            Query { op: Op::Bcast, cluster: "ghost".into(), p: 24, m: 65536 },
+        ])
+        .unwrap();
+    let ok = replies[0].as_ref().expect("registered cluster answers over TCP");
+    assert_eq!(*ok, coord.decision(Op::Bcast, "fe", 24, 65536).unwrap());
+    assert_eq!(replies[1].as_ref().unwrap_err().code, codes::UNREGISTERED);
+
+    let epoch = client.ping().unwrap();
+    assert!(epoch >= 1, "tables were published before the ping");
+    client.close();
+    server.shutdown(); // joins accept loop, connection threads, notifier
+}
+
+#[test]
+fn tcp_remote_shutdown_is_opt_in() {
+    let coord = Arc::new(Coordinator::new(small_config()));
+
+    // refused by default
+    let server =
+        CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let err = client.shutdown_server().unwrap_err();
+    let remote = err.downcast::<collective_tuner::coordinator::net::RemoteError>().unwrap();
+    assert_eq!(remote.code, codes::UNSUPPORTED);
+    assert!(!server.shutdown_requested());
+    client.close();
+    server.shutdown();
+
+    // honored when enabled
+    let server = CoordServer::start(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        ServerOptions { allow_remote_shutdown: true, ..ServerOptions::default() },
+    )
+    .unwrap();
+    let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    client.shutdown_server().unwrap();
+    assert!(server.shutdown_requested());
+    server.shutdown();
+}
+
+#[test]
+fn tcp_version_mismatch_is_refused_with_an_error_frame() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let coord = Arc::new(Coordinator::new(small_config()));
+    let server =
+        CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(b"HELLO\tct\t9999\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let frame = Frame::decode(&line).unwrap();
+    match frame {
+        Frame::Error { code, .. } => assert_eq!(code, codes::VERSION),
+        other => panic!("expected ERROR frame, got {other:?}"),
+    }
+    server.shutdown();
+}
