@@ -4,11 +4,13 @@
 //! service), a 32-reader publish storm (warm reads racing a writer
 //! that refreshes — re-tunes and republishes — continuously), and a
 //! sockets phase (4 `ct/1` clients batching 16 queries per round-trip
-//! against a real TCP `CoordServer` on an ephemeral port). Runs with
-//! the obs layer enabled so the registry's `coordinator.decision_ns`
-//! and `net.request_ns` histograms yield the gated
-//! `decision_latency_p95`, `contended_p95_over_warm_p95`, and
-//! `net_query_p95` metrics. Emits
+//! against a real TCP `CoordServer` on an ephemeral port), and a
+//! degraded phase (every tuner run fails and each decision is served
+//! from the stale shelf, gating the fallback ladder's latency). Runs
+//! with the obs layer enabled so the registry's
+//! `coordinator.decision_ns` and `net.request_ns` histograms yield the
+//! gated `decision_latency_p95`, `contended_p95_over_warm_p95`,
+//! `net_query_p95`, and `stale_serve_p95` metrics. Emits
 //! `BENCH_coordinator.candidate.json` at the repository root by default;
 //! pass `-- --write-baseline` to overwrite the committed
 //! `BENCH_coordinator.json` instead.
@@ -292,6 +294,36 @@ fn main() {
         net_query_p95_ns
     );
 
+    // ---- degraded: stale-shelf serves while every tune fails ------------
+    // A dedicated coordinator: tune once, retire the tables to the
+    // stale shelf, then fail every tuner run — each decision walks
+    // miss → failed tune → shelf hit. Degraded answers are never
+    // cached, so every iteration exercises the full ladder; the gated
+    // `stale_serve_p95` keeps that path at lookup cost (a hidden tuner
+    // run or allocation storm in the degraded path would blow it).
+    section("degraded (stale-shelf serve while every tune fails)");
+    let degraded = Coordinator::new(config());
+    degraded.register("fe", 24, net_fe.clone());
+    let _ = degraded.tables("fe").unwrap();
+    degraded.invalidate("fe");
+    let deg_opts = BenchOpts {
+        warmup_iters: 100,
+        min_iters: 5_000,
+        max_iters: 500_000,
+        min_seconds: 1.0,
+    };
+    let r_degraded = bench_with("stale serve: decision() with a failing tuner", &deg_opts, || {
+        degraded.inject_tune_failures(1);
+        std::hint::black_box(degraded.decision(Op::Bcast, "fe", 24, 65536).unwrap());
+    });
+    let deg = degraded.stats();
+    assert!(deg.stale_serves > 0, "the degraded phase must actually serve stale");
+    println!(
+        "degraded phase: {} stale serve(s) for {} injected failure(s), {} real tuner run(s)",
+        deg.stale_serves, deg.tune_failures, deg.tunes
+    );
+    let stale_serve_p95_ns = r_degraded.summary.p95 * 1e9;
+
     // ---- emit the bench JSON at the repo root ---------------------------
     // Default to a .candidate file so a casual local run can never
     // clobber the committed baseline; CI gates committed vs candidate.
@@ -305,9 +337,10 @@ fn main() {
     let json = format!
 ("{{
   \"benchmark\": \"coordinator_lookup\",
-  \"description\": \"L3 coordinator decision path: cold miss vs warm hit vs contended hit vs batched ct/1 queries over TCP\",
+  \"description\": \"L3 coordinator decision path: cold miss vs warm hit vs contended hit vs batched ct/1 queries over TCP vs degraded stale-shelf serves\",
   \"unit\": \"seconds per query\",
   \"results\": [
+{},
 {},
 {},
 {},
@@ -315,6 +348,7 @@ fn main() {
 {}
   ],
   \"metrics\": [
+{},
 {},
 {},
 {}
@@ -328,9 +362,11 @@ fn main() {
         json_entry("contended_hit", &r_contended),
         json_hist_entry("contended_hit_32t", &snap32),
         json_entry("net_batch16", &r_net),
+        json_entry("stale_serve", &r_degraded),
         json_metric("decision_latency_p95", decision_p95_ns as f64, false),
         json_metric("contended_p95_over_warm_p95", ratio_p95, false),
         json_metric("net_query_p95", net_query_p95_ns as f64, false),
+        json_metric("stale_serve_p95", stale_serve_p95_ns, false),
         r_cold.summary.p50 / r_warm.summary.p50.max(1e-12),
         st.tunes
     );

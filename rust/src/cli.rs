@@ -229,6 +229,15 @@ COMMANDS:
                   --metrics-interval N     (print an obs snapshot every N
                                             seconds, plus a final
                                             OBS_SNAPSHOT_JSON line on exit)
+                  --idle-timeout SECS      (reap connections idle that long;
+                                            0/absent = never)
+                  --max-connections N      (shed new connections past N live
+                                            ones with a retryable NACK busy)
+                  --max-staleness SECS     (serve evicted tables this long
+                                            when a re-tune fails, default 300)
+                  --inject-tune-failure-at N  (chaos hook: arm one injected
+                                               tuner failure at churn pass N;
+                                               needs --churn-ms)
   query         one-shot coordinator query (tunes on first use, cached after)
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --procs 24  --bytes 64k
@@ -242,11 +251,20 @@ COMMANDS:
                                         --procs takes a comma list and
                                         becomes one batched request)
                   with --connect:
+                    --resilient          (socket deadlines + bounded-backoff
+                                          retries; rides out a coordd restart)
                     --subscribe          (subscribe to the queried points)
                     --wait-pushes K      (poll until K pushes arrive)
                     --push-timeout SECS  (poll deadline, default 10)
                     --shutdown           (ask the server to exit; needs
                                           --allow-remote-shutdown there)
+                    --repeat N           (re-issue the batch N times,
+                                          default 1)
+                    --interval-ms N      (sleep between repeats)
+                  exit codes with --connect: 0 ok, 3 transport failure
+                  (retryable: back off and redial), 4 unregistered cluster
+                  (fatal), 1 anything else; a one-line retryable/fatal
+                  classification is printed to stderr alongside the error
   obs           observability inspection
                   obs dump: exercise a miniature coordinator workload and
                   print the metrics registry snapshot (JSON), the

@@ -54,7 +54,7 @@ pub mod snapshot;
 
 pub use refresh::{RefreshOutcome, RefreshPolicy};
 pub use service::{
-    Coordinator, CoordinatorConfig, CoordinatorStats, PublishEvent, PublishKind,
+    Coordinator, CoordinatorConfig, CoordinatorStats, DecisionSource, PublishEvent, PublishKind,
     RegisteredCluster, TableSet,
 };
 pub use signature::ClusterSignature;

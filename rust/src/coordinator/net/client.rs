@@ -7,14 +7,41 @@
 //! snapshot older than an `INVALIDATE` it had already observed when
 //! the query was sent.
 //!
+//! ## Resilience contract
+//!
+//! Every failure is classified before anything else happens:
+//!
+//! * **transport** ([`TransportError`]) — I/O error, socket deadline,
+//!   EOF mid-stream, or undecodable bytes from the peer. The link is
+//!   torn down; with a redial handle and a multi-attempt
+//!   [`RetryPolicy`] the next attempt reconnects transparently
+//!   (re-`HELLO`, re-`SUBSCRIBE` every recorded subscription) and
+//!   re-sends the request. All `ct/1` client requests are idempotent
+//!   reads, so a resend after an ambiguous failure is safe.
+//! * **remote** ([`RemoteError`]) — the server answered with a
+//!   structured refusal. Only `busy` (the accept-gate shed) is
+//!   retryable; everything else is surfaced immediately.
+//! * **protocol** — the peer spoke, decodably, out of turn. Never
+//!   retried in place.
+//!
+//! Reconnection preserves the per-cluster invalidation floors: an
+//! `INVALIDATE` observed on the old connection still fences decisions
+//! served on the new one (§6 survives the socket). Backoff between
+//! attempts is bounded exponential with *deterministic* decorrelated
+//! jitter — the jitter stream is a hash of the attempt counter, not an
+//! OS random draw, so a replayed failure schedule backs off on a
+//! byte-identical schedule.
+//!
 //! ## Concurrency contract
 //!
-//! * The whole connection state (reader, writer, id counter, buffered
-//!   pushes, per-cluster invalidation floors) lives behind **one
-//!   mutex**; every method takes `&self`, so a [`NetClient`] can be
-//!   shared across threads like the in-process coordinator — requests
-//!   from different threads serialize per connection (open one client
-//!   per thread for parallelism; the bench does exactly that).
+//! * The whole connection state (link, id counter, buffered pushes,
+//!   per-cluster invalidation floors, retry bookkeeping) lives behind
+//!   **one mutex**; every method takes `&self`, so a [`NetClient`] can
+//!   be shared across threads like the in-process coordinator —
+//!   requests from different threads serialize per connection (open one
+//!   client per thread for parallelism; the bench does exactly that).
+//!   Backoff sleeps hold the mutex: a retrying request keeps the
+//!   connection to itself, exactly as a slow round-trip would.
 //! * The transport is any `Read`/`Write` pair: a `TcpStream` clone
 //!   pair ([`NetClient::connect`]) or a loopback pipe pair
 //!   ([`super::loopback::LoopbackServer::connect`]). The client is the
@@ -29,12 +56,13 @@
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::io::{BufReader, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs;
 use crate::tuner::{Decision, Op};
 
 use super::frame::{codes, Frame, Point, Query, QueryReply, PROTOCOL_VERSION};
@@ -46,6 +74,15 @@ pub struct RemoteError {
     pub message: String,
 }
 
+impl RemoteError {
+    /// Whether retrying the same request (after backoff, possibly on a
+    /// fresh connection) can plausibly succeed. Matches the
+    /// classification table in docs/PROTOCOL.md §8.
+    pub fn is_retryable(&self) -> bool {
+        self.code == codes::BUSY
+    }
+}
+
 impl fmt::Display for RemoteError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}: {}", self.code, self.message)
@@ -53,6 +90,156 @@ impl fmt::Display for RemoteError {
 }
 
 impl std::error::Error for RemoteError {}
+
+/// A transport-level failure: I/O error, socket deadline expiry, EOF
+/// mid-stream, or bytes the frame codec could not decode. Always
+/// retryable on a fresh connection; the old one is torn down.
+#[derive(Debug, Clone)]
+pub struct TransportError(pub String);
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "transport: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// How many times a request is attempted and how the client backs off
+/// in between. The two presets name the two sensible postures; the
+/// fields are public for anything in between.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per request (≥ 1; 1 = no retries).
+    pub max_attempts: u32,
+    /// First backoff delay (and the floor of every later one).
+    pub base_delay: Duration,
+    /// Hard cap on any single backoff delay.
+    pub max_delay: Duration,
+}
+
+impl RetryPolicy {
+    /// One attempt, no backoff: every failure surfaces immediately.
+    /// The right posture for tests and for callers with their own
+    /// retry loop.
+    pub fn fail_fast() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            base_delay: Duration::from_millis(0),
+            max_delay: Duration::from_millis(0),
+        }
+    }
+
+    /// Six attempts, 25 ms base, 1 s cap: rides out a server restart
+    /// without hammering it.
+    pub fn resilient() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 6,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_secs(1),
+        }
+    }
+
+    /// The delay before retry number `seq` (a client-lifetime attempt
+    /// counter), given the previous delay: decorrelated jitter
+    /// (`delay ∈ [base, 3·prev]`, capped) with the random draw
+    /// replaced by a fixed multiplicative hash of `seq`, so the
+    /// schedule is reproducible run to run.
+    pub fn backoff_delay(&self, seq: u64, prev: Duration) -> Duration {
+        let lo = self.base_delay.as_nanos() as f64;
+        let hi = ((prev.as_nanos() as f64) * 3.0).max(lo);
+        let raw = lo + jitter_frac(seq) * (hi - lo);
+        Duration::from_nanos(raw.min(self.max_delay.as_nanos() as f64) as u64)
+    }
+}
+
+/// SplitMix64 finalizer → uniform fraction in `[0, 1)`. Deterministic:
+/// the jitter stream is a pure function of the attempt counter.
+fn jitter_frac(seq: u64) -> f64 {
+    let mut z = seq.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Connection-shaping knobs: socket deadlines plus the retry posture.
+/// The default is byte-for-byte the pre-resilience client — no
+/// deadlines, fail-fast — so existing callers change nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientOptions {
+    /// TCP connect deadline (`None` = OS default).
+    pub connect_timeout: Option<Duration>,
+    /// Socket read deadline; a read that exceeds it is a
+    /// [`TransportError`], never an indefinite hang.
+    pub read_timeout: Option<Duration>,
+    /// Socket write deadline.
+    pub write_timeout: Option<Duration>,
+    /// Attempt count and backoff shape.
+    pub retry: RetryPolicy,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            connect_timeout: None,
+            read_timeout: None,
+            write_timeout: None,
+            retry: RetryPolicy::fail_fast(),
+        }
+    }
+}
+
+impl ClientOptions {
+    /// Deadlines on every socket operation plus the resilient retry
+    /// posture: the configuration the chaos suite runs under.
+    pub fn resilient() -> ClientOptions {
+        ClientOptions {
+            connect_timeout: Some(Duration::from_secs(2)),
+            read_timeout: Some(Duration::from_secs(5)),
+            write_timeout: Some(Duration::from_secs(5)),
+            retry: RetryPolicy::resilient(),
+        }
+    }
+}
+
+/// A dialing function: produces a fresh, unhandshaken transport pair.
+/// Stored so the client can reconnect transparently.
+type Redial = dyn Fn() -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> + Send + Sync;
+
+/// One live, handshaken transport.
+struct Link {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: Box<dyn Write + Send>,
+    banner: String,
+}
+
+struct Inner {
+    /// `None` = no usable connection; the next request redials (or
+    /// fails with [`TransportError`] if there is nothing to dial).
+    link: Option<Link>,
+    redial: Option<Box<Redial>>,
+    opts: ClientOptions,
+    next_id: u64,
+    /// Client-lifetime backoff draw counter (the jitter stream index).
+    jitter_seq: u64,
+    /// Whether a handshake has ever succeeded (distinguishes the
+    /// constructor's first dial from a true reconnection).
+    ever_connected: bool,
+    /// Successful transparent reconnections.
+    reconnects: u64,
+    pushes: VecDeque<Push>,
+    /// Per-cluster invalidation floor: the highest `INVALIDATE` epoch
+    /// observed. Decisions at or above the floor recorded *before* a
+    /// query was sent are guaranteed by the server; a response below
+    /// that floor is a protocol violation surfaced as `stale`. The map
+    /// deliberately survives reconnection: the guarantee is about what
+    /// this client has *observed*, not about any one socket.
+    invalidated: HashMap<String, u64>,
+    /// Subscriptions to re-establish after a reconnect, newest per
+    /// cluster.
+    subs: Vec<(String, Vec<Point>)>,
+}
 
 /// A server-initiated push, as surfaced to client code.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,65 +250,104 @@ pub enum Push {
     TableUpdate { epoch: u64, cluster: String, rows: Vec<(Point, Decision)> },
 }
 
-struct Inner {
-    reader: BufReader<Box<dyn Read + Send>>,
-    writer: Box<dyn Write + Send>,
-    next_id: u64,
-    pushes: VecDeque<Push>,
-    /// Per-cluster invalidation floor: the highest `INVALIDATE` epoch
-    /// observed. Decisions at or above the floor recorded *before* a
-    /// query was sent are guaranteed by the server; a response below
-    /// that floor is a protocol violation surfaced as `stale`.
-    invalidated: HashMap<String, u64>,
-    banner: String,
-}
-
-/// A `ct/1` client connection. See the module docs for the sharing and
-/// push-delivery contract.
+/// A `ct/1` client connection. See the module docs for the sharing,
+/// push-delivery, and resilience contracts.
 pub struct NetClient {
     inner: Mutex<Inner>,
 }
 
 impl NetClient {
-    /// Connect over TCP and handshake.
+    /// Connect over TCP and handshake, with the default (fail-fast,
+    /// deadline-free) options.
     pub fn connect(addr: &str) -> Result<NetClient> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        let _ = stream.set_nodelay(true);
-        let reader = stream.try_clone().context("cloning stream")?;
-        NetClient::from_transport(Box::new(reader), Box::new(stream))
+        NetClient::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect over TCP with explicit deadlines and retry posture. The
+    /// dial itself runs under the retry policy, and the client keeps
+    /// the address as a redial handle for transparent reconnection.
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<NetClient> {
+        let addr_owned = addr.to_string();
+        let redial: Box<Redial> = Box::new(move || dial_tcp(&addr_owned, &opts));
+        let mut inner = Inner {
+            link: None,
+            redial: Some(redial),
+            opts,
+            next_id: 1,
+            jitter_seq: 0,
+            ever_connected: false,
+            reconnects: 0,
+            pushes: VecDeque::new(),
+            invalidated: HashMap::new(),
+            subs: Vec::new(),
+        };
+        retrying(&mut inner, |inner| ensure_link(inner))?;
+        Ok(NetClient { inner: Mutex::new(inner) })
     }
 
     /// Handshake over an arbitrary transport (the loopback pipes, or a
-    /// pre-connected socket pair).
+    /// pre-connected socket pair), with default options and no redial
+    /// handle: a transport failure here is terminal for the client.
     pub fn from_transport(
         reader: Box<dyn Read + Send>,
         writer: Box<dyn Write + Send>,
     ) -> Result<NetClient> {
-        let mut inner = Inner {
-            reader: BufReader::new(reader),
-            writer,
-            next_id: 1,
-            pushes: VecDeque::new(),
-            invalidated: HashMap::new(),
-            banner: String::new(),
-        };
-        send(&mut inner, &Frame::Hello { version: PROTOCOL_VERSION })?;
-        match recv_response(&mut inner)? {
-            Frame::Welcome { version, banner } if version == PROTOCOL_VERSION => {
-                inner.banner = banner;
-            }
-            Frame::Welcome { version, .. } => {
-                bail!("server answered ct/{version}, this client speaks ct/{PROTOCOL_VERSION}")
-            }
-            Frame::Error { code, message } => bail!("handshake refused: {code}: {message}"),
-            other => bail!("handshake violation: expected WELCOME, got {other:?}"),
-        }
-        Ok(NetClient { inner: Mutex::new(inner) })
+        NetClient::from_transport_with(reader, writer, ClientOptions::default())
     }
 
-    /// The server's `WELCOME` banner.
+    /// [`NetClient::from_transport`] with explicit options. Socket
+    /// deadlines do not apply (the transport is opaque), but the retry
+    /// policy governs `busy` refusals and — once a redial handle is
+    /// installed with [`NetClient::set_redial`] — reconnection.
+    pub fn from_transport_with(
+        reader: Box<dyn Read + Send>,
+        writer: Box<dyn Write + Send>,
+        opts: ClientOptions,
+    ) -> Result<NetClient> {
+        let mut link = Link { reader: BufReader::new(reader), writer, banner: String::new() };
+        handshake(&mut link)?;
+        Ok(NetClient {
+            inner: Mutex::new(Inner {
+                link: Some(link),
+                redial: None,
+                opts,
+                next_id: 1,
+                jitter_seq: 0,
+                ever_connected: true,
+                reconnects: 0,
+                pushes: VecDeque::new(),
+                invalidated: HashMap::new(),
+                subs: Vec::new(),
+            }),
+        })
+    }
+
+    /// Install (or replace) the redial handle: how the client obtains a
+    /// fresh transport after the current one fails. `connect*` installs
+    /// one automatically; transport-constructed clients (loopback) use
+    /// this to opt into reconnection.
+    pub fn set_redial<F>(&self, f: F)
+    where
+        F: Fn() -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> + Send + Sync + 'static,
+    {
+        self.inner.lock().unwrap().redial = Some(Box::new(f));
+    }
+
+    /// The server's `WELCOME` banner (from the most recent handshake).
     pub fn banner(&self) -> String {
-        self.inner.lock().unwrap().banner.clone()
+        let inner = self.inner.lock().unwrap();
+        inner.link.as_ref().map(|l| l.banner.clone()).unwrap_or_default()
+    }
+
+    /// Successful transparent reconnections so far.
+    pub fn reconnects(&self) -> u64 {
+        self.inner.lock().unwrap().reconnects
+    }
+
+    /// The highest `INVALIDATE` epoch observed for `cluster` (0 if
+    /// none). Survives reconnection — see the module docs.
+    pub fn invalidation_floor(&self, cluster: &str) -> u64 {
+        self.inner.lock().unwrap().invalidated.get(cluster).copied().unwrap_or(0)
     }
 
     /// The warm-read surface, one point at a time: exactly the
@@ -141,92 +367,30 @@ impl NetClient {
 
     /// One batched round-trip: every query answered in order, each
     /// individually a decision or a structured error (a batch can
-    /// partially succeed).
+    /// partially succeed). Runs under the retry policy.
     pub fn query_batch(&self, queries: &[Query]) -> Result<Vec<Result<Decision, RemoteError>>> {
         let mut inner = self.inner.lock().unwrap();
-        let id = inner.next_id;
-        inner.next_id += 1;
-        // Snapshot the invalidation floors *before* sending: pushes
-        // that arrive while we wait may postdate the server's answer
-        // and must not count against it.
-        let floor: u64 = queries
-            .iter()
-            .filter_map(|q| inner.invalidated.get(&q.cluster).copied())
-            .max()
-            .unwrap_or(0);
-        send(&mut inner, &Frame::Batch { id, queries: queries.to_vec() })?;
-        let (epoch, replies) = loop {
-            match recv_response(&mut inner)? {
-                Frame::Decisions { id: rid, epoch, replies } if rid == id => {
-                    break (epoch, replies)
-                }
-                Frame::Nack { id: rid, code, message } if rid == id => {
-                    bail!(RemoteError { code, message })
-                }
-                other => bail!("expected DECISIONS for id {id}, got {other:?}"),
-            }
-        };
-        if replies.len() != queries.len() {
-            bail!("server answered {} replies to {} queries", replies.len(), queries.len());
-        }
-        let any_ok = replies.iter().any(|r| matches!(r, QueryReply::Decision(_)));
-        if any_ok && epoch < floor {
-            // The ordering guarantee says this cannot happen with a
-            // conforming server; surface it instead of serving a
-            // decision older than an acknowledged invalidation.
-            bail!(RemoteError {
-                code: codes::STALE.to_string(),
-                message: format!(
-                    "decisions at epoch {epoch} predate acknowledged invalidate at {floor}"
-                ),
-            });
-        }
-        Ok(replies
-            .into_iter()
-            .map(|r| match r {
-                QueryReply::Decision(d) => Ok(d),
-                QueryReply::Error { code, message } => Err(RemoteError { code, message }),
-            })
-            .collect())
+        retrying(&mut inner, |inner| try_query_batch(inner, queries))
     }
 
     /// Subscribe to `(op, P, m)` points of one cluster. Returns the
     /// cluster's signature key and the subscription epoch; the initial
-    /// `TABLEUPDATE` lands in the push buffer immediately after.
+    /// `TABLEUPDATE` lands in the push buffer immediately after. The
+    /// subscription is recorded and re-established automatically after
+    /// a reconnect.
     pub fn subscribe(&self, cluster: &str, points: &[Point]) -> Result<(String, u64)> {
         let mut inner = self.inner.lock().unwrap();
-        let id = inner.next_id;
-        inner.next_id += 1;
-        send(
-            &mut inner,
-            &Frame::Subscribe { id, cluster: cluster.to_string(), points: points.to_vec() },
-        )?;
-        loop {
-            match recv_response(&mut inner)? {
-                Frame::Subscribed { id: rid, signature, epoch, .. } if rid == id => {
-                    return Ok((signature, epoch))
-                }
-                Frame::Nack { id: rid, code, message } if rid == id => {
-                    bail!(RemoteError { code, message })
-                }
-                other => bail!("expected SUBSCRIBED for id {id}, got {other:?}"),
-            }
-        }
+        let out = retrying(&mut inner, |inner| try_subscribe(inner, cluster, points))?;
+        inner.subs.retain(|(c, _)| c != cluster);
+        inner.subs.push((cluster.to_string(), points.to_vec()));
+        Ok(out)
     }
 
     /// One `PING` round-trip; returns the server's current publish
     /// epoch. Also drains any queued pushes into the buffer.
     pub fn ping(&self) -> Result<u64> {
         let mut inner = self.inner.lock().unwrap();
-        let id = inner.next_id;
-        inner.next_id += 1;
-        send(&mut inner, &Frame::Ping { id })?;
-        loop {
-            match recv_response(&mut inner)? {
-                Frame::Pong { id: rid, epoch } if rid == id => return Ok(epoch),
-                other => bail!("expected PONG for id {id}, got {other:?}"),
-            }
-        }
+        retrying(&mut inner, try_ping)
     }
 
     /// Drain every buffered push (non-blocking; pushes are buffered as
@@ -257,11 +421,14 @@ impl NetClient {
 
     /// Ask the server to shut down (requires `--allow-remote-shutdown`
     /// on the server side). Returns once the server acknowledges with
-    /// `BYE`.
+    /// `BYE`. Never retried: shutdown is not an idempotent read.
     pub fn shutdown_server(&self) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
-        send(&mut inner, &Frame::Shutdown)?;
-        match recv_response(&mut inner)? {
+        ensure_link(&mut inner)?;
+        let Inner { link, pushes, invalidated, .. } = &mut *inner;
+        let link = link.as_mut().expect("ensure_link");
+        send(link, &Frame::Shutdown)?;
+        match recv_response(link, pushes, invalidated)? {
             Frame::Bye => Ok(()),
             Frame::Error { code, message } => bail!(RemoteError { code, message }),
             other => bail!("expected BYE, got {other:?}"),
@@ -271,35 +438,351 @@ impl NetClient {
     /// Polite hangup (best-effort `BYE`).
     pub fn close(self) {
         let mut inner = self.inner.lock().unwrap();
-        let _ = send(&mut inner, &Frame::Bye);
+        if let Some(link) = inner.link.as_mut() {
+            let _ = send(link, &Frame::Bye);
+        }
     }
 }
 
-fn send(inner: &mut Inner, frame: &Frame) -> Result<()> {
-    let bytes = frame.encode();
-    inner.writer.write_all(bytes.as_bytes()).context("writing frame")?;
-    inner.writer.flush().context("flushing frame")?;
+/// Dial `addr` with the options' connect/read/write deadlines applied.
+fn dial_tcp(
+    addr: &str,
+    opts: &ClientOptions,
+) -> Result<(Box<dyn Read + Send>, Box<dyn Write + Send>)> {
+    let stream = match opts.connect_timeout {
+        Some(t) => {
+            let addrs = addr
+                .to_socket_addrs()
+                .map_err(|e| TransportError(format!("resolving {addr}: {e}")))?;
+            let mut last: Option<std::io::Error> = None;
+            let mut stream = None;
+            for a in addrs {
+                match TcpStream::connect_timeout(&a, t) {
+                    Ok(s) => {
+                        stream = Some(s);
+                        break;
+                    }
+                    Err(e) => last = Some(e),
+                }
+            }
+            match stream {
+                Some(s) => s,
+                None => bail!(TransportError(format!(
+                    "connecting {addr}: {}",
+                    last.map_or_else(|| "no addresses".to_string(), |e| e.to_string())
+                ))),
+            }
+        }
+        None => TcpStream::connect(addr)
+            .map_err(|e| TransportError(format!("connecting {addr}: {e}")))?,
+    };
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(opts.read_timeout)
+        .map_err(|e| TransportError(format!("setting read deadline: {e}")))?;
+    stream
+        .set_write_timeout(opts.write_timeout)
+        .map_err(|e| TransportError(format!("setting write deadline: {e}")))?;
+    let reader = stream
+        .try_clone()
+        .map_err(|e| TransportError(format!("cloning stream: {e}")))?;
+    Ok((Box::new(reader), Box::new(stream)))
+}
+
+/// Run `attempt` under `inner`'s retry policy: transport failures tear
+/// the link down and (with a redial handle) reconnect on the next
+/// attempt; `busy` refusals back off and retry on the same link;
+/// everything else surfaces immediately.
+fn retrying<T>(inner: &mut Inner, mut attempt: impl FnMut(&mut Inner) -> Result<T>) -> Result<T> {
+    let policy = inner.opts.retry;
+    let max_attempts = policy.max_attempts.max(1);
+    let mut prev = policy.base_delay;
+    let mut tries = 0u32;
+    loop {
+        tries += 1;
+        let err = match attempt(inner) {
+            Ok(v) => return Ok(v),
+            Err(e) => e,
+        };
+        let transport = err.downcast_ref::<TransportError>().is_some();
+        if transport {
+            // the stream state is unknowable (a frame may be half
+            // written or half read): never reuse the link
+            inner.link = None;
+        }
+        let busy = err
+            .downcast_ref::<RemoteError>()
+            .map(RemoteError::is_retryable)
+            .unwrap_or(false);
+        if !(transport || busy) || tries >= max_attempts {
+            return Err(err);
+        }
+        if transport && inner.redial.is_none() {
+            return Err(err); // nothing to reconnect with
+        }
+        let delay = policy.backoff_delay(inner.jitter_seq, prev);
+        inner.jitter_seq += 1;
+        prev = delay;
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+    }
+}
+
+/// Make sure `inner.link` is a live, handshaken connection, redialing
+/// if necessary. A successful redial re-establishes every recorded
+/// subscription and counts into `net.reconnects`.
+fn ensure_link(inner: &mut Inner) -> Result<()> {
+    if inner.link.is_some() {
+        return Ok(());
+    }
+    let redial = match inner.redial.as_ref() {
+        Some(r) => r,
+        None => bail!(TransportError(
+            "connection failed and this client has no redial handle".to_string()
+        )),
+    };
+    let (reader, writer) = match redial() {
+        Ok(pair) => pair,
+        Err(e) => match e.downcast::<TransportError>() {
+            Ok(te) => bail!(te),
+            Err(e) => bail!(TransportError(format!("redial failed: {e:#}"))),
+        },
+    };
+    let mut link = Link { reader: BufReader::new(reader), writer, banner: String::new() };
+    handshake(&mut link)?;
+    inner.link = Some(link);
+    if inner.ever_connected {
+        inner.reconnects += 1;
+        if obs::enabled() {
+            obs::registry().counter("net.reconnects").inc();
+        }
+    }
+    inner.ever_connected = true;
+    resubscribe(inner)
+}
+
+/// `HELLO` → `WELCOME` (or a structured refusal). A `NACK` here is the
+/// server's accept gate shedding load before the handshake; its code
+/// (`busy`) is retryable and classified by the caller.
+fn handshake(link: &mut Link) -> Result<()> {
+    send(link, &Frame::Hello { version: PROTOCOL_VERSION })?;
+    match recv_frame(link)? {
+        Frame::Welcome { version, banner } if version == PROTOCOL_VERSION => {
+            link.banner = banner;
+            Ok(())
+        }
+        Frame::Welcome { version, .. } => {
+            bail!("server answered ct/{version}, this client speaks ct/{PROTOCOL_VERSION}")
+        }
+        Frame::Nack { code, message, .. } => bail!(RemoteError { code, message }),
+        Frame::Error { code, message } => bail!("handshake refused: {code}: {message}"),
+        other => bail!("handshake violation: expected WELCOME, got {other:?}"),
+    }
+}
+
+/// Re-issue every recorded subscription on the fresh link. A
+/// subscription the server now refuses (e.g. the cluster was
+/// unregistered while we were away) is dropped with a warning rather
+/// than failing the reconnect.
+fn resubscribe(inner: &mut Inner) -> Result<()> {
+    let subs = std::mem::take(&mut inner.subs);
+    for (cluster, points) in subs {
+        match try_subscribe(inner, &cluster, &points) {
+            Ok(_) => inner.subs.push((cluster, points)),
+            Err(e) => {
+                if e.downcast_ref::<TransportError>().is_some() {
+                    return Err(e); // the fresh link already died
+                }
+                log::warn!("dropping subscription to '{cluster}' after reconnect: {e:#}");
+            }
+        }
+    }
     Ok(())
 }
 
-/// Read frames until a non-push arrives, buffering pushes (and folding
-/// `INVALIDATE` epochs into the per-cluster floor) on the way. A
-/// connection-level `ERROR` or EOF is fatal.
-fn recv_response(inner: &mut Inner) -> Result<Frame> {
+fn try_query_batch(
+    inner: &mut Inner,
+    queries: &[Query],
+) -> Result<Vec<Result<Decision, RemoteError>>> {
+    ensure_link(inner)?;
+    let id = inner.next_id;
+    inner.next_id += 1;
+    // Snapshot the invalidation floors *before* sending: pushes
+    // that arrive while we wait may postdate the server's answer
+    // and must not count against it.
+    let floor: u64 = queries
+        .iter()
+        .filter_map(|q| inner.invalidated.get(&q.cluster).copied())
+        .max()
+        .unwrap_or(0);
+    let Inner { link, pushes, invalidated, .. } = &mut *inner;
+    let link = link.as_mut().expect("ensure_link");
+    send(link, &Frame::Batch { id, queries: queries.to_vec() })?;
+    let (epoch, replies) = loop {
+        match recv_response(link, pushes, invalidated)? {
+            Frame::Decisions { id: rid, epoch, replies } if rid == id => break (epoch, replies),
+            Frame::Nack { id: rid, code, message } if rid == id => {
+                bail!(RemoteError { code, message })
+            }
+            other => bail!("expected DECISIONS for id {id}, got {other:?}"),
+        }
+    };
+    if replies.len() != queries.len() {
+        bail!("server answered {} replies to {} queries", replies.len(), queries.len());
+    }
+    let any_ok = replies.iter().any(|r| matches!(r, QueryReply::Decision(_)));
+    if any_ok && epoch < floor {
+        // The ordering guarantee says this cannot happen with a
+        // conforming server; surface it instead of serving a
+        // decision older than an acknowledged invalidation.
+        bail!(RemoteError {
+            code: codes::STALE.to_string(),
+            message: format!(
+                "decisions at epoch {epoch} predate acknowledged invalidate at {floor}"
+            ),
+        });
+    }
+    Ok(replies
+        .into_iter()
+        .map(|r| match r {
+            QueryReply::Decision(d) => Ok(d),
+            QueryReply::Error { code, message } => Err(RemoteError { code, message }),
+        })
+        .collect())
+}
+
+fn try_subscribe(inner: &mut Inner, cluster: &str, points: &[Point]) -> Result<(String, u64)> {
+    ensure_link(inner)?;
+    let id = inner.next_id;
+    inner.next_id += 1;
+    let Inner { link, pushes, invalidated, .. } = &mut *inner;
+    let link = link.as_mut().expect("ensure_link");
+    send(
+        link,
+        &Frame::Subscribe { id, cluster: cluster.to_string(), points: points.to_vec() },
+    )?;
     loop {
-        let frame = Frame::read_from(&mut inner.reader)
-            .map_err(anyhow::Error::from)?
-            .context("server closed the connection")?;
-        match frame {
+        match recv_response(link, pushes, invalidated)? {
+            Frame::Subscribed { id: rid, signature, epoch, .. } if rid == id => {
+                return Ok((signature, epoch))
+            }
+            Frame::Nack { id: rid, code, message } if rid == id => {
+                bail!(RemoteError { code, message })
+            }
+            other => bail!("expected SUBSCRIBED for id {id}, got {other:?}"),
+        }
+    }
+}
+
+fn try_ping(inner: &mut Inner) -> Result<u64> {
+    ensure_link(inner)?;
+    let id = inner.next_id;
+    inner.next_id += 1;
+    let Inner { link, pushes, invalidated, .. } = &mut *inner;
+    let link = link.as_mut().expect("ensure_link");
+    send(link, &Frame::Ping { id })?;
+    loop {
+        match recv_response(link, pushes, invalidated)? {
+            Frame::Pong { id: rid, epoch } if rid == id => return Ok(epoch),
+            other => bail!("expected PONG for id {id}, got {other:?}"),
+        }
+    }
+}
+
+fn send(link: &mut Link, frame: &Frame) -> Result<()> {
+    let bytes = frame.encode();
+    link.writer
+        .write_all(bytes.as_bytes())
+        .map_err(|e| TransportError(format!("writing frame: {e}")))?;
+    link.writer
+        .flush()
+        .map_err(|e| TransportError(format!("flushing frame: {e}")))?;
+    Ok(())
+}
+
+/// Read exactly one frame; every failure mode (I/O error, deadline,
+/// EOF, undecodable bytes) is a [`TransportError`].
+fn recv_frame(link: &mut Link) -> Result<Frame> {
+    match Frame::read_from(&mut link.reader) {
+        Ok(Some(f)) => Ok(f),
+        Ok(None) => bail!(TransportError("server closed the connection".to_string())),
+        Err(e) => bail!(TransportError(format!("reading frame: {e}"))),
+    }
+}
+
+/// Read frames until a non-push arrives, buffering pushes (and folding
+/// `INVALIDATE` epochs into the per-cluster floor) on the way.
+fn recv_response(
+    link: &mut Link,
+    pushes: &mut VecDeque<Push>,
+    invalidated: &mut HashMap<String, u64>,
+) -> Result<Frame> {
+    loop {
+        match recv_frame(link)? {
             Frame::Invalidate { epoch, cluster, .. } => {
-                let floor = inner.invalidated.entry(cluster.clone()).or_insert(0);
+                let floor = invalidated.entry(cluster.clone()).or_insert(0);
                 *floor = (*floor).max(epoch);
-                inner.pushes.push_back(Push::Invalidate { epoch, cluster });
+                pushes.push_back(Push::Invalidate { epoch, cluster });
             }
             Frame::TableUpdate { epoch, cluster, rows, .. } => {
-                inner.pushes.push_back(Push::TableUpdate { epoch, cluster, rows });
+                pushes.push_back(Push::TableUpdate { epoch, cluster, rows });
             }
             other => return Ok(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_bounded() {
+        let p = RetryPolicy::resilient();
+        let mut prev = p.base_delay;
+        let mut schedule = Vec::new();
+        for seq in 0..32u64 {
+            let d = p.backoff_delay(seq, prev);
+            assert!(d >= p.base_delay, "delay {d:?} under base at seq {seq}");
+            assert!(d <= p.max_delay, "delay {d:?} over cap at seq {seq}");
+            schedule.push(d);
+            prev = d;
+        }
+        // byte-stable: the same seeds reproduce the same schedule
+        let mut prev2 = p.base_delay;
+        for (seq, want) in schedule.iter().enumerate() {
+            let d = p.backoff_delay(seq as u64, prev2);
+            assert_eq!(d, *want);
+            prev2 = d;
+        }
+        // and it actually grows toward the cap (decorrelated jitter
+        // expands the window as prev grows)
+        assert!(schedule.iter().any(|d| *d > p.base_delay * 4));
+    }
+
+    #[test]
+    fn jitter_fraction_is_uniformish_and_pure() {
+        let mut sum = 0.0;
+        for seq in 0..1000u64 {
+            let f = jitter_frac(seq);
+            assert!((0.0..1.0).contains(&f));
+            assert_eq!(f, jitter_frac(seq), "pure function of seq");
+            sum += f;
+        }
+        let mean = sum / 1000.0;
+        assert!((0.4..0.6).contains(&mean), "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn fail_fast_policy_has_one_attempt_and_busy_is_the_only_retryable_code() {
+        assert_eq!(RetryPolicy::fail_fast().max_attempts, 1);
+        assert!(RemoteError { code: codes::BUSY.into(), message: String::new() }.is_retryable());
+        for code in [codes::VERSION, codes::MALFORMED, codes::TOO_LARGE, codes::UNREGISTERED,
+                     codes::UNSUPPORTED, codes::STALE]
+        {
+            let e = RemoteError { code: code.into(), message: String::new() };
+            assert!(!e.is_retryable(), "{code} must be fatal");
         }
     }
 }

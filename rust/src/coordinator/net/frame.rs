@@ -59,6 +59,10 @@ pub mod codes {
     /// acknowledged `INVALIDATE` (client-side detection; servers never
     /// emit this).
     pub const STALE: &str = "stale";
+    /// The server is at its connection limit and shed this connection
+    /// before the handshake (`NACK` with id 0). Always retryable:
+    /// back off and redial.
+    pub const BUSY: &str = "busy";
 }
 
 /// One `(op, cluster, P, m)` question inside a `BATCH`.

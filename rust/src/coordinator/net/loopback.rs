@@ -34,7 +34,7 @@ use anyhow::Result;
 use crate::obs;
 
 use super::super::service::Coordinator;
-use super::client::NetClient;
+use super::client::{ClientOptions, NetClient};
 use super::server::{serve_connection, ConnContext, ConnShared, ServerOptions, SubscriptionHub};
 
 struct PipeState {
@@ -162,6 +162,7 @@ impl LoopbackServer {
             coord,
             hub,
             opts,
+            stop: Arc::clone(&stop),
             shutdown_requested: Arc::new(AtomicBool::new(false)),
         });
         LoopbackServer {
@@ -175,6 +176,22 @@ impl LoopbackServer {
     /// Open one in-process connection: spawns the server-side thread
     /// and returns a fully handshaken client.
     pub fn connect(&self) -> Result<NetClient> {
+        self.connect_with(ClientOptions::default())
+    }
+
+    /// [`LoopbackServer::connect`] with explicit client options (the
+    /// chaos suite connects with a retrying policy).
+    pub fn connect_with(&self, opts: ClientOptions) -> Result<NetClient> {
+        let (reader, writer) = self.transport_pair();
+        NetClient::from_transport_with(reader, writer, opts)
+    }
+
+    /// A fresh, unhandshaken client-side transport pair with its
+    /// server-side thread already running — the building block
+    /// [`NetClient::set_redial`] needs for reconnection over loopback.
+    pub fn transport_pair(
+        &self,
+    ) -> (Box<dyn Read + Send>, Box<dyn Write + Send>) {
         let (c2s_w, c2s_r) = pipe();
         let (s2c_w, s2c_r) = pipe();
         let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
@@ -186,7 +203,7 @@ impl LoopbackServer {
         std::thread::spawn(move || {
             serve_connection(&ctx, std::io::BufReader::new(c2s_r), shared);
         });
-        NetClient::from_transport(Box::new(s2c_r), Box::new(c2s_w))
+        (Box::new(s2c_r), Box::new(c2s_w))
     }
 
     /// Stop and join the notifier. Connection threads exit on their

@@ -32,7 +32,7 @@ pub mod frame;
 pub mod loopback;
 pub mod server;
 
-pub use client::{NetClient, Push, RemoteError};
+pub use client::{ClientOptions, NetClient, Push, RemoteError, RetryPolicy, TransportError};
 pub use frame::{
     Frame, FrameError, Point, Query, QueryReply, MAX_BATCH_ITEMS, MAX_LINE_BYTES, PROTOCOL_VERSION,
 };

@@ -26,17 +26,35 @@
 //!   guarantee (docs/PROTOCOL.md §6) is stated in those epochs, which
 //!   is what makes the per-connection writer mutex sufficient — no
 //!   global ordering across connections is needed.
-//! * **Shutdown is graceful.** [`CoordServer::shutdown`] stops the
-//!   accept loop, shuts every live socket down (unblocking its reader
-//!   thread), and joins every thread before returning; per-connection
-//!   obs counters are final when it returns.
+//!
+//! ## Failure posture
+//!
+//! The server degrades instead of dying (docs/PROTOCOL.md §8):
+//!
+//! * **Socket deadlines everywhere.** The accepted socket gets
+//!   [`ServerOptions::read_timeout`] / [`ServerOptions::write_timeout`]
+//!   once; `TcpStream` clones share them, so both the request loop's
+//!   responses and the notifier's pushes are deadline-bounded. A read
+//!   deadline that expires *between* frames is an idle poll tick (the
+//!   connection stays up); one that expires *inside* a frame is a
+//!   stalled peer and closes the connection.
+//! * **Idle reaper.** With [`ServerOptions::idle_timeout`] set, a
+//!   connection that sends nothing for that long is closed.
+//! * **Accept gate.** Past [`ServerOptions::max_connections`] live
+//!   connections, new ones are shed before the handshake with
+//!   `NACK 0 busy` — structured and retryable, never a silent drop.
+//! * **Panic isolation.** A panic inside one connection's request loop
+//!   is caught; the connection dies, the server keeps serving.
+//! * **Bounded drain.** Shutdown joins connection threads for at most
+//!   [`ServerOptions::drain_timeout`], then detaches stragglers (their
+//!   sockets are already shut down, so they exit on their own).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -47,6 +65,8 @@ use super::super::signature::ClusterSignature;
 use super::frame::{codes, Frame, Point, QueryReply, MAX_BATCH_ITEMS, PROTOCOL_VERSION};
 
 /// Server-side tunables shared by the TCP and loopback front-ends.
+/// The deadline fields only bite on real sockets; the loopback pipes
+/// never time out (they are process-local and cannot stall).
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Free-text server identification echoed in `WELCOME`.
@@ -54,6 +74,22 @@ pub struct ServerOptions {
     /// Honor the `SHUTDOWN` frame (off by default: a remote kill switch
     /// is opt-in, e.g. for the CI socket smoke).
     pub allow_remote_shutdown: bool,
+    /// Per-read socket deadline. Doubles as the idle poll tick: an
+    /// expiry with no bytes buffered re-checks stop/idle and keeps
+    /// waiting; an expiry mid-frame closes the connection (stalled
+    /// peer).
+    pub read_timeout: Option<Duration>,
+    /// Per-write socket deadline, shared by responses and pushes.
+    pub write_timeout: Option<Duration>,
+    /// Close connections that send nothing for this long (`None` =
+    /// never reap). Enforced at read-deadline granularity.
+    pub idle_timeout: Option<Duration>,
+    /// Shed new connections (with `NACK 0 busy`) past this many live
+    /// ones.
+    pub max_connections: usize,
+    /// How long shutdown waits for connection threads before detaching
+    /// the stragglers.
+    pub drain_timeout: Duration,
 }
 
 impl Default for ServerOptions {
@@ -61,6 +97,11 @@ impl Default for ServerOptions {
         ServerOptions {
             banner: "collective-tuner coordd".to_string(),
             allow_remote_shutdown: false,
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(10)),
+            idle_timeout: None,
+            max_connections: 1024,
+            drain_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -93,8 +134,8 @@ impl ConnShared {
     }
 
     /// Write one whole frame under the writer mutex and flush. On
-    /// failure the connection is marked dead (the reader thread and the
-    /// hub both observe that).
+    /// failure (including a write-deadline expiry) the connection is
+    /// marked dead (the reader thread and the hub both observe that).
     fn send(&self, frame: &Frame) -> std::io::Result<()> {
         let bytes = frame.encode();
         let mut w = self.writer.lock().unwrap();
@@ -134,7 +175,7 @@ impl SubscriptionHub {
         self.subs.lock().unwrap().push(entry);
     }
 
-    fn drop_conn(&self, conn: &Arc<ConnShared>) {
+    pub(crate) fn drop_conn(&self, conn: &Arc<ConnShared>) {
         self.subs.lock().unwrap().retain(|e| !Arc::ptr_eq(&e.conn, conn));
     }
 
@@ -195,6 +236,10 @@ pub(crate) struct ConnContext {
     pub coord: Arc<Coordinator>,
     pub hub: Arc<SubscriptionHub>,
     pub opts: ServerOptions,
+    /// The owning server's stop flag; connection loops poll it on
+    /// every idle tick so a draining server never waits a full read
+    /// deadline for them.
+    pub stop: Arc<AtomicBool>,
     /// Set when an authorized `SHUTDOWN` frame arrives; the owning
     /// server polls it.
     pub shutdown_requested: Arc<AtomicBool>,
@@ -202,8 +247,9 @@ pub(crate) struct ConnContext {
 
 /// The `ct/1` request loop, shared by the TCP server and the loopback
 /// transport: handshake, then serve frames until the peer says `BYE`,
-/// hangs up, or breaks protocol. Always leaves the connection marked
-/// dead and its subscriptions dropped; never panics on peer input.
+/// hangs up, idles out, or breaks protocol. Always leaves the
+/// connection marked dead and its subscriptions dropped; never panics
+/// on peer input.
 pub(crate) fn serve_connection(ctx: &ConnContext, mut reader: impl BufRead, conn: Arc<ConnShared>) {
     if let Err(e) = run_connection(ctx, &mut reader, &conn) {
         log::debug!("net: connection {} closed: {e:#}", conn.peer);
@@ -218,7 +264,7 @@ fn run_connection(
     conn: &Arc<ConnShared>,
 ) -> Result<()> {
     // ---- handshake: exactly one HELLO, version must match ------------
-    match read_frame(reader, conn)? {
+    match next_frame(ctx, reader, conn)? {
         Some(Frame::Hello { version }) if version == PROTOCOL_VERSION => {
             conn.send(&Frame::Welcome {
                 version: PROTOCOL_VERSION,
@@ -243,7 +289,7 @@ fn run_connection(
     }
 
     // ---- request loop -------------------------------------------------
-    while let Some(frame) = read_frame(reader, conn)? {
+    while let Some(frame) = next_frame(ctx, reader, conn)? {
         match frame {
             Frame::Ping { id } => {
                 conn.send(&Frame::Pong { id, epoch: ctx.coord.epoch() })?;
@@ -357,6 +403,47 @@ fn run_connection(
     Ok(())
 }
 
+/// Wait for the next frame, distinguishing the read deadline's two
+/// meanings. A deadline expiry with *no bytes buffered* is an idle poll
+/// tick: check the stop flag and the idle budget, then keep waiting. An
+/// expiry once a frame has started (inside [`read_frame`]) propagates
+/// as an error — a peer that stalls mid-frame is broken, not idle.
+/// Transports without deadlines (the loopback pipes) never tick.
+fn next_frame(
+    ctx: &ConnContext,
+    reader: &mut impl BufRead,
+    conn: &ConnShared,
+) -> Result<Option<Frame>> {
+    let waiting_since = Instant::now();
+    loop {
+        match reader.fill_buf() {
+            Ok([]) => return Ok(None), // EOF
+            Ok(_) => return read_frame(reader, conn),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return Ok(None); // server draining: hang up now
+                }
+                if let Some(limit) = ctx.opts.idle_timeout {
+                    if waiting_since.elapsed() >= limit {
+                        if obs::enabled() {
+                            obs::registry().counter("net.idle_reaped").inc();
+                        }
+                        log::debug!("net: reaping idle connection {}", conn.peer);
+                        return Ok(None);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(anyhow::Error::from(e).context("reading from peer")),
+        }
+    }
+}
+
 /// Read one frame, translating a decode failure into an `ERROR` frame
 /// for the peer before propagating it (fatal to the connection).
 fn read_frame(reader: &mut impl BufRead, conn: &ConnShared) -> Result<Option<Frame>> {
@@ -387,11 +474,12 @@ struct LiveConn {
 /// The `coordd` TCP server: nonblocking accept loop, one thread per
 /// connection, plus the notifier thread that drives pushes off
 /// [`Coordinator::watch_publishes`]. See the module docs for the full
-/// concurrency contract.
+/// concurrency contract and failure posture.
 pub struct CoordServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     shutdown_requested: Arc<AtomicBool>,
+    drain_timeout: Duration,
     accept: Option<JoinHandle<()>>,
     notifier: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<LiveConn>>>,
@@ -410,6 +498,7 @@ impl CoordServer {
         let shutdown_requested = Arc::new(AtomicBool::new(false));
         let hub = Arc::new(SubscriptionHub::default());
         let conns: Arc<Mutex<Vec<LiveConn>>> = Arc::new(Mutex::new(Vec::new()));
+        let drain_timeout = opts.drain_timeout;
 
         // Subscribe to publish events *before* serving any client, so
         // no event between first-query and notifier-start is lost.
@@ -428,6 +517,7 @@ impl CoordServer {
                 coord,
                 hub,
                 opts,
+                stop: Arc::clone(&stop),
                 shutdown_requested: Arc::clone(&shutdown_requested),
             });
             std::thread::spawn(move || accept_loop(&listener, &ctx, &conns, &stop))
@@ -437,6 +527,7 @@ impl CoordServer {
             addr: local,
             stop,
             shutdown_requested,
+            drain_timeout,
             accept: Some(accept),
             notifier: Some(notifier),
             conns,
@@ -454,8 +545,10 @@ impl CoordServer {
     }
 
     /// Graceful shutdown: stop accepting, unblock every connection
-    /// reader by shutting its socket down, join all threads. Idempotent
-    /// via `Drop` (shutdown then drop is fine).
+    /// reader by shutting its socket down, then join threads for at
+    /// most the drain deadline — a wedged connection is detached, not
+    /// waited on forever. Idempotent via `Drop` (shutdown then drop is
+    /// fine).
     pub fn shutdown(mut self) {
         self.shutdown_impl();
     }
@@ -465,11 +558,33 @@ impl CoordServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
-        for c in conns {
+        let mut pending = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in &pending {
             let _ = c.stream.shutdown(Shutdown::Both);
             c.shared.alive.store(false, Ordering::Relaxed);
-            let _ = c.thread.join();
+        }
+        let deadline = Instant::now() + self.drain_timeout;
+        while !pending.is_empty() && Instant::now() < deadline {
+            let mut still_running = Vec::with_capacity(pending.len());
+            for c in pending {
+                if c.thread.is_finished() {
+                    let _ = c.thread.join();
+                } else {
+                    still_running.push(c);
+                }
+            }
+            pending = still_running;
+            if !pending.is_empty() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        for c in pending {
+            // Socket already shut down: the thread exits as soon as its
+            // current operation (e.g. an in-flight tune) completes.
+            log::warn!(
+                "net: detaching connection thread {} still running at drain deadline",
+                c.shared.peer
+            );
         }
         if let Some(h) = self.notifier.take() {
             let _ = h.join();
@@ -505,6 +620,25 @@ pub(crate) fn notifier_loop(
     }
 }
 
+/// Refuse one just-accepted connection with `NACK 0 busy` (id 0: there
+/// is no request yet — the refusal is about the connection itself) and
+/// close it. Best-effort: a peer that is already gone just loses the
+/// courtesy frame.
+fn shed_connection(mut stream: TcpStream, peer: SocketAddr, limit: usize) {
+    if obs::enabled() {
+        obs::registry().counter("net.sheds").inc();
+    }
+    log::warn!("net: shedding connection from {peer}: at the {limit}-connection limit");
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let frame = Frame::Nack {
+        id: 0,
+        code: codes::BUSY.to_string(),
+        message: format!("server is at its {limit}-connection limit; retry after backoff"),
+    };
+    let _ = stream.write_all(frame.encode().as_bytes());
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
 fn accept_loop(
     listener: &TcpListener,
     ctx: &Arc<ConnContext>,
@@ -515,7 +649,20 @@ fn accept_loop(
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, peer)) => {
+                if open.load(Ordering::Relaxed) >= ctx.opts.max_connections as u64 {
+                    shed_connection(stream, peer, ctx.opts.max_connections);
+                    continue;
+                }
                 let _ = stream.set_nodelay(true);
+                // The accepted socket may inherit the listener's
+                // nonblocking flag on some platforms; serve_connection
+                // wants blocking-with-deadline semantics.
+                let _ = stream.set_nonblocking(false);
+                // Deadlines are per-socket, so setting them here covers
+                // every clone: the reader thread's reads, the request
+                // loop's responses, and the notifier's pushes.
+                let _ = stream.set_read_timeout(ctx.opts.read_timeout);
+                let _ = stream.set_write_timeout(ctx.opts.write_timeout);
                 let (reader, writer) = match (stream.try_clone(), stream.try_clone()) {
                     (Ok(r), Ok(w)) => (r, w),
                     (Err(e), _) | (_, Err(e)) => {
@@ -531,9 +678,30 @@ fn accept_loop(
                     let ctx = Arc::clone(ctx);
                     let shared = Arc::clone(&shared);
                     let open = Arc::clone(&open);
+                    let sock = stream.try_clone().ok();
                     open.fetch_add(1, Ordering::Relaxed);
                     std::thread::spawn(move || {
-                        serve_connection(&ctx, BufReader::new(reader), shared);
+                        // Panic isolation: a bug tripped by one peer's
+                        // input kills that connection, not the server.
+                        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            serve_connection(&ctx, BufReader::new(reader), Arc::clone(&shared));
+                        }));
+                        // The accept loop's `LiveConn` entry keeps the
+                        // fd open until it is reaped; close the peer's
+                        // half now so an idle-reaped or errored-out
+                        // client observes EOF immediately instead of a
+                        // silently dead socket.
+                        if let Some(s) = sock {
+                            let _ = s.shutdown(Shutdown::Both);
+                        }
+                        if caught.is_err() {
+                            shared.alive.store(false, Ordering::Relaxed);
+                            ctx.hub.drop_conn(&shared);
+                            if obs::enabled() {
+                                obs::registry().counter("net.conn_panics").inc();
+                            }
+                            log::error!("net: connection {} panicked; isolated", shared.peer);
+                        }
                         let now = open.fetch_sub(1, Ordering::Relaxed) - 1;
                         if obs::enabled() {
                             obs::registry().gauge("net.open_connections").set(now);
@@ -565,5 +733,21 @@ fn accept_loop(
                 std::thread::sleep(Duration::from_millis(20));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_are_deadlined_but_not_idle_reaping() {
+        let o = ServerOptions::default();
+        assert!(o.read_timeout.is_some());
+        assert!(o.write_timeout.is_some());
+        assert!(o.idle_timeout.is_none(), "idle reaping is opt-in");
+        assert!(o.max_connections >= 64);
+        assert!(!o.drain_timeout.is_zero());
+        assert!(!o.allow_remote_shutdown);
     }
 }

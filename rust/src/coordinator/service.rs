@@ -24,7 +24,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -94,6 +94,10 @@ pub struct CoordinatorConfig {
     /// Worker threads for the tuner's parallel grid sweep (0 = one per
     /// core). Coalesced misses and drift re-tunes both run on it.
     pub jobs: usize,
+    /// How old retired tables may be and still be served when a tune
+    /// fails (the stale shelf's bound). Past it, a failed tune falls
+    /// back to a local model evaluation instead.
+    pub max_staleness: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -106,6 +110,33 @@ impl Default for CoordinatorConfig {
             m_grid: grids::default_m_grid(),
             artifact_dir: None,
             jobs: 0,
+            max_staleness: Duration::from_secs(300),
+        }
+    }
+}
+
+/// Where a decision's answer came from, on the ladder the coordinator
+/// walks when tuning is impossible: fresh tables, then the stale shelf
+/// (retired tables within [`CoordinatorConfig::max_staleness`]), then a
+/// last-resort local model evaluation. Mirrored into the flight
+/// recorder as [`DecisionOutcome`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionSource {
+    /// Up-to-date published tables (warm hit or successful tune).
+    Fresh,
+    /// Retired tables served within the staleness bound.
+    Stale,
+    /// A local [`crate::eval::ModelEval`] tune because nothing better
+    /// existed.
+    Fallback,
+}
+
+impl DecisionSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecisionSource::Fresh => "fresh",
+            DecisionSource::Stale => "stale",
+            DecisionSource::Fallback => "fallback",
         }
     }
 }
@@ -124,10 +155,13 @@ pub struct RegisteredCluster {
     pub probe: (NodeId, NodeId),
 }
 
-/// An in-flight tuner run that concurrent misses block on.
+/// An in-flight tuner run that concurrent misses block on. The leader
+/// deposits whatever it ended up serving — fresh tables, or the
+/// degraded substitute when its tune failed — plus how it resolved, so
+/// followers report honestly.
 #[derive(Default)]
 struct Inflight {
-    result: Mutex<Option<Arc<TableSet>>>,
+    result: Mutex<Option<(Arc<TableSet>, DecisionOutcome)>>,
     ready: Condvar,
 }
 
@@ -160,6 +194,12 @@ pub struct CoordinatorStats {
     pub cache: CacheStats,
     /// Actual tuner executions (coalesced misses count once).
     pub tunes: u64,
+    /// Failed tuner runs (injected or real).
+    pub tune_failures: u64,
+    /// Decisions served from the stale shelf after a failed tune.
+    pub stale_serves: u64,
+    /// Decisions served from the last-resort model fallback.
+    pub fallback_serves: u64,
     /// Clusters in the registry.
     pub registered: usize,
     /// The tuner's cumulative sweep counters across those runs (model
@@ -177,6 +217,19 @@ pub struct Coordinator {
     inflight: Mutex<HashMap<ClusterSignature, Arc<Inflight>>>,
     registry: RwLock<HashMap<String, RegisteredCluster>>,
     tunes: AtomicU64,
+    /// Retired tables kept for degraded serving: eviction moves tables
+    /// here (with their retirement instant) instead of discarding them,
+    /// so a later *failed* tune can answer from them while they are
+    /// younger than [`CoordinatorConfig::max_staleness`]. Never read on
+    /// the healthy path.
+    stale_shelf: Mutex<HashMap<ClusterSignature, (Arc<TableSet>, Instant)>>,
+    /// Deterministic fault injection: the next N tuner runs fail. The
+    /// chaos suite and the bench's degraded phase drive this; 0 in
+    /// production.
+    fail_next_tunes: AtomicU64,
+    tune_failures: AtomicU64,
+    stale_serves: AtomicU64,
+    fallback_serves: AtomicU64,
     /// Table-publication subscribers (`watch_publishes`). Disconnected
     /// receivers are pruned on the next notification.
     watchers: Mutex<Vec<mpsc::Sender<PublishEvent>>>,
@@ -199,6 +252,11 @@ impl Coordinator {
             inflight: Mutex::new(HashMap::new()),
             registry: RwLock::new(HashMap::new()),
             tunes: AtomicU64::new(0),
+            stale_shelf: Mutex::new(HashMap::new()),
+            fail_next_tunes: AtomicU64::new(0),
+            tune_failures: AtomicU64::new(0),
+            stale_serves: AtomicU64::new(0),
+            fallback_serves: AtomicU64::new(0),
             watchers: Mutex::new(Vec::new()),
         }
     }
@@ -344,6 +402,22 @@ impl Coordinator {
         p: usize,
         m: u64,
     ) -> Result<(Decision, u64)> {
+        self.decision_full(op, cluster, p, m).map(|(d, e, _)| (d, e))
+    }
+
+    /// [`Coordinator::decision_versioned`] plus where on the
+    /// degradation ladder the answer came from. A source other than
+    /// [`DecisionSource::Fresh`] means tuning failed and the
+    /// coordinator degraded instead of erroring; the same fact lands in
+    /// the flight recorder and the `coordinator.{stale,fallback}_serves`
+    /// counters.
+    pub fn decision_full(
+        &self,
+        op: Op,
+        cluster: &str,
+        p: usize,
+        m: u64,
+    ) -> Result<(Decision, u64, DecisionSource)> {
         let t0 = obs::timer_start();
         let warm = {
             let _read = Span::start("coordinator.decision.cache_read_ns");
@@ -354,7 +428,7 @@ impl Coordinator {
                 obs::registry().counter("coordinator.cache_hits").inc();
                 self.trace_decision(t0, signature, op, DecisionOutcome::Hit, &d);
             }
-            return Ok((d, epoch));
+            return Ok((d, epoch, DecisionSource::Fresh));
         }
         let rc = self
             .cluster(cluster)
@@ -369,7 +443,12 @@ impl Coordinator {
         if let Some(t0) = t0 {
             self.trace_decision(t0, rc.signature, op, outcome, &d);
         }
-        Ok((d, epoch))
+        let source = match outcome {
+            DecisionOutcome::Stale => DecisionSource::Stale,
+            DecisionOutcome::Fallback => DecisionSource::Fallback,
+            _ => DecisionSource::Fresh,
+        };
+        Ok((d, epoch, source))
     }
 
     /// Warm-path-only read: answer from the published snapshot or
@@ -500,13 +579,25 @@ impl Coordinator {
                 obs::registry().counter("coordinator.cache_misses").inc();
             }
             let _tune = Span::start("coordinator.decision.tune_ns");
-            let tables = Arc::new(self.tune_now(net));
-            self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
-            self.notify_publish(PublishKind::Updated, signature);
-            *flight.result.lock().unwrap() = Some(Arc::clone(&tables));
+            let (tables, outcome) = match self.tune_now(net) {
+                Ok(t) => {
+                    let tables = Arc::new(t);
+                    self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
+                    self.notify_publish(PublishKind::Updated, signature);
+                    if obs::enabled() {
+                        obs::registry().gauge("coordinator.degraded_mode").set(0);
+                    }
+                    (tables, DecisionOutcome::Miss)
+                }
+                // Degraded answers are deliberately NOT published to
+                // the cache: the next cold query retries the tune
+                // instead of laundering stale tables into fresh ones.
+                Err(e) => self.degraded_tables(signature, net, &e),
+            };
+            *flight.result.lock().unwrap() = Some((Arc::clone(&tables), outcome));
             flight.ready.notify_all();
             self.inflight.lock().unwrap().remove(&signature);
-            (tables, DecisionOutcome::Miss)
+            (tables, outcome)
         } else {
             if obs::enabled() {
                 obs::registry().counter("coordinator.coalesced_waits").inc();
@@ -516,15 +607,102 @@ impl Coordinator {
             while guard.is_none() {
                 guard = flight.ready.wait(guard).unwrap();
             }
-            (Arc::clone(guard.as_ref().unwrap()), DecisionOutcome::Coalesced)
+            let (tables, leader_outcome) = guard.as_ref().unwrap();
+            // A follower of a degraded leader got degraded tables too;
+            // report that, not a comforting "coalesced".
+            let outcome = if leader_outcome.is_degraded() {
+                *leader_outcome
+            } else {
+                DecisionOutcome::Coalesced
+            };
+            (Arc::clone(tables), outcome)
         }
+    }
+
+    /// The degradation ladder, walked when a tune fails: the stale
+    /// shelf (retired tables younger than the staleness bound), then a
+    /// last-resort [`crate::eval::ModelEval`] tune via
+    /// [`Tuner::native`], which cannot fail. Counts into
+    /// `coordinator.{stale,fallback}_serves` and raises the
+    /// `coordinator.degraded_mode` gauge.
+    fn degraded_tables(
+        &self,
+        signature: ClusterSignature,
+        net: &PLogP,
+        err: &anyhow::Error,
+    ) -> (Arc<TableSet>, DecisionOutcome) {
+        if let Some(tables) = self.shelved(&signature) {
+            self.stale_serves.fetch_add(1, Ordering::Relaxed);
+            log::warn!(
+                "tune for {} failed ({err:#}); serving retired tables from the stale shelf",
+                signature.key()
+            );
+            if obs::enabled() {
+                let reg = obs::registry();
+                reg.counter("coordinator.stale_serves").inc();
+                reg.gauge("coordinator.degraded_mode").set(1);
+            }
+            return (tables, DecisionOutcome::Stale);
+        }
+        self.fallback_serves.fetch_add(1, Ordering::Relaxed);
+        log::warn!(
+            "tune for {} failed ({err:#}) with no stale tables on the shelf; \
+             serving a local model fallback",
+            signature.key()
+        );
+        if obs::enabled() {
+            let reg = obs::registry();
+            reg.counter("coordinator.fallback_serves").inc();
+            reg.gauge("coordinator.degraded_mode").set(1);
+        }
+        let fallback = Tuner::native().jobs(self.cfg.jobs);
+        let tables = fallback
+            .tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid)
+            .expect("native tuner is infallible");
+        self.tuner.merge_stats(&fallback.stats());
+        (Arc::new(TableSet::new(tables)), DecisionOutcome::Fallback)
+    }
+
+    /// Stale-shelf lookup, pruning entries past the staleness bound on
+    /// the way (the shelf stays bounded by live signatures).
+    fn shelved(&self, signature: &ClusterSignature) -> Option<Arc<TableSet>> {
+        let mut shelf = self.stale_shelf.lock().unwrap();
+        shelf.retain(|_, (_, retired)| retired.elapsed() <= self.cfg.max_staleness);
+        shelf.get(signature).map(|(t, _)| Arc::clone(t))
+    }
+
+    /// Make the next `n` tuner runs fail. Deterministic — a countdown,
+    /// not a probability — so chaos tests and the bench's degraded
+    /// phase replay exactly. Production never calls this.
+    pub fn inject_tune_failures(&self, n: u64) {
+        self.fail_next_tunes.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Run the tuner for every op family (counted; this is what
     /// miss-coalescing avoids). One run produces the whole [`TableSet`],
     /// so a single cold miss covers broadcast, scatter, and all the
-    /// extended collectives.
-    fn tune_now(&self, net: &PLogP) -> TableSet {
+    /// extended collectives. Fails only when a failure was injected
+    /// (the artifact backend already falls back to native internally);
+    /// the caller walks the degradation ladder.
+    fn tune_now(&self, net: &PLogP) -> Result<TableSet> {
+        let mut pending = self.fail_next_tunes.load(Ordering::Relaxed);
+        while pending > 0 {
+            match self.fail_next_tunes.compare_exchange(
+                pending,
+                pending - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.tune_failures.fetch_add(1, Ordering::Relaxed);
+                    if obs::enabled() {
+                        obs::registry().counter("coordinator.tune_failures").inc();
+                    }
+                    bail!("injected tune failure ({} more pending)", pending - 1);
+                }
+                Err(now) => pending = now,
+            }
+        }
         self.tunes.fetch_add(1, Ordering::Relaxed);
         let tables = match self.tuner.tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid) {
             Ok(t) => t,
@@ -540,21 +718,38 @@ impl Coordinator {
                 tables
             }
         };
-        TableSet::new(tables)
+        Ok(TableSet::new(tables))
     }
 
     /// Re-tune a signature right now and atomically publish the result
     /// (the refresh policy's swap; readers only ever see the old or the
-    /// new snapshot, never a partial table).
+    /// new snapshot, never a partial table). A failed re-tune degrades
+    /// (stale shelf, then model fallback) without publishing.
     pub(super) fn force_retune(&self, signature: ClusterSignature, net: &PLogP) -> Arc<TableSet> {
-        let tables = Arc::new(self.tune_now(net));
-        self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
-        self.notify_publish(PublishKind::Updated, signature);
-        tables
+        match self.tune_now(net) {
+            Ok(t) => {
+                let tables = Arc::new(t);
+                self.cache.insert(signature, Arc::clone(&tables), &self.name_map());
+                self.notify_publish(PublishKind::Updated, signature);
+                if obs::enabled() {
+                    obs::registry().gauge("coordinator.degraded_mode").set(0);
+                }
+                tables
+            }
+            Err(e) => self.degraded_tables(signature, net, &e).0,
+        }
     }
 
-    /// Drop a cached signature (refresh retires drifted tables).
+    /// Drop a cached signature (refresh retires drifted tables). The
+    /// retired tables move to the stale shelf first, so a later failed
+    /// tune can still answer from them within the staleness bound.
     pub(super) fn evict_signature(&self, signature: &ClusterSignature) -> bool {
+        if let Some(tables) = self.cache.peek(signature) {
+            self.stale_shelf
+                .lock()
+                .unwrap()
+                .insert(*signature, (tables, Instant::now()));
+        }
         let removed = self.cache.remove(signature, &self.name_map());
         if removed {
             self.notify_publish(PublishKind::Invalidated, *signature);
@@ -580,6 +775,9 @@ impl Coordinator {
         CoordinatorStats {
             cache: self.cache.stats(),
             tunes: self.tunes.load(Ordering::Relaxed),
+            tune_failures: self.tune_failures.load(Ordering::Relaxed),
+            stale_serves: self.stale_serves.load(Ordering::Relaxed),
+            fallback_serves: self.fallback_serves.load(Ordering::Relaxed),
             registered: self.registry.read().unwrap().len(),
             eval: self.tuner.stats(),
         }
@@ -605,6 +803,14 @@ impl Coordinator {
                     ("hits", Json::from(st.cache.hits)),
                     ("misses", Json::from(st.cache.misses)),
                     ("evictions", Json::from(st.cache.evictions)),
+                ]),
+            ),
+            (
+                "degraded",
+                Json::obj(vec![
+                    ("tune_failures", Json::from(st.tune_failures)),
+                    ("stale_serves", Json::from(st.stale_serves)),
+                    ("fallback_serves", Json::from(st.fallback_serves)),
                 ]),
             ),
             ("eval", st.eval.to_json_value()),
@@ -1008,6 +1214,101 @@ mod tests {
         assert_eq!(got, want);
         assert!(warm_epoch >= epoch);
         assert_eq!(c.tune_count(), 1);
+    }
+
+    #[test]
+    fn failed_tune_with_no_shelf_serves_a_model_fallback() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.inject_tune_failures(1);
+        let (d, _epoch, source) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(source, DecisionSource::Fallback, "no shelf entry exists yet");
+        assert!(d.predicted.is_finite() && d.predicted > 0.0);
+        assert_eq!(c.tune_count(), 0, "the failed run is not a tune");
+        let st = c.stats();
+        assert_eq!(st.tune_failures, 1);
+        assert_eq!(st.fallback_serves, 1);
+        assert_eq!(st.stale_serves, 0);
+        // degraded answers are not cached: the next query tunes fresh
+        let (d2, _, source2) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(source2, DecisionSource::Fresh);
+        assert_eq!(c.tune_count(), 1);
+        // the fallback is the native model tuner, so the answers agree
+        assert_eq!(d, d2, "ModelEval fallback equals the native tune");
+    }
+
+    #[test]
+    fn failed_tune_after_eviction_serves_stale_within_bound() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        let fresh = c.decision(Op::Bcast, "a", 24, 65536).unwrap();
+        assert!(c.invalidate("a"), "eviction moves tables to the stale shelf");
+        c.inject_tune_failures(1);
+        let (d, _epoch, source) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(source, DecisionSource::Stale);
+        assert_eq!(d, fresh, "stale serve answers from the retired tables");
+        let st = c.stats();
+        assert_eq!(st.stale_serves, 1);
+        assert_eq!(st.fallback_serves, 0);
+        assert_eq!(c.tune_count(), 1, "only the original tune ran");
+        // recovery: the injection is spent, so the service re-tunes
+        let (_, _, source2) = c.decision_full(Op::Scatter, "a", 8, 1024).unwrap();
+        assert_eq!(source2, DecisionSource::Fresh);
+        assert_eq!(c.tune_count(), 2);
+    }
+
+    #[test]
+    fn stale_shelf_respects_the_staleness_bound() {
+        let cfg = CoordinatorConfig {
+            max_staleness: Duration::from_millis(0), // everything is too old
+            ..small_config()
+        };
+        let c = Coordinator::new(cfg);
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.decision(Op::Bcast, "a", 24, 65536).unwrap();
+        assert!(c.invalidate("a"));
+        std::thread::sleep(Duration::from_millis(5));
+        c.inject_tune_failures(1);
+        let (_, _, source) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(
+            source,
+            DecisionSource::Fallback,
+            "shelved tables past the bound must not be served"
+        );
+        assert_eq!(c.stats().stale_serves, 0);
+    }
+
+    #[test]
+    fn coalesced_followers_of_a_degraded_leader_report_degraded() {
+        // Serial sanity for the Inflight contract (the concurrent
+        // version lives in the stress suite): the leader's degraded
+        // outcome must flow through decision_full's source mapping.
+        let c = Coordinator::new(small_config());
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.inject_tune_failures(2);
+        let (_, _, s1) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
+        let (_, _, s2) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
+        assert_eq!(s1, DecisionSource::Fallback);
+        assert_eq!(s2, DecisionSource::Fallback);
+        assert_eq!(c.stats().fallback_serves, 2);
+        assert_eq!(c.stats().tune_failures, 2);
+    }
+
+    #[test]
+    fn stats_json_carries_the_degraded_block() {
+        let c = Coordinator::new(small_config());
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        c.inject_tune_failures(1);
+        c.decision(Op::Bcast, "a", 8, 4096).unwrap();
+        let json = c.stats_json();
+        let doc = crate::util::json::parse(&json).expect("valid JSON");
+        let crate::util::json::Json::Obj(top) = &doc else { panic!("not an object") };
+        let crate::util::json::Json::Obj(deg) = &top["degraded"] else {
+            panic!("missing degraded block in {json}")
+        };
+        assert_eq!(deg["tune_failures"], crate::util::json::Json::Num(1.0));
+        assert_eq!(deg["fallback_serves"], crate::util::json::Json::Num(1.0));
+        assert_eq!(deg["stale_serves"], crate::util::json::Json::Num(0.0));
     }
 
     #[test]

@@ -40,7 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::collectives::Strategy;
 use crate::models;
-use crate::netsim::{TraceKey, TraceSet};
+use crate::netsim::{FaultPlan, TraceKey, TraceSet};
 use crate::plogp::{GapTable, PLogP};
 use crate::tuner::decision::Op;
 
@@ -106,13 +106,16 @@ impl ReplayStats {
 pub struct ReplayEval {
     set: Arc<TraceSet>,
     net: PLogP,
+    faults: Option<FaultPlan>,
     counters: Arc<Counters>,
 }
 
 impl ReplayEval {
     /// Build over a captured set. Fails on an empty set and on a set
     /// whose records disagree about the network they were captured on
-    /// (mixed-network merges have no single replay signature).
+    /// (mixed-network merges have no single replay signature) — the
+    /// fault plan is part of that identity: a faulted capture replays
+    /// only against records of the *same* degraded environment.
     pub fn new(set: TraceSet) -> Result<ReplayEval> {
         let first = match set.records().next() {
             Some(r) => r.meta.clone(),
@@ -130,12 +133,25 @@ impl ReplayEval {
                     r.meta.key().file_name()
                 );
             }
+            if r.meta.fault_plan != first.fault_plan {
+                bail!(
+                    "trace set mixes environments: '{}' and '{}' were captured under \
+                     different fault plans",
+                    first.key().file_name(),
+                    r.meta.key().file_name()
+                );
+            }
         }
         let net = PLogP::new(
             first.plogp_l,
             GapTable::new(first.plogp_sizes.clone(), first.plogp_gaps.clone()),
         );
-        Ok(ReplayEval { set: Arc::new(set), net, counters: Arc::new(Counters::default()) })
+        Ok(ReplayEval {
+            set: Arc::new(set),
+            net,
+            faults: first.fault_plan,
+            counters: Arc::new(Counters::default()),
+        })
     }
 
     /// Load every trace under `dir` and build the evaluator.
@@ -155,6 +171,12 @@ impl ReplayEval {
     /// gap-model interpolation and stands in for a fresh measurement).
     pub fn net(&self) -> &PLogP {
         &self.net
+    }
+
+    /// The fault plan every record in the set was captured under, if
+    /// any (the set is environment-homogeneous by construction).
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Snapshot of the replay coverage counters.
@@ -397,6 +419,40 @@ mod tests {
         let d = replay.best(Op::Bcast, &net, 8, 256, &[1024, 8192]);
         assert_ne!(d.strategy, Strategy::BcastBinomial);
         assert!(d.predicted.is_finite());
+    }
+
+    #[test]
+    fn faulted_captures_replay_bit_for_bit_and_never_mix() {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let plan = FaultPlan::new().slow_node(1, 4.0).degrade_link(0, 2, 2e-3, None);
+        let rec = Arc::new(TraceRecorder::new(&cfg, 1 << 14));
+        let eval = SimEval::new(cfg.clone())
+            .with_faults(plan.clone())
+            .with_recorder(Arc::clone(&rec));
+        for m in [256u64, 65536] {
+            eval.measure(Strategy::BcastBinomial, 8, m, None);
+        }
+        let replay = ReplayEval::new(rec.take()).unwrap();
+        assert_eq!(replay.faults(), Some(&plan));
+        let net = replay.net().clone();
+        for m in [256u64, 65536] {
+            assert_eq!(
+                replay.predict(Op::Bcast, Strategy::BcastBinomial, 8, m, None, &net),
+                eval.measure(Strategy::BcastBinomial, 8, m, None),
+                "faulted replay must reproduce the faulted run"
+            );
+        }
+        // healthy records must not merge into a faulted replay set
+        let (healthy, _) = captured();
+        let mut mixed = TraceSet::new();
+        for r in healthy.records().take(1) {
+            mixed.insert(r.clone());
+        }
+        let mut faulted = healthy.records().nth(1).unwrap().clone();
+        faulted.meta.fault_plan = Some(plan);
+        mixed.insert(faulted);
+        let err = ReplayEval::new(mixed).unwrap_err().to_string();
+        assert!(err.contains("different fault plans"), "{err}");
     }
 
     #[test]

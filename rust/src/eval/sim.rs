@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use crate::collectives::Strategy;
 use crate::models;
 use crate::mpi::World;
-use crate::netsim::{NetConfig, Netsim, TraceMeta, TraceRecord, TraceSet};
+use crate::netsim::{FaultPlan, NetConfig, Netsim, TraceMeta, TraceRecord, TraceSet};
 use crate::plogp::{self, PLogP};
 use crate::tuner::decision::Op;
 
@@ -86,11 +86,12 @@ impl TraceRecorder {
 pub struct SimEval {
     cfg: NetConfig,
     recorder: Option<Arc<TraceRecorder>>,
+    faults: Option<FaultPlan>,
 }
 
 impl SimEval {
     pub fn new(cfg: NetConfig) -> SimEval {
-        SimEval { cfg, recorder: None }
+        SimEval { cfg, recorder: None, faults: None }
     }
 
     /// Record mode: attach a trace to every measured run and file the
@@ -100,8 +101,24 @@ impl SimEval {
         self
     }
 
+    /// Degraded mode: apply `plan` to every measured run's simulator
+    /// (an empty plan is normalized away). Captured records carry the
+    /// plan in their metadata, so faulted traces replay byte-stably.
+    /// The pLogP probe ([`SimEval::measure_net`] and the recorder's
+    /// stamp) intentionally stays *healthy*: faults are deviations from
+    /// the network the models were calibrated on.
+    pub fn with_faults(mut self, plan: FaultPlan) -> SimEval {
+        self.faults = if plan.is_empty() { None } else { Some(plan) };
+        self
+    }
+
     pub fn config(&self) -> &NetConfig {
         &self.cfg
+    }
+
+    /// The fault plan applied to measured runs, if any.
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Measure the cluster's pLogP parameters on a fresh two-node probe
@@ -128,12 +145,18 @@ impl SimEval {
             }
         };
         let mut sim = Netsim::new(p, self.cfg.clone());
+        if let Some(plan) = &self.faults {
+            sim.apply_faults(plan);
+        }
         if let Some(rec) = &self.recorder {
             sim.enable_trace(rec.capacity);
         }
         let mut world = World::new(sim);
         let rep = world.run(&sched);
-        debug_assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        let blackholed = world.sim().stats().blackholed;
+        if blackholed == 0 {
+            debug_assert!(rep.verify(&sched).is_empty(), "{:?}", rep.verify(&sched));
+        }
         if let Some(rec) = &self.recorder {
             let trace = world.sim().trace().expect("trace was enabled above");
             rec.store(TraceRecord {
@@ -148,9 +171,15 @@ impl SimEval {
                     plogp_l: rec.net.l,
                     plogp_sizes: rec.net.table.sizes().to_vec(),
                     plogp_gaps: rec.net.table.gaps().to_vec(),
+                    fault_plan: self.faults.clone(),
                 },
                 events: trace.events(),
             });
+        }
+        if blackholed > 0 {
+            // A dead participant starves the collective: it never
+            // semantically completes, so it can never win an argmin.
+            return f64::INFINITY;
         }
         rep.completion.as_secs()
     }
@@ -266,6 +295,42 @@ mod tests {
         assert_eq!(r.events.len(), 2);
         // drops lose the oldest events, so the critical path survives
         assert_eq!(r.critical_path().0, r.meta.completion_ns);
+    }
+
+    #[test]
+    fn faults_slow_the_measurement_and_stamp_the_record() {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let plan = FaultPlan::new().slow_node(0, 8.0);
+        let rec = Arc::new(TraceRecorder::new(&cfg, 1 << 12));
+        let healthy = SimEval::new(cfg.clone());
+        let faulted = SimEval::new(cfg)
+            .with_faults(plan.clone())
+            .with_recorder(Arc::clone(&rec));
+        let th = healthy.measure(Strategy::BcastBinomial, 8, 4096, None);
+        let tf = faulted.measure(Strategy::BcastBinomial, 8, 4096, None);
+        assert!(tf > th, "a slow root must slow the broadcast: {tf} vs {th}");
+        // the captured record carries the plan and round-trips bytes
+        let set = rec.take();
+        let r = set.at_cell("bcast", "bcast/binomial", 8, 4096).unwrap();
+        assert_eq!(r.meta.fault_plan.as_ref(), Some(&plan));
+        let text = r.to_tsv();
+        let back = crate::netsim::TraceRecord::from_tsv(&text).unwrap();
+        assert_eq!(&back, r);
+        assert_eq!(back.to_tsv(), text);
+        // and the measurement is still deterministic
+        assert_eq!(tf, faulted.measure(Strategy::BcastBinomial, 8, 4096, None));
+    }
+
+    #[test]
+    fn dead_node_scores_infinite() {
+        let cfg = NetConfig::fast_ethernet_ideal();
+        let e = SimEval::new(cfg).with_faults(FaultPlan::new().dead_node(3));
+        let t = e.measure(Strategy::BcastBinomial, 8, 4096, None);
+        assert!(t.is_infinite(), "a dead participant must never win: {t}");
+        // empty plans are normalized away
+        let none = SimEval::new(NetConfig::fast_ethernet_ideal())
+            .with_faults(FaultPlan::new());
+        assert!(none.faults().is_none());
     }
 
     #[test]

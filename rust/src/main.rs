@@ -35,8 +35,36 @@ fn main() {
     };
     if let Err(e) = dispatch(&parsed) {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        std::process::exit(classify_failure(&e));
     }
+}
+
+/// Map a failure to an exit code and print a one-line retryable/fatal
+/// classification when the error chain carries a typed network error.
+/// Exit codes (documented in `cli::USAGE`): 1 generic, 3 transport
+/// failure (retryable), 4 unregistered cluster (fatal).
+fn classify_failure(err: &anyhow::Error) -> i32 {
+    use collective_tuner::coordinator::net::frame::codes;
+    use collective_tuner::coordinator::net::{RemoteError, TransportError};
+    for cause in err.chain() {
+        if cause.downcast_ref::<TransportError>().is_some() {
+            eprintln!("classification: retryable (transport failure; back off and redial)");
+            return 3;
+        }
+        if let Some(re) = cause.downcast_ref::<RemoteError>() {
+            if re.code == codes::UNREGISTERED {
+                eprintln!("classification: fatal (cluster is not registered on the server)");
+                return 4;
+            }
+            if re.is_retryable() {
+                eprintln!("classification: retryable ({}; back off and redial)", re.code);
+                return 3;
+            }
+            eprintln!("classification: fatal ({})", re.code);
+            return 1;
+        }
+    }
+    1
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -584,6 +612,9 @@ fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
         capacity_per_shard: args.usize_or("capacity", defaults.capacity_per_shard)?.max(1),
         jobs: args.usize_or("jobs", 0)?,
         artifact_dir,
+        max_staleness: std::time::Duration::from_secs(
+            args.u64_or("max-staleness", defaults.max_staleness.as_secs())?,
+        ),
         ..defaults
     };
     Ok(Coordinator::new(cfg))
@@ -859,6 +890,15 @@ fn cmd_coordd(args: &Args) -> Result<()> {
     let nodes = args.usize_or("nodes", 16)?.max(2);
     let metrics_interval = args.u64_or("metrics-interval", 0)?;
     let churn_ms = args.u64_or("churn-ms", 0)?;
+    // Chaos hook for the CI smoke: arm one injected tuner failure just
+    // before the Nth churn pass. Passes 1..N-1 publish and shelve
+    // tables, so the armed failure deterministically lands on a
+    // signature with a stale-shelf entry — exercising the stale-serve
+    // rung of the degradation ladder end-to-end over the wire.
+    let inject_at = args.u64_or("inject-tune-failure-at", 0)?;
+    if inject_at > 0 && churn_ms == 0 {
+        bail!("--inject-tune-failure-at needs --churn-ms (the churn loop consumes the failure)");
+    }
 
     let coord = Arc::new(coordinator_from_args(args)?);
     if let Some(dir) = args.get("warm") {
@@ -888,12 +928,19 @@ fn cmd_coordd(args: &Args) -> Result<()> {
         coord.backend_name()
     );
 
+    let defaults = ServerOptions::default();
+    let idle_secs = args.u64_or("idle-timeout", 0)?;
     let server = CoordServer::start(
         Arc::clone(&coord),
         &listen,
         ServerOptions {
             banner: format!("collective-tuner coordd ({k} island(s))"),
             allow_remote_shutdown: args.flag("allow-remote-shutdown"),
+            idle_timeout: if idle_secs > 0 { Some(Duration::from_secs(idle_secs)) } else { None },
+            max_connections: args
+                .usize_or("max-connections", defaults.max_connections)?
+                .max(1),
+            ..defaults
         },
     )?;
     // The machine-readable line launchers parse for the ephemeral port.
@@ -909,8 +956,16 @@ fn cmd_coordd(args: &Args) -> Result<()> {
             // re-tunes and re-publishes — subscribers see live pushes.
             let policy = RefreshPolicy::default();
             let mut flip = true;
+            let mut pass = 0u64;
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(Duration::from_millis(churn_ms));
+                pass += 1;
+                if pass == inject_at {
+                    coord.inject_tune_failures(1);
+                    log::warn!(
+                        "coordd: chaos hook armed at churn pass {pass} — next tuner run fails"
+                    );
+                }
                 let cfg = if flip {
                     NetConfig::gigabit_ethernet()
                 } else {
@@ -956,10 +1011,18 @@ fn cmd_coordd(args: &Args) -> Result<()> {
 fn cmd_query_net(args: &Args) -> Result<()> {
     use std::time::Duration;
 
-    use collective_tuner::coordinator::net::{NetClient, Point, Push, Query};
+    use collective_tuner::coordinator::net::{ClientOptions, NetClient, Point, Push, Query, RemoteError};
 
     let addr = args.get("connect").expect("routed here on --connect");
-    let client = NetClient::connect(addr)?;
+    // --resilient turns on socket deadlines plus bounded-backoff
+    // retries (rides out a coordd restart); the default stays fail-fast.
+    let opts = if args.flag("resilient") {
+        ClientOptions::resilient()
+    } else {
+        ClientOptions::default()
+    };
+    let client =
+        NetClient::connect_with(addr, opts).with_context(|| format!("connecting to {addr}"))?;
     println!("connected : {addr} ({})", client.banner());
     if args.flag("shutdown") {
         client.shutdown_server()?;
@@ -980,34 +1043,51 @@ fn cmd_query_net(args: &Args) -> Result<()> {
         .iter()
         .map(|&p| Query { op, cluster: name.clone(), p, m })
         .collect();
-    let t0 = std::time::Instant::now();
-    let replies = client.query_batch(&queries)?;
-    let dt = t0.elapsed();
-    let mut failed = 0usize;
-    for (q, r) in queries.iter().zip(&replies) {
-        match r {
-            Ok(d) => println!(
-                "decision  : {} P={} m={} -> {} (segment {}, predicted {})",
-                q.op.name(),
-                q.p,
-                fmt_bytes(q.m as f64),
-                d.strategy.name(),
-                d.segment.map(|s| fmt_bytes(s as f64)).unwrap_or_else(|| "-".into()),
-                fmt_time(d.predicted)
-            ),
-            Err(e) => {
-                failed += 1;
-                println!("error     : {} P={} -> {e}", q.op.name(), q.p);
+    // --repeat loops the batch (one round-trip per round, --interval-ms
+    // apart): with --resilient this is the CI chaos smoke's client,
+    // riding a server kill/restart mid-loop on transparent reconnects.
+    let repeat = args.usize_or("repeat", 1)?.max(1);
+    let interval_ms = args.u64_or("interval-ms", 0)?;
+    for round in 0..repeat {
+        if round > 0 && interval_ms > 0 {
+            std::thread::sleep(Duration::from_millis(interval_ms));
+        }
+        let t0 = std::time::Instant::now();
+        let replies = client.query_batch(&queries)?;
+        let dt = t0.elapsed();
+        let mut failed = 0usize;
+        let mut first_err: Option<RemoteError> = None;
+        for (q, r) in queries.iter().zip(&replies) {
+            match r {
+                Ok(d) => println!(
+                    "decision  : {} P={} m={} -> {} (segment {}, predicted {})",
+                    q.op.name(),
+                    q.p,
+                    fmt_bytes(q.m as f64),
+                    d.strategy.name(),
+                    d.segment.map(|s| fmt_bytes(s as f64)).unwrap_or_else(|| "-".into()),
+                    fmt_time(d.predicted)
+                ),
+                Err(e) => {
+                    failed += 1;
+                    if first_err.is_none() {
+                        first_err = Some(e.clone());
+                    }
+                    println!("error     : {} P={} -> {e}", q.op.name(), q.p);
+                }
             }
         }
-    }
-    println!(
-        "latency   : {} quer(ies) in {:.2} ms over one round-trip",
-        replies.len(),
-        dt.as_secs_f64() * 1e3
-    );
-    if failed > 0 {
-        bail!("{failed} of {} remote queries failed", replies.len());
+        println!(
+            "latency   : {} quer(ies) in {:.2} ms over one round-trip",
+            replies.len(),
+            dt.as_secs_f64() * 1e3
+        );
+        if let Some(e) = first_err {
+            // Keep the typed error in the chain so `classify_failure`
+            // can map it to the documented exit code.
+            return Err(anyhow::Error::new(e)
+                .context(format!("{failed} of {} remote queries failed", replies.len())));
+        }
     }
     if args.flag("subscribe") || args.get("wait-pushes").is_some() {
         let points: Vec<Point> = p_list.iter().map(|&p| Point { op, p, m }).collect();
@@ -1033,7 +1113,16 @@ fn cmd_query_net(args: &Args) -> Result<()> {
             }
         }
     }
+    println!(
+        "reconnects: {} transparent reconnect(s) over the session",
+        client.reconnects()
+    );
     client.close();
+    if obs::enabled() {
+        // Machine-readable client-side snapshot (net.reconnects et al.)
+        // for the CI chaos smoke — same marker line as coordd's.
+        println!("OBS_SNAPSHOT_JSON {}", obs::registry().snapshot_json());
+    }
     Ok(())
 }
 

@@ -1,0 +1,162 @@
+//! Deterministic fault plans for the simulator.
+//!
+//! A [`FaultPlan`] is an explicit, seed-free list of degradations —
+//! slow nodes, degraded links, dead nodes — applied to a [`Netsim`]
+//! before a run. There is no randomness anywhere: every fault is an
+//! explicit per-node or per-link entry, entries are kept in a canonical
+//! sorted order regardless of builder call order, and the same plan
+//! applied to the same simulator produces bit-identical runs. That is
+//! what lets faulted runs be captured in `trace v1` files and replayed
+//! byte-stably (the plan itself is serialized into the trace metadata —
+//! see [`super::trace::TraceMeta::fault_plan`]).
+//!
+//! Semantics:
+//!
+//! * **slow node** — multiplies the node's per-message send/recv
+//!   overheads by a factor `> 1` (a straggler CPU), exactly
+//!   [`Netsim::inject_node_slowdown`].
+//! * **degraded link** — adds one-way delay and/or caps bandwidth on a
+//!   directed `src→dst` link ([`Netsim::inject_link_delay`] /
+//!   [`Netsim::set_link_bandwidth`]).
+//! * **dead node** — the node's NIC is gone: every message to or from
+//!   it is blackholed (never delivered, counted in
+//!   [`super::sim::SimStats::blackholed`]). Schedules that depend on a
+//!   dead node starve; the executor reports the run as incomplete
+//!   instead of deadlocking.
+//!
+//! Plans are cluster-shaped, not run-shaped: entries naming nodes
+//! outside a particular simulator's range are skipped on application
+//! (the tuner builds one simulator per grid `p`, all sharing the
+//! cluster's plan).
+
+use super::sim::NodeId;
+
+/// A degraded directed link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Extra one-way delay on the link, seconds (>= 0).
+    pub extra_delay: f64,
+    /// Bandwidth cap in bytes/s; `None` keeps the configured rate.
+    pub bandwidth: Option<f64>,
+}
+
+/// An explicit, deterministic set of faults. See the module docs for
+/// semantics; build with the chainable `slow_node` / `dead_node` /
+/// `degrade_link` methods. Entries are canonically ordered and deduped
+/// (last write per node/link wins), so two plans built from the same
+/// facts in any order compare and serialize identically.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    slow_nodes: Vec<(NodeId, f64)>,
+    dead_nodes: Vec<NodeId>,
+    links: Vec<LinkFault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Mark `node` as a straggler: per-message overheads are multiplied
+    /// by `factor` (> 0; > 1 means slower).
+    pub fn slow_node(mut self, node: NodeId, factor: f64) -> FaultPlan {
+        assert!(factor > 0.0, "slowdown factor must be positive");
+        match self.slow_nodes.binary_search_by_key(&node, |&(n, _)| n) {
+            Ok(i) => self.slow_nodes[i].1 = factor,
+            Err(i) => self.slow_nodes.insert(i, (node, factor)),
+        }
+        self
+    }
+
+    /// Mark `node` as dead: all its traffic is blackholed.
+    pub fn dead_node(mut self, node: NodeId) -> FaultPlan {
+        if let Err(i) = self.dead_nodes.binary_search(&node) {
+            self.dead_nodes.insert(i, node);
+        }
+        self
+    }
+
+    /// Degrade the directed `src→dst` link: `extra_delay` seconds of
+    /// added one-way delay (>= 0) and an optional bandwidth cap in
+    /// bytes/s.
+    pub fn degrade_link(
+        mut self,
+        src: NodeId,
+        dst: NodeId,
+        extra_delay: f64,
+        bandwidth: Option<f64>,
+    ) -> FaultPlan {
+        assert!(extra_delay >= 0.0, "extra delay must be non-negative");
+        if let Some(bps) = bandwidth {
+            assert!(bps > 0.0, "bandwidth cap must be positive");
+        }
+        let fault = LinkFault { src, dst, extra_delay, bandwidth };
+        match self.links.binary_search_by_key(&(src, dst), |l| (l.src, l.dst)) {
+            Ok(i) => self.links[i] = fault,
+            Err(i) => self.links.insert(i, fault),
+        }
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slow_nodes.is_empty() && self.dead_nodes.is_empty() && self.links.is_empty()
+    }
+
+    /// Slow-node entries, ascending by node id.
+    pub fn slow_nodes(&self) -> &[(NodeId, f64)] {
+        &self.slow_nodes
+    }
+
+    /// Dead nodes, ascending.
+    pub fn dead_nodes(&self) -> &[NodeId] {
+        &self.dead_nodes
+    }
+
+    /// Degraded links, ascending by `(src, dst)`.
+    pub fn links(&self) -> &[LinkFault] {
+        &self.links
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_orders_canonically_and_dedupes() {
+        let a = FaultPlan::new()
+            .slow_node(5, 2.0)
+            .slow_node(1, 3.0)
+            .dead_node(7)
+            .dead_node(2)
+            .dead_node(7)
+            .degrade_link(3, 0, 1e-3, None)
+            .degrade_link(0, 1, 2e-3, Some(1e6));
+        let b = FaultPlan::new()
+            .degrade_link(0, 1, 9.0, None) // superseded below
+            .degrade_link(0, 1, 2e-3, Some(1e6))
+            .degrade_link(3, 0, 1e-3, None)
+            .dead_node(2)
+            .dead_node(7)
+            .slow_node(1, 3.0)
+            .slow_node(5, 2.0);
+        assert_eq!(a, b, "call order must not matter");
+        assert_eq!(a.slow_nodes(), &[(1, 3.0), (5, 2.0)]);
+        assert_eq!(a.dead_nodes(), &[2, 7]);
+        assert_eq!(a.links()[0].dst, 1);
+    }
+
+    #[test]
+    fn empty_plan_reports_empty() {
+        assert!(FaultPlan::new().is_empty());
+        assert!(!FaultPlan::new().dead_node(0).is_empty());
+    }
+
+    #[test]
+    fn last_slowdown_per_node_wins() {
+        let p = FaultPlan::new().slow_node(3, 2.0).slow_node(3, 8.0);
+        assert_eq!(p.slow_nodes(), &[(3, 8.0)]);
+    }
+}

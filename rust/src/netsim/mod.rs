@@ -19,14 +19,19 @@
 //!   that lets Flat Scatter beat its own model).
 //!
 //! Virtual time is integer nanoseconds ([`SimTime`]); runs are exactly
-//! deterministic and reproducible.
+//! deterministic and reproducible. Degraded environments — slow nodes,
+//! degraded links, dead nodes — are injected through explicit,
+//! seed-free [`FaultPlan`]s (see [`fault`]), so faulted runs stay just
+//! as reproducible as healthy ones.
 
 pub mod config;
 pub mod event;
+pub mod fault;
 pub mod sim;
 pub mod trace;
 
 pub use config::{NetConfig, TcpConfig};
 pub use event::{EventQueue, SimTime};
+pub use fault::{FaultPlan, LinkFault};
 pub use sim::{MsgId, Netsim, NodeId, SendOutcome};
 pub use trace::{PairTimings, Trace, TraceEvent, TraceKey, TraceMeta, TraceRecord, TraceSet};

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 
 use super::config::NetConfig;
 use super::event::SimTime;
+use super::fault::FaultPlan;
 use super::trace::{Trace, TraceEvent};
 
 /// Node index within the cluster.
@@ -32,6 +33,11 @@ pub struct SendOutcome {
     pub ack_stalled: bool,
     /// Whether this message rode a coalesced (streaming) buffer.
     pub coalesced: bool,
+    /// Whether this message was blackholed (sender or receiver is a
+    /// dead node — see [`Netsim::inject_node_dead`]). A dropped
+    /// message is never delivered; `delivered` holds the injection
+    /// time and must be ignored.
+    pub dropped: bool,
 }
 
 /// Aggregate counters.
@@ -42,6 +48,8 @@ pub struct SimStats {
     pub local_copies: u64,
     pub ack_stalls: u64,
     pub coalesced_sends: u64,
+    /// Messages blackholed because an endpoint was a dead node.
+    pub blackholed: u64,
     pub last_delivery: SimTime,
 }
 
@@ -66,6 +74,8 @@ pub struct Netsim {
     link_bandwidth: HashMap<(NodeId, NodeId), f64>,
     /// Failure injection: multiplier on a node's send/recv overheads.
     node_slowdown: Vec<f64>,
+    /// Failure injection: dead nodes blackhole all their traffic.
+    dead: Vec<bool>,
     stats: SimStats,
     trace: Option<Trace>,
     next_msg: MsgId,
@@ -85,6 +95,7 @@ impl Netsim {
             extra_link_delay: HashMap::new(),
             link_bandwidth: HashMap::new(),
             node_slowdown: vec![1.0; n],
+            dead: vec![false; n],
             stats: SimStats::default(),
             trace: None,
             next_msg: 0,
@@ -133,6 +144,47 @@ impl Netsim {
         self.link_bandwidth.insert((src, dst), bps);
     }
 
+    /// Failure injection: mark `node` dead. Every subsequent message to
+    /// or from it is blackholed — never delivered, counted in
+    /// [`SimStats::blackholed`], excluded from the trace.
+    pub fn inject_node_dead(&mut self, node: NodeId) {
+        self.dead[node as usize] = true;
+    }
+
+    /// Whether `node` is currently marked dead.
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.dead[node as usize]
+    }
+
+    /// Apply every entry of a [`FaultPlan`] onto this simulator's
+    /// injection state. Entries naming nodes outside this cluster's
+    /// range are skipped — a plan describes the cluster, while the
+    /// tuner builds simulators at every grid `p` (see the
+    /// `netsim::fault` module docs).
+    pub fn apply_faults(&mut self, plan: &FaultPlan) {
+        let n = self.n as u32;
+        for &(node, factor) in plan.slow_nodes() {
+            if node < n {
+                self.inject_node_slowdown(node, factor);
+            }
+        }
+        for &node in plan.dead_nodes() {
+            if node < n {
+                self.inject_node_dead(node);
+            }
+        }
+        for l in plan.links() {
+            if l.src < n && l.dst < n {
+                if l.extra_delay > 0.0 {
+                    self.inject_link_delay(l.src, l.dst, l.extra_delay);
+                }
+                if let Some(bps) = l.bandwidth {
+                    self.set_link_bandwidth(l.src, l.dst, bps);
+                }
+            }
+        }
+    }
+
     /// Reset all clocks and flow state, keeping configuration and
     /// injected failures. Use between repetitions.
     pub fn reset(&mut self) {
@@ -160,6 +212,23 @@ impl Netsim {
         let msg = self.next_msg;
         self.next_msg += 1;
 
+        if self.dead[src as usize] || self.dead[dst as usize] {
+            // Blackhole: the message is injected into the void. Clocks,
+            // stats and the trace all stay untouched so a faulted run's
+            // surviving traffic times exactly as if the dead node were
+            // simply absent.
+            self.stats.blackholed += 1;
+            return SendOutcome {
+                msg,
+                tx_start: at,
+                tx_done: at,
+                delivered: at,
+                ack_stalled: false,
+                coalesced: false,
+                dropped: true,
+            };
+        }
+
         if src == dst {
             self.stats.local_copies += 1;
             self.stats.last_delivery = self.stats.last_delivery.max(at);
@@ -170,6 +239,7 @@ impl Netsim {
                 delivered: at,
                 ack_stalled: false,
                 coalesced: false,
+                dropped: false,
             };
         }
 
@@ -258,7 +328,15 @@ impl Netsim {
             });
         }
 
-        SendOutcome { msg, tx_start, tx_done, delivered, ack_stalled, coalesced: streaming }
+        SendOutcome {
+            msg,
+            tx_start,
+            tx_done,
+            delivered,
+            ack_stalled,
+            coalesced: streaming,
+            dropped: false,
+        }
     }
 
     /// One-way latency of an isolated `bytes`-sized message on an idle
@@ -472,5 +550,67 @@ mod tests {
     fn out_of_range_node_panics() {
         let mut s = ideal();
         s.send(SimTime::ZERO, 0, 99, 10);
+    }
+
+    #[test]
+    fn dead_node_blackholes_both_directions() {
+        let mut s = ideal();
+        s.enable_trace(16);
+        s.inject_node_dead(2);
+        assert!(s.is_dead(2));
+        let to = s.send(SimTime::ZERO, 0, 2, 1024);
+        let from = s.send(SimTime::ZERO, 2, 1, 1024);
+        assert!(to.dropped && from.dropped);
+        let ok = s.send(SimTime::ZERO, 0, 1, 1024);
+        assert!(!ok.dropped);
+        // blackholed traffic leaves no mark: stats, clocks and trace
+        // only see the surviving message
+        assert_eq!(s.stats().blackholed, 2);
+        assert_eq!(s.stats().messages, 1);
+        assert_eq!(s.stats().last_delivery, ok.delivered);
+        assert_eq!(s.trace().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn apply_faults_maps_every_entry() {
+        let plan = crate::netsim::FaultPlan::new()
+            .slow_node(0, 4.0)
+            .dead_node(3)
+            .degrade_link(1, 2, 10e-3, Some(1e6));
+        let mut s = ideal();
+        s.apply_faults(&plan);
+        // slow node 0: same extra overhead as inject_node_slowdown
+        let mut base = ideal();
+        let fa = base.send(SimTime::ZERO, 0, 1, 1024);
+        let fb = s.send(SimTime::ZERO, 0, 1, 1024);
+        let extra = 3.0 * base.config().send_overhead;
+        assert!((fb.delivered.as_secs() - fa.delivered.as_secs() - extra).abs() < 1e-9);
+        // dead node 3
+        assert!(s.send(SimTime::ZERO, 3, 1, 64).dropped);
+        // degraded link 1→2: extra delay and the bandwidth cap both bite
+        let slow = s.send(SimTime::ZERO, 1, 2, 1 << 16);
+        let fast = base.send(SimTime::ZERO, 1, 2, 1 << 16);
+        assert!(slow.delivered.as_secs() > fast.delivered.as_secs() + 9e-3);
+    }
+
+    #[test]
+    fn apply_faults_skips_out_of_range_nodes() {
+        let plan = crate::netsim::FaultPlan::new()
+            .slow_node(50, 2.0)
+            .dead_node(60)
+            .degrade_link(0, 70, 1e-3, None);
+        let mut s = ideal(); // 8 nodes
+        s.apply_faults(&plan); // must not panic
+        assert!(!s.send(SimTime::ZERO, 0, 1, 64).dropped);
+    }
+
+    #[test]
+    fn dead_node_survives_reset() {
+        let mut s = ideal();
+        s.inject_node_dead(1);
+        s.send(SimTime::ZERO, 0, 1, 64);
+        s.reset();
+        assert_eq!(s.stats().blackholed, 0);
+        assert!(s.send(SimTime::ZERO, 0, 1, 64).dropped, "dead marker is an injection");
     }
 }

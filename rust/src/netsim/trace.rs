@@ -48,6 +48,21 @@
 //! column header). Floats use Rust's shortest-roundtrip formatting, so
 //! `save → load → save` is byte-identical — the golden-trace regression
 //! suite (`rust/tests/replay_golden.rs`) depends on that.
+//!
+//! Runs captured under a [`FaultPlan`] carry an *optional* fault block
+//! between `plogp_gaps` and the event table — one record per fault
+//! entry, in the plan's canonical order:
+//!
+//! ```text
+//! fault_slow_node <node>  <factor>
+//! fault_dead_node <node>
+//! fault_link      <src>   <dst>   <extra_delay_s> <bandwidth_bps|->
+//! ```
+//!
+//! The block is emitted only when a plan is present and non-empty, so
+//! fault-free records serialize exactly as they did before the block
+//! existed and pre-fault readers' files parse unchanged; faulted files
+//! round-trip byte-identically like everything else.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -57,6 +72,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::table::Table;
 
 use super::event::SimTime;
+use super::fault::FaultPlan;
 use super::sim::{MsgId, NodeId};
 
 /// One recorded message transmission.
@@ -196,6 +212,12 @@ pub struct TraceMeta {
     pub plogp_sizes: Vec<f64>,
     /// pLogP gap-table sample gaps (seconds).
     pub plogp_gaps: Vec<f64>,
+    /// The fault plan the run executed under, if any. Serialized as an
+    /// *optional* metadata block (`fault_slow_node` / `fault_dead_node`
+    /// / `fault_link` records, emitted only when the plan is non-empty),
+    /// so pre-fault `trace v1` files parse unchanged and fault-free
+    /// records serialize exactly as before.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl TraceMeta {
@@ -295,6 +317,23 @@ impl TraceRecord {
         out.push_str(&format!("plogp_l\t{}\n", m.plogp_l));
         out.push_str(&format!("plogp_sizes\t{}\n", join_f64(&m.plogp_sizes)));
         out.push_str(&format!("plogp_gaps\t{}\n", join_f64(&m.plogp_gaps)));
+        if let Some(fp) = m.fault_plan.as_ref().filter(|fp| !fp.is_empty()) {
+            for &(node, factor) in fp.slow_nodes() {
+                out.push_str(&format!("fault_slow_node\t{node}\t{factor}\n"));
+            }
+            for &node in fp.dead_nodes() {
+                out.push_str(&format!("fault_dead_node\t{node}\n"));
+            }
+            for l in fp.links() {
+                out.push_str(&format!(
+                    "fault_link\t{}\t{}\t{}\t{}\n",
+                    l.src,
+                    l.dst,
+                    l.extra_delay,
+                    l.bandwidth.map(|b| b.to_string()).unwrap_or_else(|| "-".into())
+                ));
+            }
+        }
         out.push_str(&event_table(&self.events, true).to_tsv());
         out
     }
@@ -317,6 +356,7 @@ impl TraceRecord {
         let mut plogp_l = None;
         let mut plogp_sizes = None;
         let mut plogp_gaps = None;
+        let mut fault_plan: Option<FaultPlan> = None;
         let mut events: Vec<TraceEvent> = Vec::new();
         for (ln, line) in lines.enumerate() {
             let mut f = line.split('\t');
@@ -345,6 +385,31 @@ impl TraceRecord {
                 }
                 Some("plogp_gaps") => {
                     plogp_gaps = Some(split_f64(f.next().context("plogp_gaps value")?)?)
+                }
+                Some("fault_slow_node") => {
+                    let node = f.next().context("fault_slow_node node")?.parse()?;
+                    let factor = f.next().context("fault_slow_node factor")?.parse()?;
+                    fault_plan =
+                        Some(fault_plan.take().unwrap_or_default().slow_node(node, factor));
+                }
+                Some("fault_dead_node") => {
+                    let node = f.next().context("fault_dead_node node")?.parse()?;
+                    fault_plan = Some(fault_plan.take().unwrap_or_default().dead_node(node));
+                }
+                Some("fault_link") => {
+                    let src = f.next().context("fault_link src")?.parse()?;
+                    let dst = f.next().context("fault_link dst")?.parse()?;
+                    let extra = f.next().context("fault_link extra_delay")?.parse()?;
+                    let bandwidth = match f.next().context("fault_link bandwidth")? {
+                        "-" => None,
+                        b => Some(b.parse::<f64>()?),
+                    };
+                    fault_plan = Some(
+                        fault_plan
+                            .take()
+                            .unwrap_or_default()
+                            .degrade_link(src, dst, extra, bandwidth),
+                    );
                 }
                 Some("event") => {
                     let fields: Vec<&str> = f.collect();
@@ -381,6 +446,7 @@ impl TraceRecord {
                 plogp_l: plogp_l.context("missing plogp_l record")?,
                 plogp_sizes: plogp_sizes.context("missing plogp_sizes record")?,
                 plogp_gaps: plogp_gaps.context("missing plogp_gaps record")?,
+                fault_plan,
             },
             events,
         };
@@ -597,6 +663,7 @@ mod tests {
                 plogp_l: 6.05e-5,
                 plogp_sizes: vec![1.0, 1024.0, 65536.0],
                 plogp_gaps: vec![1.1e-5, 1.3e-5, 6.4e-5],
+                fault_plan: None,
             },
             events,
         }
@@ -677,6 +744,39 @@ mod tests {
     }
 
     #[test]
+    fn faulted_record_roundtrips_bytes() {
+        let mut rec = record("bcast", "bcast/seg_chain", 8, 4096, Some(512));
+        rec.meta.fault_plan = Some(
+            FaultPlan::new()
+                .slow_node(3, 2.5)
+                .dead_node(7)
+                .degrade_link(0, 1, 1.5e-3, Some(1e6))
+                .degrade_link(4, 2, 2e-3, None),
+        );
+        let text = rec.to_tsv();
+        assert!(text.contains("fault_slow_node\t3\t2.5\n"));
+        assert!(text.contains("fault_dead_node\t7\n"));
+        assert!(text.contains("fault_link\t0\t1\t0.0015\t1000000\n"));
+        assert!(text.contains("fault_link\t4\t2\t0.002\t-\n"));
+        let back = TraceRecord::from_tsv(&text).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.to_tsv(), text, "faulted serialization must be byte-stable");
+    }
+
+    #[test]
+    fn fault_block_is_optional_and_absent_when_fault_free() {
+        // pre-fault files (no fault_* records) parse to fault_plan: None
+        let rec = record("bcast", "bcast/flat", 4, 64, None);
+        let text = rec.to_tsv();
+        assert!(!text.contains("fault_"), "fault-free records emit no fault block");
+        assert_eq!(TraceRecord::from_tsv(&text).unwrap().meta.fault_plan, None);
+        // an explicitly-empty plan serializes identically to no plan
+        let mut with_empty = rec.clone();
+        with_empty.meta.fault_plan = Some(FaultPlan::new());
+        assert_eq!(with_empty.to_tsv(), text);
+    }
+
+    #[test]
     fn from_tsv_rejects_garbage_and_inconsistency() {
         assert!(TraceRecord::from_tsv("hello").is_err());
         assert!(TraceRecord::from_tsv(TRACE_HEADER).is_err()); // no metadata
@@ -752,9 +852,13 @@ mod tests {
         let mut set = TraceSet::new();
         set.insert(record("bcast", "bcast/seg_chain", 8, 4096, Some(512)));
         set.insert(record("allreduce", "allreduce/rec_doubling", 8, 4096, None));
-        assert_eq!(set.save_dir(&dir).unwrap(), 2);
+        let mut faulted = record("scatter", "scatter/flat", 8, 4096, None);
+        faulted.meta.fault_plan =
+            Some(FaultPlan::new().slow_node(1, 3.0).degrade_link(0, 1, 1e-3, None));
+        set.insert(faulted);
+        assert_eq!(set.save_dir(&dir).unwrap(), 3);
         let back = TraceSet::load_dir(&dir).unwrap();
-        assert_eq!(back.len(), 2);
+        assert_eq!(back.len(), 3);
         for (a, b) in set.records().zip(back.records()) {
             assert_eq!(a, b);
             assert_eq!(a.to_tsv(), b.to_tsv());

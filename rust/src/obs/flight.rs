@@ -29,6 +29,12 @@ pub enum DecisionOutcome {
     Miss,
     /// Cold miss coalesced onto another request's in-flight tune.
     Coalesced,
+    /// Tuning failed; served from the stale shelf (retired tables
+    /// within the coordinator's staleness bound).
+    Stale,
+    /// Tuning failed and no stale tables existed; served from a
+    /// last-resort local model evaluation.
+    Fallback,
 }
 
 impl DecisionOutcome {
@@ -37,7 +43,16 @@ impl DecisionOutcome {
             DecisionOutcome::Hit => "hit",
             DecisionOutcome::Miss => "miss",
             DecisionOutcome::Coalesced => "coalesced",
+            DecisionOutcome::Stale => "stale",
+            DecisionOutcome::Fallback => "fallback",
         }
+    }
+
+    /// Whether the decision came from anything other than fresh,
+    /// up-to-date tables — the coordinator's degraded modes (see the
+    /// README's "Degraded modes" section).
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, DecisionOutcome::Stale | DecisionOutcome::Fallback)
     }
 }
 

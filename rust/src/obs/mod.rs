@@ -27,6 +27,9 @@
 //! | `coordinator.publish_ns` | histogram | write-side snapshot rebuild + atomic swap |
 //! | `coordinator.refresh_ns` | histogram | one drift-refresh pass |
 //! | `coordinator.refresh.checks` / `.swaps` | counter | refresh passes / atomic table swaps |
+//! | `coordinator.tune_failures` | counter | tuner runs that failed (real or injected) |
+//! | `coordinator.stale_serves` / `.fallback_serves` | counter | degraded answers: stale-shelf hits / native-model fallbacks |
+//! | `coordinator.degraded_mode` | gauge | 1 after a degraded serve, 0 once a tune succeeds again |
 //! | `net.request_ns` | histogram | server-side `BATCH` handling latency (`coordd`) |
 //! | `net.connections` | counter | connections ever accepted (TCP + loopback) |
 //! | `net.open_connections` | gauge | currently-live TCP connections |
@@ -34,6 +37,10 @@
 //! | `net.queries` / `net.query_errors` | counter | batched queries answered / answered with an error reply |
 //! | `net.subscriptions` | counter | `SUBSCRIBE` registrations accepted |
 //! | `net.pushes` | counter | `INVALIDATE`/`TABLEUPDATE` frames delivered |
+//! | `net.reconnects` | counter | client-side transparent reconnects (redial + re-`HELLO` + resubscribe) |
+//! | `net.sheds` | counter | connections refused with `NACK 0 busy` at the accept gate |
+//! | `net.idle_reaped` | counter | connections closed by the server's idle reaper |
+//! | `net.conn_panics` | counter | connection threads that panicked (isolated, service kept running) |
 //! | `tuner.sweep_ns` | histogram | one per-op grid sweep |
 //! | `tuner.stage.bound_screen_ns` | histogram | per-cell bound screening |
 //! | `tuner.stage.model_eval_ns` | histogram | per-cell unsegmented model evaluations |

@@ -1,0 +1,389 @@
+//! Chaos suite for the resilience layer: the loopback and TCP
+//! transports are driven through cut links, garbage dials, mid-batch
+//! server restarts, injected tune failures, and stalled peers, and the
+//! invariants that must hold throughout are checked on every call:
+//!
+//! * every decision that comes back equals some published table's
+//!   answer (or is an explicitly degraded stale/fallback serve whose
+//!   answer still matches the retired/native table);
+//! * the client converges — after the faults stop, calls succeed on
+//!   the first attempt again;
+//! * no call blocks past its deadline budget.
+//!
+//! Fault injection is deterministic by construction: links are severed
+//! by a test-owned switch ([`Cuttable`]), dial outcomes follow a
+//! counter (every third redial gets garbage), and tune failures are a
+//! countdown, not a coin flip.
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use collective_tuner::coordinator::net::{
+    ClientOptions, CoordServer, LoopbackServer, NetClient, Query, RetryPolicy, ServerOptions,
+    PROTOCOL_VERSION,
+};
+use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, DecisionSource, TableSet};
+use collective_tuner::netsim::{NetConfig, Netsim};
+use collective_tuner::plogp::{bench, PLogP};
+use collective_tuner::tuner::{grids, Decision, Op, Tuner};
+
+fn small_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards: 4,
+        capacity_per_shard: 8,
+        p_grid: vec![2, 8, 24],
+        m_grid: grids::log_grid(1, 1 << 20, 6),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn measured(cfg: NetConfig) -> PLogP {
+    let mut sim = Netsim::new(2, cfg);
+    bench::measure(&mut sim)
+}
+
+/// A transport wrapper with a test-owned kill switch: once `cut` is
+/// flipped, every read and write fails with `ConnectionReset`. This is
+/// how the chaos tests sever a live link at an exact point in the
+/// schedule instead of waiting on OS socket teardown.
+struct Cuttable<T> {
+    inner: T,
+    cut: Arc<AtomicBool>,
+}
+
+impl<T> Cuttable<T> {
+    fn check(&self) -> std::io::Result<()> {
+        if self.cut.load(Ordering::SeqCst) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "link cut by chaos schedule",
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl<T: Read> Read for Cuttable<T> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.check()?;
+        self.inner.read(buf)
+    }
+}
+
+impl<T: Write> Write for Cuttable<T> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.check()?;
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.check()?;
+        self.inner.flush()
+    }
+}
+
+/// A "connection" to something that is not a `ct/1` server at all:
+/// reads yield undecodable bytes, writes vanish. Exercises the
+/// handshake-failure leg of the redial loop.
+fn garbage_transport() -> (Box<dyn Read + Send>, Box<dyn Write + Send>) {
+    (
+        Box::new(std::io::Cursor::new(b"!!not-a-frame!!\n".to_vec())),
+        Box::new(std::io::sink()),
+    )
+}
+
+#[test]
+fn loopback_disconnect_storm_converges_and_never_serves_garbage() {
+    let cfg = small_config();
+    let coord = Arc::new(Coordinator::new(cfg.clone()));
+    let net = measured(NetConfig::fast_ethernet_icluster1());
+    coord.register("x", 24, net.clone());
+    let want = TableSet::new(Tuner::native().tune_all(&net, &cfg.p_grid, &cfg.m_grid).unwrap());
+    let server = Arc::new(LoopbackServer::start(Arc::clone(&coord)));
+
+    // first link, pre-wrapped so the schedule can cut it
+    let first_cut = Arc::new(AtomicBool::new(false));
+    let (r, w) = server.transport_pair();
+    let client = NetClient::from_transport_with(
+        Box::new(Cuttable { inner: r, cut: Arc::clone(&first_cut) }),
+        Box::new(Cuttable { inner: w, cut: Arc::clone(&first_cut) }),
+        ClientOptions {
+            retry: RetryPolicy {
+                max_attempts: 10,
+                base_delay: Duration::from_millis(1),
+                max_delay: Duration::from_millis(10),
+            },
+            ..ClientOptions::default()
+        },
+    )
+    .unwrap();
+
+    // redial handle: every third dial reaches garbage instead of the
+    // server; successful dials install a fresh cut switch in the slot
+    // so the schedule always severs the *live* link
+    let cut_slot = Arc::new(Mutex::new(first_cut));
+    let dials = Arc::new(AtomicU64::new(0));
+    client.set_redial({
+        let server = Arc::clone(&server);
+        let cut_slot = Arc::clone(&cut_slot);
+        let dials = Arc::clone(&dials);
+        move || {
+            if dials.fetch_add(1, Ordering::Relaxed) % 3 == 1 {
+                return Ok(garbage_transport());
+            }
+            let (r, w) = server.transport_pair();
+            let cut = Arc::new(AtomicBool::new(false));
+            *cut_slot.lock().unwrap() = Arc::clone(&cut);
+            Ok((
+                Box::new(Cuttable { inner: r, cut: Arc::clone(&cut) }) as Box<dyn Read + Send>,
+                Box::new(Cuttable { inner: w, cut }) as Box<dyn Write + Send>,
+            ))
+        }
+    });
+
+    let probes = [
+        (Op::Bcast, 24usize, 65536u64),
+        (Op::Scatter, 8, 1024),
+        (Op::AllReduce, 24, 1 << 20),
+    ];
+    let queries: Vec<Query> = probes
+        .iter()
+        .map(|&(op, p, m)| Query { op, cluster: "x".into(), p, m })
+        .collect();
+
+    let mut cuts = 0u64;
+    for round in 0..30 {
+        if round % 5 == 0 {
+            cut_slot.lock().unwrap().store(true, Ordering::SeqCst);
+            cuts += 1;
+        }
+        let t0 = Instant::now();
+        let replies = client.query_batch(&queries).unwrap_or_else(|e| {
+            panic!("round {round}: storm call failed to converge: {e:#}")
+        });
+        assert!(t0.elapsed() < Duration::from_secs(30), "round {round} blocked");
+        for (&(op, p, m), r) in probes.iter().zip(replies) {
+            let d = r.expect("registered cluster answers");
+            assert_eq!(
+                d,
+                want.decision(op, p, m),
+                "round {round}: {op:?} P={p} m={m} came back wrong mid-storm"
+            );
+        }
+    }
+    assert!(
+        client.reconnects() >= cuts,
+        "every cut forces a reconnect: {} reconnects for {cuts} cuts",
+        client.reconnects()
+    );
+    // convergence: with the chaos schedule quiet, the link stays up
+    let before = client.reconnects();
+    for _ in 0..3 {
+        client.query_batch(&queries).unwrap();
+    }
+    assert_eq!(client.reconnects(), before, "no reconnect churn after faults stop");
+    client.close();
+}
+
+#[test]
+fn tcp_restart_storm_rides_reconnects_without_wrong_answers() {
+    let cfg = small_config();
+    let coord = Arc::new(Coordinator::new(cfg.clone()));
+    let net = measured(NetConfig::fast_ethernet_icluster1());
+    coord.register("x", 24, net.clone());
+    let want_tables =
+        TableSet::new(Tuner::native().tune_all(&net, &cfg.p_grid, &cfg.m_grid).unwrap());
+
+    let sopts = ServerOptions { drain_timeout: Duration::from_secs(2), ..ServerOptions::default() };
+    let mut server =
+        Some(CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", sopts.clone()).unwrap());
+    let addr = server.as_ref().unwrap().local_addr().to_string();
+
+    let client = NetClient::connect_with(
+        &addr,
+        ClientOptions {
+            connect_timeout: Some(Duration::from_secs(2)),
+            read_timeout: Some(Duration::from_secs(5)),
+            write_timeout: Some(Duration::from_secs(5)),
+            retry: RetryPolicy {
+                max_attempts: 100,
+                base_delay: Duration::from_millis(5),
+                max_delay: Duration::from_millis(100),
+            },
+        },
+    )
+    .unwrap();
+
+    let probes = [(Op::Bcast, 24usize, 65536u64), (Op::Scatter, 8, 1024)];
+    let queries: Vec<Query> = probes
+        .iter()
+        .map(|&(op, p, m)| Query { op, cluster: "x".into(), p, m })
+        .collect();
+    let want: Vec<Decision> =
+        probes.iter().map(|&(op, p, m)| want_tables.decision(op, p, m)).collect();
+
+    let served = AtomicU64::new(0);
+    let storm_done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let storm = s.spawn(|| {
+            while !storm_done.load(Ordering::Relaxed) {
+                let t0 = Instant::now();
+                let replies = client.query_batch(&queries).expect("storm call converges");
+                assert!(
+                    t0.elapsed() < Duration::from_secs(30),
+                    "a storm call blocked past its bound"
+                );
+                for (w, r) in want.iter().zip(replies) {
+                    assert_eq!(&r.expect("registered cluster answers"), w);
+                }
+                served.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+
+        // kill and resurrect the server on the same port, twice,
+        // mid-storm
+        for _ in 0..2 {
+            std::thread::sleep(Duration::from_millis(150));
+            server.take().unwrap().shutdown();
+            std::thread::sleep(Duration::from_millis(100));
+            let deadline = Instant::now() + Duration::from_secs(10);
+            server = Some(loop {
+                match CoordServer::start(Arc::clone(&coord), &addr, sopts.clone()) {
+                    Ok(srv) => break srv,
+                    Err(e) => {
+                        assert!(Instant::now() < deadline, "same-port rebind never took: {e:#}");
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            });
+            // let the storm actually reach the resurrected server
+            std::thread::sleep(Duration::from_millis(150));
+        }
+        storm_done.store(true, Ordering::Relaxed);
+        storm.join().unwrap();
+    });
+
+    assert!(served.load(Ordering::Relaxed) > 0, "the storm actually served calls");
+    assert!(
+        client.reconnects() >= 2,
+        "each restart forces a reconnect: {} reconnects",
+        client.reconnects()
+    );
+    // post-storm convergence on the final server instance
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert_eq!(d, want[0]);
+    client.close();
+    server.unwrap().shutdown();
+}
+
+#[test]
+fn degradation_over_the_wire_stale_then_recovery_then_fallback() {
+    let cfg = small_config();
+    let coord = Arc::new(Coordinator::new(cfg.clone()));
+    let net = measured(NetConfig::fast_ethernet_icluster1());
+    coord.register("x", 24, net.clone());
+    let want = TableSet::new(Tuner::native().tune_all(&net, &cfg.p_grid, &cfg.m_grid).unwrap());
+
+    let server = LoopbackServer::start(Arc::clone(&coord));
+    let client = server.connect().unwrap();
+
+    // fresh: the first remote decision tunes
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert_eq!(d, want.decision(Op::Bcast, 24, 65536));
+    assert_eq!(coord.stats().tunes, 1);
+
+    // stale: evict the tables and fail the re-tune — the wire still
+    // gets the retired table's answer, not an error
+    assert!(coord.invalidate("x"));
+    coord.inject_tune_failures(1);
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert_eq!(d, want.decision(Op::Bcast, 24, 65536), "stale serve matches the retired table");
+    let st = coord.stats();
+    assert_eq!(st.tune_failures, 1);
+    assert_eq!(st.stale_serves, 1);
+    assert_eq!(st.tunes, 1, "an injected failure is not a tune");
+
+    // recovery: the degraded answer was never cached, so the next call
+    // re-tunes and the ladder is back to fresh
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert_eq!(d, want.decision(Op::Bcast, 24, 65536));
+    let st = coord.stats();
+    assert_eq!(st.tunes, 2, "recovery re-tunes instead of reusing the stale serve");
+    assert_eq!(st.stale_serves, 1, "recovery does not serve stale");
+    let (_, _, src) = coord.decision_full(Op::Bcast, "x", 24, 65536).unwrap();
+    assert_eq!(src, DecisionSource::Fresh, "post-recovery reads are cache hits");
+
+    // fallback: a never-tuned hardware class has no shelf to lean on;
+    // a failed tune falls through to the local native model, whose
+    // answer equals a native tune of the same measurements
+    let net2 = measured(NetConfig::gigabit_ethernet());
+    let want2 = TableSet::new(Tuner::native().tune_all(&net2, &cfg.p_grid, &cfg.m_grid).unwrap());
+    coord.register("y", 24, net2);
+    coord.inject_tune_failures(1);
+    let d = client.decision(Op::Scatter, "y", 8, 1024).unwrap();
+    assert_eq!(d, want2.decision(Op::Scatter, 8, 1024), "fallback equals the native model");
+    let st = coord.stats();
+    assert_eq!(st.fallback_serves, 1);
+    assert_eq!(st.stale_serves, 1, "fallback is not a stale serve");
+    client.close();
+}
+
+#[test]
+fn tcp_stalled_mid_frame_peer_is_cut_loose_by_the_read_deadline() {
+    use std::io::{BufRead, BufReader, Write as _};
+
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("x", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server = CoordServer::start(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        ServerOptions {
+            read_timeout: Some(Duration::from_millis(100)),
+            ..ServerOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // a hand-rolled client that handshakes correctly, then goes silent
+    // in the middle of a frame: BATCH promises one query and never
+    // sends it — the worst kind of peer, holding a connection thread
+    // mid-parse
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(format!("HELLO\tct\t{PROTOCOL_VERSION}\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("WELCOME\t"), "handshake answered: {line:?}");
+    stream.write_all(b"BATCH\t1\t1\n").unwrap();
+
+    // the server's read deadline must cut the connection loose; the
+    // socket then closes under us (EOF or reset), quickly — a server
+    // without the deadline would hold this thread forever
+    let t0 = Instant::now();
+    let mut rest = Vec::new();
+    let outcome = reader.read_to_end(&mut rest);
+    let waited = t0.elapsed();
+    match outcome {
+        Ok(_) => {}                                // clean EOF
+        Err(e) => {
+            assert!(
+                matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                ),
+                "want EOF or reset, got {e:?}"
+            );
+        }
+    }
+    assert!(waited < Duration::from_secs(8), "stall was deadline-bounded, waited {waited:?}");
+
+    // the server itself is fine: a well-behaved client still gets served
+    let client = NetClient::connect(&addr).unwrap();
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert_eq!(d, coord.decision(Op::Bcast, "x", 24, 65536).unwrap());
+    client.close();
+    server.shutdown();
+}

@@ -13,8 +13,8 @@ use std::time::Duration;
 
 use collective_tuner::collectives::Strategy;
 use collective_tuner::coordinator::net::{
-    frame::codes, CoordServer, Frame, LoopbackServer, NetClient, Point, Push, Query, QueryReply,
-    ServerOptions,
+    frame::codes, ClientOptions, CoordServer, Frame, LoopbackServer, NetClient, Point, Push,
+    Query, QueryReply, RemoteError, RetryPolicy, ServerOptions, TransportError, PROTOCOL_VERSION,
 };
 use collective_tuner::coordinator::{Coordinator, CoordinatorConfig, RefreshPolicy, TableSet};
 use collective_tuner::netsim::{NetConfig, Netsim};
@@ -477,6 +477,273 @@ fn tcp_remote_shutdown_is_opt_in() {
     let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
     client.shutdown_server().unwrap();
     assert!(server.shutdown_requested());
+    server.shutdown();
+}
+
+// ---- frame-layer fault tolerance ---------------------------------------
+
+/// A single-connection scripted peer: accepts one client, then runs
+/// `script` on the raw stream and hangs up. The building block for
+/// injecting truncation, garbage, and stalls at exact frame boundaries.
+fn scripted_server(
+    script: impl FnOnce(std::net::TcpStream) + Send + 'static,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        script(stream);
+    });
+    (addr, t)
+}
+
+/// Answer the client's `HELLO` with a valid `WELCOME`, leaving the
+/// stream positioned right after the handshake.
+fn answer_hello(stream: &std::net::TcpStream) {
+    use std::io::{BufRead, BufReader, Write};
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.starts_with("HELLO\t"), "unexpected first frame {line:?}");
+    let mut w = stream.try_clone().unwrap();
+    let welcome = Frame::Welcome { version: PROTOCOL_VERSION, banner: "scripted".into() };
+    w.write_all(welcome.encode().as_bytes()).unwrap();
+}
+
+fn is_transport(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<TransportError>().is_some())
+}
+
+#[test]
+fn truncated_mid_frame_response_is_a_typed_transport_error() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, t) = scripted_server(|stream| {
+        answer_hello(&stream);
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // BATCH header
+        line.clear();
+        reader.read_line(&mut line).unwrap(); // its one Q item
+        let mut w = stream;
+        // a DECISIONS header promising two replies, one partial item,
+        // then hang up mid-frame
+        w.write_all(b"DECISIONS\t1\t1\t2\nD\t").unwrap();
+        w.flush().unwrap();
+    });
+    let client = NetClient::connect(&addr).unwrap();
+    let err = client.decision(Op::Bcast, "x", 8, 1024).unwrap_err();
+    assert!(is_transport(&err), "want a typed transport error, got: {err:#}");
+    t.join().unwrap();
+}
+
+#[test]
+fn garbage_after_valid_welcome_fails_typed_and_a_fresh_connection_recovers() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, t) = scripted_server(|stream| {
+        answer_hello(&stream);
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // BATCH header
+        let mut w = stream;
+        w.write_all(b"\x01\x02 utter nonsense, not a frame\n").unwrap();
+    });
+    let client = NetClient::connect(&addr).unwrap();
+    assert!(client.banner().contains("scripted"));
+    let err = client.decision(Op::Bcast, "x", 8, 1024).unwrap_err();
+    assert!(is_transport(&err), "{err:#}");
+    t.join().unwrap();
+
+    // the failure poisoned nothing beyond that connection: the same
+    // call on a fresh connection to a real server succeeds
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("x", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server =
+        CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let fresh = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let d = fresh.decision(Op::Bcast, "x", 8, 1024).unwrap();
+    assert_eq!(d, coord.decision(Op::Bcast, "x", 8, 1024).unwrap());
+    fresh.close();
+    server.shutdown();
+}
+
+#[test]
+fn server_gone_between_request_and_response_is_typed_and_deadline_bounded() {
+    use std::io::{BufRead, BufReader};
+    // vanish: read the request, answer nothing, hang up — EOF where a
+    // response belongs
+    let (addr, t) = scripted_server(|stream| {
+        answer_hello(&stream);
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // PING
+        drop(stream);
+    });
+    let client = NetClient::connect(&addr).unwrap();
+    let err = client.ping().unwrap_err();
+    assert!(is_transport(&err), "{err:#}");
+    t.join().unwrap();
+
+    // stall: read the request and go silent; the client's read deadline
+    // must bound the wait — a hang here is exactly the failure mode the
+    // deadline exists to prevent
+    let (addr, t) = scripted_server(|stream| {
+        answer_hello(&stream);
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line); // PING
+        std::thread::sleep(Duration::from_secs(2)); // far past the deadline
+    });
+    let opts = ClientOptions {
+        read_timeout: Some(Duration::from_millis(200)),
+        ..ClientOptions::default()
+    };
+    let client = NetClient::connect_with(&addr, opts).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = client.ping().unwrap_err();
+    let waited = t0.elapsed();
+    assert!(is_transport(&err), "{err:#}");
+    assert!(waited < Duration::from_millis(1500), "deadline-bounded, waited {waited:?}");
+    t.join().unwrap();
+}
+
+#[test]
+fn accept_gate_sheds_with_retryable_busy_nack() {
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server = CoordServer::start(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        ServerOptions { max_connections: 1, ..ServerOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let first = NetClient::connect(&addr).unwrap(); // occupies the one slot
+    let err = NetClient::connect(&addr).unwrap_err(); // shed before the handshake
+    let remote = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<RemoteError>())
+        .unwrap_or_else(|| panic!("want a RemoteError, got: {err:#}"));
+    assert_eq!(remote.code, codes::BUSY);
+    assert!(remote.is_retryable(), "busy is the retryable refusal");
+
+    // the slot frees once the first client hangs up; retrying gets in
+    first.close();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let second = loop {
+        match NetClient::connect(&addr) {
+            Ok(c) => break c,
+            Err(e) => {
+                assert!(std::time::Instant::now() < deadline, "never admitted: {e:#}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    let d = second.decision(Op::Bcast, "fe", 8, 1024).unwrap();
+    assert!(d.predicted > 0.0);
+    second.close();
+    server.shutdown();
+}
+
+#[test]
+fn idle_connections_are_reaped_but_active_ones_survive() {
+    let coord = Arc::new(Coordinator::new(small_config()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    let server = CoordServer::start(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        ServerOptions {
+            read_timeout: Some(Duration::from_millis(50)),
+            idle_timeout: Some(Duration::from_millis(200)),
+            ..ServerOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let active = NetClient::connect(&addr).unwrap();
+    let idle = NetClient::connect(&addr).unwrap();
+
+    // one client pings through a dozen idle windows while the other
+    // stays silent: activity keeps resetting the idle budget, silence
+    // exhausts it
+    for _ in 0..12 {
+        active.ping().unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+    }
+    let err = idle.ping().unwrap_err();
+    assert!(is_transport(&err), "reap surfaces as a transport error: {err:#}");
+
+    active.ping().unwrap(); // activity kept this one alive throughout
+    active.close();
+    server.shutdown();
+}
+
+#[test]
+fn reconnect_preserves_invalidation_floors_and_resubscribes() {
+    // The §6 ordering guarantee across a socket: an INVALIDATE observed
+    // on the old connection still fences decisions served on the new
+    // one, and recorded subscriptions are re-established transparently.
+    let cfg = small_config();
+    let coord = Arc::new(Coordinator::new(cfg.clone()));
+    let net_b = measured(NetConfig::gigabit_ethernet());
+    coord.register("x", 24, net_b.clone());
+
+    let sopts = ServerOptions::default();
+    let server = CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", sopts.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let copts = ClientOptions {
+        connect_timeout: Some(Duration::from_secs(2)),
+        read_timeout: Some(Duration::from_secs(10)),
+        write_timeout: Some(Duration::from_secs(10)),
+        retry: RetryPolicy {
+            max_attempts: 60,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(100),
+        },
+    };
+    let client = NetClient::connect_with(&addr, copts).unwrap();
+    let points = [Point { op: Op::Bcast, p: 24, m: 65536 }];
+    client.subscribe("x", &points).unwrap();
+    let initial = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    assert!(matches!(initial[..], [Push::TableUpdate { .. }]), "{initial:?}");
+
+    // drive an INVALIDATE exactly as the loopback retirement test does
+    coord.register("x", 24, measured(NetConfig::myrinet_like()));
+    coord.register("y", 24, net_b);
+    let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
+    assert!(coord.refresh("y", &mut sim, &RefreshPolicy::default()).unwrap().refreshed());
+    let pushes = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    let floor = match &pushes[..] {
+        [Push::Invalidate { epoch, cluster }] => {
+            assert_eq!(cluster, "x");
+            *epoch
+        }
+        other => panic!("expected one Invalidate, got {other:?}"),
+    };
+    assert!(floor > 0);
+    assert_eq!(client.invalidation_floor("x"), floor);
+
+    // restart the server on the same port (same coordinator, so epochs
+    // keep their meaning across the gap)
+    server.shutdown();
+    let server = CoordServer::start(Arc::clone(&coord), &addr, sopts).unwrap();
+
+    // the next call rides the retry loop through a transparent
+    // reconnect: re-HELLO, re-SUBSCRIBE, request re-sent — and the
+    // answer must clear the floor recorded on the dead socket (the
+    // client would reject it as `stale` otherwise)
+    let d = client.decision(Op::Bcast, "x", 24, 65536).unwrap();
+    assert!(d.predicted > 0.0);
+    assert_eq!(client.reconnects(), 1, "exactly one transparent reconnect");
+    assert_eq!(client.invalidation_floor("x"), floor, "the floor survives the socket");
+
+    // the re-established subscription still delivers pushes
+    let mut sim = Netsim::new(2, NetConfig::gigabit_ethernet());
+    assert!(coord.refresh("x", &mut sim, &RefreshPolicy::default()).unwrap().refreshed());
+    let pushes = client.wait_pushes(1, Duration::from_secs(10)).unwrap();
+    assert!(!pushes.is_empty(), "resubscription delivers pushes after reconnect");
+    client.close();
     server.shutdown();
 }
 

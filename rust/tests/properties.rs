@@ -6,7 +6,8 @@ use collective_tuner::collectives::{composed, tree, Strategy};
 use collective_tuner::models;
 use collective_tuner::mpi::{Payload, World};
 use collective_tuner::netsim::{
-    NetConfig, Netsim, SimTime, TcpConfig, Trace, TraceEvent, TraceMeta, TraceRecord, TraceSet,
+    FaultPlan, NetConfig, Netsim, SimTime, TcpConfig, Trace, TraceEvent, TraceMeta, TraceRecord,
+    TraceSet,
 };
 use collective_tuner::plogp::{self, GapTable, PLogP};
 use collective_tuner::tuner::grids;
@@ -476,6 +477,31 @@ fn trace_records_roundtrip_through_the_tsv_format() {
                 plogp_l: rng.log_uniform(1e-6, 1e-3),
                 plogp_sizes: sizes,
                 plogp_gaps: (0..samples).map(|_| rng.log_uniform(1e-6, 1e-2)).collect(),
+                fault_plan: if rng.chance(0.5) {
+                    let mut fp = FaultPlan::new();
+                    for _ in 0..rng.range_usize(1, 4) {
+                        fp = fp.slow_node(rng.range(0, 64) as u32, rng.uniform(1.0, 8.0));
+                    }
+                    if rng.chance(0.5) {
+                        fp = fp.dead_node(rng.range(0, 64) as u32);
+                    }
+                    if rng.chance(0.5) {
+                        let bw = if rng.chance(0.5) {
+                            Some(rng.log_uniform(1e5, 1e9))
+                        } else {
+                            None
+                        };
+                        fp = fp.degrade_link(
+                            rng.range(0, 64) as u32,
+                            rng.range(0, 64) as u32,
+                            rng.log_uniform(1e-6, 1e-2),
+                            bw,
+                        );
+                    }
+                    Some(fp)
+                } else {
+                    None
+                },
             },
             events,
         };
