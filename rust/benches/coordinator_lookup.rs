@@ -87,15 +87,15 @@ fn main() {
     let cold_opts = BenchOpts { warmup_iters: 1, min_iters: 5, max_iters: 50, min_seconds: 1.0 };
     let r_cold = bench_with("cold miss: tables_for on empty cache", &cold_opts, || {
         let coord = Coordinator::new(config());
-        coord.register("fe", 24, net_fe.clone());
+        coord.register("fe", 24, net_fe.clone()).unwrap();
         std::hint::black_box(coord.tables("fe").unwrap());
     });
 
     // ---- warm hit: cached table, sharded read path ----------------------
     section("warm hit (sharded cache lookup + table lookup)");
     let coord = Coordinator::new(config());
-    coord.register("fe", 24, net_fe.clone());
-    coord.register("ge", 16, net_ge.clone());
+    coord.register("fe", 24, net_fe.clone()).unwrap();
+    coord.register("ge", 16, net_ge.clone()).unwrap();
     let _ = coord.tables("fe").unwrap();
     let _ = coord.tables("ge").unwrap();
     let hit_opts = BenchOpts {
@@ -165,9 +165,9 @@ fn main() {
     // first), which sees every reader's decisions.
     section("publish storm (32 readers vs continuous refresh)");
     let storm = Coordinator::new(CoordinatorConfig { jobs: 1, ..config() });
-    storm.register("fe", 24, net_fe.clone());
-    storm.register("ge", 16, net_ge.clone());
-    storm.register("churn", 8, net_fe.clone());
+    storm.register("fe", 24, net_fe.clone()).unwrap();
+    storm.register("ge", 16, net_ge.clone()).unwrap();
+    storm.register("churn", 8, net_fe.clone()).unwrap();
     let _ = storm.tables("fe").unwrap();
     let _ = storm.tables("ge").unwrap();
     let _ = storm.tables("churn").unwrap();
@@ -235,8 +235,8 @@ fn main() {
     // DECISIONS write), so client-side sleeps can't flatter it.
     section("sockets (4 ct/1 clients, BATCH(16) over TCP on an ephemeral port)");
     let netsvc = Arc::new(Coordinator::new(config()));
-    netsvc.register("fe", 24, net_fe.clone());
-    netsvc.register("ge", 16, net_ge.clone());
+    netsvc.register("fe", 24, net_fe.clone()).unwrap();
+    netsvc.register("ge", 16, net_ge.clone()).unwrap();
     let _ = netsvc.tables("fe").unwrap();
     let _ = netsvc.tables("ge").unwrap();
     obs::registry().reset();
@@ -303,7 +303,7 @@ fn main() {
     // run or allocation storm in the degraded path would blow it).
     section("degraded (stale-shelf serve while every tune fails)");
     let degraded = Coordinator::new(config());
-    degraded.register("fe", 24, net_fe.clone());
+    degraded.register("fe", 24, net_fe.clone()).unwrap();
     let _ = degraded.tables("fe").unwrap();
     degraded.invalidate("fe");
     let deg_opts = BenchOpts {

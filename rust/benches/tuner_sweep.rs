@@ -1,8 +1,10 @@
 //! Bench: the parallel tuning sweep — sequential (`--jobs 1`) vs
 //! parallel (one worker per core) native-model tune of the full default
-//! grid, plus the determinism contract (byte-identical tables) and the
+//! grid, plus the determinism contract (byte-identical tables), the
 //! pruning-effectiveness counters (model invocations per cell, pruned
-//! searches, warm-start hit rate — deterministic, unlike wall time).
+//! searches, warm-start hit rate — deterministic, unlike wall time),
+//! and the calibration-quality counters (corrected-model MAPE and
+//! argmin agreement against a captured sim workload).
 //! Emits `BENCH_tuner.candidate.json` at the repository root by default
 //! (pass `-- --write-baseline` to overwrite the committed
 //! `BENCH_tuner.json`) so the perf trajectory tracks both the parallel
@@ -11,10 +13,13 @@
 use std::path::PathBuf;
 
 use collective_tuner::collectives::Strategy;
-use collective_tuner::eval::exhaustive_invocations;
+use collective_tuner::eval::{exhaustive_invocations, ReplayEval};
+use collective_tuner::harness::experiments;
+use collective_tuner::models::CorrectionTable;
 use collective_tuner::netsim::{NetConfig, Netsim};
 use collective_tuner::plogp;
-use collective_tuner::tuner::{grids, persist, Tuner};
+use collective_tuner::tuner::validate::{validate_calibration, ValidateOptions};
+use collective_tuner::tuner::{grids, persist, Op, Tuner};
 use collective_tuner::util::benchkit::{bench_with, section, BenchOpts, BenchResult};
 
 fn json_entry(label: &str, r: &BenchResult) -> String {
@@ -79,6 +84,49 @@ fn main() {
         counts.warm_hit_rate()
     );
 
+    // Calibration quality on deterministic counters: fit trace-derived
+    // correction factors against a captured sim workload, then measure
+    // how far the corrected models close the model->sim gap — both the
+    // chosen strategy's error (MAPE) and the argmin agreement.
+    section("trace-fitted correction factors (model -> sim gap)");
+    let cal_p: Vec<usize> = vec![4, 8, 16];
+    let cal_m = grids::log_grid(256, 1 << 20, 6);
+    let s_grid = grids::default_s_grid();
+    let cal_ops = [Op::Bcast, Op::Scatter];
+    let (traces, cal_net) = experiments::record_traces(
+        &NetConfig::fast_ethernet_icluster1(),
+        &cal_ops,
+        &cal_p,
+        &cal_m,
+        &s_grid,
+        1 << 14,
+    );
+    let (ctable, _fit) = CorrectionTable::fit(&traces, &cal_net);
+    let replay = ReplayEval::new(traces).expect("captured traces rebuild a net");
+    let opts = ValidateOptions { s_grid: s_grid.clone(), ..ValidateOptions::default() };
+    let (mut pts, mut agree_before, mut agree_after) = (0usize, 0usize, 0usize);
+    let (mut err_before, mut err_after) = (0.0f64, 0.0f64);
+    for op in cal_ops {
+        let rep = validate_calibration(
+            &replay, &ctable, &cal_net, op.family(), &cal_p, &cal_m, &opts,
+        );
+        pts += rep.corrected.points;
+        agree_before += rep.uncorrected.correct;
+        agree_after += rep.corrected.correct;
+        err_before += rep.uncorrected.mean_rel_err * rep.uncorrected.points as f64;
+        err_after += rep.corrected.mean_rel_err * rep.corrected.points as f64;
+    }
+    let cells = pts.max(1) as f64;
+    let corrected_mape = err_after / cells;
+    let corrected_agreement = agree_after as f64 / cells;
+    println!(
+        "calibration over {pts} cells: mean rel err {:.4} -> {corrected_mape:.4}, \
+         argmin agreement {:.2} -> {corrected_agreement:.2} ({} factor(s) fitted)",
+        err_before / cells,
+        agree_before as f64 / cells,
+        ctable.len()
+    );
+
     // Default to a .candidate file so a casual local run can never
     // clobber the committed baseline; CI gates committed vs candidate.
     let write_baseline = std::env::args().any(|a| a == "--write-baseline");
@@ -91,7 +139,7 @@ fn main() {
         "{{\n  \"benchmark\": \"tuner_sweep\",\n  \"description\": \"sequential vs parallel \
          native tuning sweep of the default {points}-point grid (both ops)\",\n  \"unit\": \
          \"seconds per full tune\",\n  \"jobs_parallel\": {jobs},\n  \"results\": [\n{},\n{}\n  \
-         ],\n  \"metrics\": [\n{},\n{},\n{}\n  ],\n  \
+         ],\n  \"metrics\": [\n{},\n{},\n{},\n{},\n{}\n  ],\n  \
          \"speedup_parallel_over_sequential\": {speedup:.2},\n  \"tables_identical\": \
          {identical},\n  \"eval\": {}\n}}\n",
         json_entry("sequential_jobs_1", &r_seq),
@@ -99,6 +147,8 @@ fn main() {
         json_metric("model_invocations_per_tune", counts.model_invocations as f64, false),
         json_metric("eval_reduction_vs_exhaustive", reduction, true),
         json_metric("warm_start_hit_rate", counts.warm_hit_rate(), true),
+        json_metric("corrected_model_mape", corrected_mape, false),
+        json_metric("corrected_argmin_agreement", corrected_agreement, true),
         counts.to_json(),
     );
     std::fs::write(&out, json).expect("writing the bench JSON");

@@ -168,6 +168,8 @@ COMMANDS:
                   --trace-dir dir/    (replay backend: tune from captured
                                        traces over the captured grids)
                   --jobs N            (parallel sweep workers; 0 = all cores)
+                  --corrections dir/  (apply a fitted corrections table to
+                                       the native models — see calibrate)
                   --save results/     (persist tables as TSV)
                   --stats             (sweep counters: model invocations,
                                        pruned searches, warm-start hits)
@@ -183,6 +185,13 @@ COMMANDS:
                 in between, +inf for anything unobserved
                   --trace-dir dir/    (required)  --op <list|all>
                   --jobs N  --save results/  --stats  (replay coverage)
+  calibrate     fit trace-derived correction factors — one multiplier per
+                (strategy, size-octave) least-squares ratio of captured
+                completion times to model predictions — and write the
+                versioned corrections TSV other commands accept via
+                --corrections
+                  --trace-dir dir/    (captured traces; required)
+                  --save dir/         (write dir/corrections.tsv)
   validate      cross-check two evaluation backends: the candidate picks
                 per-cell winners, the reference judges them
                   --candidate native|sim|replay     (default native)
@@ -190,6 +199,9 @@ COMMANDS:
                   --trace-dir dir/    (required when either side is replay;
                                        grids default to the captured ones)
                   --op <list|all>     (default bcast,scatter)
+                  --corrections dir/  (calibration report instead: the same
+                                       reference judges the uncorrected vs
+                                       the corrected native model)
   run           execute one collective on the simulated cluster
                   --op bcast|scatter|gather|reduce|barrier|allgather|allreduce
                   --strategy <name|auto>  --procs 24  --bytes 64k  --segment 8k
@@ -207,6 +219,8 @@ COMMANDS:
                   --shards 8     --capacity 32     (decision-table cache)
                   --jobs N       (tuner sweep workers; 0 = all cores)
                   --backend auto|native|artifact   --save dir/  --warm dir/
+                  --corrections dir/  (tune with a fitted corrections table;
+                                       pins the native backend)
                   --stats        (one JSON blob: cache hit/miss + sweep counters)
                   --metrics-interval N   (print an obs registry snapshot every
                                           N seconds while serving, plus a final
@@ -222,6 +236,8 @@ COMMANDS:
                   --clusters 3   --nodes 16  (islands to register up front)
                   --shards 8     --capacity 32   --jobs N
                   --backend auto|native|artifact  --warm dir/
+                  --corrections dir/  (fitted corrections table; pins the
+                                       native backend)
                   --churn-ms N   (background drift loop: alternate one
                                   island's hardware class every N ms and
                                   refresh, driving real pushes)
@@ -280,6 +296,10 @@ EXAMPLES:
   collective-tuner record --op all --trace-dir traces/ --procs 2,4,8,16
   collective-tuner replay --trace-dir traces/ --op bcast --stats
   collective-tuner validate --candidate native --reference replay --trace-dir traces/
+  collective-tuner calibrate --trace-dir traces/ --save corrections/
+  collective-tuner tune --corrections corrections/ --procs 8,24,48
+  collective-tuner validate --reference replay --trace-dir traces/ \\
+      --corrections corrections/
   collective-tuner run --op bcast --strategy auto --procs 24 --bytes 256k
   collective-tuner run --op allgather --strategy ring --procs 16 --bytes 64k
   collective-tuner query --op barrier --procs 32 --nodes 32

@@ -361,7 +361,7 @@ mod tests {
             m_grid: grids::log_grid(1, 1 << 20, 6),
             ..CoordinatorConfig::default()
         });
-        coord.register_islands(&g);
+        coord.register_islands(&g).unwrap();
         let sched = tuned_bcast(&g, 1 << 16, &coord).unwrap();
         assert!(sched.validate().is_empty(), "{:?}", sched.validate());
         let mut w = World::new(g.build_sim());

@@ -41,7 +41,7 @@
 //!     NetConfig::wan_link(),
 //! );
 //! let coord = Coordinator::with_defaults();
-//! coord.register_islands(&grid);                       // discovery feeds the registry
+//! coord.register_islands(&grid).unwrap();              // discovery feeds the registry
 //! let d = coord.decision(Op::Bcast, "icluster-1", 48, 1 << 20).unwrap();
 //! println!("use {} (segment {:?})", d.strategy.name(), d.segment);
 //! ```

@@ -89,7 +89,9 @@ impl Coordinator {
         if drift <= policy.drift_tolerance {
             return Ok(RefreshOutcome::Unchanged { drift });
         }
-        let new = self.register_with_probe(cluster, rc.nodes, fresh.clone(), rc.probe);
+        let new = self
+            .register_with_probe(cluster, rc.nodes, fresh.clone(), rc.probe)
+            .with_context(|| format!("re-registering '{cluster}' after a drift probe"))?;
         self.force_retune(new, &fresh);
         if obs::enabled() {
             obs::registry().counter("coordinator.refresh.swaps").inc();
@@ -153,7 +155,7 @@ mod tests {
     #[test]
     fn stable_network_is_unchanged() {
         let c = small();
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         let _ = c.tables("a").unwrap();
         let mut sim = Netsim::new(2, NetConfig::fast_ethernet_ideal());
         let outcome = c.refresh("a", &mut sim, &RefreshPolicy::default()).unwrap();
@@ -166,7 +168,7 @@ mod tests {
     fn drifted_network_is_retuned_and_swapped() {
         let c = small();
         // register as Fast Ethernet, then "the network got upgraded"
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         let before = c.tables("a").unwrap();
         let mut upgraded = Netsim::new(2, NetConfig::gigabit_ethernet());
         let outcome = c.refresh("a", &mut upgraded, &RefreshPolicy::default()).unwrap();
@@ -192,7 +194,7 @@ mod tests {
         // it was measured between (4, 5) and must be re-probed there
         let mut sim = Netsim::new(8, NetConfig::fast_ethernet_ideal());
         let net_b = plogp::bench::measure_pair(&mut sim, 4, 5);
-        c.register_with_probe("b", 4, net_b, (4, 5));
+        c.register_with_probe("b", 4, net_b, (4, 5)).unwrap();
         let _ = c.tables("b").unwrap();
         // degrade only the (0, 1) links; island "b" is untouched
         sim.inject_link_delay(0, 1, 500e-6);
@@ -215,8 +217,8 @@ mod tests {
     #[test]
     fn refresh_all_visits_every_cluster() {
         let c = small();
-        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
-        c.register("b", 8, measured(NetConfig::gigabit_ethernet()));
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal())).unwrap();
+        c.register("b", 8, measured(NetConfig::gigabit_ethernet())).unwrap();
         // every re-probe sees Fast Ethernet: "a" is unchanged, while
         // "b" (registered as gigabit) has drifted
         let outcomes = c

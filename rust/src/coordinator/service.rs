@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::eval::{EvalCounts, ReplayEval};
+use crate::models::CorrectionTable;
 use crate::netsim::{Netsim, NodeId};
 use crate::obs::{self, DecisionEvent, DecisionOutcome, Span};
 use crate::plogp::{bench, GapTable, PLogP};
@@ -91,6 +92,11 @@ pub struct CoordinatorConfig {
     /// When set, try the AOT artifact backend from this directory
     /// (falling back to native models if it cannot be loaded).
     pub artifact_dir: Option<PathBuf>,
+    /// When set, load a trace-fitted correction table (the `calibrate`
+    /// subcommand's `corrections.tsv`; a directory or the file itself)
+    /// and tune on the corrected native models. Mutually exclusive with
+    /// `artifact_dir`: corrections apply to the native model backend.
+    pub corrections: Option<PathBuf>,
     /// Worker threads for the tuner's parallel grid sweep (0 = one per
     /// core). Coalesced misses and drift re-tunes both run on it.
     pub jobs: usize,
@@ -109,6 +115,7 @@ impl Default for CoordinatorConfig {
             p_grid: grids::default_p_grid(),
             m_grid: grids::default_m_grid(),
             artifact_dir: None,
+            corrections: None,
             jobs: 0,
             max_staleness: Duration::from_secs(300),
         }
@@ -213,6 +220,10 @@ pub struct CoordinatorStats {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     tuner: Tuner,
+    /// The loaded correction table when [`CoordinatorConfig::corrections`]
+    /// is set — kept so the degradation ladder's local fallback tuner
+    /// answers consistently with the primary one.
+    corrections: Option<CorrectionTable>,
     cache: SnapshotCache,
     inflight: Mutex<HashMap<ClusterSignature, Arc<Inflight>>>,
     registry: RwLock<HashMap<String, RegisteredCluster>>,
@@ -238,16 +249,42 @@ pub struct Coordinator {
 const MANIFEST_HEADER: &str = "# collective-tuner coordinator manifest v1";
 
 impl Coordinator {
+    /// Panicking convenience over [`Coordinator::try_new`], for configs
+    /// known good (tests, defaults). Configs carrying operator-supplied
+    /// paths should use `try_new` and surface the error.
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
-        let tuner = match &cfg.artifact_dir {
-            Some(dir) => Tuner::auto(dir),
-            None => Tuner::native(),
+        Coordinator::try_new(cfg).unwrap_or_else(|e| panic!("{e:#}"))
+    }
+
+    /// Build a coordinator, loading the corrections table when one is
+    /// configured. Fails on an unreadable/invalid corrections path or
+    /// on a config naming both an artifact and corrections (corrections
+    /// apply to the native model backend only).
+    pub fn try_new(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        if cfg.artifact_dir.is_some() && cfg.corrections.is_some() {
+            bail!(
+                "corrections apply to the native model backend; \
+                 configure either an artifact dir or a corrections table, not both"
+            );
+        }
+        let corrections = match &cfg.corrections {
+            Some(path) => Some(
+                CorrectionTable::load(path)
+                    .with_context(|| format!("loading corrections from {}", path.display()))?,
+            ),
+            None => None,
+        };
+        let tuner = match (&cfg.artifact_dir, &corrections) {
+            (Some(dir), _) => Tuner::auto(dir),
+            (None, Some(table)) => Tuner::corrected(table.clone()),
+            (None, None) => Tuner::native(),
         }
         .jobs(cfg.jobs);
         let cache = SnapshotCache::new(cfg.shards.max(1) * cfg.capacity_per_shard.max(1));
-        Coordinator {
+        Ok(Coordinator {
             cfg,
             tuner,
+            corrections,
             cache,
             inflight: Mutex::new(HashMap::new()),
             registry: RwLock::new(HashMap::new()),
@@ -258,7 +295,7 @@ impl Coordinator {
             stale_serves: AtomicU64::new(0),
             fallback_serves: AtomicU64::new(0),
             watchers: Mutex::new(Vec::new()),
-        }
+        })
     }
 
     /// Paper-sized grids, native backend, 8×32 cache.
@@ -278,28 +315,33 @@ impl Coordinator {
 
     /// Register (or re-register) a cluster under `name`, measured
     /// between ranks `(0, 1)` of its own simulator. Returns its
-    /// signature; tables are tuned lazily on first query.
-    pub fn register(&self, name: &str, nodes: usize, net: PLogP) -> ClusterSignature {
+    /// signature; tables are tuned lazily on first query. Fails with a
+    /// structured error (not a panic) when the probed parameters are
+    /// degenerate — a fault-degraded probe can legitimately report a
+    /// zero or infinite latency/gap, and the registry must refuse it.
+    pub fn register(&self, name: &str, nodes: usize, net: PLogP) -> Result<ClusterSignature> {
         self.register_with_probe(name, nodes, net, (0, 1))
     }
 
     /// Register a cluster whose parameters were measured between an
     /// explicit representative pair (e.g. two members of a discovered
     /// island inside a grid simulator); refresh re-probes that pair.
+    /// Same degenerate-parameter contract as [`Coordinator::register`].
     pub fn register_with_probe(
         &self,
         name: &str,
         nodes: usize,
         net: PLogP,
         probe: (NodeId, NodeId),
-    ) -> ClusterSignature {
-        let signature = ClusterSignature::with_tolerance(&net, nodes, self.cfg.tolerance);
+    ) -> Result<ClusterSignature> {
+        let signature = ClusterSignature::try_with_tolerance(&net, nodes, self.cfg.tolerance)
+            .with_context(|| format!("registering cluster '{name}'"))?;
         let rc = RegisteredCluster { name: name.to_string(), nodes, net, signature, probe };
         self.registry.write().unwrap().insert(rc.name.clone(), rc);
         // republish so the snapshot's name index never resolves this
         // name through a stale signature (re-registration moves it)
         self.cache.sync_names(&self.name_map());
-        signature
+        Ok(signature)
     }
 
     /// The current name → signature mapping, for snapshot publication.
@@ -316,7 +358,7 @@ impl Coordinator {
     /// network parameters on a 2-node simulator of its `NetConfig` (the
     /// LogP benchmark procedure measures between two representative
     /// nodes; homogeneity makes that sufficient, §1).
-    pub fn register_islands(&self, grid: &GridSpec) -> Vec<ClusterSignature> {
+    pub fn register_islands(&self, grid: &GridSpec) -> Result<Vec<ClusterSignature>> {
         grid.clusters
             .iter()
             .map(|c| {
@@ -347,8 +389,13 @@ impl Coordinator {
             }
             let net = bench::measure_pair(sim, members[0], members[1]);
             let name = format!("island-{c}");
-            self.register_with_probe(&name, members.len(), net, (members[0], members[1]));
-            out.push(self.cluster(&name).unwrap());
+            // a fault-degraded island probes degenerate parameters;
+            // skip it (like the single-node case) instead of failing
+            // the whole discovery pass
+            match self.register_with_probe(&name, members.len(), net, (members[0], members[1])) {
+                Ok(_) => out.push(self.cluster(&name).unwrap()),
+                Err(e) => log::warn!("island {c} probed degenerate parameters ({e:#}); skipping"),
+            }
         }
         out
     }
@@ -655,12 +702,23 @@ impl Coordinator {
             reg.counter("coordinator.fallback_serves").inc();
             reg.gauge("coordinator.degraded_mode").set(1);
         }
-        let fallback = Tuner::native().jobs(self.cfg.jobs);
+        let fallback = self.local_tuner();
         let tables = fallback
             .tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid)
             .expect("native tuner is infallible");
         self.tuner.merge_stats(&fallback.stats());
         (Arc::new(TableSet::new(tables)), DecisionOutcome::Fallback)
+    }
+
+    /// The infallible local model tuner the degradation ladder and the
+    /// artifact-failure path substitute in. Carries the configured
+    /// correction table so degraded answers agree with fresh ones.
+    fn local_tuner(&self) -> Tuner {
+        match &self.corrections {
+            Some(table) => Tuner::corrected(table.clone()),
+            None => Tuner::native(),
+        }
+        .jobs(self.cfg.jobs)
     }
 
     /// Stale-shelf lookup, pruning entries past the staleness bound on
@@ -708,7 +766,7 @@ impl Coordinator {
             Ok(t) => t,
             Err(e) => {
                 log::warn!("artifact tuner failed ({e:#}); re-tuning with native models");
-                let fallback = Tuner::native().jobs(self.cfg.jobs);
+                let fallback = self.local_tuner();
                 let tables = fallback
                     .tune_all(net, &self.cfg.p_grid, &self.cfg.m_grid)
                     .expect("native tuner is infallible");
@@ -908,7 +966,7 @@ impl Coordinator {
                 }
             }
         }
-        let sig = self.register(cluster, nodes, net);
+        let sig = self.register(cluster, nodes, net)?;
         self.cache.insert(sig, Arc::new(TableSet::new(tables)), &self.name_map());
         self.notify_publish(PublishKind::Updated, sig);
         Ok(sig)
@@ -938,7 +996,7 @@ impl Coordinator {
                     let sizes = parse_f64_csv(f.next().context("gap sizes")?)?;
                     let gaps = parse_f64_csv(f.next().context("gap values")?)?;
                     let net = PLogP::new(l, GapTable::new(sizes, gaps));
-                    let sig = self.register_with_probe(name, nodes, net, (probe_a, probe_b));
+                    let sig = self.register_with_probe(name, nodes, net, (probe_a, probe_b))?;
                     let paths: Vec<PathBuf> = Op::ALL
                         .iter()
                         .map(|op| dir.join(format!("{}.{}.tsv", sig.key(), op.name())))
@@ -1005,6 +1063,24 @@ mod tests {
     }
 
     #[test]
+    fn registering_a_fault_degraded_probe_errors_instead_of_panicking() {
+        let c = Coordinator::new(small_config());
+        // what a probe over a FaultPlan-degraded pair aggregates: an
+        // infinite latency (dead/unreachable endpoint) alongside
+        // otherwise healthy gap samples
+        let net = PLogP {
+            l: f64::INFINITY,
+            table: GapTable::new(vec![1.0, 1024.0], vec![5e-6, 6e-6]),
+        };
+        let err = c.register("faulted", 8, net).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("degenerate probed latency"), "{chain}");
+        assert!(chain.contains("'faulted'"), "{chain}");
+        assert_eq!(c.stats().registered, 0, "a refused registration leaves no state");
+        assert!(c.cluster("faulted").is_none());
+    }
+
+    #[test]
     fn unknown_cluster_is_an_error() {
         let c = Coordinator::new(small_config());
         let err = c.decision(Op::Bcast, "nowhere", 8, 1024).unwrap_err();
@@ -1016,7 +1092,7 @@ mod tests {
         let cfg = small_config();
         let c = Coordinator::new(cfg.clone());
         let net = measured(NetConfig::fast_ethernet_ideal());
-        c.register("a", 24, net.clone());
+        c.register("a", 24, net.clone()).unwrap();
         let want = {
             let (b, _) = Tuner::native().tune(&net, &cfg.p_grid, &cfg.m_grid).unwrap();
             *b.lookup(24, 65536)
@@ -1030,8 +1106,8 @@ mod tests {
     #[test]
     fn equivalent_clusters_share_one_table() {
         let c = Coordinator::new(small_config());
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
-        c.register("b", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
+        c.register("b", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         let ta = c.tables("a").unwrap();
         let tb = c.tables("b").unwrap();
         assert!(Arc::ptr_eq(&ta, &tb), "same signature must share one Arc");
@@ -1044,7 +1120,7 @@ mod tests {
         let cfg = small_config();
         let c = Coordinator::new(cfg.clone());
         let net = measured(NetConfig::fast_ethernet_ideal());
-        c.register("a", 24, net.clone());
+        c.register("a", 24, net.clone()).unwrap();
         let want = {
             let t = Tuner::native()
                 .tune_op(Op::AllGather, &net, &cfg.p_grid, &cfg.m_grid)
@@ -1065,8 +1141,8 @@ mod tests {
     #[test]
     fn distinct_networks_tune_separately() {
         let c = Coordinator::new(small_config());
-        c.register("fe", 24, measured(NetConfig::fast_ethernet_ideal()));
-        c.register("ge", 24, measured(NetConfig::gigabit_ethernet()));
+        c.register("fe", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
+        c.register("ge", 24, measured(NetConfig::gigabit_ethernet())).unwrap();
         let _ = c.tables("fe").unwrap();
         let _ = c.tables("ge").unwrap();
         assert_eq!(c.tune_count(), 2);
@@ -1075,7 +1151,7 @@ mod tests {
     #[test]
     fn stats_json_reports_cache_and_eval_counters_together() {
         let c = Coordinator::new(small_config());
-        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         c.decision(Op::Bcast, "a", 8, 4096).unwrap();
         c.decision(Op::Bcast, "a", 8, 4096).unwrap();
         let json = c.stats_json();
@@ -1104,7 +1180,7 @@ mod tests {
     #[test]
     fn repeated_queries_hit_the_cache() {
         let c = Coordinator::new(small_config());
-        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         for _ in 0..10 {
             c.decision(Op::Scatter, "a", 8, 4096).unwrap();
         }
@@ -1120,7 +1196,7 @@ mod tests {
         let cfg = small_config();
         let c = Coordinator::new(cfg.clone());
         let net = measured(NetConfig::fast_ethernet_ideal());
-        c.register("a", 24, net.clone());
+        c.register("a", 24, net.clone()).unwrap();
         let tables = c.tables("a").unwrap(); // cold tune; warms the index
         for op in Op::ALL {
             for p in [1usize, 2, 7, 8, 24, 100] {
@@ -1136,7 +1212,7 @@ mod tests {
     #[test]
     fn invalidate_drops_cached_tables_and_forces_a_retune() {
         let c = Coordinator::new(small_config());
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         c.decision(Op::Bcast, "a", 24, 65536).unwrap();
         assert_eq!(c.tune_count(), 1);
         assert!(c.invalidate("a"));
@@ -1184,7 +1260,7 @@ mod tests {
     #[test]
     fn watch_publishes_sees_tunes_and_invalidations_in_epoch_order() {
         let c = Coordinator::new(small_config());
-        let sig = c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        let sig = c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         let rx = c.watch_publishes();
         c.decision(Op::Bcast, "a", 24, 65536).unwrap(); // cold tune → Updated
         let ev = rx.try_recv().expect("tune completion notifies watchers");
@@ -1206,7 +1282,7 @@ mod tests {
     #[test]
     fn warm_decision_never_tunes() {
         let c = Coordinator::new(small_config());
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         assert!(c.warm_decision("a", Op::Bcast, 24, 65536).is_none(), "not resident");
         assert_eq!(c.tune_count(), 0, "warm_decision must not tune");
         let (want, epoch) = c.decision_versioned(Op::Bcast, "a", 24, 65536).unwrap();
@@ -1219,7 +1295,7 @@ mod tests {
     #[test]
     fn failed_tune_with_no_shelf_serves_a_model_fallback() {
         let c = Coordinator::new(small_config());
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         c.inject_tune_failures(1);
         let (d, _epoch, source) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
         assert_eq!(source, DecisionSource::Fallback, "no shelf entry exists yet");
@@ -1240,7 +1316,7 @@ mod tests {
     #[test]
     fn failed_tune_after_eviction_serves_stale_within_bound() {
         let c = Coordinator::new(small_config());
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         let fresh = c.decision(Op::Bcast, "a", 24, 65536).unwrap();
         assert!(c.invalidate("a"), "eviction moves tables to the stale shelf");
         c.inject_tune_failures(1);
@@ -1264,7 +1340,7 @@ mod tests {
             ..small_config()
         };
         let c = Coordinator::new(cfg);
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         c.decision(Op::Bcast, "a", 24, 65536).unwrap();
         assert!(c.invalidate("a"));
         std::thread::sleep(Duration::from_millis(5));
@@ -1284,7 +1360,7 @@ mod tests {
         // version lives in the stress suite): the leader's degraded
         // outcome must flow through decision_full's source mapping.
         let c = Coordinator::new(small_config());
-        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 24, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         c.inject_tune_failures(2);
         let (_, _, s1) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
         let (_, _, s2) = c.decision_full(Op::Bcast, "a", 24, 65536).unwrap();
@@ -1297,7 +1373,7 @@ mod tests {
     #[test]
     fn stats_json_carries_the_degraded_block() {
         let c = Coordinator::new(small_config());
-        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal()));
+        c.register("a", 8, measured(NetConfig::fast_ethernet_ideal())).unwrap();
         c.inject_tune_failures(1);
         c.decision(Op::Bcast, "a", 8, 4096).unwrap();
         let json = c.stats_json();
@@ -1321,7 +1397,7 @@ mod tests {
             NetConfig::wan_link(),
         );
         let c = Coordinator::new(small_config());
-        let sigs = c.register_islands(&grid);
+        let sigs = c.register_islands(&grid).unwrap();
         assert_eq!(sigs.len(), 2);
         assert_ne!(sigs[0], sigs[1]);
         assert!(c.cluster("alpha").is_some());

@@ -47,14 +47,55 @@ pub const OPS_ALL: u8 = OPS_BCAST
     | OPS_ALLGATHER
     | OPS_ALLREDUCE;
 
+/// Why a cluster signature could not be computed: a probed pLogP
+/// parameter was degenerate. Reachable in production — a
+/// [`crate::netsim::FaultPlan`]'s dead nodes or degraded links can
+/// drive a probe's measured latency or gap to zero or infinity, and the
+/// coordinator must refuse such a registration instead of panicking.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SignatureError {
+    /// The probed one-way latency `L` was non-positive or non-finite.
+    DegenerateLatency { value: f64 },
+    /// The probed gap at `probe` bytes was non-positive or non-finite.
+    DegenerateGap { probe: f64, value: f64 },
+}
+
+impl std::fmt::Display for SignatureError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SignatureError::DegenerateLatency { value } => write!(
+                f,
+                "degenerate probed latency L = {value}: cannot fingerprint this network \
+                 (dead or unreachable probe endpoints?)"
+            ),
+            SignatureError::DegenerateGap { probe, value } => write!(
+                f,
+                "degenerate probed gap g({probe}) = {value}: cannot fingerprint this \
+                 network (faulted or saturated link?)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SignatureError {}
+
 /// Quantize `x > 0` into a multiplicative bucket: values within a factor
 /// of `(1 + tol)` of each other map to the same or adjacent buckets, and
 /// values differing by less than ~`tol/2` around a bucket center map to
-/// the same bucket.
+/// the same bucket. Panics on a degenerate `x`; probe-derived values go
+/// through [`try_bucket`].
 pub fn bucket(x: f64, tol: f64) -> i64 {
-    assert!(x > 0.0 && x.is_finite(), "bucket() needs a positive finite value, got {x}");
+    try_bucket(x, tol)
+        .unwrap_or_else(|| panic!("bucket() needs a positive finite value, got {x}"))
+}
+
+/// Fallible form of [`bucket`]: `None` when `x` is non-positive or
+/// non-finite — a faulted probe can legitimately report a dead link as
+/// a zero, negative, or infinite parameter, and the signature path must
+/// surface that as an error rather than a panic.
+pub fn try_bucket(x: f64, tol: f64) -> Option<i64> {
     assert!(tol > 0.0, "tolerance must be positive");
-    (x.ln() / (1.0 + tol).ln()).round() as i64
+    (x > 0.0 && x.is_finite()).then(|| (x.ln() / (1.0 + tol).ln()).round() as i64)
 }
 
 /// The quantized fingerprint of one cluster's network.
@@ -71,20 +112,41 @@ pub struct ClusterSignature {
 }
 
 impl ClusterSignature {
-    /// Fingerprint with the default tolerance.
+    /// Fingerprint with the default tolerance. Panics on degenerate
+    /// parameters — probe-derived networks go through [`Self::try_of`].
     pub fn of(net: &PLogP, nodes: usize) -> ClusterSignature {
         ClusterSignature::with_tolerance(net, nodes, DEFAULT_TOLERANCE)
     }
 
-    /// Fingerprint with an explicit quantization tolerance.
+    /// Fingerprint with an explicit quantization tolerance (panicking
+    /// convenience over [`Self::try_with_tolerance`]).
     pub fn with_tolerance(net: &PLogP, nodes: usize, tol: f64) -> ClusterSignature {
+        ClusterSignature::try_with_tolerance(net, nodes, tol).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible fingerprint with the default tolerance.
+    pub fn try_of(net: &PLogP, nodes: usize) -> Result<ClusterSignature, SignatureError> {
+        ClusterSignature::try_with_tolerance(net, nodes, DEFAULT_TOLERANCE)
+    }
+
+    /// Fallible fingerprint: a structured [`SignatureError`] instead of
+    /// a panic when a probed parameter is degenerate (the coordinator's
+    /// registration path, where fault-degraded probes are expected).
+    pub fn try_with_tolerance(
+        net: &PLogP,
+        nodes: usize,
+        tol: f64,
+    ) -> Result<ClusterSignature, SignatureError> {
         assert!(nodes >= 1);
-        ClusterSignature {
-            nodes,
-            ops: OPS_ALL,
-            l_bucket: bucket(net.l, tol),
-            gap_buckets: PROBE_SIZES.map(|m| bucket(net.gap(m), tol)),
+        let l_bucket =
+            try_bucket(net.l, tol).ok_or(SignatureError::DegenerateLatency { value: net.l })?;
+        let mut gap_buckets = [0i64; 5];
+        for (i, &m) in PROBE_SIZES.iter().enumerate() {
+            let g = net.gap(m);
+            gap_buckets[i] =
+                try_bucket(g, tol).ok_or(SignatureError::DegenerateGap { probe: m, value: g })?;
         }
+        Ok(ClusterSignature { nodes, ops: OPS_ALL, l_bucket, gap_buckets })
     }
 
     /// Stable, filesystem-safe key for persistence
@@ -131,6 +193,45 @@ mod tests {
         // a factor of 2 is ~14 buckets away at 5 %
         assert_ne!(bucket(1.0, 0.05), bucket(2.0, 0.05));
         assert!(bucket(2.0, 0.05) > bucket(1.0, 0.05) + 10);
+    }
+
+    #[test]
+    fn try_bucket_rejects_degenerate_values_without_panicking() {
+        for bad in [0.0, -1.0, f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            assert_eq!(try_bucket(bad, 0.05), None, "{bad}");
+        }
+        assert_eq!(try_bucket(1.02, 0.05), Some(bucket(1.02, 0.05)));
+    }
+
+    /// A probe over a faulted network (dead node / fully degraded link)
+    /// reports degenerate parameters; signature construction must
+    /// return a structured error instead of panicking. `PLogP`'s
+    /// constructor rejects such values, so this builds the struct
+    /// literally — exactly what a probe aggregating raw measurements
+    /// can produce.
+    #[test]
+    fn degenerate_probes_yield_structured_errors() {
+        let table = GapTable::new(vec![1.0, 1024.0], vec![5e-6, 6e-6]);
+        for bad_l in [0.0, -1e-6, f64::INFINITY, f64::NAN] {
+            let net = PLogP { l: bad_l, table: table.clone() };
+            match ClusterSignature::try_of(&net, 8) {
+                Err(SignatureError::DegenerateLatency { value }) => {
+                    assert!(!(value > 0.0 && value.is_finite()));
+                }
+                other => panic!("expected DegenerateLatency, got {other:?}"),
+            }
+            let err = ClusterSignature::try_with_tolerance(&net, 8, 0.05).unwrap_err();
+            assert!(err.to_string().contains("degenerate probed latency"), "{err}");
+        }
+        // a healthy network still fingerprints
+        let net = PLogP { l: 6e-5, table };
+        assert!(ClusterSignature::try_of(&net, 8).is_ok());
+    }
+
+    #[test]
+    fn try_of_agrees_with_the_panicking_path_on_healthy_networks() {
+        let net = measured(NetConfig::fast_ethernet_ideal());
+        assert_eq!(ClusterSignature::try_of(&net, 8).unwrap(), ClusterSignature::of(&net, 8));
     }
 
     #[test]

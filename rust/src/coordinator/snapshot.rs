@@ -109,7 +109,9 @@ impl DenseTable {
                 (0..=p_max).map(|p| t.nearest_p_index(p) as u32).collect();
             let m_len = t.m_grid.len();
             let mut m_cuts = Vec::with_capacity(m_len.saturating_sub(1));
-            for i in 0..m_len - 1 {
+            // saturate: an empty m grid is degenerate but constructible,
+            // and `0..m_len - 1` would underflow to a near-infinite loop
+            for i in 0..m_len.saturating_sub(1) {
                 // invariant: nearest(lo) <= i < nearest(hi); shrink to
                 // the exact crossover by probing the reference predicate
                 let (mut lo, mut hi) = (t.m_grid[i], t.m_grid[i + 1]);
@@ -409,6 +411,77 @@ mod tests {
 
     fn marker(set: &TableSet) -> u32 {
         set.decision(Op::Bcast, 2, 1).predicted as u32
+    }
+
+    /// A table set with real multi-row grids and a distinct predicted
+    /// value per cell, so a one-cell snap disagreement is visible.
+    fn gridded() -> Arc<TableSet> {
+        let p_grid = vec![2usize, 8, 32];
+        let m_grid = vec![1u64, 1024, 1 << 20];
+        let tables = Op::ALL
+            .iter()
+            .map(|&op| {
+                let entries = (0..p_grid.len() * m_grid.len())
+                    .map(|i| Decision {
+                        strategy: op.family()[0],
+                        segment: None,
+                        predicted: (op.index() * 100 + i) as f64,
+                    })
+                    .collect();
+                DecisionTable::new(op, p_grid.clone(), m_grid.clone(), entries)
+            })
+            .collect();
+        Arc::new(TableSet::new(tables))
+    }
+
+    #[test]
+    fn dense_decide_agrees_with_table_lookup_at_exact_ties() {
+        // the flattening contract says dense == slow for EVERY query;
+        // these sit exactly on the tie/boundary points where the two
+        // code paths (partition_point over precomputed cuts vs
+        // first-on-ties nearest scan) could plausibly diverge
+        let set = gridded();
+        let dense = DenseTable::new(&set);
+        let queries = [
+            // m = 32 is the exact log-space midpoint of 1 and 1024
+            // (sqrt(1024)); m = 1<<15 the midpoint of 1024 and 1<<20
+            (2usize, 32u64),
+            (2, 1 << 15),
+            // p = 5 is equidistant from grid points 2 and 8
+            (5, 1 << 15),
+            (5, 4096),
+            // m = 0 and m = 1 edges (log snap clamps m to >= 1)
+            (8, 0),
+            (8, 1),
+            // one past / one short of a boundary
+            (20, 1023),
+            (20, 1025),
+            (20, (1 << 15) + 1),
+            // beyond both grids: clamps to the last row/column
+            (100, 1 << 24),
+            (0, 1 << 15),
+        ];
+        for (p, m) in queries {
+            for op in Op::ALL {
+                assert_eq!(
+                    dense.decide(op, p, m),
+                    set.decision(op, p, m),
+                    "{op:?} P={p} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_table_survives_an_empty_m_grid() {
+        // degenerate but constructible; building the dense form used to
+        // underflow `0..m_len - 1` and spin through usize::MAX indexes
+        let tables = Op::ALL
+            .iter()
+            .map(|&op| DecisionTable::new(op, vec![2], vec![], vec![]))
+            .collect();
+        let set = TableSet::new(tables);
+        let _dense = DenseTable::new(&set);
     }
 
     #[test]

@@ -264,10 +264,10 @@ impl Evaluator for ArtifactEval {
                     Ok(out) => out.time(Self::ext_row(strategy), 0, 0) as f64,
                     Err(e) => {
                         log::warn!("ext artifact predict failed ({e:#}); using native model");
-                        ModelEval.predict(op, strategy, p, m, None, net)
+                        ModelEval::new().predict(op, strategy, p, m, None, net)
                     }
                 },
-                None => ModelEval.predict(op, strategy, p, m, None, net),
+                None => ModelEval::new().predict(op, strategy, p, m, None, net),
             };
         }
         let s_grid = crate::tuner::grids::default_s_grid();
@@ -279,9 +279,9 @@ impl Evaluator for ArtifactEval {
                 // fallback too: segmented strategies report their
                 // best-over-segment-grid time, never an explicit seg
                 if strategy.is_segmented() {
-                    ModelEval.tune_segment(strategy, net, p, m, &s_grid).0
+                    ModelEval::new().tune_segment(strategy, net, p, m, &s_grid).0
                 } else {
-                    ModelEval.predict(op, strategy, p, m, None, net)
+                    ModelEval::new().predict(op, strategy, p, m, None, net)
                 }
             }
         }
@@ -308,7 +308,7 @@ impl Evaluator for ArtifactEval {
             }
             Err(e) => {
                 log::warn!("artifact tune_segment failed ({e:#}); using native model");
-                ModelEval.tune_segment(strategy, net, p, m, s_grid)
+                ModelEval::new().tune_segment(strategy, net, p, m, s_grid)
             }
         }
     }
@@ -325,7 +325,7 @@ impl Evaluator for ArtifactEval {
     ) -> Vec<(Strategy, f64, Option<u64>)> {
         if family.iter().all(|s| s.is_ext()) {
             if self.ext.is_none() {
-                return ModelEval.rank(family, net, p, m, s_grid);
+                return ModelEval::new().rank(family, net, p, m, s_grid);
             }
             return match self.execute_ext_point(net, p, m) {
                 Ok(out) => {
@@ -338,7 +338,7 @@ impl Evaluator for ArtifactEval {
                 }
                 Err(e) => {
                     log::warn!("ext artifact rank failed ({e:#}); using native models");
-                    ModelEval.rank(family, net, p, m, s_grid)
+                    ModelEval::new().rank(family, net, p, m, s_grid)
                 }
             };
         }
@@ -346,7 +346,7 @@ impl Evaluator for ArtifactEval {
             Ok(out) => out,
             Err(e) => {
                 log::warn!("artifact rank failed ({e:#}); using native models");
-                return ModelEval.rank(family, net, p, m, s_grid);
+                return ModelEval::new().rank(family, net, p, m, s_grid);
             }
         };
         let mut ranked: Vec<(Strategy, f64, Option<u64>)> = family
@@ -379,7 +379,7 @@ impl Evaluator for ArtifactEval {
         if op.is_ext() {
             let row = op.ext_artifact_row();
             if self.ext.is_none() || row.is_none() {
-                return ModelEval.predict_grid(op, net, p_grid, m_grid, s_grid);
+                return ModelEval::new().predict_grid(op, net, p_grid, m_grid, s_grid);
             }
             let row = row.unwrap();
             let out = self.execute_ext_memo(&self.ext_memo_grid, net, p_grid, m_grid)?;

@@ -240,7 +240,7 @@ mod tests {
     fn trait_objects_score_points() {
         let net = measured();
         let evals: Vec<Box<dyn Evaluator>> = vec![
-            Box::new(ModelEval),
+            Box::new(ModelEval::new()),
             Box::new(SimEval::new(NetConfig::fast_ethernet_ideal())),
         ];
         for e in &evals {
@@ -255,7 +255,7 @@ mod tests {
     #[test]
     fn default_rank_is_sorted_and_complete() {
         let net = measured();
-        let ranked = ModelEval.rank(&Strategy::BCAST, &net, 8, 65536, &[1024, 8192]);
+        let ranked = ModelEval::new().rank(&Strategy::BCAST, &net, 8, 65536, &[1024, 8192]);
         assert_eq!(ranked.len(), 10);
         for w in ranked.windows(2) {
             assert!(w[0].1 <= w[1].1);
@@ -272,8 +272,8 @@ mod tests {
         for op in Op::ALL {
             for p in [2usize, 8, 24] {
                 for m in [64u64, 8192, 1 << 20] {
-                    let d = ModelEval.best(op, &net, p, m, &s_grid);
-                    let ranked = ModelEval.rank(op.family(), &net, p, m, &s_grid);
+                    let d = ModelEval::new().best(op, &net, p, m, &s_grid);
+                    let ranked = ModelEval::new().rank(op.family(), &net, p, m, &s_grid);
                     assert_eq!(d.strategy, ranked[0].0, "{op:?} P={p} m={m}");
                     assert_eq!(d.predicted, ranked[0].1);
                     assert_eq!(d.segment, ranked[0].2);
@@ -286,7 +286,7 @@ mod tests {
     fn ext_ops_score_through_the_trait() {
         let net = measured();
         let evals: Vec<Box<dyn Evaluator>> = vec![
-            Box::new(ModelEval),
+            Box::new(ModelEval::new()),
             Box::new(SimEval::new(NetConfig::fast_ethernet_ideal())),
         ];
         for e in &evals {

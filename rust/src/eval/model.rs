@@ -14,9 +14,12 @@
 //! (plus [`crate::models::PRUNE_MARGIN`]), so the produced tables are
 //! byte-identical to the exhaustive ranking.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::collectives::Strategy;
+use crate::models::correct::CorrectionTable;
 use crate::models::{self, BoundInputs, CostInputs};
 use crate::obs::Span;
 use crate::plogp::{CachedRow, GapCache, PLogP};
@@ -24,14 +27,44 @@ use crate::tuner::decision::{Decision, Op};
 
 use super::{CellCtx, EvalCounts, Evaluator};
 
-/// The native model evaluator. Stateless and free to construct; the
-/// tuner's parallel sweep shares one across all workers.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct ModelEval;
+/// The native model evaluator, optionally carrying a trace-fitted
+/// [`CorrectionTable`] whose per-(strategy, m-octave) multipliers are
+/// applied on top of the analytic models. Cheap to construct and
+/// `Clone` (the table is shared through an `Arc`); the tuner's parallel
+/// sweep shares one across all workers.
+///
+/// Corrections never disturb the pruning exactness argument: inside one
+/// `(p, m)` cell a strategy's factor is a single known positive
+/// constant, so its corrected cost is exactly `factor × uncorrected`
+/// and its screening bound scales by the same factor (multiplication by
+/// a positive constant is monotone in IEEE arithmetic, so `bound <=
+/// cost` survives the scaling bit-for-bit).
+#[derive(Debug, Clone, Default)]
+pub struct ModelEval {
+    corrections: Option<Arc<CorrectionTable>>,
+}
 
 impl ModelEval {
     pub fn new() -> ModelEval {
-        ModelEval
+        ModelEval::default()
+    }
+
+    /// Attach trace-fitted correction factors (an empty table is the
+    /// identity and is dropped).
+    pub fn with_corrections(mut self, table: CorrectionTable) -> ModelEval {
+        self.corrections = if table.is_empty() { None } else { Some(Arc::new(table)) };
+        self
+    }
+
+    /// The multiplier applied to `strategy` at message size `m`
+    /// (`1.0` when uncorrected).
+    pub fn factor(&self, strategy: Strategy, m: u64) -> f64 {
+        self.corrections.as_ref().map_or(1.0, |c| c.factor(strategy, m))
+    }
+
+    /// The attached correction table, if any.
+    pub fn corrections(&self) -> Option<&CorrectionTable> {
+        self.corrections.as_deref()
     }
 }
 
@@ -148,11 +181,14 @@ impl Evaluator for ModelEval {
         seg: Option<u64>,
         net: &PLogP,
     ) -> f64 {
-        models::predict(strategy, net, p, m, seg)
+        self.factor(strategy, m) * models::predict(strategy, net, p, m, seg)
     }
 
     /// Delegated to [`models::best_segment`] so the pruned
-    /// [`Self::best_in`] can never drift from `rank()[0]`.
+    /// [`Self::best_in`] can never drift from `rank()[0]`. The factor
+    /// is constant across a cell's segment candidates (it depends only
+    /// on `octave(m)`), so the segment argmin is taken uncorrected and
+    /// the winning time scaled once.
     fn tune_segment(
         &self,
         strategy: Strategy,
@@ -161,10 +197,14 @@ impl Evaluator for ModelEval {
         m: u64,
         s_grid: &[u64],
     ) -> (f64, u64) {
-        models::best_segment(strategy, net, p, m, s_grid)
+        let (t, seg) = models::best_segment(strategy, net, p, m, s_grid);
+        (self.factor(strategy, m) * t, seg)
     }
 
-    /// Delegated to [`models::rank_strategies`] (same reason).
+    /// Delegated to [`models::rank_strategies`] (same reason); with
+    /// corrections attached, each family member's time is scaled by its
+    /// factor *before* the stable family-order sort, so tie-breaking
+    /// matches [`Self::best_in`] exactly.
     fn rank(
         &self,
         family: &[Strategy],
@@ -173,7 +213,24 @@ impl Evaluator for ModelEval {
         m: u64,
         s_grid: &[u64],
     ) -> Vec<(Strategy, f64, Option<u64>)> {
-        models::rank_strategies(family, net, p, m, s_grid)
+        match &self.corrections {
+            None => models::rank_strategies(family, net, p, m, s_grid),
+            Some(c) => {
+                let mut out: Vec<(Strategy, f64, Option<u64>)> = family
+                    .iter()
+                    .map(|&s| {
+                        if s.is_segmented() {
+                            let (t, seg) = models::best_segment(s, net, p, m, s_grid);
+                            (s, c.factor(s, m) * t, Some(seg))
+                        } else {
+                            (s, c.factor(s, m) * models::predict(s, net, p, m, None), None)
+                        }
+                    })
+                    .collect();
+                out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                out
+            }
+        }
     }
 
     /// The context-free pruned argmin (still bound-pruned — just
@@ -234,18 +291,29 @@ impl Evaluator for ModelEval {
             cell.eval(s, bi)
         };
 
+        // The cell's per-strategy correction factor: `m` is fixed here,
+        // so this is a known positive constant per strategy. Corrected
+        // cost = factor × uncorrected cost, and the screening bound
+        // scales by the same factor — positive-constant multiplication
+        // is monotone in IEEE arithmetic, so `bound <= cost` (and every
+        // strict comparison below) survives the scaling exactly.
+        let factor = |s: Strategy| -> f64 {
+            self.corrections.as_ref().map_or(1.0, |c| c.factor(s, m))
+        };
+
         // 1. Warm start: score the adjacent cell's winner first so the
         //    threshold is tight before anything else is screened.
         let hint_idx = ctx.hint.and_then(|h| family.iter().position(|&s| s == h));
         if let Some(idx) = hint_idx {
             let r = timed_eval(&mut cell, family[idx], &bi);
+            let r = (factor(family[idx]) * r.0, r.1);
             threshold = r.0;
             results[idx] = Some(r);
         }
 
-        // 2. Screen every remaining strategy by its lower bound, in
-        //    ascending-bound order: likely winners are scored first, so
-        //    the expensive losers face the tightest threshold.
+        // 2. Screen every remaining strategy by its (corrected) lower
+        //    bound, in ascending-bound order: likely winners are scored
+        //    first, so the expensive losers face the tightest threshold.
         let order: Vec<(f64, usize)> = {
             let _screen = Span::start("tuner.stage.bound_screen_ns");
             let mut order: Vec<(f64, usize)> = family
@@ -254,7 +322,7 @@ impl Evaluator for ModelEval {
                 .filter(|(idx, _)| results[*idx].is_none())
                 .map(|(idx, &s)| {
                     cell.n.bound_evals += 1;
-                    (models::lower_bound(s, &bi), idx)
+                    (factor(s) * models::lower_bound(s, &bi), idx)
                 })
                 .collect();
             order.sort_by(|a, b| a.partial_cmp(b).expect("bounds are finite"));
@@ -272,6 +340,7 @@ impl Evaluator for ModelEval {
                 continue;
             }
             let r = timed_eval(&mut cell, s, &bi);
+            let r = (factor(s) * r.0, r.1);
             if r.0 < threshold {
                 threshold = r.0;
             }
@@ -356,13 +425,13 @@ mod tests {
         let p_grid = [2usize, 8, 48];
         let m_grid = [1u64, 8192, 1 << 20];
         for op in [Op::Bcast, Op::Scatter, Op::AllReduce] {
-            let grid = ModelEval
+            let grid = ModelEval::new()
                 .predict_grid(op, &net, &p_grid, &m_grid, &s_grid)
                 .unwrap();
             let mut i = 0;
             for &p in &p_grid {
                 for &m in &m_grid {
-                    let want = ModelEval.best(op, &net, p, m, &s_grid);
+                    let want = ModelEval::new().best(op, &net, p, m, &s_grid);
                     assert_eq!(grid[i], want, "{op:?} P={p} m={m}");
                     i += 1;
                 }
@@ -376,7 +445,7 @@ mod tests {
         for s in Strategy::ALL {
             let seg = s.is_segmented().then_some(4096u64);
             assert_eq!(
-                ModelEval.predict(Op::of(s), s, 24, 65536, seg, &net),
+                ModelEval::new().predict(Op::of(s), s, 24, 65536, seg, &net),
                 models::predict(s, &net, 24, 65536, seg),
                 "{}",
                 s.name()
@@ -391,7 +460,7 @@ mod tests {
         for op in [Op::Bcast, Op::Scatter] {
             for p in [2usize, 5, 16, 48] {
                 for m in [1u64, 256, 8192, 1 << 17, 1 << 20] {
-                    let d = ModelEval.best(op, &net, p, m, &s_grid);
+                    let d = ModelEval::new().best(op, &net, p, m, &s_grid);
                     let want = models::rank_strategies(op.family(), &net, p, m, &s_grid);
                     assert_eq!(d.strategy, want[0].0, "{op:?} P={p} m={m}");
                     assert_eq!(d.predicted, want[0].1);
@@ -411,7 +480,7 @@ mod tests {
         for op in Op::ALL {
             for p in [2usize, 24, 48] {
                 for m in m_grid {
-                    let bare = ModelEval.best(op, &net, p, m, &s_grid);
+                    let bare = ModelEval::new().best(op, &net, p, m, &s_grid);
                     // every hint, with and without the cache
                     for hint in op.family() {
                         for cache_ref in [None, Some(&cache)] {
@@ -420,7 +489,7 @@ mod tests {
                                 cache: cache_ref,
                                 stats: Some(&stats),
                             };
-                            let d = ModelEval.best_in(op, &net, p, m, &s_grid, &ctx);
+                            let d = ModelEval::new().best_in(op, &net, p, m, &s_grid, &ctx);
                             assert_eq!(d.strategy, bare.strategy, "{op:?} P={p} m={m} {hint:?}");
                             assert_eq!(d.predicted, bare.predicted);
                             assert_eq!(d.segment, bare.segment);
@@ -433,7 +502,7 @@ mod tests {
                         Strategy::BcastFlat
                     };
                     let ctx = CellCtx { hint: Some(foreign), cache: Some(&cache), stats: None };
-                    let d = ModelEval.best_in(op, &net, p, m, &s_grid, &ctx);
+                    let d = ModelEval::new().best_in(op, &net, p, m, &s_grid, &ctx);
                     assert_eq!(d.strategy, bare.strategy);
                 }
             }
@@ -443,13 +512,94 @@ mod tests {
         assert_eq!(counts.warm_hits + counts.warm_misses, counts.cells);
     }
 
+    /// A deliberately lopsided correction table: factors above and
+    /// below 1 across several strategies and octaves, so corrected
+    /// argmins genuinely differ from uncorrected ones.
+    fn skewed_corrections() -> CorrectionTable {
+        let mut t = CorrectionTable::identity();
+        for (i, s) in Strategy::ALL.iter().enumerate() {
+            for octave in [0u32, 6, 13, 17, 20] {
+                // deterministic spread over [0.4, 2.4]
+                let f = 0.4 + ((i as u32 * 7 + octave * 3) % 21) as f64 * 0.1;
+                t.set(*s, octave, f);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn corrected_predict_scales_by_the_cell_factor() {
+        let net = measured();
+        let table = skewed_corrections();
+        let ev = ModelEval::new().with_corrections(table.clone());
+        for s in [Strategy::BcastFlat, Strategy::BcastSegChain, Strategy::AllGatherRing] {
+            for m in [1u64, 100, 65536, 1 << 20] {
+                let seg = s.is_segmented().then_some(4096u64);
+                assert_eq!(
+                    ev.predict(Op::of(s), s, 24, m, seg, &net),
+                    table.factor(s, m) * models::predict(s, &net, 24, m, seg),
+                    "{} m={m}",
+                    s.name()
+                );
+            }
+        }
+        // an empty table is dropped: identical to the bare evaluator
+        let bare = ModelEval::new().with_corrections(CorrectionTable::identity());
+        assert!(bare.corrections().is_none());
+    }
+
+    /// The tentpole's exactness property: with corrections attached,
+    /// the pruned, warm-started, gap-cached `best_in` still equals the
+    /// exhaustive corrected argmin (`rank()[0]`), for every hint and
+    /// cache combination.
+    #[test]
+    fn corrected_best_matches_exhaustive_corrected_argmin() {
+        let net = measured();
+        let s_grid = crate::tuner::grids::default_s_grid();
+        let m_grid = [1u64, 64, 8192, 1 << 17, 1 << 20];
+        let cache = GapCache::new(&net, &m_grid, &s_grid);
+        let ev = ModelEval::new().with_corrections(skewed_corrections());
+        for op in Op::ALL {
+            for p in [2usize, 5, 24, 48] {
+                for m in m_grid {
+                    let want = ev.rank(op.family(), &net, p, m, &s_grid);
+                    let d = ev.best(op, &net, p, m, &s_grid);
+                    assert_eq!(d.strategy, want[0].0, "{op:?} P={p} m={m}");
+                    assert_eq!(d.predicted, want[0].1);
+                    assert_eq!(d.segment, want[0].2);
+                    for hint in op.family() {
+                        for cache_ref in [None, Some(&cache)] {
+                            let ctx =
+                                CellCtx { hint: Some(*hint), cache: cache_ref, stats: None };
+                            let got = ev.best_in(op, &net, p, m, &s_grid, &ctx);
+                            assert_eq!(got, d, "{op:?} P={p} m={m} hint={hint:?}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrections_change_the_winner_when_they_should() {
+        let net = measured();
+        let s_grid = crate::tuner::grids::default_s_grid();
+        let bare = ModelEval::new().best(Op::Bcast, &net, 24, 65536, &s_grid);
+        // make the uncorrected winner 100x slower in its octave
+        let mut t = CorrectionTable::identity();
+        t.set(bare.strategy, crate::models::correct::octave(65536), 100.0);
+        let ev = ModelEval::new().with_corrections(t);
+        let corrected = ev.best(Op::Bcast, &net, 24, 65536, &s_grid);
+        assert_ne!(corrected.strategy, bare.strategy);
+    }
+
     #[test]
     fn stats_count_pruned_work() {
         let net = measured();
         let s_grid = crate::tuner::grids::default_s_grid();
         let stats = EvalStats::new();
         let ctx = CellCtx { hint: None, cache: None, stats: Some(&stats) };
-        let _ = ModelEval.best_in(Op::Bcast, &net, 48, 256, &s_grid, &ctx);
+        let _ = ModelEval::new().best_in(Op::Bcast, &net, 48, 256, &s_grid, &ctx);
         let c = stats.snapshot();
         assert_eq!(c.cells, 1);
         assert_eq!(c.bound_evals, Strategy::BCAST.len() as u64);

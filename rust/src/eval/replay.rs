@@ -220,8 +220,9 @@ impl ReplayEval {
             self.counters.exact.fetch_add(1, Ordering::Relaxed);
             return rec.critical_path().as_secs();
         }
-        if let Some(t) = self.interpolate(op_name, strat_name, p, m) {
-            self.counters.interpolated.fetch_add(1, Ordering::Relaxed);
+        if let Some((t, exact)) = self.interpolate(op_name, strat_name, p, m) {
+            let counter = if exact { &self.counters.exact } else { &self.counters.interpolated };
+            counter.fetch_add(1, Ordering::Relaxed);
             return t;
         }
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
@@ -229,11 +230,18 @@ impl ReplayEval {
     }
 
     /// Gap-model interpolation between the two captured sizes
-    /// bracketing `m` in the `(op, strategy, p)` column. `None` when no
-    /// bracket exists (uncaptured column, or `m` outside its range —
-    /// replay never extrapolates an unobserved regime).
-    fn interpolate(&self, op: &str, strategy: &str, p: usize, m: u64) -> Option<f64> {
+    /// bracketing `m` in the `(op, strategy, p)` column. A query whose
+    /// `m` exactly equals a captured size resolves to that record and
+    /// reports `exact = true` — the keyed lookups in [`Self::score`]
+    /// normally answer captured points first, but the column scan must
+    /// never re-classify one as interpolated. `None` when no bracket
+    /// exists (uncaptured column, or `m` outside its range — replay
+    /// never extrapolates an unobserved regime).
+    fn interpolate(&self, op: &str, strategy: &str, p: usize, m: u64) -> Option<(f64, bool)> {
         let column = self.set.cells_for(op, strategy, p);
+        if let Some(rec) = column.iter().find(|r| r.meta.m == m) {
+            return Some((rec.critical_path().as_secs(), true));
+        }
         let hi = column.iter().position(|r| r.meta.m > m)?;
         if hi == 0 {
             return None; // m below the captured range
@@ -241,8 +249,13 @@ impl ReplayEval {
         let (lo_rec, hi_rec) = (column[hi - 1], column[hi]);
         let (t0, t1) = (lo_rec.critical_path().as_secs(), hi_rec.critical_path().as_secs());
         let (x0, x1) = (self.net.gap(lo_rec.meta.m as f64), self.net.gap(hi_rec.meta.m as f64));
-        let frac = if (x1 - x0).abs() > f64::EPSILON * x1.abs() {
-            (self.net.gap(m as f64) - x0) / (x1 - x0)
+        // degenerate-span test scaled by the larger endpoint magnitude:
+        // scaling by `x1` alone turned the threshold into 0 whenever
+        // `x1 == 0` (a faulted / degenerate gap model), sending flat
+        // spans down the linear path to divide by a vanishing span
+        let span = x1 - x0;
+        let frac = if span.abs() > f64::EPSILON * x0.abs().max(x1.abs()) {
+            (self.net.gap(m as f64) - x0) / span
         } else {
             // flat gap span: fall back to log-m interpolation
             ((m as f64) / (lo_rec.meta.m as f64)).ln()
@@ -250,7 +263,7 @@ impl ReplayEval {
         };
         let t = t0 + frac * (t1 - t0);
         // stay inside the observed bracket even on a non-monotone gap
-        Some(t.clamp(t0.min(t1), t0.max(t1)))
+        Some((t.clamp(t0.min(t1), t0.max(t1)), false))
     }
 }
 
@@ -381,6 +394,83 @@ mod tests {
         assert!(t_mid.is_finite());
         assert!(t_mid >= t_lo.min(t_hi) && t_mid <= t_lo.max(t_hi), "{t_lo} {t_mid} {t_hi}");
         assert_eq!(replay.stats().interp_hits, 1);
+    }
+
+    #[test]
+    fn exact_m_with_a_non_tuned_segment_counts_exact() {
+        let (set, _) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let net = replay.net().clone();
+        let tuned = models::best_segment(Strategy::BcastSegChain, &net, 8, 65536, &[1024, 8192]).1;
+        let offbeat = if tuned == 3 { 5 } else { 3 }; // never the captured segment
+        let want = replay
+            .set()
+            .at_cell("bcast", "bcast/seg_chain", 8, 65536)
+            .unwrap()
+            .critical_path()
+            .as_secs();
+        let t =
+            replay.predict(Op::Bcast, Strategy::BcastSegChain, 8, 65536, Some(offbeat), &net);
+        assert_eq!(t, want, "explicit non-tuned segment resolves to the captured cell");
+        let st = replay.stats();
+        assert_eq!((st.exact_hits, st.interp_hits, st.misses), (1, 0, 0), "{st:?}");
+    }
+
+    #[test]
+    fn interpolate_resolves_exact_m_to_the_record() {
+        // defense in depth on the column scan itself: even if the keyed
+        // lookups were bypassed, an exactly-captured m must come back as
+        // the record's score, flagged exact rather than interpolated
+        let (set, _) = captured();
+        let replay = ReplayEval::new(set).unwrap();
+        let want = replay
+            .set()
+            .at_cell("bcast", "bcast/binomial", 8, 65536)
+            .unwrap()
+            .critical_path()
+            .as_secs();
+        let (t, exact) = replay.interpolate("bcast", "bcast/binomial", 8, 65536).unwrap();
+        assert!(exact);
+        assert_eq!(t, want);
+        let (_, exact) = replay.interpolate("bcast", "bcast/binomial", 8, 4096).unwrap();
+        assert!(!exact, "a genuinely in-between m still interpolates");
+    }
+
+    /// A hand-built record on a constant-gap network (`g(m)` identical
+    /// at every size, so every bracket has a zero gap span).
+    fn flat_gap_record(m: u64, secs: f64) -> crate::netsim::TraceRecord {
+        crate::netsim::TraceRecord {
+            meta: crate::netsim::TraceMeta {
+                op: "bcast".to_string(),
+                strategy: "bcast/flat".to_string(),
+                p: 4,
+                m,
+                segment: None,
+                completion_ns: (secs * 1e9).round() as u64,
+                dropped: 0,
+                plogp_l: 1e-4,
+                plogp_sizes: vec![1.0, (1u64 << 20) as f64],
+                plogp_gaps: vec![5e-6, 5e-6],
+                fault_plan: None,
+            },
+            events: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn zero_gap_span_brackets_fall_back_to_log_m_and_stay_bracketed() {
+        let mut set = TraceSet::new();
+        set.insert(flat_gap_record(256, 1.0));
+        set.insert(flat_gap_record(65536, 3.0));
+        let replay = ReplayEval::new(set).unwrap();
+        let net = replay.net().clone();
+        let t = replay.predict(Op::Bcast, Strategy::BcastFlat, 4, 4096, None, &net);
+        // x0 == x1, so the gap-coordinate path would divide by zero;
+        // log-m interpolation gives ln(4096/256)/ln(65536/256) = 1/2
+        assert!((t - 2.0).abs() < 1e-9, "log-m midpoint expected, got {t}");
+        assert!(t >= 1.0 && t <= 3.0, "must stay inside the bracket");
+        let st = replay.stats();
+        assert_eq!((st.exact_hits, st.interp_hits, st.misses), (0, 1, 0), "{st:?}");
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! `collective-tuner` — the L3 coordinator binary.
 //!
-//! Subcommands: `bench-plogp`, `tune`, `run`, `experiment`, `discover`,
-//! `serve`, `coordd`, `query`, `obs`, `info`. See `cli::USAGE` or run
-//! with `help`.
+//! Subcommands: `bench-plogp`, `tune`, `calibrate`, `run`,
+//! `experiment`, `discover`, `serve`, `coordd`, `query`, `obs`,
+//! `info`. See `cli::USAGE` or run with `help`.
 
 use std::path::{Path, PathBuf};
 
@@ -87,6 +87,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "tune" => cmd_tune(args),
         "record" => cmd_record(args),
         "replay" => cmd_replay(args),
+        "calibrate" => cmd_calibrate(args),
         "validate" => cmd_validate(args),
         "run" => cmd_run(args),
         "experiment" => cmd_experiment(args),
@@ -123,11 +124,19 @@ fn backend_tuner(args: &Args) -> Result<Tuner> {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(TunerArtifact::default_dir);
-    let tuner = match args.get_or("backend", "auto").as_str() {
-        "auto" => Tuner::auto(&dir),
-        "native" => Tuner::native(),
-        "artifact" => Tuner::with_artifact(&dir)?,
-        other => bail!("unknown --backend '{other}' (auto, native, artifact)"),
+    let corrections = args.get("corrections").map(PathBuf::from);
+    let tuner = match (args.get_or("backend", "auto").as_str(), &corrections) {
+        // trace-fitted corrections attach to the native models; their
+        // presence pins the backend (an artifact would silently ignore
+        // the fitted factors)
+        ("auto" | "native", Some(path)) => Tuner::with_corrections(path)?,
+        ("artifact", Some(_)) => {
+            bail!("--corrections applies to the native model backend, not --backend artifact")
+        }
+        ("auto", None) => Tuner::auto(&dir),
+        ("native", None) => Tuner::native(),
+        ("artifact", None) => Tuner::with_artifact(&dir)?,
+        (other, _) => bail!("unknown --backend '{other}' (auto, native, artifact)"),
     };
     Ok(tuner.jobs(args.usize_or("jobs", 0)?))
 }
@@ -205,6 +214,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
     let tuner = backend_tuner(args)?;
     println!("backend: {} ({} sweep worker(s))", tuner.backend_name(), tuner.jobs);
+    if let Some(c) = args.get("corrections") {
+        println!("corrections: {c}");
+    }
     let ops = op_list(args)?;
     let p_grid = args
         .usize_list("procs")?
@@ -321,6 +333,33 @@ fn cmd_replay(args: &Args) -> Result<()> {
     save_and_print_tables(args, &tables)
 }
 
+/// Fit trace-derived correction factors — one multiplier per
+/// `(strategy, size-octave)` — that close the gap between the analytic
+/// models and a captured workload, and write the versioned corrections
+/// TSV that `tune`/`serve`/`coordd` accept via `--corrections`.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use collective_tuner::models::{correct, CorrectionTable};
+    use collective_tuner::netsim::TraceSet;
+
+    let dir = args
+        .get("trace-dir")
+        .ok_or_else(|| anyhow::anyhow!("calibrate needs --trace-dir <dir>"))?;
+    let set = TraceSet::load_dir(Path::new(dir))?;
+    let net = correct::net_of(&set)
+        .ok_or_else(|| anyhow::anyhow!("no trace records in {dir}"))?;
+    println!("calibrating against {} trace(s) from {dir}", set.len());
+    println!("captured {}", net.summary());
+    let (table, report) = CorrectionTable::fit(&set, &net);
+    print!("{}", report.to_text());
+    if let Some(out) = args.get("save") {
+        let path = table.save(Path::new(out))?;
+        println!("wrote {} ({} factor(s))", path.display(), table.len());
+    } else {
+        println!("(re-run with --save <dir> to write the corrections table)");
+    }
+    Ok(())
+}
+
 /// Cross-check two evaluation backends over a grid.
 fn cmd_validate(args: &Args) -> Result<()> {
     use collective_tuner::eval::{Evaluator, ModelEval, ReplayEval, SimEval};
@@ -331,7 +370,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
     let mut replay_handle: Option<ReplayEval> = None;
     let mut build = |name: &str, role: &str| -> Result<Box<dyn Evaluator>> {
         match name {
-            "native" => Ok(Box::new(ModelEval)),
+            "native" => Ok(Box::new(ModelEval::new())),
             "sim" => Ok(Box::new(SimEval::new(cfg.clone()))),
             "replay" => {
                 let dir = trace_dir.ok_or_else(|| {
@@ -387,6 +426,51 @@ fn cmd_validate(args: &Args) -> Result<()> {
         p_list.len(),
         m_list.len()
     );
+    // `--corrections` switches to the calibration report: the same
+    // reference judges the uncorrected and the corrected native models.
+    if let Some(cpath) = args.get("corrections") {
+        use collective_tuner::models::CorrectionTable;
+        use collective_tuner::tuner::validate::validate_calibration;
+        if args.get_or("candidate", "native") != "native" {
+            bail!("--corrections judges the corrected native model; drop --candidate");
+        }
+        let table = CorrectionTable::load(Path::new(cpath))?;
+        let mut t = Table::new(vec![
+            "op", "points", "err_before", "err_after", "acc_before", "acc_after",
+        ]);
+        for &op in &ops {
+            let rep = validate_calibration(
+                reference.as_ref(),
+                &table,
+                &net,
+                op.family(),
+                &p_list,
+                &m_list,
+                &opts,
+            );
+            t.row(vec![
+                op.name().to_string(),
+                rep.uncorrected.points.to_string(),
+                format!("{:.4}", rep.uncorrected.mean_rel_err),
+                format!("{:.4}", rep.corrected.mean_rel_err),
+                format!("{:.0}%", rep.uncorrected.accuracy() * 100.0),
+                format!("{:.0}%", rep.corrected.accuracy() * 100.0),
+            ]);
+            println!(
+                "{}: mean rel err {:.4} -> {:.4} ({}), accuracy delta {:+.0}%",
+                op.name(),
+                rep.uncorrected.mean_rel_err,
+                rep.corrected.mean_rel_err,
+                if rep.error_reduced() { "improved" } else { "REGRESSED" },
+                rep.accuracy_delta() * 100.0
+            );
+        }
+        println!("{}", t.to_ascii());
+        if let Some(r) = &replay_handle {
+            println!("replay stats: {}", r.stats().to_json());
+        }
+        return Ok(());
+    }
     let mut table = Table::new(vec![
         "op", "points", "correct", "meaningful", "correct_meaningful", "mean_rel_err",
         "max_regret",
@@ -591,8 +675,15 @@ fn cmd_discover(args: &Args) -> Result<()> {
 
 fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
     let defaults = CoordinatorConfig::default();
+    let corrections = args.get("corrections").map(PathBuf::from);
     let artifact_dir = match args.get_or("backend", "auto").as_str() {
         "native" => None,
+        "artifact" if corrections.is_some() => {
+            bail!("--corrections applies to the native model backend, not --backend artifact")
+        }
+        // corrections pin the native backend: an artifact would
+        // silently ignore the fitted factors
+        "auto" if corrections.is_some() => None,
         "auto" | "artifact" => {
             let dir = args
                 .get("artifacts")
@@ -612,12 +703,13 @@ fn coordinator_from_args(args: &Args) -> Result<Coordinator> {
         capacity_per_shard: args.usize_or("capacity", defaults.capacity_per_shard)?.max(1),
         jobs: args.usize_or("jobs", 0)?,
         artifact_dir,
+        corrections,
         max_staleness: std::time::Duration::from_secs(
             args.u64_or("max-staleness", defaults.max_staleness.as_secs())?,
         ),
         ..defaults
     };
-    Ok(Coordinator::new(cfg))
+    Coordinator::try_new(cfg)
 }
 
 fn cmd_query(args: &Args) -> Result<()> {
@@ -655,7 +747,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         let mut sim = Netsim::new(2, cfg);
         let net = plogp::bench::measure(&mut sim);
         println!("measured {}", net.summary());
-        coord.register(&name, nodes, net);
+        coord.register(&name, nodes, net)?;
     }
     let op_name = args.get_or("op", "bcast");
     let op = Op::from_name(&op_name).ok_or_else(|| {
@@ -736,7 +828,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         NetConfig::wan_link(),
     );
     let t_reg = std::time::Instant::now();
-    coord.register_islands(&grid);
+    coord.register_islands(&grid)?;
     println!(
         "registered {k} island(s) of {nodes} nodes (backend {}) in {:.2} ms",
         coord.backend_name(),
@@ -922,7 +1014,7 @@ fn cmd_coordd(args: &Args) -> Result<()> {
             .collect(),
         NetConfig::wan_link(),
     );
-    coord.register_islands(&grid);
+    coord.register_islands(&grid)?;
     println!(
         "registered {k} island(s) of {nodes} nodes (backend {})",
         coord.backend_name()
@@ -1146,7 +1238,7 @@ fn cmd_obs_dump(args: &Args) -> Result<()> {
     let coord = coordinator_from_args(args)?;
     let mut sim = Netsim::new(2, cfg);
     let net = plogp::bench::measure(&mut sim);
-    coord.register("obs-demo", 8, net);
+    coord.register("obs-demo", 8, net)?;
     for op in [Op::Bcast, Op::Scatter, Op::AllReduce] {
         for m in [1024u64, 64 * 1024, 1 << 20] {
             let _ = coord.decision(op, "obs-demo", 8, m)?;

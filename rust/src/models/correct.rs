@@ -1,0 +1,561 @@
+//! Trace-fitted correction factors — the calibration layer that closes
+//! the model–simulator gap.
+//!
+//! The analytic pLogP models ([`super::COST_MODELS`]) deviate from
+//! measured runs in strategy- and size-dependent ways (the
+//! characterisation companion paper maps exactly where). The production
+//! answer — NCCL's `treeCorrectionFactor` — is a static table of
+//! per-(algorithm, size-regime) multipliers fitted from measurements
+//! and applied on top of the analytic model. This module is that table:
+//!
+//! * [`CorrectionTable`] maps `(strategy, octave(m))` to a multiplier,
+//!   identity (`1.0`) for every unfitted cell. Buckets are log-spaced
+//!   octaves (`floor(log2 m)`), the same geometric spacing the
+//!   signature probe sizes use.
+//! * [`CorrectionTable::fit`] estimates each bucket's multiplier by a
+//!   least-squares ratio of captured [`TraceSet`] critical paths to the
+//!   uncorrected model predictions: with `q = predicted/measured`, the
+//!   `c` minimising `Σ (c·q − 1)²` (the summed squared *relative*
+//!   error) is `Σq / Σq²`.
+//! * The table persists as a versioned TSV (`corrections v1`) that
+//!   round-trips byte-identically, mirroring `trace v1` and the
+//!   decision-table format.
+//!
+//! Correctness under pruning: within one `(p, m)` cell the factor of a
+//! strategy is a single known constant (it depends only on `octave(m)`),
+//! so a corrected cost is exactly `factor × uncorrected cost` and a
+//! strategy's screening bound scales by the same factor — the
+//! byte-identical-to-exhaustive-argmin guarantee survives correction
+//! (property-tested in `rust/tests/properties.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::collectives::Strategy;
+use crate::netsim::TraceSet;
+use crate::plogp::{GapTable, PLogP};
+use crate::tuner::Op;
+
+const HEADER: &str = "# collective-tuner corrections v1";
+
+/// File name used inside a corrections directory.
+pub const FILE_NAME: &str = "corrections.tsv";
+
+/// Fitted multipliers are clamped to this range — wide enough for any
+/// plausible model/simulator gap, tight enough that one corrupt trace
+/// cannot turn the model upside down.
+pub const FACTOR_CLAMP: (f64, f64) = (1e-3, 1e3);
+
+/// Octave bucket of a message size: `floor(log2(max(m, 1)))`. Log-
+/// spaced like the signature probe sizes, so one bucket covers one
+/// doubling of the message size.
+pub fn octave(m: u64) -> u32 {
+    63 - m.max(1).leading_zeros()
+}
+
+/// Per-(strategy, m-octave) multiplicative correction of the analytic
+/// models. The empty table is the identity: `factor()` returns `1.0`
+/// for every cell that was never fitted.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CorrectionTable {
+    /// `(strategy index, octave) -> multiplier`. A `BTreeMap` so the
+    /// TSV emit order is sorted and byte-stable.
+    factors: BTreeMap<(usize, u32), f64>,
+}
+
+impl CorrectionTable {
+    /// The identity table (every factor `1.0`).
+    pub fn identity() -> CorrectionTable {
+        CorrectionTable::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+
+    /// Number of fitted `(strategy, octave)` cells.
+    pub fn len(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Set one cell's multiplier. Factors must be positive and finite.
+    pub fn set(&mut self, strategy: Strategy, octave: u32, factor: f64) {
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "correction factor must be positive and finite, got {factor}"
+        );
+        self.factors.insert((strategy.index(), octave), factor);
+    }
+
+    /// The multiplier for `strategy` at message size `m` — `1.0` when
+    /// the cell was never fitted.
+    pub fn factor(&self, strategy: Strategy, m: u64) -> f64 {
+        *self.factors.get(&(strategy.index(), octave(m))).unwrap_or(&1.0)
+    }
+
+    /// The smallest multiplier `strategy` can ever receive, over every
+    /// fitted octave *and* the implicit identity of unfitted ones.
+    /// Scaling a strategy's lower bound by this is sound at any `m`;
+    /// the evaluator uses the exact per-cell [`Self::factor`] (tighter,
+    /// equally sound) because `m` is fixed inside a cell.
+    pub fn min_factor(&self, strategy: Strategy) -> f64 {
+        let i = strategy.index();
+        self.factors
+            .range((i, 0)..=(i, u32::MAX))
+            .map(|(_, &f)| f)
+            .fold(1.0, f64::min)
+    }
+
+    /// Iterate fitted cells as `(strategy, octave, factor)` in sorted
+    /// (strategy index, octave) order.
+    pub fn entries(&self) -> impl Iterator<Item = (Strategy, u32, f64)> + '_ {
+        self.factors.iter().map(|(&(si, b), &f)| {
+            (
+                Strategy::from_index(si).expect("table holds valid strategy indices"),
+                b,
+                f,
+            )
+        })
+    }
+
+    /// Fit a table from captured traces against `net`'s uncorrected
+    /// model predictions. Returns the table plus a [`FitReport`] of
+    /// mean relative error before/after at bucket, strategy, and op
+    /// granularity. Records with unknown strategies or degenerate
+    /// (non-positive / non-finite) measurements or predictions are
+    /// skipped and counted.
+    pub fn fit(traces: &TraceSet, net: &PLogP) -> (CorrectionTable, FitReport) {
+        // (strategy index, octave) -> q samples, q = predicted/measured
+        let mut samples: BTreeMap<(usize, u32), Vec<f64>> = BTreeMap::new();
+        let mut skipped = 0usize;
+        for rec in traces.records() {
+            let Some(strategy) = Strategy::from_name(&rec.meta.strategy) else {
+                skipped += 1;
+                continue;
+            };
+            if rec.meta.p == 0 {
+                skipped += 1;
+                continue;
+            }
+            let measured = rec.critical_path().as_secs();
+            let predicted =
+                super::predict(strategy, net, rec.meta.p, rec.meta.m.max(1), rec.meta.segment);
+            if !(measured.is_finite() && measured > 0.0 && predicted.is_finite() && predicted > 0.0)
+            {
+                skipped += 1;
+                continue;
+            }
+            samples
+                .entry((strategy.index(), octave(rec.meta.m)))
+                .or_default()
+                .push(predicted / measured);
+        }
+
+        let mut table = CorrectionTable::default();
+        let mut report = FitReport { skipped, ..FitReport::default() };
+        for (&(si, b), qs) in &samples {
+            let strategy = Strategy::from_index(si).expect("indices come from Strategy::index");
+            let (sum_q, sum_q2) = qs.iter().fold((0.0, 0.0), |(s, s2), &q| (s + q, s2 + q * q));
+            // argmin_c Σ (c·q − 1)²  =  Σq / Σq²
+            let c = sum_q / sum_q2;
+            if !c.is_finite() || c <= 0.0 {
+                report.skipped += qs.len();
+                continue;
+            }
+            let c = c.clamp(FACTOR_CLAMP.0, FACTOR_CLAMP.1);
+            table.factors.insert((si, b), c);
+            let stats = ErrStats::of(qs, c);
+            report.push(strategy, b, c, stats);
+        }
+        report.finish();
+        (table, report)
+    }
+
+    /// Serialize as `corrections v1` TSV. Deterministic: cells emit in
+    /// sorted (strategy index, octave) order with shortest-roundtrip
+    /// float formatting, so save → load → save is byte-identical.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from(HEADER);
+        out.push('\n');
+        out.push_str("# strategy\toctave\tfactor\n");
+        for (strategy, b, f) in self.entries() {
+            writeln!(out, "{}\t{}\t{}", strategy.name(), b, f).expect("writing to String");
+        }
+        out
+    }
+
+    /// Parse the `corrections v1` TSV format.
+    pub fn from_tsv(text: &str) -> Result<CorrectionTable> {
+        let mut lines = text.lines().enumerate();
+        match lines.next() {
+            Some((_, h)) if h.trim_end() == HEADER => {}
+            other => bail!(
+                "not a corrections v1 file (expected {HEADER:?}, got {:?})",
+                other.map(|(_, h)| h)
+            ),
+        }
+        let mut table = CorrectionTable::default();
+        for (i, line) in lines {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (name, octave, factor) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(n), Some(b), Some(f)) => (n, b, f),
+                _ => bail!("line {}: expected 3 tab-separated fields: {line:?}", i + 1),
+            };
+            let strategy = Strategy::from_name(name)
+                .with_context(|| format!("line {}: unknown strategy {name:?}", i + 1))?;
+            let octave: u32 = octave
+                .parse()
+                .with_context(|| format!("line {}: bad octave {octave:?}", i + 1))?;
+            let factor: f64 = factor
+                .parse()
+                .with_context(|| format!("line {}: bad factor {factor:?}", i + 1))?;
+            if !(factor.is_finite() && factor > 0.0) {
+                bail!("line {}: factor must be positive and finite, got {factor}", i + 1);
+            }
+            table.factors.insert((strategy.index(), octave), factor);
+        }
+        Ok(table)
+    }
+
+    /// Write `corrections.tsv` into `dir` (created if missing).
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating corrections dir {}", dir.display()))?;
+        let path = dir.join(FILE_NAME);
+        std::fs::write(&path, self.to_tsv())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load from a corrections directory (reads `corrections.tsv`
+    /// inside it) or directly from a TSV file path.
+    pub fn load(path: &Path) -> Result<CorrectionTable> {
+        let file = if path.is_dir() { path.join(FILE_NAME) } else { path.to_path_buf() };
+        let text = std::fs::read_to_string(&file)
+            .with_context(|| format!("reading corrections table {}", file.display()))?;
+        CorrectionTable::from_tsv(&text)
+            .with_context(|| format!("parsing corrections table {}", file.display()))
+    }
+}
+
+/// The pLogP network a trace set was captured on, rebuilt from the
+/// first record's embedded signature — the same reconstruction
+/// `ReplayEval::new` performs. `None` for an empty set.
+pub fn net_of(traces: &TraceSet) -> Option<PLogP> {
+    let first = traces.records().next()?;
+    Some(PLogP::new(
+        first.meta.plogp_l,
+        GapTable::new(first.meta.plogp_sizes.clone(), first.meta.plogp_gaps.clone()),
+    ))
+}
+
+/// Mean relative error of one sample population, before and after its
+/// fitted factor is applied.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ErrStats {
+    pub samples: usize,
+    /// mean |predicted/measured − 1| (uncorrected).
+    pub mape_before: f64,
+    /// mean |factor·predicted/measured − 1| (corrected).
+    pub mape_after: f64,
+}
+
+impl ErrStats {
+    fn of(qs: &[f64], c: f64) -> ErrStats {
+        let n = qs.len() as f64;
+        ErrStats {
+            samples: qs.len(),
+            mape_before: qs.iter().map(|q| (q - 1.0).abs()).sum::<f64>() / n,
+            mape_after: qs.iter().map(|q| (c * q - 1.0).abs()).sum::<f64>() / n,
+        }
+    }
+
+    fn absorb(&mut self, other: &ErrStats) {
+        let n = (self.samples + other.samples) as f64;
+        if n == 0.0 {
+            return;
+        }
+        let (a, b) = (self.samples as f64, other.samples as f64);
+        self.mape_before = (self.mape_before * a + other.mape_before * b) / n;
+        self.mape_after = (self.mape_after * a + other.mape_after * b) / n;
+        self.samples += other.samples;
+    }
+}
+
+/// What [`CorrectionTable::fit`] measured: per-bucket factors plus mean
+/// relative error before/after at every granularity the CLI reports.
+#[derive(Debug, Clone, Default)]
+pub struct FitReport {
+    /// One row per fitted `(strategy, octave)` cell.
+    pub buckets: Vec<(Strategy, u32, f64, ErrStats)>,
+    /// Aggregated per strategy (sample-weighted).
+    pub strategies: Vec<(Strategy, ErrStats)>,
+    /// Aggregated per op family (sample-weighted).
+    pub ops: Vec<(Op, ErrStats)>,
+    /// Aggregated over every fitted sample.
+    pub overall: ErrStats,
+    /// Records not used by the fit (unknown strategy, degenerate
+    /// measurement or prediction).
+    pub skipped: usize,
+}
+
+impl FitReport {
+    fn push(&mut self, strategy: Strategy, octave: u32, factor: f64, stats: ErrStats) {
+        self.buckets.push((strategy, octave, factor, stats));
+    }
+
+    /// Roll bucket rows up into the strategy / op / overall aggregates.
+    fn finish(&mut self) {
+        let mut per_strategy: BTreeMap<usize, ErrStats> = BTreeMap::new();
+        let mut per_op: BTreeMap<usize, (Op, ErrStats)> = BTreeMap::new();
+        for (strategy, _, _, stats) in &self.buckets {
+            per_strategy.entry(strategy.index()).or_default().absorb(stats);
+            let op = Op::of(*strategy);
+            per_op.entry(op.index()).or_insert((op, ErrStats::default())).1.absorb(stats);
+            self.overall.absorb(stats);
+        }
+        self.strategies = per_strategy
+            .into_iter()
+            .map(|(si, stats)| {
+                (Strategy::from_index(si).expect("valid strategy index"), stats)
+            })
+            .collect();
+        self.ops = per_op.into_values().collect();
+    }
+
+    /// Human-readable summary (the `calibrate` subcommand's output).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "fitted {} bucket(s) from {} sample(s) ({} skipped)",
+            self.buckets.len(),
+            self.overall.samples,
+            self.skipped
+        );
+        let _ = writeln!(out, "\nper-strategy mean relative error (before -> after):");
+        for (strategy, stats) in &self.strategies {
+            let _ = writeln!(
+                out,
+                "  {:28} {:>3} samples  {:.4} -> {:.4}",
+                strategy.name(),
+                stats.samples,
+                stats.mape_before,
+                stats.mape_after
+            );
+        }
+        let _ = writeln!(out, "\nper-op mean relative error (before -> after):");
+        for (op, stats) in &self.ops {
+            let _ = writeln!(
+                out,
+                "  {:28} {:>3} samples  {:.4} -> {:.4}",
+                op.name(),
+                stats.samples,
+                stats.mape_before,
+                stats.mape_after
+            );
+        }
+        let _ = writeln!(
+            out,
+            "\noverall: {:.4} -> {:.4} over {} samples",
+            self.overall.mape_before, self.overall.mape_after, self.overall.samples
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{TraceMeta, TraceRecord};
+    use crate::tuner::Op;
+
+    fn toy_net() -> PLogP {
+        let sizes: Vec<f64> = vec![1., 2., 4., 8., 16., 32., 64., 128.];
+        let gaps: Vec<f64> = sizes.iter().map(|s| 1.0 + s).collect();
+        PLogP::new(10.0, GapTable::new(sizes, gaps))
+    }
+
+    /// A trace record whose measured critical path is `scale ×` the
+    /// model prediction for its cell.
+    fn scaled_record(net: &PLogP, strategy: Strategy, p: usize, m: u64, scale: f64) -> TraceRecord {
+        let predicted = crate::models::predict(strategy, net, p, m, None);
+        TraceRecord {
+            meta: TraceMeta {
+                op: Op::of(strategy).name().to_string(),
+                strategy: strategy.name().to_string(),
+                p,
+                m,
+                segment: None,
+                completion_ns: (predicted * scale * 1e9).round() as u64,
+                dropped: 0,
+                plogp_l: net.l,
+                plogp_sizes: net.table.sizes().to_vec(),
+                plogp_gaps: net.table.gaps().to_vec(),
+                fault_plan: None,
+            },
+            events: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn octave_is_floor_log2() {
+        assert_eq!(octave(0), 0);
+        assert_eq!(octave(1), 0);
+        assert_eq!(octave(2), 1);
+        assert_eq!(octave(3), 1);
+        assert_eq!(octave(4), 2);
+        assert_eq!(octave(1023), 9);
+        assert_eq!(octave(1024), 10);
+        assert_eq!(octave(1 << 20), 20);
+        assert_eq!(octave(u64::MAX), 63);
+    }
+
+    #[test]
+    fn identity_table_is_all_ones() {
+        let t = CorrectionTable::identity();
+        assert!(t.is_empty());
+        for s in Strategy::ALL {
+            for m in [1u64, 7, 1024, 1 << 20] {
+                assert_eq!(t.factor(s, m), 1.0);
+            }
+            assert_eq!(t.min_factor(s), 1.0);
+        }
+    }
+
+    #[test]
+    fn factor_hits_its_bucket_and_min_factor_includes_identity() {
+        let mut t = CorrectionTable::identity();
+        t.set(Strategy::BcastFlat, octave(1024), 2.5);
+        t.set(Strategy::BcastFlat, octave(64), 0.5);
+        // inside fitted octaves
+        assert_eq!(t.factor(Strategy::BcastFlat, 1024), 2.5);
+        assert_eq!(t.factor(Strategy::BcastFlat, 2047), 2.5);
+        assert_eq!(t.factor(Strategy::BcastFlat, 64), 0.5);
+        // unfitted octave and unfitted strategy stay identity
+        assert_eq!(t.factor(Strategy::BcastFlat, 1), 1.0);
+        assert_eq!(t.factor(Strategy::BcastChain, 1024), 1.0);
+        // min over fitted factors and the implicit identity
+        assert_eq!(t.min_factor(Strategy::BcastFlat), 0.5);
+        assert_eq!(t.min_factor(Strategy::BcastChain), 1.0);
+        let mut up = CorrectionTable::identity();
+        up.set(Strategy::BcastFlat, 3, 4.0);
+        // all fitted factors above 1: identity caps the min
+        assert_eq!(up.min_factor(Strategy::BcastFlat), 1.0);
+    }
+
+    #[test]
+    fn tsv_round_trips_byte_identically() {
+        let mut t = CorrectionTable::identity();
+        t.set(Strategy::BcastFlat, 0, 1.25);
+        t.set(Strategy::BcastFlat, 10, 0.07300000000000001);
+        t.set(Strategy::AllReduceRecDoubling, 20, 1.0 / 3.0);
+        t.set(Strategy::ScatterBinomial, 5, 17.0);
+        let first = t.to_tsv();
+        let reloaded = CorrectionTable::from_tsv(&first).unwrap();
+        assert_eq!(reloaded, t);
+        assert_eq!(reloaded.to_tsv(), first, "save -> load -> save must be byte-identical");
+    }
+
+    #[test]
+    fn tsv_rejects_garbage() {
+        assert!(CorrectionTable::from_tsv("").is_err());
+        assert!(CorrectionTable::from_tsv("# wrong header\n").is_err());
+        let bad_strategy = format!("{HEADER}\nno-such-strategy\t3\t1.5\n");
+        assert!(CorrectionTable::from_tsv(&bad_strategy).is_err());
+        let bad_factor = format!("{HEADER}\nbcast/flat\t3\t-1.5\n");
+        assert!(CorrectionTable::from_tsv(&bad_factor).is_err());
+        let short = format!("{HEADER}\nbcast/flat\t3\n");
+        assert!(CorrectionTable::from_tsv(&short).is_err());
+    }
+
+    #[test]
+    fn save_and_load_accept_dir_or_file() {
+        let dir = std::env::temp_dir().join("ct-corrections-roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t = CorrectionTable::identity();
+        t.set(Strategy::BcastBinomial, 7, 1.75);
+        let path = t.save(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), FILE_NAME);
+        assert_eq!(CorrectionTable::load(&dir).unwrap(), t);
+        assert_eq!(CorrectionTable::load(&path).unwrap(), t);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fit_recovers_a_systematic_scale_and_reduces_error() {
+        let net = toy_net();
+        let mut set = TraceSet::default();
+        // the simulator runs bcast-flat 2x slower than the model says,
+        // and bcast-binomial 1.5x, across several cells in one octave
+        for m in [8u64, 9, 10, 12, 15] {
+            set.insert(scaled_record(&net, Strategy::BcastFlat, 5, m, 2.0));
+            set.insert(scaled_record(&net, Strategy::BcastBinomial, 5, m, 1.5));
+        }
+        let (table, report) = CorrectionTable::fit(&set, &net);
+        assert_eq!(report.skipped, 0);
+        // measured = 2x predicted -> factor ~ 2 (up to the integer-ns
+        // quantisation of completion_ns)
+        let f = table.factor(Strategy::BcastFlat, 8);
+        assert!((f - 2.0).abs() < 1e-3, "factor {f} should be ~2.0");
+        let f = table.factor(Strategy::BcastBinomial, 8);
+        assert!((f - 1.5).abs() < 1e-3, "factor {f} should be ~1.5");
+        // untouched cells stay identity
+        assert_eq!(table.factor(Strategy::BcastFlat, 1024), 1.0);
+        assert_eq!(table.factor(Strategy::BcastChain, 8), 1.0);
+        // the fit strictly reduces mean relative error at every level
+        for (_, _, _, stats) in &report.buckets {
+            assert!(stats.mape_after < stats.mape_before);
+        }
+        for (_, stats) in &report.strategies {
+            assert!(stats.mape_after < stats.mape_before);
+        }
+        for (_, stats) in &report.ops {
+            assert!(stats.mape_after < stats.mape_before);
+        }
+        assert!(report.overall.mape_after < report.overall.mape_before);
+        assert!(!report.to_text().is_empty());
+    }
+
+    #[test]
+    fn fit_skips_degenerate_records() {
+        let net = toy_net();
+        let mut set = TraceSet::default();
+        let mut rec = scaled_record(&net, Strategy::BcastFlat, 5, 8, 2.0);
+        rec.meta.strategy = "no-such-strategy".to_string();
+        set.insert(rec);
+        let mut zero = scaled_record(&net, Strategy::BcastChain, 5, 8, 2.0);
+        zero.meta.completion_ns = 0; // degenerate measurement
+        set.insert(zero);
+        let (table, report) = CorrectionTable::fit(&set, &net);
+        assert!(table.is_empty());
+        assert_eq!(report.skipped, 2);
+        assert_eq!(report.overall.samples, 0);
+    }
+
+    #[test]
+    fn fit_on_an_empty_set_is_identity() {
+        let net = toy_net();
+        let (table, report) = CorrectionTable::fit(&TraceSet::default(), &net);
+        assert!(table.is_empty());
+        assert_eq!(report.overall.samples, 0);
+    }
+
+    #[test]
+    fn net_of_rebuilds_the_captured_network() {
+        let net = toy_net();
+        let mut set = TraceSet::default();
+        set.insert(scaled_record(&net, Strategy::BcastFlat, 5, 8, 1.0));
+        let rebuilt = net_of(&set).unwrap();
+        assert_eq!(rebuilt.l, net.l);
+        assert_eq!(rebuilt.gap(8.0), net.gap(8.0));
+        assert!(net_of(&TraceSet::default()).is_none());
+    }
+}

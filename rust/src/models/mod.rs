@@ -12,7 +12,10 @@
 //! clamped to `min(s, m)` and `k = ceil(m/s)`, so `s >= m` degenerates to
 //! the unsegmented model exactly.
 
+pub mod correct;
 pub mod ext;
+
+pub use correct::CorrectionTable;
 
 use crate::collectives::Strategy;
 use crate::plogp::{GapRange, PLogP};

@@ -27,6 +27,7 @@ use anyhow::Result;
 
 use crate::collectives::Strategy;
 use crate::eval::{ArtifactEval, CellCtx, EvalCounts, EvalStats, Evaluator, ModelEval, ReplayEval};
+use crate::models::CorrectionTable;
 use crate::obs::{self, Span};
 use crate::plogp::{GapCache, PLogP};
 
@@ -53,7 +54,21 @@ pub struct Tuner {
 impl Tuner {
     /// Native (pure Rust model) tuner.
     pub fn native() -> Tuner {
-        Tuner::with_evaluator(Box::new(ModelEval))
+        Tuner::with_evaluator(Box::new(ModelEval::new()))
+    }
+
+    /// Native tuner with a trace-fitted [`CorrectionTable`] applied
+    /// (see [`crate::models::correct`]). An empty table degrades to the
+    /// plain native tuner.
+    pub fn corrected(table: CorrectionTable) -> Tuner {
+        Tuner::with_evaluator(Box::new(ModelEval::new().with_corrections(table)))
+    }
+
+    /// Load a corrections table from `path` (a directory holding
+    /// `corrections.tsv`, or the file itself — the `calibrate`
+    /// subcommand's output) and build a corrected native tuner.
+    pub fn with_corrections(path: &Path) -> Result<Tuner> {
+        Ok(Tuner::corrected(CorrectionTable::load(path)?))
     }
 
     /// Load the AOT artifact from `dir`.
@@ -340,6 +355,36 @@ mod tests {
             assert_eq!(b1.entries, bn.entries, "jobs={jobs}");
             assert_eq!(s1.entries, sn.entries, "jobs={jobs}");
         }
+    }
+
+    #[test]
+    fn corrected_worker_count_never_changes_the_tables() {
+        // the byte-identical sweep contract survives corrections: the
+        // per-cell factor is hint- and scheduling-independent, so jobs
+        // must not perturb a corrected table either
+        let net = measured();
+        let mut table = CorrectionTable::identity();
+        for (i, &s) in Strategy::ALL.iter().enumerate() {
+            for oct in [0u32, 6, 13, 17, 20] {
+                table.set(s, oct, 0.4 + ((i * 7 + oct as usize * 3) % 21) as f64 * 0.1);
+            }
+        }
+        let p_grid = vec![2usize, 8, 24];
+        let m_grid = grids::log_grid(1, 1 << 20, 8);
+        let base = Tuner::corrected(table.clone())
+            .jobs(1)
+            .tune_all(&net, &p_grid, &m_grid)
+            .unwrap();
+        for jobs in [2usize, 8] {
+            let tn = Tuner::corrected(table.clone())
+                .jobs(jobs)
+                .tune_all(&net, &p_grid, &m_grid)
+                .unwrap();
+            for (a, b) in base.iter().zip(&tn) {
+                assert_eq!(a.entries, b.entries, "{:?} jobs={jobs}", a.op);
+            }
+        }
+        assert_eq!(Tuner::corrected(table).backend_name(), "native");
     }
 
     #[test]

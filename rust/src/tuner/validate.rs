@@ -15,6 +15,7 @@
 
 use crate::collectives::Strategy;
 use crate::eval::{Evaluator, ModelEval, SimEval};
+use crate::models::CorrectionTable;
 use crate::netsim::NetConfig;
 use crate::plogp::PLogP;
 
@@ -141,6 +142,55 @@ pub fn cross_validate(
     rep
 }
 
+/// Before/after view of one calibration: the same reference judged the
+/// uncorrected and the corrected native models over the same grid.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub uncorrected: ValidationReport,
+    pub corrected: ValidationReport,
+}
+
+impl CalibrationReport {
+    /// Did the correction table reduce the mean relative error of the
+    /// chosen strategy's predicted time?
+    pub fn error_reduced(&self) -> bool {
+        self.corrected.mean_rel_err <= self.uncorrected.mean_rel_err
+    }
+
+    /// Change in winner agreement with the reference (positive means
+    /// the corrected model agrees more often).
+    pub fn accuracy_delta(&self) -> f64 {
+        self.corrected.accuracy() - self.uncorrected.accuracy()
+    }
+}
+
+/// Judge a fitted [`CorrectionTable`]: cross-validate the uncorrected
+/// and the corrected native models against the same reference over the
+/// same grid (the `validate --corrections` report). A good calibration
+/// shows `error_reduced()` and a non-negative `accuracy_delta()`.
+pub fn validate_calibration(
+    reference: &dyn Evaluator,
+    table: &CorrectionTable,
+    net: &PLogP,
+    family: &[Strategy],
+    p_list: &[usize],
+    m_list: &[u64],
+    opts: &ValidateOptions,
+) -> CalibrationReport {
+    let uncorrected =
+        cross_validate(reference, &ModelEval::new(), net, family, p_list, m_list, opts);
+    let corrected = cross_validate(
+        reference,
+        &ModelEval::new().with_corrections(table.clone()),
+        net,
+        family,
+        p_list,
+        m_list,
+        opts,
+    );
+    CalibrationReport { uncorrected, corrected }
+}
+
 /// The classic configuration: analytic model selection judged against
 /// the simulated cluster.
 pub fn validate_selection(
@@ -151,7 +201,7 @@ pub fn validate_selection(
     m_list: &[u64],
     opts: &ValidateOptions,
 ) -> ValidationReport {
-    cross_validate(&SimEval::new(cfg.clone()), &ModelEval, net, family, p_list, m_list, opts)
+    cross_validate(&SimEval::new(cfg.clone()), &ModelEval::new(), net, family, p_list, m_list, opts)
 }
 
 #[cfg(test)]
@@ -234,7 +284,7 @@ mod tests {
         let opts = ValidateOptions::default();
         let rep = cross_validate(
             &replay,
-            &ModelEval,
+            &ModelEval::new(),
             &net,
             &Strategy::BCAST,
             &p_list,
@@ -247,6 +297,75 @@ mod tests {
         let live = validate_selection(&cfg, &net, &Strategy::BCAST, &p_list, &m_list, &opts);
         assert_eq!(rep.correct, live.correct);
         assert_eq!(rep.max_regret, live.max_regret);
+    }
+
+    #[test]
+    fn calibration_closes_a_constant_factor_model_gap() {
+        use crate::netsim::{TraceMeta, TraceRecord, TraceSet};
+        use crate::plogp::GapTable;
+        use crate::tuner::Op;
+
+        let sizes: Vec<f64> = vec![1., 2., 4., 8., 16., 32., 64., 128.];
+        let gaps: Vec<f64> = sizes.iter().map(|s| 1.0 + s).collect();
+        let net = PLogP::new(10.0, GapTable::new(sizes, gaps));
+
+        // a record whose measured critical path is scale × the model's
+        // prediction for its cell
+        let rec = |strategy: Strategy, p: usize, m: u64, scale: f64| TraceRecord {
+            meta: TraceMeta {
+                op: Op::of(strategy).name().to_string(),
+                strategy: strategy.name().to_string(),
+                p,
+                m,
+                segment: None,
+                completion_ns: (crate::models::predict(strategy, &net, p, m, None)
+                    * scale
+                    * 1e9)
+                    .round() as u64,
+                dropped: 0,
+                plogp_l: net.l,
+                plogp_sizes: net.table.sizes().to_vec(),
+                plogp_gaps: net.table.gaps().to_vec(),
+                fault_plan: None,
+            },
+            events: Vec::new(),
+        };
+
+        // a "cluster" where flat bcast runs exactly 2× and binomial
+        // exactly 3× slower than the analytic models claim
+        let family = [Strategy::BcastFlat, Strategy::BcastBinomial];
+        let scales = [2.0, 3.0];
+        let p_list = [4usize, 8];
+        let m_list = [8u64, 64];
+        let mut set = TraceSet::new();
+        for (&s, &scale) in family.iter().zip(&scales) {
+            for &p in &p_list {
+                for &m in &m_list {
+                    set.insert(rec(s, p, m, scale));
+                }
+            }
+        }
+        let (table, _fit) = CorrectionTable::fit(&set, &net);
+        let replay = crate::eval::ReplayEval::new(set).unwrap();
+        let rep = validate_calibration(
+            &replay,
+            &table,
+            &net,
+            &family,
+            &p_list,
+            &m_list,
+            &ValidateOptions::default(),
+        );
+        assert_eq!(rep.uncorrected.points, 4);
+        // uncorrected: the chosen strategy's time is off by the hidden
+        // factor — at least (2-1)/2 relative error on every cell
+        assert!(rep.uncorrected.mean_rel_err > 0.4, "{:?}", rep.uncorrected);
+        // corrected: the fit recovers the factors exactly (up to ns
+        // quantization of the fixture), so the gap collapses
+        assert!(rep.corrected.mean_rel_err < 1e-6, "{:?}", rep.corrected);
+        assert!(rep.error_reduced());
+        assert_eq!(rep.corrected.correct, rep.corrected.points, "{:?}", rep.corrected);
+        assert!(rep.accuracy_delta() >= 0.0);
     }
 
     #[test]

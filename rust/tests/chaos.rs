@@ -99,7 +99,7 @@ fn loopback_disconnect_storm_converges_and_never_serves_garbage() {
     let cfg = small_config();
     let coord = Arc::new(Coordinator::new(cfg.clone()));
     let net = measured(NetConfig::fast_ethernet_icluster1());
-    coord.register("x", 24, net.clone());
+    coord.register("x", 24, net.clone()).unwrap();
     let want = TableSet::new(Tuner::native().tune_all(&net, &cfg.p_grid, &cfg.m_grid).unwrap());
     let server = Arc::new(LoopbackServer::start(Arc::clone(&coord)));
 
@@ -192,7 +192,7 @@ fn tcp_restart_storm_rides_reconnects_without_wrong_answers() {
     let cfg = small_config();
     let coord = Arc::new(Coordinator::new(cfg.clone()));
     let net = measured(NetConfig::fast_ethernet_icluster1());
-    coord.register("x", 24, net.clone());
+    coord.register("x", 24, net.clone()).unwrap();
     let want_tables =
         TableSet::new(Tuner::native().tune_all(&net, &cfg.p_grid, &cfg.m_grid).unwrap());
 
@@ -283,7 +283,7 @@ fn degradation_over_the_wire_stale_then_recovery_then_fallback() {
     let cfg = small_config();
     let coord = Arc::new(Coordinator::new(cfg.clone()));
     let net = measured(NetConfig::fast_ethernet_icluster1());
-    coord.register("x", 24, net.clone());
+    coord.register("x", 24, net.clone()).unwrap();
     let want = TableSet::new(Tuner::native().tune_all(&net, &cfg.p_grid, &cfg.m_grid).unwrap());
 
     let server = LoopbackServer::start(Arc::clone(&coord));
@@ -320,7 +320,7 @@ fn degradation_over_the_wire_stale_then_recovery_then_fallback() {
     // answer equals a native tune of the same measurements
     let net2 = measured(NetConfig::gigabit_ethernet());
     let want2 = TableSet::new(Tuner::native().tune_all(&net2, &cfg.p_grid, &cfg.m_grid).unwrap());
-    coord.register("y", 24, net2);
+    coord.register("y", 24, net2).unwrap();
     coord.inject_tune_failures(1);
     let d = client.decision(Op::Scatter, "y", 8, 1024).unwrap();
     assert_eq!(d, want2.decision(Op::Scatter, 8, 1024), "fallback equals the native model");
@@ -335,7 +335,7 @@ fn tcp_stalled_mid_frame_peer_is_cut_loose_by_the_read_deadline() {
     use std::io::{BufRead, BufReader, Write as _};
 
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("x", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("x", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server = CoordServer::start(
         Arc::clone(&coord),
         "127.0.0.1:0",

@@ -113,7 +113,7 @@ fn lru_eviction_follows_recency_order() {
 fn concurrent_cold_misses_coalesce_into_one_tune() {
     let coord = Coordinator::new(small_config());
     let net = measured(NetConfig::fast_ethernet_icluster1());
-    coord.register("cold", 24, net);
+    coord.register("cold", 24, net).unwrap();
 
     const CLIENTS: usize = 12;
     let gate = Barrier::new(CLIENTS);
@@ -143,7 +143,7 @@ fn concurrent_cold_misses_coalesce_into_one_tune() {
 #[test]
 fn coalesced_clients_share_the_same_arc() {
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("c", 8, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("c", 8, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let gate = Arc::new(Barrier::new(8));
     let handles: Vec<_> = (0..8)
         .map(|_| {
@@ -169,7 +169,7 @@ fn concurrent_ext_cold_misses_coalesce_into_one_tune() {
     // run, and that run serves every op family afterwards for free
     let coord = Coordinator::new(small_config());
     let net = measured(NetConfig::fast_ethernet_icluster1());
-    coord.register("cold-ext", 24, net);
+    coord.register("cold-ext", 24, net).unwrap();
 
     const CLIENTS: usize = 10;
     let gate = Barrier::new(CLIENTS);
@@ -210,8 +210,8 @@ fn persist_then_warm_start_roundtrip_without_retuning() {
 
     // first process: register two distinct clusters, tune, persist
     let first = Coordinator::new(small_config());
-    first.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
-    first.register("ge", 16, measured(NetConfig::gigabit_ethernet()));
+    first.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
+    first.register("ge", 16, measured(NetConfig::gigabit_ethernet())).unwrap();
     let d_fe = first.decision(Op::Bcast, "fe", 24, 1 << 18).unwrap();
     let d_ge = first.decision(Op::Scatter, "ge", 16, 4096).unwrap();
     let d_ar = first.decision(Op::AllReduce, "fe", 24, 1 << 18).unwrap();
@@ -255,9 +255,9 @@ fn warm_start_missing_dir_is_a_clean_error() {
 #[test]
 fn mixed_load_many_threads_tunes_once_per_signature() {
     let coord = Coordinator::new(small_config());
-    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
-    coord.register("ge", 16, measured(NetConfig::gigabit_ethernet()));
-    coord.register("fe-twin", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
+    coord.register("ge", 16, measured(NetConfig::gigabit_ethernet())).unwrap();
+    coord.register("fe-twin", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
 
     std::thread::scope(|s| {
         for t in 0..8usize {
@@ -301,7 +301,7 @@ fn refresh_publish_storm_never_serves_torn_decisions() {
     let coord = Coordinator::new(cfg.clone());
     let net_a = measured(NetConfig::fast_ethernet_icluster1());
     let net_b = measured(NetConfig::gigabit_ethernet());
-    coord.register("x", 24, net_a.clone());
+    coord.register("x", 24, net_a.clone()).unwrap();
     let ta = TableSet::new(
         Tuner::native().tune_all(&net_a, &cfg.p_grid, &cfg.m_grid).unwrap(),
     );

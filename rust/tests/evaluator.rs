@@ -40,7 +40,7 @@ fn model_and_sim_agree_on_argmin_across_random_networks() {
         for family in [&Strategy::BCAST[..], &Strategy::SCATTER[..]] {
             let rep = cross_validate(
                 &sim,
-                &ModelEval,
+                &ModelEval::new(),
                 &net,
                 family,
                 &[4, 16],
@@ -108,7 +108,7 @@ fn model_and_sim_agree_on_ext_argmin() {
         for op in Op::EXT {
             let rep = cross_validate(
                 &sim,
-                &ModelEval,
+                &ModelEval::new(),
                 &net,
                 op.family(),
                 &[4, 16],
@@ -167,7 +167,7 @@ fn pruned_argmin_is_exact_on_random_gap_tables() {
             .map(|_| rng.range(1, 1 << 21))
             .collect();
         for op in [Op::Bcast, Op::Scatter] {
-            let d = ModelEval.best(op, &net, p, m, &s_grid);
+            let d = ModelEval::new().best(op, &net, p, m, &s_grid);
             let want = models::rank_strategies(op.family(), &net, p, m, &s_grid);
             assert_eq!(d.strategy, want[0].0, "{op:?} P={p} m={m} s_grid={s_grid:?}");
             assert_eq!(d.predicted, want[0].1);
@@ -264,14 +264,14 @@ fn adversarial_hints_cannot_change_decisions() {
     for op in Op::ALL {
         for p in [2usize, 48] {
             for m in [1u64, 8192, 1 << 20] {
-                let bare = ModelEval.best(op, &net, p, m, &s_grid);
+                let bare = ModelEval::new().best(op, &net, p, m, &s_grid);
                 for hint in op.family() {
                     let ctx = collective_tuner::eval::CellCtx {
                         hint: Some(*hint),
                         cache: None,
                         stats: None,
                     };
-                    let d = ModelEval.best_in(op, &net, p, m, &s_grid, &ctx);
+                    let d = ModelEval::new().best_in(op, &net, p, m, &s_grid, &ctx);
                     assert_eq!(d.strategy, bare.strategy, "{op:?} P={p} m={m} hint {hint:?}");
                     assert_eq!(d.predicted, bare.predicted);
                     assert_eq!(d.segment, bare.segment);

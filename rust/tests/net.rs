@@ -199,7 +199,7 @@ fn random_mutations_never_panic() {
 #[test]
 fn loopback_batch_queries_match_inprocess_decisions() {
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server = LoopbackServer::start(Arc::clone(&coord));
     let client = server.connect().unwrap();
     assert!(client.banner().contains("loopback"));
@@ -225,7 +225,7 @@ fn loopback_batch_queries_match_inprocess_decisions() {
 #[test]
 fn loopback_unregistered_cluster_is_structured_error_not_panic() {
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("real", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("real", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server = LoopbackServer::start(Arc::clone(&coord));
     let client = server.connect().unwrap();
 
@@ -266,7 +266,7 @@ fn loopback_query_storm_during_refresh_churn_serves_only_published_tables() {
     let coord = Arc::new(Coordinator::new(cfg.clone()));
     let net_a = measured(NetConfig::fast_ethernet_icluster1());
     let net_b = measured(NetConfig::gigabit_ethernet());
-    coord.register("x", 24, net_a.clone());
+    coord.register("x", 24, net_a.clone()).unwrap();
     let ta = TableSet::new(Tuner::native().tune_all(&net_a, &cfg.p_grid, &cfg.m_grid).unwrap());
     let tb = TableSet::new(Tuner::native().tune_all(&net_b, &cfg.p_grid, &cfg.m_grid).unwrap());
     let probes = [
@@ -328,7 +328,7 @@ fn subscription_receives_initial_table_then_update_on_refresh() {
     let coord = Arc::new(Coordinator::new(cfg.clone()));
     let net_a = measured(NetConfig::fast_ethernet_icluster1());
     let net_b = measured(NetConfig::gigabit_ethernet());
-    coord.register("x", 24, net_a.clone());
+    coord.register("x", 24, net_a.clone()).unwrap();
     let ta = TableSet::new(Tuner::native().tune_all(&net_a, &cfg.p_grid, &cfg.m_grid).unwrap());
     let tb = TableSet::new(Tuner::native().tune_all(&net_b, &cfg.p_grid, &cfg.m_grid).unwrap());
 
@@ -387,7 +387,7 @@ fn subscription_sees_invalidate_when_tables_retire_unreplaced() {
     // drift-refresh of another cluster that shared it.
     let coord = Arc::new(Coordinator::new(small_config()));
     let net_b = measured(NetConfig::gigabit_ethernet());
-    coord.register("x", 24, net_b.clone());
+    coord.register("x", 24, net_b.clone()).unwrap();
 
     let server = LoopbackServer::start(Arc::clone(&coord));
     let client = server.connect().unwrap();
@@ -398,8 +398,8 @@ fn subscription_sees_invalidate_when_tables_retire_unreplaced() {
 
     // "x" now points at an untuned third class; "y" shares the old
     // signature, and refreshing it away retires the old tables.
-    coord.register("x", 24, measured(NetConfig::myrinet_like()));
-    coord.register("y", 24, net_b);
+    coord.register("x", 24, measured(NetConfig::myrinet_like())).unwrap();
+    coord.register("y", 24, net_b).unwrap();
     let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
     let outcome = coord.refresh("y", &mut sim, &RefreshPolicy::default()).unwrap();
     assert!(outcome.refreshed());
@@ -428,7 +428,7 @@ fn subscription_sees_invalidate_when_tables_retire_unreplaced() {
 #[test]
 fn tcp_ephemeral_port_smoke_batch_and_clean_shutdown() {
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server =
         CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", ServerOptions::default()).unwrap();
     let addr = server.local_addr().to_string();
@@ -555,7 +555,7 @@ fn garbage_after_valid_welcome_fails_typed_and_a_fresh_connection_recovers() {
     // the failure poisoned nothing beyond that connection: the same
     // call on a fresh connection to a real server succeeds
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("x", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("x", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server =
         CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", ServerOptions::default()).unwrap();
     let fresh = NetClient::connect(&server.local_addr().to_string()).unwrap();
@@ -608,7 +608,7 @@ fn server_gone_between_request_and_response_is_typed_and_deadline_bounded() {
 #[test]
 fn accept_gate_sheds_with_retryable_busy_nack() {
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server = CoordServer::start(
         Arc::clone(&coord),
         "127.0.0.1:0",
@@ -647,7 +647,7 @@ fn accept_gate_sheds_with_retryable_busy_nack() {
 #[test]
 fn idle_connections_are_reaped_but_active_ones_survive() {
     let coord = Arc::new(Coordinator::new(small_config()));
-    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1()));
+    coord.register("fe", 24, measured(NetConfig::fast_ethernet_icluster1())).unwrap();
     let server = CoordServer::start(
         Arc::clone(&coord),
         "127.0.0.1:0",
@@ -686,7 +686,7 @@ fn reconnect_preserves_invalidation_floors_and_resubscribes() {
     let cfg = small_config();
     let coord = Arc::new(Coordinator::new(cfg.clone()));
     let net_b = measured(NetConfig::gigabit_ethernet());
-    coord.register("x", 24, net_b.clone());
+    coord.register("x", 24, net_b.clone()).unwrap();
 
     let sopts = ServerOptions::default();
     let server = CoordServer::start(Arc::clone(&coord), "127.0.0.1:0", sopts.clone()).unwrap();
@@ -709,8 +709,8 @@ fn reconnect_preserves_invalidation_floors_and_resubscribes() {
     assert!(matches!(initial[..], [Push::TableUpdate { .. }]), "{initial:?}");
 
     // drive an INVALIDATE exactly as the loopback retirement test does
-    coord.register("x", 24, measured(NetConfig::myrinet_like()));
-    coord.register("y", 24, net_b);
+    coord.register("x", 24, measured(NetConfig::myrinet_like())).unwrap();
+    coord.register("y", 24, net_b).unwrap();
     let mut sim = Netsim::new(2, NetConfig::fast_ethernet_icluster1());
     assert!(coord.refresh("y", &mut sim, &RefreshPolicy::default()).unwrap().refreshed());
     let pushes = client.wait_pushes(1, Duration::from_secs(10)).unwrap();

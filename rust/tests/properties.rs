@@ -720,6 +720,79 @@ fn dense_tables_commute_with_nested_lookups() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Trace-fitted correction factors: bound pruning stays exact under scaling
+// ---------------------------------------------------------------------------
+
+use collective_tuner::eval::{Evaluator, ModelEval};
+use collective_tuner::models::CorrectionTable;
+
+/// Correcting the models multiplies each strategy's cost by a positive
+/// per-(strategy, octave) constant, so the bound-pruned argmin must stay
+/// bit-identical to the exhaustive corrected argmin — on any network,
+/// under any factor table, at any cell.
+#[test]
+fn corrected_pruned_argmin_is_exhaustive() {
+    property("corrected argmin exactness", 120, |rng| {
+        // a random (but valid) pLogP network, as in model_sanity_invariants
+        let l = rng.log_uniform(1e-6, 1e-2);
+        let n = rng.range_usize(2, 20);
+        let mut sizes = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += rng.uniform(1.0, 10_000.0);
+            sizes.push(acc);
+        }
+        let gaps: Vec<f64> = sizes
+            .iter()
+            .map(|s| rng.log_uniform(1e-6, 1e-3) + s * rng.log_uniform(1e-10, 1e-6))
+            .collect();
+        let net = PLogP::new(l, GapTable::new(sizes, gaps));
+        // skewed factors over random (strategy, octave) buckets
+        let mut table = CorrectionTable::identity();
+        for _ in 0..rng.range_usize(1, 60) {
+            table.set(
+                random_strategy(rng),
+                rng.range(0, 24) as u32,
+                rng.log_uniform(1e-2, 1e2),
+            );
+        }
+        let eval = ModelEval::new().with_corrections(table.clone());
+        let p = rng.range_usize(2, 64);
+        let m = rng.range(1, 1 << 22);
+        let s_grid: Vec<u64> = (0..rng.range_usize(1, 6))
+            .map(|_| rng.range(1, 1 << 20))
+            .collect();
+        for op in Op::ALL {
+            let got = eval.best(op, &net, p, m, &s_grid);
+            // exhaustive corrected argmin, first-on-ties in family order
+            let mut want: Option<Decision> = None;
+            for &s in op.family() {
+                let f = table.factor(s, m);
+                let (t, seg) = if s.is_segmented() {
+                    let (t, g) = models::best_segment(s, &net, p, m, &s_grid);
+                    (f * t, Some(g))
+                } else {
+                    (f * models::predict(s, &net, p, m, None), None)
+                };
+                if want.as_ref().map_or(true, |w| t < w.predicted) {
+                    want = Some(Decision { strategy: s, segment: seg, predicted: t });
+                }
+            }
+            let want = want.unwrap();
+            assert_eq!(got.strategy, want.strategy, "{op:?} P={p} m={m}");
+            assert_eq!(got.segment, want.segment, "{op:?} P={p} m={m}");
+            assert_eq!(
+                got.predicted.to_bits(),
+                want.predicted.to_bits(),
+                "{op:?} P={p} m={m}: {} vs {}",
+                got.predicted,
+                want.predicted
+            );
+        }
+    });
+}
+
 /// The generation-counter LRU (write-side eviction over shared recency
 /// stamps) must replay any access sequence exactly like a reference
 /// least-recently-used model — the same order the old read-side-locking

@@ -181,7 +181,7 @@ fn replay_drops_into_tuner_and_cross_validate_unchanged() {
     let opts = ValidateOptions::default();
     let rep = cross_validate(
         &replay,
-        &ModelEval,
+        &ModelEval::new(),
         &net,
         Op::Bcast.family(),
         &P_GRID,
